@@ -1,0 +1,61 @@
+//! Compare every registered strategy on a Table-II-style synthetic
+//! workload (3D stencil communication, mod-7 over/underload) and print
+//! the paper's three metrics side by side.
+//!
+//! Run: `cargo run --release --example strategy_compare -- [--pes 32]`
+
+use difflb::apps::stencil::{inject_mod7, stencil_3d};
+use difflb::model::evaluate_mapping;
+use difflb::strategies::{make, StrategyParams, AVAILABLE};
+use difflb::util::args::Parser;
+use difflb::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Parser::new("strategy_compare — all strategies on one workload")
+        .opt("pes", Some("32"), "number of PEs")
+        .opt("side", Some("16"), "3D stencil side (objects = side^3)")
+        .opt("neighbors", Some("4"), "diffusion neighbor count K")
+        .parse_env();
+    let pes: usize = args.usize("pes");
+    let side: usize = args.usize("side");
+
+    let mut inst = stencil_3d(side, pes);
+    inject_mod7(&mut inst, 3.0, 0.3);
+    let initial = evaluate_mapping(&inst, &inst.mapping);
+
+    let params = StrategyParams {
+        neighbor_count: args.usize("neighbors"),
+        ..Default::default()
+    };
+
+    let mut table = Table::new(
+        format!("{pes} PEs, {}^3 objects, mod-7 imbalance", side),
+        &["strategy", "max/avg", "ext/int", "% migrations", "lb time (ms)"],
+    );
+    table.rowf(&[
+        &"(initial)",
+        &format!("{:.2}", initial.max_avg_pe),
+        &format!("{:.3}", initial.comm_nodes.ratio()),
+        &"-",
+        &"-",
+    ]);
+    for name in AVAILABLE {
+        if *name == "none" {
+            continue;
+        }
+        let lb = make(name, params)?;
+        let t = std::time::Instant::now();
+        let asg = lb.rebalance(&inst);
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let m = evaluate_mapping(&inst, &asg.mapping);
+        table.rowf(&[
+            name,
+            &format!("{:.2}", m.max_avg_pe),
+            &format!("{:.3}", m.comm_nodes.ratio()),
+            &format!("{:.1}%", m.migration_pct),
+            &format!("{ms:.1}"),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

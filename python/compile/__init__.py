@@ -1,0 +1,13 @@
+"""Build-time compile path: JAX/Pallas authoring + AOT lowering to HLO text.
+
+Nothing in this package is imported at runtime; the Rust coordinator only
+consumes ``artifacts/*.hlo.txt`` produced by ``python -m compile.aot``.
+
+All numerics are float64: the PIC PRK correctness property (horizontal
+displacement of exactly ``2k+1`` grid cells per step) is verified to an
+epsilon of 1e-6 over hundreds of steps, which f32 cannot hold.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

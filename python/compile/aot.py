@@ -1,0 +1,110 @@
+"""AOT driver: lower Layer-2 graphs to HLO **text** artifacts.
+
+Usage (from ``python/``):
+    python -m compile.aot --out-dir ../artifacts [--only NAME] [--list]
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids, so text round-trips cleanly. Everything is lowered
+with ``return_tuple=True`` and unwrapped as a tuple literal in Rust.
+
+A ``manifest.txt`` (one ``key=value`` record per line) is written next to
+the artifacts; ``rust/src/runtime/`` uses it to pick executables by
+logical name + shape instead of hard-coding file names.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F64 = jnp.float64
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def _pic_args(n):
+    p = _spec(n)
+    return (p, p, p, p, p, _spec(2))
+
+
+# name -> (callable, example_args, metadata-dict)
+def registry():
+    arts = {}
+
+    def add(name, fn, args, **meta):
+        arts[name] = (fn, args, meta)
+
+    for n in (1024, 8192):
+        add(f"pic_push_n{n}", model.pic_push_step, _pic_args(n),
+            kind="pic_push", n=n, steps=1)
+    # large-batch artifact: flat single tile (CPU-tuned; see model.py)
+    add("pic_push_n65536", model.make_pic_push_block(65536), _pic_args(65536),
+        kind="pic_push", n=65536, steps=1)
+    for steps, n in ((5, 65536), (10, 65536)):
+        add(f"pic_push_epoch{steps}_n{n}", model.make_pic_push_epoch(steps),
+            _pic_args(n), kind="pic_push", n=n, steps=steps)
+    for r, c in ((256, 256), (512, 512)):
+        add(f"stencil_{r}x{c}", model.stencil_step, (_spec(r, c), _spec(1)),
+            kind="stencil", rows=r, cols=c)
+    return arts
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name, fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    ap.add_argument("--list", action="store_true", help="list artifact names")
+    ns = ap.parse_args()
+
+    arts = registry()
+    if ns.list:
+        for name in arts:
+            print(name)
+        return
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, args, meta) in arts.items():
+        if ns.only and name != ns.only:
+            continue
+        text = lower_one(name, fn, args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(ns.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        fields = " ".join(f"{k}={v}" for k, v in meta.items())
+        manifest.append(f"name={name} file={fname} {fields}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not ns.only:
+        with open(os.path.join(ns.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+        print(f"wrote {ns.out_dir}/manifest.txt ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

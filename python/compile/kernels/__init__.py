@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (interpret=True) and their pure-jnp oracles."""
+
+from . import particle_push, ref, stencil  # noqa: F401

@@ -1,0 +1,122 @@
+"""Layer-1 Pallas kernel: the PIC PRK particle push.
+
+TPU adaptation of the PRK hot loop (see DESIGN.md §Hardware-Adaptation):
+the reference ``pic.c`` walks particles with a scalar loop and reads the
+four corner charges of the containing cell. Because the PRK charge grid
+is *analytic* (sign alternates by column parity), the kernel computes
+corner charges from ``floor(x)`` parity with pure vector ops — no gather,
+no charge array in memory. Particles stream through VMEM in
+``(BLOCK,)``-shaped tiles; everything is elementwise VPU work.
+
+``interpret=True`` everywhere: the CPU PJRT plugin (which the Rust
+coordinator embeds) cannot execute Mosaic custom-calls, so the kernel is
+lowered to plain HLO. The BlockSpec structure is unchanged for a real
+TPU build.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DT = 1.0
+MASS_INV = 1.0
+
+# Default particle-tile size. 8 f64 streams (4 in, 4 out) of 8192 lanes
+# = 512 KiB of VMEM per tile — comfortably double-bufferable in 16 MiB.
+BLOCK = 8192
+
+
+def _push_kernel(x_ref, y_ref, vx_ref, vy_ref, q_ref, lq_ref,
+                 xo_ref, yo_ref, vxo_ref, vyo_ref):
+    """Pallas body: one PIC step for one particle tile.
+
+    ``lq_ref`` is a 2-element SMEM-like operand holding (L, Q) so a single
+    compiled artifact serves every grid size / charge magnitude.
+    """
+    L = lq_ref[0]
+    Q = lq_ref[1]
+    x = x_ref[...]
+    y = y_ref[...]
+    vx = vx_ref[...]
+    vy = vy_ref[...]
+    q = q_ref[...]
+
+    cx = jnp.floor(x)
+    cy = jnp.floor(y)
+    rel_x = x - cx
+    rel_y = y - cy
+
+    # Analytic corner charges: +Q in even columns, -Q in odd columns.
+    q_left = Q * (1.0 - 2.0 * jnp.mod(cx, 2.0))
+    q_right = -q_left
+
+    # Coulomb contributions from the four corners. Shared subexpressions
+    # (r^2 per corner) are spelled once so XLA fuses a single elementwise
+    # pipeline per tile.
+    def corner(xd, yd, qg):
+        r2 = xd * xd + yd * yd
+        inv_r3 = jax.lax.rsqrt(r2) / r2  # 1/r^3, one rsqrt + one div
+        f = q * qg * inv_r3
+        return f * xd, f * yd
+
+    fx_tl, fy_tl = corner(rel_x, rel_y, q_left)
+    fx_bl, fy_bl = corner(rel_x, 1.0 - rel_y, q_left)
+    fx_tr, fy_tr = corner(1.0 - rel_x, rel_y, q_right)
+    fx_br, fy_br = corner(1.0 - rel_x, 1.0 - rel_y, q_right)
+
+    ax = (fx_tl + fx_bl - fx_tr - fx_br) * MASS_INV
+    ay = (fy_tl - fy_bl + fy_tr - fy_br) * MASS_INV
+
+    xo_ref[...] = jnp.mod(x + vx * DT + 0.5 * ax * (DT * DT) + L, L)
+    yo_ref[...] = jnp.mod(y + vy * DT + 0.5 * ay * (DT * DT) + L, L)
+    vxo_ref[...] = vx + ax * DT
+    vyo_ref[...] = vy + ay * DT
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pic_push(x, y, vx, vy, q, lq, block=BLOCK):
+    """One PIC PRK step for ``n`` particles via the Pallas kernel.
+
+    Args:
+      x, y, vx, vy, q: ``(n,)`` float64 state; ``n`` must be a multiple of
+        ``block`` (the Rust runtime pads with inert particles).
+      lq: ``(2,)`` float64 array ``[L, Q]``.
+      block: particle-tile size (static).
+
+    Returns:
+      Tuple ``(x', y', vx', vy')``.
+    """
+    n = x.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    grid = (n // block,)
+    tile = pl.BlockSpec((block,), lambda i: (i,))
+    scal = pl.BlockSpec((2,), lambda i: (0,))
+    out = jax.ShapeDtypeStruct((n,), x.dtype)
+    return pl.pallas_call(
+        _push_kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, tile, scal],
+        out_specs=[tile, tile, tile, tile],
+        out_shape=[out, out, out, out],
+        interpret=True,
+    )(x, y, vx, vy, q, lq)
+
+
+def pic_push_steps(x, y, vx, vy, q, lq, steps, block=BLOCK):
+    """``steps`` fused PIC steps in one executable (fori_loop over pushes).
+
+    Amortizes PJRT dispatch + literal marshalling on the Rust hot path —
+    the coordinator calls one executable per LB epoch instead of one per
+    app iteration. ``steps`` is baked into the artifact.
+    """
+
+    def body(_, state):
+        x, y, vx, vy = state
+        return pic_push(x, y, vx, vy, q, lq, block=block)
+
+    return jax.lax.fori_loop(0, steps, body, (x, y, vx, vy))

@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These implement the PIC PRK particle push (Van der Wijngaart & Mattson,
+HPEC'14; Georganas et al., IPDPS'16) and a 5-point Jacobi stencil sweep,
+with no Pallas involved. ``pytest python/tests`` asserts the Pallas
+kernels match these to tight tolerances, and the Rust fallback path is
+validated against the same semantics (see rust/src/apps/pic/).
+
+PIC PRK semantics (mirrors the reference ``pic.c``):
+
+* The grid has unit spacing and a fixed charge at every grid point whose
+  sign alternates by **column parity**: ``QG(x) = Q * (1 - 2*(x & 1))``.
+  Charges are analytic — no charge array is ever materialized, which is
+  also the TPU adaptation story (no gather; see DESIGN.md).
+* A particle at position ``(x, y)`` inside cell ``(floor(x), floor(y))``
+  feels the Coulomb force of the cell's four corner charges:
+  ``f = q1*q2/r^2`` along the separation direction, accumulated with the
+  PRK sign convention (left charges push +x when attractive, etc.).
+* Leapfrog-style update with DT = 1 and unit mass, periodic wrap at L.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DT = 1.0
+MASS_INV = 1.0
+
+
+def grid_charge(x_index, Q):
+    """Charge at any grid point in column ``x_index``: +Q even, -Q odd."""
+    return Q * (1.0 - 2.0 * jnp.mod(x_index, 2.0))
+
+
+def coulomb(x_dist, y_dist, q1, q2):
+    """PRK computeCoulomb: force components between charges q1, q2.
+
+    ``f = q1*q2 / r^2`` decomposed along (x_dist, y_dist).
+    """
+    r2 = x_dist * x_dist + y_dist * y_dist
+    r = jnp.sqrt(r2)
+    f = q1 * q2 / r2
+    return f * x_dist / r, f * y_dist / r
+
+
+def total_force(x, y, q, Q):
+    """PRK computeTotalForce: net force from the 4 corners of the cell.
+
+    Corner charges depend only on column parity, so both left corners
+    share ``QG(cx)`` and both right corners share ``QG(cx+1)``.
+    """
+    cx = jnp.floor(x)
+    cy = jnp.floor(y)
+    rel_x = x - cx
+    rel_y = y - cy
+    q_left = grid_charge(cx, Q)
+    q_right = grid_charge(cx + 1.0, Q)
+
+    fx_tl, fy_tl = coulomb(rel_x, rel_y, q, q_left)
+    fx_bl, fy_bl = coulomb(rel_x, 1.0 - rel_y, q, q_left)
+    fx_tr, fy_tr = coulomb(1.0 - rel_x, rel_y, q, q_right)
+    fx_br, fy_br = coulomb(1.0 - rel_x, 1.0 - rel_y, q, q_right)
+
+    fx = fx_tl + fx_bl - fx_tr - fx_br
+    fy = fy_tl - fy_bl + fy_tr - fy_br
+    return fx, fy
+
+
+def pic_push_ref(x, y, vx, vy, q, L, Q):
+    """One PIC PRK time step for a batch of particles (pure jnp).
+
+    Args:
+      x, y, vx, vy, q: ``(n,)`` float64 particle state.
+      L: grid size (scalar, float); positions live in ``[0, L)``.
+      Q: base grid charge magnitude (scalar, float).
+
+    Returns:
+      ``(x', y', vx', vy')`` after one DT=1 step with periodic wrap.
+    """
+    fx, fy = total_force(x, y, q, Q)
+    ax = fx * MASS_INV
+    ay = fy * MASS_INV
+    x_new = jnp.mod(x + vx * DT + 0.5 * ax * DT * DT + L, L)
+    y_new = jnp.mod(y + vy * DT + 0.5 * ay * DT * DT + L, L)
+    return x_new, y_new, vx + ax * DT, vy + ay * DT
+
+
+def pic_push_ref_steps(x, y, vx, vy, q, L, Q, steps):
+    """``steps`` successive reference pushes (python loop; oracle only)."""
+    for _ in range(steps):
+        x, y, vx, vy = pic_push_ref(x, y, vx, vy, q, L, Q)
+    return x, y, vx, vy
+
+
+def base_charge(rel_x, rel_y, Q):
+    """PRK charge calibration constant for a particle at (rel_x, rel_y).
+
+    Chosen so that, for a particle at rest at cell-relative position
+    (rel_x, rel_y=0.5) in an even column, carrying ``(2k+1)*base_charge``,
+    the first-step displacement is exactly ``2k+1`` cells. The vertical
+    symmetry at rel_y=0.5 doubles the x-force (two rows of corners) and
+    the kinematics halve it (0.5*a*DT^2), which cancel.
+    """
+    r1_sq = rel_y * rel_y + rel_x * rel_x
+    r2_sq = rel_y * rel_y + (1.0 - rel_x) * (1.0 - rel_x)
+    cos_theta = rel_x / jnp.sqrt(r1_sq)
+    cos_phi = (1.0 - rel_x) / jnp.sqrt(r2_sq)
+    return 1.0 / ((DT * DT) * Q * (cos_theta / r1_sq + cos_phi / r2_sq))
+
+
+def calibrated_charge(x, y, k, Q):
+    """Per-particle charge giving deterministic +x motion of 2k+1 cells.
+
+    Mirrors PRK ``finish_particle_initialization``: particles in even
+    columns get positive charge (attracted rightward past the +Q column),
+    odd columns negative, so *all* particles drift in +x.
+    """
+    cx = jnp.floor(x)
+    rel_x = x - cx
+    rel_y = y - jnp.floor(y)
+    bc = base_charge(rel_x, rel_y, Q)
+    sign = 1.0 - 2.0 * jnp.mod(cx, 2.0)
+    return sign * (2.0 * k + 1.0) * bc
+
+
+def stencil_sweep_ref(grid, alpha=0.25):
+    """5-point Jacobi sweep with periodic boundaries (pure jnp).
+
+    ``out = (1-4*alpha)*c + alpha*(n+s+e+w)`` — the synthetic stencil
+    app's per-object compute kernel (paper §I / Fig 1-2 workload).
+    """
+    n = jnp.roll(grid, 1, axis=0)
+    s = jnp.roll(grid, -1, axis=0)
+    w = jnp.roll(grid, 1, axis=1)
+    e = jnp.roll(grid, -1, axis=1)
+    return (1.0 - 4.0 * alpha) * grid + alpha * (n + s + e + w)

@@ -1,0 +1,57 @@
+"""Layer-2: the JAX compute graphs lowered to AOT artifacts.
+
+Each public function here is a jit-able graph over concrete shapes that
+``aot.py`` lowers to HLO text for the Rust runtime. They compose the
+Layer-1 Pallas kernels; nothing here runs at serving time.
+
+Entry-point calling convention (mirrored by rust/src/runtime/):
+  pic_push_step   : (x, y, vx, vy, q : f64[n], lq : f64[2])        -> 4-tuple
+  pic_push_epoch  : same operands, STEPS fused iterations          -> 4-tuple
+  stencil_step    : (grid : f64[r,c], alpha : f64[1])              -> 1-tuple
+All artifacts are lowered with return_tuple=True, so Rust unwraps an
+N-tuple from a single output literal.
+"""
+
+from __future__ import annotations
+
+from .kernels import particle_push, stencil
+
+
+def pic_push_step(x, y, vx, vy, q, lq):
+    """One PIC PRK time step (Layer-1 kernel pass-through)."""
+    return particle_push.pic_push(x, y, vx, vy, q, lq)
+
+
+def make_pic_push_epoch(steps):
+    """A graph running ``steps`` fused PIC steps per invocation.
+
+    Used by the Rust hot path to amortize PJRT dispatch over an LB epoch
+    (e.g. steps = the load-balancing period).
+    """
+
+    def pic_push_epoch(x, y, vx, vy, q, lq):
+        return particle_push.pic_push_steps(x, y, vx, vy, q, lq, steps)
+
+    pic_push_epoch.__name__ = f"pic_push_epoch{steps}"
+    return pic_push_epoch
+
+
+def make_pic_push_block(block):
+    """Single-step push with an explicit particle-tile size.
+
+    The TPU-shaped tile is 8192 (VMEM sizing, see particle_push.py); the
+    CPU PJRT artifacts for large batches use one flat tile instead —
+    interpret-mode tiling only adds per-tile loop overhead on CPU
+    (EXPERIMENTS.md §Perf).
+    """
+
+    def pic_push_block(x, y, vx, vy, q, lq):
+        return particle_push.pic_push(x, y, vx, vy, q, lq, block=block)
+
+    pic_push_block.__name__ = f"pic_push_block{block}"
+    return pic_push_block
+
+
+def stencil_step(grid, alpha):
+    """One periodic 5-point Jacobi sweep (Layer-1 kernel pass-through)."""
+    return (stencil.stencil_sweep(grid, alpha),)

@@ -1,0 +1,111 @@
+"""Layer-2 graph tests: model-level composition, charge calibration,
+and physics invariants that the Rust side relies on."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def centered_particles(rng, n, L, k, m, Q):
+    x = rng.integers(0, L, n).astype(np.float64) + 0.5
+    y = rng.integers(0, L, n).astype(np.float64) + 0.5
+    q = np.asarray(ref.calibrated_charge(x, y, float(k), Q))
+    return x, y, np.zeros(n), np.full(n, float(m)), q
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(0, 5),
+    m=st.integers(1, 3),
+    Q=st.floats(0.5, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_calibrated_charge_gives_exact_displacement(k, m, Q, seed):
+    """The determinism property holds for arbitrary k, m, Q."""
+    rng = np.random.default_rng(seed)
+    L = 256.0
+    n = 64
+    x, y, vx, vy, q = centered_particles(rng, n, int(L), k, m, Q)
+    lq = jnp.array([L, Q])
+    xs, ys = jnp.asarray(x), jnp.asarray(y)
+    vxs, vys = jnp.asarray(vx), jnp.asarray(vy)
+    qs = jnp.asarray(q)
+    steps = 4
+    for _ in range(steps):
+        xs, ys, vxs, vys = model.pic_push_step(xs, ys, vxs, vys, qs, lq)
+    np.testing.assert_allclose(
+        np.asarray(xs), np.mod(x + steps * (2 * k + 1), L), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ys), np.mod(y + steps * m, L), atol=1e-6)
+
+
+def test_energy_sign_structure():
+    """Charge sign by column parity ⇒ all particles drift +x."""
+    rng = np.random.default_rng(1)
+    L = 128.0
+    x, y, vx, vy, q = centered_particles(rng, 128, int(L), 1, 1, 1.0)
+    lq = jnp.array([L, 1.0])
+    out = model.pic_push_step(*map(jnp.asarray, (x, y, vx, vy, q)), lq)
+    dx = np.mod(np.asarray(out[0]) - x, L)
+    np.testing.assert_allclose(dx, 3.0, atol=1e-9)
+
+
+def test_flat_block_variant_matches_default():
+    """The CPU-tuned single-tile artifact computes the same numbers."""
+    rng = np.random.default_rng(2)
+    n, L = 2048, 64.0
+    x, y, vx, vy, q = centered_particles(rng, n, int(L), 2, 1, 1.0)
+    lq = jnp.array([L, 1.0])
+    args = tuple(map(jnp.asarray, (x, y, vx, vy, q))) + (lq,)
+    default = model.pic_push_step(*args)
+    flat = model.make_pic_push_block(n)(*args)
+    for d, f in zip(default, flat):
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(f))
+
+
+def test_grid_charge_parity():
+    cols = jnp.arange(10.0)
+    charges = np.asarray(ref.grid_charge(cols, 2.0))
+    np.testing.assert_allclose(charges, [2, -2] * 5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(alpha=st.floats(0.05, 0.24), seed=st.integers(0, 2**31 - 1))
+def test_stencil_step_tuple_contract(alpha, seed):
+    """stencil_step returns a 1-tuple (the AOT return_tuple contract)."""
+    rng = np.random.default_rng(seed)
+    grid = jnp.asarray(rng.standard_normal((256, 256)))
+    out = model.stencil_step(grid, jnp.array([alpha]))
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(
+        np.asarray(out[0]),
+        np.asarray(ref.stencil_sweep_ref(grid, alpha)),
+        rtol=1e-12,
+        atol=1e-13,
+    )
+
+
+def test_vx_oscillation_period_two():
+    """v_x alternates 0 → a → 0: parity flip each (2k+1)-cell hop."""
+    rng = np.random.default_rng(3)
+    L = 64.0
+    x, y, vx, vy, q = centered_particles(rng, 32, int(L), 1, 1, 1.0)
+    lq = jnp.array([L, 1.0])
+    s = tuple(map(jnp.asarray, (x, y, vx, vy)))
+    qs = jnp.asarray(q)
+    vx_hist = []
+    for _ in range(6):
+        s = model.pic_push_step(s[0], s[1], s[2], s[3], qs, lq)
+        vx_hist.append(np.asarray(s[2]).copy())
+    for i, v in enumerate(vx_hist):
+        if i % 2 == 1:  # after even number of steps
+            np.testing.assert_allclose(v, 0.0, atol=1e-9)
+        else:
+            assert np.all(np.abs(v) > 1e-12)

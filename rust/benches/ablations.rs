@@ -1,0 +1,138 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//! (a) object-selection overfill, (b) virtual-LB tolerance,
+//! (c) neighbor-graph reuse across LB rounds (paper §III-A future
+//! work), (d) SFC vs brute-force coordinate neighbor search (paper
+//! §VII future work) — each swept on a fixed workload with the paper's
+//! metrics. Output: tables + out/ablation_*.csv.
+
+use std::time::Instant;
+
+use difflb::apps::stencil::{inject_mod7, inject_noise, stencil_2d, stencil_3d, Decomposition};
+use difflb::model::evaluate_mapping;
+use difflb::strategies::diffusion::{neighbor, Diffusion};
+use difflb::strategies::{LoadBalancer, StrategyParams};
+use difflb::util::bench::Table;
+use difflb::util::io::{out_path, CsvWriter};
+
+fn main() -> anyhow::Result<()> {
+    // ---------------- (a) overfill sweep
+    {
+        let mut inst = stencil_3d(16, 32);
+        inject_mod7(&mut inst, 1.4, 0.6);
+        let mut table = Table::new(
+            "Ablation A: object-selection overfill (3D stencil, 32 PEs)",
+            &["overfill", "max/avg", "ext/int", "% migrations"],
+        );
+        let mut csv = CsvWriter::create(
+            out_path("ablation_overfill.csv")?,
+            &["overfill", "max_avg", "ext_int", "migration_pct"],
+        )?;
+        for overfill in [0.0, 0.25, 0.5, 0.75] {
+            let lb = Diffusion::communication(StrategyParams { overfill, ..Default::default() });
+            let m = evaluate_mapping(&inst, &lb.rebalance(&inst).mapping);
+            table.rowf(&[
+                &overfill,
+                &format!("{:.3}", m.max_avg_pe),
+                &format!("{:.3}", m.comm_nodes.ratio()),
+                &format!("{:.1}%", m.migration_pct),
+            ]);
+            csv.row(&[&overfill, &m.max_avg_pe, &m.comm_nodes.ratio(), &m.migration_pct])?;
+        }
+        csv.flush()?;
+        println!("{}", table.render());
+    }
+
+    // ---------------- (b) virtual-LB tolerance sweep
+    {
+        let mut inst = stencil_3d(16, 32);
+        inject_mod7(&mut inst, 1.4, 0.6);
+        let mut table = Table::new(
+            "Ablation B: virtual-LB neighborhood tolerance",
+            &["tolerance", "max/avg", "% migrations", "vlb iterations"],
+        );
+        for tol in [0.01, 0.05, 0.1, 0.25] {
+            let lb = Diffusion::communication(StrategyParams {
+                vlb_tolerance: tol,
+                ..Default::default()
+            });
+            let (_, quotas) = lb.plan(&inst);
+            let m = evaluate_mapping(&inst, &lb.rebalance(&inst).mapping);
+            table.rowf(&[
+                &tol,
+                &format!("{:.3}", m.max_avg_pe),
+                &format!("{:.1}%", m.migration_pct),
+                &quotas.iterations,
+            ]);
+        }
+        println!("{}", table.render());
+    }
+
+    // ---------------- (c) neighbor-graph reuse across rounds
+    {
+        let mut table = Table::new(
+            "Ablation C: neighbor-graph reuse over 5 drifting LB rounds",
+            &["mode", "avg max/avg", "avg stage-1+plan time (µs)"],
+        );
+        for reuse in [false, true] {
+            let mut inst = stencil_2d(48, 4, 4, Decomposition::Tiled);
+            let lb = Diffusion::communication(StrategyParams {
+                reuse_neighbors: reuse,
+                ..Default::default()
+            });
+            let mut ratios = 0.0;
+            let mut plan_us = 0.0;
+            for round in 0..5u64 {
+                inject_noise(&mut inst, 0.3, 77 + round);
+                let t = Instant::now();
+                let _ = lb.plan(&inst);
+                plan_us += t.elapsed().as_secs_f64() * 1e6;
+                let asg = lb.rebalance(&inst);
+                ratios += evaluate_mapping(&inst, &asg.mapping).max_avg_node;
+                inst.mapping = asg.mapping;
+            }
+            table.rowf(&[
+                &(if reuse { "reuse" } else { "rebuild" }),
+                &format!("{:.3}", ratios / 5.0),
+                &format!("{:.0}", plan_us / 5.0),
+            ]);
+        }
+        println!("{}", table.render());
+        println!("(paper §III-A future work: comm patterns persist, so reuse should trade little quality for stage-1 cost)\n");
+    }
+
+    // ---------------- (d) SFC vs brute-force coordinate candidates
+    {
+        let mut table = Table::new(
+            "Ablation D: coordinate neighbor search (64 PEs)",
+            &["method", "candidates time (µs)", "max/avg after LB", "ext/int"],
+        );
+        let mut inst = stencil_2d(64, 8, 8, Decomposition::Tiled);
+        inject_noise(&mut inst, 0.4, 9);
+        let node_map = inst.node_mapping();
+        for (label, window) in [("brute (O(n^2))", 0usize), ("sfc w=4", 4), ("sfc w=8", 8)] {
+            let t = Instant::now();
+            let reps = 50;
+            for _ in 0..reps {
+                if window == 0 {
+                    std::hint::black_box(neighbor::coord_candidates(&inst, &node_map));
+                } else {
+                    std::hint::black_box(neighbor::coord_candidates_sfc(&inst, &node_map, window));
+                }
+            }
+            let us = t.elapsed().as_secs_f64() * 1e6 / reps as f64;
+            let lb = Diffusion::coordinate(StrategyParams {
+                sfc_window: window,
+                ..Default::default()
+            });
+            let m = evaluate_mapping(&inst, &lb.rebalance(&inst).mapping);
+            table.rowf(&[
+                &label,
+                &format!("{us:.0}"),
+                &format!("{:.3}", m.max_avg_node),
+                &format!("{:.3}", m.comm_nodes.ratio()),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Fig 2 — object migration in a 2D stencil benchmark: 16 processors,
+//! tiled initial decomposition, each object's load randomly perturbed
+//! ±40%, both diffusion variants with K = 4 neighbors.
+//!
+//! Paper numbers: coordinate-based (max/avg 1.02, ext/int .072),
+//! communication-based (1.04, .06) — comm preserves domain shapes and
+//! the periodic boundary, coord rounds borders and misses it.
+//!
+//! Outputs: out/fig2_{initial,comm,coord}.{ppm,svg} + out/fig2.csv
+
+use difflb::apps::stencil::{inject_noise_binary, stencil_2d, Decomposition};
+use difflb::model::evaluate_mapping;
+use difflb::strategies::{make, StrategyParams};
+use difflb::util::bench::Table;
+use difflb::util::io::{out_path, CsvWriter};
+use difflb::viz;
+
+fn main() -> anyhow::Result<()> {
+    let side = 32; // 1024 objects over 16 PEs (64 per PE)
+    let mut inst = stencil_2d(side, 4, 4, Decomposition::Tiled);
+    inject_noise_binary(&mut inst, 0.4, 0xF162);
+    let initial = evaluate_mapping(&inst, &inst.mapping);
+    let scale = (768 / side).max(4) as f64;
+
+    viz::render_ppm(&inst, &inst.mapping, scale, out_path("fig2_initial.ppm")?)?;
+    viz::render_svg(&inst, &inst.mapping, scale, out_path("fig2_initial.svg")?)?;
+
+    let params = StrategyParams { neighbor_count: 4, ..Default::default() };
+    let mut table = Table::new(
+        "Fig 2: 2D stencil, 16 PEs, tiled init, ±40% load noise, K=4",
+        &["variant", "max/avg load", "ext/int comm", "% migrations"],
+    );
+    table.rowf(&[
+        &"initial",
+        &format!("{:.3}", initial.max_avg_node),
+        &format!("{:.3}", initial.comm_nodes.ratio()),
+        &"-",
+    ]);
+    let mut csv = CsvWriter::create(
+        out_path("fig2.csv")?,
+        &["variant", "max_avg", "ext_int", "migration_pct"],
+    )?;
+    csv.row(&[&"initial", &initial.max_avg_node, &initial.comm_nodes.ratio(), &0.0])?;
+
+    for (label, name) in [("coord", "diff-coord"), ("comm", "diff-comm")] {
+        let asg = make(name, params)?.rebalance(&inst);
+        let m = evaluate_mapping(&inst, &asg.mapping);
+        table.rowf(&[
+            &label,
+            &format!("{:.3}", m.max_avg_node),
+            &format!("{:.3}", m.comm_nodes.ratio()),
+            &format!("{:.1}%", m.migration_pct),
+        ]);
+        csv.row(&[&label, &m.max_avg_node, &m.comm_nodes.ratio(), &m.migration_pct])?;
+        viz::render_ppm(&inst, &asg.mapping, scale, out_path(&format!("fig2_{label}.ppm"))?)?;
+        viz::render_svg(&inst, &asg.mapping, scale, out_path(&format!("fig2_{label}.svg"))?)?;
+    }
+    csv.flush()?;
+    println!("{}", table.render());
+    println!("paper Fig 2: coord (1.02, .072) vs comm (1.04, .06)");
+    println!("images: out/fig2_*.ppm/svg, series: out/fig2.csv");
+    Ok(())
+}

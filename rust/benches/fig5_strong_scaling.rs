@@ -1,0 +1,95 @@
+//! Fig 5 — strong scaling of PIC PRK, 1-8 nodes × 16 processes,
+//! comparing Diffusion, GreedyRefine, and no load balancing, with the
+//! total / communication / LB time breakdown.
+//!
+//! Paper setup: 10M particles, 6000x6000 grid, k=4, rho=0.9, 200x100
+//! chares, Perlmutter. Here the same workload runs on the simulated
+//! cluster: computation is real (measured native push), communication
+//! and migration transfer are modeled with the α–β NetModel (see
+//! DESIGN.md substitutions). Default is a scaled-down workload;
+//! DIFFLB_FULL=1 runs the paper-size one.
+//!
+//! Expected shape: no-LB doesn't scale at all; Diffusion beats
+//! GreedyRefine everywhere with the gap widening at scale (paper: 2x
+//! over GreedyRefine and 7x over no-LB at 8 nodes).
+
+use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
+use difflb::apps::stencil::Decomposition;
+use difflb::model::Topology;
+use difflb::strategies::{make, StrategyParams};
+use difflb::util::bench::Table;
+use difflb::util::io::{out_path, CsvWriter};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("DIFFLB_FULL").is_ok();
+    // scaled: 1M particles on 2000^2; full: paper's 10M on 6000^2
+    let (grid, particles, iters) = if full { (6000, 10_000_000, 100) } else { (2000, 1_000_000, 100) };
+    let (chares_x, chares_y) = if full { (200, 100) } else { (100, 50) };
+    let procs_per_node = 16;
+
+    let mut table = Table::new(
+        format!(
+            "Fig 5: strong scaling, {particles} particles, {grid}^2 grid, k=4, rho=.9, \
+             {chares_x}x{chares_y} chares, 16 procs/node{}",
+            if full { " (FULL)" } else { " (scaled; DIFFLB_FULL=1 for paper size)" }
+        ),
+        &["nodes", "strategy", "total(s)", "compute(s)", "comm(s)", "lb(s)", "speedup-vs-none"],
+    );
+    let mut csv = CsvWriter::create(
+        out_path("fig5.csv")?,
+        &["nodes", "strategy", "total_s", "compute_s", "comm_s", "lb_s"],
+    )?;
+
+    for nodes in [1usize, 2, 4, 8] {
+        let mk = |seed: u64| PicConfig {
+            grid,
+            n_particles: particles,
+            k: 4,
+            m: 1,
+            init: InitMode::Geometric { rho: 0.9 },
+            chares_x,
+            chares_y,
+            decomp: Decomposition::Striped,
+            topo: Topology::flat(nodes * procs_per_node),
+            q: 1.0,
+            seed,
+            particle_bytes: 80.0,
+            threads: 8,
+        };
+        let driver = DriverConfig {
+            iters,
+            lb_period: 5,
+            net: difflb::simnet::NetModel { alpha: 2e-5, beta: 5e-10, intra_factor: 0.05 },
+            ..Default::default()
+        };
+        let mut none_total = 0.0;
+        for name in ["none", "greedy-refine", "diff-comm"] {
+            let mut app = PicApp::new(mk(0x515), Backend::Native)?;
+            let strat = make(name, StrategyParams::default())?;
+            let rep = run_pic(&mut app, strat.as_ref(), &driver)?;
+            anyhow::ensure!(rep.verified, "fig5 verification failed: {name}/{nodes}");
+            if name == "none" {
+                none_total = rep.total_s;
+            }
+            table.rowf(&[
+                &nodes,
+                &name,
+                &format!("{:.3}", rep.total_s),
+                &format!("{:.3}", rep.compute_s),
+                &format!("{:.3}", rep.comm_s),
+                &format!("{:.3}", rep.lb_s),
+                &format!("{:.2}x", none_total / rep.total_s),
+            ]);
+            csv.row(&[&nodes, &name, &rep.total_s, &rep.compute_s, &rep.comm_s, &rep.lb_s])?;
+        }
+    }
+    csv.flush()?;
+    println!("{}", table.render());
+    println!(
+        "paper Fig 5: no-LB does not scale; Diffusion > GreedyRefine at every scale, \
+         gap widening; at 8 nodes Diffusion ≈2x GreedyRefine, ≈7x no-LB"
+    );
+    println!("series: out/fig5.csv");
+    Ok(())
+}

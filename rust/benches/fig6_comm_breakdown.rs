@@ -1,0 +1,102 @@
+//! Fig 6 — communication and computation time per process over 100 LB
+//! phases on 8 nodes (LB every 5 iterations), Diffusion vs GreedyRefine.
+//!
+//! Paper shape: GreedyRefine shows comm-time spikes and ~2x higher max
+//! communication time than Diffusion; average computation time is the
+//! same under both but Diffusion's max computation time is ~2.5x
+//! better (more consistent balance across iterations).
+//!
+//! Outputs: out/fig6_<strategy>.csv + summary ratios.
+
+use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
+use difflb::apps::stencil::Decomposition;
+use difflb::model::Topology;
+use difflb::strategies::{make, StrategyParams};
+use difflb::util::bench::Table;
+use difflb::util::io::{out_path, CsvWriter};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("DIFFLB_FULL").is_ok();
+    let phases = if full { 100 } else { 40 };
+    let lb_period = 5;
+    let (grid, particles) = if full { (6000, 10_000_000) } else { (2000, 1_000_000) };
+    let (chares_x, chares_y) = if full { (200, 100) } else { (100, 50) };
+    let nodes = 8 * 16; // 8 nodes x 16 processes
+
+    let driver = DriverConfig {
+        iters: phases * lb_period,
+        lb_period,
+        net: difflb::simnet::NetModel { alpha: 2e-5, beta: 5e-10, intra_factor: 0.05 },
+        ..Default::default()
+    };
+    let mut results = Vec::new();
+    for name in ["diff-comm", "greedy-refine"] {
+        let cfg = PicConfig {
+            grid,
+            n_particles: particles,
+            k: 4,
+            m: 1,
+            init: InitMode::Geometric { rho: 0.9 },
+            chares_x,
+            chares_y,
+            decomp: Decomposition::Striped,
+            topo: Topology::flat(nodes),
+            q: 1.0,
+            seed: 0xF16,
+            particle_bytes: 80.0,
+            threads: 8,
+        };
+        let mut app = PicApp::new(cfg, Backend::Native)?;
+        let strat = make(name, StrategyParams::default())?;
+        let rep = run_pic(&mut app, strat.as_ref(), &driver)?;
+        anyhow::ensure!(rep.verified, "fig6 verification failed under {name}");
+        let mut csv = CsvWriter::create(
+            out_path(&format!("fig6_{name}.csv"))?,
+            &["iter", "comm_max_s", "comm_avg_s", "compute_max_s", "compute_avg_s", "lb_s"],
+        )?;
+        for r in &rep.records {
+            csv.row(&[
+                &r.iter,
+                &r.comm_max_s,
+                &r.comm_avg_s,
+                &r.compute_max_s,
+                &r.compute_avg_s,
+                &r.lb_s,
+            ])?;
+        }
+        csv.flush()?;
+        results.push((name, rep));
+    }
+
+    let avg = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    let series = |rep: &difflb::apps::driver::RunReport, f: fn(&difflb::apps::driver::IterRecord) -> f64| {
+        rep.records.iter().map(f).collect::<Vec<f64>>()
+    };
+
+    let mut table = Table::new(
+        format!("Fig 6: 8 nodes x 16 procs, {phases} LB phases, LB every {lb_period}"),
+        &["strategy", "avg max-comm (ms)", "avg max-compute (ms)", "avg avg-compute (ms)"],
+    );
+    for (name, rep) in &results {
+        table.rowf(&[
+            name,
+            &format!("{:.3}", 1e3 * avg(&series(rep, |r| r.comm_max_s))),
+            &format!("{:.3}", 1e3 * avg(&series(rep, |r| r.compute_max_s))),
+            &format!("{:.3}", 1e3 * avg(&series(rep, |r| r.compute_avg_s))),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let (d, g) = (&results[0].1, &results[1].1);
+    let comm_speedup =
+        avg(&series(g, |r| r.comm_max_s)) / avg(&series(d, |r| r.comm_max_s)).max(1e-12);
+    let comp_speedup =
+        avg(&series(g, |r| r.compute_max_s)) / avg(&series(d, |r| r.compute_max_s)).max(1e-12);
+    println!(
+        "diffusion speedup over greedy-refine: {comm_speedup:.2}x max-comm, \
+         {comp_speedup:.2}x max-compute (paper: ≈2x and ≈2.5x)"
+    );
+    println!("series: out/fig6_diff-comm.csv, out/fig6_greedy-refine.csv");
+    Ok(())
+}

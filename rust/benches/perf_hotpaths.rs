@@ -1,0 +1,111 @@
+//! §Perf — micro-benchmarks of every hot path in the stack, feeding
+//! EXPERIMENTS.md §Perf: the native particle push (throughput), the
+//! PJRT kernel path (dispatch + execute), the three diffusion stages,
+//! the baselines, and the metrics/instance plumbing.
+
+use std::time::Duration;
+
+use difflb::apps::pic::init::{initialize, InitMode};
+use difflb::apps::pic::push::native_push;
+use difflb::apps::pic::{Backend, PicApp, PicConfig};
+use difflb::apps::stencil::{self, Decomposition};
+use difflb::model::{evaluate_mapping, Topology};
+use difflb::runtime::{Engine, Manifest, PicBatch};
+use difflb::strategies::diffusion::{neighbor, virtual_lb, Diffusion};
+use difflb::strategies::{make, StrategyParams};
+use difflb::util::bench::{time_fn, Timing};
+
+fn report(t: &Timing, extra: &str) {
+    println!("{}  {extra}", t.report());
+}
+
+fn main() -> anyhow::Result<()> {
+    let budget = Duration::from_millis(400);
+
+    // ---------- L1/L2 surrogate + L3 compute: particle push
+    let n = 65_536;
+    let pop = initialize(InitMode::Geometric { rho: 0.9 }, n, 1000, 2, 1, 1.0, 1);
+    let base = PicBatch { x: pop.x, y: pop.y, vx: pop.vx, vy: pop.vy, q: pop.q };
+    for threads in [1usize, 4, 8] {
+        let mut b = base.clone();
+        let t = time_fn(&format!("native_push n={n} threads={threads}"), budget, || {
+            native_push(&mut b, 1000.0, 1.0, threads);
+            b.x[0]
+        });
+        report(&t, &format!("{:.1} Mparticles/s", n as f64 / t.mean_s / 1e6));
+    }
+    if let Ok(m) = Manifest::load_default() {
+        let engine = Engine::with_manifest(m)?;
+        let mut b = base.clone();
+        let t = time_fn(&format!("pjrt_push n={n}"), budget, || {
+            engine.pic_push(&mut b, 1000.0, 1.0).unwrap();
+            b.x[0]
+        });
+        report(&t, &format!("{:.1} Mparticles/s", n as f64 / t.mean_s / 1e6));
+        // stencil artifact
+        let grid: Vec<f64> = (0..256 * 256).map(|i| i as f64).collect();
+        let t = time_fn("pjrt_stencil 256x256", budget, || {
+            engine.stencil_step(&grid, 256, 256, 0.2).unwrap()[0]
+        });
+        report(&t, &format!("{:.1} Mcell/s", 256.0 * 256.0 / t.mean_s / 1e6));
+    } else {
+        println!("(PJRT artifacts missing; skipping kernel benches)");
+    }
+
+    // ---------- L3: diffusion stages on a big instance
+    let mut inst = stencil::stencil_2d(96, 8, 8, Decomposition::Tiled); // 9216 objects
+    stencil::inject_noise(&mut inst, 0.4, 2);
+    let node_map = inst.node_mapping();
+    let t = time_fn("stage1 comm_candidates (9216 obj, 64 PEs)", budget, || {
+        neighbor::comm_candidates(&inst, &node_map).len()
+    });
+    report(&t, "");
+    let cands = neighbor::comm_candidates(&inst, &node_map);
+    let t = time_fn("stage1 handshake K=4", budget, || {
+        neighbor::select_neighbors(&cands, 4, 32).max_degree()
+    });
+    report(&t, "");
+    let neigh = neighbor::select_neighbors(&cands, 4, 32);
+    let loads = inst.node_loads(&inst.mapping);
+    let t = time_fn("stage2 virtual_balance", budget, || {
+        virtual_lb::virtual_balance(&neigh, &loads, 0.05, 200).iterations
+    });
+    report(&t, "");
+    let diff = Diffusion::communication(StrategyParams::default());
+    use difflb::strategies::LoadBalancer;
+    let t = time_fn("diffusion full rebalance", budget, || diff.rebalance(&inst).mapping[0]);
+    report(&t, "");
+
+    // ---------- baselines on the same instance
+    for name in ["greedy-refine", "metis", "parmetis"] {
+        let lb = make(name, StrategyParams::default())?;
+        let t = time_fn(&format!("{name} rebalance"), budget, || lb.rebalance(&inst).mapping[0]);
+        report(&t, "");
+    }
+
+    // ---------- metrics + plumbing
+    let asg = diff.rebalance(&inst);
+    let t = time_fn("evaluate_mapping", budget, || {
+        evaluate_mapping(&inst, &asg.mapping).migrations
+    });
+    report(&t, "");
+    let t = time_fn("instance .lbi serialize", budget, || inst.to_lbi().len());
+    report(&t, "");
+
+    // ---------- app iteration (binning + traffic)
+    let cfg = PicConfig {
+        grid: 1000,
+        n_particles: 200_000,
+        chares_x: 20,
+        chares_y: 20,
+        topo: Topology::flat(16),
+        threads: 8,
+        ..Default::default()
+    };
+    let mut app = PicApp::new(cfg, Backend::Native)?;
+    let t = time_fn("pic app.step (200k particles)", budget, || {
+        app.step().unwrap().crossers
+    });
+    report(&t, &format!("{:.1} Mparticles/s end-to-end", 200_000.0 / t.mean_s / 1e6));
+    Ok(())
+}

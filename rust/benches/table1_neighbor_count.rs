@@ -1,0 +1,59 @@
+//! Table I — impact of neighbor count K on load-balancing quality.
+//!
+//! Paper setup: processors form a 1D ring, one processor overloaded
+//! 10x (initial max/avg ≈ 5); diffusion with K ∈ {1, 2, 4, 8}.
+//! Expected shape: K=1 cannot shed load (l/2 = 0 sends no requests),
+//! balance improves monotonically with K, while external/internal
+//! communication grows as more-distant migrations open up.
+
+use difflb::apps::stencil::{overload_pe, ring};
+use difflb::model::evaluate_mapping;
+use difflb::strategies::{make, StrategyParams};
+use difflb::util::bench::Table;
+use difflb::util::io::{out_path, CsvWriter};
+
+fn main() -> anyhow::Result<()> {
+    let n_pes = 10;
+    let objs_per_pe = 16;
+
+    let mut table = Table::new(
+        format!("Table I: 1D ring, {n_pes} PEs, one overloaded 10x (diff-comm)"),
+        &["metric", "K=1", "K=2", "K=4", "K=8"],
+    );
+    let mut ratios = vec!["max/avg load".to_string()];
+    let mut comms = vec!["external/internal comm".to_string()];
+    let mut migrs = vec!["% migrations".to_string()];
+    let mut csv = CsvWriter::create(
+        out_path("table1.csv")?,
+        &["k", "max_avg", "ext_int", "migration_pct", "initial_max_avg", "initial_ext_int"],
+    )?;
+
+    for k in [1usize, 2, 4, 8] {
+        let mut inst = ring(n_pes, objs_per_pe);
+        overload_pe(&mut inst, 0, 10.0);
+        let initial = evaluate_mapping(&inst, &inst.mapping);
+        let params = StrategyParams { neighbor_count: k, ..Default::default() };
+        let lb = make("diff-comm", params)?;
+        let asg = lb.rebalance(&inst);
+        let m = evaluate_mapping(&inst, &asg.mapping);
+        ratios.push(format!("{:.2}", m.max_avg_pe));
+        comms.push(format!("{:.3}", m.comm_nodes.ratio()));
+        migrs.push(format!("{:.1}%", m.migration_pct));
+        csv.row(&[
+            &k,
+            &m.max_avg_pe,
+            &m.comm_nodes.ratio(),
+            &m.migration_pct,
+            &initial.max_avg_pe,
+            &initial.comm_nodes.ratio(),
+        ])?;
+    }
+    csv.flush()?;
+    table.row(&ratios);
+    table.row(&comms);
+    table.row(&migrs);
+    println!("{}", table.render());
+    println!("paper Table I: max/avg 4.9 / 1.7 / 1.3 / 1.1, ext/int .142 / .151 / .25 / .26");
+    println!("series: out/table1.csv");
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Applications exercising the load balancer: the synthetic stencil
+//! workload generators (paper §V) and the PIC PRK benchmark (paper
+//! §VI), plus the iterative driver that schedules LB and accounts time.
+
+pub mod driver;
+pub mod pic;
+pub mod stencil;

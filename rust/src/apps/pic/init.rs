@@ -1,0 +1,190 @@
+//! PIC PRK particle initialization (Georganas et al., IPDPS'16 §III).
+//!
+//! Particles are placed at cell centers and given a **calibrated
+//! charge** such that each particle travels exactly `2k+1` cells in +x
+//! per time step (column parity flips each step since `2k+1` is odd, so
+//! the force alternates sign and `v_x` oscillates between 0 and `a·DT`),
+//! and exactly `m` cells in +y (vertical force cancels at `rel_y = 0.5`).
+//! This determinism is what makes the benchmark *verifiable* and its
+//! load-imbalance evolution predictable (paper §VI-A).
+
+use crate::util::rng::Rng;
+
+pub const DT: f64 = 1.0;
+
+/// Supported initial particle distributions (PRK modes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitMode {
+    /// `A·rho^i` particles in grid column i (paper's mode; rho < 1 skews
+    /// left, the paper uses rho = 0.9).
+    Geometric { rho: f64 },
+    /// Density ∝ 1 + cos(2πx/L): smooth periodic bunching.
+    Sinusoidal,
+    /// Density decreasing linearly with x: `1 - alpha·x/L`.
+    Linear { alpha: f64 },
+    /// Uniform density inside a rectangular patch, zero outside.
+    Patch { x0: f64, x1: f64, y0: f64, y1: f64 },
+}
+
+/// Charge magnitude at grid column `x`: +Q even columns, −Q odd.
+#[inline]
+pub fn grid_charge(x: f64, q: f64) -> f64 {
+    q * (1.0 - 2.0 * (x.rem_euclid(2.0)))
+}
+
+/// PRK charge calibration for a particle at cell-relative (rel_x, rel_y):
+/// with charge `(2k+1)·base_charge`, first-step displacement is exactly
+/// `2k+1` cells (see python/compile/kernels/ref.py::base_charge).
+pub fn base_charge(rel_x: f64, rel_y: f64, q: f64) -> f64 {
+    let r1_sq = rel_y * rel_y + rel_x * rel_x;
+    let r2_sq = rel_y * rel_y + (1.0 - rel_x) * (1.0 - rel_x);
+    let cos_theta = rel_x / r1_sq.sqrt();
+    let cos_phi = (1.0 - rel_x) / r2_sq.sqrt();
+    1.0 / ((DT * DT) * q * (cos_theta / r1_sq + cos_phi / r2_sq))
+}
+
+/// A freshly initialized particle population (structure of arrays).
+#[derive(Debug, Clone, Default)]
+pub struct Population {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub vx: Vec<f64>,
+    pub vy: Vec<f64>,
+    pub q: Vec<f64>,
+}
+
+impl Population {
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+}
+
+/// Column weights for an init mode over `l` columns.
+fn column_weights(mode: InitMode, l: usize) -> Vec<f64> {
+    (0..l)
+        .map(|i| match mode {
+            InitMode::Geometric { rho } => rho.powi(i as i32),
+            InitMode::Sinusoidal => {
+                1.0 + (2.0 * std::f64::consts::PI * i as f64 / l as f64).cos()
+            }
+            InitMode::Linear { alpha } => (1.0 - alpha * i as f64 / l as f64).max(0.0),
+            InitMode::Patch { x0, x1, .. } => {
+                if (i as f64) >= x0 && (i as f64) < x1 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        })
+        .collect()
+}
+
+/// Distribute `n` particles over columns by weight (largest remainder).
+fn apportion(weights: &[f64], n: usize) -> Vec<usize> {
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "init mode places no particles");
+    let ideal: Vec<f64> = weights.iter().map(|w| w / total * n as f64).collect();
+    let mut counts: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    let mut short = n - counts.iter().sum::<usize>();
+    let mut rema: Vec<(usize, f64)> =
+        ideal.iter().enumerate().map(|(i, x)| (i, x - x.floor())).collect();
+    rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    for (i, _) in rema {
+        if short == 0 {
+            break;
+        }
+        counts[i] += 1;
+        short -= 1;
+    }
+    counts
+}
+
+/// Initialize `n` particles on an `l x l` grid.
+pub fn initialize(mode: InitMode, n: usize, l: usize, k: u32, m: u32, q: f64, seed: u64) -> Population {
+    let mut rng = Rng::new(seed);
+    let counts = apportion(&column_weights(mode, l), n);
+    let mut pop = Population::default();
+    let bc = base_charge(0.5, 0.5, q);
+    let row_span = match mode {
+        InitMode::Patch { y0, y1, .. } => (y0.max(0.0) as usize, (y1 as usize).min(l)),
+        _ => (0, l),
+    };
+    for (col, &count) in counts.iter().enumerate() {
+        for _ in 0..count {
+            let row = rng.range(row_span.0, row_span.1.max(row_span.0 + 1));
+            let x = col as f64 + 0.5;
+            let y = row as f64 + 0.5;
+            // even column -> positive charge (drifts +x past the +Q
+            // column), odd -> negative (also +x): PRK's sign trick.
+            let sign = if col % 2 == 0 { 1.0 } else { -1.0 };
+            pop.x.push(x);
+            pop.y.push(y);
+            pop.vx.push(0.0);
+            pop.vy.push(m as f64 / DT);
+            pop.q.push(sign * (2.0 * k as f64 + 1.0) * bc);
+        }
+    }
+    pop
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometric_skews_left() {
+        let pop = initialize(InitMode::Geometric { rho: 0.9 }, 10_000, 100, 1, 1, 1.0, 3);
+        assert_eq!(pop.len(), 10_000);
+        let left = pop.x.iter().filter(|&&x| x < 50.0).count();
+        assert!(left > 6_000, "left {left}");
+    }
+
+    #[test]
+    fn all_cell_centered() {
+        let pop = initialize(InitMode::Sinusoidal, 1_000, 64, 2, 1, 1.0, 4);
+        for (&x, &y) in pop.x.iter().zip(&pop.y) {
+            assert!((x.fract() - 0.5).abs() < 1e-12);
+            assert!((y.fract() - 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn patch_respects_bounds() {
+        let mode = InitMode::Patch { x0: 10.0, x1: 20.0, y0: 5.0, y1: 15.0 };
+        let pop = initialize(mode, 500, 64, 1, 1, 1.0, 5);
+        assert_eq!(pop.len(), 500);
+        for (&x, &y) in pop.x.iter().zip(&pop.y) {
+            assert!((10.0..20.0).contains(&x), "x {x}");
+            assert!((5.0..15.0).contains(&y), "y {y}");
+        }
+    }
+
+    #[test]
+    fn apportion_exact_total() {
+        let counts = apportion(&[0.5, 0.25, 0.25], 101);
+        assert_eq!(counts.iter().sum::<usize>(), 101);
+        assert!(counts[0] >= 50);
+    }
+
+    #[test]
+    fn charge_signs_alternate_by_column() {
+        let pop = initialize(InitMode::Linear { alpha: 0.5 }, 2_000, 32, 0, 1, 1.0, 6);
+        for (&x, &q) in pop.x.iter().zip(&pop.q) {
+            let col = x.floor() as usize;
+            assert_eq!(q > 0.0, col % 2 == 0, "col {col} q {q}");
+        }
+    }
+
+    #[test]
+    fn base_charge_matches_python_oracle() {
+        // value cross-checked against compile/kernels/ref.py
+        let bc = base_charge(0.5, 0.5, 1.0);
+        // cos_theta = cos_phi = 0.5/sqrt(0.5); r^2 = 0.5
+        let expect = 1.0 / (2.0 * (0.5 / 0.5f64.sqrt()) / 0.5);
+        assert!((bc - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,480 @@
+//! The PIC PRK benchmark (paper §VI), as a Charm++-style
+//! over-decomposed application: the `grid x grid` cell mesh is split
+//! into `chares_x x chares_y` chares, particles live in the chare that
+//! owns their cell, and each time step (1) pushes every particle
+//! (PJRT-compiled Pallas kernel or the native Rust backend) and (2)
+//! re-bins crossers, recording chare→chare traffic — which *is* the
+//! communication graph the diffusion strategy consumes. Per-chare load
+//! is the measured push time attributed by particle count, and the
+//! deterministic (2k+1)-cells-per-step motion lets [`PicApp::verify`]
+//! check the entire pipeline (including LB migrations) analytically.
+
+pub mod init;
+pub mod push;
+pub mod verify;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::stencil::Decomposition;
+use crate::model::{Assignment, Instance, Topology, TrafficRecorder};
+use crate::runtime::{Engine, PicBatch};
+
+pub use init::InitMode;
+
+/// Bytes charged per chare-pair sync message per step.
+pub const SYNC_BYTES: f64 = 16.0;
+
+/// PIC PRK configuration (mirrors the PRK CLI parameters + the paper's
+/// chare/processor additions).
+#[derive(Debug, Clone)]
+pub struct PicConfig {
+    /// Grid side L (cells); positions live in [0, L).
+    pub grid: usize,
+    pub n_particles: usize,
+    /// Horizontal speed parameter: displacement = 2k+1 cells/step.
+    pub k: u32,
+    /// Vertical speed: m cells/step.
+    pub m: u32,
+    pub init: InitMode,
+    pub chares_x: usize,
+    pub chares_y: usize,
+    /// Initial chare → PE decomposition (striped/quad, paper §VI-A).
+    pub decomp: Decomposition,
+    pub topo: Topology,
+    /// Base grid charge magnitude Q.
+    pub q: f64,
+    pub seed: u64,
+    /// Bytes to move one particle between chares (comm accounting).
+    pub particle_bytes: f64,
+    /// Native-backend push threads.
+    pub threads: usize,
+}
+
+impl Default for PicConfig {
+    fn default() -> Self {
+        PicConfig {
+            grid: 1000,
+            n_particles: 100_000,
+            k: 2,
+            m: 1,
+            init: InitMode::Geometric { rho: 0.9 },
+            chares_x: 12,
+            chares_y: 12,
+            decomp: Decomposition::Striped,
+            topo: Topology::flat(4),
+            q: 1.0,
+            seed: 0x9C,
+            particle_bytes: 48.0,
+            threads: 8,
+        }
+    }
+}
+
+/// Which engine performs the particle push.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure Rust (thread-parallel), always available.
+    Native,
+    /// AOT Pallas kernel through the PJRT CPU client.
+    Pjrt(Arc<Engine>),
+}
+
+/// Per-iteration statistics returned by [`PicApp::step`].
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    /// Wall-clock seconds of the push phase.
+    pub push_s: f64,
+    /// Aggregated particle traffic this step: (chare_from, chare_to, bytes).
+    pub moved: Vec<(u32, u32, f64)>,
+    /// Particles that crossed chares.
+    pub crossers: usize,
+}
+
+pub struct PicApp {
+    pub cfg: PicConfig,
+    pub state: PicBatch,
+    /// Initial positions (for verification).
+    x0: Vec<f64>,
+    y0: Vec<f64>,
+    /// Current chare of each particle.
+    pub chare_of: Vec<u32>,
+    /// Current chare → PE mapping.
+    pub chare_to_pe: Vec<u32>,
+    /// Chare↔chare traffic since the last LB step.
+    traffic: TrafficRecorder,
+    /// Static chare adjacency (sync-message partners), cached.
+    neighbor_pairs: Vec<(u32, u32)>,
+    /// Steps since the last build_instance (sync-traffic accounting).
+    steps_since_lb: usize,
+    /// Per-chare accumulated load (seconds) since the last LB step.
+    pub load_acc: Vec<f64>,
+    pub steps_done: usize,
+    backend: Backend,
+}
+
+impl PicApp {
+    pub fn new(cfg: PicConfig, backend: Backend) -> Result<PicApp> {
+        anyhow::ensure!(cfg.grid % cfg.chares_x == 0, "grid must divide chares_x");
+        anyhow::ensure!(cfg.grid % cfg.chares_y == 0, "grid must divide chares_y");
+        let pop = init::initialize(
+            cfg.init,
+            cfg.n_particles,
+            cfg.grid,
+            cfg.k,
+            cfg.m,
+            cfg.q,
+            cfg.seed,
+        );
+        let state = PicBatch { x: pop.x, y: pop.y, vx: pop.vx, vy: pop.vy, q: pop.q };
+        let n_chares = cfg.chares_x * cfg.chares_y;
+        let chare_to_pe = initial_mapping(&cfg);
+        let mut app = PicApp {
+            x0: state.x.clone(),
+            y0: state.y.clone(),
+            chare_of: vec![0; state.len()],
+            chare_to_pe,
+            traffic: TrafficRecorder::new(n_chares),
+            neighbor_pairs: Vec::new(),
+            steps_since_lb: 0,
+            load_acc: vec![0.0; n_chares],
+            steps_done: 0,
+            state,
+            cfg,
+            backend,
+        };
+        app.neighbor_pairs = app.chare_neighbor_pairs();
+        for i in 0..app.state.len() {
+            app.chare_of[i] = app.chare_of_pos(app.state.x[i], app.state.y[i]);
+        }
+        Ok(app)
+    }
+
+    pub fn n_chares(&self) -> usize {
+        self.cfg.chares_x * self.cfg.chares_y
+    }
+
+    /// Chare owning position (x, y).
+    #[inline]
+    pub fn chare_of_pos(&self, x: f64, y: f64) -> u32 {
+        let cw = self.cfg.grid / self.cfg.chares_x;
+        let ch = self.cfg.grid / self.cfg.chares_y;
+        let cx = ((x as usize) / cw).min(self.cfg.chares_x - 1);
+        let cy = ((y as usize) / ch).min(self.cfg.chares_y - 1);
+        (cy * self.cfg.chares_x + cx) as u32
+    }
+
+    /// One time step: push all particles, re-bin crossers, account
+    /// traffic and load.
+    pub fn step(&mut self) -> Result<StepStats> {
+        let t = Instant::now();
+        match &self.backend {
+            Backend::Native => {
+                push::native_push(&mut self.state, self.cfg.grid as f64, self.cfg.q, self.cfg.threads)
+            }
+            Backend::Pjrt(engine) => {
+                engine.pic_push(&mut self.state, self.cfg.grid as f64, self.cfg.q)?
+            }
+        }
+        let push_s = t.elapsed().as_secs_f64();
+
+        // Re-bin + traffic accounting.
+        let mut moved: HashMap<(u32, u32), f64> = HashMap::new();
+        let mut crossers = 0usize;
+        for i in 0..self.state.len() {
+            let nc = self.chare_of_pos(self.state.x[i], self.state.y[i]);
+            let oc = self.chare_of[i];
+            if nc != oc {
+                crossers += 1;
+                self.traffic.record(oc, nc, self.cfg.particle_bytes);
+                *moved.entry((oc, nc)).or_insert(0.0) += self.cfg.particle_bytes;
+                self.chare_of[i] = nc;
+            }
+        }
+
+        // Load attribution: measured push time split by particle count.
+        let counts = self.chare_particle_counts();
+        let per_particle = push_s / self.state.len().max(1) as f64;
+        for (c, &cnt) in counts.iter().enumerate() {
+            self.load_acc[c] += cnt as f64 * per_particle;
+        }
+        self.steps_done += 1;
+        self.steps_since_lb += 1;
+
+        let mut moved: Vec<(u32, u32, f64)> =
+            moved.into_iter().map(|((a, b), w)| (a, b, w)).collect();
+        moved.sort_unstable_by_key(|&(a, b, _)| (a, b));
+        Ok(StepStats { push_s, moved, crossers })
+    }
+
+    /// Adjacent chare pairs (8-neighborhood, periodic), each once with
+    /// `a < b`. Every time step each pair exchanges a synchronization
+    /// message (possibly empty) — the Charm++ PIC PRK pattern: a chare
+    /// must hear from all neighbors to know every incoming particle
+    /// arrived. The driver charges α per such message, so scattering
+    /// chares across nodes directly shows up as communication time.
+    pub fn chare_neighbor_pairs(&self) -> Vec<(u32, u32)> {
+        let (cx, cy) = (self.cfg.chares_x as i64, self.cfg.chares_y as i64);
+        let mut pairs = Vec::with_capacity((cx * cy * 4) as usize);
+        for y in 0..cy {
+            for x in 0..cx {
+                let a = (y * cx + x) as u32;
+                for (dx, dy) in [(1i64, 0i64), (0, 1), (1, 1), (1, -1)] {
+                    let nx = (x + dx).rem_euclid(cx);
+                    let ny = (y + dy).rem_euclid(cy);
+                    let b = (ny * cx + nx) as u32;
+                    if a != b {
+                        pairs.push((a.min(b), a.max(b)));
+                    }
+                }
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        pairs
+    }
+
+    pub fn chare_particle_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.n_chares()];
+        for &c in &self.chare_of {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Particles per PE under the current chare mapping.
+    pub fn pe_particle_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.cfg.topo.n_pes()];
+        for &c in &self.chare_of {
+            counts[self.chare_to_pe[c as usize] as usize] += 1;
+        }
+        counts
+    }
+
+    /// Snapshot the LB problem: drains traffic and accumulated loads.
+    pub fn build_instance(&mut self) -> Instance {
+        let n_chares = self.n_chares();
+        let counts = self.chare_particle_counts();
+        // If no load was measured yet (LB before first step), fall back
+        // to particle counts as the load proxy.
+        let measured: f64 = self.load_acc.iter().sum();
+        let loads: Vec<f64> = if measured > 0.0 {
+            self.load_acc.clone()
+        } else {
+            counts.iter().map(|&c| c as f64).collect()
+        };
+        let cw = (self.cfg.grid / self.cfg.chares_x) as f64;
+        let ch = (self.cfg.grid / self.cfg.chares_y) as f64;
+        let coords: Vec<[f64; 2]> = (0..n_chares)
+            .map(|c| {
+                let cx = (c % self.cfg.chares_x) as f64;
+                let cy = (c / self.cfg.chares_x) as f64;
+                [cx * cw + cw / 2.0, cy * ch + ch / 2.0]
+            })
+            .collect();
+        // Sync messages are communication too: every adjacent chare
+        // pair exchanges a small message each step (the Charm++ runtime
+        // records these in the comm graph just like particle payloads),
+        // so the balancer sees grid adjacency as well as particle flow.
+        let pairs = self.neighbor_pairs.clone();
+        for &(a, b) in &pairs {
+            self.traffic.record(a, b, SYNC_BYTES * self.steps_since_lb as f64);
+        }
+        self.steps_since_lb = 0;
+        let graph = self.traffic.take_graph();
+        let sizes: Vec<f64> =
+            counts.iter().map(|&c| (c as f64) * self.cfg.particle_bytes).collect();
+        self.load_acc.iter_mut().for_each(|l| *l = 0.0);
+        let mut inst = Instance::new(
+            loads,
+            coords,
+            graph,
+            self.chare_to_pe.clone(),
+            self.cfg.topo,
+        );
+        inst.sizes = sizes;
+        inst
+    }
+
+    /// Adopt a new chare → PE mapping; returns migrated bytes.
+    pub fn apply_assignment(&mut self, asg: &Assignment) -> f64 {
+        assert_eq!(asg.mapping.len(), self.n_chares());
+        let counts = self.chare_particle_counts();
+        let mut bytes = 0.0;
+        for (c, (&new_pe, old_pe)) in asg.mapping.iter().zip(&self.chare_to_pe).enumerate() {
+            if new_pe != *old_pe {
+                bytes += counts[c] as f64 * self.cfg.particle_bytes;
+            }
+        }
+        self.chare_to_pe = asg.mapping.clone();
+        bytes
+    }
+
+    /// PRK-style analytic verification of every particle's position.
+    pub fn verify(&self) -> Result<(), String> {
+        verify::verify_positions(
+            &self.x0,
+            &self.y0,
+            &self.state.x,
+            &self.state.y,
+            self.steps_done,
+            self.cfg.k,
+            self.cfg.m,
+            self.cfg.grid as f64,
+        )
+    }
+}
+
+/// Initial chare→PE mapping per the paper's striped/quad modes.
+fn initial_mapping(cfg: &PicConfig) -> Vec<u32> {
+    let n_chares = cfg.chares_x * cfg.chares_y;
+    let n_pes = cfg.topo.n_pes();
+    match cfg.decomp {
+        // column-major order striping: high inter-PE traffic as
+        // particles sweep rightward (paper §VI-A)
+        Decomposition::Striped => (0..n_chares)
+            .map(|c| {
+                let cx = c % cfg.chares_x;
+                let cy = c / cfg.chares_x;
+                let cm = cx * cfg.chares_y + cy;
+                ((cm * n_pes) / n_chares) as u32
+            })
+            .collect(),
+        Decomposition::Tiled => {
+            // choose the px x py factorization of n_pes whose aspect
+            // ratio best matches the chare grid, then tile
+            // proportionally (no divisibility requirement)
+            let want = cfg.chares_x as f64 / cfg.chares_y as f64;
+            let mut best = (n_pes, 1usize);
+            let mut best_err = f64::INFINITY;
+            for px in 1..=n_pes {
+                if n_pes % px != 0 || px > cfg.chares_x {
+                    continue;
+                }
+                let py = n_pes / px;
+                if py > cfg.chares_y {
+                    continue;
+                }
+                let err = ((px as f64 / py as f64).ln() - want.ln()).abs();
+                if err < best_err {
+                    best_err = err;
+                    best = (px, py);
+                }
+            }
+            let (px, py) = best;
+            (0..n_chares)
+                .map(|c| {
+                    let cx = c % cfg.chares_x;
+                    let cy = c / cfg.chares_x;
+                    let tx = (cx * px / cfg.chares_x).min(px - 1);
+                    let ty = (cy * py / cfg.chares_y).min(py - 1);
+                    (ty * px + tx) as u32
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> PicConfig {
+        PicConfig {
+            grid: 64,
+            n_particles: 2_000,
+            k: 1,
+            m: 1,
+            init: InitMode::Geometric { rho: 0.9 },
+            chares_x: 4,
+            chares_y: 4,
+            decomp: Decomposition::Striped,
+            topo: Topology::flat(4),
+            q: 1.0,
+            seed: 11,
+            particle_bytes: 48.0,
+            threads: 4,
+        }
+    }
+
+    #[test]
+    fn init_and_binning() {
+        let app = PicApp::new(small_cfg(), Backend::Native).unwrap();
+        assert_eq!(app.state.len(), 2_000);
+        let counts = app.chare_particle_counts();
+        assert_eq!(counts.iter().sum::<u32>(), 2_000);
+        // geometric: left column of chares holds the most
+        let left: u32 = (0..4).map(|cy| counts[cy * 4]).sum();
+        let right: u32 = (0..4).map(|cy| counts[cy * 4 + 3]).sum();
+        assert!(left > right, "left {left} right {right}");
+    }
+
+    #[test]
+    fn striped_mapping_is_column_major() {
+        let app = PicApp::new(small_cfg(), Backend::Native).unwrap();
+        // chares in column 0 (cx=0) map to the first PE(s)
+        assert_eq!(app.chare_to_pe[0], 0);
+        assert_eq!(app.chare_to_pe[4], 0); // (cx=0, cy=1)
+        // last column maps to the last PE
+        assert_eq!(app.chare_to_pe[15], 3);
+    }
+
+    #[test]
+    fn steps_move_particles_and_record_traffic() {
+        let mut app = PicApp::new(small_cfg(), Backend::Native).unwrap();
+        let mut crossers = 0;
+        for _ in 0..8 {
+            crossers += app.step().unwrap().crossers;
+        }
+        // displacement 3 cells/step, chare width 16 -> crossings happen
+        assert!(crossers > 0);
+        let inst = app.build_instance();
+        assert!(inst.graph.edge_count() > 0);
+        assert!(inst.validate().is_ok());
+    }
+
+    #[test]
+    fn verification_through_lb_migrations() {
+        let mut app = PicApp::new(small_cfg(), Backend::Native).unwrap();
+        for i in 0..10 {
+            app.step().unwrap();
+            if i % 3 == 2 {
+                // shuffle chares across PEs; particle physics must be
+                // unaffected by placement
+                let inst = app.build_instance();
+                let asg = crate::strategies::make(
+                    "greedy-refine",
+                    crate::strategies::StrategyParams::default(),
+                )
+                .unwrap()
+                .rebalance(&inst);
+                app.apply_assignment(&asg);
+            }
+        }
+        app.verify().expect("verification failed");
+    }
+
+    #[test]
+    fn quad_mapping_tiles() {
+        let mut cfg = small_cfg();
+        cfg.decomp = Decomposition::Tiled;
+        let app = PicApp::new(cfg, Backend::Native).unwrap();
+        // 2x2 PE grid over 4x4 chares: chare (0,0) and (1,1) same PE
+        assert_eq!(app.chare_to_pe[0], app.chare_to_pe[5]);
+        assert_ne!(app.chare_to_pe[0], app.chare_to_pe[3]);
+    }
+
+    #[test]
+    fn instance_sizes_reflect_particles() {
+        let mut app = PicApp::new(small_cfg(), Backend::Native).unwrap();
+        app.step().unwrap();
+        let counts = app.chare_particle_counts();
+        let inst = app.build_instance();
+        for (c, &cnt) in counts.iter().enumerate() {
+            assert_eq!(inst.sizes[c], cnt as f64 * 48.0);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Particle push backends.
+//!
+//! [`native_push`] is the pure-Rust hot path (thread-parallel,
+//! identical math to the Pallas kernel — the integration tests assert
+//! bitwise-level agreement with the PJRT artifact), used when artifacts
+//! are absent or for baseline comparison. The PJRT path lives in
+//! [`crate::runtime::Engine::pic_push`].
+
+use crate::runtime::PicBatch;
+
+use super::init::{grid_charge, DT};
+
+pub const MASS_INV: f64 = 1.0;
+
+/// One PIC step for particle `i` of `b` (PRK computeTotalForce + update).
+#[inline]
+pub fn push_one(
+    x: f64,
+    y: f64,
+    vx: f64,
+    vy: f64,
+    q: f64,
+    l: f64,
+    big_q: f64,
+) -> (f64, f64, f64, f64) {
+    let cx = x.floor();
+    let cy = y.floor();
+    let rel_x = x - cx;
+    let rel_y = y - cy;
+    let q_left = grid_charge(cx, big_q);
+    let q_right = -q_left;
+
+    // NOTE: no f64::mul_add here — without -Ctarget-feature=+fma it
+    // lowers to an fma() libcall and costs 1.3x (EXPERIMENTS.md §Perf).
+    #[inline(always)]
+    fn corner(xd: f64, yd: f64, qp: f64, qg: f64) -> (f64, f64) {
+        let r2 = xd * xd + yd * yd;
+        let f = (qp * qg) / (r2 * r2.sqrt());
+        (f * xd, f * yd)
+    }
+
+    let (fx_tl, fy_tl) = corner(rel_x, rel_y, q, q_left);
+    let (fx_bl, fy_bl) = corner(rel_x, 1.0 - rel_y, q, q_left);
+    let (fx_tr, fy_tr) = corner(1.0 - rel_x, rel_y, q, q_right);
+    let (fx_br, fy_br) = corner(1.0 - rel_x, 1.0 - rel_y, q, q_right);
+
+    let ax = (fx_tl + fx_bl - fx_tr - fx_br) * MASS_INV;
+    let ay = (fy_tl - fy_bl + fy_tr - fy_br) * MASS_INV;
+
+    // branch-free periodic wrap (rem_euclid's sign branch blocks
+    // autovectorization of the caller's loop)
+    let xu = x + vx * DT + 0.5 * ax * (DT * DT);
+    let yu = y + vy * DT + 0.5 * ay * (DT * DT);
+    let xn = xu - l * (xu / l).floor();
+    let yn = yu - l * (yu / l).floor();
+    (xn, yn, vx + ax * DT, vy + ay * DT)
+}
+
+/// One PIC step over the whole batch, parallelized over `threads`
+/// chunks with scoped threads (no runtime deps available offline).
+pub fn native_push(b: &mut PicBatch, l: f64, big_q: f64, threads: usize) {
+    let n = b.len();
+    if n == 0 {
+        return;
+    }
+    // more threads than cores only adds spawn overhead
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let threads = threads.clamp(1, n).min(cores);
+    if threads == 1 {
+        for i in 0..n {
+            let (xn, yn, vxn, vyn) = push_one(b.x[i], b.y[i], b.vx[i], b.vy[i], b.q[i], l, big_q);
+            b.x[i] = xn;
+            b.y[i] = yn;
+            b.vx[i] = vxn;
+            b.vy[i] = vyn;
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    // Split all five arrays into matching chunks and push in parallel.
+    std::thread::scope(|scope| {
+        let mut rest: (&mut [f64], &mut [f64], &mut [f64], &mut [f64], &mut [f64]) = (
+            &mut b.x, &mut b.y, &mut b.vx, &mut b.vy, &mut b.q,
+        );
+        let mut handles = Vec::new();
+        while !rest.0.is_empty() {
+            let take = chunk.min(rest.0.len());
+            let (x, xr) = rest.0.split_at_mut(take);
+            let (y, yr) = rest.1.split_at_mut(take);
+            let (vx, vxr) = rest.2.split_at_mut(take);
+            let (vy, vyr) = rest.3.split_at_mut(take);
+            let (q, qr) = rest.4.split_at_mut(take);
+            rest = (xr, yr, vxr, vyr, qr);
+            handles.push(scope.spawn(move || {
+                for i in 0..x.len() {
+                    let (xn, yn, vxn, vyn) = push_one(x[i], y[i], vx[i], vy[i], q[i], l, big_q);
+                    x[i] = xn;
+                    y[i] = yn;
+                    vx[i] = vxn;
+                    vy[i] = vyn;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("push worker panicked");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::pic::init::{base_charge, initialize, InitMode};
+
+    fn batch_from(pop: crate::apps::pic::init::Population) -> PicBatch {
+        PicBatch { x: pop.x, y: pop.y, vx: pop.vx, vy: pop.vy, q: pop.q }
+    }
+
+    #[test]
+    fn determinism_property_native() {
+        // calibrated particles move exactly (2k+1, m) per step
+        let l = 64.0;
+        let (k, m) = (2u32, 1u32);
+        let pop = initialize(InitMode::Geometric { rho: 0.95 }, 512, 64, k, m, 1.0, 9);
+        let x0 = pop.x.clone();
+        let y0 = pop.y.clone();
+        let mut b = batch_from(pop);
+        let steps = 7;
+        for _ in 0..steps {
+            native_push(&mut b, l, 1.0, 4);
+        }
+        for i in 0..b.len() {
+            let ex = (x0[i] + steps as f64 * (2 * k + 1) as f64).rem_euclid(l);
+            let ey = (y0[i] + steps as f64 * m as f64).rem_euclid(l);
+            assert!((b.x[i] - ex).abs() < 1e-6, "x[{i}]: {} vs {ex}", b.x[i]);
+            assert!((b.y[i] - ey).abs() < 1e-6, "y[{i}]: {} vs {ey}", b.y[i]);
+        }
+    }
+
+    #[test]
+    fn vx_oscillates_to_zero_on_even_steps() {
+        let pop = initialize(InitMode::Sinusoidal, 128, 32, 1, 1, 1.0, 2);
+        let mut b = batch_from(pop);
+        for _ in 0..4 {
+            native_push(&mut b, 32.0, 1.0, 2);
+        }
+        for &v in &b.vx {
+            assert!(v.abs() < 1e-9, "vx {v}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let pop = initialize(InitMode::Geometric { rho: 0.9 }, 300, 32, 1, 1, 1.0, 3);
+        let mut b1 = batch_from(pop.clone());
+        let mut b8 = batch_from(pop);
+        native_push(&mut b1, 32.0, 1.0, 1);
+        native_push(&mut b8, 32.0, 1.0, 8);
+        assert_eq!(b1, b8);
+    }
+
+    #[test]
+    fn inert_padding_particles() {
+        let mut b = PicBatch::with_capacity(4);
+        for _ in 0..4 {
+            b.push_pad();
+        }
+        native_push(&mut b, 16.0, 1.0, 2);
+        assert!(b.x.iter().all(|&x| x == 0.5));
+        assert!(b.vx.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn single_particle_first_step_displacement_exact() {
+        let q = (2.0 * 3.0 + 1.0) * base_charge(0.5, 0.5, 2.0);
+        let (xn, yn, _, vyn) = push_one(4.5, 7.5, 0.0, 1.0, q, 1000.0, 2.0);
+        assert!((xn - (4.5 + 7.0)).abs() < 1e-9, "xn {xn}");
+        assert!((yn - 8.5).abs() < 1e-9, "yn {yn}");
+        assert!((vyn - 1.0).abs() < 1e-9);
+    }
+}

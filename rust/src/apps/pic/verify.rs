@@ -1,0 +1,85 @@
+//! PRK-style analytic verification (Georganas et al. §III): after `s`
+//! steps every particle must sit at
+//! `x0 + s·(2k+1) mod L`, `y0 + s·m mod L` within epsilon. Because the
+//! check covers every particle, it catches any corruption introduced by
+//! the chare/LB machinery (lost particles, double pushes, bad
+//! migrations) — it is the paper-level end-to-end correctness signal.
+
+const EPSILON: f64 = 1e-6;
+
+/// Verify all particle positions; returns the first failure rendered.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_positions(
+    x0: &[f64],
+    y0: &[f64],
+    x: &[f64],
+    y: &[f64],
+    steps: usize,
+    k: u32,
+    m: u32,
+    l: f64,
+) -> Result<(), String> {
+    if x0.len() != x.len() || y0.len() != y.len() || x.len() != y.len() {
+        return Err(format!(
+            "particle count changed: started {} now {}",
+            x0.len(),
+            x.len()
+        ));
+    }
+    let dx = steps as f64 * (2 * k + 1) as f64;
+    let dy = steps as f64 * m as f64;
+    for i in 0..x.len() {
+        let ex = (x0[i] + dx).rem_euclid(l);
+        let ey = (y0[i] + dy).rem_euclid(l);
+        // compare on the torus (wrap-around distance)
+        let ddx = torus_dist(x[i], ex, l);
+        let ddy = torus_dist(y[i], ey, l);
+        if ddx > EPSILON || ddy > EPSILON {
+            return Err(format!(
+                "particle {i}: at ({}, {}) expected ({ex}, {ey}) after {steps} steps",
+                x[i], y[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[inline]
+fn torus_dist(a: f64, b: f64, l: f64) -> f64 {
+    let d = (a - b).abs();
+    d.min(l - d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_exact_motion() {
+        let x0 = vec![1.5, 10.5];
+        let y0 = vec![2.5, 3.5];
+        let x = vec![(1.5f64 + 2.0 * 5.0).rem_euclid(16.0), (10.5f64 + 10.0).rem_euclid(16.0)];
+        let y = vec![(2.5f64 + 2.0).rem_euclid(16.0), (3.5f64 + 2.0).rem_euclid(16.0)];
+        verify_positions(&x0, &y0, &x, &y, 2, 2, 1, 16.0).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_position() {
+        let r = verify_positions(&[1.5], &[1.5], &[3.0], &[2.5], 1, 0, 1, 16.0);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_lost_particles() {
+        let r = verify_positions(&[1.5, 2.5], &[1.5, 2.5], &[2.5], &[2.5], 1, 0, 1, 16.0);
+        assert!(r.unwrap_err().contains("count changed"));
+    }
+
+    #[test]
+    fn wraparound_compare() {
+        // expected lands at 15.9999999 but particle reports 0.0000001-ish
+        let r = verify_positions(&[15.5], &[0.5], &[0.49999999], &[1.5], 1, 0, 1, 16.0);
+        // x0 + 1 = 0.5 (mod 16): torus distance tiny
+        assert!(r.is_ok(), "{r:?}");
+    }
+}

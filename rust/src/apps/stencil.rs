@@ -1,0 +1,205 @@
+//! Synthetic stencil workload generators + imbalance injectors — the
+//! paper's simulation-study workloads (§I Fig 1-2, §V Tables I-II).
+//!
+//! Generators produce [`Instance`]s: objects are stencil cells (2D
+//! 5-point or 3D 7-point, periodic), edges carry per-iteration halo
+//! bytes, coordinates are grid positions, and the initial mapping is a
+//! tiled ("quad"), striped, or ring decomposition. Injectors then
+//! perturb per-object loads the way each experiment prescribes.
+
+use crate::model::{CommGraph, Instance, Topology};
+use crate::util::rng::Rng;
+
+/// Bytes exchanged per stencil edge per LB period (arbitrary but
+/// consistent unit — the paper reports ratios).
+pub const HALO_BYTES: f64 = 64.0;
+
+/// How objects are initially laid out over PEs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decomposition {
+    /// Contiguous 2D tiles (the paper's "quad"/tiled mapping).
+    Tiled,
+    /// Column-major stripes (the paper's striped mapping).
+    Striped,
+}
+
+/// 2D periodic 5-point stencil over `side x side` objects mapped onto
+/// `px x py` PEs.
+pub fn stencil_2d(side: usize, px: usize, py: usize, decomp: Decomposition) -> Instance {
+    assert!(side % px == 0 && side % py == 0, "side must divide PE grid");
+    let n = side * side;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..side {
+        for c in 0..side {
+            let o = (r * side + c) as u32;
+            edges.push((o, (r * side + (c + 1) % side) as u32, HALO_BYTES));
+            edges.push((o, (((r + 1) % side) * side + c) as u32, HALO_BYTES));
+        }
+    }
+    let graph = CommGraph::from_edges(n, &edges);
+    let coords: Vec<[f64; 2]> =
+        (0..n).map(|i| [(i % side) as f64, (i / side) as f64]).collect();
+    let tile_w = side / px;
+    let tile_h = side / py;
+    let mapping: Vec<u32> = (0..n)
+        .map(|i| {
+            let (c, r) = (i % side, i / side);
+            match decomp {
+                Decomposition::Tiled => ((r / tile_h) * px + c / tile_w) as u32,
+                Decomposition::Striped => ((c * px * py) / side) as u32,
+            }
+        })
+        .collect();
+    Instance::new(vec![1.0; n], coords, graph, mapping, Topology::flat(px * py))
+}
+
+/// 3D periodic 7-point stencil over `side^3` objects on `n_pes` PEs
+/// (slab decomposition along z) — Table II's workload.
+pub fn stencil_3d(side: usize, n_pes: usize) -> Instance {
+    let n = side * side * side;
+    let idx = |x: usize, y: usize, z: usize| (z * side * side + y * side + x) as u32;
+    let mut edges = Vec::with_capacity(3 * n);
+    for z in 0..side {
+        for y in 0..side {
+            for x in 0..side {
+                let o = idx(x, y, z);
+                edges.push((o, idx((x + 1) % side, y, z), HALO_BYTES));
+                edges.push((o, idx(x, (y + 1) % side, z), HALO_BYTES));
+                edges.push((o, idx(x, y, (z + 1) % side), HALO_BYTES));
+            }
+        }
+    }
+    let graph = CommGraph::from_edges(n, &edges);
+    // 2D coords for the coordinate variant: project (x + side*z_frac, y).
+    let coords: Vec<[f64; 2]> = (0..n)
+        .map(|i| {
+            let x = i % side;
+            let y = (i / side) % side;
+            let z = i / (side * side);
+            [x as f64 + (z as f64) * side as f64, y as f64]
+        })
+        .collect();
+    let per_pe = n.div_ceil(n_pes);
+    let mapping: Vec<u32> = (0..n).map(|i| (i / per_pe) as u32).collect();
+    Instance::new(vec![1.0; n], coords, graph, mapping, Topology::flat(n_pes))
+}
+
+/// 1D ring of objects striped over a ring of PEs — Table I's setup.
+pub fn ring(n_pes: usize, objs_per_pe: usize) -> Instance {
+    let n = n_pes * objs_per_pe;
+    let edges: Vec<(u32, u32, f64)> =
+        (0..n as u32).map(|o| (o, (o + 1) % n as u32, HALO_BYTES)).collect();
+    let graph = CommGraph::from_edges(n, &edges);
+    let coords: Vec<[f64; 2]> = (0..n).map(|i| [i as f64, 0.0]).collect();
+    let mapping: Vec<u32> = (0..n).map(|i| (i / objs_per_pe) as u32).collect();
+    Instance::new(vec![1.0; n], coords, graph, mapping, Topology::flat(n_pes))
+}
+
+// ------------------------------------------------------- imbalance
+
+/// Uniform ±`noise` multiplicative random perturbation per object.
+pub fn inject_noise(inst: &mut Instance, noise: f64, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for l in inst.loads.iter_mut() {
+        *l *= 1.0 + noise * (2.0 * rng.f64() - 1.0);
+    }
+}
+
+/// Fig 2's exact perturbation: each object's load is "randomly
+/// increased or decreased by 40%" — a fair coin between `1+noise` and
+/// `1-noise`.
+pub fn inject_noise_binary(inst: &mut Instance, noise: f64, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for l in inst.loads.iter_mut() {
+        *l *= if rng.chance(0.5) { 1.0 + noise } else { 1.0 - noise };
+    }
+}
+
+/// Table I's single heavily-overloaded processor: all objects on `pe`
+/// get `factor`× load.
+pub fn overload_pe(inst: &mut Instance, pe: u32, factor: f64) {
+    for (o, l) in inst.loads.iter_mut().enumerate() {
+        if inst.mapping[o] == pe {
+            *l *= factor;
+        }
+    }
+}
+
+/// Table II's pattern: every 1st and 2nd PE (mod 7) overloaded, every
+/// 3rd (mod 7) underloaded.
+pub fn inject_mod7(inst: &mut Instance, over: f64, under: f64) {
+    for (o, l) in inst.loads.iter_mut().enumerate() {
+        match inst.mapping[o] % 7 {
+            1 | 2 => *l *= over,
+            3 => *l *= under,
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::metrics;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn stencil_2d_shape() {
+        let inst = stencil_2d(16, 4, 4, Decomposition::Tiled);
+        assert_eq!(inst.n_objects(), 256);
+        // periodic 5-point: every object has degree 4
+        for o in 0..inst.n_objects() {
+            assert_eq!(inst.graph.degree(o), 4, "object {o}");
+        }
+        // tiled: each PE holds a contiguous 4x4 tile = 16 objects
+        let loads = inst.pe_loads(&inst.mapping);
+        assert!(loads.iter().all(|&l| l == 16.0));
+    }
+
+    #[test]
+    fn tiled_beats_striped_locality() {
+        let tiled = stencil_2d(16, 4, 4, Decomposition::Tiled);
+        let striped = stencil_2d(16, 4, 4, Decomposition::Striped);
+        let rt = metrics::comm_split_nodes(&tiled, &tiled.mapping).ratio();
+        let rs = metrics::comm_split_nodes(&striped, &striped.mapping).ratio();
+        assert!(rt < rs, "tiled {rt} !< striped {rs}");
+    }
+
+    #[test]
+    fn stencil_3d_shape() {
+        let inst = stencil_3d(8, 8);
+        assert_eq!(inst.n_objects(), 512);
+        for o in 0..inst.n_objects() {
+            assert_eq!(inst.graph.degree(o), 6, "object {o}");
+        }
+        let loads = inst.pe_loads(&inst.mapping);
+        assert!(loads.iter().all(|&l| l == 64.0));
+    }
+
+    #[test]
+    fn ring_matches_table1_setup() {
+        let mut inst = ring(10, 16);
+        overload_pe(&mut inst, 0, 10.0);
+        let s = Summary::of(&inst.pe_loads(&inst.mapping));
+        // 10x on one of 10 PEs: max/avg = 10 / 1.9 ≈ 5.26 ("approximately five")
+        assert!((s.max_avg_ratio() - 5.26).abs() < 0.1, "{}", s.max_avg_ratio());
+    }
+
+    #[test]
+    fn injectors_change_only_loads() {
+        let mut inst = stencil_2d(8, 2, 2, Decomposition::Tiled);
+        let before = inst.mapping.clone();
+        inject_noise(&mut inst, 0.4, 1);
+        inject_mod7(&mut inst, 3.0, 0.3);
+        assert_eq!(inst.mapping, before);
+        assert!(inst.loads.iter().all(|&l| l > 0.0));
+        assert!(inst.validate().is_ok());
+    }
+
+    #[test]
+    fn noise_is_bounded() {
+        let mut inst = stencil_2d(8, 2, 2, Decomposition::Tiled);
+        inject_noise(&mut inst, 0.4, 7);
+        assert!(inst.loads.iter().all(|&l| (0.6..=1.4).contains(&l)));
+    }
+}

@@ -1,0 +1,196 @@
+//! The leader/coordinator: resolves a [`Config`] into an application +
+//! topology + strategy + schedule, runs it, and reports the paper's
+//! metrics. This is the programmatic API behind the `difflb` CLI and
+//! the examples; benches drive the pieces directly.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::apps::driver::{run_pic, DriverConfig, RunReport};
+use crate::apps::pic::{Backend, InitMode, PicApp, PicConfig};
+use crate::apps::stencil::Decomposition;
+use crate::model::{evaluate, Instance, LbMetrics, Topology};
+use crate::runtime::Engine;
+use crate::simnet::NetModel;
+use crate::strategies::{self, LoadBalancer, StrategyParams};
+use crate::util::config::Config;
+
+/// Everything a run needs, resolved from configuration.
+pub struct Coordinator {
+    pub strategy: Box<dyn LoadBalancer>,
+    pub params: StrategyParams,
+    pub driver: DriverConfig,
+}
+
+/// Strategy parameters from a config (section `lb`).
+pub fn params_from_config(cfg: &Config) -> StrategyParams {
+    let d = StrategyParams::default();
+    StrategyParams {
+        neighbor_count: cfg.get_or("lb.neighbors", d.neighbor_count),
+        handshake_max_rounds: cfg.get_or("lb.handshake_rounds", d.handshake_max_rounds),
+        vlb_tolerance: cfg.get_or("lb.vlb_tolerance", d.vlb_tolerance),
+        vlb_max_iters: cfg.get_or("lb.vlb_max_iters", d.vlb_max_iters),
+        overfill: cfg.get_or("lb.overfill", d.overfill),
+        refine_tolerance: cfg.get_or("lb.refine_tolerance", d.refine_tolerance),
+        balance_tolerance: cfg.get_or("lb.balance_tolerance", d.balance_tolerance),
+        itr: cfg.get_or("lb.itr", d.itr),
+        sfc_window: cfg.get_or("lb.sfc_window", d.sfc_window),
+        reuse_neighbors: cfg.get_bool_or("lb.reuse_neighbors", d.reuse_neighbors),
+        seed: cfg.get_or("lb.seed", d.seed),
+    }
+}
+
+/// PIC app configuration from a config (section `pic` + `topo`).
+pub fn pic_from_config(cfg: &Config) -> Result<PicConfig> {
+    let d = PicConfig::default();
+    let init = match cfg.get("pic.init").unwrap_or("geometric") {
+        "geometric" => InitMode::Geometric { rho: cfg.get_or("pic.rho", 0.9) },
+        "sinusoidal" => InitMode::Sinusoidal,
+        "linear" => InitMode::Linear { alpha: cfg.get_or("pic.alpha", 1.0) },
+        "patch" => InitMode::Patch {
+            x0: cfg.get_or("pic.x0", 0.0),
+            x1: cfg.get_or("pic.x1", 10.0),
+            y0: cfg.get_or("pic.y0", 0.0),
+            y1: cfg.get_or("pic.y1", 10.0),
+        },
+        other => bail!("unknown pic.init '{other}'"),
+    };
+    let decomp = match cfg.get("pic.decomp").unwrap_or("striped") {
+        "striped" => Decomposition::Striped,
+        "tiled" | "quad" => Decomposition::Tiled,
+        other => bail!("unknown pic.decomp '{other}'"),
+    };
+    Ok(PicConfig {
+        grid: cfg.get_or("pic.grid", d.grid),
+        n_particles: cfg.get_or("pic.particles", d.n_particles),
+        k: cfg.get_or("pic.k", d.k),
+        m: cfg.get_or("pic.m", d.m),
+        init,
+        chares_x: cfg.get_or("pic.chares_x", d.chares_x),
+        chares_y: cfg.get_or("pic.chares_y", d.chares_y),
+        decomp,
+        topo: Topology::new(
+            cfg.get_or("topo.nodes", 4),
+            cfg.get_or("topo.pes_per_node", 1),
+        ),
+        q: cfg.get_or("pic.q", d.q),
+        seed: cfg.get_or("pic.seed", d.seed),
+        particle_bytes: cfg.get_or("pic.particle_bytes", d.particle_bytes),
+        threads: cfg.get_or("pic.threads", d.threads),
+    })
+}
+
+/// Network model from a config (section `net`).
+pub fn net_from_config(cfg: &Config) -> NetModel {
+    let d = NetModel::default();
+    NetModel {
+        alpha: cfg.get_or("net.alpha", d.alpha),
+        beta: cfg.get_or("net.beta", d.beta),
+        intra_factor: cfg.get_or("net.intra_factor", d.intra_factor),
+    }
+}
+
+impl Coordinator {
+    /// Build from a layered config.
+    pub fn from_config(cfg: &Config) -> Result<Coordinator> {
+        let params = params_from_config(cfg);
+        let name = cfg.get("lb.strategy").unwrap_or("diff-comm").to_string();
+        let strategy = strategies::make(&name, params)?;
+        let driver = DriverConfig {
+            iters: cfg.get_or("run.iters", 100),
+            lb_period: cfg.get_or("run.lb_period", 10),
+            net: net_from_config(cfg),
+            log_every: cfg.get_or("run.log_every", 0),
+        };
+        Ok(Coordinator { strategy, params, driver })
+    }
+
+    /// Pick the PJRT backend when artifacts exist (or `pic.backend`
+    /// forces one); fall back to the native push otherwise.
+    pub fn backend(cfg: &Config) -> Result<Backend> {
+        match cfg.get("pic.backend").unwrap_or("auto") {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt(Arc::new(Engine::new()?))),
+            "auto" => match Engine::new() {
+                Ok(e) => Ok(Backend::Pjrt(Arc::new(e))),
+                Err(err) => {
+                    crate::warn!("PJRT unavailable ({err:#}); using native backend");
+                    Ok(Backend::Native)
+                }
+            },
+            other => bail!("unknown pic.backend '{other}'"),
+        }
+    }
+
+    /// Run the PIC PRK app end to end.
+    pub fn run_pic(&self, cfg: &Config) -> Result<RunReport> {
+        let pic_cfg = pic_from_config(cfg)?;
+        let backend = Self::backend(cfg)?;
+        let mut app = PicApp::new(pic_cfg, backend).context("initializing PIC app")?;
+        run_pic(&mut app, self.strategy.as_ref(), &self.driver)
+    }
+
+    /// Balance one instance and report paper metrics.
+    pub fn balance_instance(&self, inst: &Instance) -> (crate::model::Assignment, LbMetrics) {
+        let t = std::time::Instant::now();
+        let asg = self.strategy.rebalance(inst);
+        let mut m = evaluate(inst, &asg);
+        m.strategy_s = t.elapsed().as_secs_f64();
+        (asg, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil;
+
+    #[test]
+    fn config_round_trip() {
+        let cfg = Config::from_str(
+            "[lb]\nstrategy = diff-coord\nneighbors = 6\n[run]\niters = 5\nlb_period = 2\n\
+             [pic]\ngrid = 64\nparticles = 500\nchares_x = 4\nchares_y = 4\nbackend = native\n\
+             [topo]\nnodes = 2",
+        )
+        .unwrap();
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        assert_eq!(coord.strategy.name(), "diff-coord");
+        assert_eq!(coord.params.neighbor_count, 6);
+        assert_eq!(coord.driver.iters, 5);
+        let pic = pic_from_config(&cfg).unwrap();
+        assert_eq!(pic.grid, 64);
+        assert_eq!(pic.topo.n_nodes, 2);
+    }
+
+    #[test]
+    fn tiny_pic_run_native() {
+        let cfg = Config::from_str(
+            "[lb]\nstrategy = diff-comm\n[run]\niters = 6\nlb_period = 3\n\
+             [pic]\ngrid = 32\nparticles = 400\nchares_x = 4\nchares_y = 4\nbackend = native\nthreads = 2\n\
+             [topo]\nnodes = 2",
+        )
+        .unwrap();
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let rep = coord.run_pic(&cfg).unwrap();
+        assert_eq!(rep.records.len(), 6);
+        assert!(rep.verified);
+    }
+
+    #[test]
+    fn balance_instance_reports_metrics() {
+        let cfg = Config::from_str("[lb]\nstrategy = greedy-refine").unwrap();
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let mut inst = stencil::stencil_2d(16, 4, 4, stencil::Decomposition::Tiled);
+        stencil::inject_noise(&mut inst, 0.4, 1);
+        let (_asg, m) = coord.balance_instance(&inst);
+        assert!(m.max_avg_pe < 1.2);
+        assert!(m.strategy_s >= 0.0);
+    }
+
+    #[test]
+    fn bad_strategy_name_errors() {
+        let cfg = Config::from_str("[lb]\nstrategy = nope").unwrap();
+        assert!(Coordinator::from_config(&cfg).is_err());
+    }
+}

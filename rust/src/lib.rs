@@ -1,0 +1,19 @@
+//! # difflb — Communication-Aware Diffusion Load Balancing
+//!
+//! Full reproduction of "Communication-Aware Diffusion Load Balancing
+//! for Persistently Interacting Objects" (Taylor, Chandrasekar, Kale):
+//! an over-decomposed object runtime, the three-stage diffusion
+//! strategy (+ coordinate variant), the comparison baselines, a
+//! distributed message-passing simulation substrate, the PIC PRK and
+//! stencil applications whose compute hot paths run as AOT-compiled
+//! JAX/Pallas kernels through PJRT, and benches regenerating every
+//! table and figure of the paper. See DESIGN.md for the system map.
+
+pub mod apps;
+pub mod coordinator;
+pub mod model;
+pub mod runtime;
+pub mod simnet;
+pub mod strategies;
+pub mod util;
+pub mod viz;

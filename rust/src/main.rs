@@ -1,0 +1,125 @@
+//! `difflb` CLI — the runtime leader.
+//!
+//! Subcommands:
+//!   run-pic     run the PIC PRK benchmark under a strategy
+//!   balance     load-balance a .lbi instance file, print paper metrics
+//!   viz         render a .lbi instance (PPM + SVG) colored by PE
+//!   check       verify PJRT artifacts load and execute correctly
+//!   strategies  list available strategies
+
+use anyhow::{Context, Result};
+use difflb::coordinator::Coordinator;
+use difflb::model::Instance;
+use difflb::util::args::Parser;
+use difflb::util::config::Config;
+use difflb::{info, viz};
+
+fn parser() -> Parser {
+    Parser::new("difflb — communication-aware diffusion load balancing")
+        .subcommand("run-pic", "run the PIC PRK benchmark")
+        .subcommand("balance", "rebalance a .lbi instance file")
+        .subcommand("viz", "render a .lbi instance to out/<name>.{ppm,svg}")
+        .subcommand("check", "smoke-check the PJRT artifacts")
+        .subcommand("strategies", "list available strategies")
+        .opt("config", None, "config file (INI subset)")
+        .opt("set", None, "override, e.g. --set lb.strategy=diff-coord (comma-separated)")
+        .opt("strategy", None, "shorthand for --set lb.strategy=...")
+        .opt("iters", None, "shorthand for --set run.iters=...")
+        .opt("lb-period", None, "shorthand for --set run.lb_period=...")
+        .opt("scale", Some("8"), "viz: pixels per coordinate unit")
+        .opt("out", None, "balance: write rebalanced instance here")
+        .flag("verbose", "debug logging")
+}
+
+fn load_config(args: &difflb::util::args::Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::new(),
+    };
+    if let Some(s) = args.get("strategy") {
+        cfg.set("lb.strategy", s);
+    }
+    if let Some(s) = args.get("iters") {
+        cfg.set("run.iters", s);
+    }
+    if let Some(s) = args.get("lb-period") {
+        cfg.set("run.lb_period", s);
+    }
+    if let Some(sets) = args.get("set") {
+        for kv in sets.split(',') {
+            cfg.set_kv(kv)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let args = parser().parse_env();
+    if args.has_flag("verbose") {
+        difflb::util::logging::set_level(difflb::util::logging::Level::Debug);
+    }
+    let cfg = load_config(&args)?;
+
+    match args.subcommand.as_deref() {
+        Some("run-pic") => {
+            let coord = Coordinator::from_config(&cfg)?;
+            info!("strategy: {}", coord.strategy.name());
+            let report = coord.run_pic(&cfg)?;
+            println!("{}", report.summary_line(coord.strategy.name()));
+            anyhow::ensure!(report.verified, "PIC verification FAILED");
+            println!("PIC verification: SUCCESS");
+        }
+        Some("balance") => {
+            let path = args.positional.first().context("usage: balance <file.lbi>")?;
+            let inst = Instance::load(path)?;
+            let coord = Coordinator::from_config(&cfg)?;
+            let before = difflb::model::evaluate_mapping(&inst, &inst.mapping);
+            let (asg, after) = coord.balance_instance(&inst);
+            println!("before: {before}");
+            println!("after : {after}");
+            if let Some(out) = args.get("out") {
+                let mut rebalanced = inst.clone();
+                rebalanced.mapping = asg.mapping;
+                rebalanced.save(out)?;
+                println!("wrote {out}");
+            }
+        }
+        Some("viz") => {
+            let path = args.positional.first().context("usage: viz <file.lbi>")?;
+            let inst = Instance::load(path)?;
+            let scale: f64 = args.f64("scale");
+            let stem = std::path::Path::new(path)
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("instance");
+            let ppm = difflb::util::io::out_path(&format!("{stem}.ppm"))?;
+            let svg = difflb::util::io::out_path(&format!("{stem}.svg"))?;
+            viz::render_ppm(&inst, &inst.mapping, scale, &ppm)?;
+            viz::render_svg(&inst, &inst.mapping, scale, &svg)?;
+            println!("wrote {} and {}", ppm.display(), svg.display());
+        }
+        Some("check") => {
+            let engine = difflb::runtime::Engine::new()?;
+            let mut batch = difflb::runtime::PicBatch::with_capacity(4);
+            for _ in 0..4 {
+                batch.push_pad();
+            }
+            engine.pic_push(&mut batch, 64.0, 1.0)?;
+            anyhow::ensure!(batch.x.iter().all(|&x| x == 0.5), "inert check failed");
+            println!(
+                "artifacts OK: {} artifacts, pic batch sizes {:?}",
+                engine.manifest().artifacts.len(),
+                engine.manifest().pic_batch_sizes()
+            );
+        }
+        Some("strategies") => {
+            for s in difflb::strategies::AVAILABLE {
+                println!("{s}");
+            }
+        }
+        _ => {
+            print!("{}", parser().usage("difflb"));
+        }
+    }
+    Ok(())
+}

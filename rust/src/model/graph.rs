@@ -1,0 +1,252 @@
+//! Sparse weighted object-communication graph (CSR).
+//!
+//! Vertices are migratable objects; an undirected edge `(a, b, bytes)`
+//! records how many bytes the two objects exchanged since the last load
+//! balancing step (paper §II problem definition). CSR keeps the hot
+//! strategy loops (per-object neighbor scans during object selection)
+//! cache-friendly.
+
+use std::collections::HashMap;
+
+/// Compressed-sparse-row undirected graph with f64 edge weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommGraph {
+    /// Number of vertices (objects).
+    pub n: usize,
+    /// CSR row offsets, length `n + 1`.
+    pub offsets: Vec<u32>,
+    /// Column indices (neighbor object ids), length = 2 * #edges.
+    pub nbrs: Vec<u32>,
+    /// Edge weights in bytes, parallel to `nbrs`.
+    pub bytes: Vec<f64>,
+}
+
+impl CommGraph {
+    /// Empty graph over `n` objects.
+    pub fn empty(n: usize) -> CommGraph {
+        CommGraph { n, offsets: vec![0; n + 1], nbrs: Vec::new(), bytes: Vec::new() }
+    }
+
+    /// Build from an undirected edge list; parallel edges are merged by
+    /// summing weights, self-loops are dropped.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> CommGraph {
+        let mut merged: HashMap<(u32, u32), f64> = HashMap::with_capacity(edges.len());
+        for &(a, b, w) in edges {
+            assert!((a as usize) < n && (b as usize) < n, "edge out of range");
+            if a == b {
+                continue;
+            }
+            let key = if a < b { (a, b) } else { (b, a) };
+            *merged.entry(key).or_insert(0.0) += w;
+        }
+        let mut degree = vec![0u32; n];
+        for &(a, b) in merged.keys() {
+            degree[a as usize] += 1;
+            degree[b as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let m2 = offsets[n] as usize;
+        let mut nbrs = vec![0u32; m2];
+        let mut bytes = vec![0.0; m2];
+        let mut cursor = offsets[..n].to_vec();
+        let mut pairs: Vec<(&(u32, u32), &f64)> = merged.iter().collect();
+        // Deterministic layout regardless of hash order.
+        pairs.sort_by_key(|(k, _)| **k);
+        for (&(a, b), &w) in pairs {
+            let ca = cursor[a as usize] as usize;
+            nbrs[ca] = b;
+            bytes[ca] = w;
+            cursor[a as usize] += 1;
+            let cb = cursor[b as usize] as usize;
+            nbrs[cb] = a;
+            bytes[cb] = w;
+            cursor[b as usize] += 1;
+        }
+        CommGraph { n, offsets, nbrs, bytes }
+    }
+
+    /// Neighbor ids of object `o`.
+    #[inline]
+    pub fn neighbors(&self, o: usize) -> &[u32] {
+        &self.nbrs[self.offsets[o] as usize..self.offsets[o + 1] as usize]
+    }
+
+    /// Edge weights of object `o`, parallel to [`Self::neighbors`].
+    #[inline]
+    pub fn weights(&self, o: usize) -> &[f64] {
+        &self.bytes[self.offsets[o] as usize..self.offsets[o + 1] as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, o: usize) -> usize {
+        (self.offsets[o + 1] - self.offsets[o]) as usize
+    }
+
+    /// Number of undirected edges.
+    pub fn edge_count(&self) -> usize {
+        self.nbrs.len() / 2
+    }
+
+    /// Total bytes over undirected edges (each edge once).
+    pub fn total_bytes(&self) -> f64 {
+        self.bytes.iter().sum::<f64>() / 2.0
+    }
+
+    /// Total bytes object `o` exchanges with all neighbors.
+    pub fn object_bytes(&self, o: usize) -> f64 {
+        self.weights(o).iter().sum()
+    }
+
+    /// Iterate undirected edges once as `(a, b, w)` with `a < b`.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32, f64)> + '_ {
+        (0..self.n).flat_map(move |a| {
+            self.neighbors(a)
+                .iter()
+                .zip(self.weights(a))
+                .filter(move |(&b, _)| (a as u32) < b)
+                .map(move |(&b, &w)| (a as u32, b, w))
+        })
+    }
+
+    /// Dense variant of [`Self::group_traffic`]: an `n_groups x n_groups`
+    /// symmetric matrix (diagonal = intra-group bytes). Preferred on the
+    /// strategy hot path when `n_groups` is moderate — HashMap probing
+    /// dominated stage-1 candidate construction (EXPERIMENTS.md §Perf).
+    pub fn group_traffic_dense(&self, group: &[u32], n_groups: usize) -> Vec<f64> {
+        assert_eq!(group.len(), self.n);
+        let mut m = vec![0.0f64; n_groups * n_groups];
+        for (a, b, w) in self.edges() {
+            let ga = group[a as usize] as usize;
+            let gb = group[b as usize] as usize;
+            if ga == gb {
+                m[ga * n_groups + ga] += w;
+            } else {
+                m[ga * n_groups + gb] += w;
+                m[gb * n_groups + ga] += w;
+            }
+        }
+        m
+    }
+
+    /// Aggregate object-level traffic to group-level (e.g. node-level)
+    /// traffic under `group[o]`: returns per-group sparse rows
+    /// `group -> (peer_group -> bytes)`, diagonal = intra-group bytes
+    /// (each undirected edge counted once on the diagonal, once per
+    /// direction off-diagonal so rows are symmetric views).
+    pub fn group_traffic(&self, group: &[u32], n_groups: usize) -> Vec<HashMap<u32, f64>> {
+        assert_eq!(group.len(), self.n);
+        let mut rows: Vec<HashMap<u32, f64>> = vec![HashMap::new(); n_groups];
+        for (a, b, w) in self.edges() {
+            let ga = group[a as usize];
+            let gb = group[b as usize];
+            if ga == gb {
+                *rows[ga as usize].entry(ga).or_insert(0.0) += w;
+            } else {
+                *rows[ga as usize].entry(gb).or_insert(0.0) += w;
+                *rows[gb as usize].entry(ga).or_insert(0.0) += w;
+            }
+        }
+        rows
+    }
+}
+
+/// Incremental edge accumulator used by the apps to record traffic
+/// between LB steps, then freeze into a [`CommGraph`].
+#[derive(Debug, Clone, Default)]
+pub struct TrafficRecorder {
+    edges: HashMap<(u32, u32), f64>,
+    n: usize,
+}
+
+impl TrafficRecorder {
+    pub fn new(n: usize) -> Self {
+        TrafficRecorder { edges: HashMap::new(), n }
+    }
+
+    /// Record `bytes` of traffic between objects `a` and `b`.
+    #[inline]
+    pub fn record(&mut self, a: u32, b: u32, bytes: f64) {
+        if a == b {
+            return;
+        }
+        let key = if a < b { (a, b) } else { (b, a) };
+        *self.edges.entry(key).or_insert(0.0) += bytes;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Freeze into a CSR graph and clear the recorder.
+    pub fn take_graph(&mut self) -> CommGraph {
+        let edges: Vec<(u32, u32, f64)> =
+            self.edges.drain().map(|((a, b), w)| (a, b, w)).collect();
+        CommGraph::from_edges(self.n, &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> CommGraph {
+        CommGraph::from_edges(4, &[(0, 1, 10.0), (1, 2, 20.0), (2, 0, 30.0)])
+    }
+
+    #[test]
+    fn csr_shape_and_symmetry() {
+        let g = triangle();
+        assert_eq!(g.edge_count(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(3), 0);
+        assert_eq!(g.total_bytes(), 60.0);
+        // symmetry: weight(a->b) == weight(b->a)
+        for (a, b, w) in g.edges() {
+            let pos = g.neighbors(b as usize).iter().position(|&x| x == a).unwrap();
+            assert_eq!(g.weights(b as usize)[pos], w);
+        }
+    }
+
+    #[test]
+    fn parallel_edges_merge_self_loops_drop() {
+        let g = CommGraph::from_edges(2, &[(0, 1, 5.0), (1, 0, 7.0), (0, 0, 99.0)]);
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.total_bytes(), 12.0);
+    }
+
+    #[test]
+    fn group_traffic_aggregates() {
+        let g = triangle();
+        // objects 0,1 -> group 0; 2,3 -> group 1
+        let rows = g.group_traffic(&[0, 0, 1, 1], 2);
+        assert_eq!(rows[0][&0], 10.0); // intra edge 0-1
+        assert_eq!(rows[0][&1], 50.0); // 1-2 and 2-0 cross
+        assert_eq!(rows[1][&0], 50.0);
+        assert!(!rows[1].contains_key(&1));
+    }
+
+    #[test]
+    fn recorder_round_trip() {
+        let mut r = TrafficRecorder::new(3);
+        r.record(0, 1, 4.0);
+        r.record(1, 0, 6.0);
+        r.record(2, 2, 50.0); // self, ignored
+        let g = r.take_graph();
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.total_bytes(), 10.0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let e = vec![(0u32, 1u32, 1.0), (1, 2, 2.0), (0, 2, 3.0), (2, 3, 4.0)];
+        let g1 = CommGraph::from_edges(4, &e);
+        let mut rev = e.clone();
+        rev.reverse();
+        let g2 = CommGraph::from_edges(4, &rev);
+        assert_eq!(g1, g2);
+    }
+}

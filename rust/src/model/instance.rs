@@ -1,0 +1,308 @@
+//! A load-balancing problem instance — the exact interface the paper's
+//! simulation infrastructure consumes (§V): per-object loads,
+//! coordinates, and communication edges, plus the current
+//! object-to-processor mapping. Strategies map an [`Instance`] to an
+//! [`Assignment`]; they never see the application.
+//!
+//! Instances round-trip through a plain-text `.lbi` format so workloads
+//! captured from the apps can be re-balanced offline (the paper's
+//! "easily generated for any Charm++ application" input files).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::graph::CommGraph;
+use super::topology::Topology;
+
+/// One load-balancing problem.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    /// Per-object computational load (seconds, or any consistent unit).
+    pub loads: Vec<f64>,
+    /// Per-object logical coordinates (coordinate variant input; zeros
+    /// when the app provides none).
+    pub coords: Vec<[f64; 2]>,
+    /// Per-object migration size in bytes (proxy for migration cost).
+    pub sizes: Vec<f64>,
+    /// Object communication graph.
+    pub graph: CommGraph,
+    /// Current object → PE mapping.
+    pub mapping: Vec<u32>,
+    pub topo: Topology,
+}
+
+/// A strategy's output: the new object → PE mapping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub mapping: Vec<u32>,
+}
+
+impl Instance {
+    /// Build with uniform object sizes and validation.
+    pub fn new(
+        loads: Vec<f64>,
+        coords: Vec<[f64; 2]>,
+        graph: CommGraph,
+        mapping: Vec<u32>,
+        topo: Topology,
+    ) -> Instance {
+        let n = loads.len();
+        let sizes = vec![1.0; n];
+        let inst = Instance { loads, coords, sizes, graph, mapping, topo };
+        inst.validate().expect("invalid instance");
+        inst
+    }
+
+    pub fn n_objects(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n = self.loads.len();
+        if self.coords.len() != n || self.mapping.len() != n || self.sizes.len() != n {
+            bail!("instance arrays disagree on n ({n})");
+        }
+        if self.graph.n != n {
+            bail!("graph has {} vertices, expected {n}", self.graph.n);
+        }
+        let n_pes = self.topo.n_pes() as u32;
+        if let Some(&bad) = self.mapping.iter().find(|&&pe| pe >= n_pes) {
+            bail!("mapping references PE {bad} >= {n_pes}");
+        }
+        if self.loads.iter().any(|l| !l.is_finite() || *l < 0.0) {
+            bail!("loads must be finite and non-negative");
+        }
+        Ok(())
+    }
+
+    /// Object → node mapping derived from the PE mapping.
+    pub fn node_mapping(&self) -> Vec<u32> {
+        self.mapping.iter().map(|&pe| self.topo.node_of_pe(pe)).collect()
+    }
+
+    /// Per-PE total loads.
+    pub fn pe_loads(&self, mapping: &[u32]) -> Vec<f64> {
+        let mut loads = vec![0.0; self.topo.n_pes()];
+        for (o, &pe) in mapping.iter().enumerate() {
+            loads[pe as usize] += self.loads[o];
+        }
+        loads
+    }
+
+    /// Per-node total loads.
+    pub fn node_loads(&self, mapping: &[u32]) -> Vec<f64> {
+        let mut loads = vec![0.0; self.topo.n_nodes];
+        for (o, &pe) in mapping.iter().enumerate() {
+            loads[self.topo.node_of_pe(pe) as usize] += self.loads[o];
+        }
+        loads
+    }
+
+    /// Per-node object lists under `mapping`.
+    pub fn node_objects(&self, mapping: &[u32]) -> Vec<Vec<u32>> {
+        let mut objs = vec![Vec::new(); self.topo.n_nodes];
+        for (o, &pe) in mapping.iter().enumerate() {
+            objs[self.topo.node_of_pe(pe) as usize].push(o as u32);
+        }
+        objs
+    }
+
+    /// Centroid (mean coordinate) of each node's objects. Nodes with no
+    /// objects get the global centroid (paper's coord variant init).
+    pub fn node_centroids(&self, mapping: &[u32]) -> Vec<[f64; 2]> {
+        let mut sums = vec![[0.0f64; 2]; self.topo.n_nodes];
+        let mut counts = vec![0usize; self.topo.n_nodes];
+        for (o, &pe) in mapping.iter().enumerate() {
+            let node = self.topo.node_of_pe(pe) as usize;
+            sums[node][0] += self.coords[o][0];
+            sums[node][1] += self.coords[o][1];
+            counts[node] += 1;
+        }
+        let n = self.n_objects().max(1) as f64;
+        let global = [
+            self.coords.iter().map(|c| c[0]).sum::<f64>() / n,
+            self.coords.iter().map(|c| c[1]).sum::<f64>() / n,
+        ];
+        sums.iter()
+            .zip(&counts)
+            .map(|(s, &c)| if c == 0 { global } else { [s[0] / c as f64, s[1] / c as f64] })
+            .collect()
+    }
+
+    // ----------------------------------------------------------- .lbi io
+
+    /// Serialize to the `.lbi` text format.
+    pub fn to_lbi(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# difflb instance v1\n");
+        s.push_str(&format!(
+            "header objects {} nodes {} pes_per_node {}\n",
+            self.n_objects(),
+            self.topo.n_nodes,
+            self.topo.pes_per_node
+        ));
+        for o in 0..self.n_objects() {
+            s.push_str(&format!(
+                "object {o} load {} pe {} x {} y {} size {}\n",
+                self.loads[o], self.mapping[o], self.coords[o][0], self.coords[o][1], self.sizes[o]
+            ));
+        }
+        for (a, b, w) in self.graph.edges() {
+            s.push_str(&format!("edge {a} {b} {w}\n"));
+        }
+        s
+    }
+
+    pub fn from_lbi(text: &str) -> Result<Instance> {
+        let mut n = 0usize;
+        let mut topo = Topology::flat(1);
+        let mut loads = Vec::new();
+        let mut coords = Vec::new();
+        let mut sizes = Vec::new();
+        let mut mapping = Vec::new();
+        let mut edges = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("lbi line {}", lineno + 1);
+            match toks[0] {
+                "header" => {
+                    // header objects N nodes M pes_per_node P
+                    if toks.len() != 7 {
+                        bail!("{}: malformed header", ctx());
+                    }
+                    n = toks[2].parse().with_context(ctx)?;
+                    topo = Topology::new(
+                        toks[4].parse().with_context(ctx)?,
+                        toks[6].parse().with_context(ctx)?,
+                    );
+                    loads = vec![0.0; n];
+                    coords = vec![[0.0; 2]; n];
+                    sizes = vec![1.0; n];
+                    mapping = vec![0; n];
+                }
+                "object" => {
+                    if toks.len() != 12 {
+                        bail!("{}: malformed object line", ctx());
+                    }
+                    let id: usize = toks[1].parse().with_context(ctx)?;
+                    if id >= n {
+                        bail!("{}: object id {id} >= {n}", ctx());
+                    }
+                    loads[id] = toks[3].parse().with_context(ctx)?;
+                    mapping[id] = toks[5].parse().with_context(ctx)?;
+                    coords[id][0] = toks[7].parse().with_context(ctx)?;
+                    coords[id][1] = toks[9].parse().with_context(ctx)?;
+                    sizes[id] = toks[11].parse().with_context(ctx)?;
+                }
+                "edge" => {
+                    if toks.len() != 4 {
+                        bail!("{}: malformed edge line", ctx());
+                    }
+                    edges.push((
+                        toks[1].parse().with_context(ctx)?,
+                        toks[2].parse().with_context(ctx)?,
+                        toks[3].parse().with_context(ctx)?,
+                    ));
+                }
+                other => bail!("{}: unknown record '{other}'", ctx()),
+            }
+        }
+        let graph = CommGraph::from_edges(n, &edges);
+        let inst = Instance { loads, coords, sizes, graph, mapping, topo };
+        inst.validate()?;
+        Ok(inst)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_lbi())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Instance> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Instance::from_lbi(&text)
+    }
+}
+
+impl Assignment {
+    /// Identity assignment (no migration).
+    pub fn unchanged(inst: &Instance) -> Assignment {
+        Assignment { mapping: inst.mapping.clone() }
+    }
+
+    /// Number of objects whose PE changed relative to `inst`.
+    pub fn migrations(&self, inst: &Instance) -> usize {
+        self.mapping
+            .iter()
+            .zip(&inst.mapping)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn tiny_instance() -> Instance {
+        let graph = CommGraph::from_edges(4, &[(0, 1, 8.0), (1, 2, 4.0), (2, 3, 2.0)]);
+        Instance::new(
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![[0.0, 0.0], [1.0, 0.0], [2.0, 0.0], [3.0, 0.0]],
+            graph,
+            vec![0, 0, 1, 1],
+            Topology::flat(2),
+        )
+    }
+
+    #[test]
+    fn derived_views() {
+        let inst = tiny_instance();
+        assert_eq!(inst.pe_loads(&inst.mapping), vec![3.0, 7.0]);
+        assert_eq!(inst.node_loads(&inst.mapping), vec![3.0, 7.0]);
+        assert_eq!(inst.node_objects(&inst.mapping)[1], vec![2, 3]);
+        let c = inst.node_centroids(&inst.mapping);
+        assert_eq!(c[0], [0.5, 0.0]);
+        assert_eq!(c[1], [2.5, 0.0]);
+    }
+
+    #[test]
+    fn lbi_round_trip() {
+        let inst = tiny_instance();
+        let text = inst.to_lbi();
+        let back = Instance::from_lbi(&text).unwrap();
+        assert_eq!(back.loads, inst.loads);
+        assert_eq!(back.mapping, inst.mapping);
+        assert_eq!(back.coords, inst.coords);
+        assert_eq!(back.graph, inst.graph);
+        assert_eq!(back.topo, inst.topo);
+    }
+
+    #[test]
+    fn validation_catches_bad_mapping() {
+        let mut inst = tiny_instance();
+        inst.mapping[0] = 99;
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn migrations_counted() {
+        let inst = tiny_instance();
+        let mut a = Assignment::unchanged(&inst);
+        assert_eq!(a.migrations(&inst), 0);
+        a.mapping[0] = 1;
+        assert_eq!(a.migrations(&inst), 1);
+    }
+
+    #[test]
+    fn malformed_lbi_rejected() {
+        assert!(Instance::from_lbi("object 0").is_err());
+        assert!(Instance::from_lbi("header objects 1 nodes 1 pes_per_node 1\nbogus x").is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! The paper's evaluation metrics (§II problem definition):
+//! (1) load imbalance = max/avg processor load,
+//! (2) communication cost = external / internal bytes,
+//! (3) migration cost = objects moved (count and %),
+//! (4) strategy cost = wall-clock of computing the mapping.
+
+use super::instance::{Assignment, Instance};
+use crate::util::stats::Summary;
+
+/// Communication split under a mapping, at some grouping granularity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommSplit {
+    /// Bytes on edges whose endpoints share a group (node).
+    pub internal: f64,
+    /// Bytes on edges crossing groups.
+    pub external: f64,
+}
+
+impl CommSplit {
+    /// The paper's external/internal ratio; 0 when nothing is internal
+    /// and nothing is external, +inf when only external traffic exists.
+    pub fn ratio(&self) -> f64 {
+        if self.internal == 0.0 {
+            if self.external == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.external / self.internal
+        }
+    }
+}
+
+/// Communication split at **node** granularity (the paper's inter-node
+/// vs intra-node bytes).
+pub fn comm_split_nodes(inst: &Instance, mapping: &[u32]) -> CommSplit {
+    let mut internal = 0.0;
+    let mut external = 0.0;
+    for (a, b, w) in inst.graph.edges() {
+        let na = inst.topo.node_of_pe(mapping[a as usize]);
+        let nb = inst.topo.node_of_pe(mapping[b as usize]);
+        if na == nb {
+            internal += w;
+        } else {
+            external += w;
+        }
+    }
+    CommSplit { internal, external }
+}
+
+/// Communication split at **PE** granularity.
+pub fn comm_split_pes(inst: &Instance, mapping: &[u32]) -> CommSplit {
+    let mut internal = 0.0;
+    let mut external = 0.0;
+    for (a, b, w) in inst.graph.edges() {
+        if mapping[a as usize] == mapping[b as usize] {
+            internal += w;
+        } else {
+            external += w;
+        }
+    }
+    CommSplit { internal, external }
+}
+
+/// Full evaluation of an assignment against the paper's four metrics.
+#[derive(Debug, Clone)]
+pub struct LbMetrics {
+    pub max_avg_pe: f64,
+    pub max_avg_node: f64,
+    pub comm_nodes: CommSplit,
+    pub comm_pes: CommSplit,
+    pub migrations: usize,
+    pub migration_pct: f64,
+    /// Bytes that must move to realize the migrations.
+    pub migration_bytes: f64,
+    /// Wall-clock seconds spent inside the strategy (filled by caller).
+    pub strategy_s: f64,
+}
+
+pub fn evaluate(inst: &Instance, asg: &Assignment) -> LbMetrics {
+    evaluate_mapping(inst, &asg.mapping)
+}
+
+pub fn evaluate_mapping(inst: &Instance, mapping: &[u32]) -> LbMetrics {
+    let pe = Summary::of(&inst.pe_loads(mapping));
+    let node = Summary::of(&inst.node_loads(mapping));
+    let migrations = mapping
+        .iter()
+        .zip(&inst.mapping)
+        .filter(|(a, b)| a != b)
+        .count();
+    let migration_bytes: f64 = mapping
+        .iter()
+        .zip(&inst.mapping)
+        .enumerate()
+        .filter(|(_, (a, b))| a != b)
+        .map(|(o, _)| inst.sizes[o])
+        .sum();
+    LbMetrics {
+        max_avg_pe: pe.max_avg_ratio(),
+        max_avg_node: node.max_avg_ratio(),
+        comm_nodes: comm_split_nodes(inst, mapping),
+        comm_pes: comm_split_pes(inst, mapping),
+        migrations,
+        migration_pct: 100.0 * migrations as f64 / inst.n_objects().max(1) as f64,
+        migration_bytes,
+        strategy_s: 0.0,
+    }
+}
+
+impl std::fmt::Display for LbMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "max/avg(pe)={:.3} max/avg(node)={:.3} ext/int={:.4} migr={} ({:.1}%) lb={:.1}ms",
+            self.max_avg_pe,
+            self.max_avg_node,
+            self.comm_nodes.ratio(),
+            self.migrations,
+            self.migration_pct,
+            self.strategy_s * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::CommGraph;
+    use crate::model::topology::Topology;
+
+    fn inst() -> Instance {
+        // 4 objects in a path 0-1-2-3, loads 1..4, two PEs on one node +
+        // two separate single-PE nodes? Keep it simple: 2 nodes x 2 PEs.
+        let graph = CommGraph::from_edges(4, &[(0, 1, 10.0), (1, 2, 20.0), (2, 3, 30.0)]);
+        Instance::new(
+            vec![1.0, 1.0, 1.0, 1.0],
+            vec![[0.0, 0.0]; 4],
+            graph,
+            vec![0, 1, 2, 3], // one object per PE
+            Topology::new(2, 2),
+        )
+    }
+
+    #[test]
+    fn comm_splits() {
+        let i = inst();
+        // nodes: {pe0,pe1}=node0 has objs 0,1; {pe2,pe3}=node1 has 2,3.
+        let n = comm_split_nodes(&i, &i.mapping);
+        assert_eq!(n.internal, 40.0); // 0-1 and 2-3
+        assert_eq!(n.external, 20.0); // 1-2
+        let p = comm_split_pes(&i, &i.mapping);
+        assert_eq!(p.internal, 0.0);
+        assert_eq!(p.external, 60.0);
+        assert!((n.ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_edge_cases() {
+        assert_eq!(CommSplit { internal: 0.0, external: 0.0 }.ratio(), 0.0);
+        assert_eq!(CommSplit { internal: 0.0, external: 5.0 }.ratio(), f64::INFINITY);
+    }
+
+    #[test]
+    fn evaluate_counts_migrations() {
+        let i = inst();
+        let asg = Assignment { mapping: vec![0, 1, 2, 2] };
+        let m = evaluate(&i, &asg);
+        assert_eq!(m.migrations, 1);
+        assert_eq!(m.migration_pct, 25.0);
+        assert_eq!(m.migration_bytes, 1.0);
+        // node loads become [2, 2] -> balanced
+        assert!((m.max_avg_node - 1.0).abs() < 1e-12);
+        // pe loads [1,1,2,0] -> max/avg = 2
+        assert!((m.max_avg_pe - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Core data model: migratable objects, their communication graph, the
+//! node/PE topology, problem instances, and the paper's cost metrics.
+
+pub mod graph;
+pub mod instance;
+pub mod metrics;
+pub mod topology;
+
+pub use graph::{CommGraph, TrafficRecorder};
+pub use instance::{Assignment, Instance};
+pub use metrics::{evaluate, evaluate_mapping, CommSplit, LbMetrics};
+pub use topology::Topology;

@@ -1,0 +1,77 @@
+//! Execution topology: nodes (processes) × PEs (threads within a
+//! process), mirroring the paper's hierarchy (§III-D): the diffusion
+//! stages operate at node granularity, the hierarchical pass refines
+//! across PEs inside a node. With `pes_per_node = 1` (the paper's
+//! "one process per core" study mode) nodes and PEs coincide.
+
+/// Node/PE topology. PEs are numbered contiguously:
+/// `pe = node * pes_per_node + local`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub n_nodes: usize,
+    pub pes_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(n_nodes: usize, pes_per_node: usize) -> Topology {
+        assert!(n_nodes > 0 && pes_per_node > 0);
+        Topology { n_nodes, pes_per_node }
+    }
+
+    /// Flat topology: every PE its own node (paper's simulation setup).
+    pub fn flat(n_pes: usize) -> Topology {
+        Topology::new(n_pes, 1)
+    }
+
+    #[inline]
+    pub fn n_pes(&self) -> usize {
+        self.n_nodes * self.pes_per_node
+    }
+
+    #[inline]
+    pub fn node_of_pe(&self, pe: u32) -> u32 {
+        debug_assert!((pe as usize) < self.n_pes());
+        pe / self.pes_per_node as u32
+    }
+
+    #[inline]
+    pub fn local_of_pe(&self, pe: u32) -> u32 {
+        pe % self.pes_per_node as u32
+    }
+
+    /// PEs belonging to `node`, as a range.
+    #[inline]
+    pub fn pes_of_node(&self, node: u32) -> std::ops::Range<u32> {
+        let lo = node * self.pes_per_node as u32;
+        lo..lo + self.pes_per_node as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_topology() {
+        let t = Topology::flat(8);
+        assert_eq!(t.n_pes(), 8);
+        assert_eq!(t.node_of_pe(5), 5);
+        assert_eq!(t.pes_of_node(5), 5..6);
+    }
+
+    #[test]
+    fn hierarchical_topology() {
+        let t = Topology::new(4, 16);
+        assert_eq!(t.n_pes(), 64);
+        assert_eq!(t.node_of_pe(0), 0);
+        assert_eq!(t.node_of_pe(17), 1);
+        assert_eq!(t.local_of_pe(17), 1);
+        assert_eq!(t.pes_of_node(3), 48..64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_nodes_rejected() {
+        Topology::new(0, 1);
+    }
+}

@@ -1,0 +1,163 @@
+//! Artifact manifest parsing.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.txt` with one
+//! `key=value` record per line describing each lowered HLO artifact;
+//! the engine uses it to pick executables by logical kind + shape
+//! instead of hard-coding file names.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Metadata for one AOT artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// "pic_push" or "stencil".
+    pub kind: String,
+    /// pic_push: particle-batch size.
+    pub n: usize,
+    /// pic_push: fused steps per invocation.
+    pub steps: usize,
+    /// stencil: grid shape.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Default artifacts directory: `$DIFFLB_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DIFFLB_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        Manifest::load(Self::default_dir())
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} (run `make artifacts` first)", path.display())
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token '{tok}'", lineno + 1))?;
+                kv.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k)
+                    .copied()
+                    .with_context(|| format!("manifest line {}: missing '{k}'", lineno + 1))
+            };
+            let num = |k: &str| -> usize {
+                kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(0)
+            };
+            let name = get("name")?.to_string();
+            let file = dir.join(get("file")?);
+            if artifacts.iter().any(|a: &ArtifactMeta| a.name == name) {
+                bail!("duplicate artifact '{name}'");
+            }
+            artifacts.push(ArtifactMeta {
+                name,
+                file,
+                kind: get("kind")?.to_string(),
+                n: num("n"),
+                steps: num("steps"),
+                rows: num("rows"),
+                cols: num("cols"),
+            });
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Single-step pic_push batch sizes, ascending.
+    pub fn pic_batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "pic_push" && a.steps == 1)
+            .map(|a| a.n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The single-step pic_push artifact with batch size exactly `n`.
+    pub fn pic_for_batch(&self, n: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "pic_push" && a.steps == 1 && a.n == n)
+    }
+
+    /// A fused-epoch pic_push artifact for `steps`, if one was lowered.
+    pub fn pic_epoch(&self, steps: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "pic_push" && a.steps == steps)
+    }
+
+    pub fn stencil_for(&self, rows: usize, cols: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "stencil" && a.rows == rows && a.cols == cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+name=pic_push_n1024 file=pic_push_n1024.hlo.txt kind=pic_push n=1024 steps=1
+name=pic_push_n8192 file=pic_push_n8192.hlo.txt kind=pic_push n=8192 steps=1
+name=pic_push_epoch5_n65536 file=e5.hlo.txt kind=pic_push n=65536 steps=5
+name=stencil_256x256 file=stencil_256x256.hlo.txt kind=stencil rows=256 cols=256
+";
+
+    #[test]
+    fn parses_and_queries() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("arts")).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.pic_batch_sizes(), vec![1024, 8192]);
+        assert_eq!(m.pic_for_batch(1024).unwrap().name, "pic_push_n1024");
+        assert!(m.pic_for_batch(4096).is_none());
+        assert_eq!(m.pic_epoch(5).unwrap().n, 65536);
+        assert_eq!(m.stencil_for(256, 256).unwrap().rows, 256);
+        assert!(m.by_name("pic_push_n8192").unwrap().file.starts_with("arts"));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_bad_tokens() {
+        let dup = format!("{SAMPLE}name=pic_push_n1024 file=x kind=pic_push n=1 steps=1\n");
+        assert!(Manifest::parse(&dup, PathBuf::from(".")).is_err());
+        assert!(Manifest::parse("name", PathBuf::from(".")).is_err());
+    }
+}

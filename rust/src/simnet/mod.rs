@@ -1,0 +1,10 @@
+//! Distributed-execution substrate: a threaded message-passing cluster
+//! (stand-in for Charm++/UCX process messaging) and an α–β network cost
+//! model used to account simulated communication time at scale
+//! (DESIGN.md substitution table — Perlmutter runs are reproduced as
+//! modeled time over real computation).
+
+pub mod network;
+pub mod protocol;
+
+pub use network::{Cluster, Comm, CostTracker, NetModel};

@@ -1,0 +1,223 @@
+//! Threaded message-passing cluster + α–β communication cost model.
+//!
+//! [`Cluster::run`] spawns one OS thread per simulated node and hands
+//! each a [`Comm`] endpoint (send/recv/barrier over std mpsc channels) —
+//! enough to execute genuinely distributed protocols (the stage-1
+//! handshake in [`super::protocol`]) without any external runtime.
+//!
+//! [`NetModel`] converts message/byte counts into seconds the way the
+//! strong-scaling analysis needs: `t = α·msgs + β·bytes`, with
+//! intra-node traffic discounted (shared memory vs NIC).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// A message between simulated nodes: (source, tag, payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Msg {
+    pub from: u32,
+    pub tag: u32,
+    pub data: Vec<u8>,
+}
+
+/// Per-node communication endpoint.
+pub struct Comm {
+    pub rank: u32,
+    pub n: usize,
+    senders: Vec<Sender<Msg>>,
+    inbox: Receiver<Msg>,
+}
+
+impl Comm {
+    pub fn send(&self, to: u32, tag: u32, data: Vec<u8>) {
+        // a dropped peer ends the protocol; ignore send failures then
+        let _ = self.senders[to as usize].send(Msg { from: self.rank, tag, data });
+    }
+
+    /// Blocking receive with timeout (None on timeout).
+    pub fn recv(&self, timeout: Duration) -> Option<Msg> {
+        match self.inbox.recv_timeout(timeout) {
+            Ok(m) => Some(m),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    /// Receive exactly `count` messages (or fewer on timeout).
+    pub fn recv_n(&self, count: usize, timeout: Duration) -> Vec<Msg> {
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            match self.recv(timeout) {
+                Some(m) => out.push(m),
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+/// A set of simulated nodes executing a closure per rank on real
+/// threads.
+pub struct Cluster;
+
+impl Cluster {
+    /// Run `f(rank, comm)` on `n` threads; returns the per-rank results
+    /// in rank order. Panics in workers propagate.
+    pub fn run<T, F>(n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(u32, Comm) -> T + Send + Sync + Clone + 'static,
+    {
+        let mut senders = Vec::with_capacity(n);
+        let mut inboxes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Msg>();
+            senders.push(tx);
+            inboxes.push(rx);
+        }
+        let mut handles = Vec::with_capacity(n);
+        for (rank, inbox) in inboxes.into_iter().enumerate() {
+            let comm = Comm { rank: rank as u32, n, senders: senders.clone(), inbox };
+            let f = f.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("simnode-{rank}"))
+                    .spawn(move || f(rank as u32, comm))
+                    .expect("spawn simnode"),
+            );
+        }
+        drop(senders);
+        handles.into_iter().map(|h| h.join().expect("simnode panicked")).collect()
+    }
+}
+
+/// α–β network model with intra-node discount.
+#[derive(Debug, Clone, Copy)]
+pub struct NetModel {
+    /// Per-message latency (seconds).
+    pub alpha: f64,
+    /// Per-byte cost (seconds/byte) across nodes.
+    pub beta: f64,
+    /// Intra-node traffic costs `intra_factor` × the inter-node beta
+    /// (shared-memory transfer), with no alpha.
+    pub intra_factor: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        // ~2µs latency, ~25 GB/s effective inter-node bandwidth,
+        // intra-node ~10x cheaper: Slingshot-ish numbers for a
+        // Perlmutter-flavored simulation.
+        NetModel { alpha: 2e-6, beta: 1.0 / 25e9, intra_factor: 0.1 }
+    }
+}
+
+impl NetModel {
+    pub fn inter_time(&self, msgs: u64, bytes: f64) -> f64 {
+        self.alpha * msgs as f64 + self.beta * bytes
+    }
+
+    pub fn intra_time(&self, bytes: f64) -> f64 {
+        self.beta * self.intra_factor * bytes
+    }
+}
+
+/// Accumulates per-node traffic for one app iteration and converts it
+/// to per-node communication time under a [`NetModel`].
+#[derive(Debug, Clone)]
+pub struct CostTracker {
+    pub n_nodes: usize,
+    pub inter_msgs: Vec<u64>,
+    pub inter_bytes: Vec<f64>,
+    pub intra_bytes: Vec<f64>,
+}
+
+impl CostTracker {
+    pub fn new(n_nodes: usize) -> CostTracker {
+        CostTracker {
+            n_nodes,
+            inter_msgs: vec![0; n_nodes],
+            inter_bytes: vec![0.0; n_nodes],
+            intra_bytes: vec![0.0; n_nodes],
+        }
+    }
+
+    /// Record `bytes` moving from `from` to `to` (node indices); both
+    /// endpoints pay (send + receive overlap is not modeled).
+    pub fn record(&mut self, from: u32, to: u32, bytes: f64) {
+        if from == to {
+            self.intra_bytes[from as usize] += bytes;
+        } else {
+            self.inter_msgs[from as usize] += 1;
+            self.inter_msgs[to as usize] += 1;
+            self.inter_bytes[from as usize] += bytes;
+            self.inter_bytes[to as usize] += bytes;
+        }
+    }
+
+    /// Per-node communication seconds under `model`.
+    pub fn comm_times(&self, model: &NetModel) -> Vec<f64> {
+        (0..self.n_nodes)
+            .map(|i| {
+                model.inter_time(self.inter_msgs[i], self.inter_bytes[i])
+                    + model.intra_time(self.intra_bytes[i])
+            })
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.inter_msgs.iter_mut().for_each(|x| *x = 0);
+        self.inter_bytes.iter_mut().for_each(|x| *x = 0.0);
+        self.intra_bytes.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_all_to_all_exchange() {
+        let results = Cluster::run(4, |rank, comm| {
+            for to in 0..4u32 {
+                if to != rank {
+                    comm.send(to, 7, vec![rank as u8]);
+                }
+            }
+            let msgs = comm.recv_n(3, Duration::from_secs(5));
+            let mut froms: Vec<u32> = msgs.iter().map(|m| m.from).collect();
+            froms.sort_unstable();
+            froms
+        });
+        for (rank, froms) in results.iter().enumerate() {
+            let expect: Vec<u32> = (0..4u32).filter(|&r| r as usize != rank).collect();
+            assert_eq!(froms, &expect);
+        }
+    }
+
+    #[test]
+    fn recv_timeout_returns_none() {
+        let r = Cluster::run(2, |_rank, comm| comm.recv(Duration::from_millis(10)).is_none());
+        assert_eq!(r, vec![true, true]);
+    }
+
+    #[test]
+    fn net_model_costs() {
+        let m = NetModel { alpha: 1e-6, beta: 1e-9, intra_factor: 0.1 };
+        assert!((m.inter_time(10, 1e6) - (1e-5 + 1e-3)).abs() < 1e-12);
+        assert!((m.intra_time(1e6) - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_attributes_both_endpoints() {
+        let mut t = CostTracker::new(3);
+        t.record(0, 1, 100.0);
+        t.record(2, 2, 50.0);
+        assert_eq!(t.inter_msgs, vec![1, 1, 0]);
+        assert_eq!(t.inter_bytes, vec![100.0, 100.0, 0.0]);
+        assert_eq!(t.intra_bytes, vec![0.0, 0.0, 50.0]);
+        let times = t.comm_times(&NetModel::default());
+        assert!(times[0] > 0.0 && times[0] == times[1] && times[2] > 0.0);
+        t.reset();
+        assert_eq!(t.inter_bytes, vec![0.0; 3]);
+    }
+}

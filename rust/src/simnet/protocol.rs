@@ -1,0 +1,224 @@
+//! The stage-1 neighbor handshake executed as a **real distributed
+//! protocol** over the threaded [`Cluster`](super::Cluster) — the same
+//! state machine as `strategies::diffusion::neighbor::select_neighbors`,
+//! but with every decision made locally per node and every interaction a
+//! real message. Integration tests assert the two produce identical
+//! pairings, validating that the round-synchronous sequential
+//! implementation used inside the strategies is a faithful model of the
+//! distributed execution (the paper's strategy runs inside Charm++ this
+//! way).
+//!
+//! Wire protocol per round (tags):
+//!   0 REQ   — one per peer: `[1]` requesting / `[0]` not
+//!   1 RESP  — to each requester: `[1]` accept / `[0]` reject
+//!   2 ACK   — to each accepting responder: `[1]` confirm / `[0]` cancel
+//!   3 DONE  — satisfaction bit for global termination
+
+use std::time::Duration;
+
+use super::network::{Cluster, Comm};
+use crate::strategies::diffusion::neighbor::{Candidates, NeighborGraph};
+
+const T: Duration = Duration::from_secs(30);
+
+/// Receive exactly `count` messages with `tag`, buffering any
+/// out-of-phase messages (a fast peer may already be sending the next
+/// phase while we drain this one).
+fn recv_tagged(
+    pending: &mut Vec<super::network::Msg>,
+    comm: &Comm,
+    tag: u32,
+    count: usize,
+) -> Vec<super::network::Msg> {
+    let mut out = Vec::with_capacity(count);
+    let mut i = 0;
+    while i < pending.len() {
+        if pending[i].tag == tag && out.len() < count {
+            out.push(pending.remove(i));
+        } else {
+            i += 1;
+        }
+    }
+    while out.len() < count {
+        match comm.recv(T) {
+            Some(m) if m.tag == tag => out.push(m),
+            Some(m) => pending.push(m),
+            None => break,
+        }
+    }
+    out
+}
+
+/// Run the distributed handshake on `n` threads; returns the symmetric
+/// neighbor graph (same contract as the sequential implementation).
+pub fn distributed_select_neighbors(
+    candidates: &Candidates,
+    k: usize,
+    max_rounds: usize,
+) -> NeighborGraph {
+    let n = candidates.len();
+    if n == 0 {
+        return NeighborGraph { adj: vec![] };
+    }
+    let cands = std::sync::Arc::new(candidates.clone());
+    let adj = Cluster::run(n, move |rank, comm| {
+        node_main(rank, comm, &cands[rank as usize], k, max_rounds)
+    });
+    NeighborGraph { adj }
+}
+
+fn node_main(rank: u32, comm: Comm, my_cands: &[u32], k: usize, max_rounds: usize) -> Vec<u32> {
+    let n = comm.n;
+    let peers: Vec<u32> = (0..n as u32).filter(|&p| p != rank).collect();
+    let mut confirmed: Vec<u32> = Vec::new();
+    let mut holds: usize = 0;
+    let mut cursor = 0usize;
+    let mut wrapped = false;
+    let mut pending: Vec<super::network::Msg> = Vec::new();
+
+    for round in 0..max_rounds as u32 {
+        let tag = |phase: u32| (round << 8) | phase;
+
+        // ---- Phase A: decide + send requests (batch: one msg per peer).
+        let l = k.saturating_sub(confirmed.len());
+        let want = if l == 0 {
+            0
+        } else if l / 2 == 0 && !confirmed.is_empty() {
+            1 // stall relief, see sequential impl
+        } else {
+            l / 2
+        };
+        let dbg = std::env::var("DIFFLB_PROTO_DBG").is_ok();
+        let mut requested: Vec<u32> = Vec::new();
+        while requested.len() < want {
+            if cursor >= my_cands.len() {
+                if wrapped || my_cands.is_empty() {
+                    break;
+                }
+                wrapped = true;
+                cursor = 0;
+                continue;
+            }
+            let c = my_cands[cursor];
+            cursor += 1;
+            if !confirmed.contains(&c) && !requested.contains(&c) {
+                requested.push(c);
+            }
+        }
+        if dbg {
+            eprintln!("r{round} n{rank}: confirmed={confirmed:?} holds={holds} want={want} requested={requested:?}");
+        }
+        for &p in &peers {
+            comm.send(p, tag(0), vec![u8::from(requested.contains(&p))]);
+        }
+
+        // ---- Phase B: collect requests, respond (sorted by requester).
+        let mut reqs: Vec<u32> = recv_tagged(&mut pending, &comm, tag(0), peers.len())
+            .into_iter()
+            .filter(|m| m.data == [1])
+            .map(|m| m.from)
+            .collect();
+        reqs.sort_unstable();
+        if dbg { eprintln!("r{round} n{rank}: reqs_in={reqs:?}"); }
+        let mut accepted_from: Vec<u32> = Vec::new();
+        for &from in &reqs {
+            let full = confirmed.len() >= k || confirmed.len() + holds >= k;
+            let accept = !full && !confirmed.contains(&from);
+            if accept {
+                holds += 1;
+                accepted_from.push(from);
+            }
+            comm.send(from, tag(1), vec![u8::from(accept)]);
+        }
+
+        // ---- Phase C: collect responses to our requests, ack/cancel.
+        let mut accepts: Vec<u32> = recv_tagged(&mut pending, &comm, tag(1), requested.len())
+            .into_iter()
+            .filter(|m| m.data == [1])
+            .map(|m| m.from)
+            .collect();
+        accepts.sort_unstable();
+        if dbg { eprintln!("r{round} n{rank}: accepts_in={accepts:?}"); }
+        for &resp in &accepts {
+            // a hold issued to resp itself is this same prospective
+            // pairing and does not count against capacity (see the
+            // sequential implementation)
+            let same_pair = usize::from(accepted_from.contains(&resp));
+            let can_confirm =
+                confirmed.len() + holds - same_pair < k && !confirmed.contains(&resp);
+            if can_confirm {
+                confirmed.push(resp);
+            }
+            comm.send(resp, tag(2), vec![u8::from(can_confirm)]);
+        }
+
+        // ---- Process acks for the accepts we issued (sorted by sender
+        // for determinism; arrival order is scheduling-dependent).
+        let mut acks = recv_tagged(&mut pending, &comm, tag(2), accepted_from.len());
+        acks.sort_by_key(|m| m.from);
+        for m in acks {
+            holds -= 1;
+            if m.data == [1] && !confirmed.contains(&m.from) && confirmed.len() < k {
+                confirmed.push(m.from);
+            }
+        }
+
+        // ---- Global termination: everyone satisfied?
+        let satisfied = confirmed.len() >= k || (wrapped && cursor >= my_cands.len());
+        for &p in &peers {
+            comm.send(p, tag(3), vec![u8::from(satisfied)]);
+        }
+        let done_msgs = recv_tagged(&mut pending, &comm, tag(3), peers.len());
+        if satisfied && done_msgs.iter().all(|m| m.data == [1]) {
+            break;
+        }
+    }
+    confirmed.sort_unstable();
+    confirmed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::diffusion::neighbor::select_neighbors;
+
+    fn ring_candidates(n: usize) -> Candidates {
+        (0..n)
+            .map(|i| {
+                let mut peers: Vec<(u32, usize)> = (0..n)
+                    .filter(|&j| j != i)
+                    .map(|j| {
+                        let d = (i as isize - j as isize).unsigned_abs();
+                        (j as u32, d.min(n - d))
+                    })
+                    .collect();
+                peers.sort_by_key(|&(j, d)| (d, j));
+                peers.into_iter().map(|(j, _)| j).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn distributed_matches_sequential_on_ring() {
+        for k in [2usize, 4] {
+            let cands = ring_candidates(8);
+            let seq = select_neighbors(&cands, k, 16);
+            let dist = distributed_select_neighbors(&cands, k, 16);
+            assert_eq!(seq.adj, dist.adj, "k={k}");
+        }
+    }
+
+    #[test]
+    fn distributed_is_symmetric_and_bounded() {
+        let cands = ring_candidates(12);
+        let g = distributed_select_neighbors(&cands, 3, 16);
+        assert!(g.is_symmetric());
+        assert!(g.max_degree() <= 3);
+    }
+
+    #[test]
+    fn single_node_cluster() {
+        let g = distributed_select_neighbors(&vec![vec![]], 4, 4);
+        assert_eq!(g.adj, vec![Vec::<u32>::new()]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Hierarchical within-process refinement (paper §III-D).
+//!
+//! The three diffusion stages operate at node (process) granularity;
+//! this pass refines the node-level decision into a PE-level mapping:
+//! objects staying on their node keep their PE, arrivals go to the
+//! least-loaded PE, and a bounded load-only refinement evens out the
+//! PEs inside each node. Until this point migrations exist only as
+//! proxy tokens — the app moves real objects once, afterwards.
+
+use crate::model::Instance;
+
+/// Produce the PE-level mapping realizing `new_node_map`.
+pub fn assign_pes(inst: &Instance, new_node_map: &[u32], tol: f64) -> Vec<u32> {
+    let ppn = inst.topo.pes_per_node;
+    if ppn == 1 {
+        // node == PE
+        return new_node_map.to_vec();
+    }
+    let mut mapping = vec![0u32; inst.n_objects()];
+    for node in 0..inst.topo.n_nodes as u32 {
+        let members: Vec<u32> = (0..inst.n_objects() as u32)
+            .filter(|&o| new_node_map[o as usize] == node)
+            .collect();
+        let pe_range = inst.topo.pes_of_node(node);
+        let pe_lo = pe_range.start;
+        let mut pe_loads = vec![0.0f64; ppn];
+        let mut placed: Vec<(u32, usize)> = Vec::with_capacity(members.len());
+
+        // Stayers keep their PE.
+        let mut arrivals: Vec<u32> = Vec::new();
+        for &o in &members {
+            let old_pe = inst.mapping[o as usize];
+            if inst.topo.node_of_pe(old_pe) == node {
+                let local = (old_pe - pe_lo) as usize;
+                pe_loads[local] += inst.loads[o as usize];
+                placed.push((o, local));
+            } else {
+                arrivals.push(o);
+            }
+        }
+        // Arrivals: LPT — heaviest first onto the least-loaded PE.
+        arrivals.sort_by(|&a, &b| {
+            inst.loads[b as usize]
+                .partial_cmp(&inst.loads[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for o in arrivals {
+            let (local, _) = pe_loads
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            pe_loads[local] += inst.loads[o as usize];
+            placed.push((o, local));
+        }
+
+        refine_within(&mut placed, &mut pe_loads, &inst.loads, tol);
+
+        for (o, local) in placed {
+            mapping[o as usize] = pe_lo + local as u32;
+        }
+    }
+    mapping
+}
+
+/// Bounded load-only refinement: repeatedly move the best-fitting object
+/// from the most-loaded PE to the least-loaded PE while it reduces the
+/// spread, up to an iteration bound.
+fn refine_within(
+    placed: &mut [(u32, usize)],
+    pe_loads: &mut [f64],
+    loads: &[f64],
+    tol: f64,
+) {
+    let n_pes = pe_loads.len();
+    if n_pes < 2 {
+        return;
+    }
+    let avg: f64 = pe_loads.iter().sum::<f64>() / n_pes as f64;
+    for _ in 0..64 {
+        let (max_pe, &max_load) = pe_loads
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let (min_pe, &min_load) = pe_loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if max_load <= avg * (1.0 + tol) || max_pe == min_pe {
+            break;
+        }
+        let gap = max_load - min_load;
+        // object on max_pe with load closest to gap/2 (strictly < gap so
+        // the move improves the spread)
+        let mut best: Option<(usize, f64)> = None; // (index in placed, |load - gap/2|)
+        for (idx, &(o, pe)) in placed.iter().enumerate() {
+            if pe != max_pe {
+                continue;
+            }
+            let l = loads[o as usize];
+            if l <= 0.0 || l >= gap {
+                continue;
+            }
+            let score = (l - gap / 2.0).abs();
+            if best.map(|(_, s)| score < s).unwrap_or(true) {
+                best = Some((idx, score));
+            }
+        }
+        let Some((idx, _)) = best else { break };
+        let (o, _) = placed[idx];
+        placed[idx] = (o, min_pe);
+        pe_loads[max_pe] -= loads[o as usize];
+        pe_loads[min_pe] += loads[o as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CommGraph, Instance, Topology};
+
+    fn inst_2nodes_2pes(loads: Vec<f64>, mapping: Vec<u32>) -> Instance {
+        let n = loads.len();
+        Instance::new(
+            loads,
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            mapping,
+            Topology::new(2, 2),
+        )
+    }
+
+    #[test]
+    fn flat_topology_is_identity() {
+        let inst = Instance::new(
+            vec![1.0, 2.0],
+            vec![[0.0; 2]; 2],
+            CommGraph::empty(2),
+            vec![0, 1],
+            Topology::flat(2),
+        );
+        let pes = assign_pes(&inst, &[1, 0], 0.02);
+        assert_eq!(pes, vec![1, 0]);
+    }
+
+    #[test]
+    fn stayers_keep_pe_arrivals_fill_least_loaded() {
+        // node 0 has PEs 0,1; obj0 on pe0, obj1 on pe1. obj2 arrives
+        // from node 1; must land on the lighter PE (pe1).
+        let inst = inst_2nodes_2pes(vec![5.0, 1.0, 2.0, 1.0], vec![0, 1, 2, 3]);
+        let node_map = vec![0, 0, 0, 1];
+        let pes = assign_pes(&inst, &node_map, 0.5); // loose tol: no refine
+        assert_eq!(pes[0], 0);
+        assert_eq!(pes[1], 1);
+        assert_eq!(pes[2], 1); // least-loaded at arrival time
+        assert_eq!(pes[3], 3); // stayer on node 1 keeps its PE
+    }
+
+    #[test]
+    fn refinement_evens_out_pes() {
+        // all 4 objects on pe0 of node 0; refinement must spread them
+        // over pe0/pe1.
+        let inst = inst_2nodes_2pes(vec![2.0, 2.0, 2.0, 2.0], vec![0, 0, 0, 0]);
+        let node_map = vec![0, 0, 0, 0];
+        let pes = assign_pes(&inst, &node_map, 0.02);
+        let l0: f64 = pes.iter().zip(&inst.loads).filter(|(&p, _)| p == 0).map(|(_, l)| l).sum();
+        let l1: f64 = pes.iter().zip(&inst.loads).filter(|(&p, _)| p == 1).map(|(_, l)| l).sum();
+        assert_eq!(l0, 4.0);
+        assert_eq!(l1, 4.0);
+    }
+
+    #[test]
+    fn respects_node_boundaries() {
+        let inst = inst_2nodes_2pes(vec![1.0; 4], vec![0, 0, 2, 2]);
+        let node_map = vec![0, 1, 1, 0];
+        let pes = assign_pes(&inst, &node_map, 0.02);
+        for (o, &pe) in pes.iter().enumerate() {
+            assert_eq!(inst.topo.node_of_pe(pe), node_map[o]);
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Communication-aware diffusion load balancing — the paper's
+//! contribution (§III), plus the coordinate-based variant (§IV).
+//!
+//! Pipeline: [`neighbor`] (stage 1, handshake over comm volume or
+//! centroid distance) → [`virtual_lb`] (stage 2, single-hop first-order
+//! diffusion of load magnitudes) → [`object_selection`] (stage 3,
+//! locality-preserving picks) → [`hierarchical`] (within-process PE
+//! refinement, §III-D).
+
+pub mod hierarchical;
+pub mod neighbor;
+pub mod object_selection;
+pub mod virtual_lb;
+
+use crate::model::{Assignment, Instance};
+use crate::strategies::{LoadBalancer, StrategyParams};
+
+/// Which signal drives neighbor selection + object picks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Application communication graph (paper §III).
+    Communication,
+    /// Object coordinates as a proxy for communication (paper §IV).
+    Coordinate,
+}
+
+/// The diffusion strategy.
+pub struct Diffusion {
+    pub variant: Variant,
+    pub params: StrategyParams,
+    /// Cached stage-1 result when `params.reuse_neighbors` is set
+    /// (paper §III-A future work: node-level communication patterns
+    /// persist across LB rounds, so the handshake can be amortized).
+    cache: std::sync::Mutex<Option<neighbor::NeighborGraph>>,
+}
+
+impl Diffusion {
+    pub fn communication(params: StrategyParams) -> Diffusion {
+        Diffusion { variant: Variant::Communication, params, cache: std::sync::Mutex::new(None) }
+    }
+
+    pub fn coordinate(params: StrategyParams) -> Diffusion {
+        Diffusion { variant: Variant::Coordinate, params, cache: std::sync::Mutex::new(None) }
+    }
+
+    /// Drop the cached neighbor graph (e.g. after topology changes).
+    pub fn invalidate_neighbors(&self) {
+        *self.cache.lock().unwrap() = None;
+    }
+
+    /// Expose the stage-1 + stage-2 intermediate results (used by the
+    /// benches to report neighbor-graph/quota statistics and by
+    /// simnet's distributed execution for cross-validation).
+    pub fn plan(&self, inst: &Instance) -> (neighbor::NeighborGraph, virtual_lb::Quotas) {
+        let node_map = inst.node_mapping();
+        let cached = if self.params.reuse_neighbors {
+            self.cache.lock().unwrap().clone().filter(|g| g.n() == inst.topo.n_nodes)
+        } else {
+            None
+        };
+        let neigh = match cached {
+            Some(g) => g,
+            None => {
+                let candidates = match self.variant {
+                    Variant::Communication => neighbor::comm_candidates(inst, &node_map),
+                    Variant::Coordinate if self.params.sfc_window > 0 => {
+                        neighbor::coord_candidates_sfc(inst, &node_map, self.params.sfc_window)
+                    }
+                    Variant::Coordinate => neighbor::coord_candidates(inst, &node_map),
+                };
+                let g = neighbor::select_neighbors(
+                    &candidates,
+                    self.params.neighbor_count,
+                    self.params.handshake_max_rounds,
+                );
+                if self.params.reuse_neighbors {
+                    *self.cache.lock().unwrap() = Some(g.clone());
+                }
+                g
+            }
+        };
+        let node_loads = inst.node_loads(&inst.mapping);
+        let quotas = virtual_lb::virtual_balance(
+            &neigh,
+            &node_loads,
+            self.params.vlb_tolerance,
+            self.params.vlb_max_iters,
+        );
+        (neigh, quotas)
+    }
+}
+
+impl LoadBalancer for Diffusion {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            Variant::Communication => "diff-comm",
+            Variant::Coordinate => "diff-coord",
+        }
+    }
+
+    fn rebalance(&self, inst: &Instance) -> Assignment {
+        let (_neigh, quotas) = self.plan(inst);
+        let mut node_map = inst.node_mapping();
+        match self.variant {
+            Variant::Communication => {
+                object_selection::select_comm(inst, &mut node_map, &quotas, self.params.overfill);
+            }
+            Variant::Coordinate => {
+                object_selection::select_coord(inst, &mut node_map, &quotas, self.params.overfill);
+            }
+        }
+        let mapping = hierarchical::assign_pes(inst, &node_map, self.params.refine_tolerance);
+        Assignment { mapping }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::model::{evaluate, CommGraph, Instance, Topology};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// 2D stencil instance: side x side objects tiled over a px x py
+    /// processor grid, with multiplicative load noise.
+    pub fn stencil_instance(side: usize, px: usize, py: usize, noise: f64, seed: u64) -> Instance {
+        let n = side * side;
+        let mut edges = Vec::new();
+        for r in 0..side {
+            for c in 0..side {
+                let o = (r * side + c) as u32;
+                edges.push((o, (r * side + (c + 1) % side) as u32, 64.0));
+                edges.push((o, ((r + 1) % side * side + c) as u32, 64.0));
+            }
+        }
+        let graph = CommGraph::from_edges(n, &edges);
+        let mut rng = Rng::new(seed);
+        let loads: Vec<f64> =
+            (0..n).map(|_| 1.0 * (1.0 + noise * (2.0 * rng.f64() - 1.0))).collect();
+        let coords: Vec<[f64; 2]> =
+            (0..n).map(|i| [(i % side) as f64, (i / side) as f64]).collect();
+        // tiled decomposition onto px x py
+        let tile_w = side / px;
+        let tile_h = side / py;
+        let mapping: Vec<u32> = (0..n)
+            .map(|i| {
+                let (c, r) = (i % side, i / side);
+                ((r / tile_h).min(py - 1) * px + (c / tile_w).min(px - 1)) as u32
+            })
+            .collect();
+        Instance::new(loads, coords, graph, mapping, Topology::flat(px * py))
+    }
+
+    #[test]
+    fn comm_diffusion_improves_balance_and_keeps_locality() {
+        let inst = stencil_instance(24, 4, 4, 0.4, 42);
+        let before = evaluate(&inst, &crate::model::Assignment::unchanged(&inst));
+        let lb = Diffusion::communication(StrategyParams::default());
+        let asg = lb.rebalance(&inst);
+        let after = evaluate(&inst, &asg);
+        assert!(after.max_avg_node < before.max_avg_node, "{} !< {}", after.max_avg_node, before.max_avg_node);
+        // locality not destroyed: ext/int stays within 2x of initial
+        assert!(after.comm_nodes.ratio() < before.comm_nodes.ratio() * 2.0 + 0.05);
+        // migrations are incremental, not wholesale
+        assert!(after.migration_pct < 50.0, "{}%", after.migration_pct);
+    }
+
+    #[test]
+    fn coord_diffusion_improves_balance() {
+        let inst = stencil_instance(24, 4, 4, 0.4, 43);
+        let before = evaluate(&inst, &crate::model::Assignment::unchanged(&inst));
+        let lb = Diffusion::coordinate(StrategyParams::default());
+        let asg = lb.rebalance(&inst);
+        let after = evaluate(&inst, &asg);
+        assert!(after.max_avg_node < before.max_avg_node);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let inst = stencil_instance(16, 4, 4, 0.4, 7);
+        let lb = Diffusion::communication(StrategyParams::default());
+        assert_eq!(lb.rebalance(&inst).mapping, lb.rebalance(&inst).mapping);
+    }
+
+    #[test]
+    fn single_hop_property() {
+        // every migrated object lands on a stage-1 neighbor of its
+        // original node — the paper's single-hop guarantee end to end.
+        prop::check("diffusion single-hop", 15, |g| {
+            let side = 8 + 4 * g.usize_in(0, 3);
+            let inst = stencil_instance(side, 4, 4, 0.6, g.seed);
+            let lb = Diffusion::communication(StrategyParams::default());
+            let (neigh, _) = lb.plan(&inst);
+            let asg = lb.rebalance(&inst);
+            for o in 0..inst.n_objects() {
+                let from = inst.topo.node_of_pe(inst.mapping[o]);
+                let to = inst.topo.node_of_pe(asg.mapping[o]);
+                if from != to && !neigh.adj[from as usize].contains(&to) {
+                    return Err(format!("object {o} hopped {from}->{to} (not neighbors)"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[cfg(test)]
+mod reuse_tests {
+    use super::*;
+    use crate::strategies::diffusion::tests::stencil_instance;
+
+    #[test]
+    fn reuse_caches_neighbor_graph() {
+        let inst = stencil_instance(16, 4, 4, 0.4, 3);
+        let params = StrategyParams { reuse_neighbors: true, ..Default::default() };
+        let lb = Diffusion::communication(params);
+        let (g1, _) = lb.plan(&inst);
+        let (g2, _) = lb.plan(&inst);
+        assert_eq!(g1.adj, g2.adj);
+        lb.invalidate_neighbors();
+        let (g3, _) = lb.plan(&inst);
+        assert_eq!(g1.adj, g3.adj); // same instance -> same graph anyway
+    }
+
+    #[test]
+    fn reused_graph_still_balances() {
+        let mut inst = stencil_instance(24, 4, 4, 0.4, 4);
+        let params = StrategyParams { reuse_neighbors: true, ..Default::default() };
+        let lb = Diffusion::communication(params);
+        for round in 0..3 {
+            let before = crate::model::evaluate_mapping(&inst, &inst.mapping);
+            let asg = lb.rebalance(&inst);
+            let after = crate::model::evaluate_mapping(&inst, &asg.mapping);
+            assert!(
+                after.max_avg_node <= before.max_avg_node + 1e-9,
+                "round {round}: {} -> {}",
+                before.max_avg_node,
+                after.max_avg_node
+            );
+            inst.mapping = asg.mapping;
+            crate::apps::stencil::inject_noise(&mut inst, 0.2, 100 + round);
+        }
+    }
+
+    #[test]
+    fn sfc_variant_end_to_end() {
+        let inst = stencil_instance(24, 4, 4, 0.4, 5);
+        let params = StrategyParams { sfc_window: 6, ..Default::default() };
+        let lb = Diffusion::coordinate(params);
+        let before = crate::model::evaluate_mapping(&inst, &inst.mapping);
+        let after = crate::model::evaluate_mapping(&inst, &lb.rebalance(&inst).mapping);
+        assert!(after.max_avg_node < before.max_avg_node);
+    }
+}

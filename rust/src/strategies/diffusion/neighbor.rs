@@ -1,0 +1,465 @@
+//! Stage 1 — neighbor selection (paper §III-A).
+//!
+//! Builds the node neighbor graph along which diffusion may move load.
+//! Unlike topology-driven diffusion (Lieber et al.), candidates are
+//! ranked by **application communication volume** (comm variant) or by
+//! **inverse centroid distance** (coordinate variant, paper §IV), and a
+//! distributed handshake bounds every node's degree by K:
+//!
+//! 1. each node computes `l = K - confirmed` and requests its top `l/2`
+//!    unconsidered candidates (integer division — faithfully to the
+//!    paper, so `K = 1` sends no requests and degenerates to "no
+//!    neighbors", which is exactly the behaviour Table I reports);
+//! 2. a requestee rejects when `confirmed == K` or
+//!    `confirmed + holds == K`, otherwise reserves a hold and accepts;
+//! 3. the requester finalizes if it still has capacity (ack), otherwise
+//!    cancels and the hold is released.
+//!
+//! The handshake here is executed round-synchronously and
+//! deterministically; `simnet::protocol` runs the identical state
+//! machine over real message channels and the integration tests assert
+//! both produce the same pairings.
+
+use crate::model::Instance;
+
+/// Symmetric node neighbor graph produced by stage 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NeighborGraph {
+    pub adj: Vec<Vec<u32>>,
+}
+
+impl NeighborGraph {
+    pub fn n(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).max().unwrap_or(0)
+    }
+
+    pub fn is_symmetric(&self) -> bool {
+        self.adj.iter().enumerate().all(|(i, nbrs)| {
+            nbrs.iter().all(|&j| self.adj[j as usize].contains(&(i as u32)))
+        })
+    }
+}
+
+/// Candidate preference lists: for every node, peers in descending
+/// desirability (the order requests go out in).
+pub type Candidates = Vec<Vec<u32>>;
+
+/// Comm variant: rank peers by inter-node communication volume,
+/// descending. Nodes we actually communicate with come first (that
+/// prefix is what keeps the variant scalable — paper §IV note); when K
+/// exceeds the communication degree, zero-communication nodes follow,
+/// closest node-id first — Table I's K=8 behaviour, where "a node may
+/// choose to migrate objects to a neighbor with which it has no
+/// communication in an attempt to distribute load".
+pub fn comm_candidates(inst: &Instance, node_map: &[u32]) -> Candidates {
+    let n_nodes = inst.topo.n_nodes;
+    let traffic = inst.graph.group_traffic_dense(node_map, n_nodes);
+    (0..n_nodes)
+        .map(|i| {
+            let row = &traffic[i * n_nodes..(i + 1) * n_nodes];
+            let mut peers: Vec<(u32, f64)> = Vec::with_capacity(n_nodes - 1);
+            let mut rest: Vec<u32> = Vec::new();
+            for (j, &w) in row.iter().enumerate() {
+                if j == i {
+                    continue;
+                }
+                if w > 0.0 {
+                    peers.push((j as u32, w));
+                } else {
+                    rest.push(j as u32);
+                }
+            }
+            // descending volume, id tiebreak for determinism
+            peers.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            rest.sort_by_key(|&j| {
+                let d = (i as i64 - j as i64).unsigned_abs();
+                (d.min(n_nodes as u64 - d), j)
+            });
+            let mut list: Vec<u32> = peers.into_iter().map(|(j, _)| j).collect();
+            list.extend(rest);
+            list
+        })
+        .collect()
+}
+
+/// Space-filling-curve candidate construction for the coordinate
+/// variant — the paper's §VII future-work item: instead of every node
+/// sorting ALL peers by centroid distance (quadratic), nodes are
+/// ordered along a Morton (Z-order) curve over their centroids and each
+/// node considers a window of curve neighbors, sorted by true distance.
+/// O(n log n) total, and the window preserves spatial adjacency well
+/// enough that the handshake produces near-identical neighborhoods
+/// (property-tested against the brute-force candidates).
+pub fn coord_candidates_sfc(inst: &Instance, node_map: &[u32], window: usize) -> Candidates {
+    let n_nodes = inst.topo.n_nodes;
+    let centroids = centroids_of(inst, node_map, n_nodes);
+    // normalize to 16-bit grid, interleave to Morton keys
+    let (mut lo, mut hi) = ([f64::MAX; 2], [f64::MIN; 2]);
+    for c in &centroids {
+        for d in 0..2 {
+            lo[d] = lo[d].min(c[d]);
+            hi[d] = hi[d].max(c[d]);
+        }
+    }
+    let scale = |v: f64, d: usize| -> u32 {
+        let span = (hi[d] - lo[d]).max(1e-12);
+        (((v - lo[d]) / span) * 65535.0) as u32
+    };
+    let mut order: Vec<(u64, u32)> = centroids
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (morton2(scale(c[0], 0), scale(c[1], 1)), i as u32))
+        .collect();
+    order.sort_unstable();
+    let pos_of: Vec<usize> = {
+        let mut pos = vec![0usize; n_nodes];
+        for (rank, &(_, i)) in order.iter().enumerate() {
+            pos[i as usize] = rank;
+        }
+        pos
+    };
+    (0..n_nodes)
+        .map(|i| {
+            let p = pos_of[i];
+            let from = p.saturating_sub(window);
+            let to = (p + window + 1).min(n_nodes);
+            let mut peers: Vec<(u32, f64)> = order[from..to]
+                .iter()
+                .map(|&(_, j)| j)
+                .filter(|&j| j != i as u32)
+                .map(|j| {
+                    let dx = centroids[i][0] - centroids[j as usize][0];
+                    let dy = centroids[i][1] - centroids[j as usize][1];
+                    (j, dx * dx + dy * dy)
+                })
+                .collect();
+            peers.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            peers.into_iter().map(|(j, _)| j).collect()
+        })
+        .collect()
+}
+
+/// Interleave two 16-bit values into a Morton key.
+fn morton2(x: u32, y: u32) -> u64 {
+    fn spread(mut v: u64) -> u64 {
+        v &= 0xFFFF;
+        v = (v | (v << 8)) & 0x00FF00FF;
+        v = (v | (v << 4)) & 0x0F0F0F0F;
+        v = (v | (v << 2)) & 0x33333333;
+        v = (v | (v << 1)) & 0x55555555;
+        v
+    }
+    spread(x as u64) | (spread(y as u64) << 1)
+}
+
+fn centroids_of(inst: &Instance, node_map: &[u32], n_nodes: usize) -> Vec<[f64; 2]> {
+    let mut sums = vec![[0.0f64; 2]; n_nodes];
+    let mut counts = vec![0usize; n_nodes];
+    for (o, &node) in node_map.iter().enumerate() {
+        sums[node as usize][0] += inst.coords[o][0];
+        sums[node as usize][1] += inst.coords[o][1];
+        counts[node as usize] += 1;
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(s, &c)| {
+            if c == 0 {
+                [f64::MAX / 4.0, f64::MAX / 4.0]
+            } else {
+                [s[0] / c as f64, s[1] / c as f64]
+            }
+        })
+        .collect()
+}
+
+/// Coordinate variant: rank ALL peers by centroid distance, ascending.
+/// Quadratic in node count — reproduced as such; the paper flags this
+/// as the variant's scalability limit (§IV, §VII).
+pub fn coord_candidates(inst: &Instance, node_map: &[u32]) -> Candidates {
+    let n_nodes = inst.topo.n_nodes;
+    // node_map is a PE-level mapping's node view; recompute centroids
+    // from object coords.
+    let centroids = centroids_of(inst, node_map, n_nodes);
+    (0..n_nodes)
+        .map(|i| {
+            let mut peers: Vec<(u32, f64)> = (0..n_nodes as u32)
+                .filter(|&j| j != i as u32)
+                .map(|j| {
+                    let dx = centroids[i][0] - centroids[j as usize][0];
+                    let dy = centroids[i][1] - centroids[j as usize][1];
+                    (j, dx * dx + dy * dy)
+                })
+                .collect();
+            peers.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            peers.into_iter().map(|(j, _)| j).collect()
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone, Default)]
+struct NodeState {
+    confirmed: Vec<u32>,
+    holds: usize,
+    cursor: usize,
+    /// whether the cursor has already wrapped once (one retry sweep).
+    wrapped: bool,
+}
+
+/// Run the handshake. `k` is the desired degree; `max_rounds` bounds the
+/// iteration (paper step 5).
+pub fn select_neighbors(candidates: &Candidates, k: usize, max_rounds: usize) -> NeighborGraph {
+    let n = candidates.len();
+    let mut st: Vec<NodeState> = vec![NodeState::default(); n];
+
+    for _round in 0..max_rounds {
+        // Phase A: emit requests. l/2 with integer division, per paper.
+        let mut requests: Vec<(u32, u32)> = Vec::new(); // (from, to)
+        for i in 0..n {
+            let confirmed = st[i].confirmed.len();
+            if confirmed >= k {
+                continue;
+            }
+            let l = k - confirmed;
+            // Integer division, per the paper. A node that already holds
+            // some neighbors but is stuck at l = 1 (so l/2 = 0) would
+            // stall forever; let it send a single request — still within
+            // the paper's "prevent unnecessarily many requests" intent.
+            // A node with NO progress and l = 1 (i.e. K = 1) stays
+            // faithful to the l/2 rule and sends nothing (Table I).
+            let want = if l / 2 == 0 && confirmed > 0 { 1 } else { l / 2 };
+            let mut sent: Vec<u32> = Vec::new();
+            while sent.len() < want {
+                let cand = loop {
+                    if st[i].cursor >= candidates[i].len() {
+                        if st[i].wrapped || candidates[i].is_empty() {
+                            break None;
+                        }
+                        st[i].wrapped = true;
+                        st[i].cursor = 0;
+                        continue;
+                    }
+                    let c = candidates[i][st[i].cursor];
+                    st[i].cursor += 1;
+                    // never the same peer twice in one round (a wrap can
+                    // revisit the cursor position)
+                    if !st[i].confirmed.contains(&c) && !sent.contains(&c) {
+                        break Some(c);
+                    }
+                };
+                match cand {
+                    Some(c) => {
+                        requests.push((i as u32, c));
+                        sent.push(c);
+                    }
+                    None => break,
+                }
+            }
+        }
+        if requests.is_empty() {
+            break;
+        }
+
+        // Phase B: responses. Deterministic order by (to, from) — the
+        // message-arrival order of the round-synchronous network.
+        requests.sort_by_key(|&(from, to)| (to, from));
+        let mut accepts: Vec<(u32, u32)> = Vec::new(); // (responder, requester)
+        let mut held_for: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(from, to) in &requests {
+            let s = &mut st[to as usize];
+            let full = s.confirmed.len() >= k || s.confirmed.len() + s.holds >= k;
+            if full || s.confirmed.contains(&from) {
+                continue; // reject
+            }
+            s.holds += 1;
+            held_for[to as usize].push(from);
+            accepts.push((to, from));
+        }
+
+        // Phase C-1: requester decisions. Each requester evaluates with
+        // its own holds as they stood after phase B (paper step 4: "its
+        // neighbor count and holds have not exceeded K in the meantime")
+        // — matching the truly concurrent execution, where acks have not
+        // been exchanged yet (simnet::protocol mirrors this exactly).
+        let holds_b: Vec<usize> = st.iter().map(|s| s.holds).collect();
+        accepts.sort_by_key(|&(resp, req)| (req, resp));
+        let mut acks: Vec<(u32, u32, bool)> = Vec::new();
+        for &(resp, req) in &accepts {
+            // a hold we issued to `resp` itself is the same prospective
+            // pairing, so it does not count against our capacity —
+            // without this, mutual requests livelock at the boundary
+            let same_pair = usize::from(held_for[req as usize].contains(&resp));
+            let s = &mut st[req as usize];
+            let confirm = s.confirmed.len() + holds_b[req as usize] - same_pair < k
+                && !s.confirmed.contains(&resp);
+            if confirm {
+                s.confirmed.push(resp);
+            }
+            acks.push((resp, req, confirm));
+        }
+        // Phase C-2: responders process acks; a hold is released either
+        // way and converts into a confirmed slot on confirm.
+        acks.sort_by_key(|&(resp, req, _)| (resp, req));
+        for &(resp, req, confirm) in &acks {
+            let s = &mut st[resp as usize];
+            s.holds -= 1;
+            if confirm && s.confirmed.len() < k && !s.confirmed.contains(&req) {
+                s.confirmed.push(req);
+            }
+        }
+
+        if st.iter().all(|s| s.confirmed.len() >= k) {
+            break;
+        }
+    }
+
+    let mut adj: Vec<Vec<u32>> = st.into_iter().map(|s| s.confirmed).collect();
+    for a in &mut adj {
+        a.sort_unstable();
+    }
+    NeighborGraph { adj }
+}
+
+/// Convenience: candidates + handshake for the given variant inputs.
+pub fn build(candidates: &Candidates, k: usize, max_rounds: usize) -> NeighborGraph {
+    select_neighbors(candidates, k, max_rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// Ring candidates: node i prefers i-1, i+1 (wrapping), then the
+    /// rest by distance.
+    fn ring_candidates(n: usize) -> Candidates {
+        (0..n)
+            .map(|i| {
+                let mut peers: Vec<(u32, usize)> = (0..n)
+                    .filter(|&j| j != i)
+                    .map(|j| {
+                        let d = (i as isize - j as isize).unsigned_abs();
+                        (j as u32, d.min(n - d))
+                    })
+                    .collect();
+                peers.sort_by_key(|&(j, d)| (d, j));
+                peers.into_iter().map(|(j, _)| j).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn k1_sends_no_requests_per_paper() {
+        // l/2 = 0 with integer division: K=1 degenerates to no pairings
+        // (the behaviour behind Table I's 4.9 max/avg at K=1).
+        let g = select_neighbors(&ring_candidates(8), 1, 32);
+        assert!(g.adj.iter().all(|a| a.is_empty()));
+    }
+
+    #[test]
+    fn k2_ring_pairs_up_symmetric() {
+        let g = select_neighbors(&ring_candidates(8), 2, 32);
+        assert!(g.is_symmetric());
+        assert!(g.max_degree() <= 2);
+        // every node should reach full degree on a ring with K=2
+        assert!(g.adj.iter().all(|a| a.len() == 2), "{:?}", g.adj);
+    }
+
+    #[test]
+    fn degree_never_exceeds_k() {
+        for k in [2, 3, 4, 8] {
+            let g = select_neighbors(&ring_candidates(16), k, 64);
+            assert!(g.max_degree() <= k, "k={k} got {}", g.max_degree());
+            assert!(g.is_symmetric());
+        }
+    }
+
+    #[test]
+    fn fewer_candidates_than_k() {
+        // 3 nodes, K=8: degree capped by available peers.
+        let g = select_neighbors(&ring_candidates(3), 8, 64);
+        assert!(g.is_symmetric());
+        assert!(g.max_degree() <= 2);
+    }
+
+    #[test]
+    fn handshake_properties_random_candidates() {
+        prop::check("handshake degree/symmetry", 60, |g| {
+            let n = g.usize_in(2, 24);
+            let k = g.usize_in(2, 8);
+            // random preference lists
+            let mut cands: Candidates = Vec::new();
+            for i in 0..n {
+                let mut peers: Vec<u32> =
+                    (0..n as u32).filter(|&j| j != i as u32).collect();
+                g.rng.shuffle(&mut peers);
+                cands.push(peers);
+            }
+            let graph = select_neighbors(&cands, k, 64);
+            prop::assert_that(graph.is_symmetric(), "not symmetric")?;
+            prop::assert_that(graph.max_degree() <= k, format!("degree > {k}"))?;
+            prop::assert_that(
+                graph.adj.iter().all(|a| {
+                    let mut s = a.clone();
+                    s.dedup();
+                    s.len() == a.len()
+                }),
+                "duplicate neighbor",
+            )
+        });
+    }
+}
+
+#[cfg(test)]
+mod sfc_tests {
+    use super::*;
+    use crate::strategies::diffusion::tests::stencil_instance;
+    use crate::util::prop;
+
+    #[test]
+    fn morton_keys_preserve_quadrants() {
+        // points in the same quadrant get closer keys than across
+        assert!(morton2(0, 0) < morton2(65535, 65535));
+        assert!(morton2(100, 100).abs_diff(morton2(101, 101)) < morton2(100, 100).abs_diff(morton2(60000, 60000)));
+    }
+
+    #[test]
+    fn sfc_candidates_are_spatially_local() {
+        let inst = stencil_instance(32, 4, 4, 0.0, 1);
+        let node_map = inst.node_mapping();
+        let brute = coord_candidates(&inst, &node_map);
+        let sfc = coord_candidates_sfc(&inst, &node_map, 6);
+        // the SFC front-of-list should overlap the brute-force
+        // front-of-list heavily (same spatial neighbors)
+        for i in 0..16 {
+            let b: std::collections::HashSet<u32> = brute[i].iter().take(4).cloned().collect();
+            let s: std::collections::HashSet<u32> = sfc[i].iter().take(4).cloned().collect();
+            let overlap = b.intersection(&s).count();
+            assert!(overlap >= 2, "node {i}: brute {b:?} vs sfc {s:?}");
+        }
+    }
+
+    #[test]
+    fn sfc_handshake_quality_close_to_brute_force() {
+        prop::check("sfc vs brute handshake", 10, |g| {
+            let side = 16 + 8 * g.usize_in(0, 2);
+            let inst = stencil_instance(side, 4, 4, 0.4, g.seed);
+            let node_map = inst.node_mapping();
+            let brute = select_neighbors(&coord_candidates(&inst, &node_map), 4, 32);
+            let sfc = select_neighbors(&coord_candidates_sfc(&inst, &node_map, 8), 4, 32);
+            prop::assert_that(sfc.is_symmetric(), "sfc not symmetric")?;
+            prop::assert_that(sfc.max_degree() <= 4, "sfc degree > K")?;
+            // within the window the average degree should be comparable
+            let deg = |g: &NeighborGraph| {
+                g.adj.iter().map(|a| a.len()).sum::<usize>() as f64 / g.n() as f64
+            };
+            prop::assert_that(
+                deg(&sfc) + 1.0 >= deg(&brute) - 1.0,
+                format!("sfc degree {} far below brute {}", deg(&sfc), deg(&brute)),
+            )
+        });
+    }
+}

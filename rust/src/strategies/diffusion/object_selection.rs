@@ -1,0 +1,386 @@
+//! Stage 3 — object selection (paper §III-C).
+//!
+//! Converts the virtual per-edge quotas into concrete object
+//! migrations while preserving communication locality:
+//!
+//! * **Comm variant:** for neighbor `n`, objects leave in decreasing
+//!   order of bytes communicated *with n*; whenever an object migrates,
+//!   the communication picture of every object that talks to it is
+//!   updated (its edges now point at the new node), so later picks see
+//!   the evolving locality — this is what lets a node sanely migrate
+//!   "more objects than initially communicated with a given neighbor".
+//! * **Coord variant (paper §IV):** objects leave in increasing distance
+//!   to the neighbor's centroid, and both centroids are updated as
+//!   objects move.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::virtual_lb::Quotas;
+use crate::model::Instance;
+
+/// Max-heap entry with f64 priority (BinaryHeap needs Ord).
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    /// primary: larger first
+    key: f64,
+    /// secondary: smaller first
+    tie: f64,
+    obj: u32,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key
+            .partial_cmp(&other.key)
+            .unwrap_or(Ordering::Equal)
+            .then(other.tie.partial_cmp(&self.tie).unwrap_or(Ordering::Equal))
+            .then(other.obj.cmp(&self.obj))
+    }
+}
+
+/// Per-node neighbor quotas sorted descending (largest transfer first).
+/// Residual quotas below 1% of the average node load are noise from the
+/// fixed-point tolerance and are dropped — realizing them would migrate
+/// an object per neighbor pair for no balance benefit.
+fn sorted_quota(quotas: &Quotas, i: usize, floor: f64) -> Vec<(u32, f64)> {
+    let mut q: Vec<(u32, f64)> =
+        quotas.flows[i].iter().filter(|(_, &a)| a >= floor).map(|(&j, &a)| (j, a)).collect();
+    q.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    q
+}
+
+/// Quota noise floor for an instance: 1% of the average node load.
+fn quota_floor(inst: &Instance) -> f64 {
+    0.01 * inst.loads.iter().sum::<f64>() / inst.topo.n_nodes.max(1) as f64
+}
+
+/// Should `o` (with `load`) migrate against `remaining` quota?
+/// Allows overshooting the quota by up to `overfill * load` so a quota
+/// slightly smaller than every object still moves something.
+#[inline]
+fn fits(load: f64, remaining: f64, overfill: f64) -> bool {
+    remaining > 0.0 && load * (1.0 - overfill) <= remaining
+}
+
+/// Comm-variant selection. Mutates `node_map` (object -> node) in place
+/// and returns the number of migrations performed.
+pub fn select_comm(
+    inst: &Instance,
+    node_map: &mut [u32],
+    quotas: &Quotas,
+    overfill: f64,
+) -> usize {
+    let n_nodes = inst.topo.n_nodes;
+    let floor = quota_floor(inst);
+    let mut moved = vec![false; inst.n_objects()];
+    let mut migrations = 0;
+    // objects-by-node index built once (perf: avoids an O(n_objects)
+    // scan per (node, neighbor) pair — see EXPERIMENTS.md §Perf)
+    let mut by_node: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+    for (o, &nm) in node_map.iter().enumerate() {
+        by_node[nm as usize].push(o as u32);
+    }
+
+    for i in 0..n_nodes {
+        let targets = sorted_quota(quotas, i, floor);
+        if targets.is_empty() {
+            continue;
+        }
+        // Pool of objects currently on node i (excluding arrivals from
+        // earlier nodes this round — single-hop at object granularity).
+        let pool: Vec<u32> = by_node[i]
+            .iter()
+            .cloned()
+            .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize])
+            .collect();
+
+        for (j, quota) in targets {
+            let mut remaining = quota;
+            // bytes each pooled object exchanges with node j right now
+            let mut bytes_to_j: HashMap<u32, f64> = HashMap::with_capacity(pool.len());
+            let mut heap = BinaryHeap::with_capacity(pool.len());
+            for &o in &pool {
+                if moved[o as usize] || node_map[o as usize] != i as u32 {
+                    continue;
+                }
+                let mut bj = 0.0;
+                let mut local = 0.0;
+                for (&p, &w) in inst
+                    .graph
+                    .neighbors(o as usize)
+                    .iter()
+                    .zip(inst.graph.weights(o as usize))
+                {
+                    let pn = node_map[p as usize];
+                    if pn == j {
+                        bj += w;
+                    } else if pn == i as u32 {
+                        local += w;
+                    }
+                }
+                bytes_to_j.insert(o, bj);
+                heap.push(Entry { key: bj, tie: local, obj: o });
+            }
+
+            while remaining > 1e-12 {
+                let Some(top) = heap.pop() else { break };
+                let o = top.obj;
+                if moved[o as usize] || node_map[o as usize] != i as u32 {
+                    continue;
+                }
+                // lazy key revalidation: migrations of earlier objects
+                // may have raised this object's bytes-to-j.
+                let cur = bytes_to_j[&o];
+                if (cur - top.key).abs() > 1e-9 {
+                    heap.push(Entry { key: cur, ..top });
+                    continue;
+                }
+                let load = inst.loads[o as usize];
+                if !fits(load, remaining, overfill) {
+                    continue; // skip; a lighter object may still fit
+                }
+                // Migrate o: i -> j.
+                node_map[o as usize] = j;
+                moved[o as usize] = true;
+                migrations += 1;
+                remaining -= load;
+                // Constraint 2: peers of o now communicate with node j.
+                for (&p, &w) in inst
+                    .graph
+                    .neighbors(o as usize)
+                    .iter()
+                    .zip(inst.graph.weights(o as usize))
+                {
+                    if node_map[p as usize] == i as u32 && !moved[p as usize] {
+                        if let Some(b) = bytes_to_j.get_mut(&p) {
+                            *b += w;
+                            heap.push(Entry { key: *b, tie: 0.0, obj: p });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    migrations
+}
+
+/// Coord-variant selection: distance to the target node's centroid,
+/// centroids updated incrementally as objects move.
+pub fn select_coord(
+    inst: &Instance,
+    node_map: &mut [u32],
+    quotas: &Quotas,
+    overfill: f64,
+) -> usize {
+    let n_nodes = inst.topo.n_nodes;
+    // centroid state: sums + counts per node
+    let mut sums = vec![[0.0f64; 2]; n_nodes];
+    let mut counts = vec![0usize; n_nodes];
+    for (o, &node) in node_map.iter().enumerate() {
+        sums[node as usize][0] += inst.coords[o][0];
+        sums[node as usize][1] += inst.coords[o][1];
+        counts[node as usize] += 1;
+    }
+    let centroid = |sums: &Vec<[f64; 2]>, counts: &Vec<usize>, n: usize| -> [f64; 2] {
+        if counts[n] == 0 {
+            [0.0, 0.0]
+        } else {
+            [sums[n][0] / counts[n] as f64, sums[n][1] / counts[n] as f64]
+        }
+    };
+    let dist2 = |a: [f64; 2], b: [f64; 2]| {
+        let dx = a[0] - b[0];
+        let dy = a[1] - b[1];
+        dx * dx + dy * dy
+    };
+
+    let floor = quota_floor(inst);
+    let mut moved = vec![false; inst.n_objects()];
+    let mut migrations = 0;
+    let mut by_node: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+    for (o, &nm) in node_map.iter().enumerate() {
+        by_node[nm as usize].push(o as u32);
+    }
+
+    for i in 0..n_nodes {
+        let targets = sorted_quota(quotas, i, floor);
+        if targets.is_empty() {
+            continue;
+        }
+        let pool: Vec<u32> = by_node[i]
+            .iter()
+            .cloned()
+            .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize])
+            .collect();
+
+        for (j, quota) in targets {
+            let mut remaining = quota;
+            let mut heap = BinaryHeap::with_capacity(pool.len());
+            let cj = centroid(&sums, &counts, j as usize);
+            for &o in &pool {
+                if moved[o as usize] || node_map[o as usize] != i as u32 {
+                    continue;
+                }
+                // max-heap: closer = higher priority = larger key
+                heap.push(Entry { key: -dist2(inst.coords[o as usize], cj), tie: 0.0, obj: o });
+            }
+            // bounded revalidation so a drifting centroid cannot loop us
+            let mut revalidations = 4 * pool.len() + 16;
+            while remaining > 1e-12 {
+                let Some(top) = heap.pop() else { break };
+                let o = top.obj;
+                if moved[o as usize] || node_map[o as usize] != i as u32 {
+                    continue;
+                }
+                let cj = centroid(&sums, &counts, j as usize);
+                let cur = -dist2(inst.coords[o as usize], cj);
+                if revalidations > 0 && (cur - top.key).abs() > 1e-9 {
+                    revalidations -= 1;
+                    heap.push(Entry { key: cur, ..top });
+                    continue;
+                }
+                let load = inst.loads[o as usize];
+                if !fits(load, remaining, overfill) {
+                    continue;
+                }
+                node_map[o as usize] = j;
+                moved[o as usize] = true;
+                migrations += 1;
+                remaining -= load;
+                let c = inst.coords[o as usize];
+                sums[i][0] -= c[0];
+                sums[i][1] -= c[1];
+                counts[i] -= 1;
+                sums[j as usize][0] += c[0];
+                sums[j as usize][1] += c[1];
+                counts[j as usize] += 1;
+            }
+        }
+    }
+    migrations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CommGraph, Instance, Topology};
+    use crate::strategies::diffusion::virtual_lb::Quotas;
+
+    /// 8 objects: 0-3 on node 0 (chain), 4-7 on node 1 (chain), with a
+    /// bridge edge 3-4. Unit loads.
+    fn two_node_instance() -> Instance {
+        let edges = vec![
+            (0, 1, 10.0),
+            (1, 2, 10.0),
+            (2, 3, 10.0),
+            (3, 4, 50.0), // bridge: object 3 talks a lot to node 1
+            (4, 5, 10.0),
+            (5, 6, 10.0),
+            (6, 7, 10.0),
+        ];
+        let graph = CommGraph::from_edges(8, &edges);
+        let coords: Vec<[f64; 2]> = (0..8).map(|i| [i as f64, 0.0]).collect();
+        Instance::new(
+            vec![1.0; 8],
+            coords,
+            graph,
+            vec![0, 0, 0, 0, 1, 1, 1, 1],
+            Topology::flat(2),
+        )
+    }
+
+    fn quota_0_to_1(amount: f64) -> Quotas {
+        let mut q = Quotas::empty(2);
+        q.flows[0].insert(1, amount);
+        q
+    }
+
+    #[test]
+    fn comm_picks_highest_bytes_first() {
+        let inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        let n = select_comm(&inst, &mut map, &quota_0_to_1(1.0), 0.5);
+        assert_eq!(n, 1);
+        // object 3 has 50 bytes to node 1 — must be chosen first.
+        assert_eq!(map[3], 1);
+    }
+
+    #[test]
+    fn comm_updates_patterns_after_each_pick() {
+        let inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        let n = select_comm(&inst, &mut map, &quota_0_to_1(2.0), 0.5);
+        assert_eq!(n, 2);
+        // after 3 moves, object 2 (edge 2-3 = 10 bytes) becomes the top
+        // candidate even though it initially had 0 bytes to node 1.
+        assert_eq!(map[3], 1);
+        assert_eq!(map[2], 1);
+        assert_eq!(map[1], 0);
+    }
+
+    #[test]
+    fn quota_respected_with_overfill() {
+        let inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        // quota 2.5 with overfill 0.5: loads are 1.0, so up to 3 objects
+        // (2 full + one at remaining 0.5 >= load*0.5).
+        let n = select_comm(&inst, &mut map, &quota_0_to_1(2.5), 0.5);
+        assert_eq!(n, 3);
+        // zero overfill: exactly 2
+        let mut map2 = inst.node_mapping();
+        let n2 = select_comm(&inst, &mut map2, &quota_0_to_1(2.5), 0.0);
+        assert_eq!(n2, 2);
+    }
+
+    #[test]
+    fn migrations_only_along_quota_edges() {
+        let inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        select_comm(&inst, &mut map, &quota_0_to_1(3.0), 0.5);
+        for (o, &nm) in map.iter().enumerate() {
+            let orig = inst.node_mapping()[o];
+            assert!(nm == orig || (orig == 0 && nm == 1), "obj {o} moved {orig}->{nm}");
+        }
+    }
+
+    #[test]
+    fn coord_picks_closest_to_target_centroid() {
+        let inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        let n = select_coord(&inst, &mut map, &quota_0_to_1(1.0), 0.5);
+        assert_eq!(n, 1);
+        // node 1 centroid is at x=5.5; object 3 (x=3) is node 0's closest
+        assert_eq!(map[3], 1);
+        assert_eq!(map[0], 0);
+    }
+
+    #[test]
+    fn coord_moves_boundary_objects_in_order() {
+        let inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        let n = select_coord(&inst, &mut map, &quota_0_to_1(3.0), 0.5);
+        assert_eq!(n, 3);
+        assert_eq!(&map[..8], &[0, 1, 1, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn zero_quota_moves_nothing() {
+        let inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        assert_eq!(select_comm(&inst, &mut map, &Quotas::empty(2), 0.5), 0);
+        assert_eq!(select_coord(&inst, &mut map, &Quotas::empty(2), 0.5), 0);
+        assert_eq!(map, inst.node_mapping());
+    }
+}

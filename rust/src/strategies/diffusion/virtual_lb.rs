@@ -1,0 +1,257 @@
+//! Stage 2 — virtual load balancing (paper §III-B).
+//!
+//! First-order diffusion (Cybenko '89; Hu & Blake '99) restricted to the
+//! stage-1 neighbor graph, exchanging only load *magnitudes*: nodes
+//! iteratively plan transfers `alpha * (L_i - L_j)` along edges until
+//! every neighborhood's load spread falls below a threshold, under the
+//! paper's **single-hop constraint** — load received virtually is never
+//! forwarded, so real objects later move at most one edge from their
+//! home node. Output: net per-edge send quotas.
+
+use std::collections::HashMap;
+
+use super::neighbor::NeighborGraph;
+
+/// Net planned transfers: `flows[i]` maps neighbor j to the (positive)
+/// amount node i should send to j.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quotas {
+    pub flows: Vec<HashMap<u32, f64>>,
+    /// Iterations the fixed-point ran for (reported as strategy cost).
+    pub iterations: usize,
+}
+
+impl Quotas {
+    pub fn empty(n: usize) -> Quotas {
+        Quotas { flows: vec![HashMap::new(); n], iterations: 0 }
+    }
+
+    /// Total load node i is asked to send.
+    pub fn outgoing(&self, i: usize) -> f64 {
+        self.flows[i].values().sum()
+    }
+
+    /// Resulting virtual load vector when all quotas execute.
+    pub fn apply(&self, loads: &[f64]) -> Vec<f64> {
+        let mut out = loads.to_vec();
+        for (i, flow) in self.flows.iter().enumerate() {
+            for (&j, &amt) in flow {
+                out[i] -= amt;
+                out[j as usize] += amt;
+            }
+        }
+        out
+    }
+}
+
+/// Run the fixed-point. `tol` is the neighborhood relative-spread
+/// threshold; iteration stops when every neighborhood satisfies it (or
+/// `max_iters`).
+pub fn virtual_balance(
+    neigh: &NeighborGraph,
+    loads: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> Quotas {
+    let n = loads.len();
+    assert_eq!(neigh.n(), n);
+    let global_avg = loads.iter().sum::<f64>() / n.max(1) as f64;
+    if global_avg <= 0.0 {
+        return Quotas::empty(n);
+    }
+
+    // First-order scheme constant: 1/(max_degree + 1) guarantees
+    // convergence on arbitrary neighbor graphs (Cybenko).
+    let alpha = 1.0 / (neigh.max_degree() as f64 + 1.0);
+
+    // own[i]: load originating at i still held at i (may be sent).
+    // recv[i]: load received virtually (may NOT be forwarded).
+    let mut own = loads.to_vec();
+    let mut recv = vec![0.0; n];
+    // net signed flow per ordered pair (i, j) with i < j: >0 means i->j.
+    let mut net: HashMap<(u32, u32), f64> = HashMap::new();
+    let mut iterations = 0;
+
+    for iter in 0..max_iters {
+        iterations = iter + 1;
+        let cur: Vec<f64> = own.iter().zip(&recv).map(|(o, r)| o + r).collect();
+
+        // Plan this sweep's sends; cap each node's total send at its
+        // remaining own load (single-hop constraint).
+        let mut sends: Vec<(usize, u32, f64)> = Vec::new();
+        for i in 0..n {
+            let mut want = 0.0;
+            let mut per: Vec<(u32, f64)> = Vec::new();
+            for &j in &neigh.adj[i] {
+                let diff = cur[i] - cur[j as usize];
+                if diff > 0.0 {
+                    let amt = alpha * diff;
+                    per.push((j, amt));
+                    want += amt;
+                }
+            }
+            if want <= 0.0 {
+                continue;
+            }
+            let scale = if want > own[i] { own[i] / want } else { 1.0 };
+            if scale <= 0.0 {
+                continue;
+            }
+            for (j, amt) in per {
+                sends.push((i, j, amt * scale));
+            }
+        }
+
+        let mut moved = 0.0;
+        for (i, j, amt) in sends {
+            own[i] -= amt;
+            recv[j as usize] += amt;
+            let key = if (i as u32) < j { (i as u32, j) } else { (j, i as u32) };
+            let sign = if (i as u32) < j { 1.0 } else { -1.0 };
+            *net.entry(key).or_insert(0.0) += sign * amt;
+            moved += amt;
+        }
+
+        if converged(neigh, &own, &recv, global_avg, tol) || moved <= tol * global_avg * 1e-3 {
+            break;
+        }
+    }
+
+    // Fold signed pair flows into per-node positive send quotas. Cancel
+    // opposing flows so object selection never ping-pongs objects.
+    let mut flows: Vec<HashMap<u32, f64>> = vec![HashMap::new(); n];
+    for ((a, b), f) in net {
+        if f > 1e-12 {
+            flows[a as usize].insert(b, f);
+        } else if f < -1e-12 {
+            flows[b as usize].insert(a, -f);
+        }
+    }
+    Quotas { flows, iterations }
+}
+
+/// Every neighborhood (node + its neighbors) has relative load spread
+/// below `tol` (measured against the global average so empty-ish
+/// neighborhoods don't divide by ~0).
+fn converged(neigh: &NeighborGraph, own: &[f64], recv: &[f64], global_avg: f64, tol: f64) -> bool {
+    let cur = |i: usize| own[i] + recv[i];
+    for i in 0..neigh.n() {
+        if neigh.adj[i].is_empty() {
+            continue;
+        }
+        let mut lo = cur(i);
+        let mut hi = cur(i);
+        for &j in &neigh.adj[i] {
+            lo = lo.min(cur(j as usize));
+            hi = hi.max(cur(j as usize));
+        }
+        if (hi - lo) / global_avg > tol {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::diffusion::neighbor::NeighborGraph;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn ring(n: usize, k: usize) -> NeighborGraph {
+        // symmetric ring where each node connects to k/2 hops each side
+        let h = (k / 2).max(1);
+        let adj = (0..n)
+            .map(|i| {
+                let mut a: Vec<u32> = Vec::new();
+                for d in 1..=h {
+                    a.push(((i + d) % n) as u32);
+                    a.push(((i + n - d) % n) as u32);
+                }
+                a.sort_unstable();
+                a.dedup();
+                a
+            })
+            .collect();
+        NeighborGraph { adj }
+    }
+
+    #[test]
+    fn balances_single_hotspot_with_enough_neighbors() {
+        let n = 16;
+        let mut loads = vec![1.0; n];
+        loads[0] = 10.0;
+        let g = ring(n, 4);
+        let q = virtual_balance(&g, &loads, 0.05, 500);
+        let out = q.apply(&loads);
+        let avg = out.iter().sum::<f64>() / n as f64;
+        let max = out.iter().cloned().fold(0.0, f64::max);
+        // single-hop: node 0 can only shed to its 4 neighbors, so the
+        // neighborhood equalizes around (10+4)/5.
+        assert!(max / avg < 2.5, "max/avg {}", max / avg);
+        // conservation
+        let total: f64 = out.iter().sum();
+        assert!((total - loads.iter().sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_neighbors_no_flows() {
+        let g = NeighborGraph { adj: vec![vec![], vec![]] };
+        let q = virtual_balance(&g, &[10.0, 1.0], 0.05, 100);
+        assert_eq!(q.outgoing(0), 0.0);
+        assert_eq!(q.apply(&[10.0, 1.0]), vec![10.0, 1.0]);
+    }
+
+    #[test]
+    fn quotas_only_on_edges_and_single_hop() {
+        let n = 12;
+        let mut rng = Rng::new(5);
+        let loads: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 8.0)).collect();
+        let g = ring(n, 2);
+        let q = virtual_balance(&g, &loads, 0.02, 500);
+        for i in 0..n {
+            for &j in q.flows[i].keys() {
+                assert!(g.adj[i].contains(&j), "flow on non-edge {i}->{j}");
+            }
+            // single-hop: cannot send more than original load
+            assert!(q.outgoing(i) <= loads[i] + 1e-9, "node {i} oversends");
+        }
+    }
+
+    #[test]
+    fn conservation_property() {
+        prop::check("virtual lb conserves load", 50, |g| {
+            let n = g.usize_in(2, 32);
+            let loads: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 20.0)).collect();
+            let k = g.usize_in(2, 6);
+            let graph = ring(n, k);
+            let q = virtual_balance(&graph, &loads, 0.05, 300);
+            let out = q.apply(&loads);
+            prop::assert_that(
+                out.iter().all(|&l| l >= -1e-9),
+                "negative virtual load",
+            )?;
+            prop::assert_close(out.iter().sum::<f64>(), loads.iter().sum::<f64>(), 1e-9)
+        });
+    }
+
+    #[test]
+    fn imbalance_never_worsens() {
+        prop::check("virtual lb does not worsen max/avg", 40, |g| {
+            let n = g.usize_in(3, 24);
+            let loads: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 10.0)).collect();
+            let graph = ring(n, 4);
+            let q = virtual_balance(&graph, &loads, 0.05, 300);
+            let out = q.apply(&loads);
+            let ratio = |v: &[f64]| {
+                let avg = v.iter().sum::<f64>() / v.len() as f64;
+                v.iter().cloned().fold(0.0, f64::max) / avg
+            };
+            prop::assert_that(
+                ratio(&out) <= ratio(&loads) + 1e-6,
+                format!("worsened {} -> {}", ratio(&loads), ratio(&out)),
+            )
+        });
+    }
+}

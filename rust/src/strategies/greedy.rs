@@ -1,0 +1,102 @@
+//! GreedyLB baseline: global re-assignment, heaviest object to the
+//! least-loaded PE (classic Charm++ GreedyLB). Produces near-perfect
+//! balance, ignores both locality and migration cost — the upper bound
+//! on balance quality and the lower bound on locality.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::model::{Assignment, Instance};
+use crate::strategies::LoadBalancer;
+
+pub struct Greedy;
+
+/// Min-heap entry over (load, pe).
+#[derive(Debug, Clone, Copy)]
+struct PeEntry {
+    load: f64,
+    pe: u32,
+}
+impl PartialEq for PeEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for PeEntry {}
+impl PartialOrd for PeEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PeEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want min-load first
+        other
+            .load
+            .partial_cmp(&self.load)
+            .unwrap_or(Ordering::Equal)
+            .then(other.pe.cmp(&self.pe))
+    }
+}
+
+impl LoadBalancer for Greedy {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn rebalance(&self, inst: &Instance) -> Assignment {
+        let mut order: Vec<u32> = (0..inst.n_objects() as u32).collect();
+        order.sort_by(|&a, &b| {
+            inst.loads[b as usize]
+                .partial_cmp(&inst.loads[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut heap: BinaryHeap<PeEntry> =
+            (0..inst.topo.n_pes() as u32).map(|pe| PeEntry { load: 0.0, pe }).collect();
+        let mut mapping = vec![0u32; inst.n_objects()];
+        for o in order {
+            let mut top = heap.pop().unwrap();
+            mapping[o as usize] = top.pe;
+            top.load += inst.loads[o as usize];
+            heap.push(top);
+        }
+        Assignment { mapping }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{evaluate, CommGraph, Topology};
+
+    #[test]
+    fn near_perfect_balance() {
+        let n = 64;
+        let loads: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let inst = Instance::new(
+            loads,
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            vec![0; n],
+            Topology::flat(8),
+        );
+        let asg = Greedy.rebalance(&inst);
+        let m = evaluate(&inst, &asg);
+        assert!(m.max_avg_pe < 1.1, "max/avg {}", m.max_avg_pe);
+    }
+
+    #[test]
+    fn lpt_on_equal_loads_is_round_robin_balanced() {
+        let inst = Instance::new(
+            vec![1.0; 8],
+            vec![[0.0; 2]; 8],
+            CommGraph::empty(8),
+            vec![0; 8],
+            Topology::flat(4),
+        );
+        let asg = Greedy.rebalance(&inst);
+        let loads = inst.pe_loads(&asg.mapping);
+        assert_eq!(loads, vec![2.0; 4]);
+    }
+}

@@ -1,0 +1,163 @@
+//! GreedyRefine baseline (Charm++'s GreedyRefineLB): keep objects where
+//! they are unless their PE is overloaded; shed load from overloaded
+//! PEs into a pool, then place the pool greedily onto the least-loaded
+//! PEs. Produces the best max/avg of the compared strategies at the
+//! price of locality — exactly the Table II / Fig 5-6 profile.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::model::{Assignment, Instance};
+use crate::strategies::{LoadBalancer, StrategyParams};
+
+pub struct GreedyRefine {
+    pub params: StrategyParams,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct MinPe {
+    load: f64,
+    pe: u32,
+}
+impl PartialEq for MinPe {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for MinPe {}
+impl PartialOrd for MinPe {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for MinPe {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .load
+            .partial_cmp(&self.load)
+            .unwrap_or(Ordering::Equal)
+            .then(other.pe.cmp(&self.pe))
+    }
+}
+
+impl LoadBalancer for GreedyRefine {
+    fn name(&self) -> &'static str {
+        "greedy-refine"
+    }
+
+    fn rebalance(&self, inst: &Instance) -> Assignment {
+        let n_pes = inst.topo.n_pes();
+        let mut mapping = inst.mapping.clone();
+        let mut pe_loads = inst.pe_loads(&mapping);
+        let avg: f64 = pe_loads.iter().sum::<f64>() / n_pes as f64;
+        let threshold = avg * (1.0 + self.params.refine_tolerance);
+
+        // Objects per PE, heaviest last (so pop() sheds heaviest first).
+        let mut per_pe: Vec<Vec<u32>> = vec![Vec::new(); n_pes];
+        for (o, &pe) in mapping.iter().enumerate() {
+            per_pe[pe as usize].push(o as u32);
+        }
+        for objs in &mut per_pe {
+            objs.sort_by(|&a, &b| {
+                inst.loads[a as usize]
+                    .partial_cmp(&inst.loads[b as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+        }
+
+        // Shed from overloaded PEs: heaviest object that doesn't push the
+        // PE below average; otherwise the lightest that gets it under.
+        let mut pool: Vec<u32> = Vec::new();
+        for pe in 0..n_pes {
+            while pe_loads[pe] > threshold {
+                // find heaviest object with load <= pe_load - avg
+                let headroom = pe_loads[pe] - avg;
+                let pos = per_pe[pe]
+                    .iter()
+                    .rposition(|&o| inst.loads[o as usize] <= headroom);
+                let idx = match pos {
+                    Some(i) => i,
+                    // nothing fits exactly: shed the lightest object
+                    None if !per_pe[pe].is_empty() => 0,
+                    None => break,
+                };
+                let o = per_pe[pe].remove(idx);
+                pe_loads[pe] -= inst.loads[o as usize];
+                pool.push(o);
+            }
+        }
+
+        // Place the pool: heaviest first onto the least-loaded PE.
+        pool.sort_by(|&a, &b| {
+            inst.loads[b as usize]
+                .partial_cmp(&inst.loads[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut heap: BinaryHeap<MinPe> = pe_loads
+            .iter()
+            .enumerate()
+            .map(|(pe, &load)| MinPe { load, pe: pe as u32 })
+            .collect();
+        for o in pool {
+            let mut top = heap.pop().unwrap();
+            mapping[o as usize] = top.pe;
+            top.load += inst.loads[o as usize];
+            heap.push(top);
+        }
+        Assignment { mapping }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{evaluate, CommGraph, Topology};
+
+    fn imbalanced_instance() -> Instance {
+        // PE0 heavily overloaded, PEs 1-3 light.
+        let n = 32;
+        let loads = vec![1.0; n];
+        let mapping: Vec<u32> = (0..n).map(|i| if i < 20 { 0 } else { 1 + (i % 3) as u32 }).collect();
+        Instance::new(
+            loads,
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            mapping,
+            Topology::flat(4),
+        )
+    }
+
+    #[test]
+    fn balances_overload() {
+        let inst = imbalanced_instance();
+        let lb = GreedyRefine { params: StrategyParams::default() };
+        let m = evaluate(&inst, &lb.rebalance(&inst));
+        assert!(m.max_avg_pe <= 1.05, "max/avg {}", m.max_avg_pe);
+    }
+
+    #[test]
+    fn balanced_input_untouched() {
+        let n = 16;
+        let mapping: Vec<u32> = (0..n as u32).map(|i| i % 4).collect();
+        let inst = Instance::new(
+            vec![1.0; n],
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            mapping.clone(),
+            Topology::flat(4),
+        );
+        let lb = GreedyRefine { params: StrategyParams::default() };
+        let asg = lb.rebalance(&inst);
+        assert_eq!(asg.migrations(&inst), 0);
+    }
+
+    #[test]
+    fn migrates_less_than_greedy() {
+        let inst = imbalanced_instance();
+        let refine = GreedyRefine { params: StrategyParams::default() }.rebalance(&inst);
+        let greedy = crate::strategies::greedy::Greedy.rebalance(&inst);
+        assert!(refine.migrations(&inst) <= greedy.migrations(&inst));
+    }
+}

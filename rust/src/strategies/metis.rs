@@ -1,0 +1,550 @@
+//! METIS-like multilevel k-way graph partitioner, from scratch.
+//!
+//! The paper uses METIS as a from-scratch partitioning baseline
+//! (Table II): best communication locality, but it re-partitions
+//! without regard to the current placement, so nearly every object
+//! migrates. Classic multilevel scheme (Karypis & Kumar '96):
+//! heavy-edge-matching coarsening → recursive-bisection initial
+//! partition via greedy region growing → projection with k-way
+//! boundary (FM-style) refinement at every level.
+
+use std::collections::HashMap;
+
+use crate::model::{Assignment, Instance};
+use crate::strategies::{LoadBalancer, StrategyParams};
+use crate::util::rng::Rng;
+
+pub struct Metis {
+    pub params: StrategyParams,
+}
+
+/// One level of the multilevel hierarchy (adjacency-list graph with
+/// vertex weights).
+#[derive(Debug, Clone)]
+pub(crate) struct LevelGraph {
+    pub n: usize,
+    pub adj: Vec<Vec<(u32, f64)>>,
+    pub vwts: Vec<f64>,
+}
+
+impl LevelGraph {
+    pub fn from_instance(inst: &Instance) -> LevelGraph {
+        let n = inst.n_objects();
+        let mut adj = vec![Vec::new(); n];
+        for (a, b, w) in inst.graph.edges() {
+            adj[a as usize].push((b, w));
+            adj[b as usize].push((a, w));
+        }
+        LevelGraph { n, adj, vwts: inst.loads.clone() }
+    }
+
+    pub fn total_vwt(&self) -> f64 {
+        self.vwts.iter().sum()
+    }
+}
+
+/// Heavy-edge matching: returns (coarse graph, fine→coarse map).
+pub(crate) fn coarsen(g: &LevelGraph, rng: &mut Rng) -> (LevelGraph, Vec<u32>) {
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut matched = vec![u32::MAX; g.n];
+    let mut coarse_of = vec![u32::MAX; g.n];
+    let mut next = 0u32;
+    for &v in &order {
+        let v = v as usize;
+        if matched[v] != u32::MAX {
+            continue;
+        }
+        // heaviest unmatched neighbor
+        let mut best: Option<(u32, f64)> = None;
+        for &(u, w) in &g.adj[v] {
+            if matched[u as usize] == u32::MAX
+                && best.map(|(_, bw)| w > bw).unwrap_or(true)
+            {
+                best = Some((u, w));
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                matched[v] = u;
+                matched[u as usize] = v as u32;
+                coarse_of[v] = next;
+                coarse_of[u as usize] = next;
+            }
+            None => {
+                matched[v] = v as u32;
+                coarse_of[v] = next;
+            }
+        }
+        next += 1;
+    }
+    let cn = next as usize;
+    let mut vwts = vec![0.0; cn];
+    for v in 0..g.n {
+        vwts[coarse_of[v] as usize] += g.vwts[v];
+    }
+    let mut edge_map: HashMap<(u32, u32), f64> = HashMap::new();
+    for v in 0..g.n {
+        let cv = coarse_of[v];
+        for &(u, w) in &g.adj[v] {
+            let cu = coarse_of[u as usize];
+            if cv < cu {
+                *edge_map.entry((cv, cu)).or_insert(0.0) += w;
+            }
+        }
+    }
+    let mut adj = vec![Vec::new(); cn];
+    let mut pairs: Vec<((u32, u32), f64)> = edge_map.into_iter().collect();
+    pairs.sort_by_key(|(k, _)| *k);
+    for ((a, b), w) in pairs {
+        adj[a as usize].push((b, w));
+        adj[b as usize].push((a, w));
+    }
+    (LevelGraph { n: cn, adj, vwts }, coarse_of)
+}
+
+/// Greedy graph-growing bisection: grow a region from a peripheral seed
+/// until it holds `frac` of the total vertex weight. Returns side flags.
+pub(crate) fn grow_bisection(g: &LevelGraph, frac: f64, rng: &mut Rng) -> Vec<bool> {
+    let total = g.total_vwt();
+    let target = total * frac;
+    // pseudo-peripheral seed: BFS twice from a random start
+    if g.n == 0 {
+        return Vec::new();
+    }
+    let start = rng.range(0, g.n);
+    let far = bfs_farthest(g, start);
+    let seed = bfs_farthest(g, far);
+
+    let mut in_a = vec![false; g.n];
+    let mut gain: Vec<f64> = vec![0.0; g.n];
+    let mut in_frontier = vec![false; g.n];
+    let mut frontier: Vec<u32> = Vec::new();
+    let mut wa = 0.0;
+
+    let add = |v: usize,
+                   in_a: &mut Vec<bool>,
+                   wa: &mut f64,
+                   frontier: &mut Vec<u32>,
+                   in_frontier: &mut Vec<bool>,
+                   gain: &mut Vec<f64>| {
+        in_a[v] = true;
+        *wa += g.vwts[v];
+        for &(u, w) in &g.adj[v] {
+            let u = u as usize;
+            if !in_a[u] {
+                gain[u] += w;
+                if !in_frontier[u] {
+                    in_frontier[u] = true;
+                    frontier.push(u as u32);
+                }
+            }
+        }
+    };
+    add(seed, &mut in_a, &mut wa, &mut frontier, &mut in_frontier, &mut gain);
+
+    while wa < target {
+        // best-gain frontier vertex; fall back to any unassigned vertex
+        // (disconnected graphs).
+        frontier.retain(|&u| !in_a[u as usize]);
+        let pick = frontier
+            .iter()
+            .cloned()
+            .max_by(|&a, &b| {
+                gain[a as usize]
+                    .partial_cmp(&gain[b as usize])
+                    .unwrap()
+                    .then(b.cmp(&a))
+            })
+            .map(|u| u as usize)
+            .or_else(|| (0..g.n).find(|&v| !in_a[v]));
+        match pick {
+            Some(v) => {
+                in_frontier[v] = false;
+                add(v, &mut in_a, &mut wa, &mut frontier, &mut in_frontier, &mut gain)
+            }
+            None => break,
+        }
+    }
+    in_a
+}
+
+fn bfs_farthest(g: &LevelGraph, start: usize) -> usize {
+    let mut dist = vec![u32::MAX; g.n];
+    dist[start] = 0;
+    let mut queue = std::collections::VecDeque::from([start]);
+    let mut last = start;
+    while let Some(v) = queue.pop_front() {
+        last = v;
+        for &(u, _) in &g.adj[v] {
+            let u = u as usize;
+            if dist[u] == u32::MAX {
+                dist[u] = dist[v] + 1;
+                queue.push_back(u);
+            }
+        }
+    }
+    last
+}
+
+/// Recursive bisection into `k` parts (ids `part_base..part_base+k`).
+fn recursive_bisect(
+    g: &LevelGraph,
+    vertices: &[u32],
+    k: usize,
+    part_base: u32,
+    part: &mut [u32],
+    rng: &mut Rng,
+) {
+    if k == 1 {
+        for &v in vertices {
+            part[v as usize] = part_base;
+        }
+        return;
+    }
+    if vertices.len() <= k {
+        // fewer vertices than parts: round-robin, some parts stay empty
+        for (i, &v) in vertices.iter().enumerate() {
+            part[v as usize] = part_base + i as u32;
+        }
+        return;
+    }
+    // subgraph over `vertices`
+    let mut local_id = HashMap::with_capacity(vertices.len());
+    for (i, &v) in vertices.iter().enumerate() {
+        local_id.insert(v, i as u32);
+    }
+    let sub = LevelGraph {
+        n: vertices.len(),
+        adj: vertices
+            .iter()
+            .map(|&v| {
+                g.adj[v as usize]
+                    .iter()
+                    .filter_map(|&(u, w)| local_id.get(&u).map(|&lu| (lu, w)))
+                    .collect()
+            })
+            .collect(),
+        vwts: vertices.iter().map(|&v| g.vwts[v as usize]).collect(),
+    };
+    let k1 = k / 2;
+    let k2 = k - k1;
+    let frac = k1 as f64 / k as f64;
+    if vertices.is_empty() {
+        return;
+    }
+    let mut side = if sub.n > 1 {
+        let mut s = grow_bisection(&sub, frac, rng);
+        refine_bisection(&sub, &mut s, frac, 4);
+        s
+    } else {
+        vec![true; sub.n]
+    };
+    let mut side_a: Vec<u32> = vertices
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| side[*i])
+        .map(|(_, &v)| v)
+        .collect();
+    let mut side_b: Vec<u32> = vertices
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !side[*i])
+        .map(|(_, &v)| v)
+        .collect();
+    // degenerate bisection (e.g. all weight on one vertex): fall back to
+    // a proportional count split so every part gets vertices
+    if (side_a.is_empty() && k1 > 0) || (side_b.is_empty() && k2 > 0) {
+        let cut = ((vertices.len() as f64 * frac).round() as usize).clamp(
+            usize::from(k1 > 0),
+            vertices.len() - usize::from(k2 > 0),
+        );
+        side_a = vertices[..cut].to_vec();
+        side_b = vertices[cut..].to_vec();
+        side.clear();
+    }
+    recursive_bisect(g, &side_a, k1, part_base, part, rng);
+    recursive_bisect(g, &side_b, k2, part_base + k1 as u32, part, rng);
+}
+
+/// FM-style bisection refinement: greedy positive-gain boundary swaps
+/// under a weight tolerance.
+fn refine_bisection(g: &LevelGraph, side: &mut [bool], frac: f64, passes: usize) {
+    let total = g.total_vwt();
+    let target_a = total * frac;
+    let tol = total * 0.03;
+    let mut wa: f64 = (0..g.n).filter(|&v| side[v]).map(|v| g.vwts[v]).sum();
+    for _ in 0..passes {
+        let mut improved = false;
+        for v in 0..g.n {
+            let (mut internal, mut external) = (0.0, 0.0);
+            for &(u, w) in &g.adj[v] {
+                if side[u as usize] == side[v] {
+                    internal += w;
+                } else {
+                    external += w;
+                }
+            }
+            let gain = external - internal;
+            if gain <= 0.0 {
+                continue;
+            }
+            let new_wa = if side[v] { wa - g.vwts[v] } else { wa + g.vwts[v] };
+            if (new_wa - target_a).abs() <= (wa - target_a).abs() + tol {
+                side[v] = !side[v];
+                wa = new_wa;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// K-way boundary refinement: move boundary vertices to the adjacent
+/// part with max positive gain when balance allows.
+pub(crate) fn kway_refine(
+    g: &LevelGraph,
+    part: &mut [u32],
+    k: usize,
+    btol: f64,
+    passes: usize,
+) {
+    let total = g.total_vwt();
+    let max_wt = total / k as f64 * btol;
+    let mut wts = vec![0.0; k];
+    for v in 0..g.n {
+        wts[part[v] as usize] += g.vwts[v];
+    }
+    for _ in 0..passes {
+        let mut moves = 0;
+        for v in 0..g.n {
+            let pv = part[v];
+            let mut conn: HashMap<u32, f64> = HashMap::new();
+            for &(u, w) in &g.adj[v] {
+                *conn.entry(part[u as usize]).or_insert(0.0) += w;
+            }
+            let own = conn.get(&pv).cloned().unwrap_or(0.0);
+            let mut cands: Vec<(u32, f64)> =
+                conn.iter().filter(|(&p, _)| p != pv).map(|(&p, &w)| (p, w)).collect();
+            cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            if let Some(&(p, w)) = cands.first() {
+                let gain = w - own;
+                if gain > 0.0 && wts[p as usize] + g.vwts[v] <= max_wt {
+                    wts[pv as usize] -= g.vwts[v];
+                    wts[p as usize] += g.vwts[v];
+                    part[v] = p;
+                    moves += 1;
+                }
+            }
+        }
+        if moves == 0 {
+            break;
+        }
+    }
+}
+
+/// Balance-repair pass: while a part exceeds the tolerance, move the
+/// vertex with the least cut damage from the heaviest part to the
+/// lightest (real METIS enforces the balance constraint similarly
+/// during refinement).
+pub(crate) fn rebalance_parts(g: &LevelGraph, part: &mut [u32], k: usize, btol: f64) {
+    let total = g.total_vwt();
+    let avg = total / k as f64;
+    let max_wt = avg * btol;
+    let mut wts = vec![0.0; k];
+    for v in 0..g.n {
+        wts[part[v] as usize] += g.vwts[v];
+    }
+    for _ in 0..4 * g.n {
+        let (hi, &hi_w) = wts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if hi_w <= max_wt {
+            break;
+        }
+        let (lo, _) = wts
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        // vertex on hi with minimal (cut increase, weight distance)
+        let mut best: Option<(f64, usize)> = None;
+        for v in 0..g.n {
+            if part[v] as usize != hi || g.vwts[v] <= 0.0 {
+                continue;
+            }
+            if wts[lo] + g.vwts[v] > max_wt && g.vwts[v] < hi_w - avg {
+                // acceptable either way; prefer moves that don't overfill lo
+            }
+            let mut to_lo = 0.0;
+            let mut local = 0.0;
+            for &(u, w) in &g.adj[v] {
+                if part[u as usize] as usize == hi {
+                    local += w;
+                } else if part[u as usize] as usize == lo {
+                    to_lo += w;
+                }
+            }
+            let damage = local - to_lo;
+            if best.map(|(d, _)| damage < d).unwrap_or(true) {
+                best = Some((damage, v));
+            }
+        }
+        let Some((_, v)) = best else { break };
+        wts[hi] -= g.vwts[v];
+        wts[lo] += g.vwts[v];
+        part[v] = lo as u32;
+    }
+}
+
+/// Full multilevel pipeline over an instance, producing a PE-level
+/// partition vector.
+pub(crate) fn partition(inst: &Instance, k: usize, btol: f64, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut levels: Vec<(LevelGraph, Vec<u32>)> = Vec::new();
+    let mut g = LevelGraph::from_instance(inst);
+    let coarse_target = (4 * k).max(64);
+    while g.n > coarse_target {
+        let (cg, map) = coarsen(&g, &mut rng);
+        if cg.n as f64 > g.n as f64 * 0.95 {
+            break; // no shrinkage (e.g. edgeless graph)
+        }
+        levels.push((g, map));
+        g = cg;
+    }
+    // initial partition on coarsest
+    let mut part = vec![0u32; g.n];
+    let all: Vec<u32> = (0..g.n as u32).collect();
+    recursive_bisect(&g, &all, k, 0, &mut part, &mut rng);
+    kway_refine(&g, &mut part, k, btol, 6);
+    rebalance_parts(&g, &mut part, k, btol);
+    // uncoarsen
+    while let Some((fine, map)) = levels.pop() {
+        let mut fpart = vec![0u32; fine.n];
+        for v in 0..fine.n {
+            fpart[v] = part[map[v] as usize];
+        }
+        part = fpart;
+        kway_refine(&fine, &mut part, k, btol, 4);
+        rebalance_parts(&fine, &mut part, k, btol);
+    }
+    part
+}
+
+impl LoadBalancer for Metis {
+    fn name(&self) -> &'static str {
+        "metis"
+    }
+
+    fn rebalance(&self, inst: &Instance) -> Assignment {
+        let k = inst.topo.n_pes();
+        let mapping = partition(inst, k, self.params.balance_tolerance, self.params.seed);
+        Assignment { mapping }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{evaluate, metrics, CommGraph, Topology};
+    use crate::strategies::tests::small_instance;
+
+    fn grid_instance(side: usize, pes: usize) -> Instance {
+        let n = side * side;
+        let mut edges = Vec::new();
+        for r in 0..side {
+            for c in 0..side {
+                let o = (r * side + c) as u32;
+                if c + 1 < side {
+                    edges.push((o, o + 1, 10.0));
+                }
+                if r + 1 < side {
+                    edges.push((o, o + side as u32, 10.0));
+                }
+            }
+        }
+        Instance::new(
+            vec![1.0; n],
+            (0..n).map(|i| [(i % side) as f64, (i / side) as f64]).collect(),
+            CommGraph::from_edges(n, &edges),
+            vec![0; n],
+            Topology::flat(pes),
+        )
+    }
+
+    #[test]
+    fn partitions_are_total_and_balanced() {
+        let inst = grid_instance(16, 8);
+        let m = Metis { params: StrategyParams::default() };
+        let asg = m.rebalance(&inst);
+        let loads = inst.pe_loads(&asg.mapping);
+        assert!(loads.iter().all(|&l| l > 0.0), "empty part: {loads:?}");
+        let metrics = evaluate(&inst, &asg);
+        assert!(metrics.max_avg_pe < 1.35, "max/avg {}", metrics.max_avg_pe);
+    }
+
+    #[test]
+    fn locality_beats_scatter() {
+        let inst = grid_instance(16, 4);
+        let m = Metis { params: StrategyParams::default() }.rebalance(&inst);
+        let s = crate::strategies::random::Scatter { seed: 2 }.rebalance(&inst);
+        let rm = metrics::comm_split_pes(&inst, &m.mapping).ratio();
+        let rs = metrics::comm_split_pes(&inst, &s.mapping).ratio();
+        assert!(rm < rs * 0.5, "metis {rm} vs scatter {rs}");
+    }
+
+    #[test]
+    fn kway_refine_reduces_cut() {
+        let inst = grid_instance(12, 4);
+        let g = LevelGraph::from_instance(&inst);
+        // bad initial partition: random assignment
+        let mut rng = Rng::new(17);
+        let mut part: Vec<u32> = (0..g.n as u32).map(|_| rng.below(4) as u32).collect();
+        let cut_before = cut(&g, &part);
+        kway_refine(&g, &mut part, 4, 1.05, 8);
+        let cut_after = cut(&g, &part);
+        assert!(cut_after < cut_before, "{cut_after} !< {cut_before}");
+    }
+
+    fn cut(g: &LevelGraph, part: &[u32]) -> f64 {
+        let mut c = 0.0;
+        for v in 0..g.n {
+            for &(u, w) in &g.adj[v] {
+                if part[v] != part[u as usize] {
+                    c += w;
+                }
+            }
+        }
+        c / 2.0
+    }
+
+    #[test]
+    fn coarsening_preserves_total_weight() {
+        let inst = small_instance(4);
+        let g = LevelGraph::from_instance(&inst);
+        let (cg, map) = coarsen(&g, &mut Rng::new(3));
+        assert!(cg.n < g.n);
+        assert!((cg.total_vwt() - g.total_vwt()).abs() < 1e-9);
+        assert!(map.iter().all(|&c| (c as usize) < cg.n));
+    }
+
+    #[test]
+    fn handles_edgeless_graph() {
+        let n = 32;
+        let inst = Instance::new(
+            vec![1.0; n],
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            vec![0; n],
+            Topology::flat(4),
+        );
+        let asg = Metis { params: StrategyParams::default() }.rebalance(&inst);
+        let loads = inst.pe_loads(&asg.mapping);
+        // all parts get some objects even with no edges
+        assert!(loads.iter().filter(|&&l| l > 0.0).count() >= 3, "{loads:?}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Load-balancing strategies.
+//!
+//! All strategies implement [`LoadBalancer`]: a pure function from an
+//! [`Instance`] to an [`Assignment`], so they are directly comparable in
+//! the simulation harness (paper §V) and pluggable into the app driver
+//! (paper §VI). The paper's contribution is [`diffusion`]; the rest are
+//! the comparison baselines of Table II.
+
+pub mod diffusion;
+pub mod greedy;
+pub mod greedy_refine;
+pub mod metis;
+pub mod parmetis;
+pub mod random;
+
+use anyhow::{bail, Result};
+
+use crate::model::{Assignment, Instance};
+
+/// Tunables shared across strategies; every field has a sensible
+/// default so configs/CLIs only set what they study.
+#[derive(Debug, Clone, Copy)]
+pub struct StrategyParams {
+    /// Desired neighbor-graph vertex degree K (paper §III-A).
+    pub neighbor_count: usize,
+    /// Handshake round bound (paper §III-A step 5).
+    pub handshake_max_rounds: usize,
+    /// Virtual-LB neighborhood convergence threshold: relative load
+    /// deviation within a neighborhood considered "balanced" (§III-B).
+    pub vlb_tolerance: f64,
+    /// Virtual-LB iteration bound.
+    pub vlb_max_iters: usize,
+    /// Object selection may exceed a quota by up to this fraction of the
+    /// candidate object's load (§III-C "more objects than initially...").
+    pub overfill: f64,
+    /// GreedyRefine overload tolerance above average.
+    pub refine_tolerance: f64,
+    /// METIS partition imbalance allowance (1.0 = perfect).
+    pub balance_tolerance: f64,
+    /// ParMETIS-style migration-vs-edge-cut tradeoff (higher = more
+    /// willing to migrate; mirrors ParMETIS `itr`).
+    pub itr: f64,
+    /// Coordinate variant: when > 0, use the Morton-curve (SFC)
+    /// neighbor search with this window instead of the quadratic
+    /// all-pairs sort (paper §VII future work).
+    pub sfc_window: usize,
+    /// Reuse the stage-1 neighbor graph across LB rounds instead of
+    /// reconstructing it every time (paper §III-A future work).
+    pub reuse_neighbors: bool,
+    /// Seed for any randomized tie-breaking (coarsening visit order...).
+    pub seed: u64,
+}
+
+impl Default for StrategyParams {
+    fn default() -> Self {
+        StrategyParams {
+            neighbor_count: 4,
+            handshake_max_rounds: 32,
+            vlb_tolerance: 0.05,
+            vlb_max_iters: 200,
+            overfill: 0.5,
+            refine_tolerance: 0.02,
+            balance_tolerance: 1.03,
+            itr: 1000.0,
+            sfc_window: 0,
+            reuse_neighbors: false,
+            seed: 0xD1FF,
+        }
+    }
+}
+
+/// A dynamic load-balancing strategy.
+pub trait LoadBalancer: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Compute a new object → PE mapping for the instance.
+    fn rebalance(&self, inst: &Instance) -> Assignment;
+}
+
+/// Names accepted by [`make`] (and the CLI / config system).
+pub const AVAILABLE: &[&str] = &[
+    "none",
+    "diff-comm",
+    "diff-coord",
+    "greedy",
+    "greedy-refine",
+    "metis",
+    "parmetis",
+    "scatter",
+];
+
+/// No-op strategy (baseline "no load balancing").
+pub struct NoLb;
+
+impl LoadBalancer for NoLb {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn rebalance(&self, inst: &Instance) -> Assignment {
+        Assignment::unchanged(inst)
+    }
+}
+
+/// Construct a strategy by name.
+pub fn make(name: &str, params: StrategyParams) -> Result<Box<dyn LoadBalancer>> {
+    Ok(match name {
+        "none" => Box::new(NoLb),
+        "diff-comm" => Box::new(diffusion::Diffusion::communication(params)),
+        "diff-coord" => Box::new(diffusion::Diffusion::coordinate(params)),
+        "greedy" => Box::new(greedy::Greedy),
+        "greedy-refine" => Box::new(greedy_refine::GreedyRefine { params }),
+        "metis" => Box::new(metis::Metis { params }),
+        "parmetis" => Box::new(parmetis::ParMetis { params }),
+        "scatter" => Box::new(random::Scatter { seed: params.seed }),
+        other => bail!("unknown strategy '{other}' (available: {AVAILABLE:?})"),
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::model::{CommGraph, Topology};
+
+    pub(crate) fn small_instance(n_pes: usize) -> Instance {
+        // 16 objects in a 4x4 grid with 5-point stencil edges, loads
+        // varied, initially packed on PE 0.
+        let side = 4;
+        let mut edges = Vec::new();
+        for r in 0..side {
+            for c in 0..side {
+                let o = (r * side + c) as u32;
+                let right = (r * side + (c + 1) % side) as u32;
+                let down = (((r + 1) % side) * side + c) as u32;
+                edges.push((o, right, 100.0));
+                edges.push((o, down, 100.0));
+            }
+        }
+        let graph = CommGraph::from_edges(side * side, &edges);
+        let loads: Vec<f64> = (0..side * side).map(|i| 1.0 + (i % 3) as f64).collect();
+        let coords: Vec<[f64; 2]> =
+            (0..side * side).map(|i| [(i % side) as f64, (i / side) as f64]).collect();
+        let mapping = vec![0u32; side * side];
+        Instance::new(loads, coords, graph, mapping, Topology::flat(n_pes))
+    }
+
+    #[test]
+    fn registry_builds_every_strategy() {
+        for name in AVAILABLE {
+            let s = make(name, StrategyParams::default()).unwrap();
+            assert_eq!(&s.name(), name);
+        }
+        assert!(make("bogus", StrategyParams::default()).is_err());
+    }
+
+    #[test]
+    fn every_strategy_produces_valid_mapping() {
+        let inst = small_instance(4);
+        for name in AVAILABLE {
+            let s = make(name, StrategyParams::default()).unwrap();
+            let asg = s.rebalance(&inst);
+            assert_eq!(asg.mapping.len(), inst.n_objects(), "{name}");
+            assert!(
+                asg.mapping.iter().all(|&pe| (pe as usize) < inst.topo.n_pes()),
+                "{name} produced out-of-range PE"
+            );
+        }
+    }
+
+    #[test]
+    fn nolb_never_migrates() {
+        let inst = small_instance(4);
+        let asg = NoLb.rebalance(&inst);
+        assert_eq!(asg.migrations(&inst), 0);
+    }
+}

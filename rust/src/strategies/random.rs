@@ -1,0 +1,63 @@
+//! Scatter baseline: uniformly random placement. The "communication
+//! locality entirely disrupted" picture on the right of Fig 1 — used by
+//! the visualization bench and as a worst-case locality reference.
+
+use crate::model::{Assignment, Instance};
+use crate::strategies::LoadBalancer;
+use crate::util::rng::Rng;
+
+pub struct Scatter {
+    pub seed: u64,
+}
+
+impl LoadBalancer for Scatter {
+    fn name(&self) -> &'static str {
+        "scatter"
+    }
+
+    fn rebalance(&self, inst: &Instance) -> Assignment {
+        let mut rng = Rng::new(self.seed);
+        let n_pes = inst.topo.n_pes() as u64;
+        let mapping = (0..inst.n_objects()).map(|_| rng.below(n_pes) as u32).collect();
+        Assignment { mapping }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{metrics, CommGraph, Topology};
+
+    #[test]
+    fn scatter_destroys_locality() {
+        // ring graph initially contiguous on 4 PEs
+        let n = 64;
+        let edges: Vec<(u32, u32, f64)> =
+            (0..n as u32).map(|i| (i, (i + 1) % n as u32, 1.0)).collect();
+        let inst = Instance::new(
+            vec![1.0; n],
+            vec![[0.0; 2]; n],
+            CommGraph::from_edges(n, &edges),
+            (0..n as u32).map(|i| i / 16).collect(),
+            Topology::flat(4),
+        );
+        let before = metrics::comm_split_nodes(&inst, &inst.mapping).ratio();
+        let asg = Scatter { seed: 1 }.rebalance(&inst);
+        let after = metrics::comm_split_nodes(&inst, &asg.mapping).ratio();
+        assert!(after > before * 3.0, "{after} !> 3*{before}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let inst = Instance::new(
+            vec![1.0; 8],
+            vec![[0.0; 2]; 8],
+            CommGraph::empty(8),
+            vec![0; 8],
+            Topology::flat(4),
+        );
+        let a = Scatter { seed: 9 }.rebalance(&inst);
+        let b = Scatter { seed: 9 }.rebalance(&inst);
+        assert_eq!(a.mapping, b.mapping);
+    }
+}

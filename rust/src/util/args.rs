@@ -1,0 +1,254 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, and auto-generated `--help`. Typed getters parse on
+//! access with uniform error messages. This is deliberately tiny but
+//! covers everything the `difflb` CLI, examples, and bench binaries use.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative option spec for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub program: String,
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Parser with declared options (for help/validation).
+#[derive(Debug, Clone)]
+pub struct Parser {
+    pub about: &'static str,
+    pub subcommands: Vec<(&'static str, &'static str)>,
+    pub specs: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(about: &'static str) -> Self {
+        Parser { about, subcommands: Vec::new(), specs: Vec::new() }
+    }
+
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self, program: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}\n", self.about);
+        let _ = writeln!(s, "USAGE: {program} [SUBCOMMAND] [OPTIONS]");
+        if !self.subcommands.is_empty() {
+            let _ = writeln!(s, "\nSUBCOMMANDS:");
+            for (name, help) in &self.subcommands {
+                let _ = writeln!(s, "  {name:<18} {help}");
+            }
+        }
+        if !self.specs.is_empty() {
+            let _ = writeln!(s, "\nOPTIONS:");
+            for spec in &self.specs {
+                let d = spec
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                let key = if spec.is_flag {
+                    format!("--{}", spec.name)
+                } else {
+                    format!("--{} <v>", spec.name)
+                };
+                let _ = writeln!(s, "  {key:<22} {}{d}", spec.help);
+            }
+        }
+        s
+    }
+
+    /// Parse `std::env::args()`-style input. On `--help`, prints usage and
+    /// exits. Unknown `--options` are an error when specs are declared.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args {
+            program: argv.first().cloned().unwrap_or_else(|| "difflb".into()),
+            ..Default::default()
+        };
+        // seed defaults
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        let known = |name: &str| self.specs.iter().find(|s| s.name == name);
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage(&args.program));
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = known(&key);
+                if !self.specs.is_empty() && spec.is_none() {
+                    return Err(format!("unknown option --{key} (see --help)"));
+                }
+                let is_flag = spec.map(|s| s.is_flag).unwrap_or(false);
+                if is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag, takes no value"));
+                    }
+                    args.flags.push(key);
+                } else if let Some(v) = inline_val {
+                    args.opts.insert(key, v);
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("--{key} expects a value"))?;
+                    args.opts.insert(key, v.clone());
+                }
+            } else if args.subcommand.is_none()
+                && args.positional.is_empty()
+                && self.subcommands.iter().any(|(n, _)| n == a)
+            {
+                args.subcommand = Some(a.clone());
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Convenience: parse the real process arguments, exiting on error.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing required option --{name}"))
+            .to_string()
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .unwrap_or_else(|| panic!("missing required option --{name}"));
+        raw.parse::<T>()
+            .unwrap_or_else(|e| panic!("--{name}={raw}: {e}"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_as(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_as(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.iter().map(|x| x.to_string()))
+            .collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new("test")
+            .subcommand("run", "run it")
+            .opt("count", Some("4"), "how many")
+            .opt("name", None, "a name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = parser()
+            .parse(&argv(&["run", "--count", "7", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.usize("count"), 7);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_and_equals_syntax() {
+        let a = parser().parse(&argv(&["--name=x"])).unwrap();
+        assert_eq!(a.usize("count"), 4);
+        assert_eq!(a.str("name"), "x");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parser().parse(&argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parser().parse(&argv(&["--count"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parser().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = parser().usage("prog");
+        assert!(u.contains("--count"));
+        assert!(u.contains("run"));
+        assert!(u.contains("[default: 4]"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Micro/bench harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean/median/p99 reporting and
+//! a tabular reporter used by every `cargo bench` target to print the
+//! paper's tables. Benches are `harness = false` binaries that call
+//! [`time_fn`] / [`Table`].
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl Timing {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_secs_f64(self.mean_s)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  median {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.median_s),
+            fmt_duration(self.p99_s),
+        )
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Time `f` with automatic iteration count targeting ~`budget` total
+/// runtime (default 2s), after `warmup` runs. Returns per-iteration
+/// statistics. A `black_box`-style sink prevents the optimizer from
+/// deleting the workload: have `f` return a value.
+pub fn time_fn<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Timing {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget.as_secs_f64() / one) as usize).clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        median_s: percentile(&samples, 50.0),
+        p99_s: percentile(&samples, 99.0),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Quick one-shot wall-clock measurement (for end-to-end runs where a
+/// single execution is already seconds long).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Aligned text table, used by bench binaries to print paper tables.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+");
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Also emit CSV for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_of_trivial_fn() {
+        let t = time_fn("noop", Duration::from_millis(20), || 1 + 1);
+        assert!(t.iters >= 5);
+        assert!(t.mean_s >= 0.0);
+        assert!(t.report().contains("noop"));
+    }
+
+    #[test]
+    fn table_rendering_aligns() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("longer-name"));
+        assert_eq!(t.to_csv().lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Layered configuration system (serde/toml are unavailable offline).
+//!
+//! Supports an INI/TOML-subset file format:
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = value          # values: string, number, bool
+//! list = 1, 2, 3       # comma-separated
+//! ```
+//!
+//! Lookups are by `"section.key"`. A [`Config`] can be layered: file <
+//! overrides (e.g. CLI `--set section.key=value`), later layers win.
+//! Typed getters parse on access; `get_or` supplies defaults so configs
+//! stay minimal.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse the INI-subset text format. Keys outside any section land in
+    /// the "" section and are addressed without a dot.
+    pub fn from_str(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.ends_with('.') || key.starts_with('.') || k.trim().is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            cfg.values.insert(key, unquote(v.trim()).to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading config {}", p.display()))?;
+        Config::from_str(&text).with_context(|| format!("parsing {}", p.display()))
+    }
+
+    /// Overlay `other` on top of `self` (other wins).
+    pub fn layered(mut self, other: &Config) -> Config {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    /// Apply a `section.key=value` override string (CLI `--set`).
+    pub fn set_kv(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .with_context(|| format!("override '{kv}' must be key=value"))?;
+        self.values.insert(k.trim().to_string(), v.trim().to_string());
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing config key '{key}'"))
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.require(key)?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("config {key}={raw}: {e}"))
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(raw) => raw
+                .parse::<T>()
+                .unwrap_or_else(|e| panic!("config {key}={raw}: {e}")),
+        }
+    }
+
+    pub fn get_bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") | Some("on") => true,
+            Some("false") | Some("0") | Some("no") | Some("off") => false,
+            Some(v) => panic!("config {key}={v}: expected a boolean"),
+        }
+    }
+
+    /// Comma-separated list of T.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str) -> Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.require(key)?;
+        raw.split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<T>()
+                    .map_err(|e| anyhow::anyhow!("config {key} element '{s}': {e}"))
+            })
+            .collect()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside quotes.
+    let mut in_quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> &str {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+seed = 42
+[app]
+name = "pic prk"   # trailing comment
+grid = 1000
+rho = 0.9
+modes = 1, 2, 3
+verbose = true
+"#;
+
+    #[test]
+    fn parse_and_typed_get() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.parse::<u64>("seed").unwrap(), 42);
+        assert_eq!(c.require("app.name").unwrap(), "pic prk");
+        assert_eq!(c.parse::<usize>("app.grid").unwrap(), 1000);
+        assert!((c.parse::<f64>("app.rho").unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(c.get_list::<u32>("app.modes").unwrap(), vec![1, 2, 3]);
+        assert!(c.get_bool_or("app.verbose", false));
+        assert_eq!(c.get_or::<usize>("app.missing", 7), 7);
+    }
+
+    #[test]
+    fn layering_and_overrides() {
+        let base = Config::from_str("[a]\nx = 1\ny = 2").unwrap();
+        let mut over = Config::new();
+        over.set_kv("a.x=10").unwrap();
+        let merged = base.layered(&over);
+        assert_eq!(merged.parse::<i32>("a.x").unwrap(), 10);
+        assert_eq!(merged.parse::<i32>("a.y").unwrap(), 2);
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(Config::from_str("[oops").is_err());
+        assert!(Config::from_str("justakey").is_err());
+        let c = Config::from_str("x = notanumber").unwrap();
+        assert!(c.parse::<i32>("x").is_err());
+        assert!(c.require("nope").is_err());
+    }
+}

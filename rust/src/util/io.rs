@@ -1,0 +1,112 @@
+//! Result/series writers: CSV files and output-directory management.
+//!
+//! Bench binaries write the series behind every paper figure as CSV into
+//! `out/` so they can be re-plotted; tables print to stdout via
+//! [`crate::util::bench::Table`] and are also mirrored to CSV here.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Default output directory for bench/example artifacts.
+pub fn out_dir() -> PathBuf {
+    let p = std::env::var("DIFFLB_OUT").unwrap_or_else(|_| "out".to_string());
+    PathBuf::from(p)
+}
+
+/// Ensure `out/` exists and return `out/<name>`.
+pub fn out_path(name: &str) -> Result<PathBuf> {
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    Ok(dir.join(name))
+}
+
+/// Incremental CSV writer.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    cols: usize,
+    pub path: PathBuf,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, headers: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = CsvWriter { file: std::io::BufWriter::new(f), cols: headers.len(), path };
+        writeln!(w.file, "{}", headers.join(","))?;
+        Ok(w)
+    }
+
+    pub fn row(&mut self, cells: &[&dyn std::fmt::Display]) -> Result<()> {
+        anyhow::ensure!(cells.len() == self.cols, "csv row arity mismatch");
+        let line = cells.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",");
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) -> Result<()> {
+        let refs: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        anyhow::ensure!(refs.len() == self.cols, "csv row arity mismatch");
+        writeln!(self.file, "{}", refs.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Parse a simple CSV (no quoting) back into rows — used by tests to
+/// round-trip bench outputs.
+pub fn read_csv(path: impl AsRef<Path>) -> Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    let mut lines = text.lines();
+    let headers = lines
+        .next()
+        .context("empty csv")?
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let rows = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.split(',').map(|s| s.to_string()).collect())
+        .collect();
+    Ok((headers, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_round_trip() {
+        let dir = std::env::temp_dir().join("difflb_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["iter", "value"]).unwrap();
+            w.row(&[&1, &2.5]).unwrap();
+            w.row_f64(&[2.0, 3.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let (h, rows) = read_csv(&path).unwrap();
+        assert_eq!(h, vec!["iter", "value"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], vec!["1", "2.5"]);
+    }
+
+    #[test]
+    fn arity_mismatch_errors() {
+        let dir = std::env::temp_dir().join("difflb_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(dir.join("u.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&[&1]).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny leveled logger (log/env_logger are unavailable offline).
+//!
+//! Level is process-global, settable programmatically or via
+//! `DIFFLB_LOG=error|warn|info|debug|trace`. Macros mirror the `log`
+//! crate's so call sites read idiomatically.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static INIT: std::sync::Once = std::sync::Once::new();
+static mut START: Option<Instant> = None;
+
+pub fn init_from_env() {
+    INIT.call_once(|| {
+        unsafe { START = Some(Instant::now()) };
+        if let Ok(v) = std::env::var("DIFFLB_LOG") {
+            set_level(match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "info" => Level::Info,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            });
+        }
+    });
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Seconds since logger init (0.0 if never initialized).
+pub fn elapsed() -> f64 {
+    unsafe {
+        let ptr = &raw const START;
+        (*ptr).map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments) {
+    init_from_env();
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{:>9.3}s {tag} {module}] {msg}", elapsed());
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,12 @@
+//! Dependency-free substrates: everything a production framework would
+//! normally pull from crates.io, built in-repo because the build
+//! environment is offline (see DESIGN.md "Environment constraints").
+
+pub mod args;
+pub mod bench;
+pub mod config;
+pub mod io;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,144 @@
+//! Miniature property-based testing harness (proptest is unavailable).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG + size hints). The
+//! runner executes `cases` random cases; on failure it retries the same
+//! case with progressively smaller size hints (a lightweight stand-in
+//! for shrinking) and reports the failing seed so the case can be
+//! replayed exactly:
+//!
+//! ```ignore
+//! prop::check("load is conserved", 200, |g| {
+//!     let loads = g.vec_f64(1.0, 100.0, 1..64);
+//!     let out = diffuse(&loads);
+//!     prop::assert_close(out.iter().sum(), loads.iter().sum(), 1e-9)
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator handed to each property case: seeded RNG + size scale.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen { rng: Rng::new(seed), size, seed }
+    }
+
+    /// Integer in `[lo, hi)`, hi scaled down by the current size factor
+    /// during shrink retries.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let span = (hi - lo).max(1);
+        let scaled = lo + span.min(self.size.max(1));
+        self.rng.range(lo, scaled.max(lo + 1).min(hi).max(lo + 1))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vec of f64 with length drawn from `len_lo..len_hi`.
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, len_lo: usize, len_hi: usize) -> Vec<f64> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, lo: usize, hi: usize, len: usize) -> Vec<usize> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+}
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `property`. Panics (test failure) with
+/// the failing seed + message on the first counterexample. Honors
+/// `DIFFLB_PROP_SEED` to replay a specific seed.
+pub fn check(name: &str, cases: u64, property: impl Fn(&mut Gen) -> CaseResult) {
+    let base = match std::env::var("DIFFLB_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().expect("DIFFLB_PROP_SEED must be u64"),
+        Err(_) => 0xD1FF_1B00,
+    };
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut g = Gen::new(seed, 64);
+        if let Err(msg) = property(&mut g) {
+            // "shrink": retry same seed at smaller sizes to report the
+            // smallest size that still fails.
+            let mut smallest = (64usize, msg.clone());
+            for size in [32, 16, 8, 4, 2, 1] {
+                let mut g = Gen::new(seed, size);
+                if let Err(m) = property(&mut g) {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, min size {}):\n  {}\n\
+                 replay with DIFFLB_PROP_SEED={seed}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Property helper: assert two floats are within tolerance.
+pub fn assert_close(a: f64, b: f64, tol: f64) -> CaseResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !≈ {b} (tol {tol})"))
+    }
+}
+
+/// Property helper: boolean condition with message.
+pub fn assert_that(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // interior mutability not needed: use a Cell
+        let counter = std::cell::Cell::new(0u64);
+        check("sum symmetric", 50, |g| {
+            counter.set(counter.get() + 1);
+            let a = g.f64_in(-5.0, 5.0);
+            let b = g.f64_in(-5.0, 5.0);
+            assert_close(a + b, b + a, 1e-15)
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_respects_bounds() {
+        check("bounds", 100, |g| {
+            let v = g.vec_f64(1.0, 2.0, 1, 10);
+            assert_that(
+                !v.is_empty() && v.len() < 10 && v.iter().all(|x| (1.0..2.0).contains(x)),
+                format!("bad vec {v:?}"),
+            )
+        });
+    }
+}

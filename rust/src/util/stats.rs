@@ -1,0 +1,134 @@
+//! Summary statistics and small numeric helpers shared across the
+//! metrics, benches, and load-balancing code.
+
+/// Online/summary statistics over a slice of samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub sum: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, min: 0.0, max: 0.0, mean: 0.0, std: 0.0, sum: 0.0 };
+        }
+        let n = xs.len() as f64;
+        let sum: f64 = xs.iter().sum();
+        let mean = sum / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Summary {
+            n: xs.len(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            mean,
+            std: var.sqrt(),
+            sum,
+        }
+    }
+
+    /// Max-to-average ratio — the paper's load-imbalance metric (§II).
+    pub fn max_avg_ratio(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.max / self.mean
+        }
+    }
+
+    /// Population coefficient of variation.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Percentile over unsorted data (nearest-rank on a sorted copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Exponential moving average accumulator (used for chare load history).
+#[derive(Debug, Clone, Copy)]
+pub struct Ema {
+    pub alpha: f64,
+    pub value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+/// `a ≈ b` within absolute and relative tolerance.
+pub fn approx_eq(a: f64, b: f64, atol: f64, rtol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(approx_eq(s.mean, 2.5, 1e-12, 0.0));
+        assert!(approx_eq(s.max_avg_ratio(), 1.6, 1e-12, 0.0));
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.max_avg_ratio(), 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!(approx_eq(percentile(&xs, 50.0), 50.0, 1.0, 0.0));
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..30 {
+            e.update(10.0);
+        }
+        assert!(approx_eq(e.get(), 10.0, 1e-6, 0.0));
+    }
+}

@@ -1,0 +1,189 @@
+//! Partition visualizations (paper Figs 1-2): render an instance's
+//! object layout colored by owning PE, as PPM (raster) and SVG
+//! (vector). Objects are drawn as filled circles at their coordinates —
+//! the same presentation the paper's simulator produces.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::Instance;
+
+/// Distinct, stable color per PE: golden-angle hue walk in HSV.
+pub fn pe_color(pe: u32) -> [u8; 3] {
+    let hue = (pe as f64 * 137.507_764) % 360.0;
+    let (s, v) = (0.65, 0.92);
+    hsv_to_rgb(hue, s, v)
+}
+
+fn hsv_to_rgb(h: f64, s: f64, v: f64) -> [u8; 3] {
+    let c = v * s;
+    let hp = h / 60.0;
+    let x = c * (1.0 - (hp % 2.0 - 1.0).abs());
+    let (r, g, b) = match hp as u32 {
+        0 => (c, x, 0.0),
+        1 => (x, c, 0.0),
+        2 => (0.0, c, x),
+        3 => (0.0, x, c),
+        4 => (x, 0.0, c),
+        _ => (c, 0.0, x),
+    };
+    let m = v - c;
+    [
+        ((r + m) * 255.0) as u8,
+        ((g + m) * 255.0) as u8,
+        ((b + m) * 255.0) as u8,
+    ]
+}
+
+/// A simple RGB raster canvas with a binary-PPM writer.
+pub struct Canvas {
+    pub w: usize,
+    pub h: usize,
+    pub pixels: Vec<u8>, // RGB8
+}
+
+impl Canvas {
+    pub fn new(w: usize, h: usize) -> Canvas {
+        Canvas { w, h, pixels: vec![255; w * h * 3] }
+    }
+
+    pub fn set(&mut self, x: i64, y: i64, c: [u8; 3]) {
+        if x < 0 || y < 0 || x as usize >= self.w || y as usize >= self.h {
+            return;
+        }
+        let i = (y as usize * self.w + x as usize) * 3;
+        self.pixels[i..i + 3].copy_from_slice(&c);
+    }
+
+    pub fn fill_circle(&mut self, cx: f64, cy: f64, r: f64, c: [u8; 3]) {
+        let (x0, x1) = ((cx - r).floor() as i64, (cx + r).ceil() as i64);
+        let (y0, y1) = ((cy - r).floor() as i64, (cy + r).ceil() as i64);
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                let dx = x as f64 + 0.5 - cx;
+                let dy = y as f64 + 0.5 - cy;
+                if dx * dx + dy * dy <= r * r {
+                    self.set(x, y, c);
+                }
+            }
+        }
+    }
+
+    /// Write binary PPM (P6).
+    pub fn write_ppm(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {}", path.as_ref().display()))?,
+        );
+        write!(f, "P6\n{} {}\n255\n", self.w, self.h)?;
+        f.write_all(&self.pixels)?;
+        Ok(())
+    }
+}
+
+/// Bounding box of instance coordinates (min, max per axis).
+fn bounds(inst: &Instance) -> ([f64; 2], [f64; 2]) {
+    let mut lo = [f64::INFINITY; 2];
+    let mut hi = [f64::NEG_INFINITY; 2];
+    for c in &inst.coords {
+        for d in 0..2 {
+            lo[d] = lo[d].min(c[d]);
+            hi[d] = hi[d].max(c[d]);
+        }
+    }
+    if !lo[0].is_finite() {
+        return ([0.0; 2], [1.0; 2]);
+    }
+    (lo, hi)
+}
+
+/// Render objects as PE-colored circles to a PPM file (`mapping` may be
+/// the instance's own mapping or a strategy output).
+pub fn render_ppm(
+    inst: &Instance,
+    mapping: &[u32],
+    px_per_unit: f64,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    let (lo, hi) = bounds(inst);
+    let pad = 1.0;
+    let w = (((hi[0] - lo[0]) + 2.0 * pad) * px_per_unit).ceil() as usize;
+    let h = (((hi[1] - lo[1]) + 2.0 * pad) * px_per_unit).ceil() as usize;
+    let mut canvas = Canvas::new(w.max(8), h.max(8));
+    let r = (px_per_unit * 0.38).max(1.5);
+    for (o, c) in inst.coords.iter().enumerate() {
+        let x = (c[0] - lo[0] + pad) * px_per_unit;
+        let y = (c[1] - lo[1] + pad) * px_per_unit;
+        canvas.fill_circle(x, y, r, pe_color(mapping[o]));
+    }
+    canvas.write_ppm(path)
+}
+
+/// Render the same picture as SVG.
+pub fn render_svg(
+    inst: &Instance,
+    mapping: &[u32],
+    px_per_unit: f64,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    let (lo, hi) = bounds(inst);
+    let pad = 1.0;
+    let w = ((hi[0] - lo[0]) + 2.0 * pad) * px_per_unit;
+    let h = ((hi[1] - lo[1]) + 2.0 * pad) * px_per_unit;
+    let r = (px_per_unit * 0.38).max(1.5);
+    let mut s = format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{w:.0}\" height=\"{h:.0}\" \
+         viewBox=\"0 0 {w:.2} {h:.2}\">\n<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n"
+    );
+    for (o, c) in inst.coords.iter().enumerate() {
+        let x = (c[0] - lo[0] + pad) * px_per_unit;
+        let y = (c[1] - lo[1] + pad) * px_per_unit;
+        let [cr, cg, cb] = pe_color(mapping[o]);
+        s.push_str(&format!(
+            "<circle cx=\"{x:.2}\" cy=\"{y:.2}\" r=\"{r:.2}\" fill=\"rgb({cr},{cg},{cb})\"/>\n"
+        ));
+    }
+    s.push_str("</svg>\n");
+    std::fs::write(path.as_ref(), s)
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::{stencil_2d, Decomposition};
+
+    #[test]
+    fn colors_are_distinct_for_small_pe_counts() {
+        let mut seen = std::collections::HashSet::new();
+        for pe in 0..64 {
+            assert!(seen.insert(pe_color(pe)), "duplicate color for pe {pe}");
+        }
+    }
+
+    #[test]
+    fn canvas_bounds_are_safe() {
+        let mut c = Canvas::new(10, 10);
+        c.set(-5, 3, [0, 0, 0]);
+        c.set(100, 100, [0, 0, 0]);
+        c.fill_circle(0.0, 0.0, 3.0, [10, 20, 30]);
+        assert_eq!(c.pixels.len(), 300);
+    }
+
+    #[test]
+    fn renders_both_formats() {
+        let inst = stencil_2d(8, 2, 2, Decomposition::Tiled);
+        let dir = std::env::temp_dir().join("difflb_viz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ppm = dir.join("t.ppm");
+        let svg = dir.join("t.svg");
+        render_ppm(&inst, &inst.mapping, 8.0, &ppm).unwrap();
+        render_svg(&inst, &inst.mapping, 8.0, &svg).unwrap();
+        let ppm_bytes = std::fs::read(&ppm).unwrap();
+        assert!(ppm_bytes.starts_with(b"P6"));
+        let svg_text = std::fs::read_to_string(&svg).unwrap();
+        assert_eq!(svg_text.matches("<circle").count(), 64);
+    }
+}

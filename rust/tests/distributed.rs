@@ -1,0 +1,62 @@
+//! Distributed-protocol validation: the threaded handshake
+//! (simnet::protocol) must produce exactly the pairings of the
+//! round-synchronous sequential model used inside the strategies, over
+//! randomized candidate structures — the evidence that the strategy's
+//! stage 1 faithfully models a real distributed execution.
+
+use difflb::simnet::protocol::distributed_select_neighbors;
+use difflb::strategies::diffusion::neighbor::{select_neighbors, Candidates};
+use difflb::util::rng::Rng;
+
+fn random_candidates(n: usize, rng: &mut Rng) -> Candidates {
+    (0..n)
+        .map(|i| {
+            let mut peers: Vec<u32> = (0..n as u32).filter(|&j| j != i as u32).collect();
+            rng.shuffle(&mut peers);
+            // some nodes only see a subset (sparse comm graphs)
+            let keep = rng.range(1, peers.len().max(2));
+            peers.truncate(keep);
+            peers
+        })
+        .collect()
+}
+
+#[test]
+fn equivalence_on_random_candidate_sets() {
+    let mut rng = Rng::new(0xD157);
+    for trial in 0..25 {
+        let n = rng.range(2, 14);
+        let k = rng.range(1, 6);
+        let cands = random_candidates(n, &mut rng);
+        let seq = select_neighbors(&cands, k, 24);
+        let dist = distributed_select_neighbors(&cands, k, 24);
+        assert_eq!(seq.adj, dist.adj, "trial {trial} n={n} k={k} cands={cands:?}");
+    }
+}
+
+#[test]
+fn equivalence_under_comm_derived_candidates() {
+    use difflb::apps::stencil::{self, Decomposition};
+    use difflb::strategies::diffusion::neighbor::comm_candidates;
+    let mut inst = stencil::stencil_2d(24, 4, 4, Decomposition::Tiled);
+    stencil::inject_noise(&mut inst, 0.4, 5);
+    let node_map = inst.node_mapping();
+    let cands = comm_candidates(&inst, &node_map);
+    for k in [2, 4, 8] {
+        let seq = select_neighbors(&cands, k, 32);
+        let dist = distributed_select_neighbors(&cands, k, 32);
+        assert_eq!(seq.adj, dist.adj, "k={k}");
+        assert!(dist.is_symmetric());
+        assert!(dist.max_degree() <= k);
+    }
+}
+
+#[test]
+fn larger_cluster_terminates_quickly() {
+    let mut rng = Rng::new(7);
+    let cands = random_candidates(32, &mut rng);
+    let t = std::time::Instant::now();
+    let g = distributed_select_neighbors(&cands, 4, 32);
+    assert!(g.is_symmetric());
+    assert!(t.elapsed().as_secs_f64() < 10.0, "protocol too slow");
+}

@@ -1,0 +1,192 @@
+//! Cross-module integration tests: the full LB pipeline over realistic
+//! workloads, determinism, instance round-trips, and the coordinator's
+//! config-driven assembly.
+
+use difflb::apps::stencil::{self, Decomposition};
+use difflb::coordinator::Coordinator;
+use difflb::model::{evaluate_mapping, Instance};
+use difflb::strategies::{make, StrategyParams, AVAILABLE};
+use difflb::util::config::Config;
+use difflb::util::prop;
+
+fn workloads() -> Vec<(&'static str, Instance)> {
+    let mut w = Vec::new();
+    let mut a = stencil::stencil_2d(24, 4, 4, Decomposition::Tiled);
+    stencil::inject_noise(&mut a, 0.4, 1);
+    w.push(("2d-noise", a));
+    let mut b = stencil::stencil_3d(8, 8);
+    stencil::inject_mod7(&mut b, 3.0, 0.3);
+    w.push(("3d-mod7", b));
+    let mut c = stencil::ring(10, 16);
+    stencil::overload_pe(&mut c, 0, 10.0);
+    w.push(("ring-hotspot", c));
+    let d = stencil::stencil_2d(16, 8, 2, Decomposition::Striped);
+    w.push(("2d-striped", d));
+    w
+}
+
+#[test]
+fn every_strategy_on_every_workload() {
+    for (wname, inst) in workloads() {
+        for name in AVAILABLE {
+            let lb = make(name, StrategyParams::default()).unwrap();
+            let asg = lb.rebalance(&inst);
+            assert_eq!(asg.mapping.len(), inst.n_objects(), "{name}/{wname}");
+            let m = evaluate_mapping(&inst, &asg.mapping);
+            assert!(m.max_avg_pe.is_finite(), "{name}/{wname}");
+            // no strategy may lose objects to out-of-range PEs
+            assert!(
+                asg.mapping.iter().all(|&pe| (pe as usize) < inst.topo.n_pes()),
+                "{name}/{wname}"
+            );
+        }
+    }
+}
+
+#[test]
+fn balancers_improve_or_preserve_balance() {
+    for (wname, inst) in workloads() {
+        let before = evaluate_mapping(&inst, &inst.mapping);
+        for name in ["diff-comm", "diff-coord", "greedy", "greedy-refine", "metis", "parmetis"] {
+            let lb = make(name, StrategyParams::default()).unwrap();
+            let m = evaluate_mapping(&inst, &lb.rebalance(&inst).mapping);
+            assert!(
+                m.max_avg_pe <= before.max_avg_pe * 1.05 + 0.05,
+                "{name}/{wname}: {} -> {}",
+                before.max_avg_pe,
+                m.max_avg_pe
+            );
+        }
+    }
+}
+
+#[test]
+fn determinism_across_runs() {
+    for (wname, inst) in workloads() {
+        for name in AVAILABLE {
+            let a = make(name, StrategyParams::default()).unwrap().rebalance(&inst);
+            let b = make(name, StrategyParams::default()).unwrap().rebalance(&inst);
+            assert_eq!(a.mapping, b.mapping, "{name}/{wname} nondeterministic");
+        }
+    }
+}
+
+#[test]
+fn lbi_round_trip_preserves_metrics() {
+    for (_, inst) in workloads() {
+        let text = inst.to_lbi();
+        let back = Instance::from_lbi(&text).unwrap();
+        let m1 = evaluate_mapping(&inst, &inst.mapping);
+        let m2 = evaluate_mapping(&back, &back.mapping);
+        assert!((m1.max_avg_pe - m2.max_avg_pe).abs() < 1e-12);
+        assert!((m1.comm_nodes.ratio() - m2.comm_nodes.ratio()).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn coordinator_full_cycle_from_config() {
+    let cfg = Config::from_str(
+        "[lb]\nstrategy = diff-comm\nneighbors = 4\n[run]\niters = 8\nlb_period = 4\n\
+         [pic]\ngrid = 48\nparticles = 1200\nchares_x = 6\nchares_y = 6\nbackend = native\nthreads = 2\n\
+         [topo]\nnodes = 3",
+    )
+    .unwrap();
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let rep = coord.run_pic(&cfg).unwrap();
+    assert!(rep.verified);
+    assert_eq!(rep.records.len(), 8);
+    assert!(rep.records.iter().any(|r| r.migrations > 0 || r.lb_s >= 0.0));
+}
+
+#[test]
+fn hierarchical_topology_end_to_end() {
+    // 2 nodes x 4 PEs: diffusion balances nodes, hierarchical spreads
+    // within each node.
+    let mut inst = stencil::stencil_2d(16, 4, 2, Decomposition::Tiled);
+    // re-home onto a hierarchical topology
+    let inst = Instance::new(
+        {
+            stencil::inject_noise(&mut inst, 0.4, 3);
+            inst.loads.clone()
+        },
+        inst.coords.clone(),
+        inst.graph.clone(),
+        inst.mapping.clone(),
+        difflb::model::Topology::new(2, 4),
+    );
+    let lb = make("diff-comm", StrategyParams::default()).unwrap();
+    let asg = lb.rebalance(&inst);
+    let m = evaluate_mapping(&inst, &asg.mapping);
+    let before = evaluate_mapping(&inst, &inst.mapping);
+    assert!(m.max_avg_node <= before.max_avg_node + 1e-9);
+    // every PE in range and each node nonempty
+    let pe_loads = inst.pe_loads(&asg.mapping);
+    assert_eq!(pe_loads.len(), 8);
+}
+
+#[test]
+fn diffusion_single_hop_and_conservation_property() {
+    prop::check("pipeline invariants", 20, |g| {
+        let side = 12 + 4 * g.usize_in(0, 3);
+        let mut inst = stencil::stencil_2d(side, 4, 4, Decomposition::Tiled);
+        stencil::inject_noise(&mut inst, 0.6, g.seed);
+        let lb = difflb::strategies::diffusion::Diffusion::communication(
+            StrategyParams::default(),
+        );
+        let (neigh, quotas) = lb.plan(&inst);
+        // quotas conserve load
+        let node_loads = inst.node_loads(&inst.mapping);
+        let after = quotas.apply(&node_loads);
+        prop::assert_close(after.iter().sum(), node_loads.iter().sum(), 1e-9)?;
+        // migrations stay single-hop
+        use difflb::strategies::LoadBalancer;
+        let asg = lb.rebalance(&inst);
+        for o in 0..inst.n_objects() {
+            let from = inst.topo.node_of_pe(inst.mapping[o]);
+            let to = inst.topo.node_of_pe(asg.mapping[o]);
+            if from != to && !neigh.adj[from as usize].contains(&to) {
+                return Err(format!("object {o} hopped {from}->{to}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cli_binary_help_and_strategies() {
+    // the built binary responds to basic invocations
+    let bin = env!("CARGO_BIN_EXE_difflb");
+    let out = std::process::Command::new(bin).arg("strategies").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for s in AVAILABLE {
+        assert!(text.contains(s), "missing {s}");
+    }
+}
+
+#[test]
+fn cli_balance_round_trip() {
+    let dir = std::env::temp_dir().join("difflb_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let lbi = dir.join("w.lbi");
+    let out = dir.join("w_balanced.lbi");
+    let mut inst = stencil::stencil_2d(16, 4, 4, Decomposition::Tiled);
+    stencil::inject_noise(&mut inst, 0.4, 9);
+    inst.save(&lbi).unwrap();
+
+    let bin = env!("CARGO_BIN_EXE_difflb");
+    let res = std::process::Command::new(bin)
+        .args([
+            "balance",
+            lbi.to_str().unwrap(),
+            "--strategy",
+            "diff-comm",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(res.status.success(), "{}", String::from_utf8_lossy(&res.stderr));
+    let rebalanced = Instance::load(&out).unwrap();
+    assert_eq!(rebalanced.n_objects(), inst.n_objects());
+}

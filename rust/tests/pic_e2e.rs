@@ -1,0 +1,116 @@
+//! End-to-end PIC PRK: the full three-layer stack (PJRT kernel →
+//! chare runtime → diffusion LB) must keep physics exact under every
+//! strategy, and both backends must produce identical trajectories.
+
+use std::sync::Arc;
+
+use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
+use difflb::apps::stencil::Decomposition;
+use difflb::model::Topology;
+use difflb::runtime::{Engine, Manifest};
+use difflb::strategies::{make, StrategyParams};
+
+fn cfg(n_particles: usize, nodes: usize) -> PicConfig {
+    PicConfig {
+        grid: 96,
+        n_particles,
+        k: 2,
+        m: 1,
+        init: InitMode::Geometric { rho: 0.9 },
+        chares_x: 8,
+        chares_y: 8,
+        decomp: Decomposition::Striped,
+        topo: Topology::flat(nodes),
+        q: 1.0,
+        seed: 0xE2E,
+        particle_bytes: 48.0,
+        threads: 4,
+    }
+}
+
+fn pjrt_backend() -> Option<Backend> {
+    match Manifest::load_default() {
+        Ok(m) => Some(Backend::Pjrt(Arc::new(Engine::with_manifest(m).unwrap()))),
+        Err(e) => {
+            eprintln!("SKIP pjrt: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn verified_under_every_strategy_native() {
+    for name in ["none", "greedy-refine", "diff-comm", "diff-coord", "metis", "parmetis"] {
+        let mut app = PicApp::new(cfg(2_500, 4), Backend::Native).unwrap();
+        let strat = make(name, StrategyParams::default()).unwrap();
+        let driver = DriverConfig { iters: 12, lb_period: 4, ..Default::default() };
+        let rep = run_pic(&mut app, strat.as_ref(), &driver).unwrap();
+        assert!(rep.verified, "verification failed under {name}");
+    }
+}
+
+#[test]
+fn verified_with_pjrt_backend_and_lb() {
+    let Some(backend) = pjrt_backend() else { return };
+    let mut app = PicApp::new(cfg(2_000, 4), backend).unwrap();
+    let strat = make("diff-comm", StrategyParams::default()).unwrap();
+    let driver = DriverConfig { iters: 10, lb_period: 5, ..Default::default() };
+    let rep = run_pic(&mut app, strat.as_ref(), &driver).unwrap();
+    assert!(rep.verified);
+    assert!(rep.total_migrations > 0, "expected some migrations");
+}
+
+#[test]
+fn backends_agree_on_trajectories() {
+    let Some(backend) = pjrt_backend() else { return };
+    let mut native = PicApp::new(cfg(1_200, 2), Backend::Native).unwrap();
+    let mut pjrt = PicApp::new(cfg(1_200, 2), backend).unwrap();
+    for _ in 0..6 {
+        native.step().unwrap();
+        pjrt.step().unwrap();
+    }
+    for i in 0..native.state.len() {
+        assert!((native.state.x[i] - pjrt.state.x[i]).abs() < 1e-9, "i={i}");
+        assert!((native.state.y[i] - pjrt.state.y[i]).abs() < 1e-9, "i={i}");
+    }
+    // chare occupancy identical too
+    assert_eq!(native.chare_particle_counts(), pjrt.chare_particle_counts());
+}
+
+#[test]
+fn imbalance_wave_moves_across_pes() {
+    // Fig 3's phenomenon: the particle mass sweeps rightward through
+    // striped PEs over time.
+    let mut app = PicApp::new(cfg(4_000, 4), Backend::Native).unwrap();
+    let first_owner = {
+        let counts = app.pe_particle_counts();
+        counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0
+    };
+    // displacement is 5 cells/step; PE stripe width = 96/4 = 24 cells:
+    // after ~8 steps the hotspot crosses into the next stripe
+    for _ in 0..10 {
+        app.step().unwrap();
+    }
+    let later_owner = {
+        let counts = app.pe_particle_counts();
+        counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0
+    };
+    assert!(later_owner >= first_owner, "hotspot moved {first_owner} -> {later_owner}");
+    assert_ne!(first_owner, later_owner, "hotspot should have crossed a stripe");
+}
+
+#[test]
+fn diffusion_beats_no_lb_on_particle_balance() {
+    let driver = DriverConfig { iters: 40, lb_period: 10, ..Default::default() };
+    let avg_ratio = |strategy: &str| {
+        let mut app = PicApp::new(cfg(4_000, 4), Backend::Native).unwrap();
+        let s = make(strategy, StrategyParams::default()).unwrap();
+        let rep = run_pic(&mut app, s.as_ref(), &driver).unwrap();
+        assert!(rep.verified);
+        rep.records.iter().map(|r| r.particles_max_avg).sum::<f64>() / rep.records.len() as f64
+    };
+    let none = avg_ratio("none");
+    let diff = avg_ratio("diff-comm");
+    assert!(diff < none, "diffusion {diff} !< none {none}");
+}

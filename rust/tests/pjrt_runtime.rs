@@ -1,0 +1,112 @@
+//! PJRT runtime integration: the AOT HLO artifacts must load, compile,
+//! and agree numerically with the native Rust implementation of the
+//! same math (which pytest separately validates against the pure-jnp
+//! oracle — closing the three-way loop kernel ⇄ oracle ⇄ rust).
+//!
+//! Requires `make artifacts` to have run (skips gracefully otherwise,
+//! but `make test` always builds artifacts first).
+
+use difflb::apps::pic::init::{initialize, InitMode};
+use difflb::apps::pic::push::native_push;
+use difflb::runtime::{Engine, Manifest, PicBatch};
+
+fn engine_or_skip() -> Option<Engine> {
+    match Manifest::load_default() {
+        Ok(m) => Some(Engine::with_manifest(m).expect("PJRT client failed")),
+        Err(e) => {
+            eprintln!("SKIP: artifacts missing ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn batch(n: usize, seed: u64) -> PicBatch {
+    let pop = initialize(InitMode::Geometric { rho: 0.9 }, n, 64, 2, 1, 1.0, seed);
+    PicBatch { x: pop.x, y: pop.y, vx: pop.vx, vy: pop.vy, q: pop.q }
+}
+
+#[test]
+fn pjrt_matches_native_exactly_one_step() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut a = batch(1024, 1);
+    let mut b = a.clone();
+    engine.pic_push(&mut a, 64.0, 1.0).unwrap();
+    native_push(&mut b, 64.0, 1.0, 4);
+    for i in 0..a.len() {
+        assert!((a.x[i] - b.x[i]).abs() < 1e-12, "x[{i}] {} vs {}", a.x[i], b.x[i]);
+        assert!((a.y[i] - b.y[i]).abs() < 1e-12);
+        assert!((a.vx[i] - b.vx[i]).abs() < 1e-12);
+        assert!((a.vy[i] - b.vy[i]).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn pjrt_handles_unaligned_batches_with_padding() {
+    let Some(engine) = engine_or_skip() else { return };
+    // 1500 particles: not a multiple of any artifact batch size
+    let mut a = batch(1500, 2);
+    let mut b = a.clone();
+    engine.pic_push(&mut a, 64.0, 1.0).unwrap();
+    native_push(&mut b, 64.0, 1.0, 4);
+    assert_eq!(a.len(), 1500);
+    for i in 0..a.len() {
+        assert!((a.x[i] - b.x[i]).abs() < 1e-12, "i={i}");
+        assert!((a.y[i] - b.y[i]).abs() < 1e-12, "i={i}");
+    }
+}
+
+#[test]
+fn pjrt_multi_step_deterministic_displacement() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (k, m, l) = (2u32, 1u32, 64.0);
+    let pop = initialize(InitMode::Geometric { rho: 0.9 }, 2048, 64, k, m, 1.0, 3);
+    let x0 = pop.x.clone();
+    let y0 = pop.y.clone();
+    let mut b = PicBatch { x: pop.x, y: pop.y, vx: pop.vx, vy: pop.vy, q: pop.q };
+    let steps = 5;
+    for _ in 0..steps {
+        engine.pic_push(&mut b, l, 1.0).unwrap();
+    }
+    for i in 0..b.len() {
+        let ex = (x0[i] + steps as f64 * (2 * k + 1) as f64).rem_euclid(l);
+        let ey = (y0[i] + steps as f64 * m as f64).rem_euclid(l);
+        assert!((b.x[i] - ex).abs() < 1e-6, "x[{i}] {} vs {ex}", b.x[i]);
+        assert!((b.y[i] - ey).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn stencil_artifact_matches_reference() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (r, c) = (256usize, 256usize);
+    let grid: Vec<f64> = (0..r * c).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0).collect();
+    let alpha = 0.2;
+    let out = engine.stencil_step(&grid, r, c, alpha).unwrap();
+    // rust reference: periodic 5-point jacobi
+    for row in [0usize, 1, r / 2, r - 1] {
+        for col in [0usize, 1, c / 2, c - 1] {
+            let at = |rr: usize, cc: usize| grid[(rr % r) * c + (cc % c)];
+            let expect = (1.0 - 4.0 * alpha) * at(row, col)
+                + alpha
+                    * (at(row + r - 1, col)
+                        + at(row + 1, col)
+                        + at(row, col + c - 1)
+                        + at(row, col + 1));
+            let got = out[row * c + col];
+            assert!((got - expect).abs() < 1e-12, "({row},{col}): {got} vs {expect}");
+        }
+    }
+    // mean conservation
+    let mean_in: f64 = grid.iter().sum::<f64>() / grid.len() as f64;
+    let mean_out: f64 = out.iter().sum::<f64>() / out.len() as f64;
+    assert!((mean_in - mean_out).abs() < 1e-12);
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let Some(engine) = engine_or_skip() else { return };
+    let m = engine.manifest();
+    assert!(m.pic_batch_sizes().len() >= 2, "want multiple pic batch sizes");
+    assert!(m.stencil_for(256, 256).is_some());
+    assert!(m.pic_epoch(5).is_some(), "fused-epoch artifact missing");
+}

@@ -2,25 +2,47 @@
 //! EXPERIMENTS.md §Perf: the native particle push (throughput), the
 //! PJRT kernel path (dispatch + execute), the three diffusion stages,
 //! the baselines, and the metrics/instance plumbing.
+//!
+//! Besides the human-readable report on stdout, every timed path is
+//! recorded into `BENCH_hotpaths.json` (override the location with
+//! `DIFFLB_BENCH_JSON`; shrink the per-path budget for smoke runs with
+//! `DIFFLB_BENCH_BUDGET_MS`) so the perf trajectory is tracked
+//! machine-readably from PR to PR.
 
 use std::time::Duration;
 
 use difflb::apps::pic::init::{initialize, InitMode};
 use difflb::apps::pic::push::native_push;
 use difflb::apps::pic::{Backend, PicApp, PicConfig};
-use difflb::apps::stencil::{self, Decomposition};
+use difflb::apps::stencil::{self, Decomposition, StencilSim};
 use difflb::model::{evaluate_mapping, Topology};
 use difflb::runtime::{Engine, Manifest, PicBatch};
 use difflb::strategies::diffusion::{neighbor, virtual_lb, Diffusion};
-use difflb::strategies::{make, StrategyParams};
-use difflb::util::bench::{time_fn, Timing};
+use difflb::strategies::{make, LoadBalancer, StrategyParams};
+use difflb::util::bench::{time_fn, JsonReport, Timing};
 
-fn report(t: &Timing, extra: &str) {
-    println!("{}  {extra}", t.report());
+struct Report {
+    json: JsonReport,
+}
+
+impl Report {
+    fn record(&mut self, t: &Timing, throughput: Option<(&str, f64)>) {
+        let extra = match throughput {
+            Some((unit, v)) => format!("{v:.1} {unit}"),
+            None => String::new(),
+        };
+        println!("{}  {extra}", t.report());
+        self.json.add(t, throughput);
+    }
 }
 
 fn main() -> anyhow::Result<()> {
-    let budget = Duration::from_millis(400);
+    let budget_ms: u64 = std::env::var("DIFFLB_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let budget = Duration::from_millis(budget_ms);
+    let mut rep = Report { json: JsonReport::new() };
 
     // ---------- L1/L2 surrogate + L3 compute: particle push
     let n = 65_536;
@@ -32,22 +54,28 @@ fn main() -> anyhow::Result<()> {
             native_push(&mut b, 1000.0, 1.0, threads);
             b.x[0]
         });
-        report(&t, &format!("{:.1} Mparticles/s", n as f64 / t.mean_s / 1e6));
+        let mps = n as f64 / t.mean_s / 1e6;
+        rep.record(&t, Some(("Mparticles/s", mps)));
     }
     if let Ok(m) = Manifest::load_default() {
-        let engine = Engine::with_manifest(m)?;
-        let mut b = base.clone();
-        let t = time_fn(&format!("pjrt_push n={n}"), budget, || {
-            engine.pic_push(&mut b, 1000.0, 1.0).unwrap();
-            b.x[0]
-        });
-        report(&t, &format!("{:.1} Mparticles/s", n as f64 / t.mean_s / 1e6));
-        // stencil artifact
-        let grid: Vec<f64> = (0..256 * 256).map(|i| i as f64).collect();
-        let t = time_fn("pjrt_stencil 256x256", budget, || {
-            engine.stencil_step(&grid, 256, 256, 0.2).unwrap()[0]
-        });
-        report(&t, &format!("{:.1} Mcell/s", 256.0 * 256.0 / t.mean_s / 1e6));
+        match Engine::with_manifest(m) {
+            Ok(engine) => {
+                let mut b = base.clone();
+                let t = time_fn(&format!("pjrt_push n={n}"), budget, || {
+                    engine.pic_push(&mut b, 1000.0, 1.0).unwrap();
+                    b.x[0]
+                });
+                let mps = n as f64 / t.mean_s / 1e6;
+                rep.record(&t, Some(("Mparticles/s", mps)));
+                // stencil artifact
+                let grid: Vec<f64> = (0..256 * 256).map(|i| i as f64).collect();
+                let t = time_fn("pjrt_stencil 256x256", budget, || {
+                    engine.stencil_step(&grid, 256, 256, 0.2).unwrap()[0]
+                });
+                rep.record(&t, Some(("Mcell/s", 256.0 * 256.0 / t.mean_s / 1e6)));
+            }
+            Err(e) => println!("(PJRT engine unavailable: {e}; skipping kernel benches)"),
+        }
     } else {
         println!("(PJRT artifacts missing; skipping kernel benches)");
     }
@@ -59,28 +87,28 @@ fn main() -> anyhow::Result<()> {
     let t = time_fn("stage1 comm_candidates (9216 obj, 64 PEs)", budget, || {
         neighbor::comm_candidates(&inst, &node_map).len()
     });
-    report(&t, "");
+    rep.record(&t, None);
     let cands = neighbor::comm_candidates(&inst, &node_map);
     let t = time_fn("stage1 handshake K=4", budget, || {
         neighbor::select_neighbors(&cands, 4, 32).max_degree()
     });
-    report(&t, "");
+    rep.record(&t, None);
     let neigh = neighbor::select_neighbors(&cands, 4, 32);
     let loads = inst.node_loads(&inst.mapping);
     let t = time_fn("stage2 virtual_balance", budget, || {
         virtual_lb::virtual_balance(&neigh, &loads, 0.05, 200).iterations
     });
-    report(&t, "");
+    rep.record(&t, None);
     let diff = Diffusion::communication(StrategyParams::default());
-    use difflb::strategies::LoadBalancer;
     let t = time_fn("diffusion full rebalance", budget, || diff.rebalance(&inst).mapping[0]);
-    report(&t, "");
+    let rps = 1.0 / t.mean_s;
+    rep.record(&t, Some(("rebalances/s", rps)));
 
     // ---------- baselines on the same instance
     for name in ["greedy-refine", "metis", "parmetis"] {
         let lb = make(name, StrategyParams::default())?;
         let t = time_fn(&format!("{name} rebalance"), budget, || lb.rebalance(&inst).mapping[0]);
-        report(&t, "");
+        rep.record(&t, None);
     }
 
     // ---------- metrics + plumbing
@@ -88,9 +116,17 @@ fn main() -> anyhow::Result<()> {
     let t = time_fn("evaluate_mapping", budget, || {
         evaluate_mapping(&inst, &asg.mapping).migrations
     });
-    report(&t, "");
+    rep.record(&t, None);
     let t = time_fn("instance .lbi serialize", budget, || inst.to_lbi().len());
-    report(&t, "");
+    rep.record(&t, None);
+
+    // ---------- incremental comm-graph refresh between LB rounds
+    let mut sim = StencilSim::new(96, 8, 8, Decomposition::Tiled, 0.4, 3);
+    sim.advance(); // warm: structure established
+    let t = time_fn("comm graph incremental refresh (9216 obj)", budget, || {
+        sim.advance()
+    });
+    rep.record(&t, None);
 
     // ---------- app iteration (binning + traffic)
     let cfg = PicConfig {
@@ -106,6 +142,22 @@ fn main() -> anyhow::Result<()> {
     let t = time_fn("pic app.step (200k particles)", budget, || {
         app.step().unwrap().crossers
     });
-    report(&t, &format!("{:.1} Mparticles/s end-to-end", 200_000.0 / t.mean_s / 1e6));
+    let mps = 200_000.0 / t.mean_s / 1e6;
+    rep.record(&t, Some(("Mparticles/s", mps)));
+
+    // cargo bench runs this binary with cwd = the package root (rust/),
+    // so the default anchors to the manifest dir's parent — the repo
+    // root, where the tracked BENCH_hotpaths.json lives. An explicit
+    // DIFFLB_BENCH_JSON is taken verbatim (pass an absolute path from
+    // CI).
+    let out = std::env::var("DIFFLB_BENCH_JSON").unwrap_or_else(|_| {
+        format!("{}/../BENCH_hotpaths.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let label = format!(
+        "perf_hotpaths budget={budget_ms}ms threads={}",
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    );
+    rep.json.write(&out, &label)?;
+    println!("wrote {out} ({} paths)", rep.json.len());
     Ok(())
 }

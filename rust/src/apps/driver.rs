@@ -79,6 +79,11 @@ pub fn run_pic(
     let topo = app.cfg.topo;
     let neighbor_pairs = app.chare_neighbor_pairs();
     let mut report = RunReport::default();
+    // Per-iteration accounting buffers, hoisted out of the loop: the
+    // seed rebuilt a payload HashMap and a CostTracker every step.
+    let mut tracker = CostTracker::new(topo.n_nodes);
+    let mut payload: Vec<(u32, u32, f64)> = Vec::new();
+    let mut consumed: Vec<bool> = Vec::new();
     for iter in 0..cfg.iters {
         let stats = app.step()?;
 
@@ -95,20 +100,34 @@ pub fn run_pic(
 
         // --- comm accounting at node granularity: every adjacent chare
         // pair exchanges one sync message per step (α even when empty),
-        // carrying that step's migrated-particle payload.
-        let mut payload: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
-        for &(c_from, c_to, bytes) in &stats.moved {
-            *payload.entry((c_from.min(c_to), c_from.max(c_to))).or_insert(0.0) += bytes;
-        }
-        let mut tracker = CostTracker::new(topo.n_nodes);
+        // carrying that step's migrated-particle payload. `stats.moved`
+        // is already (from, to)-aggregated; canonicalize to unordered
+        // pairs and sort-merge into the reused payload buffer.
+        payload.clear();
+        payload.extend(
+            stats.moved.iter().map(|&(f, t, bytes)| (f.min(t), f.max(t), bytes)),
+        );
+        crate::model::graph::sort_sum_merge(&mut payload);
+        consumed.clear();
+        consumed.resize(payload.len(), false);
+        tracker.reset();
         for &(a, b) in &neighbor_pairs {
             let n_a = topo.node_of_pe(app.chare_to_pe[a as usize]);
             let n_b = topo.node_of_pe(app.chare_to_pe[b as usize]);
-            let bytes = payload.remove(&(a, b)).unwrap_or(0.0);
+            let bytes = match payload.binary_search_by_key(&(a, b), |&(x, y, _)| (x, y)) {
+                Ok(idx) => {
+                    consumed[idx] = true;
+                    payload[idx].2
+                }
+                Err(_) => 0.0,
+            };
             tracker.record(n_a, n_b, bytes);
         }
         // non-adjacent crossings (possible when 2k+1 exceeds a chare)
-        for ((a, b), bytes) in payload {
+        for (idx, &(a, b, bytes)) in payload.iter().enumerate() {
+            if consumed[idx] {
+                continue;
+            }
             let n_a = topo.node_of_pe(app.chare_to_pe[a as usize]);
             let n_b = topo.node_of_pe(app.chare_to_pe[b as usize]);
             tracker.record(n_a, n_b, bytes);

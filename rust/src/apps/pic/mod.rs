@@ -13,14 +13,13 @@ pub mod init;
 pub mod push;
 pub mod verify;
 
-use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::apps::stencil::Decomposition;
-use crate::model::{Assignment, Instance, Topology, TrafficRecorder};
+use crate::model::{Assignment, CommGraph, Instance, Topology, TrafficRecorder};
 use crate::runtime::{Engine, PicBatch};
 
 pub use init::InitMode;
@@ -106,6 +105,14 @@ pub struct PicApp {
     pub chare_to_pe: Vec<u32>,
     /// Chare↔chare traffic since the last LB step.
     traffic: TrafficRecorder,
+    /// Communication graph refreshed incrementally from `traffic` each
+    /// LB round ([`CommGraph::update_from_recorder`]): the chare
+    /// adjacency persists across rounds, so the refresh usually only
+    /// overwrites weights instead of rebuilding the CSR.
+    comm_cache: CommGraph,
+    /// Per-step crosser log, reused across steps (sort-merged into
+    /// `StepStats::moved` — the seed built a HashMap per step).
+    moved_log: Vec<(u32, u32, f64)>,
     /// Static chare adjacency (sync-message partners), cached.
     neighbor_pairs: Vec<(u32, u32)>,
     /// Steps since the last build_instance (sync-traffic accounting).
@@ -138,6 +145,8 @@ impl PicApp {
             chare_of: vec![0; state.len()],
             chare_to_pe,
             traffic: TrafficRecorder::new(n_chares),
+            comm_cache: CommGraph::empty(n_chares),
+            moved_log: Vec::new(),
             neighbor_pairs: Vec::new(),
             steps_since_lb: 0,
             load_acc: vec![0.0; n_chares],
@@ -181,8 +190,11 @@ impl PicApp {
         }
         let push_s = t.elapsed().as_secs_f64();
 
-        // Re-bin + traffic accounting.
-        let mut moved: HashMap<(u32, u32), f64> = HashMap::new();
+        // Re-bin + traffic accounting. Crossings go to a flat reused
+        // log (no per-step HashMap); the aggregated `moved` list is
+        // produced below by the same stable sort-merge the recorder
+        // uses, so sums accumulate in crossing order as before.
+        self.moved_log.clear();
         let mut crossers = 0usize;
         for i in 0..self.state.len() {
             let nc = self.chare_of_pos(self.state.x[i], self.state.y[i]);
@@ -190,7 +202,7 @@ impl PicApp {
             if nc != oc {
                 crossers += 1;
                 self.traffic.record(oc, nc, self.cfg.particle_bytes);
-                *moved.entry((oc, nc)).or_insert(0.0) += self.cfg.particle_bytes;
+                self.moved_log.push((oc, nc, self.cfg.particle_bytes));
                 self.chare_of[i] = nc;
             }
         }
@@ -204,9 +216,9 @@ impl PicApp {
         self.steps_done += 1;
         self.steps_since_lb += 1;
 
-        let mut moved: Vec<(u32, u32, f64)> =
-            moved.into_iter().map(|((a, b), w)| (a, b, w)).collect();
-        moved.sort_unstable_by_key(|&(a, b, _)| (a, b));
+        // Aggregate the crosser log per directed (from, to) pair.
+        crate::model::graph::sort_sum_merge(&mut self.moved_log);
+        let moved = self.moved_log.clone();
         Ok(StepStats { push_s, moved, crossers })
     }
 
@@ -279,12 +291,19 @@ impl PicApp {
         // pair exchanges a small message each step (the Charm++ runtime
         // records these in the comm graph just like particle payloads),
         // so the balancer sees grid adjacency as well as particle flow.
-        let pairs = self.neighbor_pairs.clone();
-        for &(a, b) in &pairs {
-            self.traffic.record(a, b, SYNC_BYTES * self.steps_since_lb as f64);
+        {
+            let (traffic, pairs) = (&mut self.traffic, &self.neighbor_pairs);
+            for &(a, b) in pairs {
+                traffic.record(a, b, SYNC_BYTES * self.steps_since_lb as f64);
+            }
         }
         self.steps_since_lb = 0;
-        let graph = self.traffic.take_graph();
+        // Incremental refresh: chare adjacency persists across LB
+        // rounds, so this usually only overwrites CSR weights. The
+        // instance gets its own copy (a flat memcpy — still far cheaper
+        // than the seed's per-round HashMap freeze).
+        self.comm_cache.update_from_recorder(&mut self.traffic);
+        let graph = self.comm_cache.clone();
         let sizes: Vec<f64> =
             counts.iter().map(|&c| (c as f64) * self.cfg.particle_bytes).collect();
         self.load_acc.iter_mut().for_each(|l| *l = 0.0);

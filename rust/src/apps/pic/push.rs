@@ -57,13 +57,18 @@ pub fn push_one(
 }
 
 /// One PIC step over the whole batch, parallelized over `threads`
-/// chunks with scoped threads (no runtime deps available offline).
+/// chunks on the persistent [`crate::util::pool`] worker pool (the seed
+/// spawned scoped OS threads per step — spawn/join dominated small
+/// batches; see EXPERIMENTS.md §Perf). Chunk boundaries depend only on
+/// `(n, threads)`, and each chunk's math is unchanged, so the result is
+/// bit-identical to the sequential path and to the old per-step-spawn
+/// implementation for every thread count.
 pub fn native_push(b: &mut PicBatch, l: f64, big_q: f64, threads: usize) {
     let n = b.len();
     if n == 0 {
         return;
     }
-    // more threads than cores only adds spawn overhead
+    // more threads than cores only adds scheduling overhead
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     let threads = threads.clamp(1, n).min(cores);
     if threads == 1 {
@@ -78,33 +83,28 @@ pub fn native_push(b: &mut PicBatch, l: f64, big_q: f64, threads: usize) {
     }
     let chunk = n.div_ceil(threads);
     // Split all five arrays into matching chunks and push in parallel.
-    std::thread::scope(|scope| {
-        let mut rest: (&mut [f64], &mut [f64], &mut [f64], &mut [f64], &mut [f64]) = (
-            &mut b.x, &mut b.y, &mut b.vx, &mut b.vy, &mut b.q,
-        );
-        let mut handles = Vec::new();
-        while !rest.0.is_empty() {
-            let take = chunk.min(rest.0.len());
-            let (x, xr) = rest.0.split_at_mut(take);
-            let (y, yr) = rest.1.split_at_mut(take);
-            let (vx, vxr) = rest.2.split_at_mut(take);
-            let (vy, vyr) = rest.3.split_at_mut(take);
-            let (q, qr) = rest.4.split_at_mut(take);
-            rest = (xr, yr, vxr, vyr, qr);
-            handles.push(scope.spawn(move || {
-                for i in 0..x.len() {
-                    let (xn, yn, vxn, vyn) = push_one(x[i], y[i], vx[i], vy[i], q[i], l, big_q);
-                    x[i] = xn;
-                    y[i] = yn;
-                    vx[i] = vxn;
-                    vy[i] = vyn;
-                }
-            }));
-        }
-        for h in handles {
-            h.join().expect("push worker panicked");
-        }
-    });
+    let mut rest: (&mut [f64], &mut [f64], &mut [f64], &mut [f64], &mut [f64]) =
+        (&mut b.x, &mut b.y, &mut b.vx, &mut b.vy, &mut b.q);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+    while !rest.0.is_empty() {
+        let take = chunk.min(rest.0.len());
+        let (x, xr) = rest.0.split_at_mut(take);
+        let (y, yr) = rest.1.split_at_mut(take);
+        let (vx, vxr) = rest.2.split_at_mut(take);
+        let (vy, vyr) = rest.3.split_at_mut(take);
+        let (q, qr) = rest.4.split_at_mut(take);
+        rest = (xr, yr, vxr, vyr, qr);
+        tasks.push(Box::new(move || {
+            for i in 0..x.len() {
+                let (xn, yn, vxn, vyn) = push_one(x[i], y[i], vx[i], vy[i], q[i], l, big_q);
+                x[i] = xn;
+                y[i] = yn;
+                vx[i] = vxn;
+                vy[i] = vyn;
+            }
+        }));
+    }
+    crate::util::pool::global().scoped(tasks);
 }
 
 #[cfg(test)]

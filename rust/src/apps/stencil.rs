@@ -7,7 +7,7 @@
 //! tiled ("quad"), striped, or ring decomposition. Injectors then
 //! perturb per-object loads the way each experiment prescribes.
 
-use crate::model::{CommGraph, Instance, Topology};
+use crate::model::{Assignment, CommGraph, Instance, Topology, TrafficRecorder};
 use crate::util::rng::Rng;
 
 /// Bytes exchanged per stencil edge per LB period (arbitrary but
@@ -93,6 +93,72 @@ pub fn ring(n_pes: usize, objs_per_pe: usize) -> Instance {
     let coords: Vec<[f64; 2]> = (0..n).map(|i| [i as f64, 0.0]).collect();
     let mapping: Vec<u32> = (0..n).map(|i| (i / objs_per_pe) as u32).collect();
     Instance::new(vec![1.0; n], coords, graph, mapping, Topology::flat(n_pes))
+}
+
+// ------------------------------------------------------- stepping sim
+
+/// Round-based stencil workload driver: each LB period re-rolls the
+/// per-object load noise and re-records the halo traffic, refreshing
+/// the instance's communication graph **incrementally**
+/// ([`CommGraph::update_from_recorder`]). A stencil's adjacency is
+/// static, so after the first round every refresh takes the
+/// weights-only fast path — the "communication graph of persistently
+/// interacting objects changes slowly" pattern the incremental rebuild
+/// exists for, exercised here and measured in `benches/perf_hotpaths`.
+pub struct StencilSim {
+    pub inst: Instance,
+    recorder: TrafficRecorder,
+    rng: Rng,
+    noise: f64,
+    pub rounds: usize,
+}
+
+impl StencilSim {
+    pub fn new(
+        side: usize,
+        px: usize,
+        py: usize,
+        decomp: Decomposition,
+        noise: f64,
+        seed: u64,
+    ) -> StencilSim {
+        let inst = stencil_2d(side, px, py, decomp);
+        StencilSim {
+            recorder: TrafficRecorder::new(inst.n_objects()),
+            inst,
+            rng: Rng::new(seed),
+            noise,
+            rounds: 0,
+        }
+    }
+
+    /// Advance one LB period: new load noise, halo traffic re-recorded
+    /// and folded into the instance's graph in place. Returns whether
+    /// the graph structure changed (always `false` for a static
+    /// stencil, whose adjacency the constructor already established —
+    /// the weights-only fast path under test).
+    pub fn advance(&mut self) -> bool {
+        for l in self.inst.loads.iter_mut() {
+            *l = 1.0 + self.noise * (2.0 * self.rng.f64() - 1.0);
+        }
+        {
+            let (graph, rec) = (&self.inst.graph, &mut self.recorder);
+            for a in 0..graph.n {
+                for &b in graph.neighbors(a) {
+                    if (a as u32) < b {
+                        rec.record(a as u32, b, HALO_BYTES);
+                    }
+                }
+            }
+        }
+        self.rounds += 1;
+        self.inst.graph.update_from_recorder(&mut self.recorder)
+    }
+
+    /// Adopt a strategy's assignment as the next round's mapping.
+    pub fn apply(&mut self, asg: &Assignment) {
+        self.inst.mapping.clone_from(&asg.mapping);
+    }
 }
 
 // ------------------------------------------------------- imbalance
@@ -194,6 +260,25 @@ mod tests {
         assert_eq!(inst.mapping, before);
         assert!(inst.loads.iter().all(|&l| l > 0.0));
         assert!(inst.validate().is_ok());
+    }
+
+    #[test]
+    fn stencil_sim_refreshes_incrementally() {
+        let mut sim = StencilSim::new(12, 2, 2, Decomposition::Tiled, 0.4, 9);
+        let structure = sim.inst.graph.clone();
+        for round in 0..4 {
+            let changed = sim.advance();
+            assert!(!changed, "static stencil rebuilt CSR in round {round}");
+            // structure intact, weights refreshed to one period of halo
+            assert_eq!(sim.inst.graph, structure);
+            assert!(sim.inst.validate().is_ok());
+            assert!(sim.inst.loads.iter().all(|&l| (0.6..=1.4).contains(&l)));
+        }
+        assert_eq!(sim.rounds, 4);
+        // an assignment round-trips into the next instance
+        let asg = Assignment { mapping: vec![0; sim.inst.n_objects()] };
+        sim.apply(&asg);
+        assert!(sim.inst.mapping.iter().all(|&pe| pe == 0));
     }
 
     #[test]

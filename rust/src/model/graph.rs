@@ -5,8 +5,13 @@
 //! balancing step (paper §II problem definition). CSR keeps the hot
 //! strategy loops (per-object neighbor scans during object selection)
 //! cache-friendly.
-
-use std::collections::HashMap;
+//!
+//! Construction is hash-free: edge lists are canonicalized, stably
+//! sorted and sum-merged, which is both faster than the seed's
+//! `HashMap<(u32,u32), f64>` merge (no probing, no per-entry
+//! allocation) and produces the identical graph — the stable sort
+//! preserves each key's input accumulation order, so even the f64 sums
+//! are bit-equal to the old entry-API accumulation.
 
 /// Compressed-sparse-row undirected graph with f64 edge weights.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,6 +26,41 @@ pub struct CommGraph {
     pub bytes: Vec<f64>,
 }
 
+/// Stably sort `(key_a, key_b, value)` entries by key and sum-merge
+/// adjacent duplicates in place. This is the shared primitive behind
+/// every flat accumulation path in the codebase (graph construction,
+/// group-traffic aggregation, the apps' per-step crosser logs): the
+/// **stable** sort keeps each key's values in input order, so the f64
+/// sums accumulate left-to-right exactly like the seed's HashMap
+/// entry-API did — that ordering is what the bit-identical claims
+/// rest on. Keep every merge on this helper.
+pub fn sort_sum_merge(entries: &mut Vec<(u32, u32, f64)>) {
+    entries.sort_by_key(|&(a, b, _)| (a, b));
+    let mut w = 0usize;
+    for r in 0..entries.len() {
+        if w > 0 && entries[w - 1].0 == entries[r].0 && entries[w - 1].1 == entries[r].1 {
+            entries[w - 1].2 += entries[r].2;
+        } else {
+            entries[w] = entries[r];
+            w += 1;
+        }
+    }
+    entries.truncate(w);
+}
+
+/// Canonicalize (`a < b`), stably sort and sum-merge an edge list in
+/// place; drops self-loops. After return `edges` holds each undirected
+/// edge once, sorted by `(a, b)`.
+fn canonical_merge(edges: &mut Vec<(u32, u32, f64)>) {
+    for e in edges.iter_mut() {
+        if e.0 > e.1 {
+            std::mem::swap(&mut e.0, &mut e.1);
+        }
+    }
+    edges.retain(|e| e.0 != e.1);
+    sort_sum_merge(edges);
+}
+
 impl CommGraph {
     /// Empty graph over `n` objects.
     pub fn empty(n: usize) -> CommGraph {
@@ -30,42 +70,98 @@ impl CommGraph {
     /// Build from an undirected edge list; parallel edges are merged by
     /// summing weights, self-loops are dropped.
     pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> CommGraph {
-        let mut merged: HashMap<(u32, u32), f64> = HashMap::with_capacity(edges.len());
-        for &(a, b, w) in edges {
+        for &(a, b, _) in edges {
             assert!((a as usize) < n && (b as usize) < n, "edge out of range");
-            if a == b {
-                continue;
-            }
-            let key = if a < b { (a, b) } else { (b, a) };
-            *merged.entry(key).or_insert(0.0) += w;
         }
-        let mut degree = vec![0u32; n];
-        for &(a, b) in merged.keys() {
-            degree[a as usize] += 1;
-            degree[b as usize] += 1;
+        let mut canon = edges.to_vec();
+        canonical_merge(&mut canon);
+        let mut g = CommGraph::empty(n);
+        let mut cursor = Vec::new();
+        g.refill_from_merged(&canon, &mut cursor);
+        g
+    }
+
+    /// Rebuild this graph's CSR arrays from a canonical merged edge
+    /// list (sorted by `(a, b)`, unique, self-loop free), reusing the
+    /// existing allocations. `cursor` is caller-provided scratch.
+    fn refill_from_merged(&mut self, merged: &[(u32, u32, f64)], cursor: &mut Vec<u32>) {
+        let n = self.n;
+        self.offsets.clear();
+        self.offsets.resize(n + 1, 0);
+        for &(a, b, _) in merged {
+            self.offsets[a as usize + 1] += 1;
+            self.offsets[b as usize + 1] += 1;
         }
-        let mut offsets = vec![0u32; n + 1];
         for i in 0..n {
-            offsets[i + 1] = offsets[i] + degree[i];
+            self.offsets[i + 1] += self.offsets[i];
         }
-        let m2 = offsets[n] as usize;
-        let mut nbrs = vec![0u32; m2];
-        let mut bytes = vec![0.0; m2];
-        let mut cursor = offsets[..n].to_vec();
-        let mut pairs: Vec<(&(u32, u32), &f64)> = merged.iter().collect();
-        // Deterministic layout regardless of hash order.
-        pairs.sort_by_key(|(k, _)| **k);
-        for (&(a, b), &w) in pairs {
+        let m2 = self.offsets[n] as usize;
+        self.nbrs.clear();
+        self.nbrs.resize(m2, 0);
+        self.bytes.clear();
+        self.bytes.resize(m2, 0.0);
+        cursor.clear();
+        cursor.extend_from_slice(&self.offsets[..n]);
+        // Iterating merged in (a, b) order fills every row in ascending
+        // neighbor order: row i first receives partners a' < i (as the
+        // `b` endpoint), then partners b > i (as the `a` endpoint) —
+        // the same deterministic layout the seed produced.
+        for &(a, b, w) in merged {
             let ca = cursor[a as usize] as usize;
-            nbrs[ca] = b;
-            bytes[ca] = w;
+            self.nbrs[ca] = b;
+            self.bytes[ca] = w;
             cursor[a as usize] += 1;
             let cb = cursor[b as usize] as usize;
-            nbrs[cb] = a;
-            bytes[cb] = w;
+            self.nbrs[cb] = a;
+            self.bytes[cb] = w;
             cursor[b as usize] += 1;
         }
-        CommGraph { n, offsets, nbrs, bytes }
+    }
+
+    /// Refresh this graph from everything `rec` accumulated since its
+    /// last drain, draining the recorder. Equivalent to
+    /// `*self = rec.take_graph()` but allocation-free at steady state:
+    /// when the communication *structure* is unchanged (same neighbor
+    /// sets — the common case for persistently interacting objects
+    /// between LB rounds), only the weight array is overwritten; a
+    /// structural change falls back to refilling the CSR arrays in
+    /// place (row lengths shift, so offsets/nbrs must be rewritten, but
+    /// capacity is reused). Returns `true` when the structure changed.
+    pub fn update_from_recorder(&mut self, rec: &mut TrafficRecorder) -> bool {
+        assert_eq!(self.n, rec.n(), "recorder/graph vertex count mismatch");
+        rec.merge();
+        let n = self.n;
+        let TrafficRecorder { ref merged, ref mut cursor, .. } = *rec;
+
+        // Fast path: verify the merged edge stream matches the current
+        // adjacency structure while overwriting weights.
+        let mut same = self.offsets.len() == n + 1 && self.nbrs.len() == 2 * merged.len();
+        if same {
+            cursor.clear();
+            cursor.extend_from_slice(&self.offsets[..n]);
+            'walk: for &(a, b, w) in merged.iter() {
+                let (a, b) = (a as usize, b as usize);
+                let ca = cursor[a] as usize;
+                let cb = cursor[b] as usize;
+                if ca >= self.offsets[a + 1] as usize
+                    || cb >= self.offsets[b + 1] as usize
+                    || self.nbrs[ca] != b as u32
+                    || self.nbrs[cb] != a as u32
+                {
+                    same = false;
+                    break 'walk;
+                }
+                self.bytes[ca] = w;
+                self.bytes[cb] = w;
+                cursor[a] += 1;
+                cursor[b] += 1;
+            }
+        }
+        if !same {
+            self.refill_from_merged(merged, cursor);
+        }
+        rec.clear_round();
+        !same
     }
 
     /// Neighbor ids of object `o`.
@@ -116,8 +212,17 @@ impl CommGraph {
     /// strategy hot path when `n_groups` is moderate — HashMap probing
     /// dominated stage-1 candidate construction (EXPERIMENTS.md §Perf).
     pub fn group_traffic_dense(&self, group: &[u32], n_groups: usize) -> Vec<f64> {
-        assert_eq!(group.len(), self.n);
         let mut m = vec![0.0f64; n_groups * n_groups];
+        self.group_traffic_dense_into(group, n_groups, &mut m);
+        m
+    }
+
+    /// [`Self::group_traffic_dense`] into a caller-owned buffer
+    /// (resized/zeroed here), so repeated LB rounds reuse one matrix.
+    pub fn group_traffic_dense_into(&self, group: &[u32], n_groups: usize, m: &mut Vec<f64>) {
+        assert_eq!(group.len(), self.n);
+        m.clear();
+        m.resize(n_groups * n_groups, 0.0);
         for (a, b, w) in self.edges() {
             let ga = group[a as usize] as usize;
             let gb = group[b as usize] as usize;
@@ -128,63 +233,169 @@ impl CommGraph {
                 m[gb * n_groups + ga] += w;
             }
         }
-        m
     }
 
     /// Aggregate object-level traffic to group-level (e.g. node-level)
-    /// traffic under `group[o]`: returns per-group sparse rows
-    /// `group -> (peer_group -> bytes)`, diagonal = intra-group bytes
-    /// (each undirected edge counted once on the diagonal, once per
-    /// direction off-diagonal so rows are symmetric views).
-    pub fn group_traffic(&self, group: &[u32], n_groups: usize) -> Vec<HashMap<u32, f64>> {
+    /// traffic under `group[o]`: sparse symmetric rows in CSR layout
+    /// (diagonal entry = intra-group bytes, present only when nonzero —
+    /// each undirected edge counted once on the diagonal, once per
+    /// direction off-diagonal so rows are symmetric views). The seed
+    /// returned `Vec<HashMap<u32, f64>>` here; the CSR rows aggregate
+    /// via the same sort-merge as graph construction and keep the
+    /// quotient-graph consumers (ParMETIS baseline, future hierarchical
+    /// levels) allocation-light and cache-friendly.
+    pub fn group_traffic(&self, group: &[u32], n_groups: usize) -> GroupTraffic {
         assert_eq!(group.len(), self.n);
-        let mut rows: Vec<HashMap<u32, f64>> = vec![HashMap::new(); n_groups];
+        let mut entries: Vec<(u32, u32, f64)> = Vec::with_capacity(2 * self.edge_count());
         for (a, b, w) in self.edges() {
             let ga = group[a as usize];
             let gb = group[b as usize];
             if ga == gb {
-                *rows[ga as usize].entry(ga).or_insert(0.0) += w;
+                entries.push((ga, ga, w));
             } else {
-                *rows[ga as usize].entry(gb).or_insert(0.0) += w;
-                *rows[gb as usize].entry(ga).or_insert(0.0) += w;
+                entries.push((ga, gb, w));
+                entries.push((gb, ga, w));
             }
         }
-        rows
+        // stable sort keeps per-cell accumulation in edge-iteration
+        // order (bit-equal sums to the old HashMap accumulation)
+        sort_sum_merge(&mut entries);
+        let mut offsets = vec![0u32; n_groups + 1];
+        for &(g, _, _) in &entries {
+            offsets[g as usize + 1] += 1;
+        }
+        for i in 0..n_groups {
+            offsets[i + 1] += offsets[i];
+        }
+        let peers = entries.iter().map(|&(_, p, _)| p).collect();
+        let bytes = entries.iter().map(|&(_, _, v)| v).collect();
+        GroupTraffic { n_groups, offsets, peers, bytes }
+    }
+}
+
+/// Group-level traffic matrix in CSR form, produced by
+/// [`CommGraph::group_traffic`]. Rows are sorted by peer id; the
+/// diagonal (intra-group bytes) appears as a `peer == group` entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupTraffic {
+    pub n_groups: usize,
+    /// Row offsets, length `n_groups + 1`.
+    pub offsets: Vec<u32>,
+    /// Peer-group ids, sorted within each row.
+    pub peers: Vec<u32>,
+    /// Bytes, parallel to `peers`.
+    pub bytes: Vec<f64>,
+}
+
+impl GroupTraffic {
+    /// `(peer ids, bytes)` of group `g`'s row (includes the diagonal
+    /// entry when intra-group traffic exists).
+    #[inline]
+    pub fn row(&self, g: usize) -> (&[u32], &[f64]) {
+        let lo = self.offsets[g] as usize;
+        let hi = self.offsets[g + 1] as usize;
+        (&self.peers[lo..hi], &self.bytes[lo..hi])
+    }
+
+    /// Bytes between `g` and `peer` (0.0 when absent).
+    pub fn get(&self, g: usize, peer: u32) -> f64 {
+        let (peers, bytes) = self.row(g);
+        match peers.binary_search(&peer) {
+            Ok(i) => bytes[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Iterate `(peer, bytes)` over group `g`'s row.
+    pub fn iter_row(&self, g: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let (peers, bytes) = self.row(g);
+        peers.iter().copied().zip(bytes.iter().copied())
     }
 }
 
 /// Incremental edge accumulator used by the apps to record traffic
 /// between LB steps, then freeze into a [`CommGraph`].
+///
+/// `record` appends to a flat per-round edge log — no hashing, no
+/// allocation once the log's capacity has warmed up — and freezing
+/// sort-merges the log (stable, so f64 accumulation order matches the
+/// seed's HashMap recorder bit-for-bit). For round-over-round use,
+/// [`CommGraph::update_from_recorder`] refreshes an existing graph in
+/// place instead of building a fresh one.
 #[derive(Debug, Clone, Default)]
 pub struct TrafficRecorder {
-    edges: HashMap<(u32, u32), f64>,
     n: usize,
+    /// Raw per-record log, canonicalized to `a < b` on append.
+    log: Vec<(u32, u32, f64)>,
+    /// Merged scratch (one entry per distinct edge), reused per round.
+    merged: Vec<(u32, u32, f64)>,
+    /// CSR fill cursor scratch, reused per round.
+    cursor: Vec<u32>,
+    /// Log length that triggers an in-place compaction (adaptive:
+    /// a multiple of the distinct-edge count observed last time).
+    compact_at: usize,
 }
+
+/// First compaction threshold; afterwards adaptive (8x distinct edges).
+const RECORDER_COMPACT_MIN: usize = 4096;
 
 impl TrafficRecorder {
     pub fn new(n: usize) -> Self {
-        TrafficRecorder { edges: HashMap::new(), n }
+        TrafficRecorder { n, compact_at: RECORDER_COMPACT_MIN, ..Default::default() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
     }
 
     /// Record `bytes` of traffic between objects `a` and `b`.
+    ///
+    /// Amortized O(1): appends to the flat log; when the log outgrows
+    /// a multiple of the distinct-edge count it is sum-merged in place,
+    /// so memory stays O(distinct edges) over arbitrarily long LB
+    /// periods (the seed's HashMap bound) while keeping the hot append
+    /// hash-free. Compaction preserves the freeze result bit-for-bit:
+    /// each edge's pre-compaction prefix sum equals the same
+    /// left-to-right partial sum the final merge would have computed.
     #[inline]
     pub fn record(&mut self, a: u32, b: u32, bytes: f64) {
         if a == b {
             return;
         }
-        let key = if a < b { (a, b) } else { (b, a) };
-        *self.edges.entry(key).or_insert(0.0) += bytes;
+        debug_assert!((a as usize) < self.n && (b as usize) < self.n);
+        self.log.push(if a < b { (a, b, bytes) } else { (b, a, bytes) });
+        // `.max(MIN)` also covers `Default`-built recorders (compact_at 0)
+        if self.log.len() >= self.compact_at.max(RECORDER_COMPACT_MIN) {
+            sort_sum_merge(&mut self.log);
+            self.compact_at = (self.log.len() * 8).max(RECORDER_COMPACT_MIN);
+        }
     }
 
+    /// No traffic recorded since the last freeze.
     pub fn is_empty(&self) -> bool {
-        self.edges.is_empty()
+        self.log.is_empty()
+    }
+
+    /// Sort-merge the log into `self.merged`.
+    fn merge(&mut self) {
+        self.merged.clear();
+        self.merged.extend_from_slice(&self.log);
+        canonical_merge(&mut self.merged);
+    }
+
+    fn clear_round(&mut self) {
+        self.log.clear();
+        self.merged.clear();
     }
 
     /// Freeze into a CSR graph and clear the recorder.
     pub fn take_graph(&mut self) -> CommGraph {
-        let edges: Vec<(u32, u32, f64)> =
-            self.edges.drain().map(|((a, b), w)| (a, b, w)).collect();
-        CommGraph::from_edges(self.n, &edges)
+        self.merge();
+        let mut g = CommGraph::empty(self.n);
+        let TrafficRecorder { ref merged, ref mut cursor, .. } = *self;
+        g.refill_from_merged(merged, cursor);
+        self.clear_round();
+        g
     }
 }
 
@@ -211,6 +422,16 @@ mod tests {
     }
 
     #[test]
+    fn rows_are_sorted_ascending() {
+        let g = CommGraph::from_edges(
+            5,
+            &[(4, 0, 1.0), (0, 2, 2.0), (3, 0, 3.0), (0, 1, 4.0)],
+        );
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4]);
+        assert_eq!(g.weights(0), &[4.0, 2.0, 3.0, 1.0]);
+    }
+
+    #[test]
     fn parallel_edges_merge_self_loops_drop() {
         let g = CommGraph::from_edges(2, &[(0, 1, 5.0), (1, 0, 7.0), (0, 0, 99.0)]);
         assert_eq!(g.edge_count(), 1);
@@ -222,10 +443,24 @@ mod tests {
         let g = triangle();
         // objects 0,1 -> group 0; 2,3 -> group 1
         let rows = g.group_traffic(&[0, 0, 1, 1], 2);
-        assert_eq!(rows[0][&0], 10.0); // intra edge 0-1
-        assert_eq!(rows[0][&1], 50.0); // 1-2 and 2-0 cross
-        assert_eq!(rows[1][&0], 50.0);
-        assert!(!rows[1].contains_key(&1));
+        assert_eq!(rows.get(0, 0), 10.0); // intra edge 0-1
+        assert_eq!(rows.get(0, 1), 50.0); // 1-2 and 2-0 cross
+        assert_eq!(rows.get(1, 0), 50.0);
+        assert_eq!(rows.get(1, 1), 0.0);
+        assert_eq!(rows.row(1).0, &[0]); // no diagonal entry for group 1
+    }
+
+    #[test]
+    fn group_traffic_matches_dense() {
+        let g = triangle();
+        let group = [0u32, 1, 1, 0];
+        let sparse = g.group_traffic(&group, 2);
+        let dense = g.group_traffic_dense(&group, 2);
+        for ga in 0..2 {
+            for gb in 0..2u32 {
+                assert_eq!(sparse.get(ga, gb), dense[ga * 2 + gb as usize], "{ga},{gb}");
+            }
+        }
     }
 
     #[test]
@@ -241,6 +476,22 @@ mod tests {
     }
 
     #[test]
+    fn recorder_compaction_bounds_memory_and_preserves_sums() {
+        let mut r = TrafficRecorder::new(4);
+        let rounds = RECORDER_COMPACT_MIN * 3;
+        for k in 0..rounds {
+            r.record(0, 1, 1.0);
+            r.record((k % 3) as u32, 3, 2.0);
+        }
+        // in-place compaction keeps the log at O(distinct edges), not
+        // O(records): 4 distinct edges recorded ~25k times
+        assert!(r.log.len() < RECORDER_COMPACT_MIN * 2, "log grew to {}", r.log.len());
+        let g = r.take_graph();
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.total_bytes(), rounds as f64 * 3.0);
+    }
+
+    #[test]
     fn deterministic_construction() {
         let e = vec![(0u32, 1u32, 1.0), (1, 2, 2.0), (0, 2, 3.0), (2, 3, 4.0)];
         let g1 = CommGraph::from_edges(4, &e);
@@ -248,5 +499,59 @@ mod tests {
         rev.reverse();
         let g2 = CommGraph::from_edges(4, &rev);
         assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn incremental_update_equals_fresh_build() {
+        // Round 1 establishes structure; round 2 changes only weights
+        // (fast path); round 3 changes the edge set (rebuild path).
+        let rounds: [&[(u32, u32, f64)]; 3] = [
+            &[(0, 1, 1.0), (1, 2, 2.0), (0, 1, 0.5)],
+            &[(1, 2, 9.0), (0, 1, 4.0)],
+            &[(2, 3, 7.0), (0, 1, 1.0)],
+        ];
+        let mut inc = CommGraph::empty(4);
+        let mut rec = TrafficRecorder::new(4);
+        let mut fresh_rec = TrafficRecorder::new(4);
+        for (i, edges) in rounds.iter().enumerate() {
+            for &(a, b, w) in *edges {
+                rec.record(a, b, w);
+                fresh_rec.record(a, b, w);
+            }
+            let structural = inc.update_from_recorder(&mut rec);
+            let fresh = fresh_rec.take_graph();
+            assert_eq!(inc, fresh, "round {i}");
+            // round 1: empty -> structure change; round 2 (same edges,
+            // new weights): fast path; round 3: new edge appears
+            assert_eq!(structural, i != 1, "round {i}");
+        }
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn update_matches_take_graph_on_randomized_rounds() {
+        use crate::util::rng::Rng;
+        let n = 24;
+        let mut rng = Rng::new(0xBEEF);
+        let mut inc = CommGraph::empty(n);
+        let mut rec = TrafficRecorder::new(n);
+        for _round in 0..10 {
+            let mut fresh_rec = TrafficRecorder::new(n);
+            // persistent backbone + occasional churn
+            for i in 0..n as u32 {
+                let j = (i + 1) % n as u32;
+                let w = rng.uniform(1.0, 5.0);
+                rec.record(i, j, w);
+                fresh_rec.record(i, j, w);
+            }
+            if rng.chance(0.4) {
+                let a = rng.below(n as u64) as u32;
+                let b = rng.below(n as u64) as u32;
+                rec.record(a, b, 3.0);
+                fresh_rec.record(a, b, 3.0);
+            }
+            inc.update_from_recorder(&mut rec);
+            assert_eq!(inc, fresh_rec.take_graph());
+        }
     }
 }

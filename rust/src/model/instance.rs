@@ -78,7 +78,28 @@ impl Instance {
 
     /// Object → node mapping derived from the PE mapping.
     pub fn node_mapping(&self) -> Vec<u32> {
-        self.mapping.iter().map(|&pe| self.topo.node_of_pe(pe)).collect()
+        let mut out = Vec::new();
+        self.node_mapping_into(&mut out);
+        out
+    }
+
+    /// [`Self::node_mapping`] into a reused buffer — the strategy hot
+    /// paths call this once per LB round, so the allocation is hoisted
+    /// into their scratch space.
+    pub fn node_mapping_into(&self, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend(self.mapping.iter().map(|&pe| self.topo.node_of_pe(pe)));
+    }
+
+    /// Per-node loads under the instance's own mapping, into a reused
+    /// buffer (accumulates in object order, matching
+    /// [`Self::node_loads`] bit-for-bit).
+    pub fn node_loads_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.topo.n_nodes, 0.0);
+        for (o, &pe) in self.mapping.iter().enumerate() {
+            out[self.topo.node_of_pe(pe) as usize] += self.loads[o];
+        }
     }
 
     /// Per-PE total loads.
@@ -266,6 +287,13 @@ mod tests {
         let inst = tiny_instance();
         assert_eq!(inst.pe_loads(&inst.mapping), vec![3.0, 7.0]);
         assert_eq!(inst.node_loads(&inst.mapping), vec![3.0, 7.0]);
+        // buffered variants agree and clear stale contents
+        let mut nm = vec![9u32; 10];
+        inst.node_mapping_into(&mut nm);
+        assert_eq!(nm, inst.node_mapping());
+        let mut nl = vec![1.0; 1];
+        inst.node_loads_into(&mut nl);
+        assert_eq!(nl, vec![3.0, 7.0]);
         assert_eq!(inst.node_objects(&inst.mapping)[1], vec![2, 3]);
         let c = inst.node_centroids(&inst.mapping);
         assert_eq!(c[0], [0.5, 0.0]);

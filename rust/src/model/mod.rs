@@ -6,7 +6,7 @@ pub mod instance;
 pub mod metrics;
 pub mod topology;
 
-pub use graph::{CommGraph, TrafficRecorder};
+pub use graph::{CommGraph, GroupTraffic, TrafficRecorder};
 pub use instance::{Assignment, Instance};
 pub use metrics::{evaluate, evaluate_mapping, CommSplit, LbMetrics};
 pub use topology::Topology;

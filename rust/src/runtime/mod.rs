@@ -7,13 +7,20 @@
 //! crate's xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit
 //! instruction ids, while the text parser reassigns ids (see
 //! /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The real engine requires the `xla` bindings, which are unavailable
+//! in offline builds; it is therefore gated behind the `pjrt` cargo
+//! feature. Without the feature an API-compatible stub [`Engine`]
+//! reports PJRT as unavailable at construction time, so every caller
+//! (`Backend::Pjrt` setup, `difflb check`, the pjrt benches/tests)
+//! degrades to the native backend or a skip.
 
 pub mod manifest;
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+mod pjrt_engine;
+#[cfg(feature = "pjrt")]
+pub use pjrt_engine::Engine;
 
 pub use manifest::{ArtifactMeta, Manifest};
 
@@ -56,135 +63,44 @@ impl PicBatch {
     }
 }
 
-/// Lazily-compiled PJRT executables keyed by artifact name.
+/// Stub engine compiled when the `pjrt` feature is off: constructing it
+/// always fails, so `Manifest`-gated call sites (tests, benches, the
+/// `auto` backend) skip the PJRT path cleanly.
+#[cfg(not(feature = "pjrt"))]
 pub struct Engine {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    executables: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl Engine {
-    /// Create an engine over the default artifacts directory.
-    pub fn new() -> Result<Engine> {
+    pub fn new() -> anyhow::Result<Engine> {
         Engine::with_manifest(Manifest::load_default()?)
     }
 
-    pub fn with_manifest(manifest: Manifest) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        crate::info!(
-            "PJRT client up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Engine { client, manifest, executables: Mutex::new(HashMap::new()) })
+    pub fn with_manifest(_manifest: Manifest) -> anyhow::Result<Engine> {
+        anyhow::bail!(
+            "difflb was built without the `pjrt` feature; \
+             rebuild with `--features pjrt` (requires the xla bindings) \
+             or use the native backend"
+        )
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Compile (once) and cache the executable for `name`.
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        let mut cache = self.executables.lock().unwrap();
-        if cache.contains_key(name) {
-            return Ok(());
-        }
-        let meta = self
-            .manifest
-            .by_name(name)
-            .with_context(|| format!("artifact '{name}' not in manifest"))?;
-        let path = meta.file.to_string_lossy().to_string();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        crate::debug!("compiled artifact {name} from {path}");
-        cache.insert(name.to_string(), exe);
-        Ok(())
+    pub fn pic_push(&self, _state: &mut PicBatch, _l: f64, _q: f64) -> anyhow::Result<()> {
+        anyhow::bail!("PJRT engine unavailable (built without `pjrt`)")
     }
 
-    /// Execute the named pic_push artifact on exactly its batch size.
-    fn run_pic_artifact(&self, name: &str, b: &PicBatch, l: f64, q: f64) -> Result<PicBatch> {
-        self.ensure_compiled(name)?;
-        let cache = self.executables.lock().unwrap();
-        let exe = cache.get(name).unwrap();
-        let args = [
-            xla::Literal::vec1(&b.x),
-            xla::Literal::vec1(&b.y),
-            xla::Literal::vec1(&b.vx),
-            xla::Literal::vec1(&b.vy),
-            xla::Literal::vec1(&b.q),
-            xla::Literal::vec1(&[l, q]),
-        ];
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let (xo, yo, vxo, vyo) = result.to_tuple4()?;
-        Ok(PicBatch {
-            x: xo.to_vec::<f64>()?,
-            y: yo.to_vec::<f64>()?,
-            vx: vxo.to_vec::<f64>()?,
-            vy: vyo.to_vec::<f64>()?,
-            q: b.q.clone(),
-        })
-    }
-
-    /// One PIC step over an arbitrary-size batch: chunks into the
-    /// largest available artifact batch sizes and pads the tail with
-    /// inert particles. State is updated in place.
-    pub fn pic_push(&self, state: &mut PicBatch, l: f64, q: f64) -> Result<()> {
-        let sizes = self.manifest.pic_batch_sizes();
-        anyhow::ensure!(!sizes.is_empty(), "no pic_push artifacts in manifest");
-        let n = state.len();
-        let mut out = PicBatch::with_capacity(n);
-        let mut start = 0;
-        while start < n {
-            let left = n - start;
-            // largest artifact batch <= left, else the smallest one (pad)
-            let bs = *sizes.iter().rev().find(|&&s| s <= left).unwrap_or(&sizes[0]);
-            let take = left.min(bs);
-            let mut chunk = PicBatch {
-                x: state.x[start..start + take].to_vec(),
-                y: state.y[start..start + take].to_vec(),
-                vx: state.vx[start..start + take].to_vec(),
-                vy: state.vy[start..start + take].to_vec(),
-                q: state.q[start..start + take].to_vec(),
-            };
-            for _ in take..bs {
-                chunk.push_pad();
-            }
-            let name = self.manifest.pic_for_batch(bs).unwrap().name.clone();
-            let pushed = self.run_pic_artifact(&name, &chunk, l, q)?;
-            out.x.extend_from_slice(&pushed.x[..take]);
-            out.y.extend_from_slice(&pushed.y[..take]);
-            out.vx.extend_from_slice(&pushed.vx[..take]);
-            out.vy.extend_from_slice(&pushed.vy[..take]);
-            out.q.extend_from_slice(&chunk.q[..take]);
-            start += take;
-        }
-        *state = out;
-        Ok(())
-    }
-
-    /// One stencil sweep via the `rows x cols` artifact (exact shape).
-    pub fn stencil_step(&self, grid: &[f64], rows: usize, cols: usize, alpha: f64) -> Result<Vec<f64>> {
-        anyhow::ensure!(grid.len() == rows * cols, "grid shape mismatch");
-        let meta = self
-            .manifest
-            .stencil_for(rows, cols)
-            .with_context(|| format!("no stencil artifact for {rows}x{cols}"))?;
-        let name = meta.name.clone();
-        self.ensure_compiled(&name)?;
-        let cache = self.executables.lock().unwrap();
-        let exe = cache.get(&name).unwrap();
-        let args = [
-            xla::Literal::vec1(grid).reshape(&[rows as i64, cols as i64])?,
-            xla::Literal::vec1(&[alpha]),
-        ];
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f64>()?)
+    pub fn stencil_step(
+        &self,
+        _grid: &[f64],
+        _rows: usize,
+        _cols: usize,
+        _alpha: f64,
+    ) -> anyhow::Result<Vec<f64>> {
+        anyhow::bail!("PJRT engine unavailable (built without `pjrt`)")
     }
 }
 
@@ -203,5 +119,14 @@ mod tests {
         assert_eq!(b.len(), 2);
         assert_eq!(b.q, vec![0.0, 0.0]);
         assert_eq!(b.x, vec![0.5, 0.5]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = Engine::with_manifest(Manifest::parse("", "arts".into()).unwrap())
+            .err()
+            .expect("stub must fail");
+        assert!(format!("{err}").contains("pjrt"), "{err}");
     }
 }

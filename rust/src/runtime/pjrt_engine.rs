@@ -1,0 +1,143 @@
+//! The real PJRT engine (requires the `xla` bindings — `pjrt` feature).
+//!
+//! Moved verbatim out of `runtime::mod` when the feature gate was
+//! introduced; see the module docs there for the HLO-text rationale.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::{Manifest, PicBatch};
+
+/// Lazily-compiled PJRT executables keyed by artifact name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create an engine over the default artifacts directory.
+    pub fn new() -> Result<Engine> {
+        Engine::with_manifest(Manifest::load_default()?)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, manifest, executables: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and cache the executable for `name`.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.executables.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        let path = meta.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        crate::debug!("compiled artifact {name} from {path}");
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute the named pic_push artifact on exactly its batch size.
+    fn run_pic_artifact(&self, name: &str, b: &PicBatch, l: f64, q: f64) -> Result<PicBatch> {
+        self.ensure_compiled(name)?;
+        let cache = self.executables.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let args = [
+            xla::Literal::vec1(&b.x),
+            xla::Literal::vec1(&b.y),
+            xla::Literal::vec1(&b.vx),
+            xla::Literal::vec1(&b.vy),
+            xla::Literal::vec1(&b.q),
+            xla::Literal::vec1(&[l, q]),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (xo, yo, vxo, vyo) = result.to_tuple4()?;
+        Ok(PicBatch {
+            x: xo.to_vec::<f64>()?,
+            y: yo.to_vec::<f64>()?,
+            vx: vxo.to_vec::<f64>()?,
+            vy: vyo.to_vec::<f64>()?,
+            q: b.q.clone(),
+        })
+    }
+
+    /// One PIC step over an arbitrary-size batch: chunks into the
+    /// largest available artifact batch sizes and pads the tail with
+    /// inert particles. State is updated in place.
+    pub fn pic_push(&self, state: &mut PicBatch, l: f64, q: f64) -> Result<()> {
+        let sizes = self.manifest.pic_batch_sizes();
+        anyhow::ensure!(!sizes.is_empty(), "no pic_push artifacts in manifest");
+        let n = state.len();
+        let mut out = PicBatch::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let left = n - start;
+            // largest artifact batch <= left, else the smallest one (pad)
+            let bs = *sizes.iter().rev().find(|&&s| s <= left).unwrap_or(&sizes[0]);
+            let take = left.min(bs);
+            let mut chunk = PicBatch {
+                x: state.x[start..start + take].to_vec(),
+                y: state.y[start..start + take].to_vec(),
+                vx: state.vx[start..start + take].to_vec(),
+                vy: state.vy[start..start + take].to_vec(),
+                q: state.q[start..start + take].to_vec(),
+            };
+            for _ in take..bs {
+                chunk.push_pad();
+            }
+            let name = self.manifest.pic_for_batch(bs).unwrap().name.clone();
+            let pushed = self.run_pic_artifact(&name, &chunk, l, q)?;
+            out.x.extend_from_slice(&pushed.x[..take]);
+            out.y.extend_from_slice(&pushed.y[..take]);
+            out.vx.extend_from_slice(&pushed.vx[..take]);
+            out.vy.extend_from_slice(&pushed.vy[..take]);
+            out.q.extend_from_slice(&chunk.q[..take]);
+            start += take;
+        }
+        *state = out;
+        Ok(())
+    }
+
+    /// One stencil sweep via the `rows x cols` artifact (exact shape).
+    pub fn stencil_step(&self, grid: &[f64], rows: usize, cols: usize, alpha: f64) -> Result<Vec<f64>> {
+        anyhow::ensure!(grid.len() == rows * cols, "grid shape mismatch");
+        let meta = self
+            .manifest
+            .stencil_for(rows, cols)
+            .with_context(|| format!("no stencil artifact for {rows}x{cols}"))?;
+        let name = meta.name.clone();
+        self.ensure_compiled(&name)?;
+        let cache = self.executables.lock().unwrap();
+        let exe = cache.get(&name).unwrap();
+        let args = [
+            xla::Literal::vec1(grid).reshape(&[rows as i64, cols as i64])?,
+            xla::Literal::vec1(&[alpha]),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+}

@@ -10,10 +10,12 @@
 pub mod hierarchical;
 pub mod neighbor;
 pub mod object_selection;
+pub mod scratch;
 pub mod virtual_lb;
 
 use crate::model::{Assignment, Instance};
 use crate::strategies::{LoadBalancer, StrategyParams};
+use scratch::LbScratch;
 
 /// Which signal drives neighbor selection + object picks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,15 +34,33 @@ pub struct Diffusion {
     /// (paper §III-A future work: node-level communication patterns
     /// persist across LB rounds, so the handshake can be amortized).
     cache: std::sync::Mutex<Option<neighbor::NeighborGraph>>,
+    /// Reusable workspace: after the first rebalance warms its
+    /// capacities, the comm-variant `rebalance()`'s loops run out of
+    /// recycled buffers — no per-object or per-(node, neighbor)
+    /// transient allocations remain, and the remaining sorts are
+    /// unstable (in-place) ones (see [`scratch`]). Behind a Mutex
+    /// because `LoadBalancer` takes `&self`; uncontended lock cost is
+    /// noise next to the avoided allocations.
+    scratch: std::sync::Mutex<LbScratch>,
 }
 
 impl Diffusion {
     pub fn communication(params: StrategyParams) -> Diffusion {
-        Diffusion { variant: Variant::Communication, params, cache: std::sync::Mutex::new(None) }
+        Diffusion {
+            variant: Variant::Communication,
+            params,
+            cache: std::sync::Mutex::new(None),
+            scratch: std::sync::Mutex::new(LbScratch::default()),
+        }
     }
 
     pub fn coordinate(params: StrategyParams) -> Diffusion {
-        Diffusion { variant: Variant::Coordinate, params, cache: std::sync::Mutex::new(None) }
+        Diffusion {
+            variant: Variant::Coordinate,
+            params,
+            cache: std::sync::Mutex::new(None),
+            scratch: std::sync::Mutex::new(LbScratch::default()),
+        }
     }
 
     /// Drop the cached neighbor graph (e.g. after topology changes).
@@ -51,8 +71,26 @@ impl Diffusion {
     /// Expose the stage-1 + stage-2 intermediate results (used by the
     /// benches to report neighbor-graph/quota statistics and by
     /// simnet's distributed execution for cross-validation).
+    ///
+    /// Ownership note: the returned `Quotas` carries the scratch's
+    /// recycled flow rows away with it, so a `plan()` call re-warms
+    /// that one buffer on the next round. Only `rebalance()` — the hot
+    /// path — hands the rows back; `plan()` callers are diagnostics
+    /// and can afford the n-row allocation.
     pub fn plan(&self, inst: &Instance) -> (neighbor::NeighborGraph, virtual_lb::Quotas) {
-        let node_map = inst.node_mapping();
+        let mut scratch = self.scratch.lock().unwrap();
+        self.plan_locked(inst, &mut scratch)
+    }
+
+    /// Stage 1 + 2 against the already-locked scratch (rebalance holds
+    /// the lock across all three stages; the Mutex is not reentrant).
+    fn plan_locked(
+        &self,
+        inst: &Instance,
+        scratch: &mut LbScratch,
+    ) -> (neighbor::NeighborGraph, virtual_lb::Quotas) {
+        scratch.load_views(inst);
+        let node_map = std::mem::take(&mut scratch.node_map);
         let cached = if self.params.reuse_neighbors {
             self.cache.lock().unwrap().clone().filter(|g| g.n() == inst.topo.n_nodes)
         } else {
@@ -61,31 +99,44 @@ impl Diffusion {
         let neigh = match cached {
             Some(g) => g,
             None => {
-                let candidates = match self.variant {
-                    Variant::Communication => neighbor::comm_candidates(inst, &node_map),
-                    Variant::Coordinate if self.params.sfc_window > 0 => {
-                        neighbor::coord_candidates_sfc(inst, &node_map, self.params.sfc_window)
+                let g = match self.variant {
+                    Variant::Communication => {
+                        neighbor::comm_candidates_into(inst, &node_map, scratch);
+                        neighbor::select_neighbors(
+                            &scratch.candidates,
+                            self.params.neighbor_count,
+                            self.params.handshake_max_rounds,
+                        )
                     }
-                    Variant::Coordinate => neighbor::coord_candidates(inst, &node_map),
+                    Variant::Coordinate => {
+                        let candidates = if self.params.sfc_window > 0 {
+                            neighbor::coord_candidates_sfc(inst, &node_map, self.params.sfc_window)
+                        } else {
+                            neighbor::coord_candidates(inst, &node_map)
+                        };
+                        neighbor::select_neighbors(
+                            &candidates,
+                            self.params.neighbor_count,
+                            self.params.handshake_max_rounds,
+                        )
+                    }
                 };
-                let g = neighbor::select_neighbors(
-                    &candidates,
-                    self.params.neighbor_count,
-                    self.params.handshake_max_rounds,
-                );
                 if self.params.reuse_neighbors {
                     *self.cache.lock().unwrap() = Some(g.clone());
                 }
                 g
             }
         };
-        let node_loads = inst.node_loads(&inst.mapping);
-        let quotas = virtual_lb::virtual_balance(
+        let node_loads = std::mem::take(&mut scratch.node_loads);
+        let quotas = virtual_lb::virtual_balance_with(
             &neigh,
             &node_loads,
             self.params.vlb_tolerance,
             self.params.vlb_max_iters,
+            scratch,
         );
+        scratch.node_map = node_map;
+        scratch.node_loads = node_loads;
         (neigh, quotas)
     }
 }
@@ -99,17 +150,37 @@ impl LoadBalancer for Diffusion {
     }
 
     fn rebalance(&self, inst: &Instance) -> Assignment {
-        let (_neigh, quotas) = self.plan(inst);
-        let mut node_map = inst.node_mapping();
+        let mut guard = self.scratch.lock().unwrap();
+        let scratch = &mut *guard;
+        let (_neigh, quotas) = self.plan_locked(inst, scratch);
+        // node_map was filled by plan_locked's load_views and is still
+        // the pre-LB object -> node view; take it out so stage 3 can
+        // borrow the scratch alongside it.
+        let mut node_map = std::mem::take(&mut scratch.node_map);
         match self.variant {
             Variant::Communication => {
-                object_selection::select_comm(inst, &mut node_map, &quotas, self.params.overfill);
+                object_selection::select_comm_with(
+                    inst,
+                    &mut node_map,
+                    &quotas,
+                    self.params.overfill,
+                    scratch,
+                );
             }
             Variant::Coordinate => {
-                object_selection::select_coord(inst, &mut node_map, &quotas, self.params.overfill);
+                object_selection::select_coord_with(
+                    inst,
+                    &mut node_map,
+                    &quotas,
+                    self.params.overfill,
+                    scratch,
+                );
             }
         }
         let mapping = hierarchical::assign_pes(inst, &node_map, self.params.refine_tolerance);
+        scratch.node_map = node_map;
+        // recycle the quota rows for the next round
+        scratch.flows_pool = quotas.flows;
         Assignment { mapping }
     }
 }

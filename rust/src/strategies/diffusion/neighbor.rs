@@ -20,7 +20,14 @@
 //! machine over real message channels and the integration tests assert
 //! both produce the same pairings.
 
+use super::scratch::LbScratch;
 use crate::model::Instance;
+use crate::util::pool;
+
+/// Below this many nodes the candidate rows are filled sequentially —
+/// the per-row work (one matrix-row scan + two small sorts) only
+/// amortizes pool fan-out on large clusters.
+const PAR_NODES_MIN: usize = 128;
 
 /// Symmetric node neighbor graph produced by stage 1.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -56,34 +63,105 @@ pub type Candidates = Vec<Vec<u32>>;
 /// choose to migrate objects to a neighbor with which it has no
 /// communication in an attempt to distribute load".
 pub fn comm_candidates(inst: &Instance, node_map: &[u32]) -> Candidates {
+    let mut scratch = LbScratch::default();
+    comm_candidates_into(inst, node_map, &mut scratch);
+    std::mem::take(&mut scratch.candidates)
+}
+
+/// Fill one node's preference row from its dense traffic-matrix row.
+/// `peers`/`rest` are reusable per-task buffers.
+fn fill_comm_row(
+    i: usize,
+    n_nodes: usize,
+    row: &[f64],
+    out: &mut Vec<u32>,
+    peers: &mut Vec<(u32, f64)>,
+    rest: &mut Vec<u32>,
+) {
+    peers.clear();
+    rest.clear();
+    out.clear();
+    for (j, &w) in row.iter().enumerate() {
+        if j == i {
+            continue;
+        }
+        if w > 0.0 {
+            peers.push((j as u32, w));
+        } else {
+            rest.push(j as u32);
+        }
+    }
+    // descending volume, id tiebreak for determinism; unstable sorts
+    // give the identical (total) order without the stable sort's
+    // merge-buffer allocation
+    peers.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    rest.sort_unstable_by_key(|&j| {
+        let d = (i as i64 - j as i64).unsigned_abs();
+        (d.min(n_nodes as u64 - d), j)
+    });
+    out.extend(peers.iter().map(|&(j, _)| j));
+    out.extend_from_slice(rest);
+}
+
+/// [`comm_candidates`] into `scratch.candidates`, reusing the dense
+/// traffic matrix and every candidate row across LB rounds
+/// (allocation-free once warm). Rows are independent — each reads one
+/// matrix row and writes one output row — so on big clusters they fill
+/// chunk-parallel on the global [`pool`] with per-task sort buffers;
+/// the per-row result does not depend on the chunking, keeping
+/// candidates bit-identical for any thread count.
+pub fn comm_candidates_into(inst: &Instance, node_map: &[u32], scratch: &mut LbScratch) {
     let n_nodes = inst.topo.n_nodes;
-    let traffic = inst.graph.group_traffic_dense(node_map, n_nodes);
-    (0..n_nodes)
-        .map(|i| {
-            let row = &traffic[i * n_nodes..(i + 1) * n_nodes];
-            let mut peers: Vec<(u32, f64)> = Vec::with_capacity(n_nodes - 1);
-            let mut rest: Vec<u32> = Vec::new();
-            for (j, &w) in row.iter().enumerate() {
-                if j == i {
-                    continue;
-                }
-                if w > 0.0 {
-                    peers.push((j as u32, w));
-                } else {
-                    rest.push(j as u32);
-                }
+    inst.graph.group_traffic_dense_into(node_map, n_nodes, &mut scratch.traffic);
+    for row in scratch.candidates.iter_mut() {
+        row.clear();
+    }
+    if scratch.candidates.len() != n_nodes {
+        scratch.candidates.truncate(n_nodes);
+        scratch.candidates.resize_with(n_nodes, Vec::new);
+    }
+    let n_tasks = scratch
+        .par_tasks
+        .unwrap_or_else(|| pool::global().threads() + 1)
+        .clamp(1, n_nodes.max(1));
+    if n_nodes < PAR_NODES_MIN || n_tasks == 1 {
+        if scratch.stage1_bufs.is_empty() {
+            scratch.stage1_bufs.push(Default::default());
+        }
+        let (traffic, candidates, bufs) =
+            (&scratch.traffic, &mut scratch.candidates, &mut scratch.stage1_bufs);
+        let (peers, rest) = &mut bufs[0];
+        for (i, out) in candidates.iter_mut().enumerate() {
+            fill_comm_row(i, n_nodes, &traffic[i * n_nodes..(i + 1) * n_nodes], out, peers, rest);
+        }
+        return;
+    }
+    if scratch.stage1_bufs.len() < n_tasks {
+        scratch.stage1_bufs.resize_with(n_tasks, Default::default);
+    }
+    let chunk = n_nodes.div_ceil(n_tasks);
+    let (traffic, candidates, bufs) =
+        (&scratch.traffic, &mut scratch.candidates, &mut scratch.stage1_bufs);
+    let traffic = &traffic[..];
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_tasks);
+    for (t, (rows, buf)) in candidates.chunks_mut(chunk).zip(bufs.iter_mut()).enumerate() {
+        let start = t * chunk;
+        tasks.push(Box::new(move || {
+            let (peers, rest) = buf;
+            for (off, out) in rows.iter_mut().enumerate() {
+                let i = start + off;
+                fill_comm_row(
+                    i,
+                    n_nodes,
+                    &traffic[i * n_nodes..(i + 1) * n_nodes],
+                    out,
+                    peers,
+                    rest,
+                );
             }
-            // descending volume, id tiebreak for determinism
-            peers.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-            rest.sort_by_key(|&j| {
-                let d = (i as i64 - j as i64).unsigned_abs();
-                (d.min(n_nodes as u64 - d), j)
-            });
-            let mut list: Vec<u32> = peers.into_iter().map(|(j, _)| j).collect();
-            list.extend(rest);
-            list
-        })
-        .collect()
+        }));
+    }
+    pool::global().scoped(tasks);
 }
 
 /// Space-filling-curve candidate construction for the coordinate

@@ -12,16 +12,35 @@
 //! * **Coord variant (paper §IV):** objects leave in increasing distance
 //!   to the neighbor's centroid, and both centroids are updated as
 //!   objects move.
+//!
+//! Perf architecture: the seed built a `HashMap<u32, f64>` and a fresh
+//! `BinaryHeap` per (node, neighbor) pair. Both now live in
+//! [`LbScratch`]: the map became the dense `bytes_to_j` array guarded
+//! by epoch tags (validity = `epoch[o] == cur_epoch`, so "clearing" is
+//! one counter bump), and the heap's backing `Vec` is recycled across
+//! phases. Per-phase candidate scoring is read-only over the graph and
+//! chunk-parallel on the [`crate::util::pool`] when the pool of objects
+//! is large; scores land in per-position slots and are pushed into the
+//! heap in pool order, so heap evolution — and therefore every strategy
+//! decision — is bit-identical to the sequential seed for any thread
+//! count (`rust/tests/perf_refactor.rs`).
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
+use super::scratch::LbScratch;
 use super::virtual_lb::Quotas;
 use crate::model::Instance;
+use crate::util::pool;
+
+/// Below this many pooled objects a phase scores sequentially — the
+/// pool fan-out costs ~µs, which only pays off on big nodes.
+const PAR_SCORE_MIN: usize = 4096;
 
 /// Max-heap entry with f64 priority (BinaryHeap needs Ord).
+#[doc(hidden)]
 #[derive(Debug, Clone, Copy)]
-struct Entry {
+pub struct Entry {
     /// primary: larger first
     key: f64,
     /// secondary: smaller first
@@ -42,23 +61,28 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
+        // total_cmp: a NaN key (e.g. a 0/0 byte ratio upstream) must
+        // not silently corrupt heap ordering the way the old
+        // `partial_cmp(..).unwrap_or(Equal)` did — NaNs now sort below
+        // every real key and the heap invariant survives.
         self.key
-            .partial_cmp(&other.key)
-            .unwrap_or(Ordering::Equal)
-            .then(other.tie.partial_cmp(&self.tie).unwrap_or(Ordering::Equal))
+            .total_cmp(&other.key)
+            .then(other.tie.total_cmp(&self.tie))
             .then(other.obj.cmp(&self.obj))
     }
 }
 
-/// Per-node neighbor quotas sorted descending (largest transfer first).
-/// Residual quotas below 1% of the average node load are noise from the
-/// fixed-point tolerance and are dropped — realizing them would migrate
-/// an object per neighbor pair for no balance benefit.
-fn sorted_quota(quotas: &Quotas, i: usize, floor: f64) -> Vec<(u32, f64)> {
-    let mut q: Vec<(u32, f64)> =
-        quotas.flows[i].iter().filter(|(_, &a)| a >= floor).map(|(&j, &a)| (j, a)).collect();
-    q.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-    q
+/// Per-node neighbor quotas sorted descending (largest transfer first)
+/// into a reused buffer. Residual quotas below 1% of the average node
+/// load are noise from the fixed-point tolerance and are dropped —
+/// realizing them would migrate an object per neighbor pair for no
+/// balance benefit.
+fn sorted_quota_into(quotas: &Quotas, i: usize, floor: f64, out: &mut Vec<(u32, f64)>) {
+    out.clear();
+    out.extend(quotas.flows[i].iter().filter(|&&(_, a)| a >= floor).copied());
+    // unstable: the id tiebreak makes the order total, and unlike the
+    // stable sort it allocates no merge buffer
+    out.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
 }
 
 /// Quota noise floor for an instance: 1% of the average node load.
@@ -82,67 +106,79 @@ pub fn select_comm(
     quotas: &Quotas,
     overfill: f64,
 ) -> usize {
+    let mut scratch = LbScratch::default();
+    select_comm_with(inst, node_map, quotas, overfill, &mut scratch)
+}
+
+/// [`select_comm`] against a caller-owned [`LbScratch`] — the zero-
+/// allocation path `Diffusion::rebalance` uses.
+pub fn select_comm_with(
+    inst: &Instance,
+    node_map: &mut [u32],
+    quotas: &Quotas,
+    overfill: f64,
+    scratch: &mut LbScratch,
+) -> usize {
     let n_nodes = inst.topo.n_nodes;
+    let n_objects = inst.n_objects();
     let floor = quota_floor(inst);
-    let mut moved = vec![false; inst.n_objects()];
+    scratch.moved.clear();
+    scratch.moved.resize(n_objects, false);
+    scratch.index_by_node(node_map, n_nodes);
     let mut migrations = 0;
-    // objects-by-node index built once (perf: avoids an O(n_objects)
-    // scan per (node, neighbor) pair — see EXPERIMENTS.md §Perf)
-    let mut by_node: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
-    for (o, &nm) in node_map.iter().enumerate() {
-        by_node[nm as usize].push(o as u32);
-    }
+    // Recycle the heap's backing storage (BinaryHeap::from on the empty
+    // Vec is free and keeps capacity).
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::from(std::mem::take(&mut scratch.heap));
 
     for i in 0..n_nodes {
-        let targets = sorted_quota(quotas, i, floor);
+        // take/put buffers so loops below can borrow scratch freely
+        let mut targets = std::mem::take(&mut scratch.targets);
+        sorted_quota_into(quotas, i, floor, &mut targets);
         if targets.is_empty() {
+            scratch.targets = targets;
             continue;
         }
         // Pool of objects currently on node i (excluding arrivals from
         // earlier nodes this round — single-hop at object granularity).
-        let pool: Vec<u32> = by_node[i]
-            .iter()
-            .cloned()
-            .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize])
-            .collect();
+        scratch.pool.clear();
+        {
+            let (pool_buf, by_node, moved) =
+                (&mut scratch.pool, &scratch.by_node, &scratch.moved);
+            pool_buf.extend(
+                by_node[i]
+                    .iter()
+                    .copied()
+                    .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize]),
+            );
+        }
 
-        for (j, quota) in targets {
+        for &(j, quota) in &targets {
             let mut remaining = quota;
-            // bytes each pooled object exchanges with node j right now
-            let mut bytes_to_j: HashMap<u32, f64> = HashMap::with_capacity(pool.len());
-            let mut heap = BinaryHeap::with_capacity(pool.len());
-            for &o in &pool {
-                if moved[o as usize] || node_map[o as usize] != i as u32 {
+            let ep = scratch.next_epoch(n_objects);
+            score_pool_comm(inst, node_map, i as u32, j, scratch);
+            heap.clear();
+            let (pool_buf, scores) = (std::mem::take(&mut scratch.pool), std::mem::take(&mut scratch.scores));
+            for (p, &o) in pool_buf.iter().enumerate() {
+                let (bj, local, valid) = scores[p];
+                if !valid {
                     continue;
                 }
-                let mut bj = 0.0;
-                let mut local = 0.0;
-                for (&p, &w) in inst
-                    .graph
-                    .neighbors(o as usize)
-                    .iter()
-                    .zip(inst.graph.weights(o as usize))
-                {
-                    let pn = node_map[p as usize];
-                    if pn == j {
-                        bj += w;
-                    } else if pn == i as u32 {
-                        local += w;
-                    }
-                }
-                bytes_to_j.insert(o, bj);
+                scratch.bytes_to_j[o as usize] = bj;
+                scratch.epoch[o as usize] = ep;
                 heap.push(Entry { key: bj, tie: local, obj: o });
             }
+            scratch.pool = pool_buf;
+            scratch.scores = scores;
 
             while remaining > 1e-12 {
                 let Some(top) = heap.pop() else { break };
                 let o = top.obj;
-                if moved[o as usize] || node_map[o as usize] != i as u32 {
+                if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
                     continue;
                 }
                 // lazy key revalidation: migrations of earlier objects
                 // may have raised this object's bytes-to-j.
-                let cur = bytes_to_j[&o];
+                let cur = scratch.bytes_to_j[o as usize];
                 if (cur - top.key).abs() > 1e-9 {
                     heap.push(Entry { key: cur, ..top });
                     continue;
@@ -153,7 +189,7 @@ pub fn select_comm(
                 }
                 // Migrate o: i -> j.
                 node_map[o as usize] = j;
-                moved[o as usize] = true;
+                scratch.moved[o as usize] = true;
                 migrations += 1;
                 remaining -= load;
                 // Constraint 2: peers of o now communicate with node j.
@@ -163,17 +199,85 @@ pub fn select_comm(
                     .iter()
                     .zip(inst.graph.weights(o as usize))
                 {
-                    if node_map[p as usize] == i as u32 && !moved[p as usize] {
-                        if let Some(b) = bytes_to_j.get_mut(&p) {
-                            *b += w;
-                            heap.push(Entry { key: *b, tie: 0.0, obj: p });
-                        }
+                    if node_map[p as usize] == i as u32
+                        && !scratch.moved[p as usize]
+                        && scratch.epoch[p as usize] == ep
+                    {
+                        scratch.bytes_to_j[p as usize] += w;
+                        heap.push(Entry {
+                            key: scratch.bytes_to_j[p as usize],
+                            tie: 0.0,
+                            obj: p,
+                        });
                     }
                 }
             }
         }
+        scratch.targets = targets;
     }
+    heap.clear();
+    scratch.heap = heap.into_vec();
     migrations
+}
+
+/// Score every pooled object's `(bytes to j, bytes kept local)` into
+/// `scratch.scores` (per pool position). Pure reads over the graph and
+/// `node_map`; chunk-parallel on the global pool for large pools. The
+/// per-object neighbor walk is sequential either way, so each slot's
+/// f64 sums are identical for any chunking.
+fn score_pool_comm(
+    inst: &Instance,
+    node_map: &[u32],
+    i: u32,
+    j: u32,
+    scratch: &mut LbScratch,
+) {
+    let n = scratch.pool.len();
+    scratch.scores.clear();
+    scratch.scores.resize(n, (0.0, 0.0, false));
+    let (pool_buf, scores, moved) = (&scratch.pool, &mut scratch.scores, &scratch.moved);
+    let score_one = |o: usize| -> Option<(f64, f64)> {
+        if moved[o] || node_map[o] != i {
+            return None;
+        }
+        let mut bj = 0.0;
+        let mut local = 0.0;
+        for (&p, &w) in inst.graph.neighbors(o).iter().zip(inst.graph.weights(o)) {
+            let pn = node_map[p as usize];
+            if pn == j {
+                bj += w;
+            } else if pn == i {
+                local += w;
+            }
+        }
+        Some((bj, local))
+    };
+    let n_tasks = scratch
+        .par_tasks
+        .unwrap_or_else(|| pool::global().threads() + 1)
+        .max(1);
+    if n < PAR_SCORE_MIN || n_tasks == 1 {
+        for (p, slot) in scores.iter_mut().enumerate() {
+            if let Some((bj, local)) = score_one(pool_buf[p] as usize) {
+                *slot = (bj, local, true);
+            }
+        }
+        return;
+    }
+    let chunk = n.div_ceil(n_tasks);
+    let score_one = &score_one;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_tasks);
+    for (t, sc) in scores.chunks_mut(chunk).enumerate() {
+        let start = t * chunk;
+        tasks.push(Box::new(move || {
+            for (off, slot) in sc.iter_mut().enumerate() {
+                if let Some((bj, local)) = score_one(pool_buf[start + off] as usize) {
+                    *slot = (bj, local, true);
+                }
+            }
+        }));
+    }
+    pool::global().scoped(tasks);
 }
 
 /// Coord-variant selection: distance to the target node's centroid,
@@ -184,16 +288,30 @@ pub fn select_coord(
     quotas: &Quotas,
     overfill: f64,
 ) -> usize {
+    let mut scratch = LbScratch::default();
+    select_coord_with(inst, node_map, quotas, overfill, &mut scratch)
+}
+
+/// [`select_coord`] against a caller-owned [`LbScratch`].
+pub fn select_coord_with(
+    inst: &Instance,
+    node_map: &mut [u32],
+    quotas: &Quotas,
+    overfill: f64,
+    scratch: &mut LbScratch,
+) -> usize {
     let n_nodes = inst.topo.n_nodes;
     // centroid state: sums + counts per node
-    let mut sums = vec![[0.0f64; 2]; n_nodes];
-    let mut counts = vec![0usize; n_nodes];
+    scratch.csums.clear();
+    scratch.csums.resize(n_nodes, [0.0f64; 2]);
+    scratch.ccounts.clear();
+    scratch.ccounts.resize(n_nodes, 0);
     for (o, &node) in node_map.iter().enumerate() {
-        sums[node as usize][0] += inst.coords[o][0];
-        sums[node as usize][1] += inst.coords[o][1];
-        counts[node as usize] += 1;
+        scratch.csums[node as usize][0] += inst.coords[o][0];
+        scratch.csums[node as usize][1] += inst.coords[o][1];
+        scratch.ccounts[node as usize] += 1;
     }
-    let centroid = |sums: &Vec<[f64; 2]>, counts: &Vec<usize>, n: usize| -> [f64; 2] {
+    let centroid = |sums: &[[f64; 2]], counts: &[usize], n: usize| -> [f64; 2] {
         if counts[n] == 0 {
             [0.0, 0.0]
         } else {
@@ -207,44 +325,51 @@ pub fn select_coord(
     };
 
     let floor = quota_floor(inst);
-    let mut moved = vec![false; inst.n_objects()];
+    scratch.moved.clear();
+    scratch.moved.resize(inst.n_objects(), false);
+    scratch.index_by_node(node_map, n_nodes);
     let mut migrations = 0;
-    let mut by_node: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
-    for (o, &nm) in node_map.iter().enumerate() {
-        by_node[nm as usize].push(o as u32);
-    }
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::from(std::mem::take(&mut scratch.heap));
 
     for i in 0..n_nodes {
-        let targets = sorted_quota(quotas, i, floor);
+        let mut targets = std::mem::take(&mut scratch.targets);
+        sorted_quota_into(quotas, i, floor, &mut targets);
         if targets.is_empty() {
+            scratch.targets = targets;
             continue;
         }
-        let pool: Vec<u32> = by_node[i]
-            .iter()
-            .cloned()
-            .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize])
-            .collect();
+        scratch.pool.clear();
+        {
+            let (pool_buf, by_node, moved) =
+                (&mut scratch.pool, &scratch.by_node, &scratch.moved);
+            pool_buf.extend(
+                by_node[i]
+                    .iter()
+                    .copied()
+                    .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize]),
+            );
+        }
 
-        for (j, quota) in targets {
+        for &(j, quota) in &targets {
             let mut remaining = quota;
-            let mut heap = BinaryHeap::with_capacity(pool.len());
-            let cj = centroid(&sums, &counts, j as usize);
-            for &o in &pool {
-                if moved[o as usize] || node_map[o as usize] != i as u32 {
+            heap.clear();
+            let cj = centroid(&scratch.csums, &scratch.ccounts, j as usize);
+            for &o in &scratch.pool {
+                if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
                     continue;
                 }
                 // max-heap: closer = higher priority = larger key
                 heap.push(Entry { key: -dist2(inst.coords[o as usize], cj), tie: 0.0, obj: o });
             }
             // bounded revalidation so a drifting centroid cannot loop us
-            let mut revalidations = 4 * pool.len() + 16;
+            let mut revalidations = 4 * scratch.pool.len() + 16;
             while remaining > 1e-12 {
                 let Some(top) = heap.pop() else { break };
                 let o = top.obj;
-                if moved[o as usize] || node_map[o as usize] != i as u32 {
+                if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
                     continue;
                 }
-                let cj = centroid(&sums, &counts, j as usize);
+                let cj = centroid(&scratch.csums, &scratch.ccounts, j as usize);
                 let cur = -dist2(inst.coords[o as usize], cj);
                 if revalidations > 0 && (cur - top.key).abs() > 1e-9 {
                     revalidations -= 1;
@@ -256,19 +381,22 @@ pub fn select_coord(
                     continue;
                 }
                 node_map[o as usize] = j;
-                moved[o as usize] = true;
+                scratch.moved[o as usize] = true;
                 migrations += 1;
                 remaining -= load;
                 let c = inst.coords[o as usize];
-                sums[i][0] -= c[0];
-                sums[i][1] -= c[1];
-                counts[i] -= 1;
-                sums[j as usize][0] += c[0];
-                sums[j as usize][1] += c[1];
-                counts[j as usize] += 1;
+                scratch.csums[i][0] -= c[0];
+                scratch.csums[i][1] -= c[1];
+                scratch.ccounts[i] -= 1;
+                scratch.csums[j as usize][0] += c[0];
+                scratch.csums[j as usize][1] += c[1];
+                scratch.ccounts[j as usize] += 1;
             }
         }
+        scratch.targets = targets;
     }
+    heap.clear();
+    scratch.heap = heap.into_vec();
     migrations
 }
 
@@ -303,7 +431,7 @@ mod tests {
 
     fn quota_0_to_1(amount: f64) -> Quotas {
         let mut q = Quotas::empty(2);
-        q.flows[0].insert(1, amount);
+        q.flows[0].push((1, amount));
         q
     }
 
@@ -382,5 +510,35 @@ mod tests {
         assert_eq!(select_comm(&inst, &mut map, &Quotas::empty(2), 0.5), 0);
         assert_eq!(select_coord(&inst, &mut map, &Quotas::empty(2), 0.5), 0);
         assert_eq!(map, inst.node_mapping());
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        let inst = two_node_instance();
+        let mut shared = LbScratch::default();
+        for amount in [1.0, 2.0, 2.5, 3.0] {
+            let mut m1 = inst.node_mapping();
+            let mut m2 = inst.node_mapping();
+            let n1 = select_comm(&inst, &mut m1, &quota_0_to_1(amount), 0.5);
+            let n2 =
+                select_comm_with(&inst, &mut m2, &quota_0_to_1(amount), 0.5, &mut shared);
+            assert_eq!(n1, n2);
+            assert_eq!(m1, m2);
+        }
+    }
+
+    #[test]
+    fn nan_quota_keys_no_longer_corrupt_ordering() {
+        // a NaN-keyed entry must sort below real keys (total_cmp), not
+        // equal to everything (the old partial_cmp fallback)
+        let nan = Entry { key: f64::NAN, tie: 0.0, obj: 9 };
+        let real = Entry { key: 1.0, tie: 0.0, obj: 1 };
+        let zero = Entry { key: 0.0, tie: 0.0, obj: 2 };
+        assert_eq!(nan.cmp(&real), Ordering::Less);
+        assert_eq!(nan.cmp(&zero), Ordering::Less);
+        let mut h = BinaryHeap::from(vec![nan, real, zero]);
+        assert_eq!(h.pop().unwrap().obj, 1);
+        assert_eq!(h.pop().unwrap().obj, 2);
+        assert_eq!(h.pop().unwrap().obj, 9);
     }
 }

@@ -1,0 +1,181 @@
+//! Reusable workspace for the diffusion pipeline ("LbScratch").
+//!
+//! The seed allocated per call in every stage: stage 1 built a fresh
+//! dense traffic matrix and fresh candidate rows, stage 2 kept net
+//! flows in a `HashMap<(u32,u32), f64>`, and stage 3 built a
+//! `HashMap<u32, f64>` plus a `BinaryHeap` **per (node, neighbor)
+//! pair** — thousands of transient maps per rebalance on the 9216-
+//! object workload. Diffusive LB only pays off when the balancer is
+//! cheap relative to the work it moves (Demiralp et al. 2022; Demirel &
+//! Sbalzarini 2012), so the whole pipeline now threads one [`LbScratch`]
+//! through the stages: dense per-object arrays with **epoch tags**
+//! replace the hash maps (an entry is valid iff its tag equals the
+//! current epoch, so "clearing" is a single counter increment), heaps
+//! and index vectors are recycled, and the hot-loop sorts are unstable
+//! (in-place, no merge buffer). After the first rebalance warms the
+//! capacities, a comm-variant `rebalance()` performs no transient heap
+//! allocation in its per-object or per-(node, neighbor) loops. (Paths
+//! that *must* sort stably for bit-identical f64 sums —
+//! `model::graph::sort_sum_merge` — still pay the stable sort's merge
+//! buffer; that is per app step / LB round, not per object.)
+//!
+//! Every replacement is value-identical to the seed's hash-based code
+//! (dense lookup vs hash lookup of the same f64; same `BinaryHeap`
+//! type, same push order), so strategy decisions are bit-identical —
+//! `rust/tests/perf_refactor.rs` locks that in.
+
+use crate::model::Instance;
+
+/// Reusable buffers for one diffusion strategy instance. Obtain via
+/// `LbScratch::default()`; every buffer sizes itself lazily against the
+/// instance it is used with, so one scratch serves instances of
+/// changing size (re-warming capacities when the problem grows).
+#[derive(Debug, Default)]
+pub struct LbScratch {
+    // ---------------------------------------------------- shared views
+    /// Object -> node mapping (derived from the PE mapping).
+    pub node_map: Vec<u32>,
+    /// Per-node load totals.
+    pub node_loads: Vec<f64>,
+    // ------------------------------------------------------- stage 1
+    /// Dense node-to-node traffic matrix (`n_nodes^2`).
+    pub traffic: Vec<f64>,
+    /// Candidate preference rows, outer and inner capacity reused.
+    pub candidates: Vec<Vec<u32>>,
+    /// Per-task (peers, rest) buffers for pool-parallel candidate
+    /// construction; one slot per worker lane so tasks never share.
+    pub stage1_bufs: Vec<(Vec<(u32, f64)>, Vec<u32>)>,
+    // ------------------------------------------------------- stage 2
+    /// Load originating at each node still held there.
+    pub own: Vec<f64>,
+    /// Load received virtually (never forwarded).
+    pub recv: Vec<f64>,
+    /// `own + recv` snapshot per sweep.
+    pub cur: Vec<f64>,
+    /// CSR offsets into `net` for the neighbor graph's adjacency.
+    pub net_offsets: Vec<u32>,
+    /// Symmetrized adjacency rows, used for net-flow slots only when
+    /// the caller hands virtual_lb an asymmetric graph (stage 1 always
+    /// produces symmetric ones, so the hot path never fills this).
+    pub sym_adj: Vec<Vec<u32>>,
+    /// Signed net flow per directed adjacency slot (see virtual_lb).
+    pub net: Vec<f64>,
+    /// Planned sends of the current sweep.
+    pub sends: Vec<(u32, u32, f64)>,
+    /// Recycled storage for `Quotas::flows` (rows keep capacity).
+    pub flows_pool: Vec<Vec<(u32, f64)>>,
+    // ------------------------------------------------------- stage 3
+    /// Dense per-object bytes-to-target accumulator.
+    pub bytes_to_j: Vec<f64>,
+    /// Epoch tag per object; `bytes_to_j[o]` is valid iff
+    /// `epoch[o] == cur_epoch`.
+    pub epoch: Vec<u32>,
+    pub cur_epoch: u32,
+    /// Per-pool-position `(key, tie, valid)` scoring buffer; positions
+    /// are chunk-splittable for pool-parallel scoring where object ids
+    /// are not.
+    pub scores: Vec<(f64, f64, bool)>,
+    /// Coord variant: per-node centroid sums / counts.
+    pub csums: Vec<[f64; 2]>,
+    pub ccounts: Vec<usize>,
+    /// Recycled `BinaryHeap` backing storage.
+    pub heap: Vec<super::object_selection::Entry>,
+    /// Objects-by-node index (inner vec capacity reused).
+    pub by_node: Vec<Vec<u32>>,
+    /// Current node's candidate pool.
+    pub pool: Vec<u32>,
+    /// Sorted (neighbor, quota) targets of the current node.
+    pub targets: Vec<(u32, f64)>,
+    /// Per-object migrated flag for the current rebalance.
+    pub moved: Vec<bool>,
+    /// Parallel-scoring chunk-count override (tests sweep this to prove
+    /// thread-count independence); `None` = size to the global pool.
+    pub par_tasks: Option<usize>,
+}
+
+impl LbScratch {
+    /// Fill `node_map`/`node_loads` from the instance (allocation-free
+    /// once warm) and return the number of nodes.
+    pub fn load_views(&mut self, inst: &Instance) -> usize {
+        inst.node_mapping_into(&mut self.node_map);
+        inst.node_loads_into(&mut self.node_loads);
+        inst.topo.n_nodes
+    }
+
+    /// Advance the stage-3 epoch, resizing the tag arrays on first use
+    /// (or when the instance grew). On counter wrap every tag resets —
+    /// a once-per-4-billion-phases O(n) cost.
+    pub fn next_epoch(&mut self, n_objects: usize) -> u32 {
+        if self.epoch.len() < n_objects {
+            self.epoch.resize(n_objects, 0);
+            self.bytes_to_j.resize(n_objects, 0.0);
+        }
+        self.cur_epoch = match self.cur_epoch.checked_add(1) {
+            Some(e) => e,
+            None => {
+                self.epoch.iter_mut().for_each(|e| *e = 0);
+                1
+            }
+        };
+        self.cur_epoch
+    }
+
+    /// Rebuild the objects-by-node index for `node_map`.
+    pub fn index_by_node(&mut self, node_map: &[u32], n_nodes: usize) {
+        for row in self.by_node.iter_mut() {
+            row.clear();
+        }
+        if self.by_node.len() < n_nodes {
+            self.by_node.resize_with(n_nodes, Vec::new);
+        }
+        for (o, &nm) in node_map.iter().enumerate() {
+            self.by_node[nm as usize].push(o as u32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CommGraph, Topology};
+
+    #[test]
+    fn views_match_instance_helpers() {
+        let inst = Instance::new(
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![[0.0; 2]; 4],
+            CommGraph::empty(4),
+            vec![0, 1, 2, 3],
+            Topology::new(2, 2),
+        );
+        let mut s = LbScratch::default();
+        let n_nodes = s.load_views(&inst);
+        assert_eq!(n_nodes, 2);
+        assert_eq!(s.node_map, inst.node_mapping());
+        assert_eq!(s.node_loads, inst.node_loads(&inst.mapping));
+        // reuse with no stale state
+        s.load_views(&inst);
+        assert_eq!(s.node_loads, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn epochs_invalidate_without_clearing() {
+        let mut s = LbScratch::default();
+        let e1 = s.next_epoch(8);
+        s.bytes_to_j[3] = 42.0;
+        s.epoch[3] = e1;
+        let e2 = s.next_epoch(8);
+        assert_ne!(e1, e2);
+        assert_ne!(s.epoch[3], e2); // entry from e1 now invalid
+    }
+
+    #[test]
+    fn by_node_index_reuses_rows() {
+        let mut s = LbScratch::default();
+        s.index_by_node(&[0, 1, 0, 1], 2);
+        assert_eq!(s.by_node[0], vec![0, 2]);
+        s.index_by_node(&[1, 1, 1, 1], 2);
+        assert_eq!(s.by_node[0], Vec::<u32>::new());
+        assert_eq!(s.by_node[1], vec![0, 1, 2, 3]);
+    }
+}

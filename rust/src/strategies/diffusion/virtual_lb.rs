@@ -7,35 +7,50 @@
 //! paper's **single-hop constraint** — load received virtually is never
 //! forwarded, so real objects later move at most one edge from their
 //! home node. Output: net per-edge send quotas.
-
-use std::collections::HashMap;
+//!
+//! Perf: the fixed-point's state (own/recv/cur vectors, the per-sweep
+//! send list, and the net pair flows — previously a
+//! `HashMap<(u32,u32), f64>`) lives in [`LbScratch`]; net flows are
+//! indexed by a small CSR over the neighbor graph's adjacency, so a
+//! sweep is pure array arithmetic. Accumulation order per pair is
+//! chronological, exactly like the old entry-API accumulation, so the
+//! resulting quotas are bit-identical.
 
 use super::neighbor::NeighborGraph;
+use super::scratch::LbScratch;
 
-/// Net planned transfers: `flows[i]` maps neighbor j to the (positive)
-/// amount node i should send to j.
+/// Net planned transfers: `flows[i]` lists `(j, amount)` pairs — the
+/// (positive) load node i should send to neighbor j — sorted by `j`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Quotas {
-    pub flows: Vec<HashMap<u32, f64>>,
+    pub flows: Vec<Vec<(u32, f64)>>,
     /// Iterations the fixed-point ran for (reported as strategy cost).
     pub iterations: usize,
 }
 
 impl Quotas {
     pub fn empty(n: usize) -> Quotas {
-        Quotas { flows: vec![HashMap::new(); n], iterations: 0 }
+        Quotas { flows: vec![Vec::new(); n], iterations: 0 }
     }
 
     /// Total load node i is asked to send.
     pub fn outgoing(&self, i: usize) -> f64 {
-        self.flows[i].values().sum()
+        self.flows[i].iter().map(|&(_, a)| a).sum()
+    }
+
+    /// Planned send from `i` to `j` (0.0 when none).
+    pub fn flow(&self, i: usize, j: u32) -> f64 {
+        match self.flows[i].binary_search_by_key(&j, |&(p, _)| p) {
+            Ok(idx) => self.flows[i][idx].1,
+            Err(_) => 0.0,
+        }
     }
 
     /// Resulting virtual load vector when all quotas execute.
     pub fn apply(&self, loads: &[f64]) -> Vec<f64> {
         let mut out = loads.to_vec();
         for (i, flow) in self.flows.iter().enumerate() {
-            for (&j, &amt) in flow {
+            for &(j, amt) in flow {
                 out[i] -= amt;
                 out[j as usize] += amt;
             }
@@ -53,79 +68,175 @@ pub fn virtual_balance(
     tol: f64,
     max_iters: usize,
 ) -> Quotas {
+    let mut scratch = LbScratch::default();
+    virtual_balance_with(neigh, loads, tol, max_iters, &mut scratch)
+}
+
+/// [`virtual_balance`] against a caller-owned [`LbScratch`]. The
+/// returned `Quotas` takes its row storage from `scratch.flows_pool`;
+/// hand it back (`scratch.flows_pool = quotas.flows`) to keep the
+/// steady state allocation-free.
+///
+/// Pair flows are stored once, in the smaller endpoint's adjacency
+/// row. Stage 1 always produces symmetric graphs, and that hot path
+/// indexes `neigh.adj` directly; an asymmetric `neigh` (constructible
+/// because `adj` is a pub field) is handled gracefully by building a
+/// symmetrized slot adjacency in the scratch — same quotas the seed's
+/// HashMap accumulator produced, just a cold copy.
+pub fn virtual_balance_with(
+    neigh: &NeighborGraph,
+    loads: &[f64],
+    tol: f64,
+    max_iters: usize,
+    scratch: &mut LbScratch,
+) -> Quotas {
     let n = loads.len();
     assert_eq!(neigh.n(), n);
+    let mut flows = std::mem::take(&mut scratch.flows_pool);
+    for row in flows.iter_mut() {
+        row.clear();
+    }
+    if flows.len() != n {
+        flows.truncate(n);
+        flows.resize_with(n, Vec::new);
+    }
     let global_avg = loads.iter().sum::<f64>() / n.max(1) as f64;
     if global_avg <= 0.0 {
-        return Quotas::empty(n);
+        return Quotas { flows, iterations: 0 };
     }
 
     // First-order scheme constant: 1/(max_degree + 1) guarantees
     // convergence on arbitrary neighbor graphs (Cybenko).
     let alpha = 1.0 / (neigh.max_degree() as f64 + 1.0);
 
+    // Slot adjacency: neigh.adj itself when symmetric (the stage-1
+    // guarantee — no copy), else a symmetrized closure so every pair a
+    // send can travel has a slot in its smaller endpoint's row.
+    let symmetric = neigh.is_symmetric();
+    if !symmetric {
+        for row in scratch.sym_adj.iter_mut() {
+            row.clear();
+        }
+        if scratch.sym_adj.len() != n {
+            scratch.sym_adj.truncate(n);
+            scratch.sym_adj.resize_with(n, Vec::new);
+        }
+        for i in 0..n {
+            for &j in &neigh.adj[i] {
+                if !scratch.sym_adj[i].contains(&j) {
+                    scratch.sym_adj[i].push(j);
+                }
+                if !scratch.sym_adj[j as usize].contains(&(i as u32)) {
+                    scratch.sym_adj[j as usize].push(i as u32);
+                }
+            }
+        }
+    }
+    let slot_adj: &[Vec<u32>] = if symmetric { &neigh.adj } else { &scratch.sym_adj };
+
+    // CSR over the slot adjacency: net[net_offsets[i] + idx] is the
+    // signed flow of the unordered pair (i, slot_adj[i][idx]), stored
+    // at the smaller endpoint's row only (>0 means smaller-id sends).
+    scratch.net_offsets.clear();
+    scratch.net_offsets.push(0);
+    for row in slot_adj {
+        let last = *scratch.net_offsets.last().unwrap();
+        scratch.net_offsets.push(last + row.len() as u32);
+    }
+    let slots = *scratch.net_offsets.last().unwrap() as usize;
+    scratch.net.clear();
+    scratch.net.resize(slots, 0.0);
+
     // own[i]: load originating at i still held at i (may be sent).
     // recv[i]: load received virtually (may NOT be forwarded).
-    let mut own = loads.to_vec();
-    let mut recv = vec![0.0; n];
-    // net signed flow per ordered pair (i, j) with i < j: >0 means i->j.
-    let mut net: HashMap<(u32, u32), f64> = HashMap::new();
+    scratch.own.clear();
+    scratch.own.extend_from_slice(loads);
+    scratch.recv.clear();
+    scratch.recv.resize(n, 0.0);
     let mut iterations = 0;
 
     for iter in 0..max_iters {
         iterations = iter + 1;
-        let cur: Vec<f64> = own.iter().zip(&recv).map(|(o, r)| o + r).collect();
+        scratch.cur.clear();
+        {
+            let (cur, own, recv) = (&mut scratch.cur, &scratch.own, &scratch.recv);
+            cur.extend(own.iter().zip(recv).map(|(o, r)| o + r));
+        }
 
         // Plan this sweep's sends; cap each node's total send at its
         // remaining own load (single-hop constraint).
-        let mut sends: Vec<(usize, u32, f64)> = Vec::new();
+        scratch.sends.clear();
         for i in 0..n {
             let mut want = 0.0;
-            let mut per: Vec<(u32, f64)> = Vec::new();
             for &j in &neigh.adj[i] {
-                let diff = cur[i] - cur[j as usize];
+                let diff = scratch.cur[i] - scratch.cur[j as usize];
                 if diff > 0.0 {
-                    let amt = alpha * diff;
-                    per.push((j, amt));
-                    want += amt;
+                    want += alpha * diff;
                 }
             }
             if want <= 0.0 {
                 continue;
             }
-            let scale = if want > own[i] { own[i] / want } else { 1.0 };
+            let scale = if want > scratch.own[i] { scratch.own[i] / want } else { 1.0 };
             if scale <= 0.0 {
                 continue;
             }
-            for (j, amt) in per {
-                sends.push((i, j, amt * scale));
+            for &j in &neigh.adj[i] {
+                let diff = scratch.cur[i] - scratch.cur[j as usize];
+                if diff > 0.0 {
+                    let amt = alpha * diff;
+                    scratch.sends.push((i as u32, j, amt * scale));
+                }
             }
         }
 
         let mut moved = 0.0;
-        for (i, j, amt) in sends {
-            own[i] -= amt;
-            recv[j as usize] += amt;
-            let key = if (i as u32) < j { (i as u32, j) } else { (j, i as u32) };
-            let sign = if (i as u32) < j { 1.0 } else { -1.0 };
-            *net.entry(key).or_insert(0.0) += sign * amt;
-            moved += amt;
+        {
+            let (sends, own, recv, net, net_offsets) = (
+                &scratch.sends,
+                &mut scratch.own,
+                &mut scratch.recv,
+                &mut scratch.net,
+                &scratch.net_offsets,
+            );
+            for &(i, j, amt) in sends {
+                own[i as usize] -= amt;
+                recv[j as usize] += amt;
+                let (a, b, sign) = if i < j { (i, j, 1.0) } else { (j, i, -1.0) };
+                // degree <= K: a linear scan beats any index structure
+                let idx = slot_adj[a as usize]
+                    .iter()
+                    .position(|&x| x == b)
+                    .expect("slot adjacency misses a sent-along edge");
+                net[net_offsets[a as usize] as usize + idx] += sign * amt;
+                moved += amt;
+            }
         }
 
-        if converged(neigh, &own, &recv, global_avg, tol) || moved <= tol * global_avg * 1e-3 {
+        if converged(neigh, &scratch.own, &scratch.recv, global_avg, tol)
+            || moved <= tol * global_avg * 1e-3
+        {
             break;
         }
     }
 
     // Fold signed pair flows into per-node positive send quotas. Cancel
     // opposing flows so object selection never ping-pongs objects.
-    let mut flows: Vec<HashMap<u32, f64>> = vec![HashMap::new(); n];
-    for ((a, b), f) in net {
-        if f > 1e-12 {
-            flows[a as usize].insert(b, f);
-        } else if f < -1e-12 {
-            flows[b as usize].insert(a, -f);
+    for a in 0..n {
+        for (idx, &b) in slot_adj[a].iter().enumerate() {
+            if (a as u32) >= b {
+                continue;
+            }
+            let f = scratch.net[scratch.net_offsets[a] as usize + idx];
+            if f > 1e-12 {
+                flows[a].push((b, f));
+            } else if f < -1e-12 {
+                flows[b as usize].push((a as u32, -f));
+            }
         }
+    }
+    for row in flows.iter_mut() {
+        row.sort_unstable_by_key(|&(j, _)| j);
     }
     Quotas { flows, iterations }
 }
@@ -211,11 +322,60 @@ mod tests {
         let g = ring(n, 2);
         let q = virtual_balance(&g, &loads, 0.02, 500);
         for i in 0..n {
-            for &j in q.flows[i].keys() {
+            for &(j, _) in &q.flows[i] {
                 assert!(g.adj[i].contains(&j), "flow on non-edge {i}->{j}");
             }
             // single-hop: cannot send more than original load
             assert!(q.outgoing(i) <= loads[i] + 1e-9, "node {i} oversends");
+        }
+    }
+
+    #[test]
+    fn asymmetric_adjacency_is_handled_not_panicked() {
+        // adj is a pub field, so callers can hand us a one-directional
+        // graph; the seed's HashMap accumulator coped, and so must the
+        // slot-CSR: node 1 sees node 0 as a neighbor but not vice
+        // versa, so a send 1 -> 0 must land in node 0's (synthesized)
+        // slot row.
+        let g = NeighborGraph { adj: vec![vec![], vec![0], vec![0, 1]] };
+        assert!(!g.is_symmetric());
+        let loads = [1.0, 10.0, 4.0];
+        let q = virtual_balance(&g, &loads, 0.05, 200);
+        let out = q.apply(&loads);
+        assert!((out.iter().sum::<f64>() - 15.0).abs() < 1e-9);
+        assert!(q.outgoing(1) > 0.0, "overloaded node 1 must shed to 0");
+    }
+
+    #[test]
+    fn flows_rows_sorted_and_queryable() {
+        let n = 8;
+        let mut loads = vec![1.0; n];
+        loads[0] = 9.0;
+        let g = ring(n, 4);
+        let q = virtual_balance(&g, &loads, 0.05, 300);
+        for row in &q.flows {
+            assert!(row.windows(2).all(|w| w[0].0 < w[1].0), "{row:?}");
+        }
+        let total: f64 = (0..n).map(|i| q.outgoing(i)).sum();
+        let via_flow: f64 = (0..n)
+            .flat_map(|i| (0..n as u32).map(move |j| (i, j)))
+            .map(|(i, j)| q.flow(i, j))
+            .sum();
+        assert!((total - via_flow).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scratch_reuse_is_identical() {
+        let n = 16;
+        let g = ring(n, 4);
+        let mut scratch = LbScratch::default();
+        let mut rng = Rng::new(17);
+        for _ in 0..5 {
+            let loads: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 10.0)).collect();
+            let fresh = virtual_balance(&g, &loads, 0.05, 300);
+            let reused = virtual_balance_with(&g, &loads, 0.05, 300, &mut scratch);
+            assert_eq!(fresh, reused);
+            scratch.flows_pool = reused.flows; // recycle like rebalance()
         }
     }
 

@@ -20,10 +20,13 @@ pub struct ParMetis {
 }
 
 /// Unconstrained (multi-hop) diffusion of part loads toward the mean on
-/// the quotient graph; returns per-ordered-pair flows.
+/// the quotient graph (sparse rows of `(peer, bytes)`, sorted by peer —
+/// the [`crate::model::GroupTraffic`] row layout, which also makes the
+/// sweep order, and hence the f64 flow sums, deterministic where the
+/// old HashMap rows were not); returns per-ordered-pair flows.
 fn diffuse_flows(
     part_loads: &[f64],
-    quotient: &[HashMap<u32, f64>],
+    quotient: &[Vec<(u32, f64)>],
     tol: f64,
     max_iters: usize,
 ) -> Vec<HashMap<u32, f64>> {
@@ -37,7 +40,7 @@ fn diffuse_flows(
         let snapshot = cur.clone();
         let mut moved = 0.0;
         for i in 0..k {
-            for (&j, _) in &quotient[i] {
+            for &(j, _) in &quotient[i] {
                 let j = j as usize;
                 let diff = snapshot[i] - snapshot[j];
                 if diff > 0.0 {
@@ -85,18 +88,20 @@ impl LoadBalancer for ParMetis {
         let k = inst.topo.n_pes();
         let mut mapping = inst.mapping.clone();
         let part_loads = inst.pe_loads(&mapping);
-        // Quotient graph over parts. Parts with no traffic get a ring
-        // edge so load can still circulate.
-        let mut quotient = inst.graph.group_traffic(&mapping, k);
-        for q in quotient.iter_mut() {
-            q.retain(|&j, _| j as usize != usize::MAX);
-        }
+        // Quotient graph over parts (CSR rows, diagonal dropped).
+        // Parts with no traffic get a ring edge so load can still
+        // circulate.
+        let gt = inst.graph.group_traffic(&mapping, k);
+        let mut quotient: Vec<Vec<(u32, f64)>> = (0..k)
+            .map(|i| gt.iter_row(i).filter(|&(j, _)| j as usize != i).collect())
+            .collect();
         for i in 0..k {
-            quotient[i].remove(&(i as u32));
             if quotient[i].is_empty() && k > 1 {
                 let j = ((i + 1) % k) as u32;
-                quotient[i].insert(j, 0.0);
-                quotient[j as usize].insert(i as u32, 0.0);
+                quotient[i].push((j, 0.0));
+                if !quotient[j as usize].iter().any(|&(p, _)| p as usize == i) {
+                    quotient[j as usize].push((i as u32, 0.0));
+                }
             }
         }
         let flows = diffuse_flows(&part_loads, &quotient, 0.02, 200);
@@ -176,10 +181,10 @@ mod tests {
     #[test]
     fn diffuse_flows_conserve() {
         let loads = vec![10.0, 1.0, 1.0, 1.0];
-        let mut quotient: Vec<HashMap<u32, f64>> = vec![HashMap::new(); 4];
+        let mut quotient: Vec<Vec<(u32, f64)>> = vec![Vec::new(); 4];
         for i in 0..4u32 {
-            quotient[i as usize].insert((i + 1) % 4, 1.0);
-            quotient[i as usize].insert((i + 3) % 4, 1.0);
+            quotient[i as usize].push(((i + 1) % 4, 1.0));
+            quotient[i as usize].push(((i + 3) % 4, 1.0));
         }
         let flows = diffuse_flows(&loads, &quotient, 0.02, 500);
         let mut after = loads.clone();

@@ -85,6 +85,91 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t.elapsed().as_secs_f64())
 }
 
+/// Machine-readable bench report writer (`BENCH_*.json`): collects
+/// [`Timing`]s plus optional throughput figures and serializes a stable
+/// JSON document (hand-rolled — serde is unavailable offline), so the
+/// perf trajectory of every hot path is diffable across PRs.
+#[derive(Debug, Default, Clone)]
+pub struct JsonReport {
+    entries: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record one timed path; `throughput` is an optional
+    /// `(unit, value)` pair, e.g. `("Mparticles/s", 12.3)`.
+    pub fn add(&mut self, t: &Timing, throughput: Option<(&str, f64)>) {
+        let mut obj = format!(
+            "{{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \
+             \"p99_ns\": {:.1}, \"min_ns\": {:.1}",
+            json_escape(&t.name),
+            t.iters,
+            t.mean_s * 1e9,
+            t.median_s * 1e9,
+            t.p99_s * 1e9,
+            t.min_s * 1e9,
+        );
+        // {:.3} would render inf/NaN bare, which is invalid JSON — a
+        // zero-duration path (coarse timer) must not corrupt the file.
+        if let Some((unit, value)) = throughput.filter(|&(_, v)| v.is_finite()) {
+            obj.push_str(&format!(
+                ", \"throughput\": {{\"unit\": \"{}\", \"value\": {:.3}}}",
+                json_escape(unit),
+                value
+            ));
+        }
+        obj.push('}');
+        self.entries.push(obj);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn render(&self, label: &str) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"difflb-bench-v1\",\n");
+        s.push_str(&format!("  \"label\": \"{}\",\n", json_escape(label)));
+        s.push_str("  \"paths\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str("    ");
+            s.push_str(e);
+            if i + 1 < self.entries.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    pub fn write(&self, path: impl AsRef<std::path::Path>, label: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render(label))
+    }
+}
+
 /// Aligned text table, used by bench binaries to print paper tables.
 #[derive(Debug, Default, Clone)]
 pub struct Table {
@@ -165,6 +250,25 @@ mod tests {
         assert!(t.iters >= 5);
         assert!(t.mean_s >= 0.0);
         assert!(t.report().contains("noop"));
+    }
+
+    #[test]
+    fn json_report_renders_valid_shape() {
+        let mut r = JsonReport::new();
+        let t = time_fn("path \"a\"", Duration::from_millis(5), || 1 + 1);
+        r.add(&t, Some(("Mops/s", 12.5)));
+        r.add(&t, None);
+        r.add(&t, Some(("Mops/s", f64::INFINITY))); // dropped: invalid JSON
+        assert_eq!(r.len(), 3);
+        let s = r.render("unit-test");
+        assert!(!s.contains("inf"), "non-finite throughput leaked: {s}");
+        assert!(s.contains("\"schema\": \"difflb-bench-v1\""));
+        assert!(s.contains("\"label\": \"unit-test\""));
+        assert!(s.contains("path \\\"a\\\""));
+        assert!(s.contains("\"throughput\": {\"unit\": \"Mops/s\", \"value\": 12.500}"));
+        // braces balance (cheap well-formedness check without a parser)
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
     }
 
     #[test]

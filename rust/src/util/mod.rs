@@ -7,6 +7,7 @@ pub mod bench;
 pub mod config;
 pub mod io;
 pub mod logging;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

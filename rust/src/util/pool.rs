@@ -1,0 +1,296 @@
+//! Persistent worker-thread pool shared by every parallel hot path.
+//!
+//! The seed code spawned **scoped threads per call** (`native_push`
+//! spawned `threads` OS threads every PIC step — ~50-100 µs of spawn +
+//! join overhead per step, dwarfing the push itself at small batch
+//! sizes; see EXPERIMENTS.md §Perf). This module keeps one
+//! process-wide pool of workers alive and hands them borrowed closures,
+//! so steady-state parallel sections cost two condvar signals instead
+//! of `threads` thread spawns.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Determinism** — the pool never decides *what* a task computes,
+//!    only *when*. Callers partition work into fixed chunks derived
+//!    from the task count alone, so results are bit-identical for any
+//!    worker count (including zero workers, where everything runs
+//!    inline on the caller).
+//! 2. **Borrowed data** — tasks may borrow from the caller's stack.
+//!    [`ThreadPool::scoped`] erases the lifetime internally and is
+//!    sound because it always blocks until every submitted task
+//!    finished (a drop guard waits even when a task panics).
+//! 3. **No dependencies** — std only (crossbeam/rayon are unavailable
+//!    offline): an `mpsc` channel feeds workers, a mutex+condvar latch
+//!    tracks completion.
+//!
+//! Tasks must never block on other tasks (they are opaque closures run
+//! to completion); the pool is for data-parallel fan-out, not a general
+//! executor. Do NOT call `scoped` from inside a pool task: if every
+//! worker sits in an inner `wait()` there is no one left to run the
+//! inner jobs and the pool deadlocks. Every current call site
+//! (native_push, stage-1 candidate fill, stage-3 scoring) is a leaf
+//! parallel section.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A task queued to the workers: a lifetime-erased boxed closure plus
+/// the latch of the scope it belongs to.
+struct Job {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    latch: Arc<Latch>,
+}
+
+/// Completion latch for one `scoped` call.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(count),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn complete_one(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+/// Waits for the latch on drop, so a panic unwinding through the caller
+/// cannot free borrowed stack data while workers still reference it.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// The persistent pool.
+pub struct ThreadPool {
+    /// Mutex-wrapped so `ThreadPool` is `Sync` on every supported
+    /// toolchain (`mpsc::Sender` only became `Sync` in rustc 1.72);
+    /// enqueueing is a few ns, contention is irrelevant next to task
+    /// runtime.
+    tx: Mutex<Sender<Job>>,
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `workers` background threads. `0` is valid:
+    /// every task then runs inline on the caller.
+    pub fn new(workers: usize) -> ThreadPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("difflb-pool-{i}"))
+                .spawn(move || loop {
+                    // hold the receiver lock only while dequeueing
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => return, // pool dropped
+                    };
+                    if catch_unwind(AssertUnwindSafe(job.run)).is_err() {
+                        job.latch.panicked.store(true, Ordering::SeqCst);
+                    }
+                    job.latch.complete_one();
+                })
+                .expect("spawning pool worker");
+        }
+        ThreadPool { tx: Mutex::new(tx), workers }
+    }
+
+    /// Number of background workers (callers typically chunk work into
+    /// `threads()`-ish pieces; the exact chunking must depend only on
+    /// caller-supplied parameters when determinism across machines
+    /// matters).
+    pub fn threads(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every task to completion, in parallel across the workers,
+    /// blocking until all are done. The first task runs on the calling
+    /// thread (the caller would otherwise idle in `wait`), the rest are
+    /// queued. Panics in any task propagate to the caller as a single
+    /// panic **after** all tasks finished.
+    pub fn scoped<'env>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.workers == 0 || tasks.len() == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let queued_total = tasks.len() - 1;
+        let latch = Arc::new(Latch::new(queued_total));
+        let first = tasks.remove(0);
+        let mut send_failed = false;
+        {
+            // From here on, queued closures may borrow 'env data; the
+            // guard guarantees they all finish before this block exits,
+            // which is what makes the lifetime erasure below sound.
+            let guard = WaitGuard(&latch);
+            {
+                // A poisoned lock only means some thread panicked while
+                // *enqueueing*; the sender itself is still sound.
+                let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+                let mut sent = 0usize;
+                for task in tasks {
+                    // SAFETY: the task is only executed before `guard`
+                    // is dropped, i.e. strictly inside 'env.
+                    let erased: Box<dyn FnOnce() + Send + 'static> =
+                        unsafe { std::mem::transmute(task) };
+                    if tx.send(Job { run: erased, latch: Arc::clone(&latch) }).is_err() {
+                        // Workers gone (channel closed). Balance the
+                        // latch for every job that will never run so
+                        // the guard's wait() cannot hang, then report
+                        // below once the sent jobs drained.
+                        send_failed = true;
+                        for _ in sent..queued_total {
+                            latch.complete_one();
+                        }
+                        break;
+                    }
+                    sent += 1;
+                }
+            }
+            first();
+            drop(guard); // waits
+        }
+        if send_failed {
+            panic!("thread-pool workers disappeared while enqueueing");
+        }
+        if latch.panicked.load(Ordering::SeqCst) {
+            panic!("thread-pool task panicked");
+        }
+    }
+
+}
+
+/// The process-global pool, sized to the machine (one worker per
+/// available core; the caller thread participates too, so parallel
+/// sections use `threads() + 1` lanes at full fan-out). Sized once at
+/// first use; `DIFFLB_THREADS` caps it for experiments.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let cap = std::env::var("DIFFLB_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(cores);
+        // workers = lanes - 1: the scoped caller always runs one task.
+        ThreadPool::new(cap.min(cores).saturating_sub(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scoped_runs_all_tasks_with_borrows() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 17];
+        {
+            let chunks: Vec<&mut [u64]> = data.chunks_mut(5).collect();
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, c) in chunks.into_iter().enumerate() {
+                tasks.push(Box::new(move || {
+                    for (j, v) in c.iter_mut().enumerate() {
+                        *v = (i * 5 + j) as u64;
+                    }
+                }));
+            }
+            pool.scoped(tasks);
+        }
+        assert_eq!(data, (0..17).collect::<Vec<u64>>());
+    }
+
+    /// Chunked fan-out like the production call sites (native_push,
+    /// candidate fill): split `n` marks into `n_tasks` ranges, bump
+    /// each exactly once.
+    fn mark_in_chunks(pool: &ThreadPool, marks: &[AtomicUsize], n_tasks: usize) {
+        let n = marks.len();
+        let chunk = n.div_ceil(n_tasks);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for slice in marks.chunks(chunk) {
+            tasks.push(Box::new(move || {
+                for m in slice {
+                    m.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        pool.scoped(tasks);
+    }
+
+    #[test]
+    fn chunked_fanout_covers_exactly_once_any_worker_count() {
+        for workers in [0usize, 1, 2, 7] {
+            let pool = ThreadPool::new(workers);
+            for n in [1usize, 5, 16, 33] {
+                for tasks in [1usize, 2, 4, 8] {
+                    let marks: Vec<AtomicUsize> =
+                        (0..n).map(|_| AtomicUsize::new(0)).collect();
+                    mark_in_chunks(&pool, &marks, tasks);
+                    assert!(
+                        marks.iter().all(|m| m.load(Ordering::SeqCst) == 1),
+                        "workers={workers} n={n} tasks={tasks}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panic_propagates_after_all_tasks_finish() {
+        let pool = ThreadPool::new(2);
+        let done = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| panic!("boom")),
+                Box::new(|| {
+                    done.fetch_add(1, Ordering::SeqCst);
+                }),
+                Box::new(|| {
+                    done.fetch_add(1, Ordering::SeqCst);
+                }),
+            ];
+            pool.scoped(tasks);
+        }));
+        assert!(result.is_err());
+        assert_eq!(done.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let pool = global();
+        let marks: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        mark_in_chunks(pool, &marks, pool.threads() + 1);
+        assert!(marks.iter().all(|m| m.load(Ordering::SeqCst) == 1));
+    }
+}

@@ -1,0 +1,160 @@
+//! Guard rails for the zero-allocation / thread-parallel refactor:
+//! the perf work must not change a single strategy decision.
+//!
+//! * `group_traffic` (CSR) must agree exactly with
+//!   `group_traffic_dense` on randomized graphs — both accumulate
+//!   per-cell sums in edge-iteration order, so equality is exact, not
+//!   approximate.
+//! * `native_push` and the stage-3 selectors must produce bit-identical
+//!   output for any thread/task count (deterministic chunking).
+//! * A shared `LbScratch` reused across rounds must behave exactly like
+//!   a fresh one.
+
+use difflb::apps::pic::init::{initialize, InitMode};
+use difflb::apps::pic::push::native_push;
+use difflb::model::{CommGraph, Instance, Topology};
+use difflb::runtime::PicBatch;
+use difflb::strategies::diffusion::object_selection::{
+    select_comm, select_comm_with, select_coord, select_coord_with,
+};
+use difflb::strategies::diffusion::scratch::LbScratch;
+use difflb::strategies::diffusion::virtual_lb::Quotas;
+use difflb::strategies::diffusion::Diffusion;
+use difflb::strategies::{LoadBalancer, StrategyParams};
+use difflb::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng, n: usize, extra_edges: usize) -> CommGraph {
+    let mut edges: Vec<(u32, u32, f64)> = (0..n as u32)
+        .map(|o| (o, (o + 1) % n as u32, rng.uniform(1.0, 100.0)))
+        .collect();
+    for _ in 0..extra_edges {
+        let a = rng.below(n as u64) as u32;
+        let b = rng.below(n as u64) as u32;
+        edges.push((a, b, rng.uniform(1.0, 100.0)));
+    }
+    CommGraph::from_edges(n, &edges)
+}
+
+#[test]
+fn group_traffic_sparse_matches_dense_on_random_graphs() {
+    let mut rng = Rng::new(0x6A0B);
+    for round in 0..25 {
+        let n = rng.range(2, 400);
+        let n_groups = rng.range(1, 24);
+        let g = random_graph(&mut rng, n, n / 2);
+        let group: Vec<u32> = (0..n).map(|_| rng.below(n_groups as u64) as u32).collect();
+        let sparse = g.group_traffic(&group, n_groups);
+        let dense = g.group_traffic_dense(&group, n_groups);
+        for ga in 0..n_groups {
+            for gb in 0..n_groups as u32 {
+                assert_eq!(
+                    sparse.get(ga, gb),
+                    dense[ga * n_groups + gb as usize],
+                    "round {round}: cell ({ga}, {gb})"
+                );
+            }
+            // rows sorted, no duplicates
+            let (peers, _) = sparse.row(ga);
+            assert!(peers.windows(2).all(|w| w[0] < w[1]), "row {ga}: {peers:?}");
+        }
+        // symmetry of the off-diagonal
+        for ga in 0..n_groups {
+            for gb in 0..n_groups as u32 {
+                assert_eq!(sparse.get(ga, gb), sparse.get(gb as usize, ga as u32));
+            }
+        }
+    }
+}
+
+#[test]
+fn native_push_bit_identical_across_thread_counts() {
+    let pop = initialize(InitMode::Geometric { rho: 0.9 }, 100_000, 1000, 2, 1, 1.0, 42);
+    let base = PicBatch { x: pop.x, y: pop.y, vx: pop.vx, vy: pop.vy, q: pop.q };
+    let mut reference: Option<PicBatch> = None;
+    for threads in [1usize, 4, 8] {
+        let mut b = base.clone();
+        for _ in 0..3 {
+            native_push(&mut b, 1000.0, 1.0, threads);
+        }
+        match &reference {
+            None => reference = Some(b),
+            Some(r) => assert_eq!(r, &b, "threads={threads} diverged"),
+        }
+    }
+}
+
+/// Two-node instance big enough that stage-3 scoring takes the
+/// pool-parallel path (pool > 4096 objects on node 0).
+fn big_two_node_instance(seed: u64) -> Instance {
+    let n = 12_000;
+    let split = 8_000;
+    let mut rng = Rng::new(seed);
+    let graph = random_graph(&mut rng, n, n);
+    let loads: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+    let coords: Vec<[f64; 2]> = (0..n).map(|i| [(i % 200) as f64, (i / 200) as f64]).collect();
+    let mapping: Vec<u32> = (0..n).map(|i| u32::from(i >= split)).collect();
+    Instance::new(loads, coords, graph, mapping, Topology::flat(2))
+}
+
+fn quota_0_to_1(amount: f64) -> Quotas {
+    let mut q = Quotas::empty(2);
+    q.flows[0].push((1, amount));
+    q
+}
+
+#[test]
+fn select_comm_bit_identical_across_task_counts() {
+    let inst = big_two_node_instance(7);
+    let baseline = {
+        let mut map = inst.node_mapping();
+        let n = select_comm(&inst, &mut map, &quota_0_to_1(900.0), 0.5);
+        (map, n)
+    };
+    for tasks in [1usize, 4, 8] {
+        let mut scratch = LbScratch { par_tasks: Some(tasks), ..Default::default() };
+        let mut map = inst.node_mapping();
+        let n = select_comm_with(&inst, &mut map, &quota_0_to_1(900.0), 0.5, &mut scratch);
+        assert_eq!(n, baseline.1, "tasks={tasks}: migration count");
+        assert_eq!(map, baseline.0, "tasks={tasks}: mapping diverged");
+    }
+}
+
+#[test]
+fn select_coord_matches_with_shared_scratch() {
+    let inst = big_two_node_instance(8);
+    let mut shared = LbScratch::default();
+    for amount in [50.0, 300.0, 900.0] {
+        let q = quota_0_to_1(amount);
+        let mut fresh_map = inst.node_mapping();
+        let n_fresh = select_coord(&inst, &mut fresh_map, &q, 0.5);
+        let mut reused_map = inst.node_mapping();
+        let n_reused = select_coord_with(&inst, &mut reused_map, &q, 0.5, &mut shared);
+        assert_eq!(n_fresh, n_reused, "amount={amount}");
+        assert_eq!(fresh_map, reused_map, "amount={amount}");
+    }
+}
+
+#[test]
+fn full_rebalance_deterministic_and_scratch_stable() {
+    // the strategy's internal scratch must not leak state across calls:
+    // rebalancing the same instance twice (and interleaving a different
+    // instance) yields identical mappings.
+    let inst_a = big_two_node_instance(9);
+    let mut small = difflb::apps::stencil::stencil_2d(
+        24,
+        4,
+        4,
+        difflb::apps::stencil::Decomposition::Tiled,
+    );
+    difflb::apps::stencil::inject_noise(&mut small, 0.4, 11);
+    let lb = Diffusion::communication(StrategyParams::default());
+    let first_a = lb.rebalance(&inst_a).mapping;
+    let first_small = lb.rebalance(&small).mapping;
+    let second_a = lb.rebalance(&inst_a).mapping;
+    let second_small = lb.rebalance(&small).mapping;
+    assert_eq!(first_a, second_a);
+    assert_eq!(first_small, second_small);
+    // and a completely fresh strategy agrees
+    let fresh = Diffusion::communication(StrategyParams::default());
+    assert_eq!(fresh.rebalance(&inst_a).mapping, first_a);
+}

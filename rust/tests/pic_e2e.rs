@@ -30,8 +30,9 @@ fn cfg(n_particles: usize, nodes: usize) -> PicConfig {
 }
 
 fn pjrt_backend() -> Option<Backend> {
-    match Manifest::load_default() {
-        Ok(m) => Some(Backend::Pjrt(Arc::new(Engine::with_manifest(m).unwrap()))),
+    // also skips builds without the `pjrt` feature (stub engine)
+    match Manifest::load_default().and_then(Engine::with_manifest) {
+        Ok(engine) => Some(Backend::Pjrt(Arc::new(engine))),
         Err(e) => {
             eprintln!("SKIP pjrt: {e:#}");
             None

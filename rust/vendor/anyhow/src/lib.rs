@@ -1,0 +1,229 @@
+//! Minimal, API-compatible stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! vendored crate provides exactly the surface the workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait for `Result`
+//! and `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Differences from real anyhow (none of which the workspace relies
+//! on): no backtrace capture, no downcasting, and source errors are
+//! flattened to strings at construction time. Display `{:#}` renders
+//! the full context chain joined by `: `, matching anyhow's alternate
+//! formatting; `Debug` renders the anyhow-style `Caused by:` block so
+//! `fn main() -> Result<()>` output stays readable.
+
+use std::fmt;
+
+/// `Result` specialized to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error with a context chain (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Wrap a standard error, flattening its `source()` chain.
+    pub fn new<E>(err: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Create an error from a plain message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Attach an outer context message, like `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost (most recently attached) message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                if self.chain.len() > 2 {
+                    write!(f, "\n    {i}: {cause}")?;
+                } else {
+                    write!(f, "\n    {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// Conversion into [`Error`] — implemented for all standard errors and
+/// for [`Error`] itself, so [`Context`] methods work on `anyhow::Result`
+/// the way they do upstream. (The two impls don't overlap because
+/// `Error` deliberately does not implement `std::error::Error`.)
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E> IntoError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn into_error(self) -> Error {
+        Error::new(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        s.parse::<u32>().with_context(|| format!("parsing '{s}'"))
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let err = parse("zzz").unwrap_err();
+        assert_eq!(format!("{err}"), "parsing 'zzz'");
+        let alt = format!("{err:#}");
+        assert!(alt.starts_with("parsing 'zzz': "), "{alt}");
+        assert!(format!("{err:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert_eq!(format!("{}", none.context("missing").unwrap_err()), "missing");
+
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "flag was {}", ok);
+            bail!("unreachable {}", 1);
+        }
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", f(true).unwrap_err()), "unreachable 1");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let e: Result<u32> = Err(anyhow!("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

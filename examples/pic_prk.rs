@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
         lb_period: args.usize("lb-period"),
         net: NetModel::default(),
         log_every: 0,
+        ..Default::default()
     };
 
     let mut table = Table::new(

@@ -1,0 +1,70 @@
+//! Distributed-pipeline overhead: the same diffusion rebalance executed
+//! sequentially (round-synchronous model) vs as real message-passing
+//! protocols over the threaded simnet cluster, across node counts. The
+//! two produce bit-identical assignments (asserted here per case, and
+//! exhaustively in `tests/distributed.rs`); the delta is pure protocol
+//! cost — thread spawns, message hops, reductions — i.e. what
+//! "actually exchanging the messages" costs over modeling them.
+//!
+//! Run: `cargo bench --bench dist_pipeline`
+//! (`DIFFLB_BENCH_BUDGET_MS` shrinks per-case budgets for smoke runs.)
+
+use std::time::Duration;
+
+use difflb::apps::stencil::{self, Decomposition};
+use difflb::distributed::DistDiffusion;
+use difflb::strategies::diffusion::{Diffusion, Variant};
+use difflb::strategies::{LoadBalancer, StrategyParams};
+use difflb::util::bench::{fmt_duration, time_fn, Table};
+
+fn main() {
+    let budget_ms: u64 = std::env::var("DIFFLB_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let budget = Duration::from_millis(budget_ms);
+
+    let mut table = Table::new(
+        "Distributed pipeline vs sequential model (48x48 stencil, diff-comm)",
+        &["nodes", "sequential", "distributed", "protocol overhead"],
+    );
+    for &(px, py) in &[(2usize, 2usize), (4, 2), (4, 4)] {
+        let n = px * py;
+        let mut inst = stencil::stencil_2d(48, px, py, Decomposition::Tiled);
+        stencil::inject_noise(&mut inst, 0.4, 0xBE | ((n as u64) << 8));
+        let params = StrategyParams::default();
+        let seq = Diffusion::communication(params);
+        let dist = DistDiffusion::communication(params);
+        assert_eq!(
+            seq.rebalance(&inst).mapping,
+            dist.rebalance(&inst).mapping,
+            "bit-identity violated at {n} nodes"
+        );
+        let ts = time_fn(&format!("seq n={n}"), budget, || seq.rebalance(&inst));
+        let td = time_fn(&format!("dist n={n}"), budget, || dist.rebalance(&inst));
+        table.row(&[
+            n.to_string(),
+            fmt_duration(ts.mean_s),
+            fmt_duration(td.mean_s),
+            format!("{:.1}x", td.mean_s / ts.mean_s.max(1e-12)),
+        ]);
+    }
+    // Coordinate variant at one size, for the record.
+    {
+        let mut inst = stencil::stencil_2d(48, 4, 2, Decomposition::Tiled);
+        stencil::inject_noise(&mut inst, 0.4, 0xC0);
+        let params = StrategyParams::default();
+        let seq = Diffusion::coordinate(params);
+        let dist = DistDiffusion::coordinate(params);
+        assert_eq!(seq.rebalance(&inst).mapping, dist.rebalance(&inst).mapping);
+        let ts = time_fn("seq coord n=8", budget, || seq.rebalance(&inst));
+        let td = time_fn("dist coord n=8", budget, || dist.rebalance(&inst));
+        table.row(&[
+            "8 (coord)".to_string(),
+            fmt_duration(ts.mean_s),
+            fmt_duration(td.mean_s),
+            format!("{:.1}x", td.mean_s / ts.mean_s.max(1e-12)),
+        ]);
+    }
+    println!("{}", table.render());
+}

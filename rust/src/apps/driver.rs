@@ -7,10 +7,57 @@
 use anyhow::Result;
 
 use crate::apps::pic::PicApp;
-use crate::model::{evaluate, Assignment};
+use crate::model::{evaluate, Assignment, Topology};
 use crate::simnet::{CostTracker, NetModel};
 use crate::strategies::LoadBalancer;
 use crate::util::stats::Summary;
+
+/// Node-granularity communication accounting for one app step: every
+/// adjacent chare pair exchanges one sync message per step (α even when
+/// empty), carrying that step's migrated-particle payload; non-adjacent
+/// crossings (possible when 2k+1 exceeds a chare) pay their own
+/// message. `moved` holds the step's directed `(from, to, bytes)`
+/// crossing records; they are canonicalized to unordered pairs and
+/// sort-merged into the reused `payload` buffer. Shared by the
+/// sequential and distributed drivers so both model communication
+/// seconds with the same arithmetic over the same aggregates
+/// (`tests/distributed.rs` asserts the outputs are equal).
+pub fn account_step_comm(
+    topo: &Topology,
+    chare_to_pe: &[u32],
+    neighbor_pairs: &[(u32, u32)],
+    moved: &[(u32, u32, f64)],
+    payload: &mut Vec<(u32, u32, f64)>,
+    consumed: &mut Vec<bool>,
+    tracker: &mut CostTracker,
+) {
+    payload.clear();
+    payload.extend(moved.iter().map(|&(f, t, bytes)| (f.min(t), f.max(t), bytes)));
+    crate::model::graph::sort_sum_merge(payload);
+    consumed.clear();
+    consumed.resize(payload.len(), false);
+    tracker.reset();
+    for &(a, b) in neighbor_pairs {
+        let n_a = topo.node_of_pe(chare_to_pe[a as usize]);
+        let n_b = topo.node_of_pe(chare_to_pe[b as usize]);
+        let bytes = match payload.binary_search_by_key(&(a, b), |&(x, y, _)| (x, y)) {
+            Ok(idx) => {
+                consumed[idx] = true;
+                payload[idx].2
+            }
+            Err(_) => 0.0,
+        };
+        tracker.record(n_a, n_b, bytes);
+    }
+    for (idx, &(a, b, bytes)) in payload.iter().enumerate() {
+        if consumed[idx] {
+            continue;
+        }
+        let n_a = topo.node_of_pe(chare_to_pe[a as usize]);
+        let n_b = topo.node_of_pe(chare_to_pe[b as usize]);
+        tracker.record(n_a, n_b, bytes);
+    }
+}
 
 /// Driver schedule + accounting configuration.
 #[derive(Clone)]
@@ -21,11 +68,24 @@ pub struct DriverConfig {
     pub net: NetModel,
     /// Print progress every `log_every` iterations (0 = quiet).
     pub log_every: usize,
+    /// Use particle counts instead of measured push seconds as the LB
+    /// load signal. Measured time is the production signal but is
+    /// wall-clock-noisy; counts make a run's LB decisions exactly
+    /// reproducible — which is what lets `tests/distributed.rs` assert
+    /// the distributed driver reports the *same* migration counts and
+    /// modeled comm seconds as this sequential driver.
+    pub deterministic_loads: bool,
 }
 
 impl Default for DriverConfig {
     fn default() -> Self {
-        DriverConfig { iters: 100, lb_period: 10, net: NetModel::default(), log_every: 0 }
+        DriverConfig {
+            iters: 100,
+            lb_period: 10,
+            net: NetModel::default(),
+            log_every: 0,
+            deterministic_loads: false,
+        }
     }
 }
 
@@ -98,40 +158,18 @@ pub fn run_pic(
         let node_compute: Vec<f64> =
             node_particles.iter().map(|&c| c as f64 * per_particle).collect();
 
-        // --- comm accounting at node granularity: every adjacent chare
-        // pair exchanges one sync message per step (α even when empty),
-        // carrying that step's migrated-particle payload. `stats.moved`
-        // is already (from, to)-aggregated; canonicalize to unordered
-        // pairs and sort-merge into the reused payload buffer.
-        payload.clear();
-        payload.extend(
-            stats.moved.iter().map(|&(f, t, bytes)| (f.min(t), f.max(t), bytes)),
+        // --- comm accounting at node granularity (shared with the
+        // distributed driver, which gathers the same crossing records
+        // per node and runs the identical arithmetic at its root).
+        account_step_comm(
+            &topo,
+            &app.chare_to_pe,
+            &neighbor_pairs,
+            &stats.moved,
+            &mut payload,
+            &mut consumed,
+            &mut tracker,
         );
-        crate::model::graph::sort_sum_merge(&mut payload);
-        consumed.clear();
-        consumed.resize(payload.len(), false);
-        tracker.reset();
-        for &(a, b) in &neighbor_pairs {
-            let n_a = topo.node_of_pe(app.chare_to_pe[a as usize]);
-            let n_b = topo.node_of_pe(app.chare_to_pe[b as usize]);
-            let bytes = match payload.binary_search_by_key(&(a, b), |&(x, y, _)| (x, y)) {
-                Ok(idx) => {
-                    consumed[idx] = true;
-                    payload[idx].2
-                }
-                Err(_) => 0.0,
-            };
-            tracker.record(n_a, n_b, bytes);
-        }
-        // non-adjacent crossings (possible when 2k+1 exceeds a chare)
-        for (idx, &(a, b, bytes)) in payload.iter().enumerate() {
-            if consumed[idx] {
-                continue;
-            }
-            let n_a = topo.node_of_pe(app.chare_to_pe[a as usize]);
-            let n_b = topo.node_of_pe(app.chare_to_pe[b as usize]);
-            tracker.record(n_a, n_b, bytes);
-        }
         let comm_times = tracker.comm_times(&cfg.net);
 
         let pe_summary = Summary::of(&pe_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
@@ -148,7 +186,11 @@ pub fn run_pic(
 
         // --- load balancing step.
         if cfg.lb_period > 0 && (iter + 1) % cfg.lb_period == 0 {
-            let inst = app.build_instance();
+            let mut inst = app.build_instance();
+            if cfg.deterministic_loads {
+                inst.loads =
+                    app.chare_particle_counts().iter().map(|&c| c as f64).collect();
+            }
             let t = std::time::Instant::now();
             let asg = strategy.rebalance(&inst);
             let strat_s = t.elapsed().as_secs_f64();

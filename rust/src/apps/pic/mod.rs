@@ -169,11 +169,7 @@ impl PicApp {
     /// Chare owning position (x, y).
     #[inline]
     pub fn chare_of_pos(&self, x: f64, y: f64) -> u32 {
-        let cw = self.cfg.grid / self.cfg.chares_x;
-        let ch = self.cfg.grid / self.cfg.chares_y;
-        let cx = ((x as usize) / cw).min(self.cfg.chares_x - 1);
-        let cy = ((y as usize) / ch).min(self.cfg.chares_y - 1);
-        (cy * self.cfg.chares_x + cx) as u32
+        chare_of_pos(&self.cfg, x, y)
     }
 
     /// One time step: push all particles, re-bin crossers, account
@@ -229,24 +225,7 @@ impl PicApp {
     /// arrived. The driver charges α per such message, so scattering
     /// chares across nodes directly shows up as communication time.
     pub fn chare_neighbor_pairs(&self) -> Vec<(u32, u32)> {
-        let (cx, cy) = (self.cfg.chares_x as i64, self.cfg.chares_y as i64);
-        let mut pairs = Vec::with_capacity((cx * cy * 4) as usize);
-        for y in 0..cy {
-            for x in 0..cx {
-                let a = (y * cx + x) as u32;
-                for (dx, dy) in [(1i64, 0i64), (0, 1), (1, 1), (1, -1)] {
-                    let nx = (x + dx).rem_euclid(cx);
-                    let ny = (y + dy).rem_euclid(cy);
-                    let b = (ny * cx + nx) as u32;
-                    if a != b {
-                        pairs.push((a.min(b), a.max(b)));
-                    }
-                }
-            }
-        }
-        pairs.sort_unstable();
-        pairs.dedup();
-        pairs
+        chare_neighbor_pairs(&self.cfg)
     }
 
     pub fn chare_particle_counts(&self) -> Vec<u32> {
@@ -268,53 +247,19 @@ impl PicApp {
 
     /// Snapshot the LB problem: drains traffic and accumulated loads.
     pub fn build_instance(&mut self) -> Instance {
-        let n_chares = self.n_chares();
         let counts = self.chare_particle_counts();
-        // If no load was measured yet (LB before first step), fall back
-        // to particle counts as the load proxy.
-        let measured: f64 = self.load_acc.iter().sum();
-        let loads: Vec<f64> = if measured > 0.0 {
-            self.load_acc.clone()
-        } else {
-            counts.iter().map(|&c| c as f64).collect()
-        };
-        let cw = (self.cfg.grid / self.cfg.chares_x) as f64;
-        let ch = (self.cfg.grid / self.cfg.chares_y) as f64;
-        let coords: Vec<[f64; 2]> = (0..n_chares)
-            .map(|c| {
-                let cx = (c % self.cfg.chares_x) as f64;
-                let cy = (c / self.cfg.chares_x) as f64;
-                [cx * cw + cw / 2.0, cy * ch + ch / 2.0]
-            })
-            .collect();
-        // Sync messages are communication too: every adjacent chare
-        // pair exchanges a small message each step (the Charm++ runtime
-        // records these in the comm graph just like particle payloads),
-        // so the balancer sees grid adjacency as well as particle flow.
-        {
-            let (traffic, pairs) = (&mut self.traffic, &self.neighbor_pairs);
-            for &(a, b) in pairs {
-                traffic.record(a, b, SYNC_BYTES * self.steps_since_lb as f64);
-            }
-        }
-        self.steps_since_lb = 0;
-        // Incremental refresh: chare adjacency persists across LB
-        // rounds, so this usually only overwrites CSR weights. The
-        // instance gets its own copy (a flat memcpy — still far cheaper
-        // than the seed's per-round HashMap freeze).
-        self.comm_cache.update_from_recorder(&mut self.traffic);
-        let graph = self.comm_cache.clone();
-        let sizes: Vec<f64> =
-            counts.iter().map(|&c| (c as f64) * self.cfg.particle_bytes).collect();
-        self.load_acc.iter_mut().for_each(|l| *l = 0.0);
-        let mut inst = Instance::new(
-            loads,
-            coords,
-            graph,
+        let inst = assemble_instance(
+            &self.cfg,
+            &counts,
+            &self.load_acc,
             self.chare_to_pe.clone(),
-            self.cfg.topo,
+            self.steps_since_lb,
+            &self.neighbor_pairs,
+            &mut self.traffic,
+            &mut self.comm_cache,
         );
-        inst.sizes = sizes;
+        self.steps_since_lb = 0;
+        self.load_acc.iter_mut().for_each(|l| *l = 0.0);
         inst
     }
 
@@ -347,8 +292,104 @@ impl PicApp {
     }
 }
 
-/// Initial chare→PE mapping per the paper's striped/quad modes.
-fn initial_mapping(cfg: &PicConfig) -> Vec<u32> {
+/// Assemble the LB problem instance from per-chare particle counts,
+/// accumulated (measured) loads, and the traffic recorder — the
+/// **single definition** of the instance both drivers balance.
+/// [`PicApp::build_instance`] calls this against the app's state; the
+/// distributed driver's root calls it against its gathered replicas.
+/// The sequential-vs-distributed bit-identity guarantee depends on
+/// there being exactly one copy of this sequence (sync-traffic record,
+/// incremental comm-graph refresh, load fallback, coords, sizes).
+/// The caller owns resetting `steps_since_lb` / the measured loads.
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_instance(
+    cfg: &PicConfig,
+    counts: &[u32],
+    measured_loads: &[f64],
+    mapping: Vec<u32>,
+    steps_since_lb: usize,
+    neighbor_pairs: &[(u32, u32)],
+    recorder: &mut TrafficRecorder,
+    comm_cache: &mut CommGraph,
+) -> Instance {
+    let n_chares = cfg.chares_x * cfg.chares_y;
+    // Sync messages are communication too: every adjacent chare pair
+    // exchanges a small message each step (the Charm++ runtime records
+    // these in the comm graph just like particle payloads), so the
+    // balancer sees grid adjacency as well as particle flow.
+    for &(a, b) in neighbor_pairs {
+        recorder.record(a, b, SYNC_BYTES * steps_since_lb as f64);
+    }
+    // Incremental refresh: chare adjacency persists across LB rounds,
+    // so this usually only overwrites CSR weights. The instance gets
+    // its own copy (a flat memcpy — still far cheaper than the seed's
+    // per-round HashMap freeze).
+    comm_cache.update_from_recorder(recorder);
+    let graph = comm_cache.clone();
+    // If no load was measured yet (LB before first step), fall back to
+    // particle counts as the load proxy.
+    let measured: f64 = measured_loads.iter().sum();
+    let loads: Vec<f64> = if measured > 0.0 {
+        measured_loads.to_vec()
+    } else {
+        counts.iter().map(|&c| c as f64).collect()
+    };
+    let cw = (cfg.grid / cfg.chares_x) as f64;
+    let ch = (cfg.grid / cfg.chares_y) as f64;
+    let coords: Vec<[f64; 2]> = (0..n_chares)
+        .map(|c| {
+            let cx = (c % cfg.chares_x) as f64;
+            let cy = (c / cfg.chares_x) as f64;
+            [cx * cw + cw / 2.0, cy * ch + ch / 2.0]
+        })
+        .collect();
+    let mut inst = Instance::new(loads, coords, graph, mapping, cfg.topo);
+    inst.sizes = counts.iter().map(|&c| (c as f64) * cfg.particle_bytes).collect();
+    inst
+}
+
+/// Chare owning position (x, y) under `cfg`'s decomposition — free
+/// function so the distributed driver's node threads can bin particles
+/// without a [`PicApp`].
+#[inline]
+pub fn chare_of_pos(cfg: &PicConfig, x: f64, y: f64) -> u32 {
+    let cw = cfg.grid / cfg.chares_x;
+    let ch = cfg.grid / cfg.chares_y;
+    let cx = ((x as usize) / cw).min(cfg.chares_x - 1);
+    let cy = ((y as usize) / ch).min(cfg.chares_y - 1);
+    (cy * cfg.chares_x + cx) as u32
+}
+
+/// Adjacent chare pairs (8-neighborhood, periodic), each once with
+/// `a < b`. Every time step each pair exchanges a synchronization
+/// message (possibly empty) — the Charm++ PIC PRK pattern: a chare
+/// must hear from all neighbors to know every incoming particle
+/// arrived. The driver charges α per such message, so scattering
+/// chares across nodes directly shows up as communication time.
+pub fn chare_neighbor_pairs(cfg: &PicConfig) -> Vec<(u32, u32)> {
+    let (cx, cy) = (cfg.chares_x as i64, cfg.chares_y as i64);
+    let mut pairs = Vec::with_capacity((cx * cy * 4) as usize);
+    for y in 0..cy {
+        for x in 0..cx {
+            let a = (y * cx + x) as u32;
+            for (dx, dy) in [(1i64, 0i64), (0, 1), (1, 1), (1, -1)] {
+                let nx = (x + dx).rem_euclid(cx);
+                let ny = (y + dy).rem_euclid(cy);
+                let b = (ny * cx + nx) as u32;
+                if a != b {
+                    pairs.push((a.min(b), a.max(b)));
+                }
+            }
+        }
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+    pairs
+}
+
+/// Initial chare→PE mapping per the paper's striped/quad modes (public
+/// so the distributed driver seeds its replicas identically).
+pub fn initial_mapping(cfg: &PicConfig) -> Vec<u32> {
     let n_chares = cfg.chares_x * cfg.chares_y;
     let n_pes = cfg.topo.n_pes();
     match cfg.decomp {

@@ -92,16 +92,46 @@ pub fn net_from_config(cfg: &Config) -> NetModel {
 }
 
 impl Coordinator {
-    /// Build from a layered config.
+    /// Build from a layered config. `lb.mode = distributed` (or
+    /// `run.mode = distributed`, which also switches the app driver)
+    /// swaps the diffusion strategy for its message-passing-protocol
+    /// execution (`dist-diff-*`, see `crate::distributed`).
     pub fn from_config(cfg: &Config) -> Result<Coordinator> {
         let params = params_from_config(cfg);
-        let name = cfg.get("lb.strategy").unwrap_or("diff-comm").to_string();
+        for key in ["run.mode", "lb.mode"] {
+            if let Some(v) = cfg.get(key) {
+                if !matches!(v, "sequential" | "distributed") {
+                    bail!("unknown {key} '{v}' (expected 'sequential' or 'distributed')");
+                }
+            }
+        }
+        let mut name = cfg.get("lb.strategy").unwrap_or("diff-comm").to_string();
+        let distributed = matches!(cfg.get("lb.mode"), Some("distributed"))
+            || matches!(cfg.get("run.mode"), Some("distributed"));
+        if distributed && cfg.get_bool_or("lb.reuse_neighbors", false) {
+            crate::warn!(
+                "lb.reuse_neighbors has no effect in distributed mode: the handshake \
+                 protocol re-runs every LB round"
+            );
+        }
+        if distributed {
+            name = match name.as_str() {
+                "diff-comm" => "dist-diff-comm".to_string(),
+                "diff-coord" => "dist-diff-coord".to_string(),
+                n if n.starts_with("dist-diff-") => n.to_string(),
+                other => bail!(
+                    "distributed mode supports only the diffusion strategies \
+                     (got '{other}'; use diff-comm or diff-coord)"
+                ),
+            };
+        }
         let strategy = strategies::make(&name, params)?;
         let driver = DriverConfig {
             iters: cfg.get_or("run.iters", 100),
             lb_period: cfg.get_or("run.lb_period", 10),
             net: net_from_config(cfg),
             log_every: cfg.get_or("run.log_every", 0),
+            deterministic_loads: cfg.get_bool_or("run.deterministic_loads", false),
         };
         Ok(Coordinator { strategy, params, driver })
     }
@@ -123,9 +153,36 @@ impl Coordinator {
         }
     }
 
-    /// Run the PIC PRK app end to end.
+    /// Run the PIC PRK app end to end. With `run.mode = distributed`
+    /// the run executes on the node-partitioned distributed driver
+    /// (`crate::distributed::driver`): one simulated node per topology
+    /// node, real particle exchange, and the LB pipeline inline as
+    /// message-passing protocols.
     pub fn run_pic(&self, cfg: &Config) -> Result<RunReport> {
         let pic_cfg = pic_from_config(cfg)?;
+        if matches!(cfg.get("run.mode"), Some("distributed")) {
+            if matches!(cfg.get("pic.backend"), Some("pjrt")) {
+                bail!(
+                    "run.mode = distributed is native-only: each simulated node \
+                     pushes its own partition (pic.backend = pjrt is unsupported here)"
+                );
+            }
+            let variant = match self.strategy.name() {
+                "diff-comm" | "dist-diff-comm" => {
+                    crate::strategies::diffusion::Variant::Communication
+                }
+                "diff-coord" | "dist-diff-coord" => {
+                    crate::strategies::diffusion::Variant::Coordinate
+                }
+                other => bail!("run.mode = distributed requires a diffusion strategy (got '{other}')"),
+            };
+            return crate::distributed::driver::run_pic_distributed(
+                &pic_cfg,
+                variant,
+                self.params,
+                &self.driver,
+            );
+        }
         let backend = Self::backend(cfg)?;
         let mut app = PicApp::new(pic_cfg, backend).context("initializing PIC app")?;
         run_pic(&mut app, self.strategy.as_ref(), &self.driver)

@@ -1,0 +1,563 @@
+//! Distributed PIC driver: the PIC PRK benchmark executed with
+//! **node-partitioned particle state** over a [`Cluster`] — each
+//! simulated node owns the particles of the chares mapped to its PEs,
+//! pushes only those, ships chare-crossing particles to their new
+//! owners as real messages, and every `lb_period` steps runs the full
+//! distributed LB pipeline ([`node_pipeline`]) inline on the same
+//! [`Comm`] endpoints, then realizes the resulting chare migrations by
+//! transferring the affected particles between nodes.
+//!
+//! Accounting mirrors the sequential driver
+//! ([`crate::apps::driver::run_pic`]) exactly where it is modeled:
+//! per-step chare-crossing records are gathered at rank 0 as **counts**
+//! and re-expanded into per-crossing `particle_bytes` records, so the
+//! root's [`TrafficRecorder`] → [`CommGraph::update_from_recorder`]
+//! incremental path accumulates bit-identical edge weights to the
+//! sequential app's recorder, and the per-step modeled communication
+//! seconds come from the shared
+//! [`account_step_comm`] arithmetic over
+//! per-pair aggregates that match the sequential ones to the last bit.
+//! With `deterministic_loads` set, the LB instances — and therefore the
+//! migration counts — are equal between the two drivers as well
+//! (`tests/distributed.rs` asserts both). Compute seconds are each
+//! node's *own measured* push time (genuinely parallel execution), so
+//! they are reported but not comparable bit-for-bit.
+//!
+//! The LB instance is assembled at rank 0 (the recorder's home) and
+//! broadcast as `.lbi` text — Rust's shortest-round-trip float
+//! formatting makes the serialization lossless, and the root parses its
+//! own broadcast so every node provably balances the identical problem.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::driver::{account_step_comm, DriverConfig, IterRecord, RunReport};
+use crate::apps::pic::{self, PicConfig};
+use crate::model::{CommGraph, Instance, TrafficRecorder};
+use crate::simnet::network::{Cluster, Comm, CostTracker};
+use crate::strategies::diffusion::Variant;
+use crate::strategies::StrategyParams;
+use crate::util::stats::Summary;
+
+use super::{build_candidates, node_pipeline, wire};
+
+/// Driver tag namespaces (top byte; low 24 bits carry the step or LB
+/// round index, so adjacent phases never collide — nodes can lead each
+/// other by at most one step because every step is an all-to-all
+/// exchange).
+const TAG_STEP: u32 = 0x1000_0000;
+const TAG_ACCT: u32 = 0x1100_0000;
+const TAG_LBC: u32 = 0x1200_0000;
+const TAG_LBX: u32 = 0x1300_0000;
+const TAG_MIG: u32 = 0x1400_0000;
+const TAG_FIN: u32 = 0x1F00_0000;
+
+/// One particle in a node's partition.
+#[derive(Debug, Clone, Copy)]
+struct P {
+    id: u32,
+    chare: u32,
+    x: f64,
+    y: f64,
+    vx: f64,
+    vy: f64,
+    q: f64,
+}
+
+fn put_particle(buf: &mut Vec<u8>, p: &P) {
+    wire::put_u32(buf, p.id);
+    wire::put_u32(buf, p.chare);
+    wire::put_f64(buf, p.x);
+    wire::put_f64(buf, p.y);
+    wire::put_f64(buf, p.vx);
+    wire::put_f64(buf, p.vy);
+    wire::put_f64(buf, p.q);
+}
+
+fn read_particles(data: &[u8], out: &mut Vec<P>) {
+    let mut r = wire::Reader::new(data);
+    while !r.is_empty() {
+        out.push(P {
+            id: r.u32(),
+            chare: r.u32(),
+            x: r.f64(),
+            y: r.f64(),
+            vx: r.f64(),
+            vy: r.f64(),
+            q: r.f64(),
+        });
+    }
+}
+
+/// Read-only bootstrap state shared with every node thread (the
+/// initial conditions a real launcher would hand each process).
+struct Shared {
+    cfg: PicConfig,
+    driver: DriverConfig,
+    variant: Variant,
+    params: StrategyParams,
+    x0: Vec<f64>,
+    y0: Vec<f64>,
+    init_parts: Vec<P>,
+    chare_to_pe0: Vec<u32>,
+    neighbor_pairs: Vec<(u32, u32)>,
+}
+
+/// Run the PIC PRK benchmark fully distributed under the given
+/// diffusion variant. Native backend only (each node pushes its own
+/// partition; the math is [`pic::push::push_one`] per particle, so
+/// trajectories are bit-identical to the sequential app's).
+pub fn run_pic_distributed(
+    pic_cfg: &PicConfig,
+    variant: Variant,
+    params: StrategyParams,
+    driver: &DriverConfig,
+) -> Result<RunReport> {
+    anyhow::ensure!(pic_cfg.grid % pic_cfg.chares_x == 0, "grid must divide chares_x");
+    anyhow::ensure!(pic_cfg.grid % pic_cfg.chares_y == 0, "grid must divide chares_y");
+    anyhow::ensure!(driver.iters < (1 << 24), "iters exceeds the step tag space");
+    let pop = pic::init::initialize(
+        pic_cfg.init,
+        pic_cfg.n_particles,
+        pic_cfg.grid,
+        pic_cfg.k,
+        pic_cfg.m,
+        pic_cfg.q,
+        pic_cfg.seed,
+    );
+    let mut init_parts = Vec::with_capacity(pop.x.len());
+    for i in 0..pop.x.len() {
+        init_parts.push(P {
+            id: i as u32,
+            chare: pic::chare_of_pos(pic_cfg, pop.x[i], pop.y[i]),
+            x: pop.x[i],
+            y: pop.y[i],
+            vx: pop.vx[i],
+            vy: pop.vy[i],
+            q: pop.q[i],
+        });
+    }
+    let shared = Arc::new(Shared {
+        cfg: pic_cfg.clone(),
+        driver: driver.clone(),
+        variant,
+        params,
+        chare_to_pe0: pic::initial_mapping(pic_cfg),
+        neighbor_pairs: pic::chare_neighbor_pairs(pic_cfg),
+        init_parts,
+        x0: pop.x,
+        y0: pop.y,
+    });
+    let n_nodes = pic_cfg.topo.n_nodes;
+    let mut reports =
+        Cluster::run(n_nodes, move |rank, mut comm| node_main(rank, &mut comm, &shared));
+    Ok(reports.swap_remove(0).expect("rank 0 produces the report"))
+}
+
+/// Root-only accounting and LB-instance state.
+struct RootState {
+    recorder: TrafficRecorder,
+    comm_cache: CommGraph,
+    steps_since_lb: usize,
+    tracker: CostTracker,
+    payload: Vec<(u32, u32, f64)>,
+    consumed: Vec<bool>,
+    /// Global per-chare particle counts of the latest step (the LB
+    /// instance's load fallback / sizes, and the migration-bytes model).
+    last_counts: Vec<u32>,
+    report: RunReport,
+}
+
+#[allow(clippy::too_many_lines)]
+fn node_main(rank: u32, comm: &mut Comm, sh: &Shared) -> Option<RunReport> {
+    let cfg = &sh.cfg;
+    let topo = cfg.topo;
+    let grid = cfg.grid as f64;
+    let pb = cfg.particle_bytes;
+    let n_chares = cfg.chares_x * cfg.chares_y;
+    let n_nodes = topo.n_nodes;
+    let steps_total = sh.driver.iters;
+
+    // ---- node-partitioned state.
+    let mut chare_to_pe = sh.chare_to_pe0.clone();
+    let mut parts: Vec<P> = sh
+        .init_parts
+        .iter()
+        .copied()
+        .filter(|p| topo.node_of_pe(chare_to_pe[p.chare as usize]) == rank)
+        .collect();
+    let mut load_acc = vec![0.0f64; n_chares];
+    let mut counts = vec![0u32; n_chares];
+    let mut moved_log: Vec<(u32, u32, f64)> = Vec::new();
+    let mut keep: Vec<P> = Vec::new();
+    let mut lb_round: u32 = 0;
+
+    let mut root = (rank == 0).then(|| RootState {
+        recorder: TrafficRecorder::new(n_chares),
+        comm_cache: CommGraph::empty(n_chares),
+        steps_since_lb: 0,
+        tracker: CostTracker::new(n_nodes),
+        payload: Vec::new(),
+        consumed: Vec::new(),
+        last_counts: vec![0; n_chares],
+        report: RunReport::default(),
+    });
+
+    for step in 0..steps_total {
+        let smask = (step as u32) & 0x00FF_FFFF;
+
+        // ---- push my partition (bit-identical per-particle math).
+        let t = Instant::now();
+        for p in parts.iter_mut() {
+            let (xn, yn, vxn, vyn) =
+                pic::push::push_one(p.x, p.y, p.vx, p.vy, p.q, grid, cfg.q);
+            p.x = xn;
+            p.y = yn;
+            p.vx = vxn;
+            p.vy = vyn;
+        }
+        let push_s = t.elapsed().as_secs_f64();
+
+        // ---- re-bin; crossings leave for their new owner by message.
+        moved_log.clear();
+        let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
+        keep.clear();
+        for mut p in parts.drain(..) {
+            let nc = pic::chare_of_pos(cfg, p.x, p.y);
+            if nc != p.chare {
+                // one unit per crossing; aggregated to counts below
+                moved_log.push((p.chare, nc, 1.0));
+                p.chare = nc;
+            }
+            let dest = topo.node_of_pe(chare_to_pe[nc as usize]);
+            if dest == rank {
+                keep.push(p);
+            } else {
+                put_particle(&mut outbox[dest as usize], &p);
+            }
+        }
+        std::mem::swap(&mut parts, &mut keep);
+        for (d, buf) in outbox.into_iter().enumerate() {
+            if d as u32 != rank {
+                comm.send(d as u32, TAG_STEP | smask, buf);
+            }
+        }
+        let arrivals = comm.recv_tagged(TAG_STEP | smask, n_nodes - 1, Comm::TIMEOUT);
+        assert_eq!(arrivals.len(), n_nodes - 1, "step {step}: particle exchange incomplete");
+        for m in &arrivals {
+            read_particles(&m.data, &mut parts);
+        }
+
+        // ---- local load attribution (measured, per-node).
+        counts.iter_mut().for_each(|c| *c = 0);
+        for p in &parts {
+            counts[p.chare as usize] += 1;
+        }
+        if !parts.is_empty() {
+            let per_particle = push_s / parts.len() as f64;
+            for (c, &cnt) in counts.iter().enumerate() {
+                if cnt > 0 {
+                    load_acc[c] += cnt as f64 * per_particle;
+                }
+            }
+        }
+
+        // ---- step accounting to root: push seconds, my per-chare
+        // particle counts, my crossing counts per directed chare pair.
+        crate::model::graph::sort_sum_merge(&mut moved_log);
+        let mut acct = Vec::new();
+        wire::put_f64(&mut acct, push_s);
+        let nz = counts.iter().filter(|&&c| c > 0).count();
+        wire::put_u32(&mut acct, nz as u32);
+        for (c, &cnt) in counts.iter().enumerate() {
+            if cnt > 0 {
+                wire::put_u32(&mut acct, c as u32);
+                wire::put_u32(&mut acct, cnt);
+            }
+        }
+        wire::put_u32(&mut acct, moved_log.len() as u32);
+        for &(f, t2, units) in &moved_log {
+            wire::put_u32(&mut acct, f);
+            wire::put_u32(&mut acct, t2);
+            wire::put_u32(&mut acct, units as u32);
+        }
+
+        // ---- root: assemble the iteration record the way the
+        // sequential driver does, from exactly-matching aggregates.
+        let mut rec = IterRecord::default();
+        if root.is_none() {
+            comm.send(0, TAG_ACCT | smask, acct);
+        } else if let Some(rs) = root.as_mut() {
+            let mut msgs = comm.recv_tagged(TAG_ACCT | smask, n_nodes - 1, Comm::TIMEOUT);
+            assert_eq!(msgs.len(), n_nodes - 1, "step {step}: accounting gather incomplete");
+            msgs.sort_by_key(|m| m.from);
+            let mut chare_counts = vec![0u32; n_chares];
+            let mut node_push = vec![0.0f64; n_nodes];
+            // merged directed crossing records in rank order, expanded
+            // back to per-crossing particle_bytes sums (left-to-right,
+            // like the sequential per-step aggregation).
+            let mut merged_moved: Vec<(u32, u32, f64)> = Vec::new();
+            for (from, data) in std::iter::once((0u32, acct.as_slice()))
+                .chain(msgs.iter().map(|m| (m.from, m.data.as_slice())))
+            {
+                let mut r = wire::Reader::new(data);
+                node_push[from as usize] = r.f64();
+                let nz = r.u32();
+                for _ in 0..nz {
+                    let c = r.u32();
+                    let cnt = r.u32();
+                    chare_counts[c as usize] += cnt;
+                }
+                let nm = r.u32();
+                for _ in 0..nm {
+                    let f = r.u32();
+                    let t2 = r.u32();
+                    let units = r.u32();
+                    let mut bytes = 0.0f64;
+                    for _ in 0..units {
+                        bytes += pb;
+                        rs.recorder.record(f, t2, pb);
+                    }
+                    merged_moved.push((f, t2, bytes));
+                }
+            }
+            rs.steps_since_lb += 1;
+
+            let mut pe_counts = vec![0usize; topo.n_pes()];
+            let mut node_particles = vec![0usize; n_nodes];
+            for (c, &cnt) in chare_counts.iter().enumerate() {
+                let pe = chare_to_pe[c] as usize;
+                pe_counts[pe] += cnt as usize;
+                node_particles[topo.node_of_pe(pe as u32) as usize] += cnt as usize;
+            }
+            account_step_comm(
+                &topo,
+                &chare_to_pe,
+                &sh.neighbor_pairs,
+                &merged_moved,
+                &mut rs.payload,
+                &mut rs.consumed,
+                &mut rs.tracker,
+            );
+            let comm_times = rs.tracker.comm_times(&sh.driver.net);
+            let pe_summary =
+                Summary::of(&pe_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
+            rec = IterRecord {
+                iter: step,
+                particles_max_avg: pe_summary.max_avg_ratio(),
+                node_particles,
+                compute_max_s: node_push.iter().cloned().fold(0.0, f64::max),
+                compute_avg_s: node_push.iter().sum::<f64>() / n_nodes as f64,
+                comm_max_s: comm_times.iter().cloned().fold(0.0, f64::max),
+                comm_avg_s: comm_times.iter().sum::<f64>() / n_nodes as f64,
+                ..Default::default()
+            };
+            rs.last_counts = chare_counts;
+        }
+
+        // ---- LB round.
+        if sh.driver.lb_period > 0 && (step + 1) % sh.driver.lb_period == 0 {
+            let rmask = lb_round & 0x00FF_FFFF;
+            // gather measured loads at root (deterministic mode ignores
+            // them but the gather keeps the protocol uniform).
+            if rank != 0 {
+                let mut lbuf = Vec::new();
+                let nz = load_acc.iter().filter(|&&l| l > 0.0).count();
+                wire::put_u32(&mut lbuf, nz as u32);
+                for (c, &l) in load_acc.iter().enumerate() {
+                    if l > 0.0 {
+                        wire::put_u32(&mut lbuf, c as u32);
+                        wire::put_f64(&mut lbuf, l);
+                    }
+                }
+                comm.send(0, TAG_LBC | rmask, lbuf);
+            }
+            let t_lb = Instant::now();
+            let inst = if let Some(rs) = root.as_mut() {
+                // full measured-load vector
+                let msgs = comm.recv_tagged(TAG_LBC | rmask, n_nodes - 1, Comm::TIMEOUT);
+                assert_eq!(msgs.len(), n_nodes - 1, "LB {lb_round}: load gather incomplete");
+                let mut full_loads = load_acc.clone();
+                for m in &msgs {
+                    let mut r = wire::Reader::new(&m.data);
+                    let nz = r.u32();
+                    for _ in 0..nz {
+                        let c = r.u32();
+                        full_loads[c as usize] += r.f64();
+                    }
+                }
+                // the one shared instance-assembly sequence (sync
+                // traffic, incremental comm-graph refresh, load
+                // fallback) — identical to the sequential app's
+                // build_instance by construction.
+                let mut inst = pic::assemble_instance(
+                    cfg,
+                    &rs.last_counts,
+                    &full_loads,
+                    chare_to_pe.clone(),
+                    rs.steps_since_lb,
+                    &sh.neighbor_pairs,
+                    &mut rs.recorder,
+                    &mut rs.comm_cache,
+                );
+                rs.steps_since_lb = 0;
+                if sh.driver.deterministic_loads {
+                    // the sequential driver overwrites the same way
+                    inst.loads = rs.last_counts.iter().map(|&c| c as f64).collect();
+                }
+                // broadcast; then parse our own broadcast so every node
+                // provably balances the identical instance.
+                let text = inst.to_lbi();
+                for p in 1..n_nodes as u32 {
+                    comm.send(p, TAG_LBX | rmask, text.clone().into_bytes());
+                }
+                // parse our own broadcast: what we balance is provably
+                // what everyone else parsed (the format is lossless —
+                // Rust float formatting round-trips exactly).
+                Instance::from_lbi(&text).expect("lbi round-trip failed")
+            } else {
+                let msgs = comm.recv_tagged(TAG_LBX | rmask, 1, Comm::TIMEOUT);
+                assert_eq!(msgs.len(), 1, "LB {lb_round}: instance broadcast missing");
+                let text = std::str::from_utf8(&msgs[0].data).expect("lbi not utf-8");
+                Instance::from_lbi(text).expect("lbi parse failed")
+            };
+            load_acc.iter_mut().for_each(|l| *l = 0.0);
+
+            // ---- the full distributed pipeline, inline on this comm.
+            // Every node derives the candidate lists from its own parsed
+            // copy of the broadcast instance — n_nodes-fold redundant
+            // work, deliberately: in the real runtime each process
+            // computes its own candidate view, and there is no shared
+            // memory to hand rows around (the strategy-only path,
+            // run_pipeline, does share them via Arc).
+            let cands = build_candidates(&inst, sh.variant, &sh.params);
+            let outcome =
+                node_pipeline(comm, &inst, &cands[rank as usize], sh.variant, &sh.params);
+            let strat_s = t_lb.elapsed().as_secs_f64();
+            let old_map = std::mem::replace(&mut chare_to_pe, outcome.full_mapping);
+
+            // ---- realize migrations: ship my particles whose chares
+            // now live elsewhere; receive my new chares' particles.
+            let migtag = TAG_MIG | rmask;
+            let mut sends_to = vec![false; n_nodes];
+            let mut recv_from = vec![false; n_nodes];
+            for c in 0..n_chares {
+                let old_n = topo.node_of_pe(old_map[c]);
+                let new_n = topo.node_of_pe(chare_to_pe[c]);
+                if old_n == new_n {
+                    continue;
+                }
+                if old_n == rank {
+                    sends_to[new_n as usize] = true;
+                }
+                if new_n == rank {
+                    recv_from[old_n as usize] = true;
+                }
+            }
+            let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
+            keep.clear();
+            for p in parts.drain(..) {
+                let new_n = topo.node_of_pe(chare_to_pe[p.chare as usize]);
+                if new_n == rank {
+                    keep.push(p);
+                } else {
+                    put_particle(&mut outbox[new_n as usize], &p);
+                }
+            }
+            std::mem::swap(&mut parts, &mut keep);
+            for (d, buf) in outbox.into_iter().enumerate() {
+                if sends_to[d] {
+                    comm.send(d as u32, migtag, buf);
+                }
+            }
+            let expect = recv_from.iter().filter(|&&b| b).count();
+            let migs = comm.recv_tagged(migtag, expect, Comm::TIMEOUT);
+            assert_eq!(migs.len(), expect, "LB {lb_round}: migration transfer incomplete");
+            for m in &migs {
+                read_particles(&m.data, &mut parts);
+            }
+
+            // ---- root: LB accounting, sequential-driver formulas.
+            if let Some(rs) = root.as_mut() {
+                let migrations =
+                    old_map.iter().zip(&chare_to_pe).filter(|(a, b)| a != b).count();
+                let mut moved_bytes = 0.0;
+                for (c, &cnt) in rs.last_counts.iter().enumerate() {
+                    if old_map[c] != chare_to_pe[c] {
+                        moved_bytes += cnt as f64 * pb;
+                    }
+                }
+                let transfer_s = sh.driver.net.inter_time(migrations as u64, moved_bytes)
+                    / n_nodes.max(1) as f64;
+                rec.lb_s = strat_s + transfer_s;
+                rec.migrations = migrations;
+                rs.report.total_migrations += migrations;
+            }
+            lb_round += 1;
+        }
+
+        if let Some(rs) = root.as_mut() {
+            if sh.driver.log_every > 0 && step % sh.driver.log_every == 0 {
+                crate::info!(
+                    "dist iter {step}: max/avg={:.3} comm={:.2}ms lb={:.2}ms",
+                    rec.particles_max_avg,
+                    rec.comm_max_s * 1e3,
+                    rec.lb_s * 1e3
+                );
+            }
+            rs.report.compute_s += rec.compute_max_s;
+            rs.report.comm_s += rec.comm_max_s;
+            rs.report.lb_s += rec.lb_s;
+            rs.report.total_s += rec.compute_max_s + rec.comm_max_s + rec.lb_s;
+            rs.report.records.push(rec);
+        }
+    }
+
+    // ---- final verification: gather positions by particle id.
+    if rank != 0 {
+        let mut fin = Vec::with_capacity(parts.len() * 20);
+        for p in &parts {
+            wire::put_u32(&mut fin, p.id);
+            wire::put_f64(&mut fin, p.x);
+            wire::put_f64(&mut fin, p.y);
+        }
+        comm.send(0, TAG_FIN, fin);
+        return None;
+    }
+    let mut rs = root.take().expect("root state");
+    let n_particles = sh.x0.len();
+    let mut xf = vec![f64::NAN; n_particles];
+    let mut yf = vec![f64::NAN; n_particles];
+    let mut seen = 0usize;
+    for p in &parts {
+        xf[p.id as usize] = p.x;
+        yf[p.id as usize] = p.y;
+        seen += 1;
+    }
+    let msgs = comm.recv_tagged(TAG_FIN, n_nodes - 1, Comm::TIMEOUT);
+    assert_eq!(msgs.len(), n_nodes - 1, "final gather incomplete");
+    for m in &msgs {
+        let mut r = wire::Reader::new(&m.data);
+        while !r.is_empty() {
+            let id = r.u32() as usize;
+            xf[id] = r.f64();
+            yf[id] = r.f64();
+            seen += 1;
+        }
+    }
+    rs.report.verified = seen == n_particles
+        && pic::verify::verify_positions(
+            &sh.x0,
+            &sh.y0,
+            &xf,
+            &yf,
+            steps_total,
+            cfg.k,
+            cfg.m,
+            grid,
+        )
+        .is_ok();
+    Some(rs.report)
+}

@@ -1,0 +1,359 @@
+//! Stage 2 as a real protocol — distributed first-order virtual load
+//! balancing (paper §III-B executed the way Charm++ would run it).
+//!
+//! Each node holds two scalars of truly local state — `own` (load
+//! originating here, still here) and `recv` (load received virtually,
+//! never forwarded: the single-hop constraint) — and iterates:
+//!
+//! 1. **LOAD**: exchange the current load `own + recv` with every
+//!    stage-1 neighbor.
+//! 2. **DONE-bit reduction** (from sweep 1 on): each node reports
+//!    whether its neighborhood's relative spread is within tolerance;
+//!    rank 0 ANDs the bits, folds in the previous sweep's exact global
+//!    `moved` sum, and broadcasts stop/continue.
+//! 3. **XFER**: plan sends `α·(L_i − L_j)` capped at `own`, ship one
+//!    transfer scalar to every neighbor (zeros included, so receive
+//!    counts stay deterministic), apply incoming transfers in ascending
+//!    sender order.
+//!
+//! Bit-identity with the sequential fixed-point
+//! ([`virtual_balance_with`](crate::strategies::diffusion::virtual_lb::virtual_balance_with))
+//! is engineered, not hoped for: every f64 accumulator here sees the
+//! *same values in the same order* as its sequential counterpart —
+//! `own` is only ever touched by this node's sends in adjacency order,
+//! `recv` applies incoming transfers sorted by sender rank (the order
+//! the sequential global sweep processes them), per-pair net flows are
+//! tracked symmetrically (a node's view is the exact IEEE negation of
+//! its peer's), and the early-exit `moved` sum is reconstructed at rank
+//! 0 from the raw per-send amounts in global (rank, adjacency) order
+//! rather than from per-node partial sums, which would round
+//! differently. The integration tests assert the resulting quotas are
+//! `==` to the sequential ones.
+
+use crate::simnet::network::Comm;
+
+use super::wire;
+
+/// Sub-phase tags within the caller's `tag_base` (low byte; bits 8..24
+/// carry the sweep index).
+const PH_LOAD: u32 = 0;
+const PH_XFER: u32 = 1;
+const PH_MOV: u32 = 2;
+const PH_CONV: u32 = 3;
+const PH_CTRL: u32 = 4;
+/// Setup reduction (runs once, before sweep 0's phases).
+const PH_SETUP_UP: u32 = 8;
+const PH_SETUP_DOWN: u32 = 9;
+
+/// One node's stage-2 result.
+pub struct Stage2Out {
+    /// This node's row of [`Quotas::flows`]
+    /// (crate::strategies::diffusion::virtual_lb::Quotas): positive net
+    /// sends to neighbors, sorted by neighbor rank.
+    pub flow_row: Vec<(u32, f64)>,
+    /// Sweeps executed — identical on every node (the stop decision is
+    /// a broadcast), and equal to the sequential `Quotas::iterations`.
+    pub iterations: usize,
+}
+
+/// Run the distributed virtual-LB fixed point for this node. `adj` is
+/// the stage-1 neighbor set (sorted ascending; the graph is symmetric
+/// by the handshake's contract), `my_load` this node's total load.
+/// `tag_base` must leave the low 24 bits clear.
+pub fn virtual_balance_node(
+    comm: &mut Comm,
+    adj: &[u32],
+    my_load: f64,
+    tol: f64,
+    max_iters: usize,
+    tag_base: u32,
+) -> Stage2Out {
+    debug_assert_eq!(tag_base & 0x00FF_FFFF, 0, "tag_base clobbers sweep/phase bits");
+    assert!(max_iters < (1 << 16), "vlb_max_iters exceeds the sweep tag space");
+    let rank = comm.rank;
+    let n = comm.n;
+    let deg = adj.len();
+    let t = |sweep: usize, phase: u32| tag_base | ((sweep as u32) << 8) | phase;
+
+    // ---- Setup reduction: global average load and max degree → α.
+    // Rank 0 sums the gathered loads in ascending rank order — the same
+    // left-to-right order as the sequential `loads.iter().sum()` — so
+    // the average is bit-equal.
+    let (max_degree, global_avg) = if rank == 0 {
+        let mut msgs = comm.recv_tagged(t(0, PH_SETUP_UP), n - 1, Comm::TIMEOUT);
+        assert_eq!(msgs.len(), n - 1, "stage-2 setup gather incomplete");
+        msgs.sort_by_key(|m| m.from);
+        let mut sum = my_load;
+        let mut maxd = deg as u32;
+        for m in &msgs {
+            let mut r = wire::Reader::new(&m.data);
+            maxd = maxd.max(r.u32());
+            sum += r.f64();
+        }
+        let avg = sum / n.max(1) as f64;
+        let mut down = Vec::with_capacity(12);
+        wire::put_u32(&mut down, maxd);
+        wire::put_f64(&mut down, avg);
+        for p in 1..n as u32 {
+            comm.send(p, t(0, PH_SETUP_DOWN), down.clone());
+        }
+        (maxd, avg)
+    } else {
+        let mut up = Vec::with_capacity(12);
+        wire::put_u32(&mut up, deg as u32);
+        wire::put_f64(&mut up, my_load);
+        comm.send(0, t(0, PH_SETUP_UP), up);
+        let msgs = comm.recv_tagged(t(0, PH_SETUP_DOWN), 1, Comm::TIMEOUT);
+        assert_eq!(msgs.len(), 1, "stage-2 setup broadcast missing");
+        let mut r = wire::Reader::new(&msgs[0].data);
+        (r.u32(), r.f64())
+    };
+
+    if global_avg <= 0.0 {
+        return Stage2Out { flow_row: Vec::new(), iterations: 0 };
+    }
+    // First-order scheme constant: 1/(max_degree + 1) guarantees
+    // convergence on arbitrary neighbor graphs (Cybenko).
+    let alpha = 1.0 / (max_degree as f64 + 1.0);
+
+    // Truly local fixed-point state.
+    let mut own = my_load;
+    let mut recv_acc = 0.0f64;
+    // Per-neighbor signed net flow, this node's sign convention:
+    // positive = this node owes a net send to adj[idx].
+    let mut net = vec![0.0f64; deg];
+    let mut cur_j = vec![0.0f64; deg];
+    let mut amts = vec![0.0f64; deg];
+    let mut iterations = 0usize;
+    // Root-only: the previous sweep's exact global moved sum.
+    let mut moved_prev = 0.0f64;
+
+    for sweep in 0..max_iters {
+        // ---- LOAD: exchange current loads with stage-1 neighbors.
+        let cur = own + recv_acc;
+        for &j in adj {
+            comm.send(j, t(sweep, PH_LOAD), cur.to_le_bytes().to_vec());
+        }
+        let mut loads_in = comm.recv_tagged(t(sweep, PH_LOAD), deg, Comm::TIMEOUT);
+        assert_eq!(loads_in.len(), deg, "stage-2 sweep {sweep}: load exchange incomplete");
+        loads_in.sort_by_key(|m| m.from);
+        for (idx, m) in loads_in.iter().enumerate() {
+            debug_assert_eq!(m.from, adj[idx], "asymmetric stage-1 graph");
+            cur_j[idx] = f64::from_le_bytes(m.data[..8].try_into().unwrap());
+        }
+
+        // ---- DONE-bit reduction: did the PREVIOUS sweep converge?
+        // The sequential loop checks after applying each sweep; the
+        // post-sweep values it checks are exactly what this sweep's
+        // load exchange just delivered.
+        if sweep > 0 {
+            let my_bit = neighborhood_converged(cur, &cur_j, global_avg, tol);
+            let stop = if rank == 0 {
+                let msgs = comm.recv_tagged(t(sweep, PH_CONV), n - 1, Comm::TIMEOUT);
+                assert_eq!(msgs.len(), n - 1, "stage-2 sweep {sweep}: DONE gather incomplete");
+                let all = my_bit && msgs.iter().all(|m| m.data == [1]);
+                let stop = all || moved_prev <= tol * global_avg * 1e-3;
+                for p in 1..n as u32 {
+                    comm.send(p, t(sweep, PH_CTRL), vec![u8::from(stop)]);
+                }
+                stop
+            } else {
+                comm.send(0, t(sweep, PH_CONV), vec![u8::from(my_bit)]);
+                let msgs = comm.recv_tagged(t(sweep, PH_CTRL), 1, Comm::TIMEOUT);
+                assert_eq!(msgs.len(), 1, "stage-2 sweep {sweep}: CTRL broadcast missing");
+                msgs[0].data == [1]
+            };
+            if stop {
+                break;
+            }
+        }
+        iterations = sweep + 1;
+
+        // ---- Plan this sweep's sends (single-hop: cap at `own`).
+        let mut want = 0.0;
+        for &cj in cur_j.iter() {
+            let diff = cur - cj;
+            if diff > 0.0 {
+                want += alpha * diff;
+            }
+        }
+        for a in amts.iter_mut() {
+            *a = 0.0;
+        }
+        // Raw pushed amounts in adjacency order, for the exact moved
+        // sum at the root.
+        let mut mov: Vec<u8> = Vec::new();
+        if want > 0.0 {
+            let scale = if want > own { own / want } else { 1.0 };
+            if scale > 0.0 {
+                for idx in 0..deg {
+                    let diff = cur - cur_j[idx];
+                    if diff > 0.0 {
+                        let amt = alpha * diff * scale;
+                        amts[idx] = amt;
+                        wire::put_f64(&mut mov, amt);
+                    }
+                }
+            }
+        }
+
+        // ---- XFER: one transfer scalar to every neighbor, every sweep
+        // (zeros included — receive counts stay deterministic, and
+        // adding 0.0 to a non-negative accumulator is a bitwise no-op).
+        for idx in 0..deg {
+            comm.send(adj[idx], t(sweep, PH_XFER), amts[idx].to_le_bytes().to_vec());
+        }
+        if rank != 0 {
+            comm.send(0, t(sweep, PH_MOV), mov.clone());
+        }
+        // Apply my sends: `own` and my half of the net flows see the
+        // amounts in adjacency order, as in the sequential sweep.
+        for idx in 0..deg {
+            own -= amts[idx];
+            net[idx] += amts[idx];
+        }
+        // Apply incoming transfers in ascending sender order — the
+        // order the sequential global sweep (ranks 0..n) hits this
+        // node's `recv` accumulator.
+        let mut xfers = comm.recv_tagged(t(sweep, PH_XFER), deg, Comm::TIMEOUT);
+        assert_eq!(xfers.len(), deg, "stage-2 sweep {sweep}: transfer exchange incomplete");
+        xfers.sort_by_key(|m| m.from);
+        for (idx, m) in xfers.iter().enumerate() {
+            debug_assert_eq!(m.from, adj[idx]);
+            let amt = f64::from_le_bytes(m.data[..8].try_into().unwrap());
+            recv_acc += amt;
+            net[idx] -= amt;
+        }
+
+        // ---- Root reconstructs the sequential running `moved` sum
+        // from the raw amounts in global (rank, adjacency) order.
+        if rank == 0 {
+            let mut msgs = comm.recv_tagged(t(sweep, PH_MOV), n - 1, Comm::TIMEOUT);
+            assert_eq!(msgs.len(), n - 1, "stage-2 sweep {sweep}: moved gather incomplete");
+            msgs.sort_by_key(|m| m.from);
+            let mut moved = 0.0f64;
+            for v in mov.chunks_exact(8) {
+                moved += f64::from_le_bytes(v.try_into().unwrap());
+            }
+            for m in &msgs {
+                for v in m.data.chunks_exact(8) {
+                    moved += f64::from_le_bytes(v.try_into().unwrap());
+                }
+            }
+            moved_prev = moved;
+        }
+    }
+
+    // Fold the signed per-pair nets into this node's positive send
+    // quotas. `adj` ascends, so the row is born sorted; the threshold
+    // matches the sequential fold exactly (a peer's net is the exact
+    // IEEE negation of ours, so the two sides agree on every edge).
+    let mut flow_row = Vec::new();
+    for idx in 0..deg {
+        if net[idx] > 1e-12 {
+            flow_row.push((adj[idx], net[idx]));
+        }
+    }
+    Stage2Out { flow_row, iterations }
+}
+
+/// This node's neighborhood convergence bit: relative load spread over
+/// {self} ∪ neighbors within `tol` (measured against the global average
+/// so empty-ish neighborhoods don't divide by ~0). Nodes without
+/// neighbors are vacuously converged, as in the sequential check.
+fn neighborhood_converged(cur: f64, cur_j: &[f64], global_avg: f64, tol: f64) -> bool {
+    if cur_j.is_empty() {
+        return true;
+    }
+    let mut lo = cur;
+    let mut hi = cur;
+    for &c in cur_j {
+        lo = lo.min(c);
+        hi = hi.max(c);
+    }
+    (hi - lo) / global_avg <= tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::network::Cluster;
+    use crate::strategies::diffusion::neighbor::NeighborGraph;
+    use crate::strategies::diffusion::virtual_lb::virtual_balance;
+    use crate::util::rng::Rng;
+
+    fn ring(n: usize, h: usize) -> NeighborGraph {
+        let adj = (0..n)
+            .map(|i| {
+                let mut a: Vec<u32> = Vec::new();
+                for d in 1..=h {
+                    a.push(((i + d) % n) as u32);
+                    a.push(((i + n - d) % n) as u32);
+                }
+                a.sort_unstable();
+                a.dedup();
+                a
+            })
+            .collect();
+        NeighborGraph { adj }
+    }
+
+    fn run_distributed(
+        neigh: &NeighborGraph,
+        loads: &[f64],
+        tol: f64,
+        max_iters: usize,
+    ) -> (Vec<Vec<(u32, f64)>>, usize) {
+        let n = loads.len();
+        let adj = std::sync::Arc::new(neigh.adj.clone());
+        let loads = std::sync::Arc::new(loads.to_vec());
+        let outs = Cluster::run(n, move |rank, mut comm| {
+            let out = virtual_balance_node(
+                &mut comm,
+                &adj[rank as usize],
+                loads[rank as usize],
+                tol,
+                max_iters,
+                0x0200_0000,
+            );
+            (out.flow_row, out.iterations)
+        });
+        let iters = outs.iter().map(|o| o.1).max().unwrap_or(0);
+        assert!(outs.iter().all(|o| o.1 == iters), "nodes disagree on sweep count");
+        (outs.into_iter().map(|o| o.0).collect(), iters)
+    }
+
+    #[test]
+    fn matches_sequential_on_hotspot() {
+        let n = 16;
+        let mut loads = vec![1.0; n];
+        loads[0] = 10.0;
+        let g = ring(n, 2);
+        let seq = virtual_balance(&g, &loads, 0.05, 500);
+        let (flows, iters) = run_distributed(&g, &loads, 0.05, 500);
+        assert_eq!(seq.flows, flows);
+        assert_eq!(seq.iterations, iters);
+    }
+
+    #[test]
+    fn matches_sequential_on_random_loads() {
+        let mut rng = Rng::new(0x57A6E2);
+        for trial in 0..6usize {
+            let n = 4 + 2 * (trial % 4);
+            let loads: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 8.0)).collect();
+            let g = ring(n, 1 + trial % 2);
+            let seq = virtual_balance(&g, &loads, 0.05, 300);
+            let (flows, iters) = run_distributed(&g, &loads, 0.05, 300);
+            assert_eq!(seq.flows, flows, "trial {trial}");
+            assert_eq!(seq.iterations, iters, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn zero_load_short_circuits() {
+        let g = ring(4, 1);
+        let (flows, iters) = run_distributed(&g, &[0.0; 4], 0.05, 100);
+        assert_eq!(iters, 0);
+        assert!(flows.iter().all(|f| f.is_empty()));
+    }
+}

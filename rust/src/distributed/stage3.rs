@@ -1,0 +1,232 @@
+//! Stage 3 as a real protocol — distributed object selection with
+//! migration manifests (paper §III-C), followed by the node-local
+//! hierarchical refinement (§III-D) and a PE-assignment exchange.
+//!
+//! Every node keeps a replica of the object → node map and picks its
+//! own outgoing objects with the *same per-node body* the sequential
+//! strategy runs ([`select_comm_node`] / [`select_coord_node`]), against
+//! its own [`LbScratch`]. The decisions it makes depend on migrations
+//! other nodes performed earlier in the round (an arrived object must
+//! not be forwarded — the single-hop constraint — and a peer that moved
+//! changes every neighbor's bytes-to-target score), so manifests replay
+//! in **rank order**: node `r` selects only after applying the
+//! manifests of ranks `< r`, then broadcasts its own `(object id,
+//! destination, bytes)` manifest — the receivers learn their arrivals,
+//! later ranks update their replicas, and every replica walks through
+//! exactly the interim states of the sequential sweep. That rank-
+//! ordered wavefront is the price of bit-identical assignments; the
+//! paper's concurrent stage 3 corresponds to dropping the ordering,
+//! which the equivalence tests would immediately flag.
+//!
+//! Refinement needs no messages at all — each node splits its final
+//! member set over its own PEs — and the resulting `(object, PE)` pairs
+//! are exchanged so every node ends the round holding the complete new
+//! mapping (the driver routes particles with it; the strategy returns
+//! it as the `Assignment`).
+
+use crate::model::Instance;
+use crate::simnet::network::Comm;
+use crate::strategies::diffusion::hierarchical;
+use crate::strategies::diffusion::object_selection::{
+    self, quota_floor, select_comm_node, select_coord_node,
+};
+use crate::strategies::diffusion::scratch::LbScratch;
+use crate::strategies::diffusion::Variant;
+
+use super::wire;
+
+/// Manifest broadcast from rank `r` uses `tag_base | r`; the
+/// PE-assignment broadcast uses `tag_base | PE_BIT | r`.
+const PE_BIT: u32 = 0x0080_0000;
+
+/// One node's stage-3 + refinement result.
+pub struct Stage3Out {
+    /// Migrations this node decided, in pick order.
+    pub manifest: Vec<(u32, u32)>,
+    /// Objects this node migrated away (`manifest.len()`).
+    pub migrations: usize,
+    /// Manifest bytes whose destination is this node.
+    pub recv_bytes: f64,
+    /// The complete object → PE mapping after refinement (identical on
+    /// every node).
+    pub full_mapping: Vec<u32>,
+}
+
+/// Run this node's object selection + refinement. `flow_row` is the
+/// node's stage-2 quota row; `tag_base` must leave the low 24 bits
+/// clear.
+pub fn select_and_refine_node(
+    comm: &mut Comm,
+    inst: &Instance,
+    variant: Variant,
+    flow_row: &[(u32, f64)],
+    overfill: f64,
+    refine_tol: f64,
+    tag_base: u32,
+) -> Stage3Out {
+    debug_assert_eq!(tag_base & 0x00FF_FFFF, 0, "tag_base clobbers rank bits");
+    let rank = comm.rank as usize;
+    let n_nodes = comm.n;
+    debug_assert_eq!(n_nodes, inst.topo.n_nodes, "cluster size != topology nodes");
+    let n_objects = inst.n_objects();
+    let floor = quota_floor(inst);
+
+    // Replica of the object → node map; `scratch.moved` / `by_node` are
+    // set up from the pre-LB state exactly like the sequential sweep's
+    // (by_node stays the *initial* index — arrivals are excluded from
+    // pools via the moved flags, not re-indexed).
+    let mut node_map = inst.node_mapping();
+    // par_tasks = 1: node threads are already the parallelism; don't
+    // fan scoring out onto the global worker pool from n_nodes threads
+    // at once (the chunking is decision-neutral either way —
+    // perf_refactor.rs).
+    let mut scratch = LbScratch { par_tasks: Some(1), ..LbScratch::default() };
+    scratch.moved.resize(n_objects, false);
+    scratch.index_by_node(&node_map, n_nodes);
+    if variant == Variant::Coordinate {
+        object_selection::init_centroid_state(inst, &node_map, &mut scratch);
+    }
+
+    let mut recv_bytes = 0.0;
+    // ---- Wavefront in: manifests of lower-ranked nodes, rank order.
+    for h in 0..rank {
+        let msgs = comm.recv_tagged(tag_base | h as u32, 1, Comm::TIMEOUT);
+        assert_eq!(msgs.len(), 1, "stage-3: no manifest from node {h}");
+        recv_bytes += apply_manifest(
+            inst,
+            variant,
+            &msgs[0].data,
+            &mut node_map,
+            &mut scratch,
+            rank as u32,
+        );
+    }
+
+    // ---- Local picks against the synchronized replica.
+    let mut manifest: Vec<(u32, u32)> = Vec::new();
+    let migrations = match variant {
+        Variant::Communication => select_comm_node(
+            inst,
+            &mut node_map,
+            rank,
+            flow_row,
+            floor,
+            overfill,
+            &mut scratch,
+            Some(&mut manifest),
+        ),
+        Variant::Coordinate => select_coord_node(
+            inst,
+            &mut node_map,
+            rank,
+            flow_row,
+            floor,
+            overfill,
+            &mut scratch,
+            Some(&mut manifest),
+        ),
+    };
+    debug_assert_eq!(migrations, manifest.len());
+
+    // ---- Broadcast my manifest (empty manifests included: receive
+    // counts stay deterministic).
+    let mut buf = Vec::with_capacity(manifest.len() * 16);
+    for &(o, dest) in &manifest {
+        wire::put_u32(&mut buf, o);
+        wire::put_u32(&mut buf, dest);
+        wire::put_f64(&mut buf, inst.sizes[o as usize]);
+    }
+    for p in 0..n_nodes as u32 {
+        if p as usize != rank {
+            comm.send(p, tag_base | rank as u32, buf.clone());
+        }
+    }
+
+    // ---- Wavefront out: manifests of higher-ranked nodes complete the
+    // final map (refinement needs to know this node's arrivals from
+    // *every* rank).
+    for h in rank + 1..n_nodes {
+        let msgs = comm.recv_tagged(tag_base | h as u32, 1, Comm::TIMEOUT);
+        assert_eq!(msgs.len(), 1, "stage-3: no manifest from node {h}");
+        recv_bytes += apply_manifest(
+            inst,
+            variant,
+            &msgs[0].data,
+            &mut node_map,
+            &mut scratch,
+            rank as u32,
+        );
+    }
+
+    // ---- Hierarchical refinement (§III-D): node-local, no messages.
+    let members: Vec<u32> = (0..n_objects as u32)
+        .filter(|&o| node_map[o as usize] == rank as u32)
+        .collect();
+    let pe_assign = hierarchical::assign_pes_node(inst, rank as u32, &members, refine_tol);
+
+    // ---- PE-assignment exchange: every node assembles the complete
+    // new mapping (the driver routes with it; the strategy returns it).
+    let mut pbuf = Vec::with_capacity(pe_assign.len() * 8);
+    for &(o, pe) in &pe_assign {
+        wire::put_u32(&mut pbuf, o);
+        wire::put_u32(&mut pbuf, pe);
+    }
+    for p in 0..n_nodes as u32 {
+        if p as usize != rank {
+            comm.send(p, tag_base | PE_BIT | rank as u32, pbuf.clone());
+        }
+    }
+    let mut full_mapping = vec![u32::MAX; n_objects];
+    for &(o, pe) in &pe_assign {
+        full_mapping[o as usize] = pe;
+    }
+    for h in 0..n_nodes {
+        if h == rank {
+            continue;
+        }
+        let msgs = comm.recv_tagged(tag_base | PE_BIT | h as u32, 1, Comm::TIMEOUT);
+        assert_eq!(msgs.len(), 1, "stage-3: no PE assignments from node {h}");
+        let mut r = wire::Reader::new(&msgs[0].data);
+        while !r.is_empty() {
+            let o = r.u32();
+            let pe = r.u32();
+            full_mapping[o as usize] = pe;
+        }
+    }
+    debug_assert!(
+        full_mapping.iter().all(|&pe| pe != u32::MAX),
+        "an object fell through the PE exchange"
+    );
+    Stage3Out { manifest, migrations, recv_bytes, full_mapping }
+}
+
+/// Replay one node's manifest into this node's replica (and centroid
+/// state for the coord variant — the same per-migration update the
+/// picking loop performs inline, in the same order). Returns the bytes
+/// destined for this node.
+fn apply_manifest(
+    inst: &Instance,
+    variant: Variant,
+    data: &[u8],
+    node_map: &mut [u32],
+    scratch: &mut LbScratch,
+    my_rank: u32,
+) -> f64 {
+    let mut r = wire::Reader::new(data);
+    let mut arrived = 0.0;
+    while !r.is_empty() {
+        let o = r.u32();
+        let dest = r.u32();
+        let bytes = r.f64();
+        let from = node_map[o as usize];
+        node_map[o as usize] = dest;
+        scratch.moved[o as usize] = true;
+        if variant == Variant::Coordinate {
+            object_selection::apply_migration_to_centroids(inst, from, dest, o, scratch);
+        }
+        if dest == my_rank {
+            arrived += bytes;
+        }
+    }
+    arrived
+}

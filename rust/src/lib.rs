@@ -4,13 +4,17 @@
 //! for Persistently Interacting Objects" (Taylor, Chandrasekar, Kale):
 //! an over-decomposed object runtime, the three-stage diffusion
 //! strategy (+ coordinate variant), the comparison baselines, a
-//! distributed message-passing simulation substrate, the PIC PRK and
-//! stencil applications whose compute hot paths run as AOT-compiled
-//! JAX/Pallas kernels through PJRT, and benches regenerating every
-//! table and figure of the paper. See DESIGN.md for the system map.
+//! distributed message-passing simulation substrate — including a
+//! [`distributed`] runtime that executes the **whole** LB pipeline and
+//! the PIC application as per-node protocols over real message
+//! channels — the PIC PRK and stencil applications whose compute hot
+//! paths run as AOT-compiled JAX/Pallas kernels through PJRT, and
+//! benches regenerating every table and figure of the paper. See
+//! DESIGN.md for the system map.
 
 pub mod apps;
 pub mod coordinator;
+pub mod distributed;
 pub mod model;
 pub mod runtime;
 pub mod simnet;

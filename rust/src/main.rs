@@ -24,6 +24,8 @@ fn parser() -> Parser {
         .opt("config", None, "config file (INI subset)")
         .opt("set", None, "override, e.g. --set lb.strategy=diff-coord (comma-separated)")
         .opt("strategy", None, "shorthand for --set lb.strategy=...")
+        .opt("mode", None, "execution mode: sequential (default) or distributed \
+             (run the LB pipeline + PIC as real message-passing protocols)")
         .opt("iters", None, "shorthand for --set run.iters=...")
         .opt("lb-period", None, "shorthand for --set run.lb_period=...")
         .opt("scale", Some("8"), "viz: pixels per coordinate unit")
@@ -38,6 +40,14 @@ fn load_config(args: &difflb::util::args::Args) -> Result<Config> {
     };
     if let Some(s) = args.get("strategy") {
         cfg.set("lb.strategy", s);
+    }
+    if let Some(s) = args.get("mode") {
+        anyhow::ensure!(
+            matches!(s, "sequential" | "distributed"),
+            "unknown --mode '{s}' (expected 'sequential' or 'distributed')"
+        );
+        cfg.set("run.mode", s);
+        cfg.set("lb.mode", s);
     }
     if let Some(s) = args.get("iters") {
         cfg.set("run.iters", s);

@@ -7,4 +7,4 @@
 pub mod network;
 pub mod protocol;
 
-pub use network::{Cluster, Comm, CostTracker, NetModel};
+pub use network::{Cluster, Comm, CostTracker, Msg, NetModel, RecvError};

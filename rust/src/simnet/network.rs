@@ -2,8 +2,9 @@
 //!
 //! [`Cluster::run`] spawns one OS thread per simulated node and hands
 //! each a [`Comm`] endpoint (send/recv/barrier over std mpsc channels) —
-//! enough to execute genuinely distributed protocols (the stage-1
-//! handshake in [`super::protocol`]) without any external runtime.
+//! enough to execute genuinely distributed protocols (the full LB
+//! pipeline in [`crate::distributed`] and the stage-1 handshake in
+//! [`super::protocol`]) without any external runtime.
 //!
 //! [`NetModel`] converts message/byte counts into seconds the way the
 //! strong-scaling analysis needs: `t = α·msgs + β·bytes`, with
@@ -20,38 +21,134 @@ pub struct Msg {
     pub data: Vec<u8>,
 }
 
+/// Why a blocking receive returned without a message. A dead peer set
+/// (every sender endpoint dropped) is a *distinct* outcome from a slow
+/// one: protocols treat [`RecvError::Disconnected`] as fatal
+/// immediately instead of burning the full timeout waiting for a
+/// message that can never arrive.
+///
+/// Scope caveat: inside a [`Cluster`], every node holds sender clones
+/// to every inbox (including its own loopback), so `Disconnected`
+/// fires only when the *whole* cluster is torn down — a single dead
+/// peer among survivors still surfaces as `Timeout` (detecting that
+/// would need per-pair channels or heartbeats). The distinct outcome
+/// matters for endpoints whose senders genuinely all dropped, e.g.
+/// teardown races and embedding `Comm` outside `Cluster::run`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvError {
+    /// No message arrived within the timeout; peers may just be slow.
+    Timeout,
+    /// All sender endpoints are gone — nothing can ever arrive.
+    Disconnected,
+}
+
 /// Per-node communication endpoint.
 pub struct Comm {
     pub rank: u32,
     pub n: usize,
     senders: Vec<Sender<Msg>>,
     inbox: Receiver<Msg>,
+    /// Out-of-phase messages put aside by [`Comm::recv_tagged`]: a fast
+    /// peer may already be sending the next protocol phase while this
+    /// node still drains the current one.
+    pending: Vec<Msg>,
 }
 
 impl Comm {
+    /// Default patience for protocol receives: long enough that only a
+    /// genuine deadlock (not scheduler jitter) trips it.
+    pub const TIMEOUT: Duration = Duration::from_secs(30);
+
+    /// Build an endpoint from raw channel halves (used by [`Cluster`]
+    /// and by unit tests that need to simulate dead peers).
+    fn new(rank: u32, n: usize, senders: Vec<Sender<Msg>>, inbox: Receiver<Msg>) -> Comm {
+        Comm { rank, n, senders, inbox, pending: Vec::new() }
+    }
+
     pub fn send(&self, to: u32, tag: u32, data: Vec<u8>) {
         // a dropped peer ends the protocol; ignore send failures then
         let _ = self.senders[to as usize].send(Msg { from: self.rank, tag, data });
     }
 
-    /// Blocking receive with timeout (None on timeout).
-    pub fn recv(&self, timeout: Duration) -> Option<Msg> {
+    /// Blocking receive with timeout. [`RecvError::Disconnected`] means
+    /// every sender endpoint (including this node's own loopback) has
+    /// been dropped — the cluster is gone, not merely slow.
+    pub fn recv(&self, timeout: Duration) -> Result<Msg, RecvError> {
         match self.inbox.recv_timeout(timeout) {
-            Ok(m) => Some(m),
-            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+            Ok(m) => Ok(m),
+            Err(RecvTimeoutError::Timeout) => Err(RecvError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(RecvError::Disconnected),
         }
     }
 
-    /// Receive exactly `count` messages (or fewer on timeout).
+    /// Receive exactly `count` messages (or fewer on timeout /
+    /// disconnect). Messages parked by [`Comm::recv_tagged`] are not
+    /// consulted — this is the raw in-arrival-order primitive.
     pub fn recv_n(&self, count: usize, timeout: Duration) -> Vec<Msg> {
         let mut out = Vec::with_capacity(count);
         for _ in 0..count {
             match self.recv(timeout) {
-                Some(m) => out.push(m),
-                None => break,
+                Ok(m) => out.push(m),
+                Err(_) => break,
             }
         }
         out
+    }
+
+    /// Receive exactly `count` messages carrying `tag`, parking any
+    /// other tag in the pending buffer for a later `recv_tagged` (a
+    /// fast peer may already be sending the next phase while we drain
+    /// this one). Returns short only on [`RecvError::Timeout`]; a
+    /// disconnected cluster panics — with every sender gone the
+    /// outstanding messages can never arrive, so the protocol fails
+    /// fast instead of pretending the phase merely timed out.
+    pub fn recv_tagged(&mut self, tag: u32, count: usize, timeout: Duration) -> Vec<Msg> {
+        let mut out = Vec::with_capacity(count);
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].tag == tag && out.len() < count {
+                out.push(self.pending.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        while out.len() < count {
+            match self.recv(timeout) {
+                Ok(m) if m.tag == tag => out.push(m),
+                Ok(m) => self.pending.push(m),
+                Err(RecvError::Timeout) => break,
+                Err(RecvError::Disconnected) => panic!(
+                    "simnode {}: cluster disconnected with {} message(s) of tag {tag:#x} \
+                     still outstanding",
+                    self.rank,
+                    count - out.len()
+                ),
+            }
+        }
+        out
+    }
+
+    /// All-to-all barrier: returns once every rank has entered a
+    /// `barrier` call with the same `tag`. The tag must be unique per
+    /// logical barrier (reusing one across two consecutive barriers
+    /// lets a fast rank's second announcement satisfy a slow rank's
+    /// first wait). Panics — rather than deadlocks — when a peer dies
+    /// or the wait exceeds [`Comm::TIMEOUT`].
+    pub fn barrier(&mut self, tag: u32) {
+        for p in 0..self.n as u32 {
+            if p != self.rank {
+                self.send(p, tag, Vec::new());
+            }
+        }
+        let want = self.n - 1;
+        let got = self.recv_tagged(tag, want, Self::TIMEOUT);
+        assert_eq!(
+            got.len(),
+            want,
+            "simnode {}: barrier {tag:#x} timed out with {}/{want} peers arrived",
+            self.rank,
+            got.len()
+        );
     }
 }
 
@@ -76,7 +173,7 @@ impl Cluster {
         }
         let mut handles = Vec::with_capacity(n);
         for (rank, inbox) in inboxes.into_iter().enumerate() {
-            let comm = Comm { rank: rank as u32, n, senders: senders.clone(), inbox };
+            let comm = Comm::new(rank as u32, n, senders.clone(), inbox);
             let f = f.clone();
             handles.push(
                 std::thread::Builder::new()
@@ -195,9 +292,32 @@ mod tests {
     }
 
     #[test]
-    fn recv_timeout_returns_none() {
-        let r = Cluster::run(2, |_rank, comm| comm.recv(Duration::from_millis(10)).is_none());
-        assert_eq!(r, vec![true, true]);
+    fn recv_timeout_is_distinct_from_disconnect() {
+        // Live cluster, no traffic: plain Timeout (never Disconnected —
+        // each node's own loopback sender keeps its inbox alive).
+        let r = Cluster::run(2, |_rank, comm| comm.recv(Duration::from_millis(10)));
+        assert_eq!(r, vec![Err(RecvError::Timeout), Err(RecvError::Timeout)]);
+    }
+
+    #[test]
+    fn recv_reports_dead_peers_immediately() {
+        // Hand-built endpoint whose every sender has been dropped: the
+        // receive must fail fast with Disconnected, not burn a timeout.
+        let (tx, rx) = channel::<Msg>();
+        drop(tx);
+        let dead = Comm::new(1, 2, Vec::new(), rx);
+        let t = std::time::Instant::now();
+        assert_eq!(dead.recv(Duration::from_secs(30)), Err(RecvError::Disconnected));
+        assert!(t.elapsed() < Duration::from_secs(5), "burned the timeout");
+    }
+
+    #[test]
+    #[should_panic(expected = "cluster disconnected")]
+    fn recv_tagged_panics_on_dead_cluster() {
+        let (tx, rx) = channel::<Msg>();
+        drop(tx);
+        let mut dead = Comm::new(0, 2, Vec::new(), rx);
+        dead.recv_tagged(0x42, 1, Duration::from_secs(30));
     }
 
     #[test]
@@ -219,5 +339,45 @@ mod tests {
         assert!(times[0] > 0.0 && times[0] == times[1] && times[2] > 0.0);
         t.reset();
         assert_eq!(t.inter_bytes, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn recv_tagged_buffers_out_of_phase() {
+        let results = Cluster::run(2, |rank, mut comm| {
+            let peer = 1 - rank;
+            // send three phases out of order
+            comm.send(peer, 3, vec![30]);
+            comm.send(peer, 1, vec![10]);
+            comm.send(peer, 2, vec![20]);
+            // drain in canonical phase order
+            let a = comm.recv_tagged(1, 1, Duration::from_secs(5));
+            let b = comm.recv_tagged(2, 1, Duration::from_secs(5));
+            let c = comm.recv_tagged(3, 1, Duration::from_secs(5));
+            (a[0].data.clone(), b[0].data.clone(), c[0].data.clone())
+        });
+        for r in results {
+            assert_eq!(r, (vec![10], vec![20], vec![30]));
+        }
+    }
+
+    #[test]
+    fn barrier_holds_until_all_arrive() {
+        // Every rank announces "pre" to rank 0 before entering the
+        // barrier; once rank 0's barrier completes, all announcements
+        // must already be in flight — observable with a tiny timeout.
+        let results = Cluster::run(4, |rank, mut comm| {
+            comm.send(0, 0x50, vec![rank as u8]);
+            if rank == 2 {
+                std::thread::sleep(Duration::from_millis(50)); // straggler
+            }
+            comm.barrier(0x60);
+            if rank == 0 {
+                let pre = comm.recv_tagged(0x50, 4, Duration::from_secs(5));
+                pre.len()
+            } else {
+                0
+            }
+        });
+        assert_eq!(results[0], 4);
     }
 }

@@ -6,48 +6,18 @@
 //! pairings, validating that the round-synchronous sequential
 //! implementation used inside the strategies is a faithful model of the
 //! distributed execution (the paper's strategy runs inside Charm++ this
-//! way).
+//! way). [`handshake_node`] is the per-node body; `crate::distributed`
+//! runs it inline in its full-pipeline node threads, followed by the
+//! stage-2/stage-3 protocols, on the same [`Comm`] endpoints.
 //!
-//! Wire protocol per round (tags):
+//! Wire protocol per round (tags, offset by the caller's `tag_base`):
 //!   0 REQ   — one per peer: `[1]` requesting / `[0]` not
 //!   1 RESP  — to each requester: `[1]` accept / `[0]` reject
 //!   2 ACK   — to each accepting responder: `[1]` confirm / `[0]` cancel
 //!   3 DONE  — satisfaction bit for global termination
 
-use std::time::Duration;
-
 use super::network::{Cluster, Comm};
 use crate::strategies::diffusion::neighbor::{Candidates, NeighborGraph};
-
-const T: Duration = Duration::from_secs(30);
-
-/// Receive exactly `count` messages with `tag`, buffering any
-/// out-of-phase messages (a fast peer may already be sending the next
-/// phase while we drain this one).
-fn recv_tagged(
-    pending: &mut Vec<super::network::Msg>,
-    comm: &Comm,
-    tag: u32,
-    count: usize,
-) -> Vec<super::network::Msg> {
-    let mut out = Vec::with_capacity(count);
-    let mut i = 0;
-    while i < pending.len() {
-        if pending[i].tag == tag && out.len() < count {
-            out.push(pending.remove(i));
-        } else {
-            i += 1;
-        }
-    }
-    while out.len() < count {
-        match comm.recv(T) {
-            Some(m) if m.tag == tag => out.push(m),
-            Some(m) => pending.push(m),
-            None => break,
-        }
-    }
-    out
-}
 
 /// Run the distributed handshake on `n` threads; returns the symmetric
 /// neighbor graph (same contract as the sequential implementation).
@@ -61,23 +31,39 @@ pub fn distributed_select_neighbors(
         return NeighborGraph { adj: vec![] };
     }
     let cands = std::sync::Arc::new(candidates.clone());
-    let adj = Cluster::run(n, move |rank, comm| {
-        node_main(rank, comm, &cands[rank as usize], k, max_rounds)
+    let adj = Cluster::run(n, move |rank, mut comm| {
+        handshake_node(&mut comm, &cands[rank as usize], k, max_rounds, 0)
     });
     NeighborGraph { adj }
 }
 
-fn node_main(rank: u32, comm: Comm, my_cands: &[u32], k: usize, max_rounds: usize) -> Vec<u32> {
+/// One node's handshake: runs the paper's stage-1 state machine over
+/// real messages and returns this node's confirmed neighbor set
+/// (sorted). `tag_base` namespaces the wire tags so callers embedding
+/// the handshake in a longer protocol (the distributed LB pipeline)
+/// can keep phases disjoint; it must leave the low 24 bits clear
+/// (rounds use bits 8..24, phases bits 0..8).
+pub fn handshake_node(
+    comm: &mut Comm,
+    my_cands: &[u32],
+    k: usize,
+    max_rounds: usize,
+    tag_base: u32,
+) -> Vec<u32> {
+    debug_assert_eq!(tag_base & 0x00FF_FFFF, 0, "tag_base clobbers round/phase bits");
+    // rounds occupy tag bits 8..24; overflowing them would collide with
+    // the caller's other protocol namespaces (same bound as stage 2).
+    assert!(max_rounds < (1 << 16), "handshake_max_rounds exceeds the round tag space");
+    let rank = comm.rank;
     let n = comm.n;
     let peers: Vec<u32> = (0..n as u32).filter(|&p| p != rank).collect();
     let mut confirmed: Vec<u32> = Vec::new();
     let mut holds: usize = 0;
     let mut cursor = 0usize;
     let mut wrapped = false;
-    let mut pending: Vec<super::network::Msg> = Vec::new();
 
     for round in 0..max_rounds as u32 {
-        let tag = |phase: u32| (round << 8) | phase;
+        let tag = |phase: u32| tag_base | (round << 8) | phase;
 
         // ---- Phase A: decide + send requests (batch: one msg per peer).
         let l = k.saturating_sub(confirmed.len());
@@ -113,7 +99,8 @@ fn node_main(rank: u32, comm: Comm, my_cands: &[u32], k: usize, max_rounds: usiz
         }
 
         // ---- Phase B: collect requests, respond (sorted by requester).
-        let mut reqs: Vec<u32> = recv_tagged(&mut pending, &comm, tag(0), peers.len())
+        let mut reqs: Vec<u32> = comm
+            .recv_tagged(tag(0), peers.len(), Comm::TIMEOUT)
             .into_iter()
             .filter(|m| m.data == [1])
             .map(|m| m.from)
@@ -132,7 +119,8 @@ fn node_main(rank: u32, comm: Comm, my_cands: &[u32], k: usize, max_rounds: usiz
         }
 
         // ---- Phase C: collect responses to our requests, ack/cancel.
-        let mut accepts: Vec<u32> = recv_tagged(&mut pending, &comm, tag(1), requested.len())
+        let mut accepts: Vec<u32> = comm
+            .recv_tagged(tag(1), requested.len(), Comm::TIMEOUT)
             .into_iter()
             .filter(|m| m.data == [1])
             .map(|m| m.from)
@@ -154,7 +142,7 @@ fn node_main(rank: u32, comm: Comm, my_cands: &[u32], k: usize, max_rounds: usiz
 
         // ---- Process acks for the accepts we issued (sorted by sender
         // for determinism; arrival order is scheduling-dependent).
-        let mut acks = recv_tagged(&mut pending, &comm, tag(2), accepted_from.len());
+        let mut acks = comm.recv_tagged(tag(2), accepted_from.len(), Comm::TIMEOUT);
         acks.sort_by_key(|m| m.from);
         for m in acks {
             holds -= 1;
@@ -168,7 +156,7 @@ fn node_main(rank: u32, comm: Comm, my_cands: &[u32], k: usize, max_rounds: usiz
         for &p in &peers {
             comm.send(p, tag(3), vec![u8::from(satisfied)]);
         }
-        let done_msgs = recv_tagged(&mut pending, &comm, tag(3), peers.len());
+        let done_msgs = comm.recv_tagged(tag(3), peers.len(), Comm::TIMEOUT);
         if satisfied && done_msgs.iter().all(|m| m.data == [1]) {
             break;
         }
@@ -220,5 +208,19 @@ mod tests {
     fn single_node_cluster() {
         let g = distributed_select_neighbors(&vec![vec![]], 4, 4);
         assert_eq!(g.adj, vec![Vec::<u32>::new()]);
+    }
+
+    #[test]
+    fn tag_base_does_not_change_pairings() {
+        let cands = ring_candidates(6);
+        let base = distributed_select_neighbors(&cands, 2, 16);
+        let shifted = {
+            let c = std::sync::Arc::new(cands);
+            let adj = Cluster::run(6, move |rank, mut comm| {
+                handshake_node(&mut comm, &c[rank as usize], 2, 16, 0x0700_0000)
+            });
+            NeighborGraph { adj }
+        };
+        assert_eq!(base.adj, shifted.adj);
     }
 }

@@ -21,47 +21,68 @@ pub fn assign_pes(inst: &Instance, new_node_map: &[u32], tol: f64) -> Vec<u32> {
         let members: Vec<u32> = (0..inst.n_objects() as u32)
             .filter(|&o| new_node_map[o as usize] == node)
             .collect();
-        let pe_range = inst.topo.pes_of_node(node);
-        let pe_lo = pe_range.start;
-        let mut pe_loads = vec![0.0f64; ppn];
-        let mut placed: Vec<(u32, usize)> = Vec::with_capacity(members.len());
-
-        // Stayers keep their PE.
-        let mut arrivals: Vec<u32> = Vec::new();
-        for &o in &members {
-            let old_pe = inst.mapping[o as usize];
-            if inst.topo.node_of_pe(old_pe) == node {
-                let local = (old_pe - pe_lo) as usize;
-                pe_loads[local] += inst.loads[o as usize];
-                placed.push((o, local));
-            } else {
-                arrivals.push(o);
-            }
-        }
-        // Arrivals: LPT — heaviest first onto the least-loaded PE.
-        arrivals.sort_by(|&a, &b| {
-            inst.loads[b as usize]
-                .partial_cmp(&inst.loads[a as usize])
-                .unwrap()
-                .then(a.cmp(&b))
-        });
-        for o in arrivals {
-            let (local, _) = pe_loads
-                .iter()
-                .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap();
-            pe_loads[local] += inst.loads[o as usize];
-            placed.push((o, local));
-        }
-
-        refine_within(&mut placed, &mut pe_loads, &inst.loads, tol);
-
-        for (o, local) in placed {
-            mapping[o as usize] = pe_lo + local as u32;
+        for (o, pe) in assign_pes_node(inst, node, &members, tol) {
+            mapping[o as usize] = pe;
         }
     }
     mapping
+}
+
+/// PE refinement for **one** node's member set, returning `(object,
+/// absolute PE)` pairs — per-node body shared by [`assign_pes`] and the
+/// distributed pipeline, where every node refines only its own members
+/// (this stage needs no inter-node communication at all: it reads the
+/// member list, the old mapping and the loads). `members` must be in
+/// ascending object order, as produced by scanning objects 0..n — the
+/// LPT tie-break and refinement visit order depend on it.
+pub fn assign_pes_node(
+    inst: &Instance,
+    node: u32,
+    members: &[u32],
+    tol: f64,
+) -> Vec<(u32, u32)> {
+    let ppn = inst.topo.pes_per_node;
+    if ppn == 1 {
+        let pe = inst.topo.pes_of_node(node).start;
+        return members.iter().map(|&o| (o, pe)).collect();
+    }
+    let pe_range = inst.topo.pes_of_node(node);
+    let pe_lo = pe_range.start;
+    let mut pe_loads = vec![0.0f64; ppn];
+    let mut placed: Vec<(u32, usize)> = Vec::with_capacity(members.len());
+
+    // Stayers keep their PE.
+    let mut arrivals: Vec<u32> = Vec::new();
+    for &o in members {
+        let old_pe = inst.mapping[o as usize];
+        if inst.topo.node_of_pe(old_pe) == node {
+            let local = (old_pe - pe_lo) as usize;
+            pe_loads[local] += inst.loads[o as usize];
+            placed.push((o, local));
+        } else {
+            arrivals.push(o);
+        }
+    }
+    // Arrivals: LPT — heaviest first onto the least-loaded PE.
+    arrivals.sort_by(|&a, &b| {
+        inst.loads[b as usize]
+            .partial_cmp(&inst.loads[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    for o in arrivals {
+        let (local, _) = pe_loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        pe_loads[local] += inst.loads[o as usize];
+        placed.push((o, local));
+    }
+
+    refine_within(&mut placed, &mut pe_loads, &inst.loads, tol);
+
+    placed.into_iter().map(|(o, local)| (o, pe_lo + local as u32)).collect()
 }
 
 /// Bounded load-only refinement: repeatedly move the best-fitting object

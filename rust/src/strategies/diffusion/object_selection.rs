@@ -13,6 +13,14 @@
 //!   to the neighbor's centroid, and both centroids are updated as
 //!   objects move.
 //!
+//! Layering: [`select_comm_node`] / [`select_coord_node`] are the
+//! **per-node** decision bodies. The sequential entry points
+//! ([`select_comm_with`], [`select_coord_with`]) run them node by node
+//! in rank order; `crate::distributed`'s stage-3 protocol runs the
+//! *same* body on each simulated node against its manifest-synchronized
+//! replica of the object→node map, which is what makes the distributed
+//! pipeline's picks bit-identical to the sequential strategy's.
+//!
 //! Perf architecture: the seed built a `HashMap<u32, f64>` and a fresh
 //! `BinaryHeap` per (node, neighbor) pair. Both now live in
 //! [`LbScratch`]: the map became the dense `bytes_to_j` array guarded
@@ -72,21 +80,23 @@ impl Ord for Entry {
     }
 }
 
-/// Per-node neighbor quotas sorted descending (largest transfer first)
-/// into a reused buffer. Residual quotas below 1% of the average node
-/// load are noise from the fixed-point tolerance and are dropped —
+/// One node's neighbor quota row sorted descending (largest transfer
+/// first) into a reused buffer. Residual quotas below 1% of the average
+/// node load are noise from the fixed-point tolerance and are dropped —
 /// realizing them would migrate an object per neighbor pair for no
 /// balance benefit.
-fn sorted_quota_into(quotas: &Quotas, i: usize, floor: f64, out: &mut Vec<(u32, f64)>) {
+fn sorted_quota_into(row: &[(u32, f64)], floor: f64, out: &mut Vec<(u32, f64)>) {
     out.clear();
-    out.extend(quotas.flows[i].iter().filter(|&&(_, a)| a >= floor).copied());
+    out.extend(row.iter().filter(|&&(_, a)| a >= floor).copied());
     // unstable: the id tiebreak makes the order total, and unlike the
     // stable sort it allocates no merge buffer
     out.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
 }
 
 /// Quota noise floor for an instance: 1% of the average node load.
-fn quota_floor(inst: &Instance) -> f64 {
+/// Public because every node of the distributed stage-3 protocol
+/// evaluates the identical expression locally.
+pub fn quota_floor(inst: &Instance) -> f64 {
     0.01 * inst.loads.iter().sum::<f64>() / inst.topo.n_nodes.max(1) as f64
 }
 
@@ -120,101 +130,131 @@ pub fn select_comm_with(
     scratch: &mut LbScratch,
 ) -> usize {
     let n_nodes = inst.topo.n_nodes;
-    let n_objects = inst.n_objects();
     let floor = quota_floor(inst);
     scratch.moved.clear();
-    scratch.moved.resize(n_objects, false);
+    scratch.moved.resize(inst.n_objects(), false);
     scratch.index_by_node(node_map, n_nodes);
+    let mut migrations = 0;
+    for i in 0..n_nodes {
+        migrations +=
+            select_comm_node(inst, node_map, i, &quotas.flows[i], floor, overfill, scratch, None);
+    }
+    migrations
+}
+
+/// Comm-variant picks for **one** node `i` against its quota row —
+/// the per-node body shared by the sequential sweep above and the
+/// distributed stage-3 protocol. Contract: `scratch.moved` and
+/// `scratch.by_node` must already reflect every migration performed
+/// earlier this LB round (by lower-ranked nodes), exactly as the
+/// sequential loop maintains them; `floor` comes from [`quota_floor`].
+/// Each pick mutates `node_map` / `scratch.moved` and, when `manifest`
+/// is given, appends `(object, destination node)` in pick order — the
+/// migration manifest the protocol ships to receivers.
+#[allow(clippy::too_many_arguments)]
+pub fn select_comm_node(
+    inst: &Instance,
+    node_map: &mut [u32],
+    i: usize,
+    quota_row: &[(u32, f64)],
+    floor: f64,
+    overfill: f64,
+    scratch: &mut LbScratch,
+    mut manifest: Option<&mut Vec<(u32, u32)>>,
+) -> usize {
+    let n_objects = inst.n_objects();
     let mut migrations = 0;
     // Recycle the heap's backing storage (BinaryHeap::from on the empty
     // Vec is free and keeps capacity).
     let mut heap: BinaryHeap<Entry> = BinaryHeap::from(std::mem::take(&mut scratch.heap));
-
-    for i in 0..n_nodes {
-        // take/put buffers so loops below can borrow scratch freely
-        let mut targets = std::mem::take(&mut scratch.targets);
-        sorted_quota_into(quotas, i, floor, &mut targets);
-        if targets.is_empty() {
-            scratch.targets = targets;
-            continue;
-        }
-        // Pool of objects currently on node i (excluding arrivals from
-        // earlier nodes this round — single-hop at object granularity).
-        scratch.pool.clear();
-        {
-            let (pool_buf, by_node, moved) =
-                (&mut scratch.pool, &scratch.by_node, &scratch.moved);
-            pool_buf.extend(
-                by_node[i]
-                    .iter()
-                    .copied()
-                    .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize]),
-            );
-        }
-
-        for &(j, quota) in &targets {
-            let mut remaining = quota;
-            let ep = scratch.next_epoch(n_objects);
-            score_pool_comm(inst, node_map, i as u32, j, scratch);
-            heap.clear();
-            let (pool_buf, scores) = (std::mem::take(&mut scratch.pool), std::mem::take(&mut scratch.scores));
-            for (p, &o) in pool_buf.iter().enumerate() {
-                let (bj, local, valid) = scores[p];
-                if !valid {
-                    continue;
-                }
-                scratch.bytes_to_j[o as usize] = bj;
-                scratch.epoch[o as usize] = ep;
-                heap.push(Entry { key: bj, tie: local, obj: o });
-            }
-            scratch.pool = pool_buf;
-            scratch.scores = scores;
-
-            while remaining > 1e-12 {
-                let Some(top) = heap.pop() else { break };
-                let o = top.obj;
-                if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
-                    continue;
-                }
-                // lazy key revalidation: migrations of earlier objects
-                // may have raised this object's bytes-to-j.
-                let cur = scratch.bytes_to_j[o as usize];
-                if (cur - top.key).abs() > 1e-9 {
-                    heap.push(Entry { key: cur, ..top });
-                    continue;
-                }
-                let load = inst.loads[o as usize];
-                if !fits(load, remaining, overfill) {
-                    continue; // skip; a lighter object may still fit
-                }
-                // Migrate o: i -> j.
-                node_map[o as usize] = j;
-                scratch.moved[o as usize] = true;
-                migrations += 1;
-                remaining -= load;
-                // Constraint 2: peers of o now communicate with node j.
-                for (&p, &w) in inst
-                    .graph
-                    .neighbors(o as usize)
-                    .iter()
-                    .zip(inst.graph.weights(o as usize))
-                {
-                    if node_map[p as usize] == i as u32
-                        && !scratch.moved[p as usize]
-                        && scratch.epoch[p as usize] == ep
-                    {
-                        scratch.bytes_to_j[p as usize] += w;
-                        heap.push(Entry {
-                            key: scratch.bytes_to_j[p as usize],
-                            tie: 0.0,
-                            obj: p,
-                        });
-                    }
-                }
-            }
-        }
+    // take/put buffers so loops below can borrow scratch freely
+    let mut targets = std::mem::take(&mut scratch.targets);
+    sorted_quota_into(quota_row, floor, &mut targets);
+    if targets.is_empty() {
         scratch.targets = targets;
+        scratch.heap = heap.into_vec();
+        return 0;
     }
+    // Pool of objects currently on node i (excluding arrivals from
+    // earlier nodes this round — single-hop at object granularity).
+    scratch.pool.clear();
+    {
+        let (pool_buf, by_node, moved) =
+            (&mut scratch.pool, &scratch.by_node, &scratch.moved);
+        pool_buf.extend(
+            by_node[i]
+                .iter()
+                .copied()
+                .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize]),
+        );
+    }
+
+    for &(j, quota) in &targets {
+        let mut remaining = quota;
+        let ep = scratch.next_epoch(n_objects);
+        score_pool_comm(inst, node_map, i as u32, j, scratch);
+        heap.clear();
+        let (pool_buf, scores) =
+            (std::mem::take(&mut scratch.pool), std::mem::take(&mut scratch.scores));
+        for (p, &o) in pool_buf.iter().enumerate() {
+            let (bj, local, valid) = scores[p];
+            if !valid {
+                continue;
+            }
+            scratch.bytes_to_j[o as usize] = bj;
+            scratch.epoch[o as usize] = ep;
+            heap.push(Entry { key: bj, tie: local, obj: o });
+        }
+        scratch.pool = pool_buf;
+        scratch.scores = scores;
+
+        while remaining > 1e-12 {
+            let Some(top) = heap.pop() else { break };
+            let o = top.obj;
+            if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
+                continue;
+            }
+            // lazy key revalidation: migrations of earlier objects
+            // may have raised this object's bytes-to-j.
+            let cur = scratch.bytes_to_j[o as usize];
+            if (cur - top.key).abs() > 1e-9 {
+                heap.push(Entry { key: cur, ..top });
+                continue;
+            }
+            let load = inst.loads[o as usize];
+            if !fits(load, remaining, overfill) {
+                continue; // skip; a lighter object may still fit
+            }
+            // Migrate o: i -> j.
+            node_map[o as usize] = j;
+            scratch.moved[o as usize] = true;
+            migrations += 1;
+            remaining -= load;
+            if let Some(m) = manifest.as_mut() {
+                m.push((o, j));
+            }
+            // Constraint 2: peers of o now communicate with node j.
+            for (&p, &w) in inst
+                .graph
+                .neighbors(o as usize)
+                .iter()
+                .zip(inst.graph.weights(o as usize))
+            {
+                if node_map[p as usize] == i as u32
+                    && !scratch.moved[p as usize]
+                    && scratch.epoch[p as usize] == ep
+                {
+                    scratch.bytes_to_j[p as usize] += w;
+                    heap.push(Entry {
+                        key: scratch.bytes_to_j[p as usize],
+                        tie: 0.0,
+                        obj: p,
+                    });
+                }
+            }
+        }
+    }
+    scratch.targets = targets;
     heap.clear();
     scratch.heap = heap.into_vec();
     migrations
@@ -292,16 +332,12 @@ pub fn select_coord(
     select_coord_with(inst, node_map, quotas, overfill, &mut scratch)
 }
 
-/// [`select_coord`] against a caller-owned [`LbScratch`].
-pub fn select_coord_with(
-    inst: &Instance,
-    node_map: &mut [u32],
-    quotas: &Quotas,
-    overfill: f64,
-    scratch: &mut LbScratch,
-) -> usize {
+/// Initialize the coord variant's shared centroid state
+/// (`scratch.csums` / `scratch.ccounts`) from an object→node map —
+/// performed identically by the sequential sweep and by every node of
+/// the distributed protocol before manifests replay into it.
+pub fn init_centroid_state(inst: &Instance, node_map: &[u32], scratch: &mut LbScratch) {
     let n_nodes = inst.topo.n_nodes;
-    // centroid state: sums + counts per node
     scratch.csums.clear();
     scratch.csums.resize(n_nodes, [0.0f64; 2]);
     scratch.ccounts.clear();
@@ -311,90 +347,140 @@ pub fn select_coord_with(
         scratch.csums[node as usize][1] += inst.coords[o][1];
         scratch.ccounts[node as usize] += 1;
     }
-    let centroid = |sums: &[[f64; 2]], counts: &[usize], n: usize| -> [f64; 2] {
-        if counts[n] == 0 {
-            [0.0, 0.0]
-        } else {
-            [sums[n][0] / counts[n] as f64, sums[n][1] / counts[n] as f64]
-        }
-    };
-    let dist2 = |a: [f64; 2], b: [f64; 2]| {
-        let dx = a[0] - b[0];
-        let dy = a[1] - b[1];
-        dx * dx + dy * dy
-    };
+}
 
+/// Apply one already-decided migration to the centroid state (used when
+/// replaying another node's manifest in the distributed protocol; the
+/// local pick loop performs the identical update inline).
+pub fn apply_migration_to_centroids(
+    inst: &Instance,
+    from: u32,
+    to: u32,
+    obj: u32,
+    scratch: &mut LbScratch,
+) {
+    let c = inst.coords[obj as usize];
+    scratch.csums[from as usize][0] -= c[0];
+    scratch.csums[from as usize][1] -= c[1];
+    scratch.ccounts[from as usize] -= 1;
+    scratch.csums[to as usize][0] += c[0];
+    scratch.csums[to as usize][1] += c[1];
+    scratch.ccounts[to as usize] += 1;
+}
+
+fn centroid(sums: &[[f64; 2]], counts: &[usize], n: usize) -> [f64; 2] {
+    if counts[n] == 0 {
+        [0.0, 0.0]
+    } else {
+        [sums[n][0] / counts[n] as f64, sums[n][1] / counts[n] as f64]
+    }
+}
+
+fn dist2(a: [f64; 2], b: [f64; 2]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    dx * dx + dy * dy
+}
+
+/// [`select_coord`] against a caller-owned [`LbScratch`].
+pub fn select_coord_with(
+    inst: &Instance,
+    node_map: &mut [u32],
+    quotas: &Quotas,
+    overfill: f64,
+    scratch: &mut LbScratch,
+) -> usize {
+    let n_nodes = inst.topo.n_nodes;
+    init_centroid_state(inst, node_map, scratch);
     let floor = quota_floor(inst);
     scratch.moved.clear();
     scratch.moved.resize(inst.n_objects(), false);
     scratch.index_by_node(node_map, n_nodes);
     let mut migrations = 0;
-    let mut heap: BinaryHeap<Entry> = BinaryHeap::from(std::mem::take(&mut scratch.heap));
-
     for i in 0..n_nodes {
-        let mut targets = std::mem::take(&mut scratch.targets);
-        sorted_quota_into(quotas, i, floor, &mut targets);
-        if targets.is_empty() {
-            scratch.targets = targets;
-            continue;
-        }
-        scratch.pool.clear();
-        {
-            let (pool_buf, by_node, moved) =
-                (&mut scratch.pool, &scratch.by_node, &scratch.moved);
-            pool_buf.extend(
-                by_node[i]
-                    .iter()
-                    .copied()
-                    .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize]),
-            );
-        }
-
-        for &(j, quota) in &targets {
-            let mut remaining = quota;
-            heap.clear();
-            let cj = centroid(&scratch.csums, &scratch.ccounts, j as usize);
-            for &o in &scratch.pool {
-                if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
-                    continue;
-                }
-                // max-heap: closer = higher priority = larger key
-                heap.push(Entry { key: -dist2(inst.coords[o as usize], cj), tie: 0.0, obj: o });
-            }
-            // bounded revalidation so a drifting centroid cannot loop us
-            let mut revalidations = 4 * scratch.pool.len() + 16;
-            while remaining > 1e-12 {
-                let Some(top) = heap.pop() else { break };
-                let o = top.obj;
-                if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
-                    continue;
-                }
-                let cj = centroid(&scratch.csums, &scratch.ccounts, j as usize);
-                let cur = -dist2(inst.coords[o as usize], cj);
-                if revalidations > 0 && (cur - top.key).abs() > 1e-9 {
-                    revalidations -= 1;
-                    heap.push(Entry { key: cur, ..top });
-                    continue;
-                }
-                let load = inst.loads[o as usize];
-                if !fits(load, remaining, overfill) {
-                    continue;
-                }
-                node_map[o as usize] = j;
-                scratch.moved[o as usize] = true;
-                migrations += 1;
-                remaining -= load;
-                let c = inst.coords[o as usize];
-                scratch.csums[i][0] -= c[0];
-                scratch.csums[i][1] -= c[1];
-                scratch.ccounts[i] -= 1;
-                scratch.csums[j as usize][0] += c[0];
-                scratch.csums[j as usize][1] += c[1];
-                scratch.ccounts[j as usize] += 1;
-            }
-        }
-        scratch.targets = targets;
+        migrations +=
+            select_coord_node(inst, node_map, i, &quotas.flows[i], floor, overfill, scratch, None);
     }
+    migrations
+}
+
+/// Coord-variant picks for **one** node `i` — per-node body shared with
+/// the distributed protocol, under the same contract as
+/// [`select_comm_node`] plus current `scratch.csums` / `ccounts`
+/// centroid state (see [`init_centroid_state`]).
+#[allow(clippy::too_many_arguments)]
+pub fn select_coord_node(
+    inst: &Instance,
+    node_map: &mut [u32],
+    i: usize,
+    quota_row: &[(u32, f64)],
+    floor: f64,
+    overfill: f64,
+    scratch: &mut LbScratch,
+    mut manifest: Option<&mut Vec<(u32, u32)>>,
+) -> usize {
+    let mut migrations = 0;
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::from(std::mem::take(&mut scratch.heap));
+    let mut targets = std::mem::take(&mut scratch.targets);
+    sorted_quota_into(quota_row, floor, &mut targets);
+    if targets.is_empty() {
+        scratch.targets = targets;
+        scratch.heap = heap.into_vec();
+        return 0;
+    }
+    scratch.pool.clear();
+    {
+        let (pool_buf, by_node, moved) =
+            (&mut scratch.pool, &scratch.by_node, &scratch.moved);
+        pool_buf.extend(
+            by_node[i]
+                .iter()
+                .copied()
+                .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize]),
+        );
+    }
+
+    for &(j, quota) in &targets {
+        let mut remaining = quota;
+        heap.clear();
+        let cj = centroid(&scratch.csums, &scratch.ccounts, j as usize);
+        for &o in &scratch.pool {
+            if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
+                continue;
+            }
+            // max-heap: closer = higher priority = larger key
+            heap.push(Entry { key: -dist2(inst.coords[o as usize], cj), tie: 0.0, obj: o });
+        }
+        // bounded revalidation so a drifting centroid cannot loop us
+        let mut revalidations = 4 * scratch.pool.len() + 16;
+        while remaining > 1e-12 {
+            let Some(top) = heap.pop() else { break };
+            let o = top.obj;
+            if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
+                continue;
+            }
+            let cj = centroid(&scratch.csums, &scratch.ccounts, j as usize);
+            let cur = -dist2(inst.coords[o as usize], cj);
+            if revalidations > 0 && (cur - top.key).abs() > 1e-9 {
+                revalidations -= 1;
+                heap.push(Entry { key: cur, ..top });
+                continue;
+            }
+            let load = inst.loads[o as usize];
+            if !fits(load, remaining, overfill) {
+                continue;
+            }
+            node_map[o as usize] = j;
+            scratch.moved[o as usize] = true;
+            migrations += 1;
+            remaining -= load;
+            if let Some(m) = manifest.as_mut() {
+                m.push((o, j));
+            }
+            apply_migration_to_centroids(inst, i as u32, j, o, scratch);
+        }
+    }
+    scratch.targets = targets;
     heap.clear();
     scratch.heap = heap.into_vec();
     migrations
@@ -525,6 +611,29 @@ mod tests {
             assert_eq!(n1, n2);
             assert_eq!(m1, m2);
         }
+    }
+
+    #[test]
+    fn manifest_records_picks_in_order() {
+        let inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        let floor = quota_floor(&inst);
+        let mut scratch = LbScratch::default();
+        scratch.moved.resize(inst.n_objects(), false);
+        scratch.index_by_node(&inst.node_mapping(), 2);
+        let mut manifest = Vec::new();
+        let n = select_comm_node(
+            &inst,
+            &mut map,
+            0,
+            &[(1, 2.0)],
+            floor,
+            0.5,
+            &mut scratch,
+            Some(&mut manifest),
+        );
+        assert_eq!(n, manifest.len());
+        assert_eq!(manifest, vec![(3, 1), (2, 1)]);
     }
 
     #[test]

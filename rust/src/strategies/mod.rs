@@ -76,11 +76,16 @@ pub trait LoadBalancer: Send + Sync {
     fn rebalance(&self, inst: &Instance) -> Assignment;
 }
 
-/// Names accepted by [`make`] (and the CLI / config system).
+/// Names accepted by [`make`] (and the CLI / config system). The
+/// `dist-` variants run the diffusion pipeline as real message-passing
+/// protocols over `simnet` (see `crate::distributed`) and produce
+/// bit-identical assignments to their sequential counterparts.
 pub const AVAILABLE: &[&str] = &[
     "none",
     "diff-comm",
     "diff-coord",
+    "dist-diff-comm",
+    "dist-diff-coord",
     "greedy",
     "greedy-refine",
     "metis",
@@ -107,6 +112,8 @@ pub fn make(name: &str, params: StrategyParams) -> Result<Box<dyn LoadBalancer>>
         "none" => Box::new(NoLb),
         "diff-comm" => Box::new(diffusion::Diffusion::communication(params)),
         "diff-coord" => Box::new(diffusion::Diffusion::coordinate(params)),
+        "dist-diff-comm" => Box::new(crate::distributed::DistDiffusion::communication(params)),
+        "dist-diff-coord" => Box::new(crate::distributed::DistDiffusion::coordinate(params)),
         "greedy" => Box::new(greedy::Greedy),
         "greedy-refine" => Box::new(greedy_refine::GreedyRefine { params }),
         "metis" => Box::new(metis::Metis { params }),

@@ -1,11 +1,33 @@
-//! Distributed-protocol validation: the threaded handshake
-//! (simnet::protocol) must produce exactly the pairings of the
-//! round-synchronous sequential model used inside the strategies, over
-//! randomized candidate structures — the evidence that the strategy's
-//! stage 1 faithfully models a real distributed execution.
+//! Distributed-protocol validation.
+//!
+//! Stage 1: the threaded handshake (simnet::protocol) must produce
+//! exactly the pairings of the round-synchronous sequential model used
+//! inside the strategies, over randomized candidate structures.
+//!
+//! Full pipeline: `distributed::DistDiffusion` — stages 1–3 plus
+//! hierarchical refinement, every decision made per-node over real
+//! messages — must produce **bit-identical** `Assignment`s to the
+//! sequential `Diffusion` strategy across seeds, node counts and both
+//! variants; and the node-partitioned distributed PIC driver must
+//! report the same migration counts and modeled communication seconds
+//! as the sequential driver. Together these validate that the
+//! sequential implementation is a faithful model of the distributed
+//! execution (the paper's strategy runs inside Charm++ this way).
+//!
+//! Set `DIFFLB_TEST_NODES` to re-run the pipeline equivalence at a
+//! specific cluster size (CI sweeps {4, 8, 16}).
 
+use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
+use difflb::apps::stencil::{self, Decomposition, StencilSim};
+use difflb::distributed::driver::run_pic_distributed;
+use difflb::distributed::DistDiffusion;
+use difflb::model::{Instance, Topology};
 use difflb::simnet::protocol::distributed_select_neighbors;
-use difflb::strategies::diffusion::neighbor::{select_neighbors, Candidates};
+use difflb::simnet::{Cluster, Comm};
+use difflb::strategies::diffusion::neighbor::{comm_candidates, select_neighbors, Candidates};
+use difflb::strategies::diffusion::{Diffusion, Variant};
+use difflb::strategies::{LoadBalancer, StrategyParams};
 use difflb::util::rng::Rng;
 
 fn random_candidates(n: usize, rng: &mut Rng) -> Candidates {
@@ -36,8 +58,6 @@ fn equivalence_on_random_candidate_sets() {
 
 #[test]
 fn equivalence_under_comm_derived_candidates() {
-    use difflb::apps::stencil::{self, Decomposition};
-    use difflb::strategies::diffusion::neighbor::comm_candidates;
     let mut inst = stencil::stencil_2d(24, 4, 4, Decomposition::Tiled);
     stencil::inject_noise(&mut inst, 0.4, 5);
     let node_map = inst.node_mapping();
@@ -59,4 +79,256 @@ fn larger_cluster_terminates_quickly() {
     let g = distributed_select_neighbors(&cands, 4, 32);
     assert!(g.is_symmetric());
     assert!(t.elapsed().as_secs_f64() < 10.0, "protocol too slow");
+}
+
+// ---------------------------------------------------------------------
+// Full pipeline: bit-identical assignments to the sequential strategy.
+
+fn noisy_stencil(px: usize, py: usize, seed: u64) -> Instance {
+    let mut inst = stencil::stencil_2d(24, px, py, Decomposition::Tiled);
+    stencil::inject_noise(&mut inst, 0.4, seed);
+    inst
+}
+
+fn assert_pipeline_matches(inst: &Instance, variant: Variant, ctx: &str) {
+    let params = StrategyParams::default();
+    let (seq, dist): (Box<dyn LoadBalancer>, DistDiffusion) = match variant {
+        Variant::Communication => (
+            Box::new(Diffusion::communication(params)),
+            DistDiffusion::communication(params),
+        ),
+        Variant::Coordinate => (
+            Box::new(Diffusion::coordinate(params)),
+            DistDiffusion::coordinate(params),
+        ),
+    };
+    let s = seq.rebalance(inst);
+    let d = dist.rebalance(inst);
+    assert_eq!(s.mapping, d.mapping, "{ctx}: distributed pipeline diverged");
+}
+
+#[test]
+fn pipeline_bit_identical_across_seeds_nodes_variants() {
+    for &(px, py) in &[(2usize, 2usize), (4, 2), (4, 4)] {
+        for seed in [11u64, 12, 13] {
+            let inst = noisy_stencil(px, py, seed);
+            for variant in [Variant::Communication, Variant::Coordinate] {
+                assert_pipeline_matches(
+                    &inst,
+                    variant,
+                    &format!("nodes={} seed={seed} {variant:?}", px * py),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_bit_identical_with_pes_per_node() {
+    // Hierarchical topology: 8 nodes x 2 PEs — exercises the §III-D
+    // refinement + PE-assignment exchange.
+    for seed in [21u64, 22] {
+        let base = noisy_stencil(4, 4, seed);
+        let inst = Instance::new(
+            base.loads.clone(),
+            base.coords.clone(),
+            base.graph.clone(),
+            base.mapping.clone(),
+            Topology::new(8, 2),
+        );
+        for variant in [Variant::Communication, Variant::Coordinate] {
+            assert_pipeline_matches(&inst, variant, &format!("8x2 seed={seed} {variant:?}"));
+        }
+    }
+}
+
+#[test]
+fn pipeline_bit_identical_at_env_node_count() {
+    // CI sweeps DIFFLB_TEST_NODES over {4, 8, 16}.
+    let n: usize = std::env::var("DIFFLB_TEST_NODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let mut inst = stencil::stencil_2d(48, n, 1, Decomposition::Tiled);
+    stencil::inject_noise(&mut inst, 0.5, 0xE27 + n as u64);
+    for variant in [Variant::Communication, Variant::Coordinate] {
+        assert_pipeline_matches(&inst, variant, &format!("env nodes={n} {variant:?}"));
+    }
+}
+
+#[test]
+fn pipeline_plan_matches_sequential_intermediates() {
+    let inst = noisy_stencil(4, 2, 31);
+    let params = StrategyParams::default();
+    let (sneigh, squotas) = Diffusion::communication(params).plan(&inst);
+    let (dneigh, dquotas) = DistDiffusion::communication(params).plan(&inst);
+    assert_eq!(sneigh.adj, dneigh.adj, "stage-1 pairings diverged");
+    assert_eq!(squotas, dquotas, "stage-2 quotas diverged");
+}
+
+#[test]
+fn pipeline_tracks_sequential_over_stencil_rounds() {
+    // Multi-round agreement on an evolving workload: apply the
+    // (identical) assignment each round and re-noise the loads.
+    let mut sim = StencilSim::new(24, 4, 2, Decomposition::Tiled, 0.4, 77);
+    let params = StrategyParams::default();
+    let seq = Diffusion::communication(params);
+    let dist = DistDiffusion::communication(params);
+    for round in 0..3 {
+        sim.advance();
+        let s = seq.rebalance(&sim.inst);
+        let d = dist.rebalance(&sim.inst);
+        assert_eq!(s.mapping, d.mapping, "round {round}");
+        sim.apply(&s);
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end distributed PIC: same migrations + modeled comm seconds.
+
+fn pic_cfg(topo: Topology) -> PicConfig {
+    PicConfig {
+        grid: 64,
+        n_particles: 2_000,
+        k: 1,
+        m: 1,
+        init: InitMode::Geometric { rho: 0.9 },
+        chares_x: 4,
+        chares_y: 4,
+        decomp: Decomposition::Striped,
+        topo,
+        q: 1.0,
+        seed: 11,
+        particle_bytes: 48.0,
+        threads: 2,
+    }
+}
+
+fn assert_driver_equivalence(topo: Topology) {
+    let cfg = pic_cfg(topo);
+    let driver = DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        ..Default::default()
+    };
+    let params = StrategyParams::default();
+    let seq = {
+        let mut app = PicApp::new(cfg.clone(), Backend::Native).unwrap();
+        let strat = Diffusion::communication(params);
+        run_pic(&mut app, &strat, &driver).unwrap()
+    };
+    let dist = run_pic_distributed(&cfg, Variant::Communication, params, &driver).unwrap();
+    assert!(seq.verified, "sequential physics failed");
+    assert!(dist.verified, "distributed physics failed");
+    assert_eq!(seq.records.len(), dist.records.len());
+    assert_eq!(seq.total_migrations, dist.total_migrations, "migration totals diverged");
+    for (s, d) in seq.records.iter().zip(&dist.records) {
+        assert_eq!(s.migrations, d.migrations, "iter {}: migrations", s.iter);
+        assert_eq!(s.particles_max_avg, d.particles_max_avg, "iter {}: imbalance", s.iter);
+        assert_eq!(s.comm_max_s, d.comm_max_s, "iter {}: modeled comm max", s.iter);
+        assert_eq!(s.comm_avg_s, d.comm_avg_s, "iter {}: modeled comm avg", s.iter);
+        assert_eq!(s.node_particles, d.node_particles, "iter {}: node particles", s.iter);
+    }
+}
+
+#[test]
+fn distributed_pic_matches_sequential_driver_flat() {
+    assert_driver_equivalence(Topology::flat(4));
+}
+
+#[test]
+fn distributed_pic_matches_sequential_driver_hierarchical() {
+    assert_driver_equivalence(Topology::new(2, 2));
+}
+
+#[test]
+fn distributed_pic_verifies_without_lb() {
+    // lb_period 0: pure distributed stepping + exchange, no pipeline.
+    let cfg = pic_cfg(Topology::flat(4));
+    let driver = DriverConfig { iters: 10, lb_period: 0, ..Default::default() };
+    let rep =
+        run_pic_distributed(&cfg, Variant::Communication, StrategyParams::default(), &driver)
+            .unwrap();
+    assert!(rep.verified);
+    assert_eq!(rep.total_migrations, 0);
+    assert_eq!(rep.records.len(), 10);
+}
+
+// ---------------------------------------------------------------------
+// simnet semantics: out-of-phase buffering, barrier, termination.
+
+#[test]
+fn recv_tagged_survives_randomized_interleavings() {
+    // Each rank sends every peer one message per phase, in a
+    // rank-seeded shuffled phase order; receivers drain phases in
+    // canonical order. The pending buffer must deliver every message to
+    // its phase regardless of the interleaving. Multiple seeds.
+    const PHASES: u32 = 5;
+    for seed in [1u64, 2, 3, 4] {
+        let ok = Cluster::run(4, move |rank, mut comm| {
+            let mut rng = Rng::new(seed * 1000 + rank as u64);
+            let mut order: Vec<u32> = (0..PHASES).collect();
+            rng.shuffle(&mut order);
+            for &ph in &order {
+                for to in 0..4u32 {
+                    if to != rank {
+                        comm.send(to, 0x0900_0000 | ph, vec![rank as u8, ph as u8]);
+                    }
+                }
+            }
+            for ph in 0..PHASES {
+                let msgs = comm.recv_tagged(0x0900_0000 | ph, 3, Comm::TIMEOUT);
+                if msgs.len() != 3 || msgs.iter().any(|m| m.data[1] != ph as u8) {
+                    return false;
+                }
+            }
+            true
+        });
+        assert!(ok.iter().all(|&b| b), "seed {seed}");
+    }
+}
+
+#[test]
+fn barrier_separates_phases() {
+    // After barrier i completes, every rank's phase-i token must
+    // already be deliverable — the barrier is a true synchronization
+    // point, not advisory.
+    let ok = Cluster::run(3, |rank, mut comm| {
+        for phase in 0..3u32 {
+            for to in 0..3u32 {
+                if to != rank {
+                    comm.send(to, 0x0A00_0000 | phase, vec![phase as u8]);
+                }
+            }
+            comm.barrier(0x0B00_0000 | phase);
+            // mpsc preserves per-sender order: each peer's token was
+            // sent before its barrier announcement, so both are already
+            // queued (or parked) once the barrier completes.
+            let msgs =
+                comm.recv_tagged(0x0A00_0000 | phase, 2, std::time::Duration::from_secs(5));
+            if msgs.len() != 2 {
+                return false;
+            }
+        }
+        true
+    });
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn cluster_returns_results_in_rank_order() {
+    let r = Cluster::run(6, |rank, _comm| rank * 10);
+    assert_eq!(r, vec![0, 10, 20, 30, 40, 50]);
+}
+
+#[test]
+#[should_panic(expected = "simnode panicked")]
+fn cluster_propagates_worker_panics() {
+    Cluster::run(3, |rank, _comm| {
+        if rank == 1 {
+            panic!("worker died");
+        }
+        rank
+    });
 }

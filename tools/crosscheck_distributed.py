@@ -1,0 +1,399 @@
+#!/usr/bin/env python3
+"""Cross-simulation of the distributed LB protocols vs the sequential model.
+
+The build container ships no Rust toolchain (EXPERIMENTS.md §Perf
+provenance), so — like tools/crosscheck_refactor.py did for the
+zero-allocation refactor — this script mirrors the decision logic of
+both implementations in Python (IEEE-754 doubles, same operation
+orders) and asserts the distributed protocols' outcomes are bit-equal
+to the sequential model's:
+
+  1. stage 2: the per-node virtual-LB protocol (load exchange, local
+     transfer application in sender-rank order, DONE-bit reduction with
+     the root-reconstructed exact `moved` sum, symmetric per-pair net
+     tracking) vs the sequential fixed point of virtual_lb.rs —
+     compares net flow rows AND iteration counts bitwise.
+  2. stage 3: the rank-ordered manifest wavefront (fresh per-node
+     state, lower-rank manifests replayed before picking) vs the
+     sequential sweep of object_selection.rs with its shared
+     moved/by_node state — compares final object→node maps and
+     manifests exactly.
+
+Run: python3 tools/crosscheck_distributed.py
+"""
+import heapq
+import random
+
+
+# ----------------------------------------------------------------- rng
+def ring_graph(n, h):
+    adj = []
+    for i in range(n):
+        s = set()
+        for d in range(1, h + 1):
+            s.add((i + d) % n)
+            s.add((i - d) % n)
+        s.discard(i)
+        adj.append(sorted(s))
+    return adj
+
+
+# ------------------------------------------------- stage 2: sequential
+# Mirrors virtual_balance_with in rust/src/strategies/diffusion/virtual_lb.rs
+def seq_virtual_balance(adj, loads, tol, max_iters):
+    n = len(loads)
+    global_avg = sum_ltr(loads) / max(n, 1)
+    if global_avg <= 0.0:
+        return [[] for _ in range(n)], 0
+    alpha = 1.0 / (max(map(len, adj), default=0) + 1)
+    own = list(loads)
+    recv = [0.0] * n
+    # net flow per unordered pair, stored at smaller endpoint: key (a,b)
+    net = {}
+    iterations = 0
+    for it in range(max_iters):
+        iterations = it + 1
+        cur = [own[i] + recv[i] for i in range(n)]
+        sends = []
+        for i in range(n):
+            want = 0.0
+            for j in adj[i]:
+                diff = cur[i] - cur[j]
+                if diff > 0.0:
+                    want += alpha * diff
+            if want <= 0.0:
+                continue
+            scale = own[i] / want if want > own[i] else 1.0
+            if scale <= 0.0:
+                continue
+            for j in adj[i]:
+                diff = cur[i] - cur[j]
+                if diff > 0.0:
+                    amt = alpha * diff
+                    sends.append((i, j, amt * scale))
+        moved = 0.0
+        for (i, j, amt) in sends:
+            own[i] -= amt
+            recv[j] += amt
+            a, b, sign = (i, j, 1.0) if i < j else (j, i, -1.0)
+            net[(a, b)] = net.get((a, b), 0.0) + sign * amt
+            moved += amt
+        if seq_converged(adj, own, recv, global_avg, tol) or moved <= tol * global_avg * 1e-3:
+            break
+    flows = [[] for _ in range(n)]
+    for a in range(n):
+        for b in adj[a]:
+            if a >= b:
+                continue
+            f = net.get((a, b), 0.0)
+            if f > 1e-12:
+                flows[a].append((b, f))
+            elif f < -1e-12:
+                flows[b].append((a, -f))
+    for row in flows:
+        row.sort(key=lambda e: e[0])
+    return flows, iterations
+
+
+def seq_converged(adj, own, recv, global_avg, tol):
+    for i in range(len(adj)):
+        if not adj[i]:
+            continue
+        cur_i = own[i] + recv[i]
+        lo = hi = cur_i
+        for j in adj[i]:
+            c = own[j] + recv[j]
+            lo = min(lo, c)
+            hi = max(hi, c)
+        if (hi - lo) / global_avg > tol:
+            return False
+    return True
+
+
+def sum_ltr(xs):
+    s = 0.0
+    for x in xs:
+        s += x
+    return s
+
+
+# ------------------------------------------------ stage 2: distributed
+# Mirrors virtual_balance_node in rust/src/distributed/stage2.rs: each
+# node holds only (own, recv, per-neighbor net); per sweep it exchanges
+# load scalars, applies incoming transfers sorted by sender rank, and
+# rank 0 reconstructs the exact moved sum from raw per-send amounts in
+# (rank, adjacency) order. The stop decision of sweep r happens at the
+# top of sweep r+1, as in the protocol.
+def dist_virtual_balance(adj, loads, tol, max_iters):
+    n = len(loads)
+    # setup reduction at rank 0: sum loads ascending by rank
+    total = loads[0] if n else 0.0
+    for r in range(1, n):
+        total += loads[r]
+    global_avg = total / max(n, 1)
+    if global_avg <= 0.0:
+        return [[] for _ in range(n)], 0
+    alpha = 1.0 / (max(map(len, adj), default=0) + 1)
+    own = list(loads)          # own[i] is node i's private scalar
+    recv = [0.0] * n
+    net = [[0.0] * len(adj[i]) for i in range(n)]  # node i's view, sign: +i sends
+    iterations = [0] * n
+    moved_prev = 0.0           # root state
+    stopped = False
+    for sweep in range(max_iters):
+        cur = [own[i] + recv[i] for i in range(n)]  # the LOAD exchange snapshot
+        if sweep > 0:
+            # per-node conv bits over the freshly exchanged snapshot
+            bits = []
+            for i in range(n):
+                if not adj[i]:
+                    bits.append(True)
+                    continue
+                lo = hi = cur[i]
+                for j in adj[i]:
+                    lo = min(lo, cur[j])
+                    hi = max(hi, cur[j])
+                bits.append((hi - lo) / global_avg <= tol)
+            stop = all(bits) or moved_prev <= tol * global_avg * 1e-3
+            if stop:
+                stopped = True
+                break
+        for i in range(n):
+            iterations[i] = sweep + 1
+        # each node plans locally (zero amounts are sent but are no-ops)
+        amts = []
+        movs = []
+        for i in range(n):
+            a_i = [0.0] * len(adj[i])
+            mov_i = []
+            want = 0.0
+            for idx, j in enumerate(adj[i]):
+                diff = cur[i] - cur[j]
+                if diff > 0.0:
+                    want += alpha * diff
+            if want > 0.0:
+                scale = own[i] / want if want > own[i] else 1.0
+                if scale > 0.0:
+                    for idx, j in enumerate(adj[i]):
+                        diff = cur[i] - cur[j]
+                        if diff > 0.0:
+                            amt = alpha * diff * scale
+                            a_i[idx] = amt
+                            mov_i.append(amt)
+            amts.append(a_i)
+            movs.append(mov_i)
+        # apply own sends in adjacency order
+        for i in range(n):
+            for idx in range(len(adj[i])):
+                own[i] -= amts[i][idx]
+                net[i][idx] += amts[i][idx]
+        # apply incoming transfers in ascending sender order
+        for i in range(n):
+            for idx, j in enumerate(adj[i]):  # adj sorted => sender-rank order
+                jidx = adj[j].index(i)
+                amt = amts[j][jidx]
+                recv[i] += amt
+                net[i][idx] -= amt
+        # root reconstructs moved from raw amounts in (rank, adj) order
+        moved = 0.0
+        for r in range(n):
+            for amt in movs[r]:
+                moved += amt
+        moved_prev = moved
+    assert len(set(iterations)) <= 1 or stopped, "nodes disagree on sweeps"
+    flows = []
+    for i in range(n):
+        row = [(j, net[i][idx]) for idx, j in enumerate(adj[i]) if net[i][idx] > 1e-12]
+        flows.append(row)
+    return flows, iterations[0] if n else 0
+
+
+# ------------------------------------------------- stage 3: shared body
+# Mirrors select_comm_node in object_selection.rs. BinaryHeap<Entry>
+# always pops the cmp-maximum (total order: key desc, tie asc, obj desc
+# inverted -> larger obj last), which heapq reproduces with negated
+# keys.
+def heap_push(h, key, tie, obj):
+    heapq.heappush(h, (-key, tie, -obj))
+
+
+def heap_pop(h):
+    k, t, o = heapq.heappop(h)
+    return -k, t, -o
+
+
+def quota_floor(loads, n_nodes):
+    return 0.01 * sum_ltr(loads) / max(n_nodes, 1)
+
+
+def select_comm_node(graph, loads, node_map, i, row, floor, overfill, by_node, moved,
+                     manifest):
+    targets = sorted(
+        [(j, a) for (j, a) in row if a >= floor],
+        key=lambda e: (-e[1], e[0]),
+    )
+    migrations = 0
+    if not targets:
+        return 0
+    pool = [o for o in by_node[i] if node_map[o] == i and not moved[o]]
+    bytes_to_j = {}
+    for (j, quota) in targets:
+        remaining = quota
+        h = []
+        bytes_to_j.clear()  # epoch bump
+        for o in pool:
+            if moved[o] or node_map[o] != i:
+                continue
+            bj = 0.0
+            local = 0.0
+            for (p, w) in graph[o]:
+                pn = node_map[p]
+                if pn == j:
+                    bj += w
+                elif pn == i:
+                    local += w
+            bytes_to_j[o] = bj
+            heap_push(h, bj, local, o)
+        while remaining > 1e-12:
+            if not h:
+                break
+            key, tie, o = heap_pop(h)
+            if moved[o] or node_map[o] != i:
+                continue
+            cur = bytes_to_j[o]
+            if abs(cur - key) > 1e-9:
+                heap_push(h, cur, tie, o)
+                continue
+            load = loads[o]
+            if not (remaining > 0.0 and load * (1.0 - overfill) <= remaining):
+                continue
+            node_map[o] = j
+            moved[o] = True
+            migrations += 1
+            remaining -= load
+            manifest.append((o, j))
+            for (p, w) in graph[o]:
+                if node_map[p] == i and not moved[p] and p in bytes_to_j:
+                    bytes_to_j[p] += w
+                    heap_push(h, bytes_to_j[p], 0.0, p)
+    return migrations
+
+
+def seq_select(graph, loads, node_map0, flows, floor, overfill, n_nodes):
+    node_map = list(node_map0)
+    moved = [False] * len(loads)
+    by_node = [[] for _ in range(n_nodes)]
+    for o, nm in enumerate(node_map):
+        by_node[nm].append(o)
+    manifests = []
+    for i in range(n_nodes):
+        m = []
+        select_comm_node(graph, loads, node_map, i, flows[i], floor, overfill,
+                         by_node, moved, m)
+        manifests.append(m)
+    return node_map, manifests
+
+
+def dist_select(graph, loads, node_map0, flows, floor, overfill, n_nodes):
+    """Each 'node' starts from fresh replicas and replays lower-rank
+    manifests before picking — the stage-3 wavefront."""
+    manifests = []
+    final_maps = []
+    for rank in range(n_nodes):
+        node_map = list(node_map0)           # fresh replica
+        moved = [False] * len(loads)
+        by_node = [[] for _ in range(n_nodes)]
+        for o, nm in enumerate(node_map):
+            by_node[nm].append(o)
+        for h in range(rank):                # wavefront in
+            for (o, dest) in manifests[h]:
+                node_map[o] = dest
+                moved[o] = True
+        m = []
+        select_comm_node(graph, loads, node_map, rank, flows[rank], floor,
+                         overfill, by_node, moved, m)
+        manifests.append(m)
+        final_maps.append(node_map)
+    # complete every replica with the remaining manifests
+    for rank in range(n_nodes):
+        for h in range(rank + 1, n_nodes):
+            for (o, dest) in manifests[h]:
+                final_maps[rank][o] = dest
+    for rank in range(1, n_nodes):
+        assert final_maps[rank] == final_maps[0], f"replica {rank} diverged"
+    return final_maps[0], manifests
+
+
+# ---------------------------------------------------------------- main
+def random_instance(rng, n_nodes, objs_per_node):
+    n = n_nodes * objs_per_node
+    node_map = [o // objs_per_node for o in range(n)]
+    loads = [rng.uniform(0.2, 3.0) for _ in range(n)]
+    graph = [[] for _ in range(n)]
+    for o in range(n):
+        nbr = (o + 1) % n
+        w = float(rng.randint(1, 8) * 16)
+        graph[o].append((nbr, w))
+        graph[nbr].append((o, w))
+    for _ in range(n // 3):
+        a = rng.randrange(n)
+        b = rng.randrange(n)
+        if a != b:
+            w = float(rng.randint(1, 8) * 16)
+            graph[a].append((b, w))
+            graph[b].append((a, w))
+    for row in graph:
+        row.sort()
+    return loads, graph, node_map
+
+
+def main():
+    rng = random.Random(0xD15B)
+
+    s2_trials = 200
+    for t in range(s2_trials):
+        n = rng.randint(2, 24)
+        h = rng.randint(1, 3)
+        adj = ring_graph(n, h)
+        loads = [rng.uniform(0.0, 10.0) for _ in range(n)]
+        if t % 7 == 0:
+            loads = [0.0] * n  # zero-load short circuit
+        if t % 5 == 0:
+            adj[rng.randrange(n)] = []  # hmm: must stay symmetric
+            adj = symmetrize(adj)
+        tol = rng.choice([0.02, 0.05, 0.2])
+        iters = rng.choice([1, 3, 50, 300])
+        sf, si = seq_virtual_balance(adj, loads, tol, iters)
+        df, di = dist_virtual_balance(adj, loads, tol, iters)
+        assert si == di, f"stage2 trial {t}: iterations {si} != {di}"
+        assert sf == df, f"stage2 trial {t}: flows diverged\n{sf}\n{df}"
+    print(f"stage2: {s2_trials}/{s2_trials} trials bit-identical (flows + iterations)")
+
+    s3_trials = 120
+    for t in range(s3_trials):
+        n_nodes = rng.choice([2, 4, 8])
+        loads, graph, node_map = random_instance(rng, n_nodes, rng.randint(3, 10))
+        adj = ring_graph(n_nodes, 1 if n_nodes <= 4 else 2)
+        sflows, _ = seq_virtual_balance(adj, [sum_ltr([loads[o] for o in range(len(loads)) if node_map[o] == i]) for i in range(n_nodes)], 0.05, 200)
+        floor = quota_floor(loads, n_nodes)
+        overfill = rng.choice([0.0, 0.5])
+        smap, sman = seq_select(graph, loads, node_map, sflows, floor, overfill, n_nodes)
+        dmap, dman = dist_select(graph, loads, node_map, sflows, floor, overfill, n_nodes)
+        assert smap == dmap, f"stage3 trial {t}: maps diverged"
+        assert sman == dman, f"stage3 trial {t}: manifests diverged"
+    print(f"stage3: {s3_trials}/{s3_trials} trials identical (maps + manifests)")
+
+
+def symmetrize(adj):
+    n = len(adj)
+    sets = [set() for _ in range(n)]
+    for i in range(n):
+        for j in adj[i]:
+            if i in (set(adj[j]) if adj[j] else set()):
+                sets[i].add(j)
+                sets[j].add(i)
+    return [sorted(s) for s in sets]
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@
 //! The same run is available from the CLI:
 //! `difflb run-pic --mode distributed --set run.deterministic_loads=true`
 
-use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::driver::{run_app, DriverConfig};
 use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
 use difflb::apps::stencil::Decomposition;
 use difflb::distributed::driver::run_pic_distributed;
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let seq = {
         let mut app = PicApp::new(cfg, Backend::Native)?;
         let strat = Diffusion::communication(params);
-        run_pic(&mut app, &strat, &driver)?
+        run_app(&mut app, &strat, &driver)?
     };
     println!("{}", seq.summary_line("diff-comm"));
 

@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::driver::{run_app, DriverConfig};
 use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
 use difflb::apps::stencil::Decomposition;
 use difflb::model::Topology;
@@ -84,20 +84,20 @@ fn main() -> anyhow::Result<()> {
     );
     let mut csv = CsvWriter::create(
         out_path("pic_prk_series.csv")?,
-        &["strategy", "iter", "particles_max_avg", "compute_max_s", "comm_max_s", "lb_s"],
+        &["strategy", "iter", "work_max_avg", "compute_max_s", "comm_max_s", "lb_s"],
     )?;
 
     for name in ["none", "greedy-refine", "diff-coord", "diff-comm"] {
         let strat = make(name, StrategyParams::default())?;
         let mut app = PicApp::new(mk_cfg(), backend.clone())?;
-        let rep = run_pic(&mut app, strat.as_ref(), &driver)?;
-        let avg_ratio = rep.records.iter().map(|r| r.particles_max_avg).sum::<f64>()
+        let rep = run_app(&mut app, strat.as_ref(), &driver)?;
+        let avg_ratio = rep.records.iter().map(|r| r.work_max_avg).sum::<f64>()
             / rep.records.len() as f64;
         for r in &rep.records {
             csv.row(&[
                 &name,
                 &r.iter,
-                &r.particles_max_avg,
+                &r.work_max_avg,
                 &r.compute_max_s,
                 &r.comm_max_s,
                 &r.lb_s,

@@ -1,0 +1,113 @@
+//! Bench smoke for the App-trait workloads — tracks the two new
+//! applications (streamline advection and the drifting hotspot) the
+//! same way `perf_hotpaths` tracks the core paths, so BENCH numbers
+//! start covering them: per-step throughput plus a short full run
+//! through the generic driver under the diffusion strategy.
+//!
+//! Writes `BENCH_apps.json` (override with `DIFFLB_BENCH_JSON`; shrink
+//! the per-path budget with `DIFFLB_BENCH_BUDGET_MS`).
+
+use std::time::Duration;
+
+use difflb::apps::advect::{Advect, AdvectConfig};
+use difflb::apps::driver::{run_app, DriverConfig};
+use difflb::apps::hotspot::{Hotspot, HotspotConfig};
+use difflb::apps::{App, StepCtx};
+use difflb::model::Topology;
+use difflb::strategies::{make, StrategyParams};
+use difflb::util::bench::{time_fn, JsonReport, Timing};
+
+struct Report {
+    json: JsonReport,
+}
+
+impl Report {
+    fn record(&mut self, t: &Timing, throughput: Option<(&str, f64)>) {
+        let extra = match throughput {
+            Some((unit, v)) => format!("{v:.1} {unit}"),
+            None => String::new(),
+        };
+        println!("{}  {extra}", t.report());
+        self.json.add(t, throughput);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let budget_ms: u64 = std::env::var("DIFFLB_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let budget = Duration::from_millis(budget_ms);
+    let mut rep = Report { json: JsonReport::new() };
+
+    // ---------- advect: per-step integration throughput
+    let n_particles = 100_000;
+    let mut advect = Advect::new(AdvectConfig {
+        n_particles,
+        blocks_x: 16,
+        blocks_y: 16,
+        topo: Topology::flat(16),
+        ..Default::default()
+    })?;
+    let mut ctx = StepCtx::default();
+    let t = time_fn(&format!("advect app.step ({n_particles} particles)"), budget, || {
+        ctx.moved.clear();
+        advect.step(&mut ctx).unwrap().events
+    });
+    rep.record(&t, Some(("Mparticles/s", n_particles as f64 / t.mean_s / 1e6)));
+
+    // ---------- advect: short full run through the generic driver
+    let driver = DriverConfig { iters: 10, lb_period: 5, ..Default::default() };
+    let t = time_fn("advect run_app 10 iters diff-comm (20k particles)", budget, || {
+        let mut app = Advect::new(AdvectConfig {
+            blocks_x: 8,
+            blocks_y: 8,
+            topo: Topology::flat(4),
+            ..Default::default()
+        })
+        .unwrap();
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        run_app(&mut app, strat.as_ref(), &driver).unwrap().total_migrations
+    });
+    rep.record(&t, None);
+
+    // ---------- hotspot: per-step load evaluation throughput
+    let mut hotspot = Hotspot::new(HotspotConfig {
+        nx: 64,
+        ny: 64,
+        topo: Topology::flat(16),
+        ..Default::default()
+    })?;
+    let n_objs = 64 * 64;
+    let mut ctx = StepCtx::default();
+    let t = time_fn(&format!("hotspot app.step ({n_objs} objects)"), budget, || {
+        ctx.moved.clear();
+        hotspot.step(&mut ctx).unwrap().events
+    });
+    rep.record(&t, Some(("Mobj/s", n_objs as f64 / t.mean_s / 1e6)));
+
+    // ---------- hotspot: short full run (the stale-assignment chaser)
+    let t = time_fn("hotspot run_app 20 iters diff-comm (16x16)", budget, || {
+        let mut app = Hotspot::new(HotspotConfig::default()).unwrap();
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        let driver = DriverConfig {
+            iters: 20,
+            lb_period: 5,
+            deterministic_loads: true,
+            ..Default::default()
+        };
+        run_app(&mut app, strat.as_ref(), &driver).unwrap().total_migrations
+    });
+    rep.record(&t, None);
+
+    let out = std::env::var("DIFFLB_BENCH_JSON").unwrap_or_else(|_| {
+        format!("{}/../BENCH_apps.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let label = format!(
+        "apps_workloads budget={budget_ms}ms threads={}",
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    );
+    rep.json.write(&out, &label)?;
+    println!("wrote {out} ({} paths)", rep.json.len());
+    Ok(())
+}

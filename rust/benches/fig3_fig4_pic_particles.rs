@@ -9,7 +9,7 @@
 //!
 //! Outputs: out/fig3.csv, out/fig4.csv + summary table.
 
-use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::driver::{run_app, DriverConfig};
 use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
 use difflb::apps::stencil::Decomposition;
 use difflb::model::Topology;
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         let mut app = PicApp::new(base.clone(), Backend::Native)?;
         let strat = make("none", StrategyParams::default())?;
         let driver = DriverConfig { iters: 200, lb_period: 0, ..Default::default() };
-        let rep = run_pic(&mut app, strat.as_ref(), &driver)?;
+        let rep = run_app(&mut app, strat.as_ref(), &driver)?;
         anyhow::ensure!(rep.verified, "fig3 physics verification failed");
         let mut csv = CsvWriter::create(
             out_path("fig3.csv")?,
@@ -56,10 +56,10 @@ fn main() -> anyhow::Result<()> {
         for r in &rep.records {
             csv.row(&[
                 &r.iter,
-                &r.node_particles[0],
-                &r.node_particles[1],
-                &r.node_particles[2],
-                &r.node_particles[3],
+                &r.node_work[0],
+                &r.node_work[1],
+                &r.node_work[2],
+                &r.node_work[3],
             ])?;
         }
         csv.flush()?;
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         let peak_iter = |pe: usize| {
             rep.records
                 .iter()
-                .max_by_key(|r| r.node_particles[pe])
+                .max_by(|a, b| a.node_work[pe].total_cmp(&b.node_work[pe]))
                 .map(|r| r.iter)
                 .unwrap_or(0)
         };
@@ -87,9 +87,9 @@ fn main() -> anyhow::Result<()> {
         for name in names {
             let mut app = PicApp::new(base.clone(), Backend::Native)?;
             let strat = make(name, params)?;
-            let rep = run_pic(&mut app, strat.as_ref(), &driver)?;
+            let rep = run_app(&mut app, strat.as_ref(), &driver)?;
             anyhow::ensure!(rep.verified, "fig4 physics verification failed under {name}");
-            series.push(rep.records.iter().map(|r| r.particles_max_avg).collect());
+            series.push(rep.records.iter().map(|r| r.work_max_avg).collect());
         }
         let mut csv = CsvWriter::create(
             out_path("fig4.csv")?,

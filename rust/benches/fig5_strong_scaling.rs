@@ -13,7 +13,7 @@
 //! GreedyRefine everywhere with the gap widening at scale (paper: 2x
 //! over GreedyRefine and 7x over no-LB at 8 nodes).
 
-use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::driver::{run_app, DriverConfig};
 use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
 use difflb::apps::stencil::Decomposition;
 use difflb::model::Topology;
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         for name in ["none", "greedy-refine", "diff-comm"] {
             let mut app = PicApp::new(mk(0x515), Backend::Native)?;
             let strat = make(name, StrategyParams::default())?;
-            let rep = run_pic(&mut app, strat.as_ref(), &driver)?;
+            let rep = run_app(&mut app, strat.as_ref(), &driver)?;
             anyhow::ensure!(rep.verified, "fig5 verification failed: {name}/{nodes}");
             if name == "none" {
                 none_total = rep.total_s;

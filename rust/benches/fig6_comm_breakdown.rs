@@ -8,7 +8,7 @@
 //!
 //! Outputs: out/fig6_<strategy>.csv + summary ratios.
 
-use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::driver::{run_app, DriverConfig};
 use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
 use difflb::apps::stencil::Decomposition;
 use difflb::model::Topology;
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         };
         let mut app = PicApp::new(cfg, Backend::Native)?;
         let strat = make(name, StrategyParams::default())?;
-        let rep = run_pic(&mut app, strat.as_ref(), &driver)?;
+        let rep = run_app(&mut app, strat.as_ref(), &driver)?;
         anyhow::ensure!(rep.verified, "fig6 verification failed under {name}");
         let mut csv = CsvWriter::create(
             out_path(&format!("fig6_{name}.csv"))?,

@@ -15,6 +15,7 @@ use difflb::apps::pic::init::{initialize, InitMode};
 use difflb::apps::pic::push::native_push;
 use difflb::apps::pic::{Backend, PicApp, PicConfig};
 use difflb::apps::stencil::{self, Decomposition, StencilSim};
+use difflb::apps::{App, StepCtx};
 use difflb::model::{evaluate_mapping, Topology};
 use difflb::runtime::{Engine, Manifest, PicBatch};
 use difflb::strategies::diffusion::{neighbor, virtual_lb, Diffusion};
@@ -122,9 +123,13 @@ fn main() -> anyhow::Result<()> {
 
     // ---------- incremental comm-graph refresh between LB rounds
     let mut sim = StencilSim::new(96, 8, 8, Decomposition::Tiled, 0.4, 3);
-    sim.advance(); // warm: structure established
+    let mut ctx = StepCtx::default();
+    sim.step(&mut ctx)?;
+    sim.refresh_graph(); // warm: structure established
     let t = time_fn("comm graph incremental refresh (9216 obj)", budget, || {
-        sim.advance()
+        ctx.moved.clear();
+        sim.step(&mut ctx).unwrap();
+        sim.refresh_graph()
     });
     rep.record(&t, None);
 
@@ -139,8 +144,10 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let mut app = PicApp::new(cfg, Backend::Native)?;
+    let mut ctx = StepCtx::default();
     let t = time_fn("pic app.step (200k particles)", budget, || {
-        app.step().unwrap().crossers
+        ctx.moved.clear();
+        app.step(&mut ctx).unwrap().events
     });
     let mps = 200_000.0 / t.mean_s / 1e6;
     rep.record(&t, Some(("Mparticles/s", mps)));

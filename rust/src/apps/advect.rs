@@ -1,0 +1,420 @@
+//! Streamline particle advection with flow-dependent per-block cost —
+//! the distributed-particle-advection workload of Demiralp et al.
+//! (arXiv:2208.07553) as an [`App`].
+//!
+//! A steady, incompressible double-gyre flow over the square domain
+//! `[0, L)²` carries tracer particles along streamlines. The domain is
+//! split into `blocks_x x blocks_y` blocks (the migratable objects);
+//! a particle's integration cost depends on the local flow speed (fast
+//! regions need more substeps — the adaptive step-size refinement real
+//! tracers pay), so per-block cost is *flow-dependent*, not just a
+//! particle count. Particles are seeded as a blob inside one gyre and
+//! orbit it forever: the load peak circulates through the block grid,
+//! blocks keep exchanging particles, and the communication graph stays
+//! persistent — exactly the regime the diffusion balancer targets.
+//!
+//! The flow is tangent to every domain boundary (stream function
+//! `ψ = A·sin(2πx/L)·sin(πy/L)` vanishes on the walls), so particles
+//! never leave the domain; [`App::verify`] checks conservation.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::app::{App, StepCtx, StepStats};
+use crate::apps::stencil::Decomposition;
+use crate::model::{Assignment, CommGraph, Instance, Topology, TrafficRecorder};
+use crate::util::rng::Rng;
+
+/// Bytes charged per block-pair sync message per step.
+pub const SYNC_BYTES: f64 = 16.0;
+
+/// Advection workload configuration.
+#[derive(Debug, Clone)]
+pub struct AdvectConfig {
+    /// Square domain side L; positions live in [0, L).
+    pub domain: f64,
+    pub blocks_x: usize,
+    pub blocks_y: usize,
+    pub n_particles: usize,
+    /// Base integration step per app iteration.
+    pub dt: f64,
+    /// Flow amplitude A (peak speed is 2A).
+    pub amplitude: f64,
+    /// Cost cap: particles in the fastest flow integrate with this many
+    /// substeps; slow regions use 1.
+    pub max_substeps: u32,
+    /// Initial block → PE decomposition.
+    pub decomp: Decomposition,
+    pub topo: Topology,
+    pub seed: u64,
+    /// Bytes to move one particle between blocks (comm accounting).
+    pub particle_bytes: f64,
+}
+
+impl Default for AdvectConfig {
+    fn default() -> Self {
+        AdvectConfig {
+            domain: 1.0,
+            blocks_x: 8,
+            blocks_y: 8,
+            n_particles: 20_000,
+            dt: 0.02,
+            amplitude: 1.0,
+            max_substeps: 4,
+            decomp: Decomposition::Striped,
+            topo: Topology::flat(4),
+            seed: 0xADEC7,
+            particle_bytes: 32.0,
+        }
+    }
+}
+
+/// Double-gyre velocity at (x, y): `u = ∂ψ/∂y`, `v = -∂ψ/∂x` for
+/// `ψ = A·(L/π)·sin(2πx/L)·sin(πy/L)` (the L/π factor folded so speeds
+/// are O(A)). Incompressible; tangent to all four walls.
+#[inline]
+pub fn velocity(l: f64, a: f64, x: f64, y: f64) -> (f64, f64) {
+    let px = 2.0 * std::f64::consts::PI * x / l;
+    let py = std::f64::consts::PI * y / l;
+    (a * px.sin() * py.cos(), -2.0 * a * px.cos() * py.sin())
+}
+
+/// Streamline advection as a first-class [`App`].
+pub struct Advect {
+    pub cfg: AdvectConfig,
+    /// Particle positions.
+    x: Vec<f64>,
+    y: Vec<f64>,
+    /// Current block of each particle.
+    block_of: Vec<u32>,
+    /// Current block → PE mapping.
+    pub block_to_pe: Vec<u32>,
+    /// Block↔block traffic since the last LB step.
+    traffic: TrafficRecorder,
+    comm_cache: CommGraph,
+    neighbor_pairs: Vec<(u32, u32)>,
+    steps_since_lb: usize,
+    /// Per-block integration substeps of the latest step (the
+    /// flow-dependent work signal).
+    step_work: Vec<f64>,
+    /// Per-block accumulated measured seconds since the last LB step.
+    load_acc: Vec<f64>,
+    pub steps_done: usize,
+}
+
+impl Advect {
+    pub fn new(cfg: AdvectConfig) -> Result<Advect> {
+        anyhow::ensure!(cfg.domain > 0.0, "domain must be positive");
+        anyhow::ensure!(cfg.amplitude > 0.0, "amplitude must be positive");
+        anyhow::ensure!(cfg.max_substeps >= 1, "max_substeps must be >= 1");
+        anyhow::ensure!(cfg.blocks_x >= 1 && cfg.blocks_y >= 1, "empty block grid");
+        let n_blocks = cfg.blocks_x * cfg.blocks_y;
+        // Seed a Gaussian blob inside the left gyre (center L/4, L/2):
+        // it orbits the gyre forever, dragging the load peak through
+        // the block grid.
+        let mut rng = Rng::new(cfg.seed);
+        let (cx, cy) = (0.25 * cfg.domain, 0.5 * cfg.domain);
+        let sigma = 0.1 * cfg.domain;
+        let mut x = Vec::with_capacity(cfg.n_particles);
+        let mut y = Vec::with_capacity(cfg.n_particles);
+        while x.len() < cfg.n_particles {
+            let px = cx + sigma * rng.normal();
+            let py = cy + sigma * rng.normal();
+            if (0.0..cfg.domain).contains(&px) && (0.0..cfg.domain).contains(&py) {
+                x.push(px);
+                y.push(py);
+            }
+        }
+        let block_of: Vec<u32> =
+            x.iter().zip(&y).map(|(&px, &py)| block_of_pos(&cfg, px, py)).collect();
+        let block_to_pe =
+            crate::apps::grid_mapping(cfg.blocks_x, cfg.blocks_y, cfg.topo.n_pes(), cfg.decomp);
+        let neighbor_pairs = crate::apps::grid_neighbor_pairs(cfg.blocks_x, cfg.blocks_y, false);
+        Ok(Advect {
+            x,
+            y,
+            block_of,
+            block_to_pe,
+            traffic: TrafficRecorder::new(n_blocks),
+            comm_cache: CommGraph::empty(n_blocks),
+            neighbor_pairs,
+            steps_since_lb: 0,
+            step_work: vec![0.0; n_blocks],
+            load_acc: vec![0.0; n_blocks],
+            steps_done: 0,
+            cfg,
+        })
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.cfg.blocks_x * self.cfg.blocks_y
+    }
+
+    /// Substep count for a particle at (x, y): 1 in still flow up to
+    /// `max_substeps` at peak speed (2A) — deterministic in position.
+    #[inline]
+    fn substeps(&self, x: f64, y: f64) -> u32 {
+        let (u, v) = velocity(self.cfg.domain, self.cfg.amplitude, x, y);
+        let speed = (u * u + v * v).sqrt();
+        let frac = (speed / (2.0 * self.cfg.amplitude)).min(1.0);
+        1 + (frac * (self.cfg.max_substeps - 1) as f64).round() as u32
+    }
+
+    pub fn block_particle_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.n_blocks()];
+        for &b in &self.block_of {
+            counts[b as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Block owning position (x, y) under `cfg` — free function, mirroring
+/// [`crate::apps::pic::chare_of_pos`].
+#[inline]
+pub fn block_of_pos(cfg: &AdvectConfig, x: f64, y: f64) -> u32 {
+    let bw = cfg.domain / cfg.blocks_x as f64;
+    let bh = cfg.domain / cfg.blocks_y as f64;
+    let bx = ((x / bw) as usize).min(cfg.blocks_x - 1);
+    let by = ((y / bh) as usize).min(cfg.blocks_y - 1);
+    (by * cfg.blocks_x + bx) as u32
+}
+
+impl App for Advect {
+    fn name(&self) -> &'static str {
+        "advect"
+    }
+
+    fn topo(&self) -> Topology {
+        self.cfg.topo
+    }
+
+    fn n_objects(&self) -> usize {
+        self.n_blocks()
+    }
+
+    fn mapping(&self) -> &[u32] {
+        &self.block_to_pe
+    }
+
+    fn neighbor_pairs(&self) -> Vec<(u32, u32)> {
+        self.neighbor_pairs.clone()
+    }
+
+    /// Integrate every particle one `dt` along its streamline with
+    /// speed-adaptive substeps, re-bin block crossers, and attribute
+    /// the measured step time over blocks by substep units.
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepStats> {
+        let t = Instant::now();
+        let l = self.cfg.domain;
+        let a = self.cfg.amplitude;
+        let pb = self.cfg.particle_bytes;
+        // positions stay in [0, L): the flow is wall-tangent, the clamp
+        // only guards floating-point rounding at the boundary
+        let hi = l * (1.0 - 1e-12);
+        self.step_work.iter_mut().for_each(|w| *w = 0.0);
+        let mut events = 0usize;
+        for i in 0..self.x.len() {
+            let (mut px, mut py) = (self.x[i], self.y[i]);
+            let n = self.substeps(px, py);
+            let h = self.cfg.dt / n as f64;
+            for _ in 0..n {
+                let (u, v) = velocity(l, a, px, py);
+                px += u * h;
+                py += v * h;
+            }
+            px = px.clamp(0.0, hi);
+            py = py.clamp(0.0, hi);
+            self.x[i] = px;
+            self.y[i] = py;
+            let nb = block_of_pos(&self.cfg, px, py);
+            let ob = self.block_of[i];
+            if nb != ob {
+                events += 1;
+                self.traffic.record(ob, nb, pb);
+                ctx.moved.push((ob, nb, pb));
+                self.block_of[i] = nb;
+            }
+            self.step_work[nb as usize] += n as f64;
+        }
+        let compute_s = t.elapsed().as_secs_f64();
+
+        // Load attribution: measured step time split by substep units.
+        let total: f64 = self.step_work.iter().sum();
+        let per_unit = compute_s / total.max(1.0);
+        for (b, &w) in self.step_work.iter().enumerate() {
+            if w > 0.0 {
+                self.load_acc[b] += w * per_unit;
+            }
+        }
+        self.steps_done += 1;
+        self.steps_since_lb += 1;
+        Ok(StepStats { compute_s, events })
+    }
+
+    fn work(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(&self.step_work);
+    }
+
+    /// Snapshot the LB problem: sync traffic for the elapsed steps,
+    /// incremental comm-graph refresh, measured loads with a
+    /// substep-unit fallback — the same sequence as the PIC instance
+    /// assembly.
+    fn build_instance(&mut self) -> Instance {
+        let n_blocks = self.n_blocks();
+        for &(a, b) in &self.neighbor_pairs {
+            self.traffic.record(a, b, SYNC_BYTES * self.steps_since_lb as f64);
+        }
+        self.comm_cache.update_from_recorder(&mut self.traffic);
+        let graph = self.comm_cache.clone();
+        let measured: f64 = self.load_acc.iter().sum();
+        let loads: Vec<f64> = if measured > 0.0 {
+            self.load_acc.clone()
+        } else {
+            self.step_work.clone()
+        };
+        let bw = self.cfg.domain / self.cfg.blocks_x as f64;
+        let bh = self.cfg.domain / self.cfg.blocks_y as f64;
+        let coords: Vec<[f64; 2]> = (0..n_blocks)
+            .map(|b| {
+                let bx = (b % self.cfg.blocks_x) as f64;
+                let by = (b / self.cfg.blocks_x) as f64;
+                [bx * bw + bw / 2.0, by * bh + bh / 2.0]
+            })
+            .collect();
+        let mut inst =
+            Instance::new(loads, coords, graph, self.block_to_pe.clone(), self.cfg.topo);
+        inst.sizes = self
+            .block_particle_counts()
+            .iter()
+            .map(|&c| c as f64 * self.cfg.particle_bytes)
+            .collect();
+        self.steps_since_lb = 0;
+        self.load_acc.iter_mut().for_each(|l| *l = 0.0);
+        inst
+    }
+
+    fn apply(&mut self, asg: &Assignment) -> f64 {
+        assert_eq!(asg.mapping.len(), self.n_blocks());
+        let counts = self.block_particle_counts();
+        let mut bytes = 0.0;
+        for (b, (&new_pe, old_pe)) in asg.mapping.iter().zip(&self.block_to_pe).enumerate() {
+            if new_pe != *old_pe {
+                bytes += counts[b] as f64 * self.cfg.particle_bytes;
+            }
+        }
+        self.block_to_pe = asg.mapping.clone();
+        bytes
+    }
+
+    /// Conservation check: every particle still inside the domain and
+    /// binned to the block that owns its position.
+    fn verify(&self) -> std::result::Result<(), String> {
+        if self.x.len() != self.cfg.n_particles {
+            return Err(format!(
+                "particle count changed: {} != {}",
+                self.x.len(),
+                self.cfg.n_particles
+            ));
+        }
+        for i in 0..self.x.len() {
+            let (px, py) = (self.x[i], self.y[i]);
+            if !(0.0..self.cfg.domain).contains(&px) || !(0.0..self.cfg.domain).contains(&py) {
+                return Err(format!("particle {i} escaped the domain: ({px}, {py})"));
+            }
+            if self.block_of[i] != block_of_pos(&self.cfg, px, py) {
+                return Err(format!("particle {i} mis-binned"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::app::step_once;
+    use crate::apps::driver::{run_app, DriverConfig};
+    use crate::strategies::{make, StrategyParams};
+
+    fn small_cfg() -> AdvectConfig {
+        AdvectConfig {
+            n_particles: 3_000,
+            blocks_x: 6,
+            blocks_y: 6,
+            topo: Topology::flat(4),
+            seed: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn particles_stay_in_domain_and_cross_blocks() {
+        let mut app = Advect::new(small_cfg()).unwrap();
+        let mut crossings = 0;
+        for _ in 0..30 {
+            crossings += step_once(&mut app).unwrap().events;
+        }
+        assert!(crossings > 0, "blob never crossed a block boundary");
+        App::verify(&app).expect("conservation violated");
+    }
+
+    #[test]
+    fn cost_is_flow_dependent() {
+        let mut app = Advect::new(small_cfg()).unwrap();
+        step_once(&mut app).unwrap();
+        let mut work = Vec::new();
+        app.work(&mut work);
+        let counts = app.block_particle_counts();
+        // work units exceed raw counts wherever flow forces substeps
+        let total_work: f64 = work.iter().sum();
+        let total_counts: f64 = counts.iter().map(|&c| c as f64).sum();
+        assert!(total_work > total_counts, "{total_work} !> {total_counts}");
+        // and no empty block carries work
+        for (b, &w) in work.iter().enumerate() {
+            assert_eq!(w > 0.0, counts[b] > 0, "block {b}");
+        }
+    }
+
+    #[test]
+    fn instance_is_valid_and_lb_round_trips() {
+        let mut app = Advect::new(small_cfg()).unwrap();
+        for _ in 0..5 {
+            step_once(&mut app).unwrap();
+        }
+        let inst = app.build_instance();
+        assert!(inst.validate().is_ok());
+        assert!(inst.graph.edge_count() > 0);
+        let asg = make("greedy-refine", StrategyParams::default())
+            .unwrap()
+            .rebalance(&inst);
+        let bytes = app.apply(&asg);
+        assert!(bytes >= 0.0);
+        App::verify(&app).expect("LB corrupted the particles");
+    }
+
+    #[test]
+    fn runs_under_the_generic_driver() {
+        let mut app = Advect::new(small_cfg()).unwrap();
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        let cfg = DriverConfig { iters: 8, lb_period: 4, ..Default::default() };
+        let rep = run_app(&mut app, strat.as_ref(), &cfg).unwrap();
+        assert_eq!(rep.records.len(), 8);
+        assert!(rep.verified);
+    }
+
+    #[test]
+    fn velocity_is_wall_tangent() {
+        for t in 0..=10 {
+            let s = t as f64 / 10.0;
+            let (_, v0) = velocity(1.0, 1.0, s, 0.0);
+            let (_, v1) = velocity(1.0, 1.0, s, 1.0);
+            assert!(v0.abs() < 1e-12 && v1.abs() < 1e-12, "flow exits y-wall");
+            let (u0, _) = velocity(1.0, 1.0, 0.0, s);
+            let (u1, _) = velocity(1.0, 1.0, 1.0, s);
+            assert!(u0.abs() < 1e-12 && u1.abs() < 1e-12, "flow exits x-wall");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! The application/driver boundary: any workload with persistently
+//! interacting objects plugs into the one LB loop through [`App`].
+//!
+//! The paper frames the diffusion pipeline as application-agnostic —
+//! "easily generated for any Charm++ application" — and this trait is
+//! that claim made structural: a workload exposes its objects (current
+//! mapping, static sync adjacency, per-object work), advances one step
+//! at a time while reporting measured compute seconds and the directed
+//! `(from, to, bytes)` crossing records that
+//! [`account_step_comm`](crate::apps::driver::account_step_comm)
+//! consumes, snapshots itself into an LB [`Instance`] on demand, and
+//! adopts [`Assignment`]s. Everything else — the iterate / record /
+//! rebalance / migrate / account loop behind Figs 3–6 — lives once, in
+//! [`run_app`](crate::apps::driver::run_app), for every workload and
+//! every strategy.
+//!
+//! Implementations: [`PicApp`](crate::apps::pic::PicApp) (PIC PRK,
+//! paper §VI), [`StencilSim`](crate::apps::stencil::StencilSim)
+//! (noisy stencil rounds, §V), [`Advect`](crate::apps::advect::Advect)
+//! (streamline particle advection with flow-dependent per-block cost,
+//! after Demiralp et al., arXiv:2208.07553), and
+//! [`Hotspot`](crate::apps::hotspot::Hotspot) (a load peak drifting
+//! across the object graph — the adversarial case for stale
+//! assignments, in the spirit of Boulmier et al., arXiv:1909.07168).
+//! Adding a workload is implementing this trait and registering it in
+//! [`AVAILABLE_APPS`](crate::apps::AVAILABLE_APPS) +
+//! [`app_from_config`](crate::coordinator::app_from_config) — see
+//! README "Adding a workload".
+
+use anyhow::Result;
+
+use crate::model::{Assignment, Instance, Topology};
+
+/// Reused per-step context the driver hands to [`App::step`]. Owning
+/// the crossing-record buffer here (instead of allocating a fresh
+/// `Vec` inside every app step) keeps the loop allocation-free at
+/// steady state; the driver clears `moved` before each step and
+/// sort-merges it afterwards, so apps only ever append raw records.
+#[derive(Debug, Default)]
+pub struct StepCtx {
+    /// Directed `(from_object, to_object, bytes)` crossing records of
+    /// this step, appended by the app (one record per crossing event;
+    /// the driver aggregates). These drive both the per-step modeled
+    /// communication seconds and — via the app's own
+    /// [`TrafficRecorder`](crate::model::TrafficRecorder) — the LB
+    /// instance's communication graph.
+    pub moved: Vec<(u32, u32, f64)>,
+}
+
+/// What one [`App::step`] reports back to the driver (the crossing
+/// records travel in [`StepCtx::moved`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    /// Measured wall-clock seconds of this step's compute phase.
+    pub compute_s: f64,
+    /// App-defined event count (PIC/advect: objects' payload items that
+    /// crossed owners; stencil/hotspot: halo edges exchanged).
+    pub events: usize,
+}
+
+/// A workload the generic driver can iterate, balance, and account.
+///
+/// Contract (checked by `tests/apps_conformance.rs` for every
+/// registered app):
+///
+/// * [`App::mapping`] always has length [`App::n_objects`] with every
+///   entry `< topo.n_pes()`;
+/// * [`App::step`] appends only in-range, finite, non-negative crossing
+///   records to `ctx.moved`;
+/// * [`App::work`] fills one finite non-negative work unit per object —
+///   the driver's load-attribution / imbalance signal, and the exact
+///   loads used when `DriverConfig::deterministic_loads` is set;
+/// * [`App::build_instance`] returns a valid [`Instance`] over the same
+///   objects and **drains** accumulated traffic/measured load (it is
+///   called once per LB round);
+/// * [`App::apply`] adopts the assignment (mapping length must match)
+///   and returns the modeled migration payload bytes.
+pub trait App {
+    /// Registry name (one of [`AVAILABLE_APPS`](crate::apps::AVAILABLE_APPS)).
+    fn name(&self) -> &'static str;
+
+    /// The node × PE topology the workload runs on.
+    fn topo(&self) -> Topology;
+
+    /// Number of migratable objects (chares / blocks / cells).
+    fn n_objects(&self) -> usize;
+
+    /// Current object → PE mapping.
+    fn mapping(&self) -> &[u32];
+
+    /// Static object adjacency: unordered `(a, b)` pairs with `a < b`,
+    /// each exchanging one synchronization message per step (the
+    /// Charm++ pattern: a chare must hear from all neighbors to know
+    /// every incoming item arrived). The driver charges α per such
+    /// message, so scattering neighbors across nodes shows up as
+    /// communication time.
+    fn neighbor_pairs(&self) -> Vec<(u32, u32)>;
+
+    /// Advance one time step; append crossing records to `ctx.moved`.
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepStats>;
+
+    /// Per-object work units of the latest step, into a reused buffer
+    /// (cleared + filled here). PIC/advect: payload items (particles /
+    /// integration substeps) per object; stencil/hotspot: the
+    /// per-object loads themselves.
+    fn work(&self, out: &mut Vec<f64>);
+
+    /// Snapshot the LB problem: drains recorded traffic and measured
+    /// loads accumulated since the previous LB round.
+    fn build_instance(&mut self) -> Instance;
+
+    /// Adopt a new object → PE mapping; returns migrated payload bytes.
+    fn apply(&mut self, asg: &Assignment) -> f64;
+
+    /// App-specific end-of-run correctness check (PIC: PRK analytic
+    /// positions; advect: payload conservation). Default: trivially ok.
+    fn verify(&self) -> std::result::Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Drive one step with a throwaway context — convenience for tests and
+/// benches that don't run the full driver loop.
+pub fn step_once<A: App + ?Sized>(app: &mut A) -> Result<StepStats> {
+    let mut ctx = StepCtx::default();
+    app.step(&mut ctx)
+}

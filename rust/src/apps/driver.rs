@@ -1,30 +1,31 @@
-//! Iterative application driver: runs an app for N iterations with a
-//! load-balancing schedule, accounting compute time (measured),
-//! communication time (α–β model over the recorded traffic), and LB
-//! cost (measured strategy time + modeled migration transfer) — the
-//! machinery behind Figs 3–6.
+//! Generic iterative driver: runs any [`App`] for N iterations with a
+//! load-balancing schedule, accounting compute time (measured, split
+//! over nodes by work units), communication time (α–β model over the
+//! step's crossing records + sync messages), and LB cost (measured
+//! strategy time + modeled migration transfer) — the machinery behind
+//! Figs 3–6, shared by every workload and strategy.
 
 use anyhow::Result;
 
-use crate::apps::pic::PicApp;
+use crate::apps::app::{App, StepCtx};
 use crate::model::{evaluate, Assignment, Topology};
 use crate::simnet::{CostTracker, NetModel};
 use crate::strategies::LoadBalancer;
 use crate::util::stats::Summary;
 
 /// Node-granularity communication accounting for one app step: every
-/// adjacent chare pair exchanges one sync message per step (α even when
-/// empty), carrying that step's migrated-particle payload; non-adjacent
-/// crossings (possible when 2k+1 exceeds a chare) pay their own
-/// message. `moved` holds the step's directed `(from, to, bytes)`
-/// crossing records; they are canonicalized to unordered pairs and
-/// sort-merged into the reused `payload` buffer. Shared by the
-/// sequential and distributed drivers so both model communication
-/// seconds with the same arithmetic over the same aggregates
-/// (`tests/distributed.rs` asserts the outputs are equal).
+/// adjacent object pair exchanges one sync message per step (α even
+/// when empty), carrying that step's crossing payload; non-adjacent
+/// crossings (possible when a PIC displacement exceeds a chare) pay
+/// their own message. `moved` holds the step's directed
+/// `(from, to, bytes)` crossing records; they are canonicalized to
+/// unordered pairs and sort-merged into the reused `payload` buffer.
+/// Shared by the sequential and distributed drivers so both model
+/// communication seconds with the same arithmetic over the same
+/// aggregates (`tests/distributed.rs` asserts the outputs are equal).
 pub fn account_step_comm(
     topo: &Topology,
-    chare_to_pe: &[u32],
+    obj_to_pe: &[u32],
     neighbor_pairs: &[(u32, u32)],
     moved: &[(u32, u32, f64)],
     payload: &mut Vec<(u32, u32, f64)>,
@@ -38,8 +39,8 @@ pub fn account_step_comm(
     consumed.resize(payload.len(), false);
     tracker.reset();
     for &(a, b) in neighbor_pairs {
-        let n_a = topo.node_of_pe(chare_to_pe[a as usize]);
-        let n_b = topo.node_of_pe(chare_to_pe[b as usize]);
+        let n_a = topo.node_of_pe(obj_to_pe[a as usize]);
+        let n_b = topo.node_of_pe(obj_to_pe[b as usize]);
         let bytes = match payload.binary_search_by_key(&(a, b), |&(x, y, _)| (x, y)) {
             Ok(idx) => {
                 consumed[idx] = true;
@@ -53,8 +54,8 @@ pub fn account_step_comm(
         if consumed[idx] {
             continue;
         }
-        let n_a = topo.node_of_pe(chare_to_pe[a as usize]);
-        let n_b = topo.node_of_pe(chare_to_pe[b as usize]);
+        let n_a = topo.node_of_pe(obj_to_pe[a as usize]);
+        let n_b = topo.node_of_pe(obj_to_pe[b as usize]);
         tracker.record(n_a, n_b, bytes);
     }
 }
@@ -68,9 +69,9 @@ pub struct DriverConfig {
     pub net: NetModel,
     /// Print progress every `log_every` iterations (0 = quiet).
     pub log_every: usize,
-    /// Use particle counts instead of measured push seconds as the LB
-    /// load signal. Measured time is the production signal but is
-    /// wall-clock-noisy; counts make a run's LB decisions exactly
+    /// Use the app's work units instead of measured step seconds as the
+    /// LB load signal. Measured time is the production signal but is
+    /// wall-clock-noisy; work units make a run's LB decisions exactly
     /// reproducible — which is what lets `tests/distributed.rs` assert
     /// the distributed driver reports the *same* migration counts and
     /// modeled comm seconds as this sequential driver.
@@ -93,10 +94,10 @@ impl Default for DriverConfig {
 #[derive(Debug, Clone, Default)]
 pub struct IterRecord {
     pub iter: usize,
-    /// max/avg particles per PE (Fig 3/4 metric).
-    pub particles_max_avg: f64,
-    /// particles on each node (Fig 3 series).
-    pub node_particles: Vec<usize>,
+    /// max/avg work units per PE (Fig 3/4 metric; particles for PIC).
+    pub work_max_avg: f64,
+    /// work units on each node (Fig 3 series).
+    pub node_work: Vec<f64>,
     /// modeled per-iteration compute time (max / avg over nodes).
     pub compute_max_s: f64,
     pub compute_avg_s: f64,
@@ -130,55 +131,75 @@ impl RunReport {
     }
 }
 
-/// Run the PIC app under `strategy` and record the full time series.
-pub fn run_pic(
-    app: &mut PicApp,
+/// Run any [`App`] under `strategy` and record the full time series —
+/// the one iterate / record / rebalance / migrate / account loop every
+/// workload shares. Accepts both concrete apps and `dyn App` (the
+/// coordinator's registry hands out boxed apps).
+pub fn run_app<A: App + ?Sized>(
+    app: &mut A,
     strategy: &dyn LoadBalancer,
     cfg: &DriverConfig,
 ) -> Result<RunReport> {
-    let topo = app.cfg.topo;
-    let neighbor_pairs = app.chare_neighbor_pairs();
+    let topo = app.topo();
+    let neighbor_pairs = app.neighbor_pairs();
     let mut report = RunReport::default();
-    // Per-iteration accounting buffers, hoisted out of the loop: the
-    // seed rebuilt a payload HashMap and a CostTracker every step.
+    // Per-iteration accounting buffers, hoisted out of the loop (the
+    // pre-trait driver already did this; the trait keeps it possible:
+    // apps append crossings into the reused `ctx.moved`).
     let mut tracker = CostTracker::new(topo.n_nodes);
     let mut payload: Vec<(u32, u32, f64)> = Vec::new();
     let mut consumed: Vec<bool> = Vec::new();
+    let mut ctx = StepCtx::default();
+    let mut work: Vec<f64> = Vec::new();
+    let mut pe_work = vec![0.0f64; topo.n_pes()];
+    let mut node_work = vec![0.0f64; topo.n_nodes];
     for iter in 0..cfg.iters {
-        let stats = app.step()?;
+        ctx.moved.clear();
+        let stats = app.step(&mut ctx)?;
+        // Aggregate the raw crossing log per directed (from, to) pair —
+        // the same stable sort-merge the apps' traffic recorders use,
+        // so sums accumulate in crossing order.
+        crate::model::graph::sort_sum_merge(&mut ctx.moved);
 
-        // --- compute accounting: measured push time attributed to the
-        // busiest node (nodes run concurrently in the real system).
-        let pe_counts = app.pe_particle_counts();
-        let mut node_particles = vec![0usize; topo.n_nodes];
-        for (pe, &cnt) in pe_counts.iter().enumerate() {
-            node_particles[topo.node_of_pe(pe as u32) as usize] += cnt;
+        // --- compute accounting: measured step time attributed to the
+        // busiest node by work units (nodes run concurrently in the
+        // real system).
+        app.work(&mut work);
+        debug_assert_eq!(work.len(), app.n_objects(), "{}: work vector length", app.name());
+        let work_total: f64 = work.iter().sum();
+        let per_unit = stats.compute_s / work_total.max(1.0);
+        pe_work.iter_mut().for_each(|w| *w = 0.0);
+        node_work.iter_mut().for_each(|w| *w = 0.0);
+        {
+            // --- comm accounting at node granularity (shared with the
+            // distributed driver, which gathers the same crossing
+            // records per node and runs the identical arithmetic at its
+            // root).
+            let mapping = app.mapping();
+            for (o, &pe) in mapping.iter().enumerate() {
+                pe_work[pe as usize] += work[o];
+                node_work[topo.node_of_pe(pe) as usize] += work[o];
+            }
+            account_step_comm(
+                &topo,
+                mapping,
+                &neighbor_pairs,
+                &ctx.moved,
+                &mut payload,
+                &mut consumed,
+                &mut tracker,
+            );
         }
-        let per_particle = stats.push_s / app.state.len().max(1) as f64;
-        let node_compute: Vec<f64> =
-            node_particles.iter().map(|&c| c as f64 * per_particle).collect();
-
-        // --- comm accounting at node granularity (shared with the
-        // distributed driver, which gathers the same crossing records
-        // per node and runs the identical arithmetic at its root).
-        account_step_comm(
-            &topo,
-            &app.chare_to_pe,
-            &neighbor_pairs,
-            &stats.moved,
-            &mut payload,
-            &mut consumed,
-            &mut tracker,
-        );
         let comm_times = tracker.comm_times(&cfg.net);
 
-        let pe_summary = Summary::of(&pe_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
+        let pe_summary = Summary::of(&pe_work);
         let mut rec = IterRecord {
             iter,
-            particles_max_avg: pe_summary.max_avg_ratio(),
-            node_particles,
-            compute_max_s: node_compute.iter().cloned().fold(0.0, f64::max),
-            compute_avg_s: node_compute.iter().sum::<f64>() / topo.n_nodes as f64,
+            work_max_avg: pe_summary.max_avg_ratio(),
+            node_work: node_work.clone(),
+            compute_max_s: node_work.iter().map(|&w| w * per_unit).fold(0.0, f64::max),
+            compute_avg_s: node_work.iter().map(|&w| w * per_unit).sum::<f64>()
+                / topo.n_nodes as f64,
             comm_max_s: comm_times.iter().cloned().fold(0.0, f64::max),
             comm_avg_s: comm_times.iter().sum::<f64>() / topo.n_nodes as f64,
             ..Default::default()
@@ -188,14 +209,13 @@ pub fn run_pic(
         if cfg.lb_period > 0 && (iter + 1) % cfg.lb_period == 0 {
             let mut inst = app.build_instance();
             if cfg.deterministic_loads {
-                inst.loads =
-                    app.chare_particle_counts().iter().map(|&c| c as f64).collect();
+                inst.loads = work.clone();
             }
             let t = std::time::Instant::now();
             let asg = strategy.rebalance(&inst);
             let strat_s = t.elapsed().as_secs_f64();
             let metrics = evaluate(&inst, &asg);
-            let moved_bytes = app.apply_assignment(&asg);
+            let moved_bytes = app.apply(&asg);
             // migration transfer cost: modeled as one bulk inter-node
             // transfer of the moved bytes, split over nodes
             let transfer_s = cfg.net.inter_time(metrics.migrations as u64, moved_bytes)
@@ -208,7 +228,7 @@ pub fn run_pic(
         if cfg.log_every > 0 && iter % cfg.log_every == 0 {
             crate::info!(
                 "iter {iter}: max/avg={:.3} comp={:.2}ms comm={:.2}ms lb={:.2}ms",
-                rec.particles_max_avg,
+                rec.work_max_avg,
                 rec.compute_max_s * 1e3,
                 rec.comm_max_s * 1e3,
                 rec.lb_s * 1e3
@@ -224,32 +244,32 @@ pub fn run_pic(
     Ok(report)
 }
 
-/// Convenience: run the same PIC configuration under several strategies
-/// (fresh app per strategy) and return (name, report) pairs.
+/// Convenience: run the same workload configuration under several
+/// strategies (fresh app per strategy) and return (name, report) pairs.
 pub fn compare_strategies(
-    mk_app: impl Fn() -> Result<PicApp>,
+    mk_app: impl Fn() -> Result<Box<dyn App>>,
     strategies: &[(&str, Box<dyn LoadBalancer>)],
     cfg: &DriverConfig,
 ) -> Result<Vec<(String, RunReport)>> {
     let mut out = Vec::new();
     for (name, strat) in strategies {
         let mut app = mk_app()?;
-        let report = run_pic(&mut app, strat.as_ref(), cfg)?;
+        let report = run_app(app.as_mut(), strat.as_ref(), cfg)?;
         out.push((name.to_string(), report));
     }
     Ok(out)
 }
 
 /// Assignment helper re-exported for bench code symmetry.
-pub fn no_lb_assignment(app: &PicApp) -> Assignment {
-    Assignment { mapping: app.chare_to_pe.clone() }
+pub fn no_lb_assignment<A: App + ?Sized>(app: &A) -> Assignment {
+    Assignment { mapping: app.mapping().to_vec() }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::apps::pic::{Backend, InitMode, PicApp, PicConfig};
-    use crate::apps::stencil::Decomposition;
+    use crate::apps::stencil::{Decomposition, StencilSim};
     use crate::model::Topology;
     use crate::strategies::{make, StrategyParams};
 
@@ -280,7 +300,7 @@ mod tests {
         let mut a = app();
         let strat = make("diff-comm", StrategyParams::default()).unwrap();
         let cfg = DriverConfig { iters: 20, lb_period: 5, ..Default::default() };
-        let rep = run_pic(&mut a, strat.as_ref(), &cfg).unwrap();
+        let rep = run_app(&mut a, strat.as_ref(), &cfg).unwrap();
         assert_eq!(rep.records.len(), 20);
         assert!(rep.verified, "physics corrupted by LB");
         assert!(rep.total_s > 0.0);
@@ -295,15 +315,15 @@ mod tests {
         let none = {
             let mut a = app();
             let s = make("none", StrategyParams::default()).unwrap();
-            run_pic(&mut a, s.as_ref(), &cfg).unwrap()
+            run_app(&mut a, s.as_ref(), &cfg).unwrap()
         };
         let refine = {
             let mut a = app();
             let s = make("greedy-refine", StrategyParams::default()).unwrap();
-            run_pic(&mut a, s.as_ref(), &cfg).unwrap()
+            run_app(&mut a, s.as_ref(), &cfg).unwrap()
         };
         let avg = |r: &RunReport| {
-            r.records.iter().map(|x| x.particles_max_avg).sum::<f64>() / r.records.len() as f64
+            r.records.iter().map(|x| x.work_max_avg).sum::<f64>() / r.records.len() as f64
         };
         // margin: load attribution uses measured wall-clock, which is
         // noisy when the test host is contended
@@ -313,5 +333,17 @@ mod tests {
             avg(&refine),
             avg(&none)
         );
+    }
+
+    #[test]
+    fn stencil_runs_through_the_generic_driver() {
+        let mut sim = StencilSim::new(16, 2, 2, Decomposition::Tiled, 0.4, 7);
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        let cfg = DriverConfig { iters: 6, lb_period: 2, ..Default::default() };
+        let rep = run_app(&mut sim, strat.as_ref(), &cfg).unwrap();
+        assert_eq!(rep.records.len(), 6);
+        assert!(rep.verified);
+        // halo traffic is charged every step
+        assert!(rep.records.iter().all(|r| r.comm_max_s > 0.0));
     }
 }

@@ -1,0 +1,343 @@
+//! Trend-aware drifting-hotspot workload (in the spirit of Boulmier et
+//! al., arXiv:1909.07168): a Gaussian load peak drifts across a
+//! periodic `nx x ny` object grid at a configurable velocity — the
+//! **adversarial case for stale assignments**, because any mapping
+//! balanced for the peak's position at LB time is wrong a few steps
+//! later, and the faster the drift the shorter an assignment's useful
+//! life. Static halo traffic between grid neighbors keeps the
+//! communication term honest: a balancer that scatters the peak's
+//! objects wins on load and loses on comm, exactly the trade-off the
+//! paper's strategy navigates.
+//!
+//! Per-object load is **analytic in (object, step)** ([`load_at`]), so
+//! a distributed node can compute its partition's loads without any
+//! payload exchange — which is what makes this the second
+//! node-partitionable app of `distributed::driver` (bit-identity with
+//! the sequential driver asserted in `tests/distributed.rs`).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::app::{App, StepCtx, StepStats};
+use crate::apps::stencil::Decomposition;
+use crate::model::{Assignment, CommGraph, Instance, Topology, TrafficRecorder};
+
+/// Hotspot workload configuration.
+#[derive(Debug, Clone)]
+pub struct HotspotConfig {
+    pub nx: usize,
+    pub ny: usize,
+    /// Baseline per-object load.
+    pub base: f64,
+    /// Peak amplitude on top of the baseline.
+    pub amp: f64,
+    /// Peak width in object units.
+    pub sigma: f64,
+    /// Drift velocity in objects per step (torus wrap).
+    pub vx: f64,
+    pub vy: f64,
+    /// Bytes exchanged per halo edge per step.
+    pub halo_bytes: f64,
+    /// Migration payload bytes per object.
+    pub object_bytes: f64,
+    pub decomp: Decomposition,
+    pub topo: Topology,
+}
+
+impl Default for HotspotConfig {
+    fn default() -> Self {
+        HotspotConfig {
+            nx: 16,
+            ny: 16,
+            base: 1.0,
+            amp: 8.0,
+            sigma: 2.5,
+            vx: 0.35,
+            vy: 0.2,
+            halo_bytes: 64.0,
+            object_bytes: 4096.0,
+            decomp: Decomposition::Tiled,
+            topo: Topology::flat(4),
+        }
+    }
+}
+
+impl HotspotConfig {
+    /// Shared validation — both the sequential [`Hotspot::new`] and the
+    /// distributed `HotspotDistApp::new` call this, so the two
+    /// constructors cannot drift apart on what they accept (a zero
+    /// sigma would turn [`load_at`] into NaN at the peak center).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.nx >= 2 && self.ny >= 2, "hotspot grid too small");
+        anyhow::ensure!(self.sigma > 0.0, "sigma must be positive");
+        anyhow::ensure!(self.base > 0.0, "base load must be positive");
+        Ok(())
+    }
+}
+
+/// Minimum-image displacement on a ring of circumference `n`.
+#[inline]
+fn torus_delta(d: f64, n: f64) -> f64 {
+    let d = d.rem_euclid(n);
+    if d > n / 2.0 {
+        d - n
+    } else {
+        d
+    }
+}
+
+/// Analytic load of object `obj` at step `step` — a pure function, so
+/// sequential and distributed executions compute bit-identical values
+/// from (config, object, step) alone.
+pub fn load_at(cfg: &HotspotConfig, obj: usize, step: usize) -> f64 {
+    let x = (obj % cfg.nx) as f64;
+    let y = (obj / cfg.nx) as f64;
+    let t = step as f64;
+    let cx = (cfg.vx * t).rem_euclid(cfg.nx as f64);
+    let cy = (cfg.vy * t).rem_euclid(cfg.ny as f64);
+    let dx = torus_delta(x - cx, cfg.nx as f64);
+    let dy = torus_delta(y - cy, cfg.ny as f64);
+    cfg.base + cfg.amp * (-(dx * dx + dy * dy) / (2.0 * cfg.sigma * cfg.sigma)).exp()
+}
+
+/// The drifting hotspot as a first-class [`App`].
+pub struct Hotspot {
+    pub cfg: HotspotConfig,
+    /// Current object → PE mapping.
+    pub obj_to_pe: Vec<u32>,
+    /// Per-object analytic loads of the latest step.
+    work: Vec<f64>,
+    /// Per-object accumulated measured seconds since the last LB step.
+    load_acc: Vec<f64>,
+    traffic: TrafficRecorder,
+    comm_cache: CommGraph,
+    /// Unordered (a < b) halo pairs (8-neighborhood, periodic).
+    pairs: Vec<(u32, u32)>,
+    pub steps_done: usize,
+}
+
+impl Hotspot {
+    pub fn new(cfg: HotspotConfig) -> Result<Hotspot> {
+        cfg.validate()?;
+        let n = cfg.nx * cfg.ny;
+        let obj_to_pe = crate::apps::grid_mapping(cfg.nx, cfg.ny, cfg.topo.n_pes(), cfg.decomp);
+        let pairs = crate::apps::grid_neighbor_pairs(cfg.nx, cfg.ny, true);
+        Ok(Hotspot {
+            obj_to_pe,
+            work: vec![cfg.base; n],
+            load_acc: vec![0.0; n],
+            traffic: TrafficRecorder::new(n),
+            comm_cache: CommGraph::empty(n),
+            pairs,
+            steps_done: 0,
+            cfg,
+        })
+    }
+
+    pub fn n_objs(&self) -> usize {
+        self.cfg.nx * self.cfg.ny
+    }
+}
+
+/// Assemble the LB instance from per-object analytic loads and measured
+/// seconds — the **single definition** both the sequential
+/// [`App::build_instance`] and the distributed driver's root use, so
+/// their instances match bit for bit (mirrors
+/// [`crate::apps::pic::assemble_instance`]). The caller owns resetting
+/// the measured loads.
+pub fn assemble_instance(
+    cfg: &HotspotConfig,
+    work: &[f64],
+    measured: &[f64],
+    mapping: Vec<u32>,
+    recorder: &mut TrafficRecorder,
+    comm_cache: &mut CommGraph,
+) -> Instance {
+    let n = cfg.nx * cfg.ny;
+    comm_cache.update_from_recorder(recorder);
+    let graph = comm_cache.clone();
+    let measured_total: f64 = measured.iter().sum();
+    let loads: Vec<f64> =
+        if measured_total > 0.0 { measured.to_vec() } else { work.to_vec() };
+    let coords: Vec<[f64; 2]> =
+        (0..n).map(|o| [(o % cfg.nx) as f64, (o / cfg.nx) as f64]).collect();
+    let mut inst = Instance::new(loads, coords, graph, mapping, cfg.topo);
+    inst.sizes = vec![cfg.object_bytes; n];
+    inst
+}
+
+impl App for Hotspot {
+    fn name(&self) -> &'static str {
+        "hotspot"
+    }
+
+    fn topo(&self) -> Topology {
+        self.cfg.topo
+    }
+
+    fn n_objects(&self) -> usize {
+        self.n_objs()
+    }
+
+    fn mapping(&self) -> &[u32] {
+        &self.obj_to_pe
+    }
+
+    fn neighbor_pairs(&self) -> Vec<(u32, u32)> {
+        self.pairs.clone()
+    }
+
+    /// One step: evaluate the drifted peak's loads (the compute phase —
+    /// measured), exchange one halo payload per edge.
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepStats> {
+        let t = Instant::now();
+        let step = self.steps_done;
+        let mut total = 0.0;
+        for o in 0..self.work.len() {
+            let w = load_at(&self.cfg, o, step);
+            self.work[o] = w;
+            total += w;
+        }
+        let compute_s = t.elapsed().as_secs_f64();
+        for &(a, b) in &self.pairs {
+            self.traffic.record(a, b, self.cfg.halo_bytes);
+            ctx.moved.push((a, b, self.cfg.halo_bytes));
+        }
+        let per_unit = compute_s / total.max(1.0);
+        for (o, &w) in self.work.iter().enumerate() {
+            self.load_acc[o] += w * per_unit;
+        }
+        self.steps_done += 1;
+        Ok(StepStats { compute_s, events: self.pairs.len() })
+    }
+
+    fn work(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(&self.work);
+    }
+
+    fn build_instance(&mut self) -> Instance {
+        let inst = assemble_instance(
+            &self.cfg,
+            &self.work,
+            &self.load_acc,
+            self.obj_to_pe.clone(),
+            &mut self.traffic,
+            &mut self.comm_cache,
+        );
+        self.load_acc.iter_mut().for_each(|l| *l = 0.0);
+        inst
+    }
+
+    fn apply(&mut self, asg: &Assignment) -> f64 {
+        assert_eq!(asg.mapping.len(), self.n_objs());
+        let mut bytes = 0.0;
+        for (&new_pe, old_pe) in asg.mapping.iter().zip(&self.obj_to_pe) {
+            if new_pe != *old_pe {
+                bytes += self.cfg.object_bytes;
+            }
+        }
+        self.obj_to_pe = asg.mapping.clone();
+        bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::app::step_once;
+    use crate::apps::driver::{run_app, DriverConfig};
+    use crate::strategies::{make, StrategyParams};
+
+    #[test]
+    fn peak_drifts_across_objects() {
+        let cfg = HotspotConfig::default();
+        let peak_at = |step: usize| {
+            (0..cfg.nx * cfg.ny)
+                .map(|o| (o, load_at(&cfg, o, step)))
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .unwrap()
+                .0
+        };
+        let early = peak_at(0);
+        let later = peak_at(20);
+        assert_ne!(early, later, "peak never moved");
+        // loads stay positive and bounded
+        for step in [0usize, 7, 33] {
+            for o in 0..cfg.nx * cfg.ny {
+                let l = load_at(&cfg, o, step);
+                assert!(l >= cfg.base && l <= cfg.base + cfg.amp, "load {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn stale_assignments_decay() {
+        // Balance once at step 0, then let the peak drift: the frozen
+        // mapping's imbalance must grow — the phenomenon this app
+        // exists to produce.
+        let mut app = Hotspot::new(HotspotConfig::default()).unwrap();
+        step_once(&mut app).unwrap();
+        let inst = app.build_instance();
+        let asg = make("greedy-refine", StrategyParams::default())
+            .unwrap()
+            .rebalance(&inst);
+        app.apply(&asg);
+        let imbalance = |app: &Hotspot| {
+            let mut pe = vec![0.0f64; app.cfg.topo.n_pes()];
+            for (o, &p) in app.obj_to_pe.iter().enumerate() {
+                pe[p as usize] += app.work[o];
+            }
+            let max = pe.iter().cloned().fold(0.0, f64::max);
+            let avg = pe.iter().sum::<f64>() / pe.len() as f64;
+            max / avg
+        };
+        let fresh = imbalance(&app);
+        for _ in 0..40 {
+            step_once(&mut app).unwrap();
+        }
+        let stale = imbalance(&app);
+        assert!(stale > fresh, "stale {stale} !> fresh {fresh}");
+    }
+
+    #[test]
+    fn runs_under_the_generic_driver() {
+        let mut app = Hotspot::new(HotspotConfig::default()).unwrap();
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        let cfg = DriverConfig {
+            iters: 12,
+            lb_period: 4,
+            deterministic_loads: true,
+            ..Default::default()
+        };
+        let rep = run_app(&mut app, strat.as_ref(), &cfg).unwrap();
+        assert_eq!(rep.records.len(), 12);
+        assert!(rep.verified);
+        assert!(rep.total_migrations > 0, "drifting peak should force migrations");
+        // halo comm charged every step
+        assert!(rep.records.iter().all(|r| r.comm_max_s > 0.0));
+    }
+
+    #[test]
+    fn instance_assembly_is_deterministic() {
+        let mk = || {
+            let mut app = Hotspot::new(HotspotConfig::default()).unwrap();
+            for _ in 0..3 {
+                step_once(&mut app).unwrap();
+            }
+            let mut inst = app.build_instance();
+            // strip the wall-clock part: deterministic runs overwrite
+            // loads with the analytic work vector, as the driver does
+            let mut work = Vec::new();
+            app.work(&mut work);
+            inst.loads = work;
+            inst
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.loads, b.loads);
+        assert_eq!(a.mapping, b.mapping);
+        assert_eq!(a.sizes, b.sizes);
+    }
+}

@@ -1,7 +1,141 @@
-//! Applications exercising the load balancer: the synthetic stencil
-//! workload generators (paper §V) and the PIC PRK benchmark (paper
-//! §VI), plus the iterative driver that schedules LB and accounts time.
+//! Applications exercising the load balancer, all behind the [`App`]
+//! trait: the synthetic stencil workload (paper §V), the PIC PRK
+//! benchmark (paper §VI), streamline particle advection ([`advect`],
+//! after Demiralp et al.), and a drifting load hotspot ([`hotspot`],
+//! the adversarial case for stale assignments) — plus the generic
+//! iterative driver ([`driver::run_app`]) that schedules LB and
+//! accounts time for every one of them.
 
+pub mod advect;
+pub mod app;
 pub mod driver;
+pub mod hotspot;
 pub mod pic;
 pub mod stencil;
+
+pub use app::{step_once, App, StepCtx, StepStats};
+
+use self::stencil::Decomposition;
+
+/// Workload names accepted by
+/// [`app_from_config`](crate::coordinator::app_from_config) (and the
+/// CLI's `--app` / config `app.kind`) — the application registry
+/// mirroring [`strategies::AVAILABLE`](crate::strategies::AVAILABLE).
+pub const AVAILABLE_APPS: &[&str] = &["pic", "stencil", "advect", "hotspot"];
+
+/// Adjacent object pairs of an `nx x ny` grid (8-neighborhood), each
+/// once with `a < b`. With `periodic` the grid wraps (the PIC PRK
+/// chare mesh); without, boundary objects simply have fewer neighbors
+/// (the advection block mesh — its flow never exits the domain).
+pub fn grid_neighbor_pairs(nx: usize, ny: usize, periodic: bool) -> Vec<(u32, u32)> {
+    let (cx, cy) = (nx as i64, ny as i64);
+    let mut pairs = Vec::with_capacity((cx * cy * 4) as usize);
+    for y in 0..cy {
+        for x in 0..cx {
+            let a = (y * cx + x) as u32;
+            for (dx, dy) in [(1i64, 0i64), (0, 1), (1, 1), (1, -1)] {
+                let (nxp, nyp) = if periodic {
+                    ((x + dx).rem_euclid(cx), (y + dy).rem_euclid(cy))
+                } else {
+                    let (px, py) = (x + dx, y + dy);
+                    if px < 0 || px >= cx || py < 0 || py >= cy {
+                        continue;
+                    }
+                    (px, py)
+                };
+                let b = (nyp * cx + nxp) as u32;
+                if a != b {
+                    pairs.push((a.min(b), a.max(b)));
+                }
+            }
+        }
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+    pairs
+}
+
+/// Initial object→PE mapping of an `nx x ny` object grid per the
+/// paper's striped/quad modes — shared by PIC chares and advection
+/// blocks (public so the distributed driver seeds its replicas
+/// identically).
+pub fn grid_mapping(nx: usize, ny: usize, n_pes: usize, decomp: Decomposition) -> Vec<u32> {
+    let n_objs = nx * ny;
+    match decomp {
+        // column-major order striping: high inter-PE traffic as
+        // particles sweep rightward (paper §VI-A)
+        Decomposition::Striped => (0..n_objs)
+            .map(|c| {
+                let cx = c % nx;
+                let cy = c / nx;
+                let cm = cx * ny + cy;
+                ((cm * n_pes) / n_objs) as u32
+            })
+            .collect(),
+        Decomposition::Tiled => {
+            // choose the px x py factorization of n_pes whose aspect
+            // ratio best matches the object grid, then tile
+            // proportionally (no divisibility requirement)
+            let want = nx as f64 / ny as f64;
+            let mut best = (n_pes, 1usize);
+            let mut best_err = f64::INFINITY;
+            for px in 1..=n_pes {
+                if n_pes % px != 0 || px > nx {
+                    continue;
+                }
+                let py = n_pes / px;
+                if py > ny {
+                    continue;
+                }
+                let err = ((px as f64 / py as f64).ln() - want.ln()).abs();
+                if err < best_err {
+                    best_err = err;
+                    best = (px, py);
+                }
+            }
+            let (px, py) = best;
+            (0..n_objs)
+                .map(|c| {
+                    let cx = c % nx;
+                    let cy = c / nx;
+                    let tx = (cx * px / nx).min(px - 1);
+                    let ty = (cy * py / ny).min(py - 1);
+                    (ty * px + tx) as u32
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_grid_pairs_match_expected_degree() {
+        // 4x4 periodic 8-neighborhood: every object touches 8 others,
+        // each pair once -> 16 * 8 / 2 = 64 pairs
+        let pairs = grid_neighbor_pairs(4, 4, true);
+        assert_eq!(pairs.len(), 64);
+        assert!(pairs.iter().all(|&(a, b)| a < b && b < 16));
+    }
+
+    #[test]
+    fn open_grid_pairs_drop_boundary_wraps() {
+        let open = grid_neighbor_pairs(4, 4, false);
+        let periodic = grid_neighbor_pairs(4, 4, true);
+        assert!(open.len() < periodic.len());
+        // corner object 0 has exactly 3 neighbors in an open grid
+        let deg0 = open.iter().filter(|&&(a, b)| a == 0 || b == 0).count();
+        assert_eq!(deg0, 3);
+    }
+
+    #[test]
+    fn striped_mapping_covers_all_pes() {
+        let m = grid_mapping(8, 8, 4, Decomposition::Striped);
+        assert_eq!(m.len(), 64);
+        for pe in 0..4u32 {
+            assert!(m.contains(&pe), "PE {pe} empty");
+        }
+    }
+}

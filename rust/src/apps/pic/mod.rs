@@ -8,6 +8,10 @@
 //! is the measured push time attributed by particle count, and the
 //! deterministic (2k+1)-cells-per-step motion lets [`PicApp::verify`]
 //! check the entire pipeline (including LB migrations) analytically.
+//!
+//! `PicApp` implements [`App`], so the generic
+//! [`run_app`](crate::apps::driver::run_app) loop drives it like every
+//! other workload.
 
 pub mod init;
 pub mod push;
@@ -18,6 +22,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::apps::app::{App, StepCtx, StepStats};
 use crate::apps::stencil::Decomposition;
 use crate::model::{Assignment, CommGraph, Instance, Topology, TrafficRecorder};
 use crate::runtime::{Engine, PicBatch};
@@ -82,17 +87,6 @@ pub enum Backend {
     Pjrt(Arc<Engine>),
 }
 
-/// Per-iteration statistics returned by [`PicApp::step`].
-#[derive(Debug, Clone, Default)]
-pub struct StepStats {
-    /// Wall-clock seconds of the push phase.
-    pub push_s: f64,
-    /// Aggregated particle traffic this step: (chare_from, chare_to, bytes).
-    pub moved: Vec<(u32, u32, f64)>,
-    /// Particles that crossed chares.
-    pub crossers: usize,
-}
-
 pub struct PicApp {
     pub cfg: PicConfig,
     pub state: PicBatch,
@@ -110,9 +104,6 @@ pub struct PicApp {
     /// adjacency persists across rounds, so the refresh usually only
     /// overwrites weights instead of rebuilding the CSR.
     comm_cache: CommGraph,
-    /// Per-step crosser log, reused across steps (sort-merged into
-    /// `StepStats::moved` — the seed built a HashMap per step).
-    moved_log: Vec<(u32, u32, f64)>,
     /// Static chare adjacency (sync-message partners), cached.
     neighbor_pairs: Vec<(u32, u32)>,
     /// Steps since the last build_instance (sync-traffic accounting).
@@ -146,7 +137,6 @@ impl PicApp {
             chare_to_pe,
             traffic: TrafficRecorder::new(n_chares),
             comm_cache: CommGraph::empty(n_chares),
-            moved_log: Vec::new(),
             neighbor_pairs: Vec::new(),
             steps_since_lb: 0,
             load_acc: vec![0.0; n_chares],
@@ -155,7 +145,7 @@ impl PicApp {
             cfg,
             backend,
         };
-        app.neighbor_pairs = app.chare_neighbor_pairs();
+        app.neighbor_pairs = chare_neighbor_pairs(&app.cfg);
         for i in 0..app.state.len() {
             app.chare_of[i] = app.chare_of_pos(app.state.x[i], app.state.y[i]);
         }
@@ -172,58 +162,8 @@ impl PicApp {
         chare_of_pos(&self.cfg, x, y)
     }
 
-    /// One time step: push all particles, re-bin crossers, account
-    /// traffic and load.
-    pub fn step(&mut self) -> Result<StepStats> {
-        let t = Instant::now();
-        match &self.backend {
-            Backend::Native => {
-                push::native_push(&mut self.state, self.cfg.grid as f64, self.cfg.q, self.cfg.threads)
-            }
-            Backend::Pjrt(engine) => {
-                engine.pic_push(&mut self.state, self.cfg.grid as f64, self.cfg.q)?
-            }
-        }
-        let push_s = t.elapsed().as_secs_f64();
-
-        // Re-bin + traffic accounting. Crossings go to a flat reused
-        // log (no per-step HashMap); the aggregated `moved` list is
-        // produced below by the same stable sort-merge the recorder
-        // uses, so sums accumulate in crossing order as before.
-        self.moved_log.clear();
-        let mut crossers = 0usize;
-        for i in 0..self.state.len() {
-            let nc = self.chare_of_pos(self.state.x[i], self.state.y[i]);
-            let oc = self.chare_of[i];
-            if nc != oc {
-                crossers += 1;
-                self.traffic.record(oc, nc, self.cfg.particle_bytes);
-                self.moved_log.push((oc, nc, self.cfg.particle_bytes));
-                self.chare_of[i] = nc;
-            }
-        }
-
-        // Load attribution: measured push time split by particle count.
-        let counts = self.chare_particle_counts();
-        let per_particle = push_s / self.state.len().max(1) as f64;
-        for (c, &cnt) in counts.iter().enumerate() {
-            self.load_acc[c] += cnt as f64 * per_particle;
-        }
-        self.steps_done += 1;
-        self.steps_since_lb += 1;
-
-        // Aggregate the crosser log per directed (from, to) pair.
-        crate::model::graph::sort_sum_merge(&mut self.moved_log);
-        let moved = self.moved_log.clone();
-        Ok(StepStats { push_s, moved, crossers })
-    }
-
     /// Adjacent chare pairs (8-neighborhood, periodic), each once with
-    /// `a < b`. Every time step each pair exchanges a synchronization
-    /// message (possibly empty) — the Charm++ PIC PRK pattern: a chare
-    /// must hear from all neighbors to know every incoming particle
-    /// arrived. The driver charges α per such message, so scattering
-    /// chares across nodes directly shows up as communication time.
+    /// `a < b` — see [`chare_neighbor_pairs`].
     pub fn chare_neighbor_pairs(&self) -> Vec<(u32, u32)> {
         chare_neighbor_pairs(&self.cfg)
     }
@@ -247,7 +187,8 @@ impl PicApp {
 
     /// Snapshot the LB problem: drains traffic and accumulated loads.
     pub fn build_instance(&mut self) -> Instance {
-        let counts = self.chare_particle_counts();
+        let counts: Vec<f64> =
+            self.chare_particle_counts().iter().map(|&c| c as f64).collect();
         let inst = assemble_instance(
             &self.cfg,
             &counts,
@@ -278,7 +219,7 @@ impl PicApp {
     }
 
     /// PRK-style analytic verification of every particle's position.
-    pub fn verify(&self) -> Result<(), String> {
+    pub fn verify(&self) -> std::result::Result<(), String> {
         verify::verify_positions(
             &self.x0,
             &self.y0,
@@ -292,19 +233,102 @@ impl PicApp {
     }
 }
 
-/// Assemble the LB problem instance from per-chare particle counts,
-/// accumulated (measured) loads, and the traffic recorder — the
-/// **single definition** of the instance both drivers balance.
-/// [`PicApp::build_instance`] calls this against the app's state; the
-/// distributed driver's root calls it against its gathered replicas.
-/// The sequential-vs-distributed bit-identity guarantee depends on
-/// there being exactly one copy of this sequence (sync-traffic record,
-/// incremental comm-graph refresh, load fallback, coords, sizes).
-/// The caller owns resetting `steps_since_lb` / the measured loads.
+impl App for PicApp {
+    fn name(&self) -> &'static str {
+        "pic"
+    }
+
+    fn topo(&self) -> Topology {
+        self.cfg.topo
+    }
+
+    fn n_objects(&self) -> usize {
+        self.n_chares()
+    }
+
+    fn mapping(&self) -> &[u32] {
+        &self.chare_to_pe
+    }
+
+    fn neighbor_pairs(&self) -> Vec<(u32, u32)> {
+        self.neighbor_pairs.clone()
+    }
+
+    /// One time step: push all particles, re-bin crossers, account
+    /// traffic and load. Crossings go straight to the driver's reused
+    /// `ctx.moved` log (no per-step allocation); the driver aggregates
+    /// them with the same stable sort-merge the recorder uses.
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepStats> {
+        let t = Instant::now();
+        match &self.backend {
+            Backend::Native => {
+                push::native_push(&mut self.state, self.cfg.grid as f64, self.cfg.q, self.cfg.threads)
+            }
+            Backend::Pjrt(engine) => {
+                engine.pic_push(&mut self.state, self.cfg.grid as f64, self.cfg.q)?
+            }
+        }
+        let compute_s = t.elapsed().as_secs_f64();
+
+        let mut events = 0usize;
+        for i in 0..self.state.len() {
+            let nc = self.chare_of_pos(self.state.x[i], self.state.y[i]);
+            let oc = self.chare_of[i];
+            if nc != oc {
+                events += 1;
+                self.traffic.record(oc, nc, self.cfg.particle_bytes);
+                ctx.moved.push((oc, nc, self.cfg.particle_bytes));
+                self.chare_of[i] = nc;
+            }
+        }
+
+        // Load attribution: measured push time split by particle count.
+        let counts = self.chare_particle_counts();
+        let per_particle = compute_s / self.state.len().max(1) as f64;
+        for (c, &cnt) in counts.iter().enumerate() {
+            self.load_acc[c] += cnt as f64 * per_particle;
+        }
+        self.steps_done += 1;
+        self.steps_since_lb += 1;
+
+        Ok(StepStats { compute_s, events })
+    }
+
+    fn work(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.n_chares(), 0.0);
+        for &c in &self.chare_of {
+            out[c as usize] += 1.0;
+        }
+    }
+
+    fn build_instance(&mut self) -> Instance {
+        PicApp::build_instance(self)
+    }
+
+    fn apply(&mut self, asg: &Assignment) -> f64 {
+        self.apply_assignment(asg)
+    }
+
+    fn verify(&self) -> std::result::Result<(), String> {
+        PicApp::verify(self)
+    }
+}
+
+/// Assemble the LB problem instance from per-chare particle counts (as
+/// exact-integer f64 work units), accumulated (measured) loads, and the
+/// traffic recorder — the **single definition** of the instance both
+/// drivers balance. [`PicApp::build_instance`] calls this against the
+/// app's state; the distributed driver's root calls it against its
+/// gathered replicas. The sequential-vs-distributed bit-identity
+/// guarantee depends on there being exactly one copy of this sequence
+/// (sync-traffic record, incremental comm-graph refresh, load fallback,
+/// coords, sizes). The caller owns resetting `steps_since_lb` / the
+/// measured loads.
 #[allow(clippy::too_many_arguments)]
 pub fn assemble_instance(
     cfg: &PicConfig,
-    counts: &[u32],
+    counts: &[f64],
     measured_loads: &[f64],
     mapping: Vec<u32>,
     steps_since_lb: usize,
@@ -332,7 +356,7 @@ pub fn assemble_instance(
     let loads: Vec<f64> = if measured > 0.0 {
         measured_loads.to_vec()
     } else {
-        counts.iter().map(|&c| c as f64).collect()
+        counts.to_vec()
     };
     let cw = (cfg.grid / cfg.chares_x) as f64;
     let ch = (cfg.grid / cfg.chares_y) as f64;
@@ -344,7 +368,7 @@ pub fn assemble_instance(
         })
         .collect();
     let mut inst = Instance::new(loads, coords, graph, mapping, cfg.topo);
-    inst.sizes = counts.iter().map(|&c| (c as f64) * cfg.particle_bytes).collect();
+    inst.sizes = counts.iter().map(|&c| c * cfg.particle_bytes).collect();
     inst
 }
 
@@ -367,80 +391,19 @@ pub fn chare_of_pos(cfg: &PicConfig, x: f64, y: f64) -> u32 {
 /// arrived. The driver charges α per such message, so scattering
 /// chares across nodes directly shows up as communication time.
 pub fn chare_neighbor_pairs(cfg: &PicConfig) -> Vec<(u32, u32)> {
-    let (cx, cy) = (cfg.chares_x as i64, cfg.chares_y as i64);
-    let mut pairs = Vec::with_capacity((cx * cy * 4) as usize);
-    for y in 0..cy {
-        for x in 0..cx {
-            let a = (y * cx + x) as u32;
-            for (dx, dy) in [(1i64, 0i64), (0, 1), (1, 1), (1, -1)] {
-                let nx = (x + dx).rem_euclid(cx);
-                let ny = (y + dy).rem_euclid(cy);
-                let b = (ny * cx + nx) as u32;
-                if a != b {
-                    pairs.push((a.min(b), a.max(b)));
-                }
-            }
-        }
-    }
-    pairs.sort_unstable();
-    pairs.dedup();
-    pairs
+    crate::apps::grid_neighbor_pairs(cfg.chares_x, cfg.chares_y, true)
 }
 
 /// Initial chare→PE mapping per the paper's striped/quad modes (public
 /// so the distributed driver seeds its replicas identically).
 pub fn initial_mapping(cfg: &PicConfig) -> Vec<u32> {
-    let n_chares = cfg.chares_x * cfg.chares_y;
-    let n_pes = cfg.topo.n_pes();
-    match cfg.decomp {
-        // column-major order striping: high inter-PE traffic as
-        // particles sweep rightward (paper §VI-A)
-        Decomposition::Striped => (0..n_chares)
-            .map(|c| {
-                let cx = c % cfg.chares_x;
-                let cy = c / cfg.chares_x;
-                let cm = cx * cfg.chares_y + cy;
-                ((cm * n_pes) / n_chares) as u32
-            })
-            .collect(),
-        Decomposition::Tiled => {
-            // choose the px x py factorization of n_pes whose aspect
-            // ratio best matches the chare grid, then tile
-            // proportionally (no divisibility requirement)
-            let want = cfg.chares_x as f64 / cfg.chares_y as f64;
-            let mut best = (n_pes, 1usize);
-            let mut best_err = f64::INFINITY;
-            for px in 1..=n_pes {
-                if n_pes % px != 0 || px > cfg.chares_x {
-                    continue;
-                }
-                let py = n_pes / px;
-                if py > cfg.chares_y {
-                    continue;
-                }
-                let err = ((px as f64 / py as f64).ln() - want.ln()).abs();
-                if err < best_err {
-                    best_err = err;
-                    best = (px, py);
-                }
-            }
-            let (px, py) = best;
-            (0..n_chares)
-                .map(|c| {
-                    let cx = c % cfg.chares_x;
-                    let cy = c / cfg.chares_x;
-                    let tx = (cx * px / cfg.chares_x).min(px - 1);
-                    let ty = (cy * py / cfg.chares_y).min(py - 1);
-                    (ty * px + tx) as u32
-                })
-                .collect()
-        }
-    }
+    crate::apps::grid_mapping(cfg.chares_x, cfg.chares_y, cfg.topo.n_pes(), cfg.decomp)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::apps::app::step_once;
 
     fn small_cfg() -> PicConfig {
         PicConfig {
@@ -487,7 +450,7 @@ mod tests {
         let mut app = PicApp::new(small_cfg(), Backend::Native).unwrap();
         let mut crossers = 0;
         for _ in 0..8 {
-            crossers += app.step().unwrap().crossers;
+            crossers += step_once(&mut app).unwrap().events;
         }
         // displacement 3 cells/step, chare width 16 -> crossings happen
         assert!(crossers > 0);
@@ -497,10 +460,26 @@ mod tests {
     }
 
     #[test]
+    fn step_fills_crossing_records() {
+        let mut app = PicApp::new(small_cfg(), Backend::Native).unwrap();
+        let mut ctx = StepCtx::default();
+        let mut records = 0usize;
+        for _ in 0..6 {
+            ctx.moved.clear();
+            let stats = App::step(&mut app, &mut ctx).unwrap();
+            assert_eq!(ctx.moved.len(), stats.events, "one record per crosser");
+            records += ctx.moved.len();
+            let n = app.n_chares() as u32;
+            assert!(ctx.moved.iter().all(|&(f, t, b)| f < n && t < n && b == 48.0));
+        }
+        assert!(records > 0);
+    }
+
+    #[test]
     fn verification_through_lb_migrations() {
         let mut app = PicApp::new(small_cfg(), Backend::Native).unwrap();
         for i in 0..10 {
-            app.step().unwrap();
+            step_once(&mut app).unwrap();
             if i % 3 == 2 {
                 // shuffle chares across PEs; particle physics must be
                 // unaffected by placement
@@ -514,7 +493,7 @@ mod tests {
                 app.apply_assignment(&asg);
             }
         }
-        app.verify().expect("verification failed");
+        PicApp::verify(&app).expect("verification failed");
     }
 
     #[test]
@@ -530,11 +509,24 @@ mod tests {
     #[test]
     fn instance_sizes_reflect_particles() {
         let mut app = PicApp::new(small_cfg(), Backend::Native).unwrap();
-        app.step().unwrap();
+        step_once(&mut app).unwrap();
         let counts = app.chare_particle_counts();
         let inst = app.build_instance();
         for (c, &cnt) in counts.iter().enumerate() {
             assert_eq!(inst.sizes[c], cnt as f64 * 48.0);
+        }
+    }
+
+    #[test]
+    fn work_matches_particle_counts() {
+        let mut app = PicApp::new(small_cfg(), Backend::Native).unwrap();
+        step_once(&mut app).unwrap();
+        let mut work = Vec::new();
+        app.work(&mut work);
+        let counts = app.chare_particle_counts();
+        assert_eq!(work.len(), counts.len());
+        for (w, &c) in work.iter().zip(&counts) {
+            assert_eq!(*w, c as f64);
         }
     }
 }

@@ -7,6 +7,9 @@
 //! tiled ("quad"), striped, or ring decomposition. Injectors then
 //! perturb per-object loads the way each experiment prescribes.
 
+use anyhow::Result;
+
+use crate::apps::app::{App, StepCtx, StepStats};
 use crate::model::{Assignment, CommGraph, Instance, Topology, TrafficRecorder};
 use crate::util::rng::Rng;
 
@@ -97,20 +100,30 @@ pub fn ring(n_pes: usize, objs_per_pe: usize) -> Instance {
 
 // ------------------------------------------------------- stepping sim
 
-/// Round-based stencil workload driver: each LB period re-rolls the
-/// per-object load noise and re-records the halo traffic, refreshing
-/// the instance's communication graph **incrementally**
+/// Round-based stencil workload as an [`App`]: each step re-rolls the
+/// per-object load noise and re-records the halo traffic; each LB
+/// round ([`App::build_instance`]) folds that traffic into the
+/// instance's communication graph **incrementally**
 /// ([`CommGraph::update_from_recorder`]). A stencil's adjacency is
 /// static, so after the first round every refresh takes the
 /// weights-only fast path — the "communication graph of persistently
 /// interacting objects changes slowly" pattern the incremental rebuild
 /// exists for, exercised here and measured in `benches/perf_hotpaths`.
+/// The ad-hoc advance/rebalance loop this struct used to run privately
+/// is gone: the generic driver owns the loop now.
 pub struct StencilSim {
     pub inst: Instance,
     recorder: TrafficRecorder,
     rng: Rng,
     noise: f64,
+    /// Steps taken (one load re-roll + halo record per step).
     pub rounds: usize,
+    /// Whether the last graph refresh changed the CSR structure
+    /// (always `false` for a static stencil after round one — the
+    /// weights-only fast path under test).
+    pub graph_changed: bool,
+    /// Unordered (a < b) halo pairs, cached from the static adjacency.
+    pairs: Vec<(u32, u32)>,
 }
 
 impl StencilSim {
@@ -123,41 +136,106 @@ impl StencilSim {
         seed: u64,
     ) -> StencilSim {
         let inst = stencil_2d(side, px, py, decomp);
+        let pairs = halo_pairs(&inst.graph);
         StencilSim {
             recorder: TrafficRecorder::new(inst.n_objects()),
             inst,
             rng: Rng::new(seed),
             noise,
             rounds: 0,
+            graph_changed: false,
+            pairs,
         }
     }
 
-    /// Advance one LB period: new load noise, halo traffic re-recorded
-    /// and folded into the instance's graph in place. Returns whether
-    /// the graph structure changed (always `false` for a static
-    /// stencil, whose adjacency the constructor already established —
-    /// the weights-only fast path under test).
-    pub fn advance(&mut self) -> bool {
+    /// Fold the recorded halo traffic into the instance's graph in
+    /// place (the incremental-refresh hot path, benched on its own in
+    /// `perf_hotpaths`). Returns whether the structure changed.
+    pub fn refresh_graph(&mut self) -> bool {
+        self.graph_changed = self.inst.graph.update_from_recorder(&mut self.recorder);
+        self.graph_changed
+    }
+}
+
+/// Unordered (a < b) edge list of a static comm graph — the stencil's
+/// sync-message partners.
+fn halo_pairs(graph: &CommGraph) -> Vec<(u32, u32)> {
+    let mut pairs = Vec::with_capacity(graph.edge_count());
+    for a in 0..graph.n {
+        for &b in graph.neighbors(a) {
+            if (a as u32) < b {
+                pairs.push((a as u32, b));
+            }
+        }
+    }
+    pairs
+}
+
+impl App for StencilSim {
+    fn name(&self) -> &'static str {
+        "stencil"
+    }
+
+    fn topo(&self) -> Topology {
+        self.inst.topo
+    }
+
+    fn n_objects(&self) -> usize {
+        self.inst.n_objects()
+    }
+
+    fn mapping(&self) -> &[u32] {
+        &self.inst.mapping
+    }
+
+    fn neighbor_pairs(&self) -> Vec<(u32, u32)> {
+        self.pairs.clone()
+    }
+
+    /// One stencil round: re-roll the per-object load noise (one
+    /// deterministic rng draw per object, in object order) and exchange
+    /// one halo payload per edge, recorded both for the LB instance's
+    /// comm graph and as this step's crossing records.
+    fn step(&mut self, ctx: &mut StepCtx) -> Result<StepStats> {
+        let t = std::time::Instant::now();
         for l in self.inst.loads.iter_mut() {
             *l = 1.0 + self.noise * (2.0 * self.rng.f64() - 1.0);
         }
-        {
-            let (graph, rec) = (&self.inst.graph, &mut self.recorder);
-            for a in 0..graph.n {
-                for &b in graph.neighbors(a) {
-                    if (a as u32) < b {
-                        rec.record(a as u32, b, HALO_BYTES);
-                    }
-                }
-            }
+        for &(a, b) in &self.pairs {
+            self.recorder.record(a, b, HALO_BYTES);
+            ctx.moved.push((a, b, HALO_BYTES));
         }
         self.rounds += 1;
-        self.inst.graph.update_from_recorder(&mut self.recorder)
+        Ok(StepStats { compute_s: t.elapsed().as_secs_f64(), events: self.pairs.len() })
     }
 
-    /// Adopt a strategy's assignment as the next round's mapping.
-    pub fn apply(&mut self, asg: &Assignment) {
+    fn work(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(&self.inst.loads);
+    }
+
+    fn build_instance(&mut self) -> Instance {
+        self.refresh_graph();
+        // The owned return is a flat memcpy of the live instance — an
+        // O(objects + edges) copy the pre-trait loop didn't pay, but
+        // still far below the rebalance it feeds (the driver also
+        // mutates `loads` under `deterministic_loads`, so it needs its
+        // own copy). Revisit only if profiles ever show otherwise.
+        self.inst.clone()
+    }
+
+    /// Adopt a strategy's assignment as the next round's mapping;
+    /// migration payload is the instance's per-object sizes.
+    fn apply(&mut self, asg: &Assignment) -> f64 {
+        assert_eq!(asg.mapping.len(), self.inst.n_objects());
+        let mut bytes = 0.0;
+        for (o, (&new_pe, &old_pe)) in asg.mapping.iter().zip(&self.inst.mapping).enumerate() {
+            if new_pe != old_pe {
+                bytes += self.inst.sizes[o];
+            }
+        }
         self.inst.mapping.clone_from(&asg.mapping);
+        bytes
     }
 }
 
@@ -266,13 +344,18 @@ mod tests {
     fn stencil_sim_refreshes_incrementally() {
         let mut sim = StencilSim::new(12, 2, 2, Decomposition::Tiled, 0.4, 9);
         let structure = sim.inst.graph.clone();
+        let mut ctx = crate::apps::StepCtx::default();
         for round in 0..4 {
-            let changed = sim.advance();
-            assert!(!changed, "static stencil rebuilt CSR in round {round}");
+            ctx.moved.clear();
+            sim.step(&mut ctx).unwrap();
+            let inst = sim.build_instance();
+            assert!(!sim.graph_changed, "static stencil rebuilt CSR in round {round}");
             // structure intact, weights refreshed to one period of halo
-            assert_eq!(sim.inst.graph, structure);
-            assert!(sim.inst.validate().is_ok());
-            assert!(sim.inst.loads.iter().all(|&l| (0.6..=1.4).contains(&l)));
+            assert_eq!(inst.graph, structure);
+            assert!(inst.validate().is_ok());
+            assert!(inst.loads.iter().all(|&l| (0.6..=1.4).contains(&l)));
+            // one crossing record per halo edge
+            assert_eq!(ctx.moved.len(), inst.graph.edge_count());
         }
         assert_eq!(sim.rounds, 4);
         // an assignment round-trips into the next instance

@@ -1,15 +1,26 @@
 //! The leader/coordinator: resolves a [`Config`] into an application +
-//! topology + strategy + schedule, runs it, and reports the paper's
-//! metrics. This is the programmatic API behind the `difflb` CLI and
-//! the examples; benches drive the pieces directly.
+//! topology + strategy + schedule, runs it through the generic driver,
+//! and reports the paper's metrics. This is the programmatic API behind
+//! the `difflb` CLI and the examples; benches drive the pieces
+//! directly.
+//!
+//! Applications are resolved by the `app.kind` registry
+//! ([`app_from_config`], names in
+//! [`AVAILABLE_APPS`](crate::apps::AVAILABLE_APPS)) exactly like
+//! strategies are by [`strategies::make`] — one `Config` fully
+//! describes a run of any workload under any strategy, sequential or
+//! distributed.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::apps::driver::{run_pic, DriverConfig, RunReport};
+use crate::apps::advect::{Advect, AdvectConfig};
+use crate::apps::driver::{run_app, DriverConfig, RunReport};
+use crate::apps::hotspot::{Hotspot, HotspotConfig};
 use crate::apps::pic::{Backend, InitMode, PicApp, PicConfig};
-use crate::apps::stencil::Decomposition;
+use crate::apps::stencil::{Decomposition, StencilSim};
+use crate::apps::{App, AVAILABLE_APPS};
 use crate::model::{evaluate, Instance, LbMetrics, Topology};
 use crate::runtime::Engine;
 use crate::simnet::NetModel;
@@ -23,22 +34,16 @@ pub struct Coordinator {
     pub driver: DriverConfig,
 }
 
-/// Strategy parameters from a config (section `lb`).
-pub fn params_from_config(cfg: &Config) -> StrategyParams {
-    let d = StrategyParams::default();
-    StrategyParams {
-        neighbor_count: cfg.get_or("lb.neighbors", d.neighbor_count),
-        handshake_max_rounds: cfg.get_or("lb.handshake_rounds", d.handshake_max_rounds),
-        vlb_tolerance: cfg.get_or("lb.vlb_tolerance", d.vlb_tolerance),
-        vlb_max_iters: cfg.get_or("lb.vlb_max_iters", d.vlb_max_iters),
-        overfill: cfg.get_or("lb.overfill", d.overfill),
-        refine_tolerance: cfg.get_or("lb.refine_tolerance", d.refine_tolerance),
-        balance_tolerance: cfg.get_or("lb.balance_tolerance", d.balance_tolerance),
-        itr: cfg.get_or("lb.itr", d.itr),
-        sfc_window: cfg.get_or("lb.sfc_window", d.sfc_window),
-        reuse_neighbors: cfg.get_bool_or("lb.reuse_neighbors", d.reuse_neighbors),
-        seed: cfg.get_or("lb.seed", d.seed),
+fn decomp_from(cfg: &Config, key: &str, default: &str) -> Result<Decomposition> {
+    match cfg.get(key).unwrap_or(default) {
+        "striped" => Ok(Decomposition::Striped),
+        "tiled" | "quad" => Ok(Decomposition::Tiled),
+        other => bail!("unknown {key} '{other}'"),
     }
+}
+
+fn topo_from_config(cfg: &Config) -> Topology {
+    Topology::new(cfg.get_or("topo.nodes", 4), cfg.get_or("topo.pes_per_node", 1))
 }
 
 /// PIC app configuration from a config (section `pic` + `topo`).
@@ -56,11 +61,6 @@ pub fn pic_from_config(cfg: &Config) -> Result<PicConfig> {
         },
         other => bail!("unknown pic.init '{other}'"),
     };
-    let decomp = match cfg.get("pic.decomp").unwrap_or("striped") {
-        "striped" => Decomposition::Striped,
-        "tiled" | "quad" => Decomposition::Tiled,
-        other => bail!("unknown pic.decomp '{other}'"),
-    };
     Ok(PicConfig {
         grid: cfg.get_or("pic.grid", d.grid),
         n_particles: cfg.get_or("pic.particles", d.n_particles),
@@ -69,15 +69,76 @@ pub fn pic_from_config(cfg: &Config) -> Result<PicConfig> {
         init,
         chares_x: cfg.get_or("pic.chares_x", d.chares_x),
         chares_y: cfg.get_or("pic.chares_y", d.chares_y),
-        decomp,
-        topo: Topology::new(
-            cfg.get_or("topo.nodes", 4),
-            cfg.get_or("topo.pes_per_node", 1),
-        ),
+        decomp: decomp_from(cfg, "pic.decomp", "striped")?,
+        topo: topo_from_config(cfg),
         q: cfg.get_or("pic.q", d.q),
         seed: cfg.get_or("pic.seed", d.seed),
         particle_bytes: cfg.get_or("pic.particle_bytes", d.particle_bytes),
         threads: cfg.get_or("pic.threads", d.threads),
+    })
+}
+
+/// Advection app configuration from a config (section `advect` + `topo`).
+pub fn advect_from_config(cfg: &Config) -> Result<AdvectConfig> {
+    let d = AdvectConfig::default();
+    Ok(AdvectConfig {
+        domain: cfg.get_or("advect.domain", d.domain),
+        blocks_x: cfg.get_or("advect.blocks_x", d.blocks_x),
+        blocks_y: cfg.get_or("advect.blocks_y", d.blocks_y),
+        n_particles: cfg.get_or("advect.particles", d.n_particles),
+        dt: cfg.get_or("advect.dt", d.dt),
+        amplitude: cfg.get_or("advect.amplitude", d.amplitude),
+        max_substeps: cfg.get_or("advect.max_substeps", d.max_substeps),
+        decomp: decomp_from(cfg, "advect.decomp", "striped")?,
+        topo: topo_from_config(cfg),
+        seed: cfg.get_or("advect.seed", d.seed),
+        particle_bytes: cfg.get_or("advect.particle_bytes", d.particle_bytes),
+    })
+}
+
+/// Hotspot app configuration from a config (section `hotspot` + `topo`).
+pub fn hotspot_from_config(cfg: &Config) -> Result<HotspotConfig> {
+    let d = HotspotConfig::default();
+    Ok(HotspotConfig {
+        nx: cfg.get_or("hotspot.nx", d.nx),
+        ny: cfg.get_or("hotspot.ny", d.ny),
+        base: cfg.get_or("hotspot.base", d.base),
+        amp: cfg.get_or("hotspot.amp", d.amp),
+        sigma: cfg.get_or("hotspot.sigma", d.sigma),
+        vx: cfg.get_or("hotspot.vx", d.vx),
+        vy: cfg.get_or("hotspot.vy", d.vy),
+        halo_bytes: cfg.get_or("hotspot.halo_bytes", d.halo_bytes),
+        object_bytes: cfg.get_or("hotspot.object_bytes", d.object_bytes),
+        decomp: decomp_from(cfg, "hotspot.decomp", "tiled")?,
+        topo: topo_from_config(cfg),
+    })
+}
+
+/// The application registry: resolve `app.kind` (default `pic`) into a
+/// boxed [`App`] — the workload twin of [`strategies::make`]. Names in
+/// [`AVAILABLE_APPS`].
+pub fn app_from_config(cfg: &Config) -> Result<Box<dyn App>> {
+    Ok(match cfg.get("app.kind").unwrap_or("pic") {
+        "pic" => {
+            let pic_cfg = pic_from_config(cfg)?;
+            let backend = Coordinator::backend(cfg)?;
+            Box::new(PicApp::new(pic_cfg, backend).context("initializing PIC app")?)
+        }
+        "stencil" => Box::new(StencilSim::new(
+            cfg.get_or("stencil.side", 24),
+            cfg.get_or("stencil.px", 2),
+            cfg.get_or("stencil.py", 2),
+            decomp_from(cfg, "stencil.decomp", "tiled")?,
+            cfg.get_or("stencil.noise", 0.4),
+            cfg.get_or("stencil.seed", 0x57E_u64),
+        )),
+        "advect" => {
+            Box::new(Advect::new(advect_from_config(cfg)?).context("initializing advect app")?)
+        }
+        "hotspot" => Box::new(
+            Hotspot::new(hotspot_from_config(cfg)?).context("initializing hotspot app")?,
+        ),
+        other => bail!("unknown app.kind '{other}' (available: {AVAILABLE_APPS:?})"),
     })
 }
 
@@ -91,13 +152,49 @@ pub fn net_from_config(cfg: &Config) -> NetModel {
     }
 }
 
+/// Config-typo detection: every key that was set but never resolved by
+/// a getter is reported — as an error under `run.strict_config`, as a
+/// warning otherwise. Call after the run has resolved everything it
+/// intends to read (`get_or` silently defaults, so a typo'd key is
+/// invisible without this). Sections belonging to registered but
+/// *inactive* apps are exempt: a shared config may legitimately carry
+/// `[pic]` and `[hotspot]` at once, and each section's typos are
+/// caught on the run that actually uses it.
+pub fn check_config_read(cfg: &Config) -> Result<()> {
+    let strict = cfg.get_bool_or("run.strict_config", false);
+    let active = cfg.get("app.kind").unwrap_or("pic").to_string();
+    let unread: Vec<String> = cfg
+        .unread_keys()
+        .into_iter()
+        .filter(|k| {
+            !AVAILABLE_APPS.iter().any(|app| {
+                *app != active
+                    && k.starts_with(app)
+                    && k.as_bytes().get(app.len()) == Some(&b'.')
+            })
+        })
+        .collect();
+    if unread.is_empty() {
+        return Ok(());
+    }
+    if strict {
+        bail!(
+            "config keys set but never read: {} (typo? run.strict_config=false downgrades \
+             this to a warning)",
+            unread.join(", ")
+        );
+    }
+    crate::warn!("config keys set but never read (typo?): {}", unread.join(", "));
+    Ok(())
+}
+
 impl Coordinator {
     /// Build from a layered config. `lb.mode = distributed` (or
     /// `run.mode = distributed`, which also switches the app driver)
     /// swaps the diffusion strategy for its message-passing-protocol
     /// execution (`dist-diff-*`, see `crate::distributed`).
     pub fn from_config(cfg: &Config) -> Result<Coordinator> {
-        let params = params_from_config(cfg);
+        let params = StrategyParams::from_config(cfg);
         for key in ["run.mode", "lb.mode"] {
             if let Some(v) = cfg.get(key) {
                 if !matches!(v, "sequential" | "distributed") {
@@ -153,20 +250,17 @@ impl Coordinator {
         }
     }
 
-    /// Run the PIC PRK app end to end. With `run.mode = distributed`
-    /// the run executes on the node-partitioned distributed driver
+    /// Run the configured workload (`app.kind`) end to end through the
+    /// generic driver. With `run.mode = distributed` the run executes
+    /// on the node-partitioned distributed driver
     /// (`crate::distributed::driver`): one simulated node per topology
-    /// node, real particle exchange, and the LB pipeline inline as
-    /// message-passing protocols.
-    pub fn run_pic(&self, cfg: &Config) -> Result<RunReport> {
-        let pic_cfg = pic_from_config(cfg)?;
-        if matches!(cfg.get("run.mode"), Some("distributed")) {
-            if matches!(cfg.get("pic.backend"), Some("pjrt")) {
-                bail!(
-                    "run.mode = distributed is native-only: each simulated node \
-                     pushes its own partition (pic.backend = pjrt is unsupported here)"
-                );
-            }
+    /// node, real payload exchange, and the LB pipeline inline as
+    /// message-passing protocols — supported for the node-partitionable
+    /// apps (`pic`, `hotspot`). Finishes with the config-typo check
+    /// ([`check_config_read`]).
+    pub fn run(&self, cfg: &Config) -> Result<RunReport> {
+        let kind = cfg.get("app.kind").unwrap_or("pic").to_string();
+        let report = if matches!(cfg.get("run.mode"), Some("distributed")) {
             let variant = match self.strategy.name() {
                 "diff-comm" | "dist-diff-comm" => {
                     crate::strategies::diffusion::Variant::Communication
@@ -174,18 +268,42 @@ impl Coordinator {
                 "diff-coord" | "dist-diff-coord" => {
                     crate::strategies::diffusion::Variant::Coordinate
                 }
-                other => bail!("run.mode = distributed requires a diffusion strategy (got '{other}')"),
+                other => {
+                    bail!("run.mode = distributed requires a diffusion strategy (got '{other}')")
+                }
             };
-            return crate::distributed::driver::run_pic_distributed(
-                &pic_cfg,
-                variant,
-                self.params,
-                &self.driver,
-            );
-        }
-        let backend = Self::backend(cfg)?;
-        let mut app = PicApp::new(pic_cfg, backend).context("initializing PIC app")?;
-        run_pic(&mut app, self.strategy.as_ref(), &self.driver)
+            match kind.as_str() {
+                "pic" => {
+                    if matches!(cfg.get("pic.backend"), Some("pjrt")) {
+                        bail!(
+                            "run.mode = distributed is native-only: each simulated node \
+                             pushes its own partition (pic.backend = pjrt is unsupported here)"
+                        );
+                    }
+                    crate::distributed::driver::run_pic_distributed(
+                        &pic_from_config(cfg)?,
+                        variant,
+                        self.params,
+                        &self.driver,
+                    )?
+                }
+                "hotspot" => crate::distributed::driver::run_hotspot_distributed(
+                    &hotspot_from_config(cfg)?,
+                    variant,
+                    self.params,
+                    &self.driver,
+                )?,
+                other => bail!(
+                    "run.mode = distributed needs a node-partitionable app \
+                     (pic, hotspot); got '{other}'"
+                ),
+            }
+        } else {
+            let mut app = app_from_config(cfg)?;
+            run_app(app.as_mut(), self.strategy.as_ref(), &self.driver)?
+        };
+        check_config_read(cfg)?;
+        Ok(report)
     }
 
     /// Balance one instance and report paper metrics.
@@ -229,9 +347,76 @@ mod tests {
         )
         .unwrap();
         let coord = Coordinator::from_config(&cfg).unwrap();
-        let rep = coord.run_pic(&cfg).unwrap();
+        let rep = coord.run(&cfg).unwrap();
         assert_eq!(rep.records.len(), 6);
         assert!(rep.verified);
+    }
+
+    #[test]
+    fn registry_builds_every_app() {
+        for kind in AVAILABLE_APPS {
+            let mut cfg = Config::new();
+            cfg.set("app.kind", kind);
+            // keep construction cheap across all kinds
+            cfg.set("pic.grid", 32);
+            cfg.set("pic.particles", 200);
+            cfg.set("pic.chares_x", 4);
+            cfg.set("pic.chares_y", 4);
+            cfg.set("pic.backend", "native");
+            cfg.set("advect.particles", 500);
+            cfg.set("stencil.side", 8);
+            let app = app_from_config(&cfg).unwrap();
+            assert_eq!(&app.name(), kind);
+            assert!(app.n_objects() > 0);
+        }
+        let mut bad = Config::new();
+        bad.set("app.kind", "nope");
+        assert!(app_from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn strict_config_rejects_typos() {
+        let cfg = Config::from_str(
+            "[lb]\nstrategy = diff-comm\nneighbours = 6\n[run]\nstrict_config = true\n\
+             iters = 2\nlb_period = 0\n\
+             [pic]\ngrid = 32\nparticles = 100\nchares_x = 4\nchares_y = 4\nbackend = native\nthreads = 1",
+        )
+        .unwrap();
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let err = coord.run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("lb.neighbours"), "{err}");
+        // the same config without the typo'd key passes
+        let ok = Config::from_str(
+            "[lb]\nstrategy = diff-comm\nneighbors = 6\n[run]\nstrict_config = true\n\
+             iters = 2\nlb_period = 0\n\
+             [pic]\ngrid = 32\nparticles = 100\nchares_x = 4\nchares_y = 4\nbackend = native\nthreads = 1",
+        )
+        .unwrap();
+        let coord = Coordinator::from_config(&ok).unwrap();
+        assert!(coord.run(&ok).is_ok());
+    }
+
+    #[test]
+    fn strict_config_tolerates_other_apps_sections() {
+        // a shared config may describe several workloads at once; only
+        // the active app's (and non-app) sections are typo-checked
+        let cfg = Config::from_str(
+            "[app]\nkind = hotspot\n[run]\nstrict_config = true\niters = 2\nlb_period = 0\n\
+             [hotspot]\nnx = 8\nny = 8\n\
+             [pic]\ngrid = 64\nparticles = 500\n[advect]\nparticles = 900",
+        )
+        .unwrap();
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        coord.run(&cfg).expect("inactive [pic]/[advect] sections must not trip strict mode");
+        // but a typo in the *active* app's section still errors
+        let bad = Config::from_str(
+            "[app]\nkind = hotspot\n[run]\nstrict_config = true\niters = 2\nlb_period = 0\n\
+             [hotspot]\nnx = 8\nny = 8\nsigmaa = 3.0",
+        )
+        .unwrap();
+        let coord = Coordinator::from_config(&bad).unwrap();
+        let err = coord.run(&bad).unwrap_err().to_string();
+        assert!(err.contains("hotspot.sigmaa"), "{err}");
     }
 
     #[test]

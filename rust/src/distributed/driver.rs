@@ -1,26 +1,37 @@
-//! Distributed PIC driver: the PIC PRK benchmark executed with
-//! **node-partitioned particle state** over a [`Cluster`] — each
-//! simulated node owns the particles of the chares mapped to its PEs,
-//! pushes only those, ships chare-crossing particles to their new
-//! owners as real messages, and every `lb_period` steps runs the full
-//! distributed LB pipeline ([`node_pipeline`]) inline on the same
-//! [`Comm`] endpoints, then realizes the resulting chare migrations by
-//! transferring the affected particles between nodes.
+//! Distributed application driver: any node-partitionable [`App`]
+//! executed over a [`Cluster`] — each simulated node owns the objects
+//! mapped to its PEs (plus whatever payload they carry), steps only its
+//! partition, ships owner-crossing payload to the new owners as real
+//! messages, and every `lb_period` steps runs the full distributed LB
+//! pipeline ([`node_pipeline`]) inline on the same [`Comm`] endpoints,
+//! then realizes the resulting object migrations as real transfers.
+//!
+//! The app-specific pieces live behind two traits: [`DistApp`] (shared
+//! read-only bootstrap + root-side instance assembly/verification) and
+//! [`DistNode`] (one node's partition: step, payload serialization,
+//! work/measured-load reporting). Everything protocol-shaped — step
+//! tags, accounting gathers, the `.lbi` broadcast, migration
+//! handshakes, the final verification gather — is generic and written
+//! once. Implementations: PIC ([`run_pic_distributed`], particles as
+//! payload) and the drifting hotspot ([`run_hotspot_distributed`],
+//! analytic loads, no payload) — `tests/distributed.rs` asserts
+//! seq-vs-dist bit-identity for **both**.
 //!
 //! Accounting mirrors the sequential driver
-//! ([`crate::apps::driver::run_pic`]) exactly where it is modeled:
-//! per-step chare-crossing records are gathered at rank 0 as **counts**
-//! and re-expanded into per-crossing `particle_bytes` records, so the
-//! root's [`TrafficRecorder`] → [`CommGraph::update_from_recorder`]
-//! incremental path accumulates bit-identical edge weights to the
-//! sequential app's recorder, and the per-step modeled communication
-//! seconds come from the shared
-//! [`account_step_comm`] arithmetic over
-//! per-pair aggregates that match the sequential ones to the last bit.
-//! With `deterministic_loads` set, the LB instances — and therefore the
+//! ([`crate::apps::driver::run_app`]) exactly where it is modeled:
+//! per-step owner-crossing records are gathered at rank 0 as **unit
+//! counts** and re-expanded into per-crossing [`DistApp::unit_bytes`]
+//! records, so the root's [`TrafficRecorder`] →
+//! [`CommGraph::update_from_recorder`] incremental path accumulates
+//! bit-identical edge weights to the sequential app's recorder, and the
+//! per-step modeled communication seconds come from the shared
+//! [`account_step_comm`] arithmetic over per-pair aggregates that match
+//! the sequential ones to the last bit. (This is also why crossing
+//! bytes must be uniform per app — see [`DistApp::unit_bytes`].) With
+//! `deterministic_loads` set, the LB instances — and therefore the
 //! migration counts — are equal between the two drivers as well
 //! (`tests/distributed.rs` asserts both). Compute seconds are each
-//! node's *own measured* push time (genuinely parallel execution), so
+//! node's *own measured* step time (genuinely parallel execution), so
 //! they are reported but not comparable bit-for-bit.
 //!
 //! The LB instance is assembled at rank 0 (the recorder's home) and
@@ -34,8 +45,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::apps::driver::{account_step_comm, DriverConfig, IterRecord, RunReport};
+use crate::apps::hotspot::{self, HotspotConfig};
 use crate::apps::pic::{self, PicConfig};
-use crate::model::{CommGraph, Instance, TrafficRecorder};
+use crate::model::{CommGraph, Instance, Topology, TrafficRecorder};
 use crate::simnet::network::{Cluster, Comm, CostTracker};
 use crate::strategies::diffusion::Variant;
 use crate::strategies::StrategyParams;
@@ -53,6 +65,480 @@ const TAG_LBC: u32 = 0x1200_0000;
 const TAG_LBX: u32 = 0x1300_0000;
 const TAG_MIG: u32 = 0x1400_0000;
 const TAG_FIN: u32 = 0x1F00_0000;
+
+/// Shared read-only bootstrap of a node-partitionable app — what a
+/// real launcher hands every process, plus the root-side hooks.
+/// The distributed counterpart of [`crate::apps::App`].
+pub trait DistApp: Send + Sync + 'static {
+    /// Per-node partition state.
+    type Node: DistNode;
+
+    fn name(&self) -> &'static str;
+    fn topo(&self) -> Topology;
+    fn n_objects(&self) -> usize;
+    /// Initial object → PE mapping (every node seeds its replica from
+    /// this).
+    fn initial_mapping(&self) -> Vec<u32>;
+    /// Static sync adjacency, as in [`crate::apps::App::neighbor_pairs`].
+    fn neighbor_pairs(&self) -> Vec<(u32, u32)>;
+    /// Bytes carried by one crossing unit. Must be uniform across the
+    /// app: the root re-expands gathered unit counts into per-crossing
+    /// records, and sums of *equal* addends are permutation-invariant —
+    /// that is what keeps the root's recorder bit-identical to the
+    /// sequential app's even though ranks report in rank order rather
+    /// than event order.
+    fn unit_bytes(&self) -> f64;
+    /// Build rank `rank`'s partition owning the objects `mapping` puts
+    /// on its PEs.
+    fn make_node(&self, rank: u32, mapping: &[u32]) -> Self::Node;
+    /// Root: assemble the LB instance from the gathered per-object work
+    /// and measured loads — must replicate the sequential app's
+    /// `build_instance` bit for bit (both sides call one shared
+    /// assembly function; see `pic::assemble_instance` /
+    /// `hotspot::assemble_instance`).
+    #[allow(clippy::too_many_arguments)]
+    fn assemble_instance(
+        &self,
+        work: &[f64],
+        measured: &[f64],
+        mapping: Vec<u32>,
+        steps_since_lb: usize,
+        recorder: &mut TrafficRecorder,
+        comm_cache: &mut CommGraph,
+    ) -> Instance;
+    /// Root: verify the gathered final payloads (rank 0's first, then
+    /// the peers' in arrival order) after `steps` completed iterations.
+    /// Default: trivially ok.
+    fn verify(&self, steps: usize, finals: &[Vec<u8>]) -> bool {
+        let _ = (steps, finals);
+        true
+    }
+}
+
+/// Drain nonzero per-object measured loads into `(object, seconds)`
+/// pairs, resetting the accumulator — the one implementation of
+/// [`DistNode::drain_measured`] every node shares.
+pub fn drain_nonzero(acc: &mut [f64], out: &mut Vec<(u32, f64)>) {
+    for (c, l) in acc.iter_mut().enumerate() {
+        if *l > 0.0 {
+            out.push((c as u32, *l));
+        }
+        *l = 0.0;
+    }
+}
+
+/// One node's partition of a [`DistApp`].
+pub trait DistNode: Send {
+    /// Advance my partition one step: serialize payload leaving for
+    /// node `d` into `outbox[d]`, append directed
+    /// `(from, to, unit_count)` crossing records (one per crossing
+    /// event; the driver aggregates), and return the measured compute
+    /// seconds. `mapping` is the current object → PE map.
+    fn step(
+        &mut self,
+        step: usize,
+        mapping: &[u32],
+        outbox: &mut [Vec<u8>],
+        moved: &mut Vec<(u32, u32, u32)>,
+    ) -> f64;
+
+    /// Integrate payload shipped from another node (step exchange and
+    /// migration transfers use the same format).
+    fn absorb(&mut self, data: &[u8]);
+
+    /// After all arrivals are in: attribute `compute_s` to my objects
+    /// (accumulating measured load) and append my partition's nonzero
+    /// `(object, work)` units for this step.
+    fn account(&mut self, compute_s: f64, work: &mut Vec<(u32, f64)>);
+
+    /// Drain my accumulated measured loads since the last LB round as
+    /// nonzero `(object, seconds)` pairs, resetting them.
+    fn drain_measured(&mut self, out: &mut Vec<(u32, f64)>);
+
+    /// Serialize the payload of objects I owned under `old` whose new
+    /// owner is another node, into `outbox[new_owner]`, and adopt the
+    /// ownership implied by `new`.
+    fn emigrate(&mut self, old: &[u32], new: &[u32], outbox: &mut [Vec<u8>]);
+
+    /// Final state for root verification (same format across ranks).
+    fn final_payload(&self, out: &mut Vec<u8>) {
+        let _ = out;
+    }
+}
+
+/// Aggregate a raw `(from, to, units)` crossing log per directed pair —
+/// the integer twin of `model::graph::sort_sum_merge` (stable sort,
+/// left-to-right sums).
+fn merge_units(v: &mut Vec<(u32, u32, u32)>) {
+    v.sort_by_key(|&(f, t, _)| (f, t));
+    let mut w = 0usize;
+    for r in 0..v.len() {
+        if w > 0 && v[w - 1].0 == v[r].0 && v[w - 1].1 == v[r].1 {
+            v[w - 1].2 += v[r].2;
+        } else {
+            v[w] = v[r];
+            w += 1;
+        }
+    }
+    v.truncate(w);
+}
+
+/// Read-only bootstrap shared with every node thread.
+struct Shared<A: DistApp> {
+    app: A,
+    driver: DriverConfig,
+    variant: Variant,
+    params: StrategyParams,
+    mapping0: Vec<u32>,
+    neighbor_pairs: Vec<(u32, u32)>,
+}
+
+/// Run a node-partitionable app fully distributed under the given
+/// diffusion variant: one simulated node per topology node, real
+/// payload exchange, the LB pipeline inline as message-passing
+/// protocols.
+pub fn run_app_distributed<A: DistApp>(
+    app: A,
+    variant: Variant,
+    params: StrategyParams,
+    driver: &DriverConfig,
+) -> Result<RunReport> {
+    anyhow::ensure!(driver.iters < (1 << 24), "iters exceeds the step tag space");
+    let n_nodes = app.topo().n_nodes;
+    let shared = Arc::new(Shared {
+        mapping0: app.initial_mapping(),
+        neighbor_pairs: app.neighbor_pairs(),
+        driver: driver.clone(),
+        variant,
+        params,
+        app,
+    });
+    let mut reports =
+        Cluster::run(n_nodes, move |rank, mut comm| node_main(rank, &mut comm, &shared));
+    Ok(reports.swap_remove(0).expect("rank 0 produces the report"))
+}
+
+/// Root-only accounting and LB-instance state.
+struct RootState {
+    recorder: TrafficRecorder,
+    comm_cache: CommGraph,
+    steps_since_lb: usize,
+    tracker: CostTracker,
+    payload: Vec<(u32, u32, f64)>,
+    consumed: Vec<bool>,
+    /// Global per-object work units of the latest step (the LB
+    /// instance's load fallback / sizes, and the migration-bytes model).
+    last_work: Vec<f64>,
+    report: RunReport,
+}
+
+#[allow(clippy::too_many_lines)]
+fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<RunReport> {
+    let topo = sh.app.topo();
+    let n_objs = sh.app.n_objects();
+    let n_nodes = topo.n_nodes;
+    let ub = sh.app.unit_bytes();
+    let steps_total = sh.driver.iters;
+
+    // ---- node-partitioned state.
+    let mut obj_to_pe = sh.mapping0.clone();
+    let mut node = sh.app.make_node(rank, &obj_to_pe);
+    let mut moved_units: Vec<(u32, u32, u32)> = Vec::new();
+    let mut work_pairs: Vec<(u32, f64)> = Vec::new();
+    let mut meas_pairs: Vec<(u32, f64)> = Vec::new();
+    let mut lb_round: u32 = 0;
+
+    let mut root = (rank == 0).then(|| RootState {
+        recorder: TrafficRecorder::new(n_objs),
+        comm_cache: CommGraph::empty(n_objs),
+        steps_since_lb: 0,
+        tracker: CostTracker::new(n_nodes),
+        payload: Vec::new(),
+        consumed: Vec::new(),
+        last_work: vec![0.0; n_objs],
+        report: RunReport::default(),
+    });
+
+    for step in 0..steps_total {
+        let smask = (step as u32) & 0x00FF_FFFF;
+
+        // ---- step my partition; crossers leave by message.
+        let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
+        moved_units.clear();
+        let push_s = node.step(step, &obj_to_pe, &mut outbox, &mut moved_units);
+        for (d, buf) in outbox.into_iter().enumerate() {
+            if d as u32 != rank {
+                comm.send(d as u32, TAG_STEP | smask, buf);
+            }
+        }
+        let arrivals = comm.recv_tagged(TAG_STEP | smask, n_nodes - 1, Comm::TIMEOUT);
+        assert_eq!(arrivals.len(), n_nodes - 1, "step {step}: payload exchange incomplete");
+        for m in &arrivals {
+            node.absorb(&m.data);
+        }
+
+        // ---- local work + measured-load attribution.
+        merge_units(&mut moved_units);
+        work_pairs.clear();
+        node.account(push_s, &mut work_pairs);
+
+        // ---- step accounting to root: step seconds, my per-object
+        // work units, my crossing counts per directed object pair.
+        let mut acct = Vec::new();
+        wire::put_f64(&mut acct, push_s);
+        wire::put_u32(&mut acct, work_pairs.len() as u32);
+        for &(c, w) in &work_pairs {
+            wire::put_u32(&mut acct, c);
+            wire::put_f64(&mut acct, w);
+        }
+        wire::put_u32(&mut acct, moved_units.len() as u32);
+        for &(f, t2, units) in &moved_units {
+            wire::put_u32(&mut acct, f);
+            wire::put_u32(&mut acct, t2);
+            wire::put_u32(&mut acct, units);
+        }
+
+        // ---- root: assemble the iteration record the way the
+        // sequential driver does, from exactly-matching aggregates.
+        let mut rec = IterRecord::default();
+        if root.is_none() {
+            comm.send(0, TAG_ACCT | smask, acct);
+        } else if let Some(rs) = root.as_mut() {
+            let mut msgs = comm.recv_tagged(TAG_ACCT | smask, n_nodes - 1, Comm::TIMEOUT);
+            assert_eq!(msgs.len(), n_nodes - 1, "step {step}: accounting gather incomplete");
+            msgs.sort_by_key(|m| m.from);
+            let mut work_global = vec![0.0f64; n_objs];
+            let mut node_push = vec![0.0f64; n_nodes];
+            // merged directed crossing records in rank order, expanded
+            // back to per-crossing unit_bytes sums (left-to-right, like
+            // the sequential per-step aggregation).
+            let mut merged_moved: Vec<(u32, u32, f64)> = Vec::new();
+            for (from, data) in std::iter::once((0u32, acct.as_slice()))
+                .chain(msgs.iter().map(|m| (m.from, m.data.as_slice())))
+            {
+                let mut r = wire::Reader::new(data);
+                node_push[from as usize] = r.f64();
+                let nw = r.u32();
+                for _ in 0..nw {
+                    let c = r.u32();
+                    let w = r.f64();
+                    work_global[c as usize] += w;
+                }
+                let nm = r.u32();
+                for _ in 0..nm {
+                    let f = r.u32();
+                    let t2 = r.u32();
+                    let units = r.u32();
+                    let mut bytes = 0.0f64;
+                    for _ in 0..units {
+                        bytes += ub;
+                        rs.recorder.record(f, t2, ub);
+                    }
+                    merged_moved.push((f, t2, bytes));
+                }
+            }
+            rs.steps_since_lb += 1;
+
+            let mut pe_work = vec![0.0f64; topo.n_pes()];
+            let mut node_work = vec![0.0f64; n_nodes];
+            for (o, &w) in work_global.iter().enumerate() {
+                let pe = obj_to_pe[o];
+                pe_work[pe as usize] += w;
+                node_work[topo.node_of_pe(pe) as usize] += w;
+            }
+            account_step_comm(
+                &topo,
+                &obj_to_pe,
+                &sh.neighbor_pairs,
+                &merged_moved,
+                &mut rs.payload,
+                &mut rs.consumed,
+                &mut rs.tracker,
+            );
+            let comm_times = rs.tracker.comm_times(&sh.driver.net);
+            let pe_summary = Summary::of(&pe_work);
+            rec = IterRecord {
+                iter: step,
+                work_max_avg: pe_summary.max_avg_ratio(),
+                node_work,
+                compute_max_s: node_push.iter().cloned().fold(0.0, f64::max),
+                compute_avg_s: node_push.iter().sum::<f64>() / n_nodes as f64,
+                comm_max_s: comm_times.iter().cloned().fold(0.0, f64::max),
+                comm_avg_s: comm_times.iter().sum::<f64>() / n_nodes as f64,
+                ..Default::default()
+            };
+            rs.last_work = work_global;
+        }
+
+        // ---- LB round.
+        if sh.driver.lb_period > 0 && (step + 1) % sh.driver.lb_period == 0 {
+            let rmask = lb_round & 0x00FF_FFFF;
+            // gather measured loads at root (deterministic mode ignores
+            // them but the gather keeps the protocol uniform).
+            meas_pairs.clear();
+            node.drain_measured(&mut meas_pairs);
+            if rank != 0 {
+                let mut lbuf = Vec::new();
+                wire::put_u32(&mut lbuf, meas_pairs.len() as u32);
+                for &(c, l) in &meas_pairs {
+                    wire::put_u32(&mut lbuf, c);
+                    wire::put_f64(&mut lbuf, l);
+                }
+                comm.send(0, TAG_LBC | rmask, lbuf);
+            }
+            let t_lb = Instant::now();
+            let inst = if let Some(rs) = root.as_mut() {
+                // full measured-load vector
+                let msgs = comm.recv_tagged(TAG_LBC | rmask, n_nodes - 1, Comm::TIMEOUT);
+                assert_eq!(msgs.len(), n_nodes - 1, "LB {lb_round}: load gather incomplete");
+                let mut full_loads = vec![0.0f64; n_objs];
+                for &(c, l) in &meas_pairs {
+                    full_loads[c as usize] += l;
+                }
+                for m in &msgs {
+                    let mut r = wire::Reader::new(&m.data);
+                    let nz = r.u32();
+                    for _ in 0..nz {
+                        let c = r.u32();
+                        full_loads[c as usize] += r.f64();
+                    }
+                }
+                // the one shared instance-assembly sequence — identical
+                // to the sequential app's build_instance by
+                // construction.
+                let mut inst = sh.app.assemble_instance(
+                    &rs.last_work,
+                    &full_loads,
+                    obj_to_pe.clone(),
+                    rs.steps_since_lb,
+                    &mut rs.recorder,
+                    &mut rs.comm_cache,
+                );
+                rs.steps_since_lb = 0;
+                if sh.driver.deterministic_loads {
+                    // the sequential driver overwrites the same way
+                    inst.loads = rs.last_work.clone();
+                }
+                // broadcast; then parse our own broadcast so every node
+                // provably balances the identical instance.
+                let text = inst.to_lbi();
+                for p in 1..n_nodes as u32 {
+                    comm.send(p, TAG_LBX | rmask, text.clone().into_bytes());
+                }
+                // parse our own broadcast: what we balance is provably
+                // what everyone else parsed (the format is lossless —
+                // Rust float formatting round-trips exactly).
+                Instance::from_lbi(&text).expect("lbi round-trip failed")
+            } else {
+                let msgs = comm.recv_tagged(TAG_LBX | rmask, 1, Comm::TIMEOUT);
+                assert_eq!(msgs.len(), 1, "LB {lb_round}: instance broadcast missing");
+                let text = std::str::from_utf8(&msgs[0].data).expect("lbi not utf-8");
+                Instance::from_lbi(text).expect("lbi parse failed")
+            };
+
+            // ---- the full distributed pipeline, inline on this comm.
+            // Every node derives the candidate lists from its own parsed
+            // copy of the broadcast instance — n_nodes-fold redundant
+            // work, deliberately: in the real runtime each process
+            // computes its own candidate view, and there is no shared
+            // memory to hand rows around (the strategy-only path,
+            // run_pipeline, does share them via Arc).
+            let cands = build_candidates(&inst, sh.variant, &sh.params);
+            let outcome =
+                node_pipeline(comm, &inst, &cands[rank as usize], sh.variant, &sh.params);
+            let strat_s = t_lb.elapsed().as_secs_f64();
+            let old_map = std::mem::replace(&mut obj_to_pe, outcome.full_mapping);
+
+            // ---- realize migrations: ship my payload whose objects
+            // now live elsewhere; receive my new objects' payload.
+            let migtag = TAG_MIG | rmask;
+            let mut sends_to = vec![false; n_nodes];
+            let mut recv_from = vec![false; n_nodes];
+            for c in 0..n_objs {
+                let old_n = topo.node_of_pe(old_map[c]);
+                let new_n = topo.node_of_pe(obj_to_pe[c]);
+                if old_n == new_n {
+                    continue;
+                }
+                if old_n == rank {
+                    sends_to[new_n as usize] = true;
+                }
+                if new_n == rank {
+                    recv_from[old_n as usize] = true;
+                }
+            }
+            let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
+            node.emigrate(&old_map, &obj_to_pe, &mut outbox);
+            for (d, buf) in outbox.into_iter().enumerate() {
+                if sends_to[d] {
+                    comm.send(d as u32, migtag, buf);
+                }
+            }
+            let expect = recv_from.iter().filter(|&&b| b).count();
+            let migs = comm.recv_tagged(migtag, expect, Comm::TIMEOUT);
+            assert_eq!(migs.len(), expect, "LB {lb_round}: migration transfer incomplete");
+            for m in &migs {
+                node.absorb(&m.data);
+            }
+
+            // ---- root: LB accounting, sequential-driver formulas
+            // (migration payload = the instance's own per-object sizes,
+            // which is exactly what the sequential apps charge).
+            if let Some(rs) = root.as_mut() {
+                let migrations =
+                    old_map.iter().zip(&obj_to_pe).filter(|(a, b)| a != b).count();
+                let mut moved_bytes = 0.0;
+                for c in 0..n_objs {
+                    if old_map[c] != obj_to_pe[c] {
+                        moved_bytes += inst.sizes[c];
+                    }
+                }
+                let transfer_s = sh.driver.net.inter_time(migrations as u64, moved_bytes)
+                    / n_nodes.max(1) as f64;
+                rec.lb_s = strat_s + transfer_s;
+                rec.migrations = migrations;
+                rs.report.total_migrations += migrations;
+            }
+            lb_round += 1;
+        }
+
+        if let Some(rs) = root.as_mut() {
+            if sh.driver.log_every > 0 && step % sh.driver.log_every == 0 {
+                crate::info!(
+                    "dist iter {step}: max/avg={:.3} comm={:.2}ms lb={:.2}ms",
+                    rec.work_max_avg,
+                    rec.comm_max_s * 1e3,
+                    rec.lb_s * 1e3
+                );
+            }
+            rs.report.compute_s += rec.compute_max_s;
+            rs.report.comm_s += rec.comm_max_s;
+            rs.report.lb_s += rec.lb_s;
+            rs.report.total_s += rec.compute_max_s + rec.comm_max_s + rec.lb_s;
+            rs.report.records.push(rec);
+        }
+    }
+
+    // ---- final verification: gather per-node payloads at root.
+    let mut fin = Vec::new();
+    node.final_payload(&mut fin);
+    if rank != 0 {
+        comm.send(0, TAG_FIN, fin);
+        return None;
+    }
+    let mut rs = root.take().expect("root state");
+    let mut finals = Vec::with_capacity(n_nodes);
+    finals.push(fin);
+    let msgs = comm.recv_tagged(TAG_FIN, n_nodes - 1, Comm::TIMEOUT);
+    assert_eq!(msgs.len(), n_nodes - 1, "final gather incomplete");
+    for m in msgs {
+        finals.push(m.data);
+    }
+    rs.report.verified = sh.app.verify(steps_total, &finals);
+    Some(rs.report)
+}
+
+// ===================================================== PIC as DistApp
 
 /// One particle in a node's partition.
 #[derive(Debug, Clone, Copy)]
@@ -91,18 +577,250 @@ fn read_particles(data: &[u8], out: &mut Vec<P>) {
     }
 }
 
-/// Read-only bootstrap state shared with every node thread (the
-/// initial conditions a real launcher would hand each process).
-struct Shared {
+/// PIC PRK as a node-partitionable app: particles are the payload.
+pub struct PicDistApp {
     cfg: PicConfig,
-    driver: DriverConfig,
-    variant: Variant,
-    params: StrategyParams,
     x0: Vec<f64>,
     y0: Vec<f64>,
     init_parts: Vec<P>,
-    chare_to_pe0: Vec<u32>,
     neighbor_pairs: Vec<(u32, u32)>,
+}
+
+impl PicDistApp {
+    pub fn new(cfg: PicConfig) -> Result<PicDistApp> {
+        anyhow::ensure!(cfg.grid % cfg.chares_x == 0, "grid must divide chares_x");
+        anyhow::ensure!(cfg.grid % cfg.chares_y == 0, "grid must divide chares_y");
+        let pop = pic::init::initialize(
+            cfg.init,
+            cfg.n_particles,
+            cfg.grid,
+            cfg.k,
+            cfg.m,
+            cfg.q,
+            cfg.seed,
+        );
+        let mut init_parts = Vec::with_capacity(pop.x.len());
+        for i in 0..pop.x.len() {
+            init_parts.push(P {
+                id: i as u32,
+                chare: pic::chare_of_pos(&cfg, pop.x[i], pop.y[i]),
+                x: pop.x[i],
+                y: pop.y[i],
+                vx: pop.vx[i],
+                vy: pop.vy[i],
+                q: pop.q[i],
+            });
+        }
+        Ok(PicDistApp {
+            neighbor_pairs: pic::chare_neighbor_pairs(&cfg),
+            init_parts,
+            x0: pop.x,
+            y0: pop.y,
+            cfg,
+        })
+    }
+}
+
+/// One node's PIC partition.
+pub struct PicNode {
+    cfg: PicConfig,
+    rank: u32,
+    parts: Vec<P>,
+    keep: Vec<P>,
+    counts: Vec<u32>,
+    load_acc: Vec<f64>,
+}
+
+impl DistApp for PicDistApp {
+    type Node = PicNode;
+
+    fn name(&self) -> &'static str {
+        "pic"
+    }
+
+    fn topo(&self) -> Topology {
+        self.cfg.topo
+    }
+
+    fn n_objects(&self) -> usize {
+        self.cfg.chares_x * self.cfg.chares_y
+    }
+
+    fn initial_mapping(&self) -> Vec<u32> {
+        pic::initial_mapping(&self.cfg)
+    }
+
+    fn neighbor_pairs(&self) -> Vec<(u32, u32)> {
+        self.neighbor_pairs.clone()
+    }
+
+    fn unit_bytes(&self) -> f64 {
+        self.cfg.particle_bytes
+    }
+
+    fn make_node(&self, rank: u32, mapping: &[u32]) -> PicNode {
+        let topo = self.cfg.topo;
+        let n_chares = self.n_objects();
+        let parts: Vec<P> = self
+            .init_parts
+            .iter()
+            .copied()
+            .filter(|p| topo.node_of_pe(mapping[p.chare as usize]) == rank)
+            .collect();
+        PicNode {
+            cfg: self.cfg.clone(),
+            rank,
+            parts,
+            keep: Vec::new(),
+            counts: vec![0; n_chares],
+            load_acc: vec![0.0; n_chares],
+        }
+    }
+
+    fn assemble_instance(
+        &self,
+        work: &[f64],
+        measured: &[f64],
+        mapping: Vec<u32>,
+        steps_since_lb: usize,
+        recorder: &mut TrafficRecorder,
+        comm_cache: &mut CommGraph,
+    ) -> Instance {
+        pic::assemble_instance(
+            &self.cfg,
+            work,
+            measured,
+            mapping,
+            steps_since_lb,
+            &self.neighbor_pairs,
+            recorder,
+            comm_cache,
+        )
+    }
+
+    /// Reassemble positions by particle id and run the PRK analytic
+    /// verification.
+    fn verify(&self, steps: usize, finals: &[Vec<u8>]) -> bool {
+        let n_particles = self.x0.len();
+        let mut xf = vec![f64::NAN; n_particles];
+        let mut yf = vec![f64::NAN; n_particles];
+        let mut seen = 0usize;
+        for data in finals {
+            let mut r = wire::Reader::new(data);
+            while !r.is_empty() {
+                let id = r.u32() as usize;
+                xf[id] = r.f64();
+                yf[id] = r.f64();
+                seen += 1;
+            }
+        }
+        seen == n_particles
+            && pic::verify::verify_positions(
+                &self.x0,
+                &self.y0,
+                &xf,
+                &yf,
+                steps,
+                self.cfg.k,
+                self.cfg.m,
+                self.cfg.grid as f64,
+            )
+            .is_ok()
+    }
+}
+
+impl DistNode for PicNode {
+    fn step(
+        &mut self,
+        _step: usize,
+        mapping: &[u32],
+        outbox: &mut [Vec<u8>],
+        moved: &mut Vec<(u32, u32, u32)>,
+    ) -> f64 {
+        let grid = self.cfg.grid as f64;
+        let topo = self.cfg.topo;
+        // push my partition (bit-identical per-particle math to the
+        // sequential app's native backend).
+        let t = Instant::now();
+        for p in self.parts.iter_mut() {
+            let (xn, yn, vxn, vyn) =
+                pic::push::push_one(p.x, p.y, p.vx, p.vy, p.q, grid, self.cfg.q);
+            p.x = xn;
+            p.y = yn;
+            p.vx = vxn;
+            p.vy = vyn;
+        }
+        let push_s = t.elapsed().as_secs_f64();
+
+        // re-bin; crossings leave for their new owner by message.
+        self.keep.clear();
+        for mut p in self.parts.drain(..) {
+            let nc = pic::chare_of_pos(&self.cfg, p.x, p.y);
+            if nc != p.chare {
+                moved.push((p.chare, nc, 1));
+                p.chare = nc;
+            }
+            let dest = topo.node_of_pe(mapping[nc as usize]);
+            if dest == self.rank {
+                self.keep.push(p);
+            } else {
+                put_particle(&mut outbox[dest as usize], &p);
+            }
+        }
+        std::mem::swap(&mut self.parts, &mut self.keep);
+        push_s
+    }
+
+    fn absorb(&mut self, data: &[u8]) {
+        read_particles(data, &mut self.parts);
+    }
+
+    fn account(&mut self, compute_s: f64, work: &mut Vec<(u32, f64)>) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        for p in &self.parts {
+            self.counts[p.chare as usize] += 1;
+        }
+        if !self.parts.is_empty() {
+            let per_particle = compute_s / self.parts.len() as f64;
+            for (c, &cnt) in self.counts.iter().enumerate() {
+                if cnt > 0 {
+                    self.load_acc[c] += cnt as f64 * per_particle;
+                }
+            }
+        }
+        for (c, &cnt) in self.counts.iter().enumerate() {
+            if cnt > 0 {
+                work.push((c as u32, cnt as f64));
+            }
+        }
+    }
+
+    fn drain_measured(&mut self, out: &mut Vec<(u32, f64)>) {
+        drain_nonzero(&mut self.load_acc, out);
+    }
+
+    fn emigrate(&mut self, _old: &[u32], new: &[u32], outbox: &mut [Vec<u8>]) {
+        let topo = self.cfg.topo;
+        self.keep.clear();
+        for p in self.parts.drain(..) {
+            let new_n = topo.node_of_pe(new[p.chare as usize]);
+            if new_n == self.rank {
+                self.keep.push(p);
+            } else {
+                put_particle(&mut outbox[new_n as usize], &p);
+            }
+        }
+        std::mem::swap(&mut self.parts, &mut self.keep);
+    }
+
+    fn final_payload(&self, out: &mut Vec<u8>) {
+        out.reserve(self.parts.len() * 20);
+        for p in &self.parts {
+            wire::put_u32(out, p.id);
+            wire::put_f64(out, p.x);
+            wire::put_f64(out, p.y);
+        }
+    }
 }
 
 /// Run the PIC PRK benchmark fully distributed under the given
@@ -115,449 +833,157 @@ pub fn run_pic_distributed(
     params: StrategyParams,
     driver: &DriverConfig,
 ) -> Result<RunReport> {
-    anyhow::ensure!(pic_cfg.grid % pic_cfg.chares_x == 0, "grid must divide chares_x");
-    anyhow::ensure!(pic_cfg.grid % pic_cfg.chares_y == 0, "grid must divide chares_y");
-    anyhow::ensure!(driver.iters < (1 << 24), "iters exceeds the step tag space");
-    let pop = pic::init::initialize(
-        pic_cfg.init,
-        pic_cfg.n_particles,
-        pic_cfg.grid,
-        pic_cfg.k,
-        pic_cfg.m,
-        pic_cfg.q,
-        pic_cfg.seed,
-    );
-    let mut init_parts = Vec::with_capacity(pop.x.len());
-    for i in 0..pop.x.len() {
-        init_parts.push(P {
-            id: i as u32,
-            chare: pic::chare_of_pos(pic_cfg, pop.x[i], pop.y[i]),
-            x: pop.x[i],
-            y: pop.y[i],
-            vx: pop.vx[i],
-            vy: pop.vy[i],
-            q: pop.q[i],
-        });
+    run_app_distributed(PicDistApp::new(pic_cfg.clone())?, variant, params, driver)
+}
+
+// ================================================= Hotspot as DistApp
+
+/// One node's hotspot partition: loads are analytic in (object, step),
+/// so there is no payload — the node just evaluates its own objects.
+pub struct HotspotNode {
+    cfg: HotspotConfig,
+    rank: u32,
+    /// Halo pairs (shared adjacency; this node reports pairs whose
+    /// lower endpoint it owns).
+    pairs: Vec<(u32, u32)>,
+    owned: Vec<bool>,
+    work: Vec<f64>,
+    load_acc: Vec<f64>,
+}
+
+/// The drifting hotspot as a node-partitionable app.
+pub struct HotspotDistApp {
+    cfg: HotspotConfig,
+    pairs: Vec<(u32, u32)>,
+}
+
+impl HotspotDistApp {
+    pub fn new(cfg: HotspotConfig) -> Result<HotspotDistApp> {
+        cfg.validate()?;
+        let pairs = crate::apps::grid_neighbor_pairs(cfg.nx, cfg.ny, true);
+        Ok(HotspotDistApp { pairs, cfg })
     }
-    let shared = Arc::new(Shared {
-        cfg: pic_cfg.clone(),
-        driver: driver.clone(),
-        variant,
-        params,
-        chare_to_pe0: pic::initial_mapping(pic_cfg),
-        neighbor_pairs: pic::chare_neighbor_pairs(pic_cfg),
-        init_parts,
-        x0: pop.x,
-        y0: pop.y,
-    });
-    let n_nodes = pic_cfg.topo.n_nodes;
-    let mut reports =
-        Cluster::run(n_nodes, move |rank, mut comm| node_main(rank, &mut comm, &shared));
-    Ok(reports.swap_remove(0).expect("rank 0 produces the report"))
 }
 
-/// Root-only accounting and LB-instance state.
-struct RootState {
-    recorder: TrafficRecorder,
-    comm_cache: CommGraph,
-    steps_since_lb: usize,
-    tracker: CostTracker,
-    payload: Vec<(u32, u32, f64)>,
-    consumed: Vec<bool>,
-    /// Global per-chare particle counts of the latest step (the LB
-    /// instance's load fallback / sizes, and the migration-bytes model).
-    last_counts: Vec<u32>,
-    report: RunReport,
+impl DistApp for HotspotDistApp {
+    type Node = HotspotNode;
+
+    fn name(&self) -> &'static str {
+        "hotspot"
+    }
+
+    fn topo(&self) -> Topology {
+        self.cfg.topo
+    }
+
+    fn n_objects(&self) -> usize {
+        self.cfg.nx * self.cfg.ny
+    }
+
+    fn initial_mapping(&self) -> Vec<u32> {
+        crate::apps::grid_mapping(self.cfg.nx, self.cfg.ny, self.cfg.topo.n_pes(), self.cfg.decomp)
+    }
+
+    fn neighbor_pairs(&self) -> Vec<(u32, u32)> {
+        self.pairs.clone()
+    }
+
+    fn unit_bytes(&self) -> f64 {
+        self.cfg.halo_bytes
+    }
+
+    fn make_node(&self, rank: u32, mapping: &[u32]) -> HotspotNode {
+        let topo = self.cfg.topo;
+        let n = self.n_objects();
+        let owned: Vec<bool> =
+            mapping.iter().map(|&pe| topo.node_of_pe(pe) == rank).collect();
+        HotspotNode {
+            cfg: self.cfg.clone(),
+            rank,
+            pairs: self.pairs.clone(),
+            owned,
+            work: vec![0.0; n],
+            load_acc: vec![0.0; n],
+        }
+    }
+
+    fn assemble_instance(
+        &self,
+        work: &[f64],
+        measured: &[f64],
+        mapping: Vec<u32>,
+        _steps_since_lb: usize,
+        recorder: &mut TrafficRecorder,
+        comm_cache: &mut CommGraph,
+    ) -> Instance {
+        hotspot::assemble_instance(&self.cfg, work, measured, mapping, recorder, comm_cache)
+    }
 }
 
-#[allow(clippy::too_many_lines)]
-fn node_main(rank: u32, comm: &mut Comm, sh: &Shared) -> Option<RunReport> {
-    let cfg = &sh.cfg;
-    let topo = cfg.topo;
-    let grid = cfg.grid as f64;
-    let pb = cfg.particle_bytes;
-    let n_chares = cfg.chares_x * cfg.chares_y;
-    let n_nodes = topo.n_nodes;
-    let steps_total = sh.driver.iters;
-
-    // ---- node-partitioned state.
-    let mut chare_to_pe = sh.chare_to_pe0.clone();
-    let mut parts: Vec<P> = sh
-        .init_parts
-        .iter()
-        .copied()
-        .filter(|p| topo.node_of_pe(chare_to_pe[p.chare as usize]) == rank)
-        .collect();
-    let mut load_acc = vec![0.0f64; n_chares];
-    let mut counts = vec![0u32; n_chares];
-    let mut moved_log: Vec<(u32, u32, f64)> = Vec::new();
-    let mut keep: Vec<P> = Vec::new();
-    let mut lb_round: u32 = 0;
-
-    let mut root = (rank == 0).then(|| RootState {
-        recorder: TrafficRecorder::new(n_chares),
-        comm_cache: CommGraph::empty(n_chares),
-        steps_since_lb: 0,
-        tracker: CostTracker::new(n_nodes),
-        payload: Vec::new(),
-        consumed: Vec::new(),
-        last_counts: vec![0; n_chares],
-        report: RunReport::default(),
-    });
-
-    for step in 0..steps_total {
-        let smask = (step as u32) & 0x00FF_FFFF;
-
-        // ---- push my partition (bit-identical per-particle math).
+impl DistNode for HotspotNode {
+    fn step(
+        &mut self,
+        step: usize,
+        _mapping: &[u32],
+        _outbox: &mut [Vec<u8>],
+        moved: &mut Vec<(u32, u32, u32)>,
+    ) -> f64 {
         let t = Instant::now();
-        for p in parts.iter_mut() {
-            let (xn, yn, vxn, vyn) =
-                pic::push::push_one(p.x, p.y, p.vx, p.vy, p.q, grid, cfg.q);
-            p.x = xn;
-            p.y = yn;
-            p.vx = vxn;
-            p.vy = vyn;
-        }
-        let push_s = t.elapsed().as_secs_f64();
-
-        // ---- re-bin; crossings leave for their new owner by message.
-        moved_log.clear();
-        let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
-        keep.clear();
-        for mut p in parts.drain(..) {
-            let nc = pic::chare_of_pos(cfg, p.x, p.y);
-            if nc != p.chare {
-                // one unit per crossing; aggregated to counts below
-                moved_log.push((p.chare, nc, 1.0));
-                p.chare = nc;
-            }
-            let dest = topo.node_of_pe(chare_to_pe[nc as usize]);
-            if dest == rank {
-                keep.push(p);
-            } else {
-                put_particle(&mut outbox[dest as usize], &p);
+        for o in 0..self.work.len() {
+            if self.owned[o] {
+                self.work[o] = hotspot::load_at(&self.cfg, o, step);
             }
         }
-        std::mem::swap(&mut parts, &mut keep);
-        for (d, buf) in outbox.into_iter().enumerate() {
-            if d as u32 != rank {
-                comm.send(d as u32, TAG_STEP | smask, buf);
+        let compute_s = t.elapsed().as_secs_f64();
+        // each halo edge is reported once globally: by the owner of its
+        // lower endpoint
+        for &(a, b) in &self.pairs {
+            if self.owned[a as usize] {
+                moved.push((a, b, 1));
             }
         }
-        let arrivals = comm.recv_tagged(TAG_STEP | smask, n_nodes - 1, Comm::TIMEOUT);
-        assert_eq!(arrivals.len(), n_nodes - 1, "step {step}: particle exchange incomplete");
-        for m in &arrivals {
-            read_particles(&m.data, &mut parts);
-        }
+        compute_s
+    }
 
-        // ---- local load attribution (measured, per-node).
-        counts.iter_mut().for_each(|c| *c = 0);
-        for p in &parts {
-            counts[p.chare as usize] += 1;
-        }
-        if !parts.is_empty() {
-            let per_particle = push_s / parts.len() as f64;
-            for (c, &cnt) in counts.iter().enumerate() {
-                if cnt > 0 {
-                    load_acc[c] += cnt as f64 * per_particle;
-                }
+    fn absorb(&mut self, _data: &[u8]) {}
+
+    fn account(&mut self, compute_s: f64, work: &mut Vec<(u32, f64)>) {
+        let mut total = 0.0;
+        for (o, &w) in self.work.iter().enumerate() {
+            if self.owned[o] {
+                total += w;
             }
         }
-
-        // ---- step accounting to root: push seconds, my per-chare
-        // particle counts, my crossing counts per directed chare pair.
-        crate::model::graph::sort_sum_merge(&mut moved_log);
-        let mut acct = Vec::new();
-        wire::put_f64(&mut acct, push_s);
-        let nz = counts.iter().filter(|&&c| c > 0).count();
-        wire::put_u32(&mut acct, nz as u32);
-        for (c, &cnt) in counts.iter().enumerate() {
-            if cnt > 0 {
-                wire::put_u32(&mut acct, c as u32);
-                wire::put_u32(&mut acct, cnt);
+        let per_unit = compute_s / total.max(1.0);
+        for (o, &w) in self.work.iter().enumerate() {
+            if self.owned[o] {
+                self.load_acc[o] += w * per_unit;
+                work.push((o as u32, w));
             }
-        }
-        wire::put_u32(&mut acct, moved_log.len() as u32);
-        for &(f, t2, units) in &moved_log {
-            wire::put_u32(&mut acct, f);
-            wire::put_u32(&mut acct, t2);
-            wire::put_u32(&mut acct, units as u32);
-        }
-
-        // ---- root: assemble the iteration record the way the
-        // sequential driver does, from exactly-matching aggregates.
-        let mut rec = IterRecord::default();
-        if root.is_none() {
-            comm.send(0, TAG_ACCT | smask, acct);
-        } else if let Some(rs) = root.as_mut() {
-            let mut msgs = comm.recv_tagged(TAG_ACCT | smask, n_nodes - 1, Comm::TIMEOUT);
-            assert_eq!(msgs.len(), n_nodes - 1, "step {step}: accounting gather incomplete");
-            msgs.sort_by_key(|m| m.from);
-            let mut chare_counts = vec![0u32; n_chares];
-            let mut node_push = vec![0.0f64; n_nodes];
-            // merged directed crossing records in rank order, expanded
-            // back to per-crossing particle_bytes sums (left-to-right,
-            // like the sequential per-step aggregation).
-            let mut merged_moved: Vec<(u32, u32, f64)> = Vec::new();
-            for (from, data) in std::iter::once((0u32, acct.as_slice()))
-                .chain(msgs.iter().map(|m| (m.from, m.data.as_slice())))
-            {
-                let mut r = wire::Reader::new(data);
-                node_push[from as usize] = r.f64();
-                let nz = r.u32();
-                for _ in 0..nz {
-                    let c = r.u32();
-                    let cnt = r.u32();
-                    chare_counts[c as usize] += cnt;
-                }
-                let nm = r.u32();
-                for _ in 0..nm {
-                    let f = r.u32();
-                    let t2 = r.u32();
-                    let units = r.u32();
-                    let mut bytes = 0.0f64;
-                    for _ in 0..units {
-                        bytes += pb;
-                        rs.recorder.record(f, t2, pb);
-                    }
-                    merged_moved.push((f, t2, bytes));
-                }
-            }
-            rs.steps_since_lb += 1;
-
-            let mut pe_counts = vec![0usize; topo.n_pes()];
-            let mut node_particles = vec![0usize; n_nodes];
-            for (c, &cnt) in chare_counts.iter().enumerate() {
-                let pe = chare_to_pe[c] as usize;
-                pe_counts[pe] += cnt as usize;
-                node_particles[topo.node_of_pe(pe as u32) as usize] += cnt as usize;
-            }
-            account_step_comm(
-                &topo,
-                &chare_to_pe,
-                &sh.neighbor_pairs,
-                &merged_moved,
-                &mut rs.payload,
-                &mut rs.consumed,
-                &mut rs.tracker,
-            );
-            let comm_times = rs.tracker.comm_times(&sh.driver.net);
-            let pe_summary =
-                Summary::of(&pe_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
-            rec = IterRecord {
-                iter: step,
-                particles_max_avg: pe_summary.max_avg_ratio(),
-                node_particles,
-                compute_max_s: node_push.iter().cloned().fold(0.0, f64::max),
-                compute_avg_s: node_push.iter().sum::<f64>() / n_nodes as f64,
-                comm_max_s: comm_times.iter().cloned().fold(0.0, f64::max),
-                comm_avg_s: comm_times.iter().sum::<f64>() / n_nodes as f64,
-                ..Default::default()
-            };
-            rs.last_counts = chare_counts;
-        }
-
-        // ---- LB round.
-        if sh.driver.lb_period > 0 && (step + 1) % sh.driver.lb_period == 0 {
-            let rmask = lb_round & 0x00FF_FFFF;
-            // gather measured loads at root (deterministic mode ignores
-            // them but the gather keeps the protocol uniform).
-            if rank != 0 {
-                let mut lbuf = Vec::new();
-                let nz = load_acc.iter().filter(|&&l| l > 0.0).count();
-                wire::put_u32(&mut lbuf, nz as u32);
-                for (c, &l) in load_acc.iter().enumerate() {
-                    if l > 0.0 {
-                        wire::put_u32(&mut lbuf, c as u32);
-                        wire::put_f64(&mut lbuf, l);
-                    }
-                }
-                comm.send(0, TAG_LBC | rmask, lbuf);
-            }
-            let t_lb = Instant::now();
-            let inst = if let Some(rs) = root.as_mut() {
-                // full measured-load vector
-                let msgs = comm.recv_tagged(TAG_LBC | rmask, n_nodes - 1, Comm::TIMEOUT);
-                assert_eq!(msgs.len(), n_nodes - 1, "LB {lb_round}: load gather incomplete");
-                let mut full_loads = load_acc.clone();
-                for m in &msgs {
-                    let mut r = wire::Reader::new(&m.data);
-                    let nz = r.u32();
-                    for _ in 0..nz {
-                        let c = r.u32();
-                        full_loads[c as usize] += r.f64();
-                    }
-                }
-                // the one shared instance-assembly sequence (sync
-                // traffic, incremental comm-graph refresh, load
-                // fallback) — identical to the sequential app's
-                // build_instance by construction.
-                let mut inst = pic::assemble_instance(
-                    cfg,
-                    &rs.last_counts,
-                    &full_loads,
-                    chare_to_pe.clone(),
-                    rs.steps_since_lb,
-                    &sh.neighbor_pairs,
-                    &mut rs.recorder,
-                    &mut rs.comm_cache,
-                );
-                rs.steps_since_lb = 0;
-                if sh.driver.deterministic_loads {
-                    // the sequential driver overwrites the same way
-                    inst.loads = rs.last_counts.iter().map(|&c| c as f64).collect();
-                }
-                // broadcast; then parse our own broadcast so every node
-                // provably balances the identical instance.
-                let text = inst.to_lbi();
-                for p in 1..n_nodes as u32 {
-                    comm.send(p, TAG_LBX | rmask, text.clone().into_bytes());
-                }
-                // parse our own broadcast: what we balance is provably
-                // what everyone else parsed (the format is lossless —
-                // Rust float formatting round-trips exactly).
-                Instance::from_lbi(&text).expect("lbi round-trip failed")
-            } else {
-                let msgs = comm.recv_tagged(TAG_LBX | rmask, 1, Comm::TIMEOUT);
-                assert_eq!(msgs.len(), 1, "LB {lb_round}: instance broadcast missing");
-                let text = std::str::from_utf8(&msgs[0].data).expect("lbi not utf-8");
-                Instance::from_lbi(text).expect("lbi parse failed")
-            };
-            load_acc.iter_mut().for_each(|l| *l = 0.0);
-
-            // ---- the full distributed pipeline, inline on this comm.
-            // Every node derives the candidate lists from its own parsed
-            // copy of the broadcast instance — n_nodes-fold redundant
-            // work, deliberately: in the real runtime each process
-            // computes its own candidate view, and there is no shared
-            // memory to hand rows around (the strategy-only path,
-            // run_pipeline, does share them via Arc).
-            let cands = build_candidates(&inst, sh.variant, &sh.params);
-            let outcome =
-                node_pipeline(comm, &inst, &cands[rank as usize], sh.variant, &sh.params);
-            let strat_s = t_lb.elapsed().as_secs_f64();
-            let old_map = std::mem::replace(&mut chare_to_pe, outcome.full_mapping);
-
-            // ---- realize migrations: ship my particles whose chares
-            // now live elsewhere; receive my new chares' particles.
-            let migtag = TAG_MIG | rmask;
-            let mut sends_to = vec![false; n_nodes];
-            let mut recv_from = vec![false; n_nodes];
-            for c in 0..n_chares {
-                let old_n = topo.node_of_pe(old_map[c]);
-                let new_n = topo.node_of_pe(chare_to_pe[c]);
-                if old_n == new_n {
-                    continue;
-                }
-                if old_n == rank {
-                    sends_to[new_n as usize] = true;
-                }
-                if new_n == rank {
-                    recv_from[old_n as usize] = true;
-                }
-            }
-            let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
-            keep.clear();
-            for p in parts.drain(..) {
-                let new_n = topo.node_of_pe(chare_to_pe[p.chare as usize]);
-                if new_n == rank {
-                    keep.push(p);
-                } else {
-                    put_particle(&mut outbox[new_n as usize], &p);
-                }
-            }
-            std::mem::swap(&mut parts, &mut keep);
-            for (d, buf) in outbox.into_iter().enumerate() {
-                if sends_to[d] {
-                    comm.send(d as u32, migtag, buf);
-                }
-            }
-            let expect = recv_from.iter().filter(|&&b| b).count();
-            let migs = comm.recv_tagged(migtag, expect, Comm::TIMEOUT);
-            assert_eq!(migs.len(), expect, "LB {lb_round}: migration transfer incomplete");
-            for m in &migs {
-                read_particles(&m.data, &mut parts);
-            }
-
-            // ---- root: LB accounting, sequential-driver formulas.
-            if let Some(rs) = root.as_mut() {
-                let migrations =
-                    old_map.iter().zip(&chare_to_pe).filter(|(a, b)| a != b).count();
-                let mut moved_bytes = 0.0;
-                for (c, &cnt) in rs.last_counts.iter().enumerate() {
-                    if old_map[c] != chare_to_pe[c] {
-                        moved_bytes += cnt as f64 * pb;
-                    }
-                }
-                let transfer_s = sh.driver.net.inter_time(migrations as u64, moved_bytes)
-                    / n_nodes.max(1) as f64;
-                rec.lb_s = strat_s + transfer_s;
-                rec.migrations = migrations;
-                rs.report.total_migrations += migrations;
-            }
-            lb_round += 1;
-        }
-
-        if let Some(rs) = root.as_mut() {
-            if sh.driver.log_every > 0 && step % sh.driver.log_every == 0 {
-                crate::info!(
-                    "dist iter {step}: max/avg={:.3} comm={:.2}ms lb={:.2}ms",
-                    rec.particles_max_avg,
-                    rec.comm_max_s * 1e3,
-                    rec.lb_s * 1e3
-                );
-            }
-            rs.report.compute_s += rec.compute_max_s;
-            rs.report.comm_s += rec.comm_max_s;
-            rs.report.lb_s += rec.lb_s;
-            rs.report.total_s += rec.compute_max_s + rec.comm_max_s + rec.lb_s;
-            rs.report.records.push(rec);
         }
     }
 
-    // ---- final verification: gather positions by particle id.
-    if rank != 0 {
-        let mut fin = Vec::with_capacity(parts.len() * 20);
-        for p in &parts {
-            wire::put_u32(&mut fin, p.id);
-            wire::put_f64(&mut fin, p.x);
-            wire::put_f64(&mut fin, p.y);
-        }
-        comm.send(0, TAG_FIN, fin);
-        return None;
+    fn drain_measured(&mut self, out: &mut Vec<(u32, f64)>) {
+        drain_nonzero(&mut self.load_acc, out);
     }
-    let mut rs = root.take().expect("root state");
-    let n_particles = sh.x0.len();
-    let mut xf = vec![f64::NAN; n_particles];
-    let mut yf = vec![f64::NAN; n_particles];
-    let mut seen = 0usize;
-    for p in &parts {
-        xf[p.id as usize] = p.x;
-        yf[p.id as usize] = p.y;
-        seen += 1;
-    }
-    let msgs = comm.recv_tagged(TAG_FIN, n_nodes - 1, Comm::TIMEOUT);
-    assert_eq!(msgs.len(), n_nodes - 1, "final gather incomplete");
-    for m in &msgs {
-        let mut r = wire::Reader::new(&m.data);
-        while !r.is_empty() {
-            let id = r.u32() as usize;
-            xf[id] = r.f64();
-            yf[id] = r.f64();
-            seen += 1;
+
+    fn emigrate(&mut self, _old: &[u32], new: &[u32], _outbox: &mut [Vec<u8>]) {
+        let topo = self.cfg.topo;
+        for (o, own) in self.owned.iter_mut().enumerate() {
+            *own = topo.node_of_pe(new[o]) == self.rank;
         }
     }
-    rs.report.verified = seen == n_particles
-        && pic::verify::verify_positions(
-            &sh.x0,
-            &sh.y0,
-            &xf,
-            &yf,
-            steps_total,
-            cfg.k,
-            cfg.m,
-            grid,
-        )
-        .is_ok();
-    Some(rs.report)
+}
+
+/// Run the drifting-hotspot workload fully distributed — the second
+/// node-partitionable app proving the driver generalizes beyond PIC
+/// (`tests/distributed.rs` asserts bit-identity with the sequential
+/// driver for it too).
+pub fn run_hotspot_distributed(
+    cfg: &HotspotConfig,
+    variant: Variant,
+    params: StrategyParams,
+    driver: &DriverConfig,
+) -> Result<RunReport> {
+    run_app_distributed(HotspotDistApp::new(cfg.clone())?, variant, params, driver)
 }

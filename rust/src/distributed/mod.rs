@@ -3,8 +3,10 @@
 //! object selection, and the §III-D hierarchical refinement — executed
 //! per-node as real message-passing protocols over
 //! [`simnet::Cluster`](crate::simnet::Cluster), plus a distributed
-//! application driver ([`driver`]) that runs PIC with node-partitioned
-//! particle state and realizes migrations as real particle transfers.
+//! application driver ([`driver`]) that runs any node-partitionable
+//! app ([`driver::DistApp`] — PIC and the drifting hotspot today) with
+//! node-partitioned object state and realizes migrations as real
+//! payload transfers.
 //!
 //! The paper's strategy is distributed by construction (every node
 //! decides from local state inside Charm++); the sequential

@@ -6,11 +6,13 @@
 //! strategy (+ coordinate variant), the comparison baselines, a
 //! distributed message-passing simulation substrate — including a
 //! [`distributed`] runtime that executes the **whole** LB pipeline and
-//! the PIC application as per-node protocols over real message
-//! channels — the PIC PRK and stencil applications whose compute hot
-//! paths run as AOT-compiled JAX/Pallas kernels through PJRT, and
-//! benches regenerating every table and figure of the paper. See
-//! DESIGN.md for the system map.
+//! node-partitionable applications as per-node protocols over real
+//! message channels — and a unified [`apps::App`] trait with a single
+//! generic driver ([`apps::driver::run_app`]) behind every workload:
+//! PIC PRK (compute hot paths as AOT-compiled JAX/Pallas kernels
+//! through PJRT), noisy stencils, streamline particle advection, and a
+//! drifting load hotspot. Benches regenerate every table and figure of
+//! the paper. See DESIGN.md for the system map.
 
 pub mod apps;
 pub mod coordinator;

@@ -1,11 +1,12 @@
 //! `difflb` CLI — the runtime leader.
 //!
 //! Subcommands:
-//!   run-pic     run the PIC PRK benchmark under a strategy
+//!   run         run a workload (--app pic|stencil|advect|hotspot) under a strategy
 //!   balance     load-balance a .lbi instance file, print paper metrics
 //!   viz         render a .lbi instance (PPM + SVG) colored by PE
 //!   check       verify PJRT artifacts load and execute correctly
 //!   strategies  list available strategies
+//!   apps        list available workloads
 
 use anyhow::{Context, Result};
 use difflb::coordinator::Coordinator;
@@ -16,20 +17,26 @@ use difflb::{info, viz};
 
 fn parser() -> Parser {
     Parser::new("difflb — communication-aware diffusion load balancing")
-        .subcommand("run-pic", "run the PIC PRK benchmark")
+        .subcommand("run", "run a workload (--app) under a strategy")
+        .subcommand("run-pic", "alias for `run --app pic` (kept for compatibility)")
         .subcommand("balance", "rebalance a .lbi instance file")
         .subcommand("viz", "render a .lbi instance to out/<name>.{ppm,svg}")
         .subcommand("check", "smoke-check the PJRT artifacts")
         .subcommand("strategies", "list available strategies")
+        .subcommand("apps", "list available workloads")
         .opt("config", None, "config file (INI subset)")
         .opt("set", None, "override, e.g. --set lb.strategy=diff-coord (comma-separated)")
         .opt("strategy", None, "shorthand for --set lb.strategy=...")
+        .opt("app", None, "workload to run: shorthand for --set app.kind=... \
+             (see `difflb apps`)")
         .opt("mode", None, "execution mode: sequential (default) or distributed \
-             (run the LB pipeline + PIC as real message-passing protocols)")
+             (run the LB pipeline + the app as real message-passing protocols)")
         .opt("iters", None, "shorthand for --set run.iters=...")
         .opt("lb-period", None, "shorthand for --set run.lb_period=...")
         .opt("scale", Some("8"), "viz: pixels per coordinate unit")
         .opt("out", None, "balance: write rebalanced instance here")
+        .flag("strict-config", "error (instead of warn) on config keys that are set \
+             but never read")
         .flag("verbose", "debug logging")
 }
 
@@ -40,6 +47,9 @@ fn load_config(args: &difflb::util::args::Args) -> Result<Config> {
     };
     if let Some(s) = args.get("strategy") {
         cfg.set("lb.strategy", s);
+    }
+    if let Some(s) = args.get("app") {
+        cfg.set("app.kind", s);
     }
     if let Some(s) = args.get("mode") {
         anyhow::ensure!(
@@ -55,6 +65,9 @@ fn load_config(args: &difflb::util::args::Args) -> Result<Config> {
     if let Some(s) = args.get("lb-period") {
         cfg.set("run.lb_period", s);
     }
+    if args.has_flag("strict-config") {
+        cfg.set("run.strict_config", "true");
+    }
     if let Some(sets) = args.get("set") {
         for kv in sets.split(',') {
             cfg.set_kv(kv)?;
@@ -68,16 +81,20 @@ fn main() -> Result<()> {
     if args.has_flag("verbose") {
         difflb::util::logging::set_level(difflb::util::logging::Level::Debug);
     }
-    let cfg = load_config(&args)?;
+    let mut cfg = load_config(&args)?;
 
     match args.subcommand.as_deref() {
-        Some("run-pic") => {
+        Some("run") | Some("run-pic") => {
+            if args.subcommand.as_deref() == Some("run-pic") && cfg.get("app.kind").is_none() {
+                cfg.set("app.kind", "pic");
+            }
             let coord = Coordinator::from_config(&cfg)?;
-            info!("strategy: {}", coord.strategy.name());
-            let report = coord.run_pic(&cfg)?;
-            println!("{}", report.summary_line(coord.strategy.name()));
-            anyhow::ensure!(report.verified, "PIC verification FAILED");
-            println!("PIC verification: SUCCESS");
+            let app_kind = cfg.get("app.kind").unwrap_or("pic").to_string();
+            info!("app: {app_kind}, strategy: {}", coord.strategy.name());
+            let report = coord.run(&cfg)?;
+            println!("{}", report.summary_line(&format!("{app_kind}/{}", coord.strategy.name())));
+            anyhow::ensure!(report.verified, "{app_kind} verification FAILED");
+            println!("{app_kind} verification: SUCCESS");
         }
         Some("balance") => {
             let path = args.positional.first().context("usage: balance <file.lbi>")?;
@@ -125,6 +142,11 @@ fn main() -> Result<()> {
         Some("strategies") => {
             for s in difflb::strategies::AVAILABLE {
                 println!("{s}");
+            }
+        }
+        Some("apps") => {
+            for a in difflb::apps::AVAILABLE_APPS {
+                println!("{a}");
             }
         }
         _ => {

@@ -16,57 +16,77 @@ pub mod random;
 use anyhow::{bail, Result};
 
 use crate::model::{Assignment, Instance};
+use crate::util::config::Config;
 
-/// Tunables shared across strategies; every field has a sensible
-/// default so configs/CLIs only set what they study.
-#[derive(Debug, Clone, Copy)]
-pub struct StrategyParams {
+/// Single source of truth for the strategy tunables: each row declares
+/// the field, its type, its default, the config key it reads from (all
+/// under section `lb`), and which typed [`Config`] getter resolves it.
+/// The macro expands the struct, `Default`, **and**
+/// [`StrategyParams::from_config`] from the same list — adding a
+/// tunable here cannot silently miss the config path (the hand-copied
+/// `params_from_config` this replaces once could).
+macro_rules! strategy_params {
+    ($($(#[$meta:meta])* $field:ident : $ty:ty = $default:expr, $key:literal via $getter:ident;)+) => {
+        /// Tunables shared across strategies; every field has a
+        /// sensible default so configs/CLIs only set what they study.
+        /// Declared through the `strategy_params!` macro so the struct,
+        /// its defaults, and [`StrategyParams::from_config`] stay in
+        /// lockstep.
+        #[derive(Debug, Clone, Copy)]
+        pub struct StrategyParams {
+            $($(#[$meta])* pub $field: $ty,)+
+        }
+
+        impl Default for StrategyParams {
+            fn default() -> Self {
+                StrategyParams { $($field: $default,)+ }
+            }
+        }
+
+        impl StrategyParams {
+            /// Resolve every tunable from a config (section `lb`),
+            /// falling back to the declared defaults.
+            pub fn from_config(cfg: &Config) -> StrategyParams {
+                let d = StrategyParams::default();
+                StrategyParams { $($field: cfg.$getter($key, d.$field),)+ }
+            }
+
+            /// The config keys the tunables read — one per field, for
+            /// docs and tests.
+            pub const CONFIG_KEYS: &[&str] = &[$($key,)+];
+        }
+    };
+}
+
+strategy_params! {
     /// Desired neighbor-graph vertex degree K (paper §III-A).
-    pub neighbor_count: usize,
+    neighbor_count: usize = 4, "lb.neighbors" via get_or;
     /// Handshake round bound (paper §III-A step 5).
-    pub handshake_max_rounds: usize,
+    handshake_max_rounds: usize = 32, "lb.handshake_rounds" via get_or;
     /// Virtual-LB neighborhood convergence threshold: relative load
     /// deviation within a neighborhood considered "balanced" (§III-B).
-    pub vlb_tolerance: f64,
+    vlb_tolerance: f64 = 0.05, "lb.vlb_tolerance" via get_or;
     /// Virtual-LB iteration bound.
-    pub vlb_max_iters: usize,
+    vlb_max_iters: usize = 200, "lb.vlb_max_iters" via get_or;
     /// Object selection may exceed a quota by up to this fraction of the
     /// candidate object's load (§III-C "more objects than initially...").
-    pub overfill: f64,
+    overfill: f64 = 0.5, "lb.overfill" via get_or;
     /// GreedyRefine overload tolerance above average.
-    pub refine_tolerance: f64,
+    refine_tolerance: f64 = 0.02, "lb.refine_tolerance" via get_or;
     /// METIS partition imbalance allowance (1.0 = perfect).
-    pub balance_tolerance: f64,
+    balance_tolerance: f64 = 1.03, "lb.balance_tolerance" via get_or;
     /// ParMETIS-style migration-vs-edge-cut tradeoff (higher = more
     /// willing to migrate; mirrors ParMETIS `itr`).
-    pub itr: f64,
+    itr: f64 = 1000.0, "lb.itr" via get_or;
     /// Coordinate variant: when > 0, use the Morton-curve (SFC)
     /// neighbor search with this window instead of the quadratic
     /// all-pairs sort (paper §VII future work).
-    pub sfc_window: usize,
+    sfc_window: usize = 0, "lb.sfc_window" via get_or;
     /// Reuse the stage-1 neighbor graph across LB rounds instead of
     /// reconstructing it every time (paper §III-A future work).
-    pub reuse_neighbors: bool,
+    reuse_neighbors: bool = false, "lb.reuse_neighbors" via get_bool_or;
     /// Seed for any randomized tie-breaking (coarsening visit order...).
-    pub seed: u64,
-}
-
-impl Default for StrategyParams {
-    fn default() -> Self {
-        StrategyParams {
-            neighbor_count: 4,
-            handshake_max_rounds: 32,
-            vlb_tolerance: 0.05,
-            vlb_max_iters: 200,
-            overfill: 0.5,
-            refine_tolerance: 0.02,
-            balance_tolerance: 1.03,
-            itr: 1000.0,
-            sfc_window: 0,
-            reuse_neighbors: false,
-            seed: 0xD1FF,
-        }
-    }
+    seed: u64 = 0xD1FF, "lb.seed" via get_or;
 }
 
 /// A dynamic load-balancing strategy.
@@ -178,5 +198,26 @@ pub(crate) mod tests {
         let inst = small_instance(4);
         let asg = NoLb.rebalance(&inst);
         assert_eq!(asg.migrations(&inst), 0);
+    }
+
+    #[test]
+    fn params_from_config_reads_every_declared_key() {
+        // Set every declared key to a distinguishable value and check
+        // from_config leaves none unread — the macro guarantees the
+        // struct and the config path can't drift apart.
+        let mut cfg = Config::new();
+        for &key in StrategyParams::CONFIG_KEYS {
+            let v = if key == "lb.reuse_neighbors" { "true" } else { "7" };
+            cfg.set(key, v);
+        }
+        let p = StrategyParams::from_config(&cfg);
+        assert!(cfg.unread_keys().is_empty(), "unread: {:?}", cfg.unread_keys());
+        assert_eq!(p.neighbor_count, 7);
+        assert_eq!(p.vlb_max_iters, 7);
+        assert!(p.reuse_neighbors);
+        assert_eq!(p.seed, 7);
+        // defaults survive an empty config
+        let d = StrategyParams::from_config(&Config::new());
+        assert_eq!(d.neighbor_count, StrategyParams::default().neighbor_count);
     }
 }

@@ -13,15 +13,37 @@
 //! overrides (e.g. CLI `--set section.key=value`), later layers win.
 //! Typed getters parse on access; `get_or` supplies defaults so configs
 //! stay minimal.
+//!
+//! Because `get_or` silently falls back to its default, a typo'd key
+//! (`lb.neighbours`) would otherwise vanish without a trace. Every
+//! getter therefore records the keys it actually resolved;
+//! [`Config::unread_keys`] reports the set-but-never-read remainder,
+//! which the coordinator surfaces as a warning (or an error under
+//! `run.strict_config`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct Config {
     values: BTreeMap<String, String>,
+    /// Keys successfully resolved by [`Config::get`] at least once —
+    /// interior-mutable so read tracking doesn't infect every getter
+    /// signature with `&mut`; a `Mutex` (not `RefCell`) keeps `Config`
+    /// `Sync` for shared-reference use across threads.
+    accessed: Mutex<BTreeSet<String>>,
+}
+
+impl Clone for Config {
+    fn clone(&self) -> Config {
+        Config {
+            values: self.values.clone(),
+            accessed: Mutex::new(self.accessed.lock().unwrap().clone()),
+        }
+    }
 }
 
 impl Config {
@@ -69,11 +91,15 @@ impl Config {
         Config::from_str(&text).with_context(|| format!("parsing {}", p.display()))
     }
 
-    /// Overlay `other` on top of `self` (other wins).
+    /// Overlay `other` on top of `self` (other wins). Read-tracking
+    /// merges too: a key either layer already resolved stays read.
     pub fn layered(mut self, other: &Config) -> Config {
         for (k, v) in &other.values {
             self.values.insert(k.clone(), v.clone());
         }
+        let mut seen = self.accessed.lock().unwrap();
+        seen.extend(other.accessed.lock().unwrap().iter().cloned());
+        drop(seen);
         self
     }
 
@@ -90,8 +116,23 @@ impl Config {
         self.values.insert(key.to_string(), value.to_string());
     }
 
+    /// Raw lookup. Records the key as read on a hit — the basis of
+    /// [`Config::unread_keys`] typo detection (every typed getter
+    /// funnels through here).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.values.get(key).map(|s| s.as_str())
+        let v = self.values.get(key).map(|s| s.as_str());
+        if v.is_some() {
+            self.accessed.lock().unwrap().insert(key.to_string());
+        }
+        v
+    }
+
+    /// Keys that were set (file, `--set`, or [`Config::set`]) but never
+    /// resolved by any getter — almost always typos, since `get_or`
+    /// silently defaults on a miss.
+    pub fn unread_keys(&self) -> Vec<String> {
+        let seen = self.accessed.lock().unwrap();
+        self.values.keys().filter(|k| !seen.contains(k.as_str())).cloned().collect()
     }
 
     pub fn require(&self, key: &str) -> Result<&str> {
@@ -204,6 +245,21 @@ verbose = true
         let merged = base.layered(&over);
         assert_eq!(merged.parse::<i32>("a.x").unwrap(), 10);
         assert_eq!(merged.parse::<i32>("a.y").unwrap(), 2);
+    }
+
+    #[test]
+    fn unread_keys_flags_typos() {
+        let c = Config::from_str("[lb]\nstrategy = x\nneighbours = 4").unwrap();
+        assert_eq!(c.unread_keys().len(), 2);
+        assert_eq!(c.get("lb.strategy"), Some("x"));
+        // the typo'd key stays unread no matter how often the real one
+        // is resolved; misses don't mark anything
+        assert!(c.get("lb.neighbors").is_none());
+        assert_eq!(c.unread_keys(), vec!["lb.neighbours".to_string()]);
+        // clones and layers carry the read set along
+        let over = Config::from_str("[lb]\nseed = 9").unwrap();
+        let merged = c.clone().layered(&over);
+        assert_eq!(merged.unread_keys(), vec!["lb.neighbours", "lb.seed"]);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Golden-assignment lock for the App-trait/driver redesign: the
+//! generic `run_app` loop must reproduce the **pre-refactor** drivers
+//! bit for bit.
+//!
+//! `legacy_run_pic` below is a frozen transliteration of the old
+//! PIC-only `run_pic` loop (usize per-PE particle counts gathered by
+//! iterating particles, per-PE node aggregation, count-based
+//! deterministic loads, the app-side crossing merge) written against
+//! `PicApp`'s public surface; `legacy_stencil_rounds` freezes the old
+//! `StencilSim::advance` + manual-rebalance loop. The tests assert the
+//! generic driver's generalized arithmetic (f64 work units accumulated
+//! per object) produces identical modeled communication seconds,
+//! imbalance ratios, migration counts, and final assignments for both
+//! workloads and both diffusion variants — so the refactor changed the
+//! shape of the code, not one bit of its decisions.
+
+use difflb::apps::driver::{account_step_comm, run_app, DriverConfig};
+use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
+use difflb::apps::stencil::{self, Decomposition, StencilSim, HALO_BYTES};
+use difflb::apps::{App, StepCtx};
+use difflb::model::graph::sort_sum_merge;
+use difflb::model::{evaluate, Topology, TrafficRecorder};
+use difflb::simnet::CostTracker;
+use difflb::strategies::{make, LoadBalancer, StrategyParams};
+use difflb::util::rng::Rng;
+use difflb::util::stats::Summary;
+
+fn pic_cfg() -> PicConfig {
+    PicConfig {
+        grid: 64,
+        n_particles: 2_500,
+        k: 1,
+        m: 1,
+        init: InitMode::Geometric { rho: 0.9 },
+        chares_x: 8,
+        chares_y: 8,
+        decomp: Decomposition::Striped,
+        topo: Topology::flat(4),
+        q: 1.0,
+        seed: 0x60D,
+        particle_bytes: 48.0,
+        threads: 2,
+    }
+}
+
+/// One legacy iteration row (the timing-independent fields).
+struct LegacyRecord {
+    max_avg: f64,
+    node_particles: Vec<usize>,
+    comm_max_s: f64,
+    comm_avg_s: f64,
+    migrations: usize,
+}
+
+/// Frozen pre-refactor PIC driver loop (see module docs).
+fn legacy_run_pic(
+    app: &mut PicApp,
+    strategy: &dyn LoadBalancer,
+    cfg: &DriverConfig,
+) -> (Vec<LegacyRecord>, usize) {
+    let topo = app.cfg.topo;
+    let neighbor_pairs = app.chare_neighbor_pairs();
+    let mut tracker = CostTracker::new(topo.n_nodes);
+    let mut payload: Vec<(u32, u32, f64)> = Vec::new();
+    let mut consumed: Vec<bool> = Vec::new();
+    let mut records = Vec::new();
+    let mut total_migrations = 0usize;
+    let mut ctx = StepCtx::default();
+    for iter in 0..cfg.iters {
+        ctx.moved.clear();
+        app.step(&mut ctx).unwrap();
+        // the old PicApp::step returned the crossing log already merged
+        // per directed pair (same stable sort-merge, same input order)
+        sort_sum_merge(&mut ctx.moved);
+
+        let pe_counts = app.pe_particle_counts();
+        let mut node_particles = vec![0usize; topo.n_nodes];
+        for (pe, &cnt) in pe_counts.iter().enumerate() {
+            node_particles[topo.node_of_pe(pe as u32) as usize] += cnt;
+        }
+        account_step_comm(
+            &topo,
+            &app.chare_to_pe,
+            &neighbor_pairs,
+            &ctx.moved,
+            &mut payload,
+            &mut consumed,
+            &mut tracker,
+        );
+        let comm_times = tracker.comm_times(&cfg.net);
+        let pe_summary =
+            Summary::of(&pe_counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
+        let mut rec = LegacyRecord {
+            max_avg: pe_summary.max_avg_ratio(),
+            node_particles,
+            comm_max_s: comm_times.iter().cloned().fold(0.0, f64::max),
+            comm_avg_s: comm_times.iter().sum::<f64>() / topo.n_nodes as f64,
+            migrations: 0,
+        };
+
+        if cfg.lb_period > 0 && (iter + 1) % cfg.lb_period == 0 {
+            let mut inst = app.build_instance();
+            if cfg.deterministic_loads {
+                inst.loads =
+                    app.chare_particle_counts().iter().map(|&c| c as f64).collect();
+            }
+            let asg = strategy.rebalance(&inst);
+            let metrics = evaluate(&inst, &asg);
+            app.apply_assignment(&asg);
+            rec.migrations = metrics.migrations;
+            total_migrations += metrics.migrations;
+        }
+        records.push(rec);
+    }
+    (records, total_migrations)
+}
+
+fn assert_pic_golden(strategy_name: &str) {
+    let driver = DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        ..Default::default()
+    };
+    let (legacy, legacy_migr, legacy_map) = {
+        let mut app = PicApp::new(pic_cfg(), Backend::Native).unwrap();
+        let strat = make(strategy_name, StrategyParams::default()).unwrap();
+        let (recs, migr) = legacy_run_pic(&mut app, strat.as_ref(), &driver);
+        (recs, migr, app.chare_to_pe.clone())
+    };
+    let (report, new_map) = {
+        let mut app = PicApp::new(pic_cfg(), Backend::Native).unwrap();
+        let strat = make(strategy_name, StrategyParams::default()).unwrap();
+        let rep = run_app(&mut app, strat.as_ref(), &driver).unwrap();
+        (rep, app.chare_to_pe.clone())
+    };
+    assert!(report.verified);
+    assert_eq!(report.records.len(), legacy.len());
+    for (l, n) in legacy.iter().zip(&report.records) {
+        assert_eq!(l.max_avg, n.work_max_avg, "iter {}: imbalance", n.iter);
+        assert_eq!(l.comm_max_s, n.comm_max_s, "iter {}: comm max", n.iter);
+        assert_eq!(l.comm_avg_s, n.comm_avg_s, "iter {}: comm avg", n.iter);
+        assert_eq!(l.migrations, n.migrations, "iter {}: migrations", n.iter);
+        let legacy_work: Vec<f64> =
+            l.node_particles.iter().map(|&c| c as f64).collect();
+        assert_eq!(legacy_work, n.node_work, "iter {}: node work", n.iter);
+    }
+    assert_eq!(legacy_migr, report.total_migrations, "total migrations");
+    assert_eq!(legacy_map, new_map, "final assignment diverged from pre-refactor");
+}
+
+#[test]
+fn pic_golden_assignments_diff_comm() {
+    assert_pic_golden("diff-comm");
+}
+
+#[test]
+fn pic_golden_assignments_diff_coord() {
+    assert_pic_golden("diff-coord");
+}
+
+/// Frozen pre-refactor stencil loop: `StencilSim::advance` (load
+/// re-roll + halo record + incremental graph refresh) followed by a
+/// manual rebalance each round.
+fn legacy_stencil_rounds(
+    strategy: &dyn LoadBalancer,
+    rounds: usize,
+) -> (Vec<usize>, Vec<u32>, Vec<f64>) {
+    let (side, px, py, noise, seed) = (16usize, 2usize, 2usize, 0.4f64, 0x5EED_u64);
+    let mut inst = stencil::stencil_2d(side, px, py, Decomposition::Tiled);
+    let mut recorder = TrafficRecorder::new(inst.n_objects());
+    let mut rng = Rng::new(seed);
+    let mut migrations = Vec::new();
+    for _ in 0..rounds {
+        for l in inst.loads.iter_mut() {
+            *l = 1.0 + noise * (2.0 * rng.f64() - 1.0);
+        }
+        {
+            let (graph, rec) = (&inst.graph, &mut recorder);
+            for a in 0..graph.n {
+                for &b in graph.neighbors(a) {
+                    if (a as u32) < b {
+                        rec.record(a as u32, b, HALO_BYTES);
+                    }
+                }
+            }
+        }
+        inst.graph.update_from_recorder(&mut recorder);
+        let asg = strategy.rebalance(&inst);
+        migrations.push(evaluate(&inst, &asg).migrations);
+        inst.mapping.clone_from(&asg.mapping);
+    }
+    (migrations, inst.mapping.clone(), inst.loads.clone())
+}
+
+fn assert_stencil_golden(strategy_name: &str) {
+    let rounds = 6;
+    let legacy_strat = make(strategy_name, StrategyParams::default()).unwrap();
+    let (legacy_migr, legacy_map, legacy_loads) =
+        legacy_stencil_rounds(legacy_strat.as_ref(), rounds);
+
+    let mut sim = StencilSim::new(16, 2, 2, Decomposition::Tiled, 0.4, 0x5EED);
+    let strat = make(strategy_name, StrategyParams::default()).unwrap();
+    let driver = DriverConfig { iters: rounds, lb_period: 1, ..Default::default() };
+    let report = run_app(&mut sim, strat.as_ref(), &driver).unwrap();
+
+    let new_migr: Vec<usize> = report.records.iter().map(|r| r.migrations).collect();
+    assert_eq!(legacy_migr, new_migr, "per-round migrations diverged");
+    assert_eq!(legacy_map, sim.inst.mapping, "final assignment diverged");
+    assert_eq!(legacy_loads, sim.inst.loads, "rng stream diverged");
+}
+
+#[test]
+fn stencil_golden_assignments_diff_comm() {
+    assert_stencil_golden("diff-comm");
+}
+
+#[test]
+fn stencil_golden_assignments_diff_coord() {
+    assert_stencil_golden("diff-coord");
+}

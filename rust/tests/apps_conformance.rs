@@ -1,0 +1,208 @@
+//! Generic conformance suite for the [`App`] trait, run over **every**
+//! registered workload (`apps::AVAILABLE_APPS`): the trait contract
+//! (valid instances, in-range crossing records, sane work vectors,
+//! `apply` keeping mappings in range) plus the full
+//! `strategies::AVAILABLE × AVAILABLE_APPS` cross-product through the
+//! one generic driver.
+//!
+//! Set `DIFFLB_TEST_APP` to restrict the suite to a single app (the CI
+//! matrix sweeps pic/stencil/advect/hotspot).
+
+use difflb::apps::driver::{run_app, DriverConfig};
+use difflb::apps::{App, StepCtx, AVAILABLE_APPS};
+use difflb::coordinator::app_from_config;
+use difflb::strategies::{make, StrategyParams, AVAILABLE};
+use difflb::util::config::Config;
+
+/// Small-but-real configuration for each registered app.
+fn small_config(kind: &str) -> Config {
+    let mut cfg = Config::new();
+    cfg.set("app.kind", kind);
+    cfg.set("topo.nodes", 4);
+    cfg.set("pic.grid", 32);
+    cfg.set("pic.particles", 600);
+    cfg.set("pic.chares_x", 4);
+    cfg.set("pic.chares_y", 4);
+    cfg.set("pic.backend", "native");
+    cfg.set("pic.threads", 2);
+    cfg.set("stencil.side", 16);
+    cfg.set("stencil.px", 2);
+    cfg.set("stencil.py", 2);
+    cfg.set("advect.particles", 800);
+    cfg.set("advect.blocks_x", 6);
+    cfg.set("advect.blocks_y", 6);
+    cfg.set("hotspot.nx", 8);
+    cfg.set("hotspot.ny", 8);
+    cfg
+}
+
+fn make_app(kind: &str) -> Box<dyn App> {
+    app_from_config(&small_config(kind)).unwrap()
+}
+
+/// Apps under test: all registered, or just `DIFFLB_TEST_APP`.
+fn apps_under_test() -> Vec<&'static str> {
+    match std::env::var("DIFFLB_TEST_APP") {
+        Ok(want) => {
+            let picked: Vec<&'static str> =
+                AVAILABLE_APPS.iter().copied().filter(|a| *a == want).collect();
+            assert!(!picked.is_empty(), "DIFFLB_TEST_APP={want} is not a registered app");
+            picked
+        }
+        Err(_) => AVAILABLE_APPS.to_vec(),
+    }
+}
+
+#[test]
+fn registry_covers_every_app_and_names_agree() {
+    for kind in apps_under_test() {
+        let app = make_app(kind);
+        assert_eq!(app.name(), kind);
+        assert!(app.n_objects() > 0, "{kind}: no objects");
+        assert_eq!(app.mapping().len(), app.n_objects(), "{kind}: mapping length");
+    }
+}
+
+#[test]
+fn step_contract_in_range_records_and_work() {
+    for kind in apps_under_test() {
+        let mut app = make_app(kind);
+        let n = app.n_objects() as u32;
+        let n_pes = app.topo().n_pes() as u32;
+        let pairs = app.neighbor_pairs();
+        assert!(
+            pairs.iter().all(|&(a, b)| a < b && b < n),
+            "{kind}: malformed neighbor pairs"
+        );
+        let mut ctx = StepCtx::default();
+        let mut work = Vec::new();
+        for _step in 0..5 {
+            ctx.moved.clear();
+            let stats = app.step(&mut ctx).unwrap();
+            assert!(stats.compute_s >= 0.0, "{kind}: negative compute time");
+            for &(f, t, bytes) in &ctx.moved {
+                assert!(f < n && t < n, "{kind}: crossing record out of range");
+                assert!(bytes.is_finite() && bytes >= 0.0, "{kind}: bad crossing bytes");
+            }
+            app.work(&mut work);
+            assert_eq!(work.len(), app.n_objects(), "{kind}: work length");
+            assert!(
+                work.iter().all(|w| w.is_finite() && *w >= 0.0),
+                "{kind}: work must be finite and non-negative"
+            );
+            assert!(
+                app.mapping().iter().all(|&pe| pe < n_pes),
+                "{kind}: mapping out of range"
+            );
+        }
+        app.verify().unwrap_or_else(|e| panic!("{kind}: verify failed: {e}"));
+    }
+}
+
+#[test]
+fn build_instance_is_valid_and_apply_keeps_range() {
+    for kind in apps_under_test() {
+        let mut app = make_app(kind);
+        let mut ctx = StepCtx::default();
+        for _ in 0..4 {
+            ctx.moved.clear();
+            app.step(&mut ctx).unwrap();
+        }
+        let inst = app.build_instance();
+        assert_eq!(inst.n_objects(), app.n_objects(), "{kind}: instance size");
+        inst.validate().unwrap_or_else(|e| panic!("{kind}: invalid instance: {e}"));
+        assert!(inst.graph.edge_count() > 0, "{kind}: empty comm graph");
+        // a deliberately disruptive assignment must round-trip
+        let scatter = make("scatter", StrategyParams::default()).unwrap();
+        let asg = scatter.rebalance(&inst);
+        let bytes = app.apply(&asg);
+        assert!(bytes >= 0.0 && bytes.is_finite(), "{kind}: bad migration bytes");
+        assert_eq!(app.mapping(), &asg.mapping[..], "{kind}: apply didn't adopt mapping");
+        // the app still steps and verifies after a migration storm
+        ctx.moved.clear();
+        app.step(&mut ctx).unwrap();
+        app.verify().unwrap_or_else(|e| panic!("{kind}: verify after apply failed: {e}"));
+    }
+}
+
+#[test]
+fn crossing_records_agree_with_recorded_traffic() {
+    // The records handed to the driver and the traffic folded into the
+    // LB instance come from the same events: every instance edge weight
+    // must be at least the bytes the step records claimed for it
+    // (instances may add sync-message bytes on top).
+    for kind in apps_under_test() {
+        let mut app = make_app(kind);
+        let mut ctx = StepCtx::default();
+        let mut claimed = std::collections::BTreeMap::new();
+        for _ in 0..3 {
+            ctx.moved.clear();
+            app.step(&mut ctx).unwrap();
+            for &(f, t, bytes) in &ctx.moved {
+                let key = (f.min(t), f.max(t));
+                *claimed.entry(key).or_insert(0.0f64) += bytes;
+            }
+        }
+        let inst = app.build_instance();
+        let mut graph_bytes = std::collections::BTreeMap::new();
+        for (a, b, w) in inst.graph.edges() {
+            graph_bytes.insert((a, b), w);
+        }
+        for (key, bytes) in &claimed {
+            let w = graph_bytes.get(key).copied().unwrap_or(0.0);
+            assert!(
+                w + 1e-9 >= *bytes,
+                "{kind}: edge {key:?} carries {w} bytes but steps recorded {bytes}"
+            );
+        }
+    }
+}
+
+#[test]
+fn full_cross_product_runs_through_the_generic_driver() {
+    // strategies::AVAILABLE × AVAILABLE_APPS, every combination through
+    // run_app — the acceptance gate of the App-trait redesign.
+    let driver = DriverConfig {
+        iters: 4,
+        lb_period: 2,
+        deterministic_loads: true,
+        ..Default::default()
+    };
+    for kind in apps_under_test() {
+        for strat_name in AVAILABLE {
+            let mut app = make_app(kind);
+            let strat = make(strat_name, StrategyParams::default()).unwrap();
+            let rep = run_app(app.as_mut(), strat.as_ref(), &driver)
+                .unwrap_or_else(|e| panic!("{kind} × {strat_name}: {e:#}"));
+            assert_eq!(rep.records.len(), 4, "{kind} × {strat_name}");
+            assert!(rep.verified, "{kind} × {strat_name}: verification failed");
+            let n_pes = app.topo().n_pes() as u32;
+            assert!(
+                app.mapping().iter().all(|&pe| pe < n_pes),
+                "{kind} × {strat_name}: out-of-range PE after run"
+            );
+        }
+    }
+}
+
+#[test]
+fn deterministic_loads_make_runs_reproducible() {
+    for kind in apps_under_test() {
+        let run = || {
+            let mut app = make_app(kind);
+            let strat = make("diff-comm", StrategyParams::default()).unwrap();
+            let driver = DriverConfig {
+                iters: 6,
+                lb_period: 2,
+                deterministic_loads: true,
+                ..Default::default()
+            };
+            let rep = run_app(app.as_mut(), strat.as_ref(), &driver).unwrap();
+            (rep.total_migrations, app.mapping().to_vec())
+        };
+        let (m1, map1) = run();
+        let (m2, map2) = run();
+        assert_eq!(m1, m2, "{kind}: migration totals diverged across identical runs");
+        assert_eq!(map1, map2, "{kind}: final mappings diverged across identical runs");
+    }
+}

@@ -17,10 +17,12 @@
 //! Set `DIFFLB_TEST_NODES` to re-run the pipeline equivalence at a
 //! specific cluster size (CI sweeps {4, 8, 16}).
 
-use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::driver::{run_app, DriverConfig};
+use difflb::apps::hotspot::{Hotspot, HotspotConfig};
 use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
 use difflb::apps::stencil::{self, Decomposition, StencilSim};
-use difflb::distributed::driver::run_pic_distributed;
+use difflb::apps::{App, StepCtx};
+use difflb::distributed::driver::{run_hotspot_distributed, run_pic_distributed};
 use difflb::distributed::DistDiffusion;
 use difflb::model::{Instance, Topology};
 use difflb::simnet::protocol::distributed_select_neighbors;
@@ -169,15 +171,20 @@ fn pipeline_plan_matches_sequential_intermediates() {
 #[test]
 fn pipeline_tracks_sequential_over_stencil_rounds() {
     // Multi-round agreement on an evolving workload: apply the
-    // (identical) assignment each round and re-noise the loads.
+    // (identical) assignment each round and re-noise the loads. The
+    // stencil steps through its App-trait surface — the same one the
+    // generic driver uses.
     let mut sim = StencilSim::new(24, 4, 2, Decomposition::Tiled, 0.4, 77);
     let params = StrategyParams::default();
     let seq = Diffusion::communication(params);
     let dist = DistDiffusion::communication(params);
+    let mut ctx = StepCtx::default();
     for round in 0..3 {
-        sim.advance();
-        let s = seq.rebalance(&sim.inst);
-        let d = dist.rebalance(&sim.inst);
+        ctx.moved.clear();
+        sim.step(&mut ctx).unwrap();
+        let inst = sim.build_instance();
+        let s = seq.rebalance(&inst);
+        let d = dist.rebalance(&inst);
         assert_eq!(s.mapping, d.mapping, "round {round}");
         sim.apply(&s);
     }
@@ -216,7 +223,7 @@ fn assert_driver_equivalence(topo: Topology) {
     let seq = {
         let mut app = PicApp::new(cfg.clone(), Backend::Native).unwrap();
         let strat = Diffusion::communication(params);
-        run_pic(&mut app, &strat, &driver).unwrap()
+        run_app(&mut app, &strat, &driver).unwrap()
     };
     let dist = run_pic_distributed(&cfg, Variant::Communication, params, &driver).unwrap();
     assert!(seq.verified, "sequential physics failed");
@@ -225,10 +232,10 @@ fn assert_driver_equivalence(topo: Topology) {
     assert_eq!(seq.total_migrations, dist.total_migrations, "migration totals diverged");
     for (s, d) in seq.records.iter().zip(&dist.records) {
         assert_eq!(s.migrations, d.migrations, "iter {}: migrations", s.iter);
-        assert_eq!(s.particles_max_avg, d.particles_max_avg, "iter {}: imbalance", s.iter);
+        assert_eq!(s.work_max_avg, d.work_max_avg, "iter {}: imbalance", s.iter);
         assert_eq!(s.comm_max_s, d.comm_max_s, "iter {}: modeled comm max", s.iter);
         assert_eq!(s.comm_avg_s, d.comm_avg_s, "iter {}: modeled comm avg", s.iter);
-        assert_eq!(s.node_particles, d.node_particles, "iter {}: node particles", s.iter);
+        assert_eq!(s.node_work, d.node_work, "iter {}: node work", s.iter);
     }
 }
 
@@ -240,6 +247,48 @@ fn distributed_pic_matches_sequential_driver_flat() {
 #[test]
 fn distributed_pic_matches_sequential_driver_hierarchical() {
     assert_driver_equivalence(Topology::new(2, 2));
+}
+
+// ---------------------------------------------------------------------
+// End-to-end distributed hotspot: the driver generalizes beyond PIC —
+// the second node-partitionable app must match the sequential driver
+// the same way (migrations, imbalance, modeled comm seconds).
+
+fn assert_hotspot_driver_equivalence(topo: Topology) {
+    let cfg = HotspotConfig { topo, ..Default::default() };
+    let driver = DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        ..Default::default()
+    };
+    let params = StrategyParams::default();
+    let seq = {
+        let mut app = Hotspot::new(cfg.clone()).unwrap();
+        let strat = Diffusion::communication(params);
+        run_app(&mut app, &strat, &driver).unwrap()
+    };
+    let dist = run_hotspot_distributed(&cfg, Variant::Communication, params, &driver).unwrap();
+    assert!(seq.verified && dist.verified);
+    assert_eq!(seq.records.len(), dist.records.len());
+    assert_eq!(seq.total_migrations, dist.total_migrations, "migration totals diverged");
+    for (s, d) in seq.records.iter().zip(&dist.records) {
+        assert_eq!(s.migrations, d.migrations, "iter {}: migrations", s.iter);
+        assert_eq!(s.work_max_avg, d.work_max_avg, "iter {}: imbalance", s.iter);
+        assert_eq!(s.comm_max_s, d.comm_max_s, "iter {}: modeled comm max", s.iter);
+        assert_eq!(s.comm_avg_s, d.comm_avg_s, "iter {}: modeled comm avg", s.iter);
+        assert_eq!(s.node_work, d.node_work, "iter {}: node work", s.iter);
+    }
+}
+
+#[test]
+fn distributed_hotspot_matches_sequential_driver_flat() {
+    assert_hotspot_driver_equivalence(Topology::flat(4));
+}
+
+#[test]
+fn distributed_hotspot_matches_sequential_driver_hierarchical() {
+    assert_hotspot_driver_equivalence(Topology::new(2, 2));
 }
 
 #[test]

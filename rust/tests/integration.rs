@@ -92,7 +92,7 @@ fn coordinator_full_cycle_from_config() {
     )
     .unwrap();
     let coord = Coordinator::from_config(&cfg).unwrap();
-    let rep = coord.run_pic(&cfg).unwrap();
+    let rep = coord.run(&cfg).unwrap();
     assert!(rep.verified);
     assert_eq!(rep.records.len(), 8);
     assert!(rep.records.iter().any(|r| r.migrations > 0 || r.lb_s >= 0.0));

@@ -4,8 +4,9 @@
 
 use std::sync::Arc;
 
-use difflb::apps::driver::{run_pic, DriverConfig};
+use difflb::apps::driver::{run_app, DriverConfig};
 use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
+use difflb::apps::step_once;
 use difflb::apps::stencil::Decomposition;
 use difflb::model::Topology;
 use difflb::runtime::{Engine, Manifest};
@@ -46,7 +47,7 @@ fn verified_under_every_strategy_native() {
         let mut app = PicApp::new(cfg(2_500, 4), Backend::Native).unwrap();
         let strat = make(name, StrategyParams::default()).unwrap();
         let driver = DriverConfig { iters: 12, lb_period: 4, ..Default::default() };
-        let rep = run_pic(&mut app, strat.as_ref(), &driver).unwrap();
+        let rep = run_app(&mut app, strat.as_ref(), &driver).unwrap();
         assert!(rep.verified, "verification failed under {name}");
     }
 }
@@ -57,7 +58,7 @@ fn verified_with_pjrt_backend_and_lb() {
     let mut app = PicApp::new(cfg(2_000, 4), backend).unwrap();
     let strat = make("diff-comm", StrategyParams::default()).unwrap();
     let driver = DriverConfig { iters: 10, lb_period: 5, ..Default::default() };
-    let rep = run_pic(&mut app, strat.as_ref(), &driver).unwrap();
+    let rep = run_app(&mut app, strat.as_ref(), &driver).unwrap();
     assert!(rep.verified);
     assert!(rep.total_migrations > 0, "expected some migrations");
 }
@@ -68,8 +69,8 @@ fn backends_agree_on_trajectories() {
     let mut native = PicApp::new(cfg(1_200, 2), Backend::Native).unwrap();
     let mut pjrt = PicApp::new(cfg(1_200, 2), backend).unwrap();
     for _ in 0..6 {
-        native.step().unwrap();
-        pjrt.step().unwrap();
+        step_once(&mut native).unwrap();
+        step_once(&mut pjrt).unwrap();
     }
     for i in 0..native.state.len() {
         assert!((native.state.x[i] - pjrt.state.x[i]).abs() < 1e-9, "i={i}");
@@ -91,7 +92,7 @@ fn imbalance_wave_moves_across_pes() {
     // displacement is 5 cells/step; PE stripe width = 96/4 = 24 cells:
     // after ~8 steps the hotspot crosses into the next stripe
     for _ in 0..10 {
-        app.step().unwrap();
+        step_once(&mut app).unwrap();
     }
     let later_owner = {
         let counts = app.pe_particle_counts();
@@ -107,9 +108,9 @@ fn diffusion_beats_no_lb_on_particle_balance() {
     let avg_ratio = |strategy: &str| {
         let mut app = PicApp::new(cfg(4_000, 4), Backend::Native).unwrap();
         let s = make(strategy, StrategyParams::default()).unwrap();
-        let rep = run_pic(&mut app, s.as_ref(), &driver).unwrap();
+        let rep = run_app(&mut app, s.as_ref(), &driver).unwrap();
         assert!(rep.verified);
-        rep.records.iter().map(|r| r.particles_max_avg).sum::<f64>() / rep.records.len() as f64
+        rep.records.iter().map(|r| r.work_max_avg).sum::<f64>() / rep.records.len() as f64
     };
     let none = avg_ratio("none");
     let diff = avg_ratio("diff-comm");

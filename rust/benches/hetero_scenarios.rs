@@ -1,0 +1,131 @@
+//! Bench smoke for heterogeneous clusters (ISSUE 5 satellite): the
+//! speed-aware pipeline across the three scenario families the CI
+//! heterogeneity matrix sweeps — uniform (the legacy bit-path), static
+//! mixed speeds, and a noisy (per-iteration perturbed) schedule —
+//! plus the incremental cost of the weighted arithmetic on the
+//! strategy hot path itself.
+//!
+//! Writes `BENCH_hetero.json` (override with `DIFFLB_BENCH_JSON`;
+//! shrink the per-path budget with `DIFFLB_BENCH_BUDGET_MS`).
+
+use std::time::Duration;
+
+use difflb::apps::driver::{run_app, DriverConfig};
+use difflb::apps::hotspot::{Hotspot, HotspotConfig};
+use difflb::apps::stencil::{self, Decomposition};
+use difflb::model::{SpeedSchedule, Topology};
+use difflb::strategies::diffusion::Diffusion;
+use difflb::strategies::{make, LoadBalancer, StrategyParams};
+use difflb::util::bench::{time_fn, JsonReport, Timing};
+
+struct Report {
+    json: JsonReport,
+}
+
+impl Report {
+    fn record(&mut self, t: &Timing, throughput: Option<(&str, f64)>) {
+        let extra = match throughput {
+            Some((unit, v)) => format!("{v:.1} {unit}"),
+            None => String::new(),
+        };
+        println!("{}  {extra}", t.report());
+        self.json.add(t, throughput);
+    }
+}
+
+/// Cycled speed palette — the same shape the tests use.
+fn mixed_speeds(n_pes: usize) -> Vec<f64> {
+    const PALETTE: [f64; 4] = [1.0, 2.0, 0.5, 1.5];
+    (0..n_pes).map(|pe| PALETTE[pe % PALETTE.len()]).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let budget_ms: u64 = std::env::var("DIFFLB_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let budget = Duration::from_millis(budget_ms);
+    let mut rep = Report { json: JsonReport::new() };
+
+    // ---------- strategy hot path: rebalance cost, uniform vs weighted
+    // (the weighted arithmetic must stay noise-level on the profile).
+    let mk_inst = |hetero: bool| {
+        let mut inst = stencil::stencil_2d(48, 4, 4, Decomposition::Tiled);
+        stencil::inject_noise(&mut inst, 0.4, 0x4E7E);
+        if hetero {
+            inst.topo = inst.topo.clone().with_pe_speeds(mixed_speeds(16));
+        }
+        inst
+    };
+    for (label, hetero) in [("uniform", false), ("mixed-speed", true)] {
+        let inst = mk_inst(hetero);
+        let lb = Diffusion::communication(StrategyParams::default());
+        let t = time_fn(
+            &format!("diffusion rebalance {label} (2304 obj, 16 nodes)"),
+            budget,
+            || lb.rebalance(&inst).mapping.len(),
+        );
+        rep.record(&t, Some(("rebalances/s", 1.0 / t.mean_s)));
+    }
+    for (label, hetero) in [("uniform", false), ("mixed-speed", true)] {
+        let inst = mk_inst(hetero);
+        let lb: Box<dyn LoadBalancer> =
+            make("greedy-refine", StrategyParams::default()).unwrap();
+        let t = time_fn(
+            &format!("greedy-refine rebalance {label} (2304 obj)"),
+            budget,
+            || lb.rebalance(&inst).mapping.len(),
+        );
+        rep.record(&t, None);
+    }
+
+    // ---------- scenario family: hotspot runs through the generic
+    // driver under uniform / mixed / noisy schedules.
+    let scenarios: [(&str, Option<Vec<f64>>, SpeedSchedule); 3] = [
+        ("uniform", None, SpeedSchedule::none()),
+        ("mixed-speed", Some(mixed_speeds(4)), SpeedSchedule::none()),
+        (
+            "noisy",
+            Some(mixed_speeds(4)),
+            SpeedSchedule { noise: 0.3, period: 2, seed: 0xA11 },
+        ),
+    ];
+    for (label, speeds, sched) in scenarios {
+        let topo = match &speeds {
+            None => Topology::flat(4),
+            Some(s) => Topology::flat(4).with_pe_speeds(s.clone()),
+        };
+        let driver = DriverConfig {
+            iters: 20,
+            lb_period: 5,
+            deterministic_loads: true,
+            speed_schedule: sched,
+            ..Default::default()
+        };
+        let t = time_fn(
+            &format!("hotspot run_app 20 iters diff-comm ({label})"),
+            budget,
+            || {
+                let mut app = Hotspot::new(HotspotConfig {
+                    topo: topo.clone(),
+                    ..Default::default()
+                })
+                .unwrap();
+                let strat = make("diff-comm", StrategyParams::default()).unwrap();
+                run_app(&mut app, strat.as_ref(), &driver).unwrap().total_migrations
+            },
+        );
+        rep.record(&t, None);
+    }
+
+    let out = std::env::var("DIFFLB_BENCH_JSON").unwrap_or_else(|_| {
+        format!("{}/../BENCH_hetero.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let label = format!(
+        "hetero_scenarios budget={budget_ms}ms threads={}",
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    );
+    rep.json.write(&out, &label)?;
+    println!("wrote {out} ({} paths)", rep.json.len());
+    Ok(())
+}

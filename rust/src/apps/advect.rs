@@ -187,7 +187,7 @@ impl App for Advect {
     }
 
     fn topo(&self) -> Topology {
-        self.cfg.topo
+        self.cfg.topo.clone()
     }
 
     fn n_objects(&self) -> usize {
@@ -285,7 +285,7 @@ impl App for Advect {
             })
             .collect();
         let mut inst =
-            Instance::new(loads, coords, graph, self.block_to_pe.clone(), self.cfg.topo);
+            Instance::new(loads, coords, graph, self.block_to_pe.clone(), self.cfg.topo.clone());
         inst.sizes = self
             .block_particle_counts()
             .iter()

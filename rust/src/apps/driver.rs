@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use crate::apps::app::{App, StepCtx};
-use crate::model::{evaluate, Assignment, Topology};
+use crate::model::{evaluate, Assignment, SpeedSchedule, Topology};
 use crate::simnet::{CostTracker, NetModel};
 use crate::strategies::LoadBalancer;
 use crate::util::stats::Summary;
@@ -76,6 +76,13 @@ pub struct DriverConfig {
     /// the distributed driver reports the *same* migration counts and
     /// modeled comm seconds as this sequential driver.
     pub deterministic_loads: bool,
+    /// Time-varying PE speed noise (OS interference model). When
+    /// active, the effective topology at iteration `i` perturbs the
+    /// app's base PE speeds deterministically; the per-iteration
+    /// time-imbalance metric and every LB instance see the perturbed
+    /// speeds. The distributed driver evaluates the identical pure
+    /// function at its root, so seq-vs-dist equivalence survives noise.
+    pub speed_schedule: SpeedSchedule,
 }
 
 impl Default for DriverConfig {
@@ -86,6 +93,7 @@ impl Default for DriverConfig {
             net: NetModel::default(),
             log_every: 0,
             deterministic_loads: false,
+            speed_schedule: SpeedSchedule::none(),
         }
     }
 }
@@ -96,6 +104,10 @@ pub struct IterRecord {
     pub iter: usize,
     /// max/avg work units per PE (Fig 3/4 metric; particles for PIC).
     pub work_max_avg: f64,
+    /// max/avg normalized time (`work / effective PE speed`) per PE —
+    /// what heterogeneous runs actually balance. Equal to
+    /// `work_max_avg` on uniform topologies without speed noise.
+    pub time_max_avg: f64,
     /// work units on each node (Fig 3 series).
     pub node_work: Vec<f64>,
     /// modeled per-iteration compute time (max / avg over nodes).
@@ -153,7 +165,11 @@ pub fn run_app<A: App + ?Sized>(
     let mut work: Vec<f64> = Vec::new();
     let mut pe_work = vec![0.0f64; topo.n_pes()];
     let mut node_work = vec![0.0f64; topo.n_nodes];
+    let mut pe_time_buf: Vec<f64> = Vec::new();
     for iter in 0..cfg.iters {
+        // Effective topology this iteration: the app's base speeds,
+        // perturbed by the noise schedule when one is active.
+        let eff_topo = cfg.speed_schedule.topo_at(&topo, iter);
         ctx.moved.clear();
         let stats = app.step(&mut ctx)?;
         // Aggregate the raw crossing log per directed (from, to) pair —
@@ -196,6 +212,7 @@ pub fn run_app<A: App + ?Sized>(
         let mut rec = IterRecord {
             iter,
             work_max_avg: pe_summary.max_avg_ratio(),
+            time_max_avg: time_imbalance(&pe_work, &eff_topo, &mut pe_time_buf),
             node_work: node_work.clone(),
             compute_max_s: node_work.iter().map(|&w| w * per_unit).fold(0.0, f64::max),
             compute_avg_s: node_work.iter().map(|&w| w * per_unit).sum::<f64>()
@@ -210,6 +227,11 @@ pub fn run_app<A: App + ?Sized>(
             let mut inst = app.build_instance();
             if cfg.deterministic_loads {
                 inst.loads = work.clone();
+            }
+            if cfg.speed_schedule.is_active() {
+                // the balancer must see this iteration's perturbed
+                // speeds, not the app's static base topology
+                inst.topo = eff_topo.clone();
             }
             let t = std::time::Instant::now();
             let asg = strategy.rebalance(&inst);
@@ -260,6 +282,25 @@ pub fn compare_strategies(
     Ok(out)
 }
 
+/// max/avg of per-PE normalized time (`work / effective speed`) —
+/// shared by the sequential and distributed drivers so the reported
+/// time-imbalance is bit-identical between them. On uniform effective
+/// topologies this is exactly the raw work ratio.
+pub fn time_imbalance(pe_work: &[f64], eff_topo: &Topology, buf: &mut Vec<f64>) -> f64 {
+    if eff_topo.is_uniform() {
+        Summary::of(pe_work).max_avg_ratio()
+    } else {
+        buf.clear();
+        buf.extend(
+            pe_work
+                .iter()
+                .enumerate()
+                .map(|(pe, w)| w / eff_topo.pe_speed(pe as u32)),
+        );
+        Summary::of(buf).max_avg_ratio()
+    }
+}
+
 /// Assignment helper re-exported for bench code symmetry.
 pub fn no_lb_assignment<A: App + ?Sized>(app: &A) -> Assignment {
     Assignment { mapping: app.mapping().to_vec() }
@@ -307,6 +348,43 @@ mod tests {
         // LB ran at iters 4, 9, 14, 19
         assert!(rep.records[4].lb_s >= 0.0);
         assert_eq!(rep.records[3].migrations, 0);
+    }
+
+    #[test]
+    fn uniform_runs_report_time_equal_to_work_imbalance() {
+        let mut a = app();
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        let cfg = DriverConfig { iters: 8, lb_period: 4, ..Default::default() };
+        let rep = run_app(&mut a, strat.as_ref(), &cfg).unwrap();
+        for r in &rep.records {
+            assert_eq!(r.time_max_avg, r.work_max_avg, "iter {}", r.iter);
+        }
+    }
+
+    #[test]
+    fn noisy_speed_schedule_runs_end_to_end() {
+        use crate::model::SpeedSchedule;
+        let mut a = app();
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        let cfg = DriverConfig {
+            iters: 10,
+            lb_period: 5,
+            deterministic_loads: true,
+            speed_schedule: SpeedSchedule { noise: 0.4, period: 2, seed: 9 },
+            ..Default::default()
+        };
+        let rep = run_app(&mut a, strat.as_ref(), &cfg).unwrap();
+        assert_eq!(rep.records.len(), 10);
+        assert!(rep.verified, "speed noise must not affect physics");
+        assert!(rep.records.iter().all(|r| r.time_max_avg.is_finite()));
+        // deterministic: the same schedule reproduces the same series
+        let mut b = app();
+        let strat2 = make("diff-comm", StrategyParams::default()).unwrap();
+        let rep2 = run_app(&mut b, strat2.as_ref(), &cfg).unwrap();
+        let t1: Vec<f64> = rep.records.iter().map(|r| r.time_max_avg).collect();
+        let t2: Vec<f64> = rep2.records.iter().map(|r| r.time_max_avg).collect();
+        assert_eq!(t1, t2);
+        assert_eq!(rep.total_migrations, rep2.total_migrations);
     }
 
     #[test]

@@ -162,7 +162,7 @@ pub fn assemble_instance(
         if measured_total > 0.0 { measured.to_vec() } else { work.to_vec() };
     let coords: Vec<[f64; 2]> =
         (0..n).map(|o| [(o % cfg.nx) as f64, (o / cfg.nx) as f64]).collect();
-    let mut inst = Instance::new(loads, coords, graph, mapping, cfg.topo);
+    let mut inst = Instance::new(loads, coords, graph, mapping, cfg.topo.clone());
     inst.sizes = vec![cfg.object_bytes; n];
     inst
 }
@@ -173,7 +173,7 @@ impl App for Hotspot {
     }
 
     fn topo(&self) -> Topology {
-        self.cfg.topo
+        self.cfg.topo.clone()
     }
 
     fn n_objects(&self) -> usize {

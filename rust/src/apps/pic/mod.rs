@@ -239,7 +239,7 @@ impl App for PicApp {
     }
 
     fn topo(&self) -> Topology {
-        self.cfg.topo
+        self.cfg.topo.clone()
     }
 
     fn n_objects(&self) -> usize {
@@ -367,7 +367,7 @@ pub fn assemble_instance(
             [cx * cw + cw / 2.0, cy * ch + ch / 2.0]
         })
         .collect();
-    let mut inst = Instance::new(loads, coords, graph, mapping, cfg.topo);
+    let mut inst = Instance::new(loads, coords, graph, mapping, cfg.topo.clone());
     inst.sizes = counts.iter().map(|&c| c * cfg.particle_bytes).collect();
     inst
 }

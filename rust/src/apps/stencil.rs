@@ -177,7 +177,7 @@ impl App for StencilSim {
     }
 
     fn topo(&self) -> Topology {
-        self.inst.topo
+        self.inst.topo.clone()
     }
 
     fn n_objects(&self) -> usize {

@@ -42,8 +42,54 @@ fn decomp_from(cfg: &Config, key: &str, default: &str) -> Result<Decomposition> 
     }
 }
 
-fn topo_from_config(cfg: &Config) -> Topology {
-    Topology::new(cfg.get_or("topo.nodes", 4), cfg.get_or("topo.pes_per_node", 1))
+/// Attach `topo.pe_speeds` (comma list, one factor per PE) to an
+/// already-shaped topology, with friendly validation. Apps that derive
+/// their topology from other knobs (the stencil's `px x py`) run
+/// through this too, so every workload sees the configured speeds.
+fn apply_pe_speeds(cfg: &Config, topo: Topology) -> Result<Topology> {
+    match cfg.get("topo.pe_speeds") {
+        None => Ok(topo),
+        Some(_) => {
+            let speeds: Vec<f64> =
+                cfg.get_list("topo.pe_speeds").context("parsing topo.pe_speeds")?;
+            if speeds.len() != topo.n_pes() {
+                bail!(
+                    "topo.pe_speeds has {} entries for {} PEs ({} nodes x {} pes_per_node)",
+                    speeds.len(),
+                    topo.n_pes(),
+                    topo.n_nodes,
+                    topo.pes_per_node
+                );
+            }
+            if speeds.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+                bail!("topo.pe_speeds entries must be finite and positive");
+            }
+            Ok(topo.with_pe_speeds(speeds))
+        }
+    }
+}
+
+fn topo_from_config(cfg: &Config) -> Result<Topology> {
+    let topo = Topology::new(cfg.get_or("topo.nodes", 4), cfg.get_or("topo.pes_per_node", 1));
+    apply_pe_speeds(cfg, topo)
+}
+
+/// Speed-noise schedule from a config (section `topo`): amplitude
+/// `topo.speed_noise` (0 = off), redraw period
+/// `topo.speed_noise_period`, seed `topo.speed_seed`.
+pub fn speed_schedule_from_config(cfg: &Config) -> Result<crate::model::SpeedSchedule> {
+    let sched = crate::model::SpeedSchedule {
+        noise: cfg.get_or("topo.speed_noise", 0.0),
+        period: cfg.get_or("topo.speed_noise_period", 1),
+        seed: cfg.get_or("topo.speed_seed", 0x5EED_u64),
+    };
+    if !sched.noise.is_finite() || sched.noise < 0.0 || sched.noise >= 1.0 {
+        bail!("topo.speed_noise must be in [0, 1) (got {})", sched.noise);
+    }
+    if sched.period == 0 {
+        bail!("topo.speed_noise_period must be >= 1");
+    }
+    Ok(sched)
 }
 
 /// PIC app configuration from a config (section `pic` + `topo`).
@@ -70,7 +116,7 @@ pub fn pic_from_config(cfg: &Config) -> Result<PicConfig> {
         chares_x: cfg.get_or("pic.chares_x", d.chares_x),
         chares_y: cfg.get_or("pic.chares_y", d.chares_y),
         decomp: decomp_from(cfg, "pic.decomp", "striped")?,
-        topo: topo_from_config(cfg),
+        topo: topo_from_config(cfg)?,
         q: cfg.get_or("pic.q", d.q),
         seed: cfg.get_or("pic.seed", d.seed),
         particle_bytes: cfg.get_or("pic.particle_bytes", d.particle_bytes),
@@ -90,7 +136,7 @@ pub fn advect_from_config(cfg: &Config) -> Result<AdvectConfig> {
         amplitude: cfg.get_or("advect.amplitude", d.amplitude),
         max_substeps: cfg.get_or("advect.max_substeps", d.max_substeps),
         decomp: decomp_from(cfg, "advect.decomp", "striped")?,
-        topo: topo_from_config(cfg),
+        topo: topo_from_config(cfg)?,
         seed: cfg.get_or("advect.seed", d.seed),
         particle_bytes: cfg.get_or("advect.particle_bytes", d.particle_bytes),
     })
@@ -110,7 +156,7 @@ pub fn hotspot_from_config(cfg: &Config) -> Result<HotspotConfig> {
         halo_bytes: cfg.get_or("hotspot.halo_bytes", d.halo_bytes),
         object_bytes: cfg.get_or("hotspot.object_bytes", d.object_bytes),
         decomp: decomp_from(cfg, "hotspot.decomp", "tiled")?,
-        topo: topo_from_config(cfg),
+        topo: topo_from_config(cfg)?,
     })
 }
 
@@ -124,14 +170,20 @@ pub fn app_from_config(cfg: &Config) -> Result<Box<dyn App>> {
             let backend = Coordinator::backend(cfg)?;
             Box::new(PicApp::new(pic_cfg, backend).context("initializing PIC app")?)
         }
-        "stencil" => Box::new(StencilSim::new(
-            cfg.get_or("stencil.side", 24),
-            cfg.get_or("stencil.px", 2),
-            cfg.get_or("stencil.py", 2),
-            decomp_from(cfg, "stencil.decomp", "tiled")?,
-            cfg.get_or("stencil.noise", 0.4),
-            cfg.get_or("stencil.seed", 0x57E_u64),
-        )),
+        "stencil" => {
+            let mut sim = StencilSim::new(
+                cfg.get_or("stencil.side", 24),
+                cfg.get_or("stencil.px", 2),
+                cfg.get_or("stencil.py", 2),
+                decomp_from(cfg, "stencil.decomp", "tiled")?,
+                cfg.get_or("stencil.noise", 0.4),
+                cfg.get_or("stencil.seed", 0x57E_u64),
+            );
+            // the stencil's flat topology comes from px x py, not
+            // [topo]; configured PE speeds still apply to it
+            sim.inst.topo = apply_pe_speeds(cfg, sim.inst.topo.clone())?;
+            Box::new(sim)
+        }
         "advect" => {
             Box::new(Advect::new(advect_from_config(cfg)?).context("initializing advect app")?)
         }
@@ -229,6 +281,7 @@ impl Coordinator {
             net: net_from_config(cfg),
             log_every: cfg.get_or("run.log_every", 0),
             deterministic_loads: cfg.get_bool_or("run.deterministic_loads", false),
+            speed_schedule: speed_schedule_from_config(cfg)?,
         };
         Ok(Coordinator { strategy, params, driver })
     }
@@ -336,6 +389,55 @@ mod tests {
         let pic = pic_from_config(&cfg).unwrap();
         assert_eq!(pic.grid, 64);
         assert_eq!(pic.topo.n_nodes, 2);
+    }
+
+    #[test]
+    fn pe_speeds_and_noise_resolve_from_config() {
+        let cfg = Config::from_str(
+            "[topo]\nnodes = 2\npes_per_node = 2\npe_speeds = 1.0, 2.0, 0.5, 1.5\n\
+             speed_noise = 0.2\nspeed_noise_period = 3\nspeed_seed = 7",
+        )
+        .unwrap();
+        let pic = pic_from_config(&cfg).unwrap();
+        assert_eq!(pic.topo.pe_speeds().unwrap(), &[1.0, 2.0, 0.5, 1.5]);
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        assert!(coord.driver.speed_schedule.is_active());
+        assert_eq!(coord.driver.speed_schedule.period, 3);
+        assert_eq!(coord.driver.speed_schedule.seed, 7);
+        // all-1.0 canonicalizes to uniform
+        let uni = Config::from_str("[topo]\nnodes = 4\npe_speeds = 1, 1, 1, 1").unwrap();
+        assert!(pic_from_config(&uni).unwrap().topo.is_uniform());
+    }
+
+    #[test]
+    fn bad_speed_configs_are_rejected() {
+        for text in [
+            "[topo]\nnodes = 4\npe_speeds = 1.0, 2.0",           // wrong length
+            "[topo]\nnodes = 2\npe_speeds = 1.0, -1.0",          // non-positive
+            "[topo]\nnodes = 2\npe_speeds = 1.0, bogus",         // unparsable
+        ] {
+            let cfg = Config::from_str(text).unwrap();
+            assert!(pic_from_config(&cfg).is_err(), "{text}");
+        }
+        for text in [
+            "[topo]\nspeed_noise = 1.5", // amplitude >= 1 could zero a speed
+            "[topo]\nspeed_noise = -0.1",
+            "[topo]\nspeed_noise = 0.2\nspeed_noise_period = 0",
+        ] {
+            let cfg = Config::from_str(text).unwrap();
+            assert!(Coordinator::from_config(&cfg).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn stencil_app_receives_configured_speeds() {
+        let cfg = Config::from_str(
+            "[app]\nkind = stencil\n[stencil]\nside = 8\npx = 2\npy = 2\n\
+             [topo]\npe_speeds = 1.0, 2.0, 1.0, 0.5",
+        )
+        .unwrap();
+        let app = app_from_config(&cfg).unwrap();
+        assert_eq!(app.topo().pe_speeds().unwrap(), &[1.0, 2.0, 1.0, 0.5]);
     }
 
     #[test]

@@ -44,7 +44,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::driver::{account_step_comm, DriverConfig, IterRecord, RunReport};
+use crate::apps::driver::{
+    account_step_comm, time_imbalance, DriverConfig, IterRecord, RunReport,
+};
 use crate::apps::hotspot::{self, HotspotConfig};
 use crate::apps::pic::{self, PicConfig};
 use crate::model::{CommGraph, Instance, Topology, TrafficRecorder};
@@ -259,8 +261,13 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
         report: RunReport::default(),
     });
 
+    let mut pe_time_buf: Vec<f64> = Vec::new();
     for step in 0..steps_total {
         let smask = (step as u32) & 0x00FF_FFFF;
+        // Effective topology this step — the same pure function of
+        // (schedule, step) the sequential driver evaluates, so every
+        // root-side speed-dependent quantity matches it bit for bit.
+        let eff_topo = sh.driver.speed_schedule.topo_at(&topo, step);
 
         // ---- step my partition; crossers leave by message.
         let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
@@ -360,6 +367,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
             rec = IterRecord {
                 iter: step,
                 work_max_avg: pe_summary.max_avg_ratio(),
+                time_max_avg: time_imbalance(&pe_work, &eff_topo, &mut pe_time_buf),
                 node_work,
                 compute_max_s: node_push.iter().cloned().fold(0.0, f64::max),
                 compute_avg_s: node_push.iter().sum::<f64>() / n_nodes as f64,
@@ -418,6 +426,11 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                 if sh.driver.deterministic_loads {
                     // the sequential driver overwrites the same way
                     inst.loads = rs.last_work.clone();
+                }
+                if sh.driver.speed_schedule.is_active() {
+                    // perturbed speeds travel inside the .lbi broadcast,
+                    // so every node balances the same effective topology
+                    inst.topo = eff_topo.clone();
                 }
                 // broadcast; then parse our own broadcast so every node
                 // provably balances the identical instance.
@@ -639,7 +652,7 @@ impl DistApp for PicDistApp {
     }
 
     fn topo(&self) -> Topology {
-        self.cfg.topo
+        self.cfg.topo.clone()
     }
 
     fn n_objects(&self) -> usize {
@@ -659,7 +672,7 @@ impl DistApp for PicDistApp {
     }
 
     fn make_node(&self, rank: u32, mapping: &[u32]) -> PicNode {
-        let topo = self.cfg.topo;
+        let topo = self.cfg.topo.clone();
         let n_chares = self.n_objects();
         let parts: Vec<P> = self
             .init_parts
@@ -738,7 +751,7 @@ impl DistNode for PicNode {
         moved: &mut Vec<(u32, u32, u32)>,
     ) -> f64 {
         let grid = self.cfg.grid as f64;
-        let topo = self.cfg.topo;
+        let topo = self.cfg.topo.clone();
         // push my partition (bit-identical per-particle math to the
         // sequential app's native backend).
         let t = Instant::now();
@@ -800,7 +813,7 @@ impl DistNode for PicNode {
     }
 
     fn emigrate(&mut self, _old: &[u32], new: &[u32], outbox: &mut [Vec<u8>]) {
-        let topo = self.cfg.topo;
+        let topo = self.cfg.topo.clone();
         self.keep.clear();
         for p in self.parts.drain(..) {
             let new_n = topo.node_of_pe(new[p.chare as usize]);
@@ -873,7 +886,7 @@ impl DistApp for HotspotDistApp {
     }
 
     fn topo(&self) -> Topology {
-        self.cfg.topo
+        self.cfg.topo.clone()
     }
 
     fn n_objects(&self) -> usize {
@@ -893,7 +906,7 @@ impl DistApp for HotspotDistApp {
     }
 
     fn make_node(&self, rank: u32, mapping: &[u32]) -> HotspotNode {
-        let topo = self.cfg.topo;
+        let topo = self.cfg.topo.clone();
         let n = self.n_objects();
         let owned: Vec<bool> =
             mapping.iter().map(|&pe| topo.node_of_pe(pe) == rank).collect();
@@ -968,7 +981,7 @@ impl DistNode for HotspotNode {
     }
 
     fn emigrate(&mut self, _old: &[u32], new: &[u32], _outbox: &mut [Vec<u8>]) {
-        let topo = self.cfg.topo;
+        let topo = self.cfg.topo.clone();
         for (o, own) in self.owned.iter_mut().enumerate() {
             *own = topo.node_of_pe(new[o]) == self.rank;
         }

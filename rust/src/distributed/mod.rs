@@ -153,10 +153,16 @@ pub fn build_candidates(
     }
 }
 
-/// This node's total load, accumulated in object order — the same
-/// left-to-right additions `Instance::node_loads_into` performs for
-/// this node's slot, so the scalar is bit-equal to the sequential
-/// strategy's `node_loads[rank]`.
+/// This node's stage-2 load scalar, accumulated in object order — the
+/// same left-to-right additions `Instance::node_loads_into` performs
+/// for this node's slot, so the scalar is bit-equal to the sequential
+/// strategy's `node_loads[rank]`. On heterogeneous topologies the sum
+/// is then divided by this node's service capacity, exactly the
+/// per-node `l / c` the sequential `LbScratch::load_views` computes —
+/// this is the "speed vector exchange": every node derives its own
+/// capacity from the shared instance's topology (the distributed app
+/// driver ships the speeds inside the `.lbi` broadcast) and normalizes
+/// locally before the load-scalar exchange.
 fn node_load(inst: &Instance, rank: u32) -> f64 {
     let mut my_load = 0.0;
     for (o, &pe) in inst.mapping.iter().enumerate() {
@@ -164,7 +170,11 @@ fn node_load(inst: &Instance, rank: u32) -> f64 {
             my_load += inst.loads[o];
         }
     }
-    my_load
+    if inst.topo.is_uniform() {
+        my_load
+    } else {
+        my_load / inst.topo.node_capacity(rank)
+    }
 }
 
 /// Stages 1 + 2 only for this node (handshake + virtual diffusion) —
@@ -387,6 +397,26 @@ mod tests {
         let (dneigh, dquotas) = DistDiffusion::communication(params).plan(&inst);
         assert_eq!(sneigh.adj, dneigh.adj);
         assert_eq!(squotas, dquotas);
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_on_heterogeneous_speeds() {
+        let mut inst = noisy_stencil(2, 2, 10);
+        inst.topo =
+            inst.topo.clone().with_pe_speeds(vec![1.0, 2.0, 0.5, 1.5]);
+        let params = StrategyParams::default();
+        for (seq, dist) in [
+            (
+                Diffusion::communication(params).rebalance(&inst),
+                DistDiffusion::communication(params).rebalance(&inst),
+            ),
+            (
+                Diffusion::coordinate(params).rebalance(&inst),
+                DistDiffusion::coordinate(params).rebalance(&inst),
+            ),
+        ] {
+            assert_eq!(seq.mapping, dist.mapping);
+        }
     }
 
     #[test]

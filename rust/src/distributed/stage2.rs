@@ -58,8 +58,11 @@ pub struct Stage2Out {
 
 /// Run the distributed virtual-LB fixed point for this node. `adj` is
 /// the stage-1 neighbor set (sorted ascending; the graph is symmetric
-/// by the handshake's contract), `my_load` this node's total load.
-/// `tag_base` must leave the low 24 bits clear.
+/// by the handshake's contract), `my_load` this node's stage-2 load
+/// scalar — raw work on uniform topologies, normalized time
+/// (`work / capacity`, see `node_load` in the parent module) on heterogeneous
+/// ones; the protocol itself is unit-agnostic. `tag_base` must leave
+/// the low 24 bits clear.
 pub fn virtual_balance_node(
     comm: &mut Comm,
     adj: &[u32],

@@ -33,6 +33,10 @@ fn parser() -> Parser {
              (run the LB pipeline + the app as real message-passing protocols)")
         .opt("iters", None, "shorthand for --set run.iters=...")
         .opt("lb-period", None, "shorthand for --set run.lb_period=...")
+        .opt("pe-speeds", None, "heterogeneous cluster: comma-separated per-PE speed \
+             factors, e.g. --pe-speeds 1,2,1,0.5 (sets topo.pe_speeds)")
+        .opt("speed-noise", None, "speed-noise amplitude in [0, 1): perturbs PE speeds \
+             each iteration to model OS interference (sets topo.speed_noise)")
         .opt("scale", Some("8"), "viz: pixels per coordinate unit")
         .opt("out", None, "balance: write rebalanced instance here")
         .flag("strict-config", "error (instead of warn) on config keys that are set \
@@ -64,6 +68,14 @@ fn load_config(args: &difflb::util::args::Args) -> Result<Config> {
     }
     if let Some(s) = args.get("lb-period") {
         cfg.set("run.lb_period", s);
+    }
+    // dedicated option rather than --set: --set splits its value on
+    // commas, which would shred a speed list
+    if let Some(s) = args.get("pe-speeds") {
+        cfg.set("topo.pe_speeds", s);
+    }
+    if let Some(s) = args.get("speed-noise") {
+        cfg.set("topo.speed_noise", s);
     }
     if args.has_flag("strict-config") {
         cfg.set("run.strict_config", "true");

@@ -111,6 +111,30 @@ impl Instance {
         loads
     }
 
+    /// Per-PE normalized times (`work / speed`) — the heterogeneous
+    /// balance signal. On uniform topologies the division is by exactly
+    /// 1.0, so the result is bitwise the raw loads.
+    pub fn pe_times(&self, mapping: &[u32]) -> Vec<f64> {
+        let mut times = self.pe_loads(mapping);
+        if !self.topo.is_uniform() {
+            for (pe, t) in times.iter_mut().enumerate() {
+                *t /= self.topo.pe_speed(pe as u32);
+            }
+        }
+        times
+    }
+
+    /// Per-node normalized times (`work / node capacity`).
+    pub fn node_times(&self, mapping: &[u32]) -> Vec<f64> {
+        let mut times = self.node_loads(mapping);
+        if !self.topo.is_uniform() {
+            for (node, t) in times.iter_mut().enumerate() {
+                *t /= self.topo.node_capacity(node as u32);
+            }
+        }
+        times
+    }
+
     /// Per-node total loads.
     pub fn node_loads(&self, mapping: &[u32]) -> Vec<f64> {
         let mut loads = vec![0.0; self.topo.n_nodes];
@@ -163,6 +187,16 @@ impl Instance {
             self.topo.n_nodes,
             self.topo.pes_per_node
         ));
+        // Heterogeneous topologies carry their PE speed vector; Rust's
+        // shortest-round-trip float formatting keeps the line lossless,
+        // which the distributed driver's `.lbi` broadcast relies on.
+        if let Some(speeds) = self.topo.pe_speeds() {
+            s.push_str("speeds");
+            for v in speeds {
+                s.push_str(&format!(" {v}"));
+            }
+            s.push('\n');
+        }
         for o in 0..self.n_objects() {
             s.push_str(&format!(
                 "object {o} load {} pe {} x {} y {} size {}\n",
@@ -183,6 +217,7 @@ impl Instance {
         let mut sizes = Vec::new();
         let mut mapping = Vec::new();
         let mut edges = Vec::new();
+        let mut speeds: Option<Vec<f64>> = None;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -220,6 +255,23 @@ impl Instance {
                     coords[id][1] = toks[9].parse().with_context(ctx)?;
                     sizes[id] = toks[11].parse().with_context(ctx)?;
                 }
+                "speeds" => {
+                    // speeds s0 s1 ... s_{n_pes-1}; the length check
+                    // happens after the loop against the final
+                    // topology, so a speeds line placed before the
+                    // header still errors (bail) instead of tripping
+                    // with_pe_speeds' assert against the placeholder
+                    // topology
+                    let parsed: Result<Vec<f64>> = toks[1..]
+                        .iter()
+                        .map(|t| t.parse::<f64>().map_err(|e| anyhow::anyhow!("{}: {e}", ctx())))
+                        .collect();
+                    let parsed = parsed?;
+                    if parsed.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+                        bail!("{}: speeds must be finite and positive", ctx());
+                    }
+                    speeds = Some(parsed);
+                }
                 "edge" => {
                     if toks.len() != 4 {
                         bail!("{}: malformed edge line", ctx());
@@ -232,6 +284,12 @@ impl Instance {
                 }
                 other => bail!("{}: unknown record '{other}'", ctx()),
             }
+        }
+        if let Some(s) = speeds {
+            if s.len() != topo.n_pes() {
+                bail!("speeds record has {} entries for {} PEs", s.len(), topo.n_pes());
+            }
+            topo = topo.with_pe_speeds(s);
         }
         let graph = CommGraph::from_edges(n, &edges);
         let inst = Instance { loads, coords, sizes, graph, mapping, topo };
@@ -332,5 +390,44 @@ mod tests {
     fn malformed_lbi_rejected() {
         assert!(Instance::from_lbi("object 0").is_err());
         assert!(Instance::from_lbi("header objects 1 nodes 1 pes_per_node 1\nbogus x").is_err());
+        // wrong-length or non-positive speed vectors are rejected too
+        assert!(Instance::from_lbi(
+            "header objects 1 nodes 2 pes_per_node 1\nspeeds 1.0\nobject 0 load 1 pe 0 x 0 y 0 size 1"
+        )
+        .is_err());
+        assert!(Instance::from_lbi(
+            "header objects 1 nodes 2 pes_per_node 1\nspeeds 1.0 -2.0\nobject 0 load 1 pe 0 x 0 y 0 size 1"
+        )
+        .is_err());
+        // a speeds record BEFORE the header must error, not panic
+        // (the length is checked against the final topology)
+        assert!(Instance::from_lbi(
+            "speeds 2.0\nheader objects 1 nodes 2 pes_per_node 1\nobject 0 load 1 pe 0 x 0 y 0 size 1"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn lbi_round_trips_pe_speeds() {
+        let mut inst = tiny_instance();
+        inst.topo = inst.topo.clone().with_pe_speeds(vec![1.0, 2.5]);
+        let back = Instance::from_lbi(&inst.to_lbi()).unwrap();
+        assert_eq!(back.topo, inst.topo);
+        assert_eq!(back.topo.pe_speeds().unwrap(), &[1.0, 2.5]);
+        // uniform topologies serialize no speeds line at all
+        let plain = tiny_instance();
+        assert!(!plain.to_lbi().contains("speeds"));
+    }
+
+    #[test]
+    fn time_views_normalize_by_speed() {
+        let mut inst = tiny_instance();
+        // uniform: times are bitwise the loads
+        assert_eq!(inst.pe_times(&inst.mapping), inst.pe_loads(&inst.mapping));
+        assert_eq!(inst.node_times(&inst.mapping), inst.node_loads(&inst.mapping));
+        inst.topo = inst.topo.clone().with_pe_speeds(vec![1.0, 2.0]);
+        // loads [3, 7] over speeds [1, 2] -> times [3, 3.5]
+        assert_eq!(inst.pe_times(&inst.mapping), vec![3.0, 3.5]);
+        assert_eq!(inst.node_times(&inst.mapping), vec![3.0, 3.5]);
     }
 }

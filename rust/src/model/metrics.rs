@@ -68,6 +68,12 @@ pub fn comm_split_pes(inst: &Instance, mapping: &[u32]) -> CommSplit {
 pub struct LbMetrics {
     pub max_avg_pe: f64,
     pub max_avg_node: f64,
+    /// max/avg of per-PE normalized time (`work / speed`) — equal to
+    /// `max_avg_pe` on uniform topologies, the quantity heterogeneous
+    /// strategies actually balance otherwise.
+    pub time_max_avg_pe: f64,
+    /// max/avg of per-node normalized time (`work / node capacity`).
+    pub time_max_avg_node: f64,
     pub comm_nodes: CommSplit,
     pub comm_pes: CommSplit,
     pub migrations: usize,
@@ -85,6 +91,16 @@ pub fn evaluate(inst: &Instance, asg: &Assignment) -> LbMetrics {
 pub fn evaluate_mapping(inst: &Instance, mapping: &[u32]) -> LbMetrics {
     let pe = Summary::of(&inst.pe_loads(mapping));
     let node = Summary::of(&inst.node_loads(mapping));
+    // uniform topologies: times are definitionally (and bitwise) the
+    // raw loads — skip the two extra scans/allocations
+    let (time_pe_ratio, time_node_ratio) = if inst.topo.is_uniform() {
+        (pe.max_avg_ratio(), node.max_avg_ratio())
+    } else {
+        (
+            Summary::of(&inst.pe_times(mapping)).max_avg_ratio(),
+            Summary::of(&inst.node_times(mapping)).max_avg_ratio(),
+        )
+    };
     let migrations = mapping
         .iter()
         .zip(&inst.mapping)
@@ -100,6 +116,8 @@ pub fn evaluate_mapping(inst: &Instance, mapping: &[u32]) -> LbMetrics {
     LbMetrics {
         max_avg_pe: pe.max_avg_ratio(),
         max_avg_node: node.max_avg_ratio(),
+        time_max_avg_pe: time_pe_ratio,
+        time_max_avg_node: time_node_ratio,
         comm_nodes: comm_split_nodes(inst, mapping),
         comm_pes: comm_split_pes(inst, mapping),
         migrations,
@@ -113,8 +131,10 @@ impl std::fmt::Display for LbMetrics {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "max/avg(pe)={:.3} max/avg(node)={:.3} ext/int={:.4} migr={} ({:.1}%) lb={:.1}ms",
+            "max/avg(pe)={:.3} t-max/avg(pe)={:.3} max/avg(node)={:.3} ext/int={:.4} \
+             migr={} ({:.1}%) lb={:.1}ms",
             self.max_avg_pe,
+            self.time_max_avg_pe,
             self.max_avg_node,
             self.comm_nodes.ratio(),
             self.migrations,
@@ -174,5 +194,19 @@ mod tests {
         assert!((m.max_avg_node - 1.0).abs() < 1e-12);
         // pe loads [1,1,2,0] -> max/avg = 2
         assert!((m.max_avg_pe - 2.0).abs() < 1e-12);
+        // uniform topology: time metrics coincide with the raw ones
+        assert_eq!(m.time_max_avg_pe, m.max_avg_pe);
+        assert_eq!(m.time_max_avg_node, m.max_avg_node);
+    }
+
+    #[test]
+    fn time_metrics_follow_speeds() {
+        let mut i = inst();
+        // pe2 runs 2x as fast: raw loads [1,1,1,1] -> times [1,1,0.5,1]
+        i.topo = i.topo.clone().with_pe_speeds(vec![1.0, 1.0, 2.0, 1.0]);
+        let m = evaluate_mapping(&i, &i.mapping);
+        assert_eq!(m.max_avg_pe, 1.0);
+        let expect = 1.0 / (3.5 / 4.0);
+        assert!((m.time_max_avg_pe - expect).abs() < 1e-12, "{}", m.time_max_avg_pe);
     }
 }

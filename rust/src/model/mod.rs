@@ -9,4 +9,4 @@ pub mod topology;
 pub use graph::{CommGraph, GroupTraffic, TrafficRecorder};
 pub use instance::{Assignment, Instance};
 pub use metrics::{evaluate, evaluate_mapping, CommSplit, LbMetrics};
-pub use topology::Topology;
+pub use topology::{SpeedSchedule, Topology};

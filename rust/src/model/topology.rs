@@ -3,24 +3,105 @@
 //! stages operate at node granularity, the hierarchical pass refines
 //! across PEs inside a node. With `pes_per_node = 1` (the paper's
 //! "one process per core" study mode) nodes and PEs coincide.
+//!
+//! Heterogeneity: each PE optionally carries a **speed factor** (its
+//! relative service rate — work units retired per second). The paper's
+//! setup is homogeneous, but real clusters mix node generations and
+//! suffer OS interference (Boulmier et al., arXiv:1909.07168 balance
+//! *where load will land*, Demirel & Sbalzarini, arXiv:1308.0148
+//! diffuse over non-uniform networks), so every strategy in this repo
+//! balances **normalized time** `work / speed` rather than raw work.
+//! A topology without speeds (`pe_speeds() == None`) is the uniform
+//! fast path: all strategy arithmetic is bit-for-bit the
+//! pre-heterogeneity code, which is what the frozen baselines in
+//! `rust/tests/hetero_identity.rs` lock down. [`SpeedSchedule`] models
+//! transient interference by perturbing the speeds per iteration.
+
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
 
 /// Node/PE topology. PEs are numbered contiguously:
 /// `pe = node * pes_per_node + local`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     pub n_nodes: usize,
     pub pes_per_node: usize,
+    /// Per-PE speed factors; `None` = uniform (every PE exactly 1.0).
+    /// Behind an `Arc` so cloning a topology stays cheap — `Topology`
+    /// used to be `Copy` and is passed around freely.
+    speeds: Option<Arc<[f64]>>,
 }
 
 impl Topology {
     pub fn new(n_nodes: usize, pes_per_node: usize) -> Topology {
         assert!(n_nodes > 0 && pes_per_node > 0);
-        Topology { n_nodes, pes_per_node }
+        Topology { n_nodes, pes_per_node, speeds: None }
     }
 
     /// Flat topology: every PE its own node (paper's simulation setup).
     pub fn flat(n_pes: usize) -> Topology {
         Topology::new(n_pes, 1)
+    }
+
+    /// Attach per-PE speed factors (`speeds.len() == n_pes()`, all
+    /// finite and positive). An all-exactly-1.0 vector canonicalizes to
+    /// the uniform representation, so "explicitly homogeneous" configs
+    /// keep the legacy bit-exact code paths.
+    pub fn with_pe_speeds(mut self, speeds: Vec<f64>) -> Topology {
+        assert_eq!(speeds.len(), self.n_pes(), "pe_speeds length != n_pes");
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "pe speeds must be finite and positive"
+        );
+        self.speeds = if speeds.iter().all(|&s| s == 1.0) {
+            None
+        } else {
+            Some(Arc::from(speeds.into_boxed_slice()))
+        };
+        self
+    }
+
+    /// The per-PE speed vector, or `None` for a uniform topology.
+    #[inline]
+    pub fn pe_speeds(&self) -> Option<&[f64]> {
+        self.speeds.as_deref()
+    }
+
+    /// Whether every PE runs at the same (unit) speed. Strategies gate
+    /// their weighted arithmetic on this so homogeneous topologies take
+    /// the exact pre-heterogeneity code path.
+    #[inline]
+    pub fn is_uniform(&self) -> bool {
+        self.speeds.is_none()
+    }
+
+    /// Speed factor of one PE (1.0 on uniform topologies).
+    #[inline]
+    pub fn pe_speed(&self, pe: u32) -> f64 {
+        match &self.speeds {
+            None => 1.0,
+            Some(s) => s[pe as usize],
+        }
+    }
+
+    /// A node's total service capacity: the sum of its PEs' speeds
+    /// (left-to-right over the node's PE range, so the scalar is
+    /// reproducible everywhere it is recomputed — the distributed
+    /// stage-2 protocol evaluates the identical expression per node).
+    #[inline]
+    pub fn node_capacity(&self, node: u32) -> f64 {
+        match &self.speeds {
+            None => self.pes_per_node as f64,
+            Some(s) => {
+                let r = self.pes_of_node(node);
+                let mut cap = 0.0;
+                for pe in r {
+                    cap += s[pe as usize];
+                }
+                cap
+            }
+        }
     }
 
     #[inline]
@@ -47,6 +128,70 @@ impl Topology {
     }
 }
 
+/// Time-varying speed noise: models OS interference / transient
+/// slowdowns by multiplicatively perturbing each PE's base speed with a
+/// deterministic per-(epoch, PE) draw. `noise = 0` disables the
+/// schedule entirely — [`SpeedSchedule::topo_at`] then returns the base
+/// topology unchanged, preserving bit-identity with noise-free runs.
+///
+/// The perturbation is a pure function of `(seed, iter / period, pe)`,
+/// so the sequential driver and the distributed driver's root compute
+/// identical effective topologies without exchanging anything beyond
+/// the instance broadcast (which carries the speeds in its `.lbi`
+/// text).
+#[derive(Debug, Clone)]
+pub struct SpeedSchedule {
+    /// Relative perturbation amplitude: effective speed is
+    /// `base * (1 + noise * u)` with `u` uniform in `[-1, 1)`.
+    pub noise: f64,
+    /// Redraw the perturbation every `period` iterations (1 = every
+    /// iteration).
+    pub period: usize,
+    pub seed: u64,
+}
+
+impl SpeedSchedule {
+    /// The inert schedule (no noise).
+    pub fn none() -> SpeedSchedule {
+        SpeedSchedule { noise: 0.0, period: 1, seed: 0x5EED }
+    }
+
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.noise > 0.0
+    }
+
+    /// Effective topology at iteration `iter`. Inactive schedules hand
+    /// back a clone of `base` (cheap: the speed vector is `Arc`-shared).
+    pub fn topo_at(&self, base: &Topology, iter: usize) -> Topology {
+        if !self.is_active() {
+            return base.clone();
+        }
+        let epoch = iter / self.period.max(1);
+        let n = base.n_pes();
+        let mut speeds = Vec::with_capacity(n);
+        for pe in 0..n as u32 {
+            let mut rng = Rng::new(
+                self.seed
+                    ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (u64::from(pe)).wrapping_mul(0xD1B5_4A32_D192_ED03),
+            );
+            let u = 2.0 * rng.f64() - 1.0;
+            // clamp away from zero so a deep spike cannot produce a
+            // non-positive speed (with_pe_speeds would reject it)
+            let s = (base.pe_speed(pe) * (1.0 + self.noise * u)).max(1e-3);
+            speeds.push(s);
+        }
+        base.clone().with_pe_speeds(speeds)
+    }
+}
+
+impl Default for SpeedSchedule {
+    fn default() -> SpeedSchedule {
+        SpeedSchedule::none()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,6 +202,9 @@ mod tests {
         assert_eq!(t.n_pes(), 8);
         assert_eq!(t.node_of_pe(5), 5);
         assert_eq!(t.pes_of_node(5), 5..6);
+        assert!(t.is_uniform());
+        assert_eq!(t.pe_speed(3), 1.0);
+        assert_eq!(t.node_capacity(5), 1.0);
     }
 
     #[test]
@@ -67,11 +215,66 @@ mod tests {
         assert_eq!(t.node_of_pe(17), 1);
         assert_eq!(t.local_of_pe(17), 1);
         assert_eq!(t.pes_of_node(3), 48..64);
+        assert_eq!(t.node_capacity(2), 16.0);
     }
 
     #[test]
     #[should_panic]
     fn zero_nodes_rejected() {
         Topology::new(0, 1);
+    }
+
+    #[test]
+    fn speeds_attach_and_aggregate() {
+        let t = Topology::new(2, 2).with_pe_speeds(vec![1.0, 2.0, 0.5, 1.5]);
+        assert!(!t.is_uniform());
+        assert_eq!(t.pe_speed(1), 2.0);
+        assert_eq!(t.node_capacity(0), 3.0);
+        assert_eq!(t.node_capacity(1), 2.0);
+        assert_eq!(t.pe_speeds().unwrap(), &[1.0, 2.0, 0.5, 1.5]);
+    }
+
+    #[test]
+    fn unit_speeds_canonicalize_to_uniform() {
+        let t = Topology::flat(4).with_pe_speeds(vec![1.0; 4]);
+        assert!(t.is_uniform());
+        assert!(t.pe_speeds().is_none());
+        assert_eq!(t, Topology::flat(4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_speed_length_rejected() {
+        Topology::flat(4).with_pe_speeds(vec![1.0; 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_positive_speed_rejected() {
+        Topology::flat(2).with_pe_speeds(vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn schedule_inactive_is_identity() {
+        let base = Topology::flat(4).with_pe_speeds(vec![1.0, 2.0, 1.0, 0.5]);
+        let sched = SpeedSchedule::none();
+        assert_eq!(sched.topo_at(&base, 0), base);
+        assert_eq!(sched.topo_at(&base, 17), base);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_varies() {
+        let base = Topology::flat(8);
+        let sched = SpeedSchedule { noise: 0.3, period: 2, seed: 42 };
+        let a = sched.topo_at(&base, 4);
+        let b = sched.topo_at(&base, 4);
+        assert_eq!(a, b, "same iter must give the same speeds");
+        // same epoch (period 2): iters 4 and 5 agree
+        assert_eq!(a, sched.topo_at(&base, 5));
+        // different epoch: speeds change
+        assert_ne!(a, sched.topo_at(&base, 6));
+        // perturbed but positive and bounded
+        let s = a.pe_speeds().unwrap();
+        assert!(s.iter().all(|&v| v > 0.0 && (0.69..=1.31).contains(&v)));
     }
 }

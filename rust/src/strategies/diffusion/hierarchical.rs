@@ -6,6 +6,12 @@
 //! least-loaded PE, and a bounded load-only refinement evens out the
 //! PEs inside each node. Until this point migrations exist only as
 //! proxy tokens — the app moves real objects once, afterwards.
+//!
+//! Heterogeneity: every PE-level accumulator here is **normalized time**
+//! (`load / pe_speed`) — a fast PE absorbs proportionally more work.
+//! On uniform topologies every speed is exactly 1.0 and IEEE-754
+//! guarantees `x / 1.0 == x` bitwise, so the homogeneous behavior is
+//! unchanged to the last bit (locked by `rust/tests/hetero_identity.rs`).
 
 use crate::model::Instance;
 
@@ -48,6 +54,12 @@ pub fn assign_pes_node(
     }
     let pe_range = inst.topo.pes_of_node(node);
     let pe_lo = pe_range.start;
+    // Per-local-PE speed lookup (exactly 1.0 on uniform topologies —
+    // the divisions below are then bitwise no-ops). A closure, not a
+    // collected Vec: this runs once per node per rebalance and must
+    // not add allocations to the zero-allocation pipeline.
+    let spd = |local: usize| inst.topo.pe_speed(pe_lo + local as u32);
+    // pe_loads holds normalized time per PE.
     let mut pe_loads = vec![0.0f64; ppn];
     let mut placed: Vec<(u32, usize)> = Vec::with_capacity(members.len());
 
@@ -57,13 +69,13 @@ pub fn assign_pes_node(
         let old_pe = inst.mapping[o as usize];
         if inst.topo.node_of_pe(old_pe) == node {
             let local = (old_pe - pe_lo) as usize;
-            pe_loads[local] += inst.loads[o as usize];
+            pe_loads[local] += inst.loads[o as usize] / spd(local);
             placed.push((o, local));
         } else {
             arrivals.push(o);
         }
     }
-    // Arrivals: LPT — heaviest first onto the least-loaded PE.
+    // Arrivals: LPT — heaviest first onto the least-time-loaded PE.
     arrivals.sort_by(|&a, &b| {
         inst.loads[b as usize]
             .partial_cmp(&inst.loads[a as usize])
@@ -76,22 +88,28 @@ pub fn assign_pes_node(
             .enumerate()
             .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .unwrap();
-        pe_loads[local] += inst.loads[o as usize];
+        pe_loads[local] += inst.loads[o as usize] / spd(local);
         placed.push((o, local));
     }
 
-    refine_within(&mut placed, &mut pe_loads, &inst.loads, tol);
+    refine_within(&mut placed, &mut pe_loads, &inst.loads, &spd, tol);
 
     placed.into_iter().map(|(o, local)| (o, pe_lo + local as u32)).collect()
 }
 
-/// Bounded load-only refinement: repeatedly move the best-fitting object
-/// from the most-loaded PE to the least-loaded PE while it reduces the
-/// spread, up to an iteration bound.
+/// Bounded time-only refinement: repeatedly move the best-fitting object
+/// from the most-time-loaded PE to the least-time-loaded PE while it
+/// reduces the spread, up to an iteration bound. `pe_loads` are
+/// normalized times and `spd` the per-local-PE speed lookup: an
+/// object's cost is `load / speed` at whichever PE holds it, so the
+/// same object frees `l / spd(max)` leaving the hot PE and adds
+/// `l / spd(min)` arriving at the cold one (equal on uniform
+/// topologies, where both divisors are exactly 1.0).
 fn refine_within(
     placed: &mut [(u32, usize)],
     pe_loads: &mut [f64],
     loads: &[f64],
+    spd: &impl Fn(usize) -> f64,
     tol: f64,
 ) {
     let n_pes = pe_loads.len();
@@ -114,18 +132,19 @@ fn refine_within(
             break;
         }
         let gap = max_load - min_load;
-        // object on max_pe with load closest to gap/2 (strictly < gap so
-        // the move improves the spread)
-        let mut best: Option<(usize, f64)> = None; // (index in placed, |load - gap/2|)
+        // object on max_pe with outgoing time closest to gap/2 (and
+        // incoming time strictly < gap so the move improves the spread)
+        let mut best: Option<(usize, f64)> = None; // (index in placed, |dt - gap/2|)
         for (idx, &(o, pe)) in placed.iter().enumerate() {
             if pe != max_pe {
                 continue;
             }
-            let l = loads[o as usize];
-            if l <= 0.0 || l >= gap {
+            let dt_out = loads[o as usize] / spd(max_pe);
+            let dt_in = loads[o as usize] / spd(min_pe);
+            if dt_out <= 0.0 || dt_in >= gap {
                 continue;
             }
-            let score = (l - gap / 2.0).abs();
+            let score = (dt_out - gap / 2.0).abs();
             if best.map(|(_, s)| score < s).unwrap_or(true) {
                 best = Some((idx, score));
             }
@@ -133,8 +152,8 @@ fn refine_within(
         let Some((idx, _)) = best else { break };
         let (o, _) = placed[idx];
         placed[idx] = (o, min_pe);
-        pe_loads[max_pe] -= loads[o as usize];
-        pe_loads[min_pe] += loads[o as usize];
+        pe_loads[max_pe] -= loads[o as usize] / spd(max_pe);
+        pe_loads[min_pe] += loads[o as usize] / spd(min_pe);
     }
 }
 
@@ -191,6 +210,43 @@ mod tests {
         let l1: f64 = pes.iter().zip(&inst.loads).filter(|(&p, _)| p == 1).map(|(_, l)| l).sum();
         assert_eq!(l0, 4.0);
         assert_eq!(l1, 4.0);
+    }
+
+    #[test]
+    fn refinement_balances_time_on_heterogeneous_pes() {
+        // One node with PEs at speeds [1, 2]; six unit objects start on
+        // the slow PE (times [6, 0]). Time-aware refinement sheds until
+        // the slow PE drops under the (initial-placement) average time
+        // of 3: three moves, times [3, 1.5] — strictly better in time
+        // than any raw-work split would indicate, and deterministic.
+        let inst = Instance::new(
+            vec![1.0; 6],
+            vec![[0.0; 2]; 6],
+            CommGraph::empty(6),
+            vec![0; 6],
+            Topology::new(1, 2).with_pe_speeds(vec![1.0, 2.0]),
+        );
+        let pes = assign_pes(&inst, &[0, 0, 0, 0, 0, 0], 0.02);
+        let on_fast = pes.iter().filter(|&&p| p == 1).count();
+        assert_eq!(on_fast, 3, "slow PE sheds down to the time average: {pes:?}");
+    }
+
+    #[test]
+    fn arrivals_prefer_the_least_time_loaded_pe() {
+        // Node 0: PEs 0 (speed 1) and 1 (speed 4). Objects 0 and 1 stay
+        // on PEs 0 and 1 with equal raw loads (times 2.0 vs 0.5); the
+        // arriving object 2 must land on the fast PE.
+        let inst = Instance::new(
+            vec![2.0, 2.0, 1.0, 1.0],
+            vec![[0.0; 2]; 4],
+            CommGraph::empty(4),
+            vec![0, 1, 2, 3],
+            Topology::new(2, 2).with_pe_speeds(vec![1.0, 4.0, 1.0, 1.0]),
+        );
+        let pes = assign_pes(&inst, &[0, 0, 0, 1], 0.9); // loose tol: no refine
+        assert_eq!(pes[0], 0);
+        assert_eq!(pes[1], 1);
+        assert_eq!(pes[2], 1, "arrival must pick the PE with the least time");
     }
 
     #[test]

@@ -127,16 +127,26 @@ impl Diffusion {
                 g
             }
         };
+        // Stage-2 input: raw node work on uniform topologies (the exact
+        // pre-heterogeneity arithmetic); per-node normalized time
+        // (work / capacity, filled by load_views) on heterogeneous ones
+        // — so the fixed point equalizes *time* and its quotas are in
+        // time units, which stage 3 consumes by charging each migrated
+        // object `load / capacity(sender)`.
         let node_loads = std::mem::take(&mut scratch.node_loads);
+        let node_time = std::mem::take(&mut scratch.node_time);
+        let lb_input: &[f64] =
+            if inst.topo.is_uniform() { &node_loads } else { &node_time };
         let quotas = virtual_lb::virtual_balance_with(
             &neigh,
-            &node_loads,
+            lb_input,
             self.params.vlb_tolerance,
             self.params.vlb_max_iters,
             scratch,
         );
         scratch.node_map = node_map;
         scratch.node_loads = node_loads;
+        scratch.node_time = node_time;
         (neigh, quotas)
     }
 }

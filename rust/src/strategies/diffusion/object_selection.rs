@@ -93,11 +93,36 @@ fn sorted_quota_into(row: &[(u32, f64)], floor: f64, out: &mut Vec<(u32, f64)>) 
     out.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
 }
 
-/// Quota noise floor for an instance: 1% of the average node load.
+/// Quota noise floor for an instance: 1% of the average node load —
+/// or, on heterogeneous topologies, 1% of the average per-node
+/// normalized *time* (quotas are in time units there, see stage 2).
 /// Public because every node of the distributed stage-3 protocol
-/// evaluates the identical expression locally.
+/// evaluates the identical expression locally; the summation orders
+/// (objects left-to-right, then nodes left-to-right) are fixed so the
+/// scalar is bit-reproducible wherever it is recomputed. The
+/// heterogeneous branch rescans the instance (two small allocations) —
+/// deliberate: this runs once per LB round per caller, not in any
+/// per-object loop, and recomputing from the instance alone is what
+/// lets every distributed node evaluate it without shared scratch.
 pub fn quota_floor(inst: &Instance) -> f64 {
-    0.01 * inst.loads.iter().sum::<f64>() / inst.topo.n_nodes.max(1) as f64
+    if inst.topo.is_uniform() {
+        0.01 * inst.loads.iter().sum::<f64>() / inst.topo.n_nodes.max(1) as f64
+    } else {
+        let total_time: f64 = inst.node_times(&inst.mapping).iter().sum();
+        0.01 * total_time / inst.topo.n_nodes.max(1) as f64
+    }
+}
+
+/// Effective stage-3 cost of migrating one object off node `i`: the
+/// time it frees at the sender (`load / capacity(i)`), or the raw load
+/// on uniform topologies — matching the units stage 2's quotas are in.
+#[inline]
+fn eff_load(inst: &Instance, i: usize, load: f64) -> f64 {
+    if inst.topo.is_uniform() {
+        load
+    } else {
+        load / inst.topo.node_capacity(i as u32)
+    }
 }
 
 /// Should `o` (with `load`) migrate against `remaining` quota?
@@ -221,7 +246,7 @@ pub fn select_comm_node(
                 heap.push(Entry { key: cur, ..top });
                 continue;
             }
-            let load = inst.loads[o as usize];
+            let load = eff_load(inst, i, inst.loads[o as usize]);
             if !fits(load, remaining, overfill) {
                 continue; // skip; a lighter object may still fit
             }
@@ -466,7 +491,7 @@ pub fn select_coord_node(
                 heap.push(Entry { key: cur, ..top });
                 continue;
             }
-            let load = inst.loads[o as usize];
+            let load = eff_load(inst, i, inst.loads[o as usize]);
             if !fits(load, remaining, overfill) {
                 continue;
             }
@@ -634,6 +659,32 @@ mod tests {
         );
         assert_eq!(n, manifest.len());
         assert_eq!(manifest, vec![(3, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn weighted_quota_counts_sender_time_not_raw_work() {
+        // Node 0 runs at speed 2: each unit-load object frees 0.5 time
+        // units when it leaves, so a time quota of 1.0 moves TWO
+        // objects (a uniform topology moves one).
+        let mut inst = two_node_instance();
+        let mut map = inst.node_mapping();
+        assert_eq!(select_comm(&inst, &mut map, &quota_0_to_1(1.0), 0.5), 1);
+        inst.topo = Topology::flat(2).with_pe_speeds(vec![2.0, 1.0]);
+        let mut wmap = inst.node_mapping();
+        assert_eq!(select_comm(&inst, &mut wmap, &quota_0_to_1(1.0), 0.5), 2);
+        // picks still follow the bytes ranking: 3 first, then 2
+        assert_eq!(wmap[3], 1);
+        assert_eq!(wmap[2], 1);
+    }
+
+    #[test]
+    fn weighted_quota_floor_uses_normalized_time() {
+        let mut inst = two_node_instance();
+        // uniform: 1% of (8 total load / 2 nodes)
+        assert_eq!(quota_floor(&inst), 0.01 * 8.0 / 2.0);
+        // speeds [4, 1]: node times are 4/4 and 4/1 -> total 5
+        inst.topo = Topology::flat(2).with_pe_speeds(vec![4.0, 1.0]);
+        assert!((quota_floor(&inst) - 0.01 * 5.0 / 2.0).abs() < 1e-15);
     }
 
     #[test]

@@ -37,6 +37,14 @@ pub struct LbScratch {
     pub node_map: Vec<u32>,
     /// Per-node load totals.
     pub node_loads: Vec<f64>,
+    /// Per-node service capacities (sum of PE speeds) — filled only on
+    /// heterogeneous topologies.
+    pub node_caps: Vec<f64>,
+    /// Per-node normalized times (`node_loads / node_caps`) — the
+    /// stage-2 input on heterogeneous topologies. Uniform topologies
+    /// never touch this (stage 2 consumes `node_loads` directly, the
+    /// exact pre-heterogeneity path).
+    pub node_time: Vec<f64>,
     // ------------------------------------------------------- stage 1
     /// Dense node-to-node traffic matrix (`n_nodes^2`).
     pub traffic: Vec<f64>,
@@ -95,10 +103,22 @@ pub struct LbScratch {
 
 impl LbScratch {
     /// Fill `node_map`/`node_loads` from the instance (allocation-free
-    /// once warm) and return the number of nodes.
+    /// once warm) and return the number of nodes. On heterogeneous
+    /// topologies also fills `node_caps` and `node_time` — the
+    /// speed-normalized stage-2 load scalars (`work / capacity`, the
+    /// division performed per node exactly as the distributed stage-2
+    /// setup performs it locally).
     pub fn load_views(&mut self, inst: &Instance) -> usize {
         inst.node_mapping_into(&mut self.node_map);
         inst.node_loads_into(&mut self.node_loads);
+        if !inst.topo.is_uniform() {
+            self.node_caps.clear();
+            self.node_caps
+                .extend((0..inst.topo.n_nodes as u32).map(|n| inst.topo.node_capacity(n)));
+            self.node_time.clear();
+            let (nt, nl, nc) = (&mut self.node_time, &self.node_loads, &self.node_caps);
+            nt.extend(nl.iter().zip(nc).map(|(l, c)| l / c));
+        }
         inst.topo.n_nodes
     }
 
@@ -156,6 +176,24 @@ mod tests {
         // reuse with no stale state
         s.load_views(&inst);
         assert_eq!(s.node_loads, vec![3.0, 7.0]);
+        // uniform topology leaves the weighted buffers untouched
+        assert!(s.node_time.is_empty() && s.node_caps.is_empty());
+    }
+
+    #[test]
+    fn weighted_views_normalize_by_capacity() {
+        let inst = Instance::new(
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![[0.0; 2]; 4],
+            CommGraph::empty(4),
+            vec![0, 1, 2, 3],
+            Topology::new(2, 2).with_pe_speeds(vec![1.0, 2.0, 1.0, 3.0]),
+        );
+        let mut s = LbScratch::default();
+        s.load_views(&inst);
+        assert_eq!(s.node_loads, vec![3.0, 7.0]);
+        assert_eq!(s.node_caps, vec![3.0, 4.0]);
+        assert_eq!(s.node_time, vec![1.0, 1.75]);
     }
 
     #[test]

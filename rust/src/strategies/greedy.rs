@@ -2,6 +2,10 @@
 //! least-loaded PE (classic Charm++ GreedyLB). Produces near-perfect
 //! balance, ignores both locality and migration cost — the upper bound
 //! on balance quality and the lower bound on locality.
+//!
+//! Speed-aware: the heap orders PEs by normalized time (`load/speed`),
+//! so fast PEs absorb proportionally more objects. Uniform topologies
+//! divide by exactly 1.0 — bit-identical to the homogeneous baseline.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -58,7 +62,7 @@ impl LoadBalancer for Greedy {
         for o in order {
             let mut top = heap.pop().unwrap();
             mapping[o as usize] = top.pe;
-            top.load += inst.loads[o as usize];
+            top.load += inst.loads[o as usize] / inst.topo.pe_speed(top.pe);
             heap.push(top);
         }
         Assignment { mapping }
@@ -84,6 +88,26 @@ mod tests {
         let asg = Greedy.rebalance(&inst);
         let m = evaluate(&inst, &asg);
         assert!(m.max_avg_pe < 1.1, "max/avg {}", m.max_avg_pe);
+    }
+
+    #[test]
+    fn fast_pe_absorbs_proportionally_more_work() {
+        // 2 PEs at speeds [1, 3], 8 unit objects: time-LPT alternates
+        // against normalized times, landing 6 on the fast PE (times
+        // [2, 2]) instead of the homogeneous 4/4 split.
+        let n = 8;
+        let inst = Instance::new(
+            vec![1.0; n],
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            vec![0; n],
+            Topology::flat(2).with_pe_speeds(vec![1.0, 3.0]),
+        );
+        let asg = Greedy.rebalance(&inst);
+        let loads = inst.pe_loads(&asg.mapping);
+        assert_eq!(loads, vec![2.0, 6.0], "{loads:?}");
+        let times = inst.pe_times(&asg.mapping);
+        assert!((times[0] - times[1]).abs() < 1e-12, "{times:?}");
     }
 
     #[test]

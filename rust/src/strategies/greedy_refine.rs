@@ -3,6 +3,11 @@
 //! PEs into a pool, then place the pool greedily onto the least-loaded
 //! PEs. Produces the best max/avg of the compared strategies at the
 //! price of locality — exactly the Table II / Fig 5-6 profile.
+//!
+//! Speed-aware: overload is judged — and the pool placed — in
+//! normalized time (`load/speed`), so a "fast" PE is only overloaded
+//! when its *time* exceeds the average time. Uniform topologies divide
+//! by exactly 1.0, keeping the homogeneous decisions bit-identical.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -48,7 +53,13 @@ impl LoadBalancer for GreedyRefine {
     fn rebalance(&self, inst: &Instance) -> Assignment {
         let n_pes = inst.topo.n_pes();
         let mut mapping = inst.mapping.clone();
+        // Normalized time per PE (division by exactly 1.0 on uniform
+        // topologies — a bitwise no-op).
+        let spd = |pe: usize| inst.topo.pe_speed(pe as u32);
         let mut pe_loads = inst.pe_loads(&mapping);
+        for (pe, l) in pe_loads.iter_mut().enumerate() {
+            *l /= spd(pe);
+        }
         let avg: f64 = pe_loads.iter().sum::<f64>() / n_pes as f64;
         let threshold = avg * (1.0 + self.params.refine_tolerance);
 
@@ -71,11 +82,11 @@ impl LoadBalancer for GreedyRefine {
         let mut pool: Vec<u32> = Vec::new();
         for pe in 0..n_pes {
             while pe_loads[pe] > threshold {
-                // find heaviest object with load <= pe_load - avg
+                // find heaviest object whose time <= pe_time - avg
                 let headroom = pe_loads[pe] - avg;
                 let pos = per_pe[pe]
                     .iter()
-                    .rposition(|&o| inst.loads[o as usize] <= headroom);
+                    .rposition(|&o| inst.loads[o as usize] / spd(pe) <= headroom);
                 let idx = match pos {
                     Some(i) => i,
                     // nothing fits exactly: shed the lightest object
@@ -83,7 +94,7 @@ impl LoadBalancer for GreedyRefine {
                     None => break,
                 };
                 let o = per_pe[pe].remove(idx);
-                pe_loads[pe] -= inst.loads[o as usize];
+                pe_loads[pe] -= inst.loads[o as usize] / spd(pe);
                 pool.push(o);
             }
         }
@@ -103,7 +114,7 @@ impl LoadBalancer for GreedyRefine {
         for o in pool {
             let mut top = heap.pop().unwrap();
             mapping[o as usize] = top.pe;
-            top.load += inst.loads[o as usize];
+            top.load += inst.loads[o as usize] / spd(top.pe as usize);
             heap.push(top);
         }
         Assignment { mapping }
@@ -151,6 +162,29 @@ mod tests {
         let lb = GreedyRefine { params: StrategyParams::default() };
         let asg = lb.rebalance(&inst);
         assert_eq!(asg.migrations(&inst), 0);
+    }
+
+    #[test]
+    fn slow_pe_counts_as_overloaded_in_time() {
+        // Equal raw work per PE, but PE 0 runs at half speed: its time
+        // is 2x the others', so refine must shed from it even though
+        // raw loads are perfectly balanced.
+        let n = 16;
+        let mapping: Vec<u32> = (0..n as u32).map(|i| i % 4).collect();
+        let inst = Instance::new(
+            vec![1.0; n],
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            mapping,
+            Topology::flat(4).with_pe_speeds(vec![0.5, 1.0, 1.0, 1.0]),
+        );
+        let lb = GreedyRefine { params: StrategyParams::default() };
+        let asg = lb.rebalance(&inst);
+        assert!(asg.migrations(&inst) > 0, "time-overloaded PE not refined");
+        let before = inst.pe_times(&inst.mapping);
+        let after = inst.pe_times(&asg.mapping);
+        let max = |v: &[f64]| v.iter().cloned().fold(0.0, f64::max);
+        assert!(max(&after) < max(&before), "{before:?} -> {after:?}");
     }
 
     #[test]

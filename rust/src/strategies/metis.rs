@@ -7,6 +7,13 @@
 //! heavy-edge-matching coarsening → recursive-bisection initial
 //! partition via greedy region growing → projection with k-way
 //! boundary (FM-style) refinement at every level.
+//!
+//! Heterogeneity: like real METIS's `tpwgts`, each part can carry a
+//! **target fraction** of the total vertex weight. [`Metis::rebalance`]
+//! sets the fractions proportional to PE speeds, so a 2x-fast PE's part
+//! is grown, refined, and balance-repaired toward 2x the weight. With
+//! `targets == None` (uniform topologies) every code path below is the
+//! exact homogeneous original.
 
 use std::collections::HashMap;
 
@@ -188,6 +195,9 @@ fn bfs_farthest(g: &LevelGraph, start: usize) -> usize {
 }
 
 /// Recursive bisection into `k` parts (ids `part_base..part_base+k`).
+/// `targets`, when given, holds every part's weight fraction (summing
+/// to 1 over all parts); the split point divides weight proportionally
+/// to the two halves' summed fractions instead of by part count.
 fn recursive_bisect(
     g: &LevelGraph,
     vertices: &[u32],
@@ -195,6 +205,7 @@ fn recursive_bisect(
     part_base: u32,
     part: &mut [u32],
     rng: &mut Rng,
+    targets: Option<&[f64]>,
 ) {
     if k == 1 {
         for &v in vertices {
@@ -229,7 +240,15 @@ fn recursive_bisect(
     };
     let k1 = k / 2;
     let k2 = k - k1;
-    let frac = k1 as f64 / k as f64;
+    let frac = match targets {
+        None => k1 as f64 / k as f64,
+        Some(t) => {
+            let base = part_base as usize;
+            let a: f64 = t[base..base + k1].iter().sum();
+            let all: f64 = t[base..base + k].iter().sum();
+            if all > 0.0 { a / all } else { k1 as f64 / k as f64 }
+        }
+    };
     if vertices.is_empty() {
         return;
     }
@@ -263,8 +282,8 @@ fn recursive_bisect(
         side_b = vertices[cut..].to_vec();
         side.clear();
     }
-    recursive_bisect(g, &side_a, k1, part_base, part, rng);
-    recursive_bisect(g, &side_b, k2, part_base + k1 as u32, part, rng);
+    recursive_bisect(g, &side_a, k1, part_base, part, rng, targets);
+    recursive_bisect(g, &side_b, k2, part_base + k1 as u32, part, rng, targets);
 }
 
 /// FM-style bisection refinement: greedy positive-gain boundary swaps
@@ -303,16 +322,23 @@ fn refine_bisection(g: &LevelGraph, side: &mut [bool], frac: f64, passes: usize)
 }
 
 /// K-way boundary refinement: move boundary vertices to the adjacent
-/// part with max positive gain when balance allows.
+/// part with max positive gain when balance allows. With `targets`,
+/// each part's weight cap is proportional to its target fraction
+/// (`total * t[p] * btol`) instead of the uniform `total / k * btol`.
 pub(crate) fn kway_refine(
     g: &LevelGraph,
     part: &mut [u32],
     k: usize,
     btol: f64,
     passes: usize,
+    targets: Option<&[f64]>,
 ) {
     let total = g.total_vwt();
-    let max_wt = total / k as f64 * btol;
+    let uniform_max = total / k as f64 * btol;
+    let max_wt = |p: usize| match targets {
+        None => uniform_max,
+        Some(t) => total * t[p] * btol,
+    };
     let mut wts = vec![0.0; k];
     for v in 0..g.n {
         wts[part[v] as usize] += g.vwts[v];
@@ -331,7 +357,7 @@ pub(crate) fn kway_refine(
             cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
             if let Some(&(p, w)) = cands.first() {
                 let gain = w - own;
-                if gain > 0.0 && wts[p as usize] + g.vwts[v] <= max_wt {
+                if gain > 0.0 && wts[p as usize] + g.vwts[v] <= max_wt(p as usize) {
                     wts[pv as usize] -= g.vwts[v];
                     wts[p as usize] += g.vwts[v];
                     part[v] = p;
@@ -348,37 +374,48 @@ pub(crate) fn kway_refine(
 /// Balance-repair pass: while a part exceeds the tolerance, move the
 /// vertex with the least cut damage from the heaviest part to the
 /// lightest (real METIS enforces the balance constraint similarly
-/// during refinement).
-pub(crate) fn rebalance_parts(g: &LevelGraph, part: &mut [u32], k: usize, btol: f64) {
+/// during refinement). With `targets`, "heaviest"/"lightest" are judged
+/// relative to each part's target weight (`wts[p] / (total * t[p])`)
+/// and the cap is per-part, mirroring [`kway_refine`].
+pub(crate) fn rebalance_parts(
+    g: &LevelGraph,
+    part: &mut [u32],
+    k: usize,
+    btol: f64,
+    targets: Option<&[f64]>,
+) {
     let total = g.total_vwt();
     let avg = total / k as f64;
-    let max_wt = avg * btol;
+    let target_wt = |p: usize| match targets {
+        None => avg,
+        Some(t) => total * t[p],
+    };
+    let max_wt = |p: usize| target_wt(p) * btol;
+    // relative fill of a part vs its target (plain weight when uniform)
+    let fill = |wts: &[f64], p: usize| match targets {
+        None => wts[p],
+        Some(t) => wts[p] / (total * t[p]).max(f64::MIN_POSITIVE),
+    };
     let mut wts = vec![0.0; k];
     for v in 0..g.n {
         wts[part[v] as usize] += g.vwts[v];
     }
     for _ in 0..4 * g.n {
-        let (hi, &hi_w) = wts
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        let hi = (0..k)
+            .max_by(|&a, &b| fill(&wts, a).partial_cmp(&fill(&wts, b)).unwrap())
             .unwrap();
-        if hi_w <= max_wt {
+        let hi_w = wts[hi];
+        if hi_w <= max_wt(hi) {
             break;
         }
-        let (lo, _) = wts
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        let lo = (0..k)
+            .min_by(|&a, &b| fill(&wts, a).partial_cmp(&fill(&wts, b)).unwrap())
             .unwrap();
         // vertex on hi with minimal (cut increase, weight distance)
         let mut best: Option<(f64, usize)> = None;
         for v in 0..g.n {
             if part[v] as usize != hi || g.vwts[v] <= 0.0 {
                 continue;
-            }
-            if wts[lo] + g.vwts[v] > max_wt && g.vwts[v] < hi_w - avg {
-                // acceptable either way; prefer moves that don't overfill lo
             }
             let mut to_lo = 0.0;
             let mut local = 0.0;
@@ -402,8 +439,16 @@ pub(crate) fn rebalance_parts(g: &LevelGraph, part: &mut [u32], k: usize, btol: 
 }
 
 /// Full multilevel pipeline over an instance, producing a PE-level
-/// partition vector.
-pub(crate) fn partition(inst: &Instance, k: usize, btol: f64, seed: u64) -> Vec<u32> {
+/// partition vector. `targets` (fractions summing to 1, one per part)
+/// skews every stage toward proportional part weights — `None` is the
+/// homogeneous original, code path for code path.
+pub(crate) fn partition(
+    inst: &Instance,
+    k: usize,
+    btol: f64,
+    seed: u64,
+    targets: Option<&[f64]>,
+) -> Vec<u32> {
     let mut rng = Rng::new(seed);
     let mut levels: Vec<(LevelGraph, Vec<u32>)> = Vec::new();
     let mut g = LevelGraph::from_instance(inst);
@@ -419,9 +464,9 @@ pub(crate) fn partition(inst: &Instance, k: usize, btol: f64, seed: u64) -> Vec<
     // initial partition on coarsest
     let mut part = vec![0u32; g.n];
     let all: Vec<u32> = (0..g.n as u32).collect();
-    recursive_bisect(&g, &all, k, 0, &mut part, &mut rng);
-    kway_refine(&g, &mut part, k, btol, 6);
-    rebalance_parts(&g, &mut part, k, btol);
+    recursive_bisect(&g, &all, k, 0, &mut part, &mut rng, targets);
+    kway_refine(&g, &mut part, k, btol, 6, targets);
+    rebalance_parts(&g, &mut part, k, btol, targets);
     // uncoarsen
     while let Some((fine, map)) = levels.pop() {
         let mut fpart = vec![0u32; fine.n];
@@ -429,10 +474,18 @@ pub(crate) fn partition(inst: &Instance, k: usize, btol: f64, seed: u64) -> Vec<
             fpart[v] = part[map[v] as usize];
         }
         part = fpart;
-        kway_refine(&fine, &mut part, k, btol, 4);
-        rebalance_parts(&fine, &mut part, k, btol);
+        kway_refine(&fine, &mut part, k, btol, 4, targets);
+        rebalance_parts(&fine, &mut part, k, btol, targets);
     }
     part
+}
+
+/// Per-PE target fractions proportional to speed (left-to-right sums,
+/// reproducible everywhere), or `None` on uniform topologies.
+pub(crate) fn speed_targets(inst: &Instance) -> Option<Vec<f64>> {
+    let speeds = inst.topo.pe_speeds()?;
+    let total: f64 = speeds.iter().sum();
+    Some(speeds.iter().map(|&s| s / total).collect())
 }
 
 impl LoadBalancer for Metis {
@@ -442,7 +495,14 @@ impl LoadBalancer for Metis {
 
     fn rebalance(&self, inst: &Instance) -> Assignment {
         let k = inst.topo.n_pes();
-        let mapping = partition(inst, k, self.params.balance_tolerance, self.params.seed);
+        let targets = speed_targets(inst);
+        let mapping = partition(
+            inst,
+            k,
+            self.params.balance_tolerance,
+            self.params.seed,
+            targets.as_deref(),
+        );
         Assignment { mapping }
     }
 }
@@ -505,7 +565,7 @@ mod tests {
         let mut rng = Rng::new(17);
         let mut part: Vec<u32> = (0..g.n as u32).map(|_| rng.below(4) as u32).collect();
         let cut_before = cut(&g, &part);
-        kway_refine(&g, &mut part, 4, 1.05, 8);
+        kway_refine(&g, &mut part, 4, 1.05, 8, None);
         let cut_after = cut(&g, &part);
         assert!(cut_after < cut_before, "{cut_after} !< {cut_before}");
     }
@@ -530,6 +590,30 @@ mod tests {
         assert!(cg.n < g.n);
         assert!((cg.total_vwt() - g.total_vwt()).abs() < 1e-9);
         assert!(map.iter().all(|&c| (c as usize) < cg.n));
+    }
+
+    #[test]
+    fn speed_targets_skew_part_weights() {
+        // 4 PEs, one 3x faster: its part should end up clearly heavier
+        // than the slowest parts (speed fractions are [1/6, 1/6, 1/6,
+        // 1/2] over 256 unit-load vertices).
+        let mut inst = grid_instance(16, 4);
+        inst.topo = Topology::flat(4).with_pe_speeds(vec![1.0, 1.0, 1.0, 3.0]);
+        let asg = Metis { params: StrategyParams::default() }.rebalance(&inst);
+        let loads = inst.pe_loads(&asg.mapping);
+        let fast = loads[3];
+        let slow_max = loads[..3].iter().cloned().fold(0.0, f64::max);
+        assert!(
+            fast > slow_max * 1.5,
+            "fast part {fast} not heavier than slow parts {loads:?}"
+        );
+        // and the time split is tighter than the raw-work split
+        let times = inst.pe_times(&asg.mapping);
+        let ratio = |v: &[f64]| {
+            let avg = v.iter().sum::<f64>() / v.len() as f64;
+            v.iter().cloned().fold(0.0, f64::max) / avg
+        };
+        assert!(ratio(&times) < ratio(&loads), "times {times:?} loads {loads:?}");
     }
 
     #[test]

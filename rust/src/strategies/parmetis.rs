@@ -8,7 +8,9 @@
 //! itr parameter: high `itr` = redistribution is cheap = migrate more
 //! freely; low `itr` = hold objects back unless the cut gain is large).
 //! As the paper notes (§V-C), tuning it is finicky — that comes through
-//! here too.
+//! here too. On heterogeneous topologies the quotient-graph diffusion
+//! runs over normalized part times (`load/speed`) and moves are
+//! charged by the time they free at their source PE.
 
 use std::collections::HashMap;
 
@@ -87,7 +89,16 @@ impl LoadBalancer for ParMetis {
     fn rebalance(&self, inst: &Instance) -> Assignment {
         let k = inst.topo.n_pes();
         let mut mapping = inst.mapping.clone();
-        let part_loads = inst.pe_loads(&mapping);
+        // Speed-aware: diffuse normalized part *times* and charge each
+        // realized move by the time it frees at its source PE. Uniform
+        // topologies skip the normalization entirely (legacy bit path).
+        let uniform = inst.topo.is_uniform();
+        let mut part_loads = inst.pe_loads(&mapping);
+        if !uniform {
+            for (pe, l) in part_loads.iter_mut().enumerate() {
+                *l /= inst.topo.pe_speed(pe as u32);
+            }
+        }
         // Quotient graph over parts (CSR rows, diagonal dropped).
         // Parts with no traffic get a ring edge so load can still
         // circulate.
@@ -158,7 +169,11 @@ impl LoadBalancer for ParMetis {
                     if score < -itr {
                         break;
                     }
-                    let load = inst.loads[o as usize];
+                    let load = if uniform {
+                        inst.loads[o as usize]
+                    } else {
+                        inst.loads[o as usize] / inst.topo.pe_speed(i as u32)
+                    };
                     if load * 0.5 > remaining {
                         continue;
                     }
@@ -234,6 +249,25 @@ mod tests {
         let m_lo = ParMetis { params: lo }.rebalance(&inst).migrations(&inst);
         let m_hi = ParMetis { params: hi }.rebalance(&inst).migrations(&inst);
         assert!(m_lo <= m_hi, "itr low {m_lo} > high {m_hi}");
+    }
+
+    #[test]
+    fn heterogeneous_speeds_shift_time_not_raw_work() {
+        // Raw loads perfectly balanced over 4 PEs, but PE 0 runs at
+        // half speed: time diffusion must move work off it.
+        let n = 64;
+        let inst = Instance::new(
+            vec![1.0; n],
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            (0..n as u32).map(|i| i / 16).collect(),
+            Topology::flat(4).with_pe_speeds(vec![0.5, 1.0, 1.0, 1.0]),
+        );
+        let asg = ParMetis { params: StrategyParams::default() }.rebalance(&inst);
+        let before = inst.pe_times(&inst.mapping);
+        let after = inst.pe_times(&asg.mapping);
+        let max = |v: &[f64]| v.iter().cloned().fold(0.0, f64::max);
+        assert!(max(&after) < max(&before), "{before:?} -> {after:?}");
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Scatter baseline: uniformly random placement. The "communication
 //! locality entirely disrupted" picture on the right of Fig 1 — used by
 //! the visualization bench and as a worst-case locality reference.
+//!
+//! Speed-aware variant: on heterogeneous topologies each PE is drawn
+//! with probability proportional to its speed, so the *expected* time
+//! per PE stays flat while locality is still maximally disrupted. The
+//! uniform path keeps the legacy `below(n_pes)` draws untouched.
 
 use crate::model::{Assignment, Instance};
 use crate::strategies::LoadBalancer;
@@ -17,8 +22,28 @@ impl LoadBalancer for Scatter {
 
     fn rebalance(&self, inst: &Instance) -> Assignment {
         let mut rng = Rng::new(self.seed);
-        let n_pes = inst.topo.n_pes() as u64;
-        let mapping = (0..inst.n_objects()).map(|_| rng.below(n_pes) as u32).collect();
+        let mapping = match inst.topo.pe_speeds() {
+            None => {
+                let n_pes = inst.topo.n_pes() as u64;
+                (0..inst.n_objects()).map(|_| rng.below(n_pes) as u32).collect()
+            }
+            Some(speeds) => {
+                // cumulative speed prefix; pick the first PE whose
+                // cumulative share exceeds a uniform draw
+                let mut cum = Vec::with_capacity(speeds.len());
+                let mut total = 0.0;
+                for &s in speeds {
+                    total += s;
+                    cum.push(total);
+                }
+                (0..inst.n_objects())
+                    .map(|_| {
+                        let u = rng.f64() * total;
+                        cum.partition_point(|&c| c <= u).min(speeds.len() - 1) as u32
+                    })
+                    .collect()
+            }
+        };
         Assignment { mapping }
     }
 }
@@ -45,6 +70,25 @@ mod tests {
         let asg = Scatter { seed: 1 }.rebalance(&inst);
         let after = metrics::comm_split_nodes(&inst, &asg.mapping).ratio();
         assert!(after > before * 3.0, "{after} !> 3*{before}");
+    }
+
+    #[test]
+    fn weighted_scatter_follows_speed_shares() {
+        // PE 1 is 4x faster than PE 0: it should receive ~4x the
+        // objects (binomial p=0.8 over 4000 draws — a >6-sigma margin).
+        let n = 4000;
+        let inst = Instance::new(
+            vec![1.0; n],
+            vec![[0.0; 2]; n],
+            CommGraph::empty(n),
+            vec![0; n],
+            Topology::flat(2).with_pe_speeds(vec![1.0, 4.0]),
+        );
+        let asg = Scatter { seed: 3 }.rebalance(&inst);
+        let on_fast = asg.mapping.iter().filter(|&&p| p == 1).count();
+        assert!((3000..3500).contains(&on_fast), "fast PE got {on_fast}/4000");
+        // in-range always
+        assert!(asg.mapping.iter().all(|&p| p < 2));
     }
 
     #[test]

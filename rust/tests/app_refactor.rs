@@ -58,7 +58,7 @@ fn legacy_run_pic(
     strategy: &dyn LoadBalancer,
     cfg: &DriverConfig,
 ) -> (Vec<LegacyRecord>, usize) {
-    let topo = app.cfg.topo;
+    let topo = app.cfg.topo.clone();
     let neighbor_pairs = app.chare_neighbor_pairs();
     let mut tracker = CostTracker::new(topo.n_nodes);
     let mut payload: Vec<(u32, u32, f64)> = Vec::new();

@@ -6,13 +6,45 @@
 //! one generic driver.
 //!
 //! Set `DIFFLB_TEST_APP` to restrict the suite to a single app (the CI
-//! matrix sweeps pic/stencil/advect/hotspot).
+//! matrix sweeps pic/stencil/advect/hotspot), and `DIFFLB_TEST_HETERO`
+//! to run the whole suite on a heterogeneous cluster: `mixed` attaches
+//! a fixed per-PE speed vector, `noisy` additionally turns on the
+//! time-varying speed-noise schedule (the CI heterogeneity matrix
+//! sweeps uniform/mixed/noisy).
 
 use difflb::apps::driver::{run_app, DriverConfig};
 use difflb::apps::{App, StepCtx, AVAILABLE_APPS};
 use difflb::coordinator::app_from_config;
+use difflb::model::SpeedSchedule;
 use difflb::strategies::{make, StrategyParams, AVAILABLE};
 use difflb::util::config::Config;
+
+/// Heterogeneity mode for this run: "uniform" (default), "mixed"
+/// (static per-PE speeds), or "noisy" (speeds + per-iteration noise).
+fn hetero_mode() -> String {
+    let mode = std::env::var("DIFFLB_TEST_HETERO").unwrap_or_else(|_| "uniform".into());
+    assert!(
+        matches!(mode.as_str(), "uniform" | "mixed" | "noisy"),
+        "DIFFLB_TEST_HETERO={mode} (expected uniform|mixed|noisy)"
+    );
+    mode
+}
+
+/// Driver schedule for the current heterogeneity mode.
+fn driver_config(iters: usize, lb_period: usize) -> DriverConfig {
+    let speed_schedule = if hetero_mode() == "noisy" {
+        SpeedSchedule { noise: 0.3, period: 2, seed: 0xA11 }
+    } else {
+        SpeedSchedule::none()
+    };
+    DriverConfig {
+        iters,
+        lb_period,
+        deterministic_loads: true,
+        speed_schedule,
+        ..Default::default()
+    }
+}
 
 /// Small-but-real configuration for each registered app.
 fn small_config(kind: &str) -> Config {
@@ -33,6 +65,11 @@ fn small_config(kind: &str) -> Config {
     cfg.set("advect.blocks_y", 6);
     cfg.set("hotspot.nx", 8);
     cfg.set("hotspot.ny", 8);
+    if hetero_mode() != "uniform" {
+        // every app above resolves a 4-PE topology (topo.nodes = 4 /
+        // stencil px*py = 4), so one vector serves them all
+        cfg.set("topo.pe_speeds", "1.0, 2.0, 0.5, 1.5");
+    }
     cfg
 }
 
@@ -162,12 +199,7 @@ fn crossing_records_agree_with_recorded_traffic() {
 fn full_cross_product_runs_through_the_generic_driver() {
     // strategies::AVAILABLE × AVAILABLE_APPS, every combination through
     // run_app — the acceptance gate of the App-trait redesign.
-    let driver = DriverConfig {
-        iters: 4,
-        lb_period: 2,
-        deterministic_loads: true,
-        ..Default::default()
-    };
+    let driver = driver_config(4, 2);
     for kind in apps_under_test() {
         for strat_name in AVAILABLE {
             let mut app = make_app(kind);
@@ -191,12 +223,7 @@ fn deterministic_loads_make_runs_reproducible() {
         let run = || {
             let mut app = make_app(kind);
             let strat = make("diff-comm", StrategyParams::default()).unwrap();
-            let driver = DriverConfig {
-                iters: 6,
-                lb_period: 2,
-                deterministic_loads: true,
-                ..Default::default()
-            };
+            let driver = driver_config(6, 2);
             let rep = run_app(app.as_mut(), strat.as_ref(), &driver).unwrap();
             (rep.total_migrations, app.mapping().to_vec())
         };

@@ -125,6 +125,77 @@ fn pipeline_bit_identical_across_seeds_nodes_variants() {
     }
 }
 
+/// Deterministic heterogeneous speed vector: cycles a fixed palette so
+/// every test site perturbs the same way.
+fn hetero_speeds(n_pes: usize, salt: u64) -> Vec<f64> {
+    const PALETTE: [f64; 5] = [1.0, 2.0, 0.5, 1.5, 0.25];
+    (0..n_pes)
+        .map(|pe| PALETTE[(pe + salt as usize) % PALETTE.len()])
+        .collect()
+}
+
+#[test]
+fn pipeline_bit_identical_hetero_speeds() {
+    // ISSUE 5: the seq-vs-dist per-iteration equality matrix extended
+    // with heterogeneous speed vectors — seeds x node counts x both
+    // diffusion variants, each node normalizing its own load scalar by
+    // its locally derived capacity.
+    for &(px, py) in &[(2usize, 2usize), (4, 2), (4, 4)] {
+        for seed in [31u64, 32, 33] {
+            let mut inst = noisy_stencil(px, py, seed);
+            inst.topo =
+                inst.topo.clone().with_pe_speeds(hetero_speeds(px * py, seed));
+            for variant in [Variant::Communication, Variant::Coordinate] {
+                assert_pipeline_matches(
+                    &inst,
+                    variant,
+                    &format!("hetero nodes={} seed={seed} {variant:?}", px * py),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_bit_identical_hetero_with_pes_per_node() {
+    // heterogeneous speeds + §III-D refinement: 8 nodes x 2 PEs with
+    // per-PE speeds, exercising weighted capacities AND weighted
+    // PE-time refinement through the PE-assignment exchange.
+    for seed in [41u64, 42] {
+        let base = noisy_stencil(4, 4, seed);
+        let inst = Instance::new(
+            base.loads.clone(),
+            base.coords.clone(),
+            base.graph.clone(),
+            base.mapping.clone(),
+            Topology::new(8, 2).with_pe_speeds(hetero_speeds(16, seed)),
+        );
+        for variant in [Variant::Communication, Variant::Coordinate] {
+            assert_pipeline_matches(
+                &inst,
+                variant,
+                &format!("hetero 8x2 seed={seed} {variant:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_bit_identical_hetero_at_env_node_count() {
+    // CI sweeps DIFFLB_TEST_NODES over {4, 8, 16} — heterogeneous twin
+    // of pipeline_bit_identical_at_env_node_count.
+    let n: usize = std::env::var("DIFFLB_TEST_NODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let mut inst = stencil::stencil_2d(48, n, 1, Decomposition::Tiled);
+    stencil::inject_noise(&mut inst, 0.5, 0xBE7 + n as u64);
+    inst.topo = inst.topo.clone().with_pe_speeds(hetero_speeds(n, n as u64));
+    for variant in [Variant::Communication, Variant::Coordinate] {
+        assert_pipeline_matches(&inst, variant, &format!("hetero env nodes={n} {variant:?}"));
+    }
+}
+
 #[test]
 fn pipeline_bit_identical_with_pes_per_node() {
     // Hierarchical topology: 8 nodes x 2 PEs — exercises the §III-D
@@ -211,21 +282,15 @@ fn pic_cfg(topo: Topology) -> PicConfig {
     }
 }
 
-fn assert_driver_equivalence(topo: Topology) {
+fn assert_driver_equivalence_with(topo: Topology, driver: &DriverConfig) {
     let cfg = pic_cfg(topo);
-    let driver = DriverConfig {
-        iters: 12,
-        lb_period: 4,
-        deterministic_loads: true,
-        ..Default::default()
-    };
     let params = StrategyParams::default();
     let seq = {
         let mut app = PicApp::new(cfg.clone(), Backend::Native).unwrap();
         let strat = Diffusion::communication(params);
-        run_app(&mut app, &strat, &driver).unwrap()
+        run_app(&mut app, &strat, driver).unwrap()
     };
-    let dist = run_pic_distributed(&cfg, Variant::Communication, params, &driver).unwrap();
+    let dist = run_pic_distributed(&cfg, Variant::Communication, params, driver).unwrap();
     assert!(seq.verified, "sequential physics failed");
     assert!(dist.verified, "distributed physics failed");
     assert_eq!(seq.records.len(), dist.records.len());
@@ -233,10 +298,21 @@ fn assert_driver_equivalence(topo: Topology) {
     for (s, d) in seq.records.iter().zip(&dist.records) {
         assert_eq!(s.migrations, d.migrations, "iter {}: migrations", s.iter);
         assert_eq!(s.work_max_avg, d.work_max_avg, "iter {}: imbalance", s.iter);
+        assert_eq!(s.time_max_avg, d.time_max_avg, "iter {}: time imbalance", s.iter);
         assert_eq!(s.comm_max_s, d.comm_max_s, "iter {}: modeled comm max", s.iter);
         assert_eq!(s.comm_avg_s, d.comm_avg_s, "iter {}: modeled comm avg", s.iter);
         assert_eq!(s.node_work, d.node_work, "iter {}: node work", s.iter);
     }
+}
+
+fn assert_driver_equivalence(topo: Topology) {
+    let driver = DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        ..Default::default()
+    };
+    assert_driver_equivalence_with(topo, &driver);
 }
 
 #[test]
@@ -247,6 +323,35 @@ fn distributed_pic_matches_sequential_driver_flat() {
 #[test]
 fn distributed_pic_matches_sequential_driver_hierarchical() {
     assert_driver_equivalence(Topology::new(2, 2));
+}
+
+#[test]
+fn distributed_pic_matches_sequential_driver_hetero() {
+    assert_driver_equivalence(Topology::flat(4).with_pe_speeds(vec![1.0, 2.0, 0.5, 1.5]));
+    assert_driver_equivalence(
+        Topology::new(2, 2).with_pe_speeds(vec![2.0, 1.0, 1.0, 0.5]),
+    );
+}
+
+#[test]
+fn distributed_pic_matches_sequential_driver_under_speed_noise() {
+    // Time-varying speed schedule: the root evaluates the same pure
+    // (seed, iter, pe) perturbation the sequential driver does and
+    // ships the effective speeds inside the .lbi broadcast — every
+    // per-iteration record, including time imbalance, must still match
+    // bit for bit.
+    use difflb::model::SpeedSchedule;
+    let driver = DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        speed_schedule: SpeedSchedule { noise: 0.3, period: 2, seed: 77 },
+        ..Default::default()
+    };
+    assert_driver_equivalence_with(
+        Topology::flat(4).with_pe_speeds(vec![1.0, 2.0, 0.5, 1.5]),
+        &driver,
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -275,6 +380,7 @@ fn assert_hotspot_driver_equivalence(topo: Topology) {
     for (s, d) in seq.records.iter().zip(&dist.records) {
         assert_eq!(s.migrations, d.migrations, "iter {}: migrations", s.iter);
         assert_eq!(s.work_max_avg, d.work_max_avg, "iter {}: imbalance", s.iter);
+        assert_eq!(s.time_max_avg, d.time_max_avg, "iter {}: time imbalance", s.iter);
         assert_eq!(s.comm_max_s, d.comm_max_s, "iter {}: modeled comm max", s.iter);
         assert_eq!(s.comm_avg_s, d.comm_avg_s, "iter {}: modeled comm avg", s.iter);
         assert_eq!(s.node_work, d.node_work, "iter {}: node work", s.iter);
@@ -289,6 +395,13 @@ fn distributed_hotspot_matches_sequential_driver_flat() {
 #[test]
 fn distributed_hotspot_matches_sequential_driver_hierarchical() {
     assert_hotspot_driver_equivalence(Topology::new(2, 2));
+}
+
+#[test]
+fn distributed_hotspot_matches_sequential_driver_hetero() {
+    assert_hotspot_driver_equivalence(
+        Topology::flat(4).with_pe_speeds(vec![0.5, 1.0, 2.0, 1.0]),
+    );
 }
 
 #[test]

@@ -1,0 +1,389 @@
+//! Guard rails for the heterogeneity (speed-aware) generalization: on
+//! **uniform** topologies, nothing may change — the weighted code paths
+//! divide by speeds that are exactly 1.0 (or gate off entirely), so
+//! every strategy decision must be bit-identical to the
+//! pre-heterogeneity algorithms. In the style of
+//! `rust/tests/perf_refactor.rs`, the pre-PR decision bodies that now
+//! contain speed arithmetic (GreedyLB, GreedyRefineLB, the §III-D
+//! hierarchical refinement) are FROZEN below, verbatim, and compared
+//! against the live implementations over randomized instances.
+//!
+//! The diffusion stages need no frozen copy: their weighted arithmetic
+//! is gated on `Topology::is_uniform()` (structurally the old code on
+//! uniform topologies), and `tools/crosscheck_hetero.py` cross-simulates
+//! the gate in-container (stage-2 inputs, quota floors, stage-3 picks:
+//! uniform == legacy, 200/200 trials bit-equal). What IS asserted here
+//! for diffusion: an explicit all-1.0 speed vector changes nothing, and
+//! heterogeneous speeds change time imbalance in the right direction.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use difflb::model::{evaluate_mapping, CommGraph, Instance, Topology};
+use difflb::strategies::diffusion::Diffusion;
+use difflb::strategies::greedy::Greedy;
+use difflb::strategies::greedy_refine::GreedyRefine;
+use difflb::strategies::{LoadBalancer, StrategyParams};
+use difflb::util::rng::Rng;
+
+// ===================================================== frozen legacy
+
+/// Frozen pre-heterogeneity GreedyLB (raw-load min-heap).
+fn legacy_greedy(inst: &Instance) -> Vec<u32> {
+    #[derive(Clone, Copy)]
+    struct PeEntry {
+        load: f64,
+        pe: u32,
+    }
+    impl PartialEq for PeEntry {
+        fn eq(&self, other: &Self) -> bool {
+            self.cmp(other) == Ordering::Equal
+        }
+    }
+    impl Eq for PeEntry {}
+    impl PartialOrd for PeEntry {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for PeEntry {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .load
+                .partial_cmp(&self.load)
+                .unwrap_or(Ordering::Equal)
+                .then(other.pe.cmp(&self.pe))
+        }
+    }
+    let mut order: Vec<u32> = (0..inst.n_objects() as u32).collect();
+    order.sort_by(|&a, &b| {
+        inst.loads[b as usize]
+            .partial_cmp(&inst.loads[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut heap: BinaryHeap<PeEntry> =
+        (0..inst.topo.n_pes() as u32).map(|pe| PeEntry { load: 0.0, pe }).collect();
+    let mut mapping = vec![0u32; inst.n_objects()];
+    for o in order {
+        let mut top = heap.pop().unwrap();
+        mapping[o as usize] = top.pe;
+        top.load += inst.loads[o as usize];
+        heap.push(top);
+    }
+    mapping
+}
+
+/// Frozen pre-heterogeneity GreedyRefineLB (raw-load shedding + LPT).
+fn legacy_greedy_refine(inst: &Instance, refine_tolerance: f64) -> Vec<u32> {
+    #[derive(Clone, Copy)]
+    struct MinPe {
+        load: f64,
+        pe: u32,
+    }
+    impl PartialEq for MinPe {
+        fn eq(&self, other: &Self) -> bool {
+            self.cmp(other) == Ordering::Equal
+        }
+    }
+    impl Eq for MinPe {}
+    impl PartialOrd for MinPe {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for MinPe {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .load
+                .partial_cmp(&self.load)
+                .unwrap_or(Ordering::Equal)
+                .then(other.pe.cmp(&self.pe))
+        }
+    }
+    let n_pes = inst.topo.n_pes();
+    let mut mapping = inst.mapping.clone();
+    let mut pe_loads = inst.pe_loads(&mapping);
+    let avg: f64 = pe_loads.iter().sum::<f64>() / n_pes as f64;
+    let threshold = avg * (1.0 + refine_tolerance);
+    let mut per_pe: Vec<Vec<u32>> = vec![Vec::new(); n_pes];
+    for (o, &pe) in mapping.iter().enumerate() {
+        per_pe[pe as usize].push(o as u32);
+    }
+    for objs in &mut per_pe {
+        objs.sort_by(|&a, &b| {
+            inst.loads[a as usize]
+                .partial_cmp(&inst.loads[b as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+    }
+    let mut pool: Vec<u32> = Vec::new();
+    for pe in 0..n_pes {
+        while pe_loads[pe] > threshold {
+            let headroom = pe_loads[pe] - avg;
+            let pos = per_pe[pe]
+                .iter()
+                .rposition(|&o| inst.loads[o as usize] <= headroom);
+            let idx = match pos {
+                Some(i) => i,
+                None if !per_pe[pe].is_empty() => 0,
+                None => break,
+            };
+            let o = per_pe[pe].remove(idx);
+            pe_loads[pe] -= inst.loads[o as usize];
+            pool.push(o);
+        }
+    }
+    pool.sort_by(|&a, &b| {
+        inst.loads[b as usize]
+            .partial_cmp(&inst.loads[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut heap: BinaryHeap<MinPe> = pe_loads
+        .iter()
+        .enumerate()
+        .map(|(pe, &load)| MinPe { load, pe: pe as u32 })
+        .collect();
+    for o in pool {
+        let mut top = heap.pop().unwrap();
+        mapping[o as usize] = top.pe;
+        top.load += inst.loads[o as usize];
+        heap.push(top);
+    }
+    mapping
+}
+
+/// Frozen pre-heterogeneity §III-D refinement (raw-load PE balancing).
+fn legacy_assign_pes(inst: &Instance, new_node_map: &[u32], tol: f64) -> Vec<u32> {
+    fn refine_within(
+        placed: &mut [(u32, usize)],
+        pe_loads: &mut [f64],
+        loads: &[f64],
+        tol: f64,
+    ) {
+        let n_pes = pe_loads.len();
+        if n_pes < 2 {
+            return;
+        }
+        let avg: f64 = pe_loads.iter().sum::<f64>() / n_pes as f64;
+        for _ in 0..64 {
+            let (max_pe, &max_load) = pe_loads
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let (min_pe, &min_load) = pe_loads
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            if max_load <= avg * (1.0 + tol) || max_pe == min_pe {
+                break;
+            }
+            let gap = max_load - min_load;
+            let mut best: Option<(usize, f64)> = None;
+            for (idx, &(o, pe)) in placed.iter().enumerate() {
+                if pe != max_pe {
+                    continue;
+                }
+                let l = loads[o as usize];
+                if l <= 0.0 || l >= gap {
+                    continue;
+                }
+                let score = (l - gap / 2.0).abs();
+                if best.map(|(_, s)| score < s).unwrap_or(true) {
+                    best = Some((idx, score));
+                }
+            }
+            let Some((idx, _)) = best else { break };
+            let (o, _) = placed[idx];
+            placed[idx] = (o, min_pe);
+            pe_loads[max_pe] -= loads[o as usize];
+            pe_loads[min_pe] += loads[o as usize];
+        }
+    }
+
+    let ppn = inst.topo.pes_per_node;
+    if ppn == 1 {
+        return new_node_map.to_vec();
+    }
+    let mut mapping = vec![0u32; inst.n_objects()];
+    for node in 0..inst.topo.n_nodes as u32 {
+        let members: Vec<u32> = (0..inst.n_objects() as u32)
+            .filter(|&o| new_node_map[o as usize] == node)
+            .collect();
+        let pe_range = inst.topo.pes_of_node(node);
+        let pe_lo = pe_range.start;
+        let mut pe_loads = vec![0.0f64; ppn];
+        let mut placed: Vec<(u32, usize)> = Vec::with_capacity(members.len());
+        let mut arrivals: Vec<u32> = Vec::new();
+        for &o in &members {
+            let old_pe = inst.mapping[o as usize];
+            if inst.topo.node_of_pe(old_pe) == node {
+                let local = (old_pe - pe_lo) as usize;
+                pe_loads[local] += inst.loads[o as usize];
+                placed.push((o, local));
+            } else {
+                arrivals.push(o);
+            }
+        }
+        arrivals.sort_by(|&a, &b| {
+            inst.loads[b as usize]
+                .partial_cmp(&inst.loads[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for o in arrivals {
+            let (local, _) = pe_loads
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            pe_loads[local] += inst.loads[o as usize];
+            placed.push((o, local));
+        }
+        refine_within(&mut placed, &mut pe_loads, &inst.loads, tol);
+        for (o, local) in placed {
+            mapping[o as usize] = pe_lo + local as u32;
+        }
+    }
+    mapping
+}
+
+// ========================================================== fixtures
+
+fn random_instance(rng: &mut Rng, n_nodes: usize, ppn: usize) -> Instance {
+    let side = 6 + rng.range(0, 5);
+    let n = side * side;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..side {
+        for c in 0..side {
+            let o = (r * side + c) as u32;
+            edges.push((o, (r * side + (c + 1) % side) as u32, 64.0));
+            edges.push((o, (((r + 1) % side) * side + c) as u32, 64.0));
+        }
+    }
+    let graph = CommGraph::from_edges(n, &edges);
+    let loads: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 3.0)).collect();
+    let coords: Vec<[f64; 2]> =
+        (0..n).map(|i| [(i % side) as f64, (i / side) as f64]).collect();
+    let topo = Topology::new(n_nodes, ppn);
+    let n_pes = topo.n_pes() as u64;
+    let mapping: Vec<u32> = (0..n).map(|_| rng.below(n_pes) as u32).collect();
+    Instance::new(loads, coords, graph, mapping, topo)
+}
+
+// ===================================================== identity tests
+
+#[test]
+fn greedy_uniform_bit_identical_to_frozen_legacy() {
+    let mut rng = Rng::new(0x6E7E_0001);
+    for trial in 0..20 {
+        let inst = random_instance(&mut rng, 2 + trial % 5, 1 + trial % 3);
+        let live = Greedy.rebalance(&inst);
+        assert_eq!(live.mapping, legacy_greedy(&inst), "trial {trial}");
+    }
+}
+
+#[test]
+fn greedy_refine_uniform_bit_identical_to_frozen_legacy() {
+    let mut rng = Rng::new(0x6E7E_0002);
+    for trial in 0..20 {
+        let inst = random_instance(&mut rng, 2 + trial % 5, 1 + trial % 3);
+        let params = StrategyParams::default();
+        let live = GreedyRefine { params }.rebalance(&inst);
+        assert_eq!(
+            live.mapping,
+            legacy_greedy_refine(&inst, params.refine_tolerance),
+            "trial {trial}"
+        );
+    }
+}
+
+#[test]
+fn hierarchical_refinement_uniform_bit_identical_to_frozen_legacy() {
+    use difflb::strategies::diffusion::hierarchical::assign_pes;
+    let mut rng = Rng::new(0x6E7E_0003);
+    for trial in 0..20 {
+        let inst = random_instance(&mut rng, 2 + trial % 4, 2 + trial % 3);
+        // a plausible node-level decision: each object's current node,
+        // a third of them reassigned to a random node
+        let mut node_map: Vec<u32> =
+            inst.mapping.iter().map(|&pe| inst.topo.node_of_pe(pe)).collect();
+        for nm in node_map.iter_mut() {
+            if rng.chance(0.33) {
+                *nm = rng.below(inst.topo.n_nodes as u64) as u32;
+            }
+        }
+        let live = assign_pes(&inst, &node_map, 0.02);
+        assert_eq!(live, legacy_assign_pes(&inst, &node_map, 0.02), "trial {trial}");
+    }
+}
+
+#[test]
+fn full_diffusion_uniform_unaffected_by_explicit_unit_speeds() {
+    let mut rng = Rng::new(0x6E7E_0004);
+    for trial in 0..8 {
+        let inst = random_instance(&mut rng, 4, 1 + trial % 2);
+        let mut tagged = inst.clone();
+        tagged.topo = tagged.topo.clone().with_pe_speeds(vec![1.0; inst.topo.n_pes()]);
+        for mk in [Diffusion::communication, Diffusion::coordinate] {
+            let a = mk(StrategyParams::default()).rebalance(&inst);
+            let b = mk(StrategyParams::default()).rebalance(&tagged);
+            assert_eq!(a.mapping, b.mapping, "trial {trial}");
+        }
+    }
+}
+
+// ================================================ behavioral (hetero)
+
+/// 8x8 periodic stencil, unit loads, contiguous row-strip quarters —
+/// raw work perfectly balanced at 16 per node by construction.
+fn balanced_quarters() -> Instance {
+    let side = 8;
+    let n = side * side;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..side {
+        for c in 0..side {
+            let o = (r * side + c) as u32;
+            edges.push((o, (r * side + (c + 1) % side) as u32, 64.0));
+            edges.push((o, (((r + 1) % side) * side + c) as u32, 64.0));
+        }
+    }
+    let graph = CommGraph::from_edges(n, &edges);
+    let coords: Vec<[f64; 2]> =
+        (0..n).map(|i| [(i % side) as f64, (i / side) as f64]).collect();
+    let mapping: Vec<u32> = (0..n).map(|o| (o * 4 / n) as u32).collect();
+    Instance::new(vec![1.0; n], coords, graph, mapping, Topology::flat(4))
+}
+
+#[test]
+fn diffusion_improves_time_imbalance_on_slow_node() {
+    // Node 0 at half speed, equal raw work per node: the raw-work
+    // picture is perfectly balanced, so only a speed-aware balancer has
+    // any reason to migrate — and it must cut the time imbalance.
+    let mut inst = balanced_quarters();
+    inst.topo = Topology::flat(4).with_pe_speeds(vec![0.5, 1.0, 1.0, 1.0]);
+    let before = evaluate_mapping(&inst, &inst.mapping);
+    let asg = Diffusion::communication(StrategyParams::default()).rebalance(&inst);
+    let after = evaluate_mapping(&inst, &asg.mapping);
+    assert!(after.migrations > 0, "speed-aware diffusion must act");
+    assert!(
+        after.time_max_avg_node < before.time_max_avg_node,
+        "time imbalance {} !< {}",
+        after.time_max_avg_node,
+        before.time_max_avg_node
+    );
+}
+
+#[test]
+fn uniform_diffusion_ignores_balanced_raw_work() {
+    // The same instance WITHOUT speeds is already balanced (16 per
+    // node exactly): the uniform balancer must leave it alone, proving
+    // the migrations above are driven by the speed model and not noise.
+    let inst = balanced_quarters();
+    let asg = Diffusion::communication(StrategyParams::default()).rebalance(&inst);
+    assert_eq!(asg.migrations(&inst), 0, "uniform run migrated on balanced work");
+}

@@ -1,0 +1,164 @@
+//! Property-based strategy-invariant suite (ISSUE 5 satellite): every
+//! registered strategy (`strategies::AVAILABLE`, distributed variants
+//! included) is run over randomized instances — varied object counts,
+//! topologies (flat and hierarchical), and speed vectors (uniform and
+//! heterogeneous) — and must uphold the invariants no balancer may
+//! break:
+//!
+//! * every object maps to an in-range PE;
+//! * total work is conserved (the per-PE load sums re-add to the
+//!   instance's total — no object lost or duplicated);
+//! * rebalance is deterministic for a fixed seed: the same strategy
+//!   object re-run, and a freshly constructed one, produce identical
+//!   mappings (scratch reuse must not leak state);
+//! * `none` keeps `Assignment::unchanged` semantics exactly;
+//! * the diffusion single-hop guarantee survives heterogeneous speeds.
+//!
+//! Uses the in-repo `util::prop` harness (proptest is unavailable
+//! offline); replay failures with `DIFFLB_PROP_SEED=<seed>`.
+
+use difflb::model::{CommGraph, Instance, Topology};
+use difflb::strategies::diffusion::Diffusion;
+use difflb::strategies::{make, LoadBalancer, StrategyParams, AVAILABLE};
+use difflb::util::prop::{self, Gen};
+
+/// Random instance: `side x side` objects with periodic 5-point stencil
+/// edges, random loads, random (in-range) initial mapping, and a
+/// randomly uniform or heterogeneous topology.
+fn random_instance(g: &mut Gen) -> Instance {
+    let side = 4 + g.usize_in(0, 5); // 16..=64 objects
+    let n = side * side;
+    let n_nodes = 2 + g.usize_in(0, 5); // 2..=7 nodes
+    let ppn = 1 + g.usize_in(0, 2); // 1..=3 PEs per node
+    let mut topo = Topology::new(n_nodes, ppn);
+    if g.bool() {
+        let speeds: Vec<f64> = (0..topo.n_pes())
+            .map(|_| *g.rng.choose(&[0.25, 0.5, 1.0, 1.5, 2.0, 4.0]))
+            .collect();
+        topo = topo.with_pe_speeds(speeds);
+    }
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..side {
+        for c in 0..side {
+            let o = (r * side + c) as u32;
+            edges.push((o, (r * side + (c + 1) % side) as u32, 64.0));
+            edges.push((o, (((r + 1) % side) * side + c) as u32, 64.0));
+        }
+    }
+    let graph = CommGraph::from_edges(n, &edges);
+    let loads: Vec<f64> = (0..n).map(|_| g.f64_in(0.2, 3.0)).collect();
+    let coords: Vec<[f64; 2]> =
+        (0..n).map(|i| [(i % side) as f64, (i / side) as f64]).collect();
+    let n_pes = topo.n_pes() as u64;
+    let mapping: Vec<u32> = (0..n).map(|_| g.rng.below(n_pes) as u32).collect();
+    Instance::new(loads, coords, graph, mapping, topo)
+}
+
+fn check_strategy(inst: &Instance, name: &str) -> prop::CaseResult {
+    let params = StrategyParams::default();
+    let strat = make(name, params).map_err(|e| e.to_string())?;
+    let asg = strat.rebalance(inst);
+
+    // mapped, in range
+    prop::assert_that(
+        asg.mapping.len() == inst.n_objects(),
+        format!("{name}: mapping length {} != {}", asg.mapping.len(), inst.n_objects()),
+    )?;
+    let n_pes = inst.topo.n_pes() as u32;
+    prop::assert_that(
+        asg.mapping.iter().all(|&pe| pe < n_pes),
+        format!("{name}: out-of-range PE"),
+    )?;
+
+    // work conserved: regrouping the same loads must re-add to the total
+    let total: f64 = inst.loads.iter().sum();
+    let regrouped: f64 = inst.pe_loads(&asg.mapping).iter().sum();
+    prop::assert_close(regrouped, total, 1e-9)
+        .map_err(|e| format!("{name}: work not conserved: {e}"))?;
+
+    // deterministic: same strategy object again, and a fresh one
+    let again = strat.rebalance(inst);
+    prop::assert_that(
+        again.mapping == asg.mapping,
+        format!("{name}: second rebalance diverged (scratch state leak)"),
+    )?;
+    let fresh = make(name, params).map_err(|e| e.to_string())?.rebalance(inst);
+    prop::assert_that(
+        fresh.mapping == asg.mapping,
+        format!("{name}: fresh strategy diverged for the same seed"),
+    )?;
+
+    // the no-op strategy is exactly Assignment::unchanged
+    if name == "none" {
+        prop::assert_that(
+            asg.mapping == inst.mapping,
+            "none: mapping changed".to_string(),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn every_strategy_upholds_invariants_on_random_instances() {
+    // Strategies under test: all of AVAILABLE; optionally restricted
+    // via DIFFLB_TEST_STRATEGY for debugging one.
+    let only = std::env::var("DIFFLB_TEST_STRATEGY").ok();
+    prop::check("strategy invariants", 8, |g| {
+        let inst = random_instance(g);
+        for &name in AVAILABLE {
+            if let Some(want) = &only {
+                if want != name {
+                    continue;
+                }
+            }
+            check_strategy(&inst, name)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_hop_guarantee_survives_heterogeneous_speeds() {
+    prop::check("hetero single-hop", 10, |g| {
+        let mut inst = random_instance(g);
+        // force a genuinely heterogeneous topology
+        let speeds: Vec<f64> = (0..inst.topo.n_pes())
+            .map(|pe| if pe % 3 == 0 { 2.0 } else { 0.5 })
+            .collect();
+        inst.topo = inst.topo.clone().with_pe_speeds(speeds);
+        let lb = Diffusion::communication(StrategyParams::default());
+        let (neigh, _) = lb.plan(&inst);
+        let asg = lb.rebalance(&inst);
+        for o in 0..inst.n_objects() {
+            let from = inst.topo.node_of_pe(inst.mapping[o]);
+            let to = inst.topo.node_of_pe(asg.mapping[o]);
+            if from != to && !neigh.adj[from as usize].contains(&to) {
+                return Err(format!("object {o} hopped {from}->{to} (not stage-1 neighbors)"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn uniform_unit_speeds_are_the_same_topology() {
+    // Attaching an explicit all-1.0 speed vector must not change any
+    // strategy's decisions: with_pe_speeds canonicalizes it away.
+    prop::check("unit speeds are identity", 6, |g| {
+        let mut inst = random_instance(g);
+        inst.topo = Topology::new(inst.topo.n_nodes, inst.topo.pes_per_node);
+        let mut tagged = inst.clone();
+        tagged.topo =
+            tagged.topo.clone().with_pe_speeds(vec![1.0; inst.topo.n_pes()]);
+        for &name in AVAILABLE {
+            let params = StrategyParams::default();
+            let a = make(name, params).map_err(|e| e.to_string())?.rebalance(&inst);
+            let b = make(name, params).map_err(|e| e.to_string())?.rebalance(&tagged);
+            prop::assert_that(
+                a.mapping == b.mapping,
+                format!("{name}: unit-speed vector changed the assignment"),
+            )?;
+        }
+        Ok(())
+    });
+}

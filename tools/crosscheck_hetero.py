@@ -1,0 +1,520 @@
+#!/usr/bin/env python3
+"""Cross-simulation of the speed-aware (heterogeneous) diffusion path.
+
+The build container ships no Rust toolchain (EXPERIMENTS.md §Perf
+provenance), so — like tools/crosscheck_distributed.py for the
+distributed runtime and tools/crosscheck_refactor.py for the
+zero-allocation refactor — this script transcribes the decision logic
+of the Rust implementation into Python (IEEE-754 doubles, same
+operation orders) and asserts the PR's two load-bearing claims
+bit-exactly:
+
+  1. **Strict generalization**: with uniform speeds the weighted
+     pipeline (normalized-time stage-2 input, time-denominated quota
+     floor, sender-time quota consumption in stage 3) produces
+     bit-identical quotas, picks, manifests, and object→node maps to a
+     transcription of the PRE-heterogeneity algorithm.
+  2. **Seq/dist bit-identity survives heterogeneity**: on random speed
+     vectors, the distributed protocols (stage-2 per-node virtual
+     diffusion with locally normalized load scalars; stage-3
+     rank-ordered manifest wavefront with weighted consumption) agree
+     with the sequential weighted sweep to the last bit — stage-2 input
+     scalars, net flow rows, iteration counts, quota floors, manifests,
+     final maps.
+
+Mirrored Rust code:
+  - Topology::node_capacity            rust/src/model/topology.rs
+  - LbScratch::load_views (node_time)  rust/src/strategies/diffusion/scratch.rs
+  - virtual_balance_with               rust/src/strategies/diffusion/virtual_lb.rs
+  - distributed::node_load + stage2    rust/src/distributed/{mod,stage2}.rs
+  - quota_floor / eff_load /
+    select_comm_node                   rust/src/strategies/diffusion/object_selection.rs
+  - distributed stage-3 wavefront      rust/src/distributed/stage3.rs
+
+Run: python3 tools/crosscheck_hetero.py
+"""
+import heapq
+import random
+
+
+def sum_ltr(xs):
+    s = 0.0
+    for x in xs:
+        s += x
+    return s
+
+
+# ------------------------------------------------------------ topology
+class Topo:
+    """Mirror of model::Topology: contiguous PE numbering, optional
+    per-PE speeds (None = uniform), capacity = left-to-right PE-speed
+    sum per node."""
+
+    def __init__(self, n_nodes, pes_per_node, speeds=None):
+        self.n_nodes = n_nodes
+        self.ppn = pes_per_node
+        if speeds is not None and all(s == 1.0 for s in speeds):
+            speeds = None  # with_pe_speeds canonicalization
+        self.speeds = speeds
+
+    def n_pes(self):
+        return self.n_nodes * self.ppn
+
+    def is_uniform(self):
+        return self.speeds is None
+
+    def node_of_pe(self, pe):
+        return pe // self.ppn
+
+    def node_capacity(self, node):
+        if self.speeds is None:
+            return float(self.ppn)
+        cap = 0.0
+        for pe in range(node * self.ppn, (node + 1) * self.ppn):
+            cap += self.speeds[pe]
+        return cap
+
+
+# ------------------------------------------------- stage-2 input scalars
+def seq_stage2_input(topo, loads, mapping):
+    """LbScratch::load_views: node_loads accumulated in object order,
+    then (heterogeneous only) divided per node by capacity."""
+    node_loads = [0.0] * topo.n_nodes
+    for o, pe in enumerate(mapping):
+        node_loads[topo.node_of_pe(pe)] += loads[o]
+    if topo.is_uniform():
+        return node_loads
+    return [node_loads[i] / topo.node_capacity(i) for i in range(topo.n_nodes)]
+
+
+def dist_stage2_input(topo, loads, mapping):
+    """distributed::node_load per rank: this node's loads accumulated in
+    object order, then divided by this node's own capacity."""
+    out = []
+    for rank in range(topo.n_nodes):
+        my = 0.0
+        for o, pe in enumerate(mapping):
+            if topo.node_of_pe(pe) == rank:
+                my += loads[o]
+        out.append(my if topo.is_uniform() else my / topo.node_capacity(rank))
+    return out
+
+
+# --------------------------------------------- stage 2 (fixed point) —
+# identical transcriptions to crosscheck_distributed.py; the protocols
+# are unit-agnostic, heterogeneity only changes the input scalars.
+def seq_virtual_balance(adj, loads, tol, max_iters):
+    n = len(loads)
+    global_avg = sum_ltr(loads) / max(n, 1)
+    if global_avg <= 0.0:
+        return [[] for _ in range(n)], 0
+    alpha = 1.0 / (max(map(len, adj), default=0) + 1)
+    own = list(loads)
+    recv = [0.0] * n
+    net = {}
+    iterations = 0
+    for it in range(max_iters):
+        iterations = it + 1
+        cur = [own[i] + recv[i] for i in range(n)]
+        sends = []
+        for i in range(n):
+            want = 0.0
+            for j in adj[i]:
+                diff = cur[i] - cur[j]
+                if diff > 0.0:
+                    want += alpha * diff
+            if want <= 0.0:
+                continue
+            scale = own[i] / want if want > own[i] else 1.0
+            if scale <= 0.0:
+                continue
+            for j in adj[i]:
+                diff = cur[i] - cur[j]
+                if diff > 0.0:
+                    sends.append((i, j, alpha * diff * scale))
+        moved = 0.0
+        for (i, j, amt) in sends:
+            own[i] -= amt
+            recv[j] += amt
+            a, b, sign = (i, j, 1.0) if i < j else (j, i, -1.0)
+            net[(a, b)] = net.get((a, b), 0.0) + sign * amt
+            moved += amt
+        if seq_converged(adj, own, recv, global_avg, tol) or moved <= tol * global_avg * 1e-3:
+            break
+    flows = [[] for _ in range(n)]
+    for a in range(n):
+        for b in adj[a]:
+            if a >= b:
+                continue
+            f = net.get((a, b), 0.0)
+            if f > 1e-12:
+                flows[a].append((b, f))
+            elif f < -1e-12:
+                flows[b].append((a, -f))
+    for row in flows:
+        row.sort(key=lambda e: e[0])
+    return flows, iterations
+
+
+def seq_converged(adj, own, recv, global_avg, tol):
+    for i in range(len(adj)):
+        if not adj[i]:
+            continue
+        cur_i = own[i] + recv[i]
+        lo = hi = cur_i
+        for j in adj[i]:
+            c = own[j] + recv[j]
+            lo = min(lo, c)
+            hi = max(hi, c)
+        if (hi - lo) / global_avg > tol:
+            return False
+    return True
+
+
+def dist_virtual_balance(adj, loads, tol, max_iters):
+    """Mirror of stage2::virtual_balance_node across all ranks (see
+    crosscheck_distributed.py for the message-order commentary)."""
+    n = len(loads)
+    total = loads[0] if n else 0.0
+    for r in range(1, n):
+        total += loads[r]
+    global_avg = total / max(n, 1)
+    if global_avg <= 0.0:
+        return [[] for _ in range(n)], 0
+    alpha = 1.0 / (max(map(len, adj), default=0) + 1)
+    own = list(loads)
+    recv = [0.0] * n
+    net = [[0.0] * len(adj[i]) for i in range(n)]
+    iterations = [0] * n
+    moved_prev = 0.0
+    for sweep in range(max_iters):
+        cur = [own[i] + recv[i] for i in range(n)]
+        if sweep > 0:
+            bits = []
+            for i in range(n):
+                if not adj[i]:
+                    bits.append(True)
+                    continue
+                lo = hi = cur[i]
+                for j in adj[i]:
+                    lo = min(lo, cur[j])
+                    hi = max(hi, cur[j])
+                bits.append((hi - lo) / global_avg <= tol)
+            if all(bits) or moved_prev <= tol * global_avg * 1e-3:
+                break
+        for i in range(n):
+            iterations[i] = sweep + 1
+        amts = []
+        movs = []
+        for i in range(n):
+            a_i = [0.0] * len(adj[i])
+            mov_i = []
+            want = 0.0
+            for j in adj[i]:
+                diff = cur[i] - cur[j]
+                if diff > 0.0:
+                    want += alpha * diff
+            if want > 0.0:
+                scale = own[i] / want if want > own[i] else 1.0
+                if scale > 0.0:
+                    for idx, j in enumerate(adj[i]):
+                        diff = cur[i] - cur[j]
+                        if diff > 0.0:
+                            amt = alpha * diff * scale
+                            a_i[idx] = amt
+                            mov_i.append(amt)
+            amts.append(a_i)
+            movs.append(mov_i)
+        for i in range(n):
+            for idx in range(len(adj[i])):
+                own[i] -= amts[i][idx]
+                net[i][idx] += amts[i][idx]
+        for i in range(n):
+            for idx, j in enumerate(adj[i]):
+                jidx = adj[j].index(i)
+                amt = amts[j][jidx]
+                recv[i] += amt
+                net[i][idx] -= amt
+        moved = 0.0
+        for r in range(n):
+            for amt in movs[r]:
+                moved += amt
+        moved_prev = moved
+    flows = [
+        [(j, net[i][idx]) for idx, j in enumerate(adj[i]) if net[i][idx] > 1e-12]
+        for i in range(n)
+    ]
+    return flows, iterations[0] if n else 0
+
+
+# --------------------------------------------------- stage 3 (weighted)
+def heap_push(h, key, tie, obj):
+    heapq.heappush(h, (-key, tie, -obj))
+
+
+def heap_pop(h):
+    k, t, o = heapq.heappop(h)
+    return -k, t, -o
+
+
+def quota_floor(topo, loads, mapping):
+    """object_selection::quota_floor: raw-load average on uniform
+    topologies; average per-node normalized time otherwise."""
+    if topo.is_uniform():
+        return 0.01 * sum_ltr(loads) / max(topo.n_nodes, 1)
+    node_loads = [0.0] * topo.n_nodes
+    for o, pe in enumerate(mapping):
+        node_loads[topo.node_of_pe(pe)] += loads[o]
+    total_time = 0.0
+    for node, l in enumerate(node_loads):
+        total_time += l / topo.node_capacity(node)
+    return 0.01 * total_time / max(topo.n_nodes, 1)
+
+
+def eff_load(topo, i, load):
+    """object_selection::eff_load: time freed at the sender node."""
+    if topo.is_uniform():
+        return load
+    return load / topo.node_capacity(i)
+
+
+def select_comm_node(topo, graph, loads, node_map, i, row, floor, overfill,
+                     by_node, moved, manifest):
+    """object_selection::select_comm_node with weighted consumption."""
+    targets = sorted([(j, a) for (j, a) in row if a >= floor],
+                     key=lambda e: (-e[1], e[0]))
+    migrations = 0
+    if not targets:
+        return 0
+    pool = [o for o in by_node[i] if node_map[o] == i and not moved[o]]
+    bytes_to_j = {}
+    for (j, quota) in targets:
+        remaining = quota
+        h = []
+        bytes_to_j.clear()  # epoch bump
+        for o in pool:
+            if moved[o] or node_map[o] != i:
+                continue
+            bj = 0.0
+            local = 0.0
+            for (p, w) in graph[o]:
+                pn = node_map[p]
+                if pn == j:
+                    bj += w
+                elif pn == i:
+                    local += w
+            bytes_to_j[o] = bj
+            heap_push(h, bj, local, o)
+        while remaining > 1e-12:
+            if not h:
+                break
+            key, tie, o = heap_pop(h)
+            if moved[o] or node_map[o] != i:
+                continue
+            cur = bytes_to_j[o]
+            if abs(cur - key) > 1e-9:
+                heap_push(h, cur, tie, o)
+                continue
+            load = eff_load(topo, i, loads[o])
+            if not (remaining > 0.0 and load * (1.0 - overfill) <= remaining):
+                continue
+            node_map[o] = j
+            moved[o] = True
+            migrations += 1
+            remaining -= load
+            manifest.append((o, j))
+            for (p, w) in graph[o]:
+                if node_map[p] == i and not moved[p] and p in bytes_to_j:
+                    bytes_to_j[p] += w
+                    heap_push(h, bytes_to_j[p], 0.0, p)
+    return migrations
+
+
+def legacy_select_comm_node(graph, loads, node_map, i, row, floor, overfill,
+                            by_node, moved, manifest):
+    """The PRE-heterogeneity body: raw-load quota consumption (the
+    uniform topology must reduce the weighted body to exactly this)."""
+    topo = Topo(len(by_node), 1)  # uniform by construction
+    return select_comm_node(topo, graph, loads, node_map, i, row, floor,
+                            overfill, by_node, moved, manifest)
+
+
+def seq_select(topo, graph, loads, node_map0, flows, floor, overfill):
+    node_map = list(node_map0)
+    moved = [False] * len(loads)
+    by_node = [[] for _ in range(topo.n_nodes)]
+    for o, nm in enumerate(node_map):
+        by_node[nm].append(o)
+    manifests = []
+    for i in range(topo.n_nodes):
+        m = []
+        select_comm_node(topo, graph, loads, node_map, i, flows[i], floor,
+                         overfill, by_node, moved, m)
+        manifests.append(m)
+    return node_map, manifests
+
+
+def dist_select(topo, graph, loads, node_map0, flows, floor, overfill):
+    """stage3::select_and_refine_node's wavefront: fresh per-rank
+    replicas, lower-rank manifests replayed before picking."""
+    manifests = []
+    final_maps = []
+    n_nodes = topo.n_nodes
+    for rank in range(n_nodes):
+        node_map = list(node_map0)
+        moved = [False] * len(loads)
+        by_node = [[] for _ in range(n_nodes)]
+        for o, nm in enumerate(node_map):
+            by_node[nm].append(o)
+        for h in range(rank):
+            for (o, dest) in manifests[h]:
+                node_map[o] = dest
+                moved[o] = True
+        m = []
+        select_comm_node(topo, graph, loads, node_map, rank, flows[rank],
+                         floor, overfill, by_node, moved, m)
+        manifests.append(m)
+        final_maps.append(node_map)
+    for rank in range(n_nodes):
+        for h in range(rank + 1, n_nodes):
+            for (o, dest) in manifests[h]:
+                final_maps[rank][o] = dest
+    for rank in range(1, n_nodes):
+        assert final_maps[rank] == final_maps[0], f"replica {rank} diverged"
+    return final_maps[0], manifests
+
+
+# ---------------------------------------------------------------- main
+def ring_graph(n, h):
+    adj = []
+    for i in range(n):
+        s = set()
+        for d in range(1, h + 1):
+            s.add((i + d) % n)
+            s.add((i - d) % n)
+        s.discard(i)
+        adj.append(sorted(s))
+    return adj
+
+
+def random_topo(rng, n_nodes, hetero):
+    ppn = rng.choice([1, 1, 2, 3])
+    speeds = None
+    if hetero:
+        speeds = [rng.choice([0.25, 0.5, 1.0, 1.5, 2.0, 4.0])
+                  for _ in range(n_nodes * ppn)]
+        if all(s == 1.0 for s in speeds):
+            speeds[0] = 2.0  # force genuine heterogeneity
+    return Topo(n_nodes, ppn, speeds)
+
+
+def random_objects(rng, topo, objs_per_node):
+    n = topo.n_nodes * objs_per_node
+    # objects initially packed node by node, on each node's first PE
+    mapping = [(o // objs_per_node) * topo.ppn for o in range(n)]
+    loads = [rng.uniform(0.2, 3.0) for _ in range(n)]
+    graph = [[] for _ in range(n)]
+    for o in range(n):
+        nbr = (o + 1) % n
+        w = float(rng.randint(1, 8) * 16)
+        graph[o].append((nbr, w))
+        graph[nbr].append((o, w))
+    for _ in range(n // 3):
+        a = rng.randrange(n)
+        b = rng.randrange(n)
+        if a != b:
+            w = float(rng.randint(1, 8) * 16)
+            graph[a].append((b, w))
+            graph[b].append((a, w))
+    for row in graph:
+        row.sort()
+    return loads, graph, mapping
+
+
+def main():
+    rng = random.Random(0x4E7E)
+
+    # ---- claim 2a: stage-2 input scalars + fixed point, heterogeneous.
+    s2_trials = 220
+    for t in range(s2_trials):
+        n_nodes = rng.randint(2, 20)
+        topo = random_topo(rng, n_nodes, hetero=(t % 4 != 3))
+        loads, _, mapping = random_objects(rng, topo, rng.randint(2, 8))
+        if t % 9 == 0:
+            loads = [0.0] * len(loads)  # zero-load short circuit
+        seq_in = seq_stage2_input(topo, loads, mapping)
+        dist_in = dist_stage2_input(topo, loads, mapping)
+        assert seq_in == dist_in, f"stage2 trial {t}: input scalars diverged"
+        adj = ring_graph(n_nodes, rng.randint(1, 3))
+        tol = rng.choice([0.02, 0.05, 0.2])
+        iters = rng.choice([1, 3, 50, 300])
+        sf, si = seq_virtual_balance(adj, seq_in, tol, iters)
+        df, di = dist_virtual_balance(adj, dist_in, tol, iters)
+        assert si == di, f"stage2 trial {t}: iterations {si} != {di}"
+        assert sf == df, f"stage2 trial {t}: flows diverged\n{sf}\n{df}"
+    print(f"stage2 hetero: {s2_trials}/{s2_trials} trials bit-identical "
+          "(input scalars + flows + iterations)")
+
+    # ---- claim 2b: stage-3 weighted picks, seq sweep vs wavefront.
+    s3_trials = 200
+    for t in range(s3_trials):
+        n_nodes = rng.choice([2, 4, 8])
+        topo = random_topo(rng, n_nodes, hetero=(t % 4 != 3))
+        loads, graph, mapping = random_objects(rng, topo, rng.randint(3, 10))
+        node_map0 = [topo.node_of_pe(pe) for pe in mapping]
+        adj = ring_graph(n_nodes, 1 if n_nodes <= 4 else 2)
+        flows, _ = seq_virtual_balance(
+            adj, seq_stage2_input(topo, loads, mapping), 0.05, 200)
+        floor = quota_floor(topo, loads, mapping)
+        overfill = rng.choice([0.0, 0.5])
+        smap, sman = seq_select(topo, graph, loads, node_map0, flows, floor, overfill)
+        dmap, dman = dist_select(topo, graph, loads, node_map0, flows, floor, overfill)
+        assert smap == dmap, f"stage3 trial {t}: maps diverged"
+        assert sman == dman, f"stage3 trial {t}: manifests diverged"
+    print(f"stage3 hetero: {s3_trials}/{s3_trials} trials identical "
+          "(maps + manifests, weighted consumption)")
+
+    # ---- claim 1: uniform speeds == legacy algorithm, bit for bit.
+    uni_trials = 200
+    for t in range(uni_trials):
+        n_nodes = rng.choice([2, 4, 8])
+        ppn = rng.choice([1, 2])
+        # explicit all-1.0 speeds: with_pe_speeds canonicalizes to None
+        topo = Topo(n_nodes, ppn, [1.0] * (n_nodes * ppn))
+        assert topo.is_uniform()
+        loads, graph, mapping = random_objects(rng, topo, rng.randint(3, 8))
+        node_map0 = [topo.node_of_pe(pe) for pe in mapping]
+        # legacy stage-2 input: raw node loads
+        legacy_in = [0.0] * n_nodes
+        for o, pe in enumerate(mapping):
+            legacy_in[topo.node_of_pe(pe)] += loads[o]
+        assert seq_stage2_input(topo, loads, mapping) == legacy_in, \
+            f"uniform trial {t}: stage-2 input not raw loads"
+        adj = ring_graph(n_nodes, 1)
+        flows, _ = seq_virtual_balance(adj, legacy_in, 0.05, 200)
+        # legacy floor: 1% of average node load from raw object loads
+        legacy_floor = 0.01 * sum_ltr(loads) / max(n_nodes, 1)
+        floor = quota_floor(topo, loads, mapping)
+        assert floor == legacy_floor, f"uniform trial {t}: floor diverged"
+        overfill = rng.choice([0.0, 0.5])
+        wmap, wman = seq_select(topo, graph, loads, node_map0, flows, floor, overfill)
+        # legacy picks: raw-load consumption
+        lmap = list(node_map0)
+        lmoved = [False] * len(loads)
+        lby = [[] for _ in range(n_nodes)]
+        for o, nm in enumerate(lmap):
+            lby[nm].append(o)
+        lman = []
+        for i in range(n_nodes):
+            m = []
+            legacy_select_comm_node(graph, loads, lmap, i, flows[i],
+                                    legacy_floor, overfill, lby, lmoved, m)
+            lman.append(m)
+        assert wmap == lmap, f"uniform trial {t}: weighted != legacy map"
+        assert wman == lman, f"uniform trial {t}: weighted != legacy manifests"
+    print(f"uniform==legacy: {uni_trials}/{uni_trials} trials bit-identical "
+          "(inputs + floors + picks)")
+
+
+if __name__ == "__main__":
+    main()

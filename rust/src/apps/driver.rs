@@ -5,11 +5,16 @@
 //! strategy time + modeled migration transfer) — the machinery behind
 //! Figs 3–6, shared by every workload and strategy.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::apps::app::{App, StepCtx};
-use crate::model::{evaluate, Assignment, SpeedSchedule, Topology};
-use crate::simnet::{CostTracker, NetModel};
+use crate::model::{
+    evaluate, rehome_mapping, restrict_instance, Assignment, ResizeSchedule, SpeedSchedule,
+    Topology,
+};
+use crate::simnet::{CostTracker, FaultPlan, NetModel};
 use crate::strategies::LoadBalancer;
 use crate::util::stats::Summary;
 
@@ -83,6 +88,16 @@ pub struct DriverConfig {
     /// speeds. The distributed driver evaluates the identical pure
     /// function at its root, so seq-vs-dist equivalence survives noise.
     pub speed_schedule: SpeedSchedule,
+    /// Planned elasticity: node join/leave events keyed to LB rounds.
+    /// Both drivers rebalance onto the surviving membership via
+    /// [`restrict_instance`]; an inert schedule changes nothing.
+    pub resize: ResizeSchedule,
+    /// Chaos schedule for the *distributed* driver (node deaths, hangs,
+    /// partitions — `run_app_distributed`). The sequential driver has
+    /// no failure surface and ignores it; an inert plan keeps the
+    /// distributed protocol paths bit-identical to a fault-unaware
+    /// build.
+    pub fault_plan: Arc<FaultPlan>,
 }
 
 impl Default for DriverConfig {
@@ -94,6 +109,8 @@ impl Default for DriverConfig {
             log_every: 0,
             deterministic_loads: false,
             speed_schedule: SpeedSchedule::none(),
+            resize: ResizeSchedule::none(),
+            fault_plan: Arc::new(FaultPlan::none()),
         }
     }
 }
@@ -131,6 +148,9 @@ pub struct RunReport {
     pub lb_s: f64,
     pub total_migrations: usize,
     pub verified: bool,
+    /// Object→PE mapping at the end of the run. The chaos tests use
+    /// this to assert no object is left on a dead or departed node.
+    pub final_mapping: Vec<u32>,
 }
 
 impl RunReport {
@@ -154,6 +174,21 @@ pub fn run_app<A: App + ?Sized>(
 ) -> Result<RunReport> {
     let topo = app.topo();
     let neighbor_pairs = app.neighbor_pairs();
+    cfg.resize.validate(topo.n_nodes)?;
+    // `cfg.fault_plan` is a distributed-runtime concern: the sequential
+    // driver has no failure surface, so the plan is ignored here and
+    // only `run_app_distributed` injects it.
+    if cfg.resize.is_active() {
+        // Nodes scheduled to join later must start empty: evict their
+        // objects onto the initial membership before the first step.
+        let alive0 = cfg.resize.initial_alive(topo.n_nodes);
+        if alive0.iter().any(|&a| !a) {
+            app.apply(&Assignment {
+                mapping: rehome_mapping(app.mapping(), &topo, &alive0),
+            });
+        }
+    }
+    let mut lb_round: usize = 0;
     let mut report = RunReport::default();
     // Per-iteration accounting buffers, hoisted out of the loop (the
     // pre-trait driver already did this; the trait keeps it possible:
@@ -228,13 +263,35 @@ pub fn run_app<A: App + ?Sized>(
             if cfg.deterministic_loads {
                 inst.loads = work.clone();
             }
-            if cfg.speed_schedule.is_active() {
+            let lb_topo = if cfg.resize.is_active() {
+                // leavers inside their drain window keep nominally-zero
+                // speed so the balancer bleeds work off them gradually
+                cfg.resize.drained_topo(&eff_topo, lb_round)
+            } else {
+                eff_topo.clone()
+            };
+            if cfg.speed_schedule.is_active() || cfg.resize.is_active() {
                 // the balancer must see this iteration's perturbed
                 // speeds, not the app's static base topology
-                inst.topo = eff_topo.clone();
+                inst.topo = lb_topo;
             }
             let t = std::time::Instant::now();
-            let asg = strategy.rebalance(&inst);
+            let asg = if cfg.resize.is_active() {
+                let alive = cfg.resize.alive_after(lb_round, topo.n_nodes);
+                if alive.iter().all(|&a| a) {
+                    strategy.rebalance(&inst)
+                } else {
+                    // Rebalance on the surviving membership only, then
+                    // translate the dense sub-mapping back to world PEs
+                    // — departed nodes can never be assigned work.
+                    let r = restrict_instance(&inst, &alive);
+                    Assignment {
+                        mapping: r.expand_mapping(&strategy.rebalance(&r.inst).mapping),
+                    }
+                }
+            } else {
+                strategy.rebalance(&inst)
+            };
             let strat_s = t.elapsed().as_secs_f64();
             let metrics = evaluate(&inst, &asg);
             let moved_bytes = app.apply(&asg);
@@ -245,6 +302,7 @@ pub fn run_app<A: App + ?Sized>(
             rec.lb_s = strat_s + transfer_s;
             rec.migrations = metrics.migrations;
             report.total_migrations += metrics.migrations;
+            lb_round += 1;
         }
 
         if cfg.log_every > 0 && iter % cfg.log_every == 0 {
@@ -262,6 +320,7 @@ pub fn run_app<A: App + ?Sized>(
         report.total_s += rec.compute_max_s + rec.comm_max_s + rec.lb_s;
         report.records.push(rec);
     }
+    report.final_mapping = app.mapping().to_vec();
     report.verified = app.verify().is_ok();
     Ok(report)
 }
@@ -411,6 +470,49 @@ mod tests {
             avg(&refine),
             avg(&none)
         );
+    }
+
+    #[test]
+    fn resize_leave_evicts_the_departing_node() {
+        use crate::model::ResizeSchedule;
+        let mut a = app();
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        let cfg = DriverConfig {
+            iters: 20,
+            lb_period: 5,
+            deterministic_loads: true,
+            resize: ResizeSchedule::parse("leave:3@2").unwrap(),
+            ..Default::default()
+        };
+        let rep = run_app(&mut a, strat.as_ref(), &cfg).unwrap();
+        assert!(rep.verified, "resize must not corrupt physics");
+        let topo = Topology::flat(4);
+        assert!(
+            rep.final_mapping.iter().all(|&pe| topo.node_of_pe(pe) != 3),
+            "object left on the departed node"
+        );
+    }
+
+    #[test]
+    fn resize_join_keeps_the_late_node_empty_until_it_joins() {
+        use crate::model::ResizeSchedule;
+        let mut a = app();
+        let strat = make("diff-comm", StrategyParams::default()).unwrap();
+        let cfg = DriverConfig {
+            iters: 20,
+            lb_period: 5,
+            deterministic_loads: true,
+            resize: ResizeSchedule::parse("join:3@1").unwrap(),
+            ..Default::default()
+        };
+        let rep = run_app(&mut a, strat.as_ref(), &cfg).unwrap();
+        assert!(rep.verified, "resize must not corrupt physics");
+        // Records are written before each LB round fires, so every
+        // iteration up to and including the join round's must show the
+        // joiner empty (initial rehome evicted its objects).
+        for r in &rep.records[..10] {
+            assert_eq!(r.node_work[3], 0.0, "joiner held work at iter {}", r.iter);
+        }
     }
 
     #[test]

@@ -92,6 +92,46 @@ pub fn speed_schedule_from_config(cfg: &Config) -> Result<crate::model::SpeedSch
     Ok(sched)
 }
 
+/// Planned elasticity from a config (section `topo`): event spec
+/// `topo.resize` (`leave:NODE@ROUND,join:NODE@ROUND`), drain window
+/// `topo.resize_drain` (LB rounds of speed-scaled drain preceding a
+/// leave).
+pub fn resize_from_config(cfg: &Config) -> Result<crate::model::ResizeSchedule> {
+    let mut sched = match cfg.get("topo.resize") {
+        Some(spec) => crate::model::ResizeSchedule::parse(spec)?,
+        None => crate::model::ResizeSchedule::none(),
+    };
+    sched.drain = cfg.get_or("topo.resize_drain", 1);
+    Ok(sched)
+}
+
+/// Chaos schedule from a config (section `fault`): an explicit event
+/// spec `fault.plan` (`kill:2@1:s2,part:1|3@4`) wins over a
+/// seed-derived single fault `fault.seed` (victim, round, stage and
+/// kind all pure functions of the seed and the run schedule).
+/// `fault.detect_ms` overrides the failure-detection patience.
+pub fn fault_plan_from_config(cfg: &Config) -> Result<crate::simnet::FaultPlan> {
+    let mut plan = if let Some(spec) = cfg.get("fault.plan") {
+        crate::simnet::FaultPlan::parse(spec)?
+    } else if let Some(raw) = cfg.get("fault.seed") {
+        let seed: u64 = raw.parse().map_err(|e| anyhow::anyhow!("fault.seed: {e}"))?;
+        let n_nodes: usize = cfg.get_or("topo.nodes", 4);
+        let lb_period: usize = cfg.get_or("run.lb_period", 10);
+        let rounds = if lb_period == 0 {
+            0
+        } else {
+            cfg.get_or("run.iters", 100_usize) / lb_period
+        };
+        crate::simnet::FaultPlan::from_seed(seed, n_nodes, rounds as u32)
+    } else {
+        return Ok(crate::simnet::FaultPlan::none());
+    };
+    if let Some(raw) = cfg.get("fault.detect_ms") {
+        plan.detect_ms = raw.parse().map_err(|e| anyhow::anyhow!("fault.detect_ms: {e}"))?;
+    }
+    Ok(plan)
+}
+
 /// PIC app configuration from a config (section `pic` + `topo`).
 pub fn pic_from_config(cfg: &Config) -> Result<PicConfig> {
     let d = PicConfig::default();
@@ -282,6 +322,8 @@ impl Coordinator {
             log_every: cfg.get_or("run.log_every", 0),
             deterministic_loads: cfg.get_bool_or("run.deterministic_loads", false),
             speed_schedule: speed_schedule_from_config(cfg)?,
+            resize: resize_from_config(cfg)?,
+            fault_plan: Arc::new(fault_plan_from_config(cfg)?),
         };
         Ok(Coordinator { strategy, params, driver })
     }
@@ -407,6 +449,29 @@ mod tests {
         // all-1.0 canonicalizes to uniform
         let uni = Config::from_str("[topo]\nnodes = 4\npe_speeds = 1, 1, 1, 1").unwrap();
         assert!(pic_from_config(&uni).unwrap().topo.is_uniform());
+    }
+
+    #[test]
+    fn resize_and_fault_configs_resolve() {
+        let cfg = Config::from_str(
+            "[topo]\nnodes = 4\nresize = leave:2@3\nresize_drain = 2\n\
+             [fault]\nplan = kill:1@1:s2\ndetect_ms = 250",
+        )
+        .unwrap();
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        assert!(coord.driver.resize.is_active());
+        assert_eq!(coord.driver.resize.drain, 2);
+        assert!(coord.driver.fault_plan.is_active());
+        assert_eq!(coord.driver.fault_plan.detect_ms, 250);
+        // seed-derived plans are pure functions of the seed + schedule
+        let c2 = Config::from_str("[topo]\nnodes = 8\n[fault]\nseed = 5").unwrap();
+        let p1 = Coordinator::from_config(&c2).unwrap().driver.fault_plan;
+        let p2 = Coordinator::from_config(&c2).unwrap().driver.fault_plan;
+        assert_eq!(*p1, *p2);
+        assert!(p1.is_active());
+        // no fault section at all: the inert plan
+        let c3 = Config::from_str("[topo]\nnodes = 4").unwrap();
+        assert!(!Coordinator::from_config(&c3).unwrap().driver.fault_plan.is_active());
     }
 
     #[test]

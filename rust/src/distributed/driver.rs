@@ -38,9 +38,31 @@
 //! broadcast as `.lbi` text — Rust's shortest-round-trip float
 //! formatting makes the serialization lossless, and the root parses its
 //! own broadcast so every node provably balances the identical problem.
+//!
+//! **Fault tolerance.** Under an active
+//! [`FaultPlan`](crate::simnet::FaultPlan) the run survives node
+//! deaths, hangs and partitions: every rank checkpoints its payload to
+//! the root before each pipeline entry, a starved pipeline stage
+//! triggers the [`epoch`] probe/declare/ack recovery cycle, and the
+//! surviving quorum restarts the round on the restricted instance
+//! ([`restrict_instance`]) — dead ranks' objects are re-homed onto
+//! survivors and their checkpointed payload re-enters through the
+//! root during the migration exchange, so work is conserved exactly.
+//! An inert plan leaves every one of these paths cold: the message
+//! sequence is bit-identical to the fault-unaware driver's.
+//!
+//! **Elasticity.** A [`ResizeSchedule`](crate::model::ResizeSchedule)
+//! retires ranks (drain, then exclusion from the pipeline's target
+//! set; the retiring thread ships its partition by the root's mapping
+//! handoff and exits) and seeds late joiners (idle until their join
+//! round, adopt the instance broadcast, enter as full participants).
+//! Known limitation: a partition that isolates a scheduled leaver at
+//! its own leave round strands the mapping handoff — combined
+//! fault+resize chaos must not cut the root↔leaver link on exactly
+//! that round.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -49,12 +71,15 @@ use crate::apps::driver::{
 };
 use crate::apps::hotspot::{self, HotspotConfig};
 use crate::apps::pic::{self, PicConfig};
-use crate::model::{CommGraph, Instance, Topology, TrafficRecorder};
+use crate::model::{
+    rehome_mapping, restrict_instance, CommGraph, Instance, Topology, TrafficRecorder,
+};
 use crate::simnet::network::{Cluster, Comm, CostTracker};
 use crate::strategies::diffusion::Variant;
 use crate::strategies::StrategyParams;
 use crate::util::stats::Summary;
 
+use super::epoch::{self, FaultCtx, Membership};
 use super::{build_candidates, node_pipeline, wire};
 
 /// Driver tag namespaces (top byte; low 24 bits carry the step or LB
@@ -66,7 +91,12 @@ const TAG_ACCT: u32 = 0x1100_0000;
 const TAG_LBC: u32 = 0x1200_0000;
 const TAG_LBX: u32 = 0x1300_0000;
 const TAG_MIG: u32 = 0x1400_0000;
+const TAG_CKPT: u32 = 0x1500_0000;
 const TAG_FIN: u32 = 0x1F00_0000;
+
+/// How often a joining rank polls for the root's instance broadcast
+/// while draining any epoch declarations parked during its idle phase.
+const JOIN_POLL: Duration = Duration::from_millis(200);
 
 /// Shared read-only bootstrap of a node-partitionable app — what a
 /// real launcher hands every process, plus the root-side hooks.
@@ -162,6 +192,15 @@ pub trait DistNode: Send {
     /// ownership implied by `new`.
     fn emigrate(&mut self, old: &[u32], new: &[u32], outbox: &mut [Vec<u8>]);
 
+    /// Serialize my whole partition's payload — the pre-pipeline state
+    /// the root holds in custody under an active fault plan, absorbed
+    /// on my behalf if I die mid-pipeline. The format must be
+    /// [`DistNode::absorb`]-compatible. Default: no payload (analytic
+    /// apps reconstruct state from the mapping alone).
+    fn checkpoint(&self, out: &mut Vec<u8>) {
+        let _ = out;
+    }
+
     /// Final state for root verification (same format across ranks).
     fn final_payload(&self, out: &mut Vec<u8>) {
         let _ = out;
@@ -207,6 +246,9 @@ pub fn run_app_distributed<A: DistApp>(
 ) -> Result<RunReport> {
     anyhow::ensure!(driver.iters < (1 << 24), "iters exceeds the step tag space");
     let n_nodes = app.topo().n_nodes;
+    driver.fault_plan.validate(n_nodes)?;
+    driver.resize.validate(n_nodes)?;
+    let plan = Arc::clone(&driver.fault_plan);
     let shared = Arc::new(Shared {
         mapping0: app.initial_mapping(),
         neighbor_pairs: app.neighbor_pairs(),
@@ -215,9 +257,20 @@ pub fn run_app_distributed<A: DistApp>(
         params,
         app,
     });
-    let mut reports =
-        Cluster::run(n_nodes, move |rank, mut comm| node_main(rank, &mut comm, &shared));
+    let node_fn = move |rank, mut comm: Comm| node_main(rank, &mut comm, &shared);
+    let mut reports = if plan.is_active() {
+        // chaos runs: the transport itself enforces the plan's
+        // partition cuts; kills and hangs fire inside the pipeline.
+        Cluster::run_with_plan(n_nodes, plan, node_fn)
+    } else {
+        Cluster::run(n_nodes, node_fn)
+    };
     Ok(reports.swap_remove(0).expect("rank 0 produces the report"))
+}
+
+/// World ranks flagged in `mask`, ascending.
+fn ranks_of(mask: &[bool]) -> Vec<u32> {
+    mask.iter().enumerate().filter_map(|(i, &b)| b.then_some(i as u32)).collect()
 }
 
 /// Root-only accounting and LB-instance state.
@@ -241,14 +294,42 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
     let n_nodes = topo.n_nodes;
     let ub = sh.app.unit_bytes();
     let steps_total = sh.driver.iters;
+    let plan = sh.driver.fault_plan.as_ref();
+    let fault_mode = plan.is_active();
+    if fault_mode {
+        // pipeline receives starve within the detection window instead
+        // of the 30 s default, so recovery starts promptly.
+        comm.set_patience(plan.detect_timeout());
+    }
+    let resize = &sh.driver.resize;
 
-    // ---- node-partitioned state.
+    // ---- membership state. `member` replays the resize schedule;
+    // `failed` accumulates the crash exclusions the epoch protocol
+    // declares. Both stay all-clear on a plain run, and every branch
+    // below is gated on them so the fault-free message sequence is
+    // bit-identical to the fault-unaware driver's.
+    let mut member: Vec<bool> = resize.initial_alive(n_nodes);
+    let mut failed: Vec<bool> = vec![false; n_nodes];
+    let mut i_am_in = member[rank as usize];
+
+    // ---- node-partitioned state. Ranks scheduled to join later start
+    // empty: every rank re-homes the initial mapping onto the initial
+    // membership identically (the sequential driver does the same).
     let mut obj_to_pe = sh.mapping0.clone();
+    if member.iter().any(|&m| !m) {
+        obj_to_pe = rehome_mapping(&obj_to_pe, &topo, &member);
+    }
     let mut node = sh.app.make_node(rank, &obj_to_pe);
     let mut moved_units: Vec<(u32, u32, u32)> = Vec::new();
     let mut work_pairs: Vec<(u32, f64)> = Vec::new();
     let mut meas_pairs: Vec<(u32, f64)> = Vec::new();
     let mut lb_round: u32 = 0;
+
+    // Root-held checkpoint custody (fault mode only): every rank's
+    // latest pre-pipeline payload, absorbed at the root when that rank
+    // dies — the victim takes no physics actions after checkpointing,
+    // so the absorbed state is exact.
+    let mut custody: Vec<Vec<u8>> = vec![Vec::new(); if fault_mode { n_nodes } else { 0 }];
 
     let mut root = (rank == 0).then(|| RootState {
         recorder: TrafficRecorder::new(n_objs),
@@ -268,137 +349,230 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
         // (schedule, step) the sequential driver evaluates, so every
         // root-side speed-dependent quantity matches it bit for bit.
         let eff_topo = sh.driver.speed_schedule.topo_at(&topo, step);
+        // Ranks stepping this iteration: current members not failed.
+        let alive: Vec<bool> = (0..n_nodes).map(|i| member[i] && !failed[i]).collect();
+        let n_active = alive.iter().filter(|&&b| b).count();
 
-        // ---- step my partition; crossers leave by message.
-        let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
-        moved_units.clear();
-        let push_s = node.step(step, &obj_to_pe, &mut outbox, &mut moved_units);
-        for (d, buf) in outbox.into_iter().enumerate() {
-            if d as u32 != rank {
-                comm.send(d as u32, TAG_STEP | smask, buf);
-            }
-        }
-        let arrivals = comm.recv_tagged(TAG_STEP | smask, n_nodes - 1, Comm::TIMEOUT);
-        assert_eq!(arrivals.len(), n_nodes - 1, "step {step}: payload exchange incomplete");
-        for m in &arrivals {
-            node.absorb(&m.data);
-        }
-
-        // ---- local work + measured-load attribution.
-        merge_units(&mut moved_units);
-        work_pairs.clear();
-        node.account(push_s, &mut work_pairs);
-
-        // ---- step accounting to root: step seconds, my per-object
-        // work units, my crossing counts per directed object pair.
-        let mut acct = Vec::new();
-        wire::put_f64(&mut acct, push_s);
-        wire::put_u32(&mut acct, work_pairs.len() as u32);
-        for &(c, w) in &work_pairs {
-            wire::put_u32(&mut acct, c);
-            wire::put_f64(&mut acct, w);
-        }
-        wire::put_u32(&mut acct, moved_units.len() as u32);
-        for &(f, t2, units) in &moved_units {
-            wire::put_u32(&mut acct, f);
-            wire::put_u32(&mut acct, t2);
-            wire::put_u32(&mut acct, units);
-        }
-
-        // ---- root: assemble the iteration record the way the
-        // sequential driver does, from exactly-matching aggregates.
         let mut rec = IterRecord::default();
-        if root.is_none() {
-            comm.send(0, TAG_ACCT | smask, acct);
-        } else if let Some(rs) = root.as_mut() {
-            let mut msgs = comm.recv_tagged(TAG_ACCT | smask, n_nodes - 1, Comm::TIMEOUT);
-            assert_eq!(msgs.len(), n_nodes - 1, "step {step}: accounting gather incomplete");
-            msgs.sort_by_key(|m| m.from);
-            let mut work_global = vec![0.0f64; n_objs];
-            let mut node_push = vec![0.0f64; n_nodes];
-            // merged directed crossing records in rank order, expanded
-            // back to per-crossing unit_bytes sums (left-to-right, like
-            // the sequential per-step aggregation).
-            let mut merged_moved: Vec<(u32, u32, f64)> = Vec::new();
-            for (from, data) in std::iter::once((0u32, acct.as_slice()))
-                .chain(msgs.iter().map(|m| (m.from, m.data.as_slice())))
-            {
-                let mut r = wire::Reader::new(data);
-                node_push[from as usize] = r.f64();
-                let nw = r.u32();
-                for _ in 0..nw {
-                    let c = r.u32();
-                    let w = r.f64();
-                    work_global[c as usize] += w;
-                }
-                let nm = r.u32();
-                for _ in 0..nm {
-                    let f = r.u32();
-                    let t2 = r.u32();
-                    let units = r.u32();
-                    let mut bytes = 0.0f64;
-                    for _ in 0..units {
-                        bytes += ub;
-                        rs.recorder.record(f, t2, ub);
-                    }
-                    merged_moved.push((f, t2, bytes));
+        if i_am_in {
+            // ---- step my partition; crossers leave by message.
+            let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
+            moved_units.clear();
+            let push_s = node.step(step, &obj_to_pe, &mut outbox, &mut moved_units);
+            for (d, buf) in outbox.into_iter().enumerate() {
+                if d as u32 != rank && alive[d] {
+                    comm.send(d as u32, TAG_STEP | smask, buf);
                 }
             }
-            rs.steps_since_lb += 1;
+            // Faults fire only at pipeline stage entries, and failures
+            // are resolved inside the LB round that saw them — so a
+            // step exchange that comes up short is a protocol bug, not
+            // a survivable fault.
+            let arrivals = comm
+                .recv_tagged(TAG_STEP | smask, n_active - 1, Comm::TIMEOUT)
+                .unwrap_or_else(|e| panic!("step {step}: payload exchange incomplete: {e}"));
+            for m in &arrivals {
+                node.absorb(&m.data);
+            }
 
-            let mut pe_work = vec![0.0f64; topo.n_pes()];
-            let mut node_work = vec![0.0f64; n_nodes];
-            for (o, &w) in work_global.iter().enumerate() {
-                let pe = obj_to_pe[o];
-                pe_work[pe as usize] += w;
-                node_work[topo.node_of_pe(pe) as usize] += w;
+            // ---- local work + measured-load attribution.
+            merge_units(&mut moved_units);
+            work_pairs.clear();
+            node.account(push_s, &mut work_pairs);
+
+            // ---- step accounting to root: step seconds, my per-object
+            // work units, my crossing counts per directed object pair.
+            let mut acct = Vec::new();
+            wire::put_f64(&mut acct, push_s);
+            wire::put_u32(&mut acct, work_pairs.len() as u32);
+            for &(c, w) in &work_pairs {
+                wire::put_u32(&mut acct, c);
+                wire::put_f64(&mut acct, w);
             }
-            account_step_comm(
-                &topo,
-                &obj_to_pe,
-                &sh.neighbor_pairs,
-                &merged_moved,
-                &mut rs.payload,
-                &mut rs.consumed,
-                &mut rs.tracker,
-            );
-            let comm_times = rs.tracker.comm_times(&sh.driver.net);
-            let pe_summary = Summary::of(&pe_work);
-            rec = IterRecord {
-                iter: step,
-                work_max_avg: pe_summary.max_avg_ratio(),
-                time_max_avg: time_imbalance(&pe_work, &eff_topo, &mut pe_time_buf),
-                node_work,
-                compute_max_s: node_push.iter().cloned().fold(0.0, f64::max),
-                compute_avg_s: node_push.iter().sum::<f64>() / n_nodes as f64,
-                comm_max_s: comm_times.iter().cloned().fold(0.0, f64::max),
-                comm_avg_s: comm_times.iter().sum::<f64>() / n_nodes as f64,
-                ..Default::default()
-            };
-            rs.last_work = work_global;
+            wire::put_u32(&mut acct, moved_units.len() as u32);
+            for &(f, t2, units) in &moved_units {
+                wire::put_u32(&mut acct, f);
+                wire::put_u32(&mut acct, t2);
+                wire::put_u32(&mut acct, units);
+            }
+
+            // ---- root: assemble the iteration record the way the
+            // sequential driver does, from exactly-matching aggregates.
+            if root.is_none() {
+                comm.send(0, TAG_ACCT | smask, acct);
+            } else if let Some(rs) = root.as_mut() {
+                let mut msgs = comm
+                    .recv_tagged(TAG_ACCT | smask, n_active - 1, Comm::TIMEOUT)
+                    .unwrap_or_else(|e| {
+                        panic!("step {step}: accounting gather incomplete: {e}")
+                    });
+                msgs.sort_by_key(|m| m.from);
+                let mut work_global = vec![0.0f64; n_objs];
+                let mut node_push = vec![0.0f64; n_nodes];
+                // merged directed crossing records in rank order,
+                // expanded back to per-crossing unit_bytes sums
+                // (left-to-right, like the sequential per-step
+                // aggregation).
+                let mut merged_moved: Vec<(u32, u32, f64)> = Vec::new();
+                for (from, data) in std::iter::once((0u32, acct.as_slice()))
+                    .chain(msgs.iter().map(|m| (m.from, m.data.as_slice())))
+                {
+                    let mut r = wire::Reader::new(data);
+                    node_push[from as usize] = r.f64();
+                    let nw = r.u32();
+                    for _ in 0..nw {
+                        let c = r.u32();
+                        let w = r.f64();
+                        work_global[c as usize] += w;
+                    }
+                    let nm = r.u32();
+                    for _ in 0..nm {
+                        let f = r.u32();
+                        let t2 = r.u32();
+                        let units = r.u32();
+                        let mut bytes = 0.0f64;
+                        for _ in 0..units {
+                            bytes += ub;
+                            rs.recorder.record(f, t2, ub);
+                        }
+                        merged_moved.push((f, t2, bytes));
+                    }
+                }
+                rs.steps_since_lb += 1;
+
+                let mut pe_work = vec![0.0f64; topo.n_pes()];
+                let mut node_work = vec![0.0f64; n_nodes];
+                for (o, &w) in work_global.iter().enumerate() {
+                    let pe = obj_to_pe[o];
+                    pe_work[pe as usize] += w;
+                    node_work[topo.node_of_pe(pe) as usize] += w;
+                }
+                account_step_comm(
+                    &topo,
+                    &obj_to_pe,
+                    &sh.neighbor_pairs,
+                    &merged_moved,
+                    &mut rs.payload,
+                    &mut rs.consumed,
+                    &mut rs.tracker,
+                );
+                let comm_times = rs.tracker.comm_times(&sh.driver.net);
+                let pe_summary = Summary::of(&pe_work);
+                rec = IterRecord {
+                    iter: step,
+                    work_max_avg: pe_summary.max_avg_ratio(),
+                    time_max_avg: time_imbalance(&pe_work, &eff_topo, &mut pe_time_buf),
+                    node_work,
+                    compute_max_s: node_push.iter().cloned().fold(0.0, f64::max),
+                    compute_avg_s: node_push.iter().sum::<f64>() / n_nodes as f64,
+                    comm_max_s: comm_times.iter().cloned().fold(0.0, f64::max),
+                    comm_avg_s: comm_times.iter().sum::<f64>() / n_nodes as f64,
+                    ..Default::default()
+                };
+                rs.last_work = work_global;
+            }
         }
 
         // ---- LB round.
         if sh.driver.lb_period > 0 && (step + 1) % sh.driver.lb_period == 0 {
             let rmask = lb_round & 0x00FF_FFFF;
-            // gather measured loads at root (deterministic mode ignores
-            // them but the gather keeps the protocol uniform).
-            meas_pairs.clear();
-            node.drain_measured(&mut meas_pairs);
-            if rank != 0 {
-                let mut lbuf = Vec::new();
-                wire::put_u32(&mut lbuf, meas_pairs.len() as u32);
-                for &(c, l) in &meas_pairs {
-                    wire::put_u32(&mut lbuf, c);
-                    wire::put_f64(&mut lbuf, l);
-                }
-                comm.send(0, TAG_LBC | rmask, lbuf);
+            // Scheduled membership after this round's resize events;
+            // the pipeline participants are its non-failed ranks.
+            let sched = resize.alive_after(lb_round as usize, n_nodes);
+            let target_mask: Vec<bool> =
+                (0..n_nodes).map(|i| sched[i] && !failed[i]).collect();
+            let target_ranks = ranks_of(&target_mask);
+
+            if !i_am_in && !target_mask[rank as usize] {
+                // bystander: not in yet, not joining this round — just
+                // replay the schedule and keep idling.
+                member.copy_from_slice(&sched);
+                lb_round += 1;
+                continue;
             }
+            let joined_now = !i_am_in;
+
+            if i_am_in {
+                // gather measured loads at root (deterministic mode
+                // ignores them but the gather keeps the protocol
+                // uniform).
+                meas_pairs.clear();
+                node.drain_measured(&mut meas_pairs);
+                if rank != 0 {
+                    let mut lbuf = Vec::new();
+                    wire::put_u32(&mut lbuf, meas_pairs.len() as u32);
+                    for &(c, l) in &meas_pairs {
+                        wire::put_u32(&mut lbuf, c);
+                        wire::put_f64(&mut lbuf, l);
+                    }
+                    comm.send(0, TAG_LBC | rmask, lbuf);
+                }
+                if fault_mode {
+                    // pre-pipeline checkpoint: the state the root
+                    // absorbs on my behalf if I die this round.
+                    let mut ck = Vec::new();
+                    node.checkpoint(&mut ck);
+                    if rank == 0 {
+                        custody[0] = ck;
+                    } else {
+                        comm.send(0, TAG_CKPT | rmask, ck);
+                    }
+                }
+            }
+
+            if i_am_in && !target_mask[rank as usize] {
+                // ---- scheduled leave: the pipeline runs without me.
+                // The root hands me the final world mapping
+                // (ctrl-tagged, so epoch bumps I never saw cannot
+                // strand it); I ship my whole partition to its new
+                // owners and retire without a FIN — my payload now
+                // lives elsewhere.
+                let msg = comm
+                    .recv_tagged(epoch::map_tag(lb_round), 1, Comm::TIMEOUT)
+                    .unwrap_or_else(|e| {
+                        panic!("LB {lb_round}: no mapping handoff for leaver {rank}: {e}")
+                    })
+                    .pop()
+                    .expect("mapping handoff");
+                let mut r = wire::Reader::new(&msg.data);
+                let ep = r.u32();
+                let nf = r.u32();
+                for _ in 0..nf {
+                    failed[r.u32() as usize] = true;
+                }
+                let mut new_map = Vec::with_capacity(n_objs);
+                for _ in 0..n_objs {
+                    new_map.push(r.u32());
+                }
+                // adopt the current epoch so the transfers below are
+                // not stale-dropped by survivors ahead of me.
+                comm.set_epoch(ep);
+                let old_map = std::mem::replace(&mut obj_to_pe, new_map);
+                let mut sends_to = vec![false; n_nodes];
+                for c in 0..n_objs {
+                    if topo.node_of_pe(old_map[c]) == rank {
+                        sends_to[topo.node_of_pe(obj_to_pe[c]) as usize] = true;
+                    }
+                }
+                let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
+                node.emigrate(&old_map, &obj_to_pe, &mut outbox);
+                for (d, buf) in outbox.into_iter().enumerate() {
+                    if sends_to[d] {
+                        comm.send(d as u32, TAG_MIG | rmask, buf);
+                    }
+                }
+                return None;
+            }
+
             let t_lb = Instant::now();
             let inst = if let Some(rs) = root.as_mut() {
-                // full measured-load vector
-                let msgs = comm.recv_tagged(TAG_LBC | rmask, n_nodes - 1, Comm::TIMEOUT);
-                assert_eq!(msgs.len(), n_nodes - 1, "LB {lb_round}: load gather incomplete");
+                // full measured-load vector, gathered from every rank
+                // that stepped this iteration (leavers included).
+                let msgs = comm
+                    .recv_tagged(TAG_LBC | rmask, n_active - 1, Comm::TIMEOUT)
+                    .unwrap_or_else(|e| {
+                        panic!("LB {lb_round}: load gather incomplete: {e}")
+                    });
                 let mut full_loads = vec![0.0f64; n_objs];
                 for &(c, l) in &meas_pairs {
                     full_loads[c as usize] += l;
@@ -409,6 +583,18 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                     for _ in 0..nz {
                         let c = r.u32();
                         full_loads[c as usize] += r.f64();
+                    }
+                }
+                if fault_mode {
+                    // refresh the checkpoint custody before any fault
+                    // of this round can fire.
+                    let cks = comm
+                        .recv_tagged(TAG_CKPT | rmask, n_active - 1, Comm::TIMEOUT)
+                        .unwrap_or_else(|e| {
+                            panic!("LB {lb_round}: checkpoint gather incomplete: {e}")
+                        });
+                    for m in cks {
+                        custody[m.from as usize] = m.data;
                     }
                 }
                 // the one shared instance-assembly sequence — identical
@@ -427,27 +613,71 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                     // the sequential driver overwrites the same way
                     inst.loads = rs.last_work.clone();
                 }
-                if sh.driver.speed_schedule.is_active() {
-                    // perturbed speeds travel inside the .lbi broadcast,
-                    // so every node balances the same effective topology
-                    inst.topo = eff_topo.clone();
+                if sh.driver.speed_schedule.is_active() || resize.is_active() {
+                    // perturbed / drain-scaled speeds travel inside the
+                    // .lbi broadcast, so every node balances the same
+                    // effective topology (the sequential driver applies
+                    // the identical override).
+                    inst.topo = if resize.is_active() {
+                        resize.drained_topo(&eff_topo, lb_round as usize)
+                    } else {
+                        eff_topo.clone()
+                    };
                 }
-                // broadcast; then parse our own broadcast so every node
-                // provably balances the identical instance.
+                // broadcast to the pipeline participants (joiners
+                // included, leavers not); then parse our own broadcast
+                // so every node provably balances the identical
+                // instance.
                 let text = inst.to_lbi();
-                for p in 1..n_nodes as u32 {
-                    comm.send(p, TAG_LBX | rmask, text.clone().into_bytes());
+                for &p in &target_ranks {
+                    if p != 0 {
+                        comm.send(p, TAG_LBX | rmask, text.clone().into_bytes());
+                    }
                 }
                 // parse our own broadcast: what we balance is provably
                 // what everyone else parsed (the format is lossless —
                 // Rust float formatting round-trips exactly).
                 Instance::from_lbi(&text).expect("lbi round-trip failed")
             } else {
-                let msgs = comm.recv_tagged(TAG_LBX | rmask, 1, Comm::TIMEOUT);
-                assert_eq!(msgs.len(), 1, "LB {lb_round}: instance broadcast missing");
-                let text = std::str::from_utf8(&msgs[0].data).expect("lbi not utf-8");
+                let data = if joined_now {
+                    // ---- joining this round: epochs may have moved
+                    // while I idled, so alternate between draining
+                    // parked epoch declarations and polling for the
+                    // broadcast.
+                    let deadline = Instant::now() + Comm::TIMEOUT;
+                    loop {
+                        if epoch::catch_up(comm, &mut failed) {
+                            return None; // declared dead while idle
+                        }
+                        match comm.recv_tagged(TAG_LBX | rmask, 1, JOIN_POLL) {
+                            Ok(mut v) => break v.pop().expect("lbx broadcast").data,
+                            Err(e) => {
+                                if Instant::now() >= deadline {
+                                    panic!(
+                                        "join {lb_round}: instance broadcast missing: {e}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    comm.recv_tagged(TAG_LBX | rmask, 1, Comm::TIMEOUT)
+                        .unwrap_or_else(|e| {
+                            panic!("LB {lb_round}: instance broadcast missing: {e}")
+                        })
+                        .pop()
+                        .expect("lbx broadcast")
+                        .data
+                };
+                let text = std::str::from_utf8(&data).expect("lbi not utf-8");
                 Instance::from_lbi(text).expect("lbi parse failed")
             };
+            if joined_now {
+                // the broadcast instance carries the current world
+                // mapping — adopt it and enter as a full participant.
+                obj_to_pe.clone_from(&inst.mapping);
+                i_am_in = true;
+            }
 
             // ---- the full distributed pipeline, inline on this comm.
             // Every node derives the candidate lists from its own parsed
@@ -456,19 +686,122 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
             // computes its own candidate view, and there is no shared
             // memory to hand rows around (the strategy-only path,
             // run_pipeline, does share them via Arc).
-            let cands = build_candidates(&inst, sh.variant, &sh.params);
-            let outcome =
-                node_pipeline(comm, &inst, &cands[rank as usize], sh.variant, &sh.params);
+            let failed_at_entry = failed.clone();
+            let new_map: Vec<u32> = if target_ranks.len() == n_nodes && !fault_mode {
+                // the plain path: no groups, no restriction, no epoch
+                // traffic — bit-identical to the fault-unaware driver.
+                let cands = build_candidates(&inst, sh.variant, &sh.params);
+                node_pipeline(comm, &inst, &cands[rank as usize], sh.variant, &sh.params)
+                    .unwrap_or_else(|e| {
+                        panic!("LB {lb_round}: pipeline failed without a fault plan: {e}")
+                    })
+                    .full_mapping
+            } else {
+                if fault_mode {
+                    // activate this round's partition cuts only now:
+                    // the instance broadcast above must never be
+                    // severed (a cut victim is excluded inside the
+                    // pipeline instead).
+                    comm.set_fault_round(u64::from(lb_round));
+                }
+                let mut ctx = FaultCtx::new(plan, lb_round);
+                loop {
+                    let alive_now: Vec<bool> =
+                        (0..n_nodes).map(|i| target_mask[i] && !failed[i]).collect();
+                    let r = restrict_instance(&inst, &alive_now);
+                    let cands = build_candidates(&r.inst, sh.variant, &sh.params);
+                    let me = r
+                        .nodes
+                        .iter()
+                        .position(|&w| w == rank)
+                        .expect("participant missing from its own restriction");
+                    comm.enter_group(&r.nodes);
+                    let res = if fault_mode {
+                        epoch::staged_pipeline(
+                            comm,
+                            &r.inst,
+                            &cands[me],
+                            sh.variant,
+                            &sh.params,
+                            &mut ctx,
+                            &mut failed,
+                        )
+                    } else {
+                        node_pipeline(comm, &r.inst, &cands[me], sh.variant, &sh.params)
+                            .map(Some)
+                    };
+                    comm.leave_group();
+                    match res {
+                        Ok(Some(out)) => break r.expand_mapping(&out.full_mapping),
+                        // my own scheduled kill fired, or I hung past
+                        // my exclusion: exit dead, shipping nothing —
+                        // the root holds my checkpoint.
+                        Ok(None) => return None,
+                        Err(_) if fault_mode => {
+                            match epoch::recover(comm, plan, &target_ranks, &mut failed) {
+                                Membership::Member => {} // retry on the survivors
+                                Membership::Excluded => return None,
+                            }
+                        }
+                        Err(e) => panic!(
+                            "LB {lb_round}: pipeline failed without a fault plan: {e}"
+                        ),
+                    }
+                }
+            };
             let strat_s = t_lb.elapsed().as_secs_f64();
-            let old_map = std::mem::replace(&mut obj_to_pe, outcome.full_mapping);
+            let old_map = std::mem::replace(&mut obj_to_pe, new_map);
+
+            // ---- hand the final world mapping to scheduled leavers,
+            // together with the epoch and failed set they sat out.
+            if rank == 0 {
+                let leavers: Vec<u32> = (0..n_nodes)
+                    .filter(|&d| member[d] && !target_mask[d] && !failed[d])
+                    .map(|d| d as u32)
+                    .collect();
+                if !leavers.is_empty() {
+                    let mut buf = Vec::new();
+                    wire::put_u32(&mut buf, comm.epoch());
+                    let fl = ranks_of(&failed);
+                    wire::put_u32(&mut buf, fl.len() as u32);
+                    for &f in &fl {
+                        wire::put_u32(&mut buf, f);
+                    }
+                    for &pe in &obj_to_pe {
+                        wire::put_u32(&mut buf, pe);
+                    }
+                    for d in leavers {
+                        comm.send(d, epoch::map_tag(lb_round), buf.clone());
+                    }
+                }
+            }
+
+            // ---- root: absorb the checkpointed payload of ranks that
+            // died this round — their custody copy is the authoritative
+            // state (victims act on nothing after checkpointing), and
+            // emigrate below routes it by the new mapping.
+            if rank == 0 && fault_mode {
+                for f in 0..n_nodes {
+                    if failed[f] && !failed_at_entry[f] {
+                        let data = std::mem::take(&mut custody[f]);
+                        node.absorb(&data);
+                    }
+                }
+            }
 
             // ---- realize migrations: ship my payload whose objects
             // now live elsewhere; receive my new objects' payload.
+            // Leavers ship their whole partition (above), joiners only
+            // receive; objects whose old owner died this round are
+            // re-routed from the root, which absorbed their payload.
             let migtag = TAG_MIG | rmask;
             let mut sends_to = vec![false; n_nodes];
             let mut recv_from = vec![false; n_nodes];
             for c in 0..n_objs {
-                let old_n = topo.node_of_pe(old_map[c]);
+                let mut old_n = topo.node_of_pe(old_map[c]);
+                if failed[old_n as usize] {
+                    old_n = 0;
+                }
                 let new_n = topo.node_of_pe(obj_to_pe[c]);
                 if old_n == new_n {
                     continue;
@@ -488,8 +821,11 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                 }
             }
             let expect = recv_from.iter().filter(|&&b| b).count();
-            let migs = comm.recv_tagged(migtag, expect, Comm::TIMEOUT);
-            assert_eq!(migs.len(), expect, "LB {lb_round}: migration transfer incomplete");
+            let migs = comm
+                .recv_tagged(migtag, expect, Comm::TIMEOUT)
+                .unwrap_or_else(|e| {
+                    panic!("LB {lb_round}: migration transfer incomplete: {e}")
+                });
             for m in &migs {
                 node.absorb(&m.data);
             }
@@ -512,6 +848,8 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                 rec.migrations = migrations;
                 rs.report.total_migrations += migrations;
             }
+            // adopt the scheduled membership for the following steps.
+            member.copy_from_slice(&sched);
             lb_round += 1;
         }
 
@@ -532,21 +870,28 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
         }
     }
 
-    // ---- final verification: gather per-node payloads at root.
+    // ---- final verification: gather per-node payloads at root, from
+    // the end-of-run membership only (leavers shipped their payload
+    // before retiring, the failed are represented by root custody).
     let mut fin = Vec::new();
     node.final_payload(&mut fin);
     if rank != 0 {
-        comm.send(0, TAG_FIN, fin);
+        if member[rank as usize] && !failed[rank as usize] {
+            comm.send(0, TAG_FIN, fin);
+        }
         return None;
     }
     let mut rs = root.take().expect("root state");
-    let mut finals = Vec::with_capacity(n_nodes);
+    let expect = (1..n_nodes).filter(|&i| member[i] && !failed[i]).count();
+    let mut finals = Vec::with_capacity(expect + 1);
     finals.push(fin);
-    let msgs = comm.recv_tagged(TAG_FIN, n_nodes - 1, Comm::TIMEOUT);
-    assert_eq!(msgs.len(), n_nodes - 1, "final gather incomplete");
+    let msgs = comm
+        .recv_tagged(TAG_FIN, expect, Comm::TIMEOUT)
+        .unwrap_or_else(|e| panic!("final gather incomplete: {e}"));
     for m in msgs {
         finals.push(m.data);
     }
+    rs.report.final_mapping = obj_to_pe;
     rs.report.verified = sh.app.verify(steps_total, &finals);
     Some(rs.report)
 }
@@ -832,6 +1177,13 @@ impl DistNode for PicNode {
             wire::put_u32(out, p.id);
             wire::put_f64(out, p.x);
             wire::put_f64(out, p.y);
+        }
+    }
+
+    fn checkpoint(&self, out: &mut Vec<u8>) {
+        out.reserve(self.parts.len() * 44);
+        for p in &self.parts {
+            put_particle(out, p);
         }
     }
 }

@@ -1,0 +1,527 @@
+//! Failure detection and pipeline restart: the membership-epoch
+//! protocol that turns a mid-pipeline [`CommError`] into a quorum
+//! restart on the surviving ranks instead of an aborted run.
+//!
+//! Rank 0 is the failure coordinator (leader election is out of scope —
+//! [`FaultPlan::validate`] rejects plans that target it, matching the
+//! stable-LB-root assumption of the paper's runtime). The protocol is a
+//! standard probe/declare/ack cycle over the control namespace
+//! ([`CTRL_NS`] tags bypass epoch filtering, so recovery traffic is
+//! deliverable from any epoch):
+//!
+//! 1. **Probe** — the coordinator pings every rank of the failed
+//!    pipeline group. A healthy rank is either already in its own
+//!    recovery loop (its stage receive errored too — the pipeline is
+//!    globally synchronized, so one silent rank starves everyone within
+//!    a patience window) and answers `PONG`, or its spontaneous `FAULT`
+//!    report is already parked in the coordinator's pending buffer.
+//!    Ranks silent for the whole probe window are declared failed.
+//! 2. **Declare** — the coordinator bumps the epoch and broadcasts
+//!    `EPOCH {epoch, failed set}` to every world rank (best effort:
+//!    sends to dead endpoints are dropped, sends across a partition are
+//!    cut). Stamping the *cumulative* failed set makes declarations
+//!    self-contained: a rank that slept through three epochs catches up
+//!    from the newest one alone.
+//! 3. **Ack** — surviving group members adopt the epoch (draining their
+//!    pending buffers of pre-fault traffic — see [`Comm::set_epoch`])
+//!    and ack. A survivor dying *between* probe and ack re-enters the
+//!    cycle; an isolated rank (partition minority) never hears the
+//!    declaration and exits after a bounded wait.
+//!
+//! [`staged_pipeline`] wraps the plain
+//! [`node_pipeline`](super::node_pipeline) with [`FaultPlan`] injection
+//! gates at each stage entry; the fault-free driver path never calls it,
+//! so inactive plans keep the bit-identical pipeline untouched.
+
+use std::time::{Duration, Instant};
+
+use crate::model::Instance;
+use crate::simnet::fault::{FaultKind, FaultPlan, StagePoint};
+use crate::simnet::network::{Comm, CommError, CTRL_NS};
+use crate::simnet::protocol;
+use crate::strategies::diffusion::Variant;
+use crate::strategies::StrategyParams;
+
+use super::{node_load, stage2, stage3, wire, NodeOutcome, TAG_HANDSHAKE, TAG_STAGE2, TAG_STAGE3};
+
+/// Control-message kinds (low byte of a [`CTRL_NS`] tag).
+const CT_PING: u32 = 1;
+const CT_PONG: u32 = 2;
+const CT_FAULT: u32 = 3;
+const CT_EPOCH: u32 = 4;
+const CT_EPOCH_ACK: u32 = 5;
+const CT_MAP: u32 = 6;
+
+const fn ctrl(kind: u32) -> u32 {
+    CTRL_NS | kind
+}
+
+const fn kind_of(tag: u32) -> u32 {
+    tag & 0xFF
+}
+
+/// The tag carrying the final world mapping to a scheduled leaver after
+/// LB round `lb_round` — control-namespace so the leaver (which did not
+/// participate in the round's pipeline and may be an epoch behind)
+/// still receives it.
+pub(crate) fn map_tag(lb_round: u32) -> u32 {
+    CTRL_NS | ((lb_round & 0xFFFF) << 8) | CT_MAP
+}
+
+/// Whether a control message is a final-mapping handoff ([`map_tag`]).
+pub(crate) fn is_map(tag: u32) -> bool {
+    kind_of(tag) == CT_MAP
+}
+
+/// Whether a control message is an epoch declaration.
+pub(crate) fn is_epoch(tag: u32) -> bool {
+    kind_of(tag) == CT_EPOCH
+}
+
+/// Encode an epoch declaration: `epoch`, then the cumulative failed
+/// set as a counted list of world ranks.
+pub(crate) fn encode_epoch(epoch: u32, failed: &[bool]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + failed.len() * 4);
+    wire::put_u32(&mut buf, epoch);
+    let n = failed.iter().filter(|&&f| f).count();
+    wire::put_u32(&mut buf, n as u32);
+    for (r, &f) in failed.iter().enumerate() {
+        if f {
+            wire::put_u32(&mut buf, r as u32);
+        }
+    }
+    buf
+}
+
+/// Decode [`encode_epoch`]: `(epoch, failed world ranks)`.
+pub(crate) fn parse_epoch(data: &[u8]) -> (u32, Vec<u32>) {
+    let mut r = wire::Reader::new(data);
+    let epoch = r.u32();
+    let n = r.u32();
+    let mut ranks = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        ranks.push(r.u32());
+    }
+    (epoch, ranks)
+}
+
+/// What the recovery cycle decided about this rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Membership {
+    /// Part of the new epoch: retry the interrupted stage on the
+    /// surviving group.
+    Member,
+    /// Declared failed or isolated from the coordinator: exit dead.
+    Excluded,
+}
+
+/// Run one probe/declare/ack recovery cycle after a pipeline
+/// [`CommError`]. `participants` are the world ranks of the pipeline
+/// group that just failed; `failed` is the caller's cumulative failed
+/// set, updated in place. On [`Membership::Member`] the endpoint's
+/// epoch has advanced and its pending buffer holds no pre-fault
+/// traffic. Panics if the survivors would lose quorum — there is no
+/// meaningful way to continue the run.
+pub(crate) fn recover(
+    comm: &mut Comm,
+    plan: &FaultPlan,
+    participants: &[u32],
+    failed: &mut [bool],
+) -> Membership {
+    comm.leave_group();
+    let detect = plan.detect_timeout();
+    if comm.world_rank() == 0 {
+        recover_root(comm, detect, participants, failed)
+    } else {
+        recover_follower(comm, detect, failed)
+    }
+}
+
+fn recover_root(
+    comm: &mut Comm,
+    detect: Duration,
+    participants: &[u32],
+    failed: &mut [bool],
+) -> Membership {
+    let world_n = comm.world_n();
+    loop {
+        // ---- probe the current pipeline group.
+        let expect: Vec<u32> = participants
+            .iter()
+            .copied()
+            .filter(|&p| p != 0 && !failed[p as usize])
+            .collect();
+        for &p in &expect {
+            comm.send(p, ctrl(CT_PING), Vec::new());
+        }
+        let mut alive = vec![false; world_n];
+        let mut n_alive = 0usize;
+        let deadline = Instant::now() + 3 * detect;
+        while n_alive < expect.len() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let Ok(m) = comm.recv_ctrl(left) else { break };
+            let k = kind_of(m.tag);
+            if (k == CT_PONG || k == CT_FAULT)
+                && expect.contains(&m.from)
+                && !alive[m.from as usize]
+            {
+                alive[m.from as usize] = true;
+                n_alive += 1;
+            }
+            // stale acks from an earlier cycle and duplicate fault
+            // reports fall through harmlessly.
+        }
+        for &p in &expect {
+            if !alive[p as usize] {
+                failed[p as usize] = true;
+            }
+        }
+        let n_failed = failed.iter().filter(|&&f| f).count();
+        assert!(
+            2 * (world_n - n_failed) > world_n,
+            "quorum lost: {n_failed} of {world_n} ranks failed"
+        );
+
+        // ---- declare the new epoch. Best-effort to every world rank:
+        // dead endpoints drop the send, partitioned ones never see it,
+        // and excluded-but-alive ranks (hang victims) learn their fate
+        // from the failed set on waking.
+        let target = comm.epoch() + 1;
+        let decl = encode_epoch(target, failed);
+        for r in 1..world_n as u32 {
+            comm.send(r, ctrl(CT_EPOCH), decl.clone());
+        }
+        comm.set_epoch(target);
+
+        // ---- collect acks from the surviving group members.
+        let ackers: Vec<u32> =
+            expect.iter().copied().filter(|&p| !failed[p as usize]).collect();
+        let mut acked = vec![false; world_n];
+        let mut n_acked = 0usize;
+        let deadline = Instant::now() + 3 * detect;
+        while n_acked < ackers.len() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let Ok(m) = comm.recv_ctrl(left) else { break };
+            if kind_of(m.tag) == CT_EPOCH_ACK {
+                let mut r = wire::Reader::new(&m.data);
+                if r.u32() == target
+                    && ackers.contains(&m.from)
+                    && !acked[m.from as usize]
+                {
+                    acked[m.from as usize] = true;
+                    n_acked += 1;
+                }
+            }
+        }
+        if n_acked == ackers.len() {
+            return Membership::Member;
+        }
+        // a survivor died between probe and ack: run another cycle.
+    }
+}
+
+fn recover_follower(comm: &mut Comm, detect: Duration, failed: &mut [bool]) -> Membership {
+    // Report the fault we observed; if the coordinator is still healthy
+    // and mid-pipeline, this parks in its pending buffer until its own
+    // receive errors.
+    comm.send(0, ctrl(CT_FAULT), Vec::new());
+    let me = comm.world_rank() as usize;
+    let mut deadline = Instant::now() + 8 * detect;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            // Never heard a declaration: we are on the wrong side of a
+            // partition (or were excluded in an epoch whose declaration
+            // was cut). Exit dead rather than block the survivors.
+            return Membership::Excluded;
+        }
+        let Ok(m) = comm.recv_ctrl(left.min(detect)) else { continue };
+        match kind_of(m.tag) {
+            CT_PING => {
+                comm.send(0, ctrl(CT_PONG), Vec::new());
+                // an active coordinator is still cycling: keep waiting.
+                deadline = Instant::now() + 8 * detect;
+            }
+            CT_EPOCH => {
+                let (epoch, flist) = parse_epoch(&m.data);
+                if epoch <= comm.epoch() {
+                    continue; // stale declaration from a cycle we saw
+                }
+                for r in flist {
+                    failed[r as usize] = true;
+                }
+                if failed[me] {
+                    return Membership::Excluded;
+                }
+                comm.set_epoch(epoch);
+                let mut ack = Vec::new();
+                wire::put_u32(&mut ack, epoch);
+                comm.send(0, ctrl(CT_EPOCH_ACK), ack);
+                return Membership::Member;
+            }
+            _ => {} // PONG/ACK echoes and early MAP handoffs: not ours
+        }
+    }
+}
+
+/// Adopt any epoch declarations that arrived while this rank was busy
+/// (sleeping through a hang, or idle before a scheduled join): merge
+/// their failed sets and jump to the newest epoch. Returns `true` if
+/// this rank is now excluded. Non-epoch control traffic drained on the
+/// way (stale probes) is dropped — an unanswered probe just reads as
+/// "still silent", which is the truth.
+pub(crate) fn catch_up(comm: &mut Comm, failed: &mut [bool]) -> bool {
+    let mut newest = comm.epoch();
+    for m in comm.drain_ctrl() {
+        if is_epoch(m.tag) {
+            let (epoch, flist) = parse_epoch(&m.data);
+            for r in flist {
+                failed[r as usize] = true;
+            }
+            newest = newest.max(epoch);
+        }
+    }
+    if newest > comm.epoch() {
+        comm.set_epoch(newest);
+    }
+    failed[comm.world_rank() as usize]
+}
+
+/// Per-round fault-injection context for [`staged_pipeline`].
+pub(crate) struct FaultCtx<'a> {
+    pub plan: &'a FaultPlan,
+    pub lb_round: u32,
+    /// Whether this round's scheduled event already fired — a pipeline
+    /// retry after recovery must not replay it (a hang victim that
+    /// survived exclusion would otherwise starve every retry).
+    pub fired: bool,
+}
+
+impl FaultCtx<'_> {
+    pub fn new(plan: &FaultPlan, lb_round: u32) -> FaultCtx<'_> {
+        FaultCtx { plan, lb_round, fired: false }
+    }
+}
+
+/// Execute this rank's scheduled fault at a stage entry, if any.
+/// Returns `false` when the rank must exit dead (killed, or hung past
+/// its exclusion).
+fn fault_gate(comm: &mut Comm, ctx: &mut FaultCtx, stage: StagePoint, failed: &mut [bool]) -> bool {
+    if ctx.fired {
+        return true;
+    }
+    let me = comm.world_rank();
+    let Some(ev) = ctx.plan.my_fault(me, ctx.lb_round) else { return true };
+    if ev.stage != stage {
+        return true;
+    }
+    ctx.fired = true;
+    match ev.kind {
+        FaultKind::Kill => false,
+        FaultKind::Delay => {
+            std::thread::sleep(Duration::from_millis(ctx.plan.delay_ms));
+            true
+        }
+        FaultKind::Hang => {
+            std::thread::sleep(Duration::from_millis(ctx.plan.hang_ms));
+            // The cluster moved on while we slept; if it excluded us the
+            // declaration names us. If detection somehow hasn't finished
+            // yet, continue — our next receive errors and we rejoin the
+            // recovery cycle as an ordinary follower.
+            !catch_up(comm, failed)
+        }
+    }
+}
+
+/// [`node_pipeline`](super::node_pipeline) with fault-injection gates at
+/// each stage entry, run on the current (possibly narrowed) group
+/// against the restricted instance. `Ok(None)` means this rank's
+/// scheduled death fired (the caller exits the node thread); `Err`
+/// means a *peer's* failure starved a stage (the caller runs
+/// [`recover`] and retries on the survivors).
+pub(crate) fn staged_pipeline(
+    comm: &mut Comm,
+    inst: &Instance,
+    my_cands: &[u32],
+    variant: Variant,
+    params: &StrategyParams,
+    ctx: &mut FaultCtx<'_>,
+    failed: &mut [bool],
+) -> Result<Option<NodeOutcome>, CommError> {
+    if !fault_gate(comm, ctx, StagePoint::Handshake, failed) {
+        return Ok(None);
+    }
+    let adj = protocol::handshake_node(
+        comm,
+        my_cands,
+        params.neighbor_count,
+        params.handshake_max_rounds,
+        TAG_HANDSHAKE,
+    )?;
+    let my_load = node_load(inst, comm.rank);
+    if !fault_gate(comm, ctx, StagePoint::VirtualLb, failed) {
+        return Ok(None);
+    }
+    let s2 = stage2::virtual_balance_node(
+        comm,
+        &adj,
+        my_load,
+        params.vlb_tolerance,
+        params.vlb_max_iters,
+        TAG_STAGE2,
+    )?;
+    if !fault_gate(comm, ctx, StagePoint::Selection, failed) {
+        return Ok(None);
+    }
+    let s3 = stage3::select_and_refine_node(
+        comm,
+        inst,
+        variant,
+        &s2.flow_row,
+        params.overfill,
+        params.refine_tolerance,
+        TAG_STAGE3,
+    )?;
+    Ok(Some(NodeOutcome {
+        adj,
+        flow_row: s2.flow_row,
+        iterations: s2.iterations,
+        manifest: s3.manifest,
+        migrations: s3.migrations,
+        recv_bytes: s3.recv_bytes,
+        full_mapping: s3.full_mapping,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::network::Cluster;
+
+    #[test]
+    fn recovery_excludes_the_silent_rank_and_advances_the_epoch() {
+        let plan = {
+            let mut p = FaultPlan::none();
+            p.detect_ms = 100;
+            p
+        };
+        let results = Cluster::run(3, move |rank, mut comm| {
+            if rank == 2 {
+                return None; // dies before answering any probe
+            }
+            let mut failed = vec![false; 3];
+            let m = recover(&mut comm, &plan, &[0, 1, 2], &mut failed);
+            Some((m, comm.epoch(), failed))
+        });
+        let (m0, e0, f0) = results[0].clone().expect("root result");
+        let (m1, e1, f1) = results[1].clone().expect("follower result");
+        assert_eq!(m0, Membership::Member);
+        assert_eq!(m1, Membership::Member);
+        assert_eq!((e0, e1), (1, 1));
+        assert_eq!(f0, vec![false, false, true]);
+        assert_eq!(f1, vec![false, false, true]);
+    }
+
+    #[test]
+    fn isolated_follower_gives_up_as_excluded() {
+        // No coordinator ever answers: the follower must bound its wait
+        // and exit dead instead of blocking the cluster teardown.
+        let plan = {
+            let mut p = FaultPlan::none();
+            p.detect_ms = 30;
+            p
+        };
+        let results = Cluster::run(2, move |rank, mut comm| {
+            if rank == 0 {
+                // absorb nothing; just outlive the follower's window
+                std::thread::sleep(Duration::from_millis(400));
+                return None;
+            }
+            let mut failed = vec![false; 2];
+            Some(recover(&mut comm, &plan, &[0, 1], &mut failed))
+        });
+        assert_eq!(results[1], Some(Membership::Excluded));
+    }
+
+    #[test]
+    fn staged_pipeline_kill_dies_and_starves_the_peer() {
+        let inst = crate::apps::stencil::stencil_2d(
+            8,
+            2,
+            1,
+            crate::apps::stencil::Decomposition::Tiled,
+        );
+        let plan = FaultPlan::parse("kill:1@0:s1").expect("plan");
+        let shared = std::sync::Arc::new((inst, plan));
+        let results = Cluster::run(2, move |rank, mut comm| {
+            let (inst, plan) = &*shared;
+            comm.set_patience(Duration::from_millis(100));
+            let params = StrategyParams::default();
+            let cands = super::super::build_candidates(inst, Variant::Communication, &params);
+            let mut ctx = FaultCtx::new(plan, 0);
+            let mut failed = vec![false; 2];
+            let out = staged_pipeline(
+                &mut comm,
+                inst,
+                &cands[rank as usize],
+                Variant::Communication,
+                &params,
+                &mut ctx,
+                &mut failed,
+            );
+            match out {
+                Ok(Some(_)) => "completed",
+                Ok(None) => "died",
+                Err(_) => "starved",
+            }
+        });
+        assert_eq!(results, vec!["starved", "died"]);
+    }
+
+    #[test]
+    fn staged_pipeline_delay_is_invisible_to_the_outcome() {
+        let inst = crate::apps::stencil::stencil_2d(
+            8,
+            2,
+            2,
+            crate::apps::stencil::Decomposition::Tiled,
+        );
+        let baseline = super::super::run_pipeline(
+            &inst,
+            Variant::Communication,
+            StrategyParams::default(),
+        )
+        .assignment
+        .mapping;
+        let plan = FaultPlan::parse("delay:1@0:s2").expect("plan");
+        let shared = std::sync::Arc::new((inst, plan));
+        let mappings = Cluster::run(4, move |rank, mut comm| {
+            let (inst, plan) = &*shared;
+            let params = StrategyParams::default();
+            let cands = super::super::build_candidates(inst, Variant::Communication, &params);
+            let mut ctx = FaultCtx::new(plan, 0);
+            let mut failed = vec![false; 4];
+            staged_pipeline(
+                &mut comm,
+                inst,
+                &cands[rank as usize],
+                Variant::Communication,
+                &params,
+                &mut ctx,
+                &mut failed,
+            )
+            .expect("delay must not break the protocol")
+            .expect("no rank dies under a delay")
+            .full_mapping
+        });
+        for m in &mappings {
+            assert_eq!(m, &baseline, "a delayed rank changed the outcome");
+        }
+    }
+}

@@ -49,13 +49,14 @@
 //! a real message.
 
 pub mod driver;
+pub mod epoch;
 pub mod stage2;
 pub mod stage3;
 
 use std::sync::Arc;
 
 use crate::model::{Assignment, Instance};
-use crate::simnet::network::{Cluster, Comm};
+use crate::simnet::network::{Cluster, Comm, CommError};
 use crate::simnet::protocol;
 use crate::strategies::diffusion::neighbor::{self, Candidates, NeighborGraph};
 use crate::strategies::diffusion::virtual_lb::Quotas;
@@ -163,7 +164,7 @@ pub fn build_candidates(
 /// capacity from the shared instance's topology (the distributed app
 /// driver ships the speeds inside the `.lbi` broadcast) and normalizes
 /// locally before the load-scalar exchange.
-fn node_load(inst: &Instance, rank: u32) -> f64 {
+pub(crate) fn node_load(inst: &Instance, rank: u32) -> f64 {
     let mut my_load = 0.0;
     for (o, &pe) in inst.mapping.iter().enumerate() {
         if inst.topo.node_of_pe(pe) == rank {
@@ -186,14 +187,14 @@ fn node_plan(
     inst: &Instance,
     my_cands: &[u32],
     params: &StrategyParams,
-) -> (Vec<u32>, stage2::Stage2Out) {
+) -> Result<(Vec<u32>, stage2::Stage2Out), CommError> {
     let adj = protocol::handshake_node(
         comm,
         my_cands,
         params.neighbor_count,
         params.handshake_max_rounds,
         TAG_HANDSHAKE,
-    );
+    )?;
     let my_load = node_load(inst, comm.rank);
     let s2 = stage2::virtual_balance_node(
         comm,
@@ -202,8 +203,8 @@ fn node_plan(
         params.vlb_tolerance,
         params.vlb_max_iters,
         TAG_STAGE2,
-    );
-    (adj, s2)
+    )?;
+    Ok((adj, s2))
 }
 
 /// One node's end-to-end pipeline: handshake → virtual diffusion →
@@ -217,8 +218,8 @@ pub fn node_pipeline(
     my_cands: &[u32],
     variant: Variant,
     params: &StrategyParams,
-) -> NodeOutcome {
-    let (adj, s2) = node_plan(comm, inst, my_cands, params);
+) -> Result<NodeOutcome, CommError> {
+    let (adj, s2) = node_plan(comm, inst, my_cands, params)?;
     let s3 = stage3::select_and_refine_node(
         comm,
         inst,
@@ -227,8 +228,8 @@ pub fn node_pipeline(
         params.overfill,
         params.refine_tolerance,
         TAG_STAGE3,
-    );
-    NodeOutcome {
+    )?;
+    Ok(NodeOutcome {
         adj,
         flow_row: s2.flow_row,
         iterations: s2.iterations,
@@ -236,7 +237,7 @@ pub fn node_pipeline(
         migrations: s3.migrations,
         recv_bytes: s3.recv_bytes,
         full_mapping: s3.full_mapping,
-    }
+    })
 }
 
 /// Assembled result of a full distributed pipeline run.
@@ -258,6 +259,7 @@ pub fn run_pipeline(inst: &Instance, variant: Variant, params: StrategyParams) -
     let shared = Arc::new(inst.clone());
     let outcomes = Cluster::run(n_nodes, move |rank, mut comm| {
         node_pipeline(&mut comm, &shared, &cands[rank as usize], variant, &params)
+            .expect("pipeline protocol failed on a healthy cluster")
     });
     assemble(outcomes)
 }
@@ -320,8 +322,8 @@ impl DistDiffusion {
         let cands = Arc::new(build_candidates(inst, self.variant, &params));
         let shared = Arc::new(inst.clone());
         let outs = Cluster::run(n_nodes, move |rank, mut comm| {
-            let (adj, s2) =
-                node_plan(&mut comm, &shared, &cands[rank as usize], &params);
+            let (adj, s2) = node_plan(&mut comm, &shared, &cands[rank as usize], &params)
+                .expect("planning protocol failed on a healthy cluster");
             (adj, s2.flow_row, s2.iterations)
         });
         let iterations = outs.iter().map(|o| o.2).max().unwrap_or(0);

@@ -30,7 +30,7 @@
 //! differently. The integration tests assert the resulting quotas are
 //! `==` to the sequential ones.
 
-use crate::simnet::network::Comm;
+use crate::simnet::network::{Comm, CommError};
 
 use super::wire;
 
@@ -62,7 +62,8 @@ pub struct Stage2Out {
 /// scalar — raw work on uniform topologies, normalized time
 /// (`work / capacity`, see `node_load` in the parent module) on heterogeneous
 /// ones; the protocol itself is unit-agnostic. `tag_base` must leave
-/// the low 24 bits clear.
+/// the low 24 bits clear. A peer failing mid-protocol surfaces as
+/// `Err`; the epoch/restart layer owns the recovery decision.
 pub fn virtual_balance_node(
     comm: &mut Comm,
     adj: &[u32],
@@ -70,7 +71,7 @@ pub fn virtual_balance_node(
     tol: f64,
     max_iters: usize,
     tag_base: u32,
-) -> Stage2Out {
+) -> Result<Stage2Out, CommError> {
     debug_assert_eq!(tag_base & 0x00FF_FFFF, 0, "tag_base clobbers sweep/phase bits");
     assert!(max_iters < (1 << 16), "vlb_max_iters exceeds the sweep tag space");
     let rank = comm.rank;
@@ -83,8 +84,7 @@ pub fn virtual_balance_node(
     // left-to-right order as the sequential `loads.iter().sum()` — so
     // the average is bit-equal.
     let (max_degree, global_avg) = if rank == 0 {
-        let mut msgs = comm.recv_tagged(t(0, PH_SETUP_UP), n - 1, Comm::TIMEOUT);
-        assert_eq!(msgs.len(), n - 1, "stage-2 setup gather incomplete");
+        let mut msgs = comm.recv_tagged(t(0, PH_SETUP_UP), n - 1, comm.patience())?;
         msgs.sort_by_key(|m| m.from);
         let mut sum = my_load;
         let mut maxd = deg as u32;
@@ -106,14 +106,13 @@ pub fn virtual_balance_node(
         wire::put_u32(&mut up, deg as u32);
         wire::put_f64(&mut up, my_load);
         comm.send(0, t(0, PH_SETUP_UP), up);
-        let msgs = comm.recv_tagged(t(0, PH_SETUP_DOWN), 1, Comm::TIMEOUT);
-        assert_eq!(msgs.len(), 1, "stage-2 setup broadcast missing");
+        let msgs = comm.recv_tagged(t(0, PH_SETUP_DOWN), 1, comm.patience())?;
         let mut r = wire::Reader::new(&msgs[0].data);
         (r.u32(), r.f64())
     };
 
     if global_avg <= 0.0 {
-        return Stage2Out { flow_row: Vec::new(), iterations: 0 };
+        return Ok(Stage2Out { flow_row: Vec::new(), iterations: 0 });
     }
     // First-order scheme constant: 1/(max_degree + 1) guarantees
     // convergence on arbitrary neighbor graphs (Cybenko).
@@ -137,8 +136,7 @@ pub fn virtual_balance_node(
         for &j in adj {
             comm.send(j, t(sweep, PH_LOAD), cur.to_le_bytes().to_vec());
         }
-        let mut loads_in = comm.recv_tagged(t(sweep, PH_LOAD), deg, Comm::TIMEOUT);
-        assert_eq!(loads_in.len(), deg, "stage-2 sweep {sweep}: load exchange incomplete");
+        let mut loads_in = comm.recv_tagged(t(sweep, PH_LOAD), deg, comm.patience())?;
         loads_in.sort_by_key(|m| m.from);
         for (idx, m) in loads_in.iter().enumerate() {
             debug_assert_eq!(m.from, adj[idx], "asymmetric stage-1 graph");
@@ -152,8 +150,7 @@ pub fn virtual_balance_node(
         if sweep > 0 {
             let my_bit = neighborhood_converged(cur, &cur_j, global_avg, tol);
             let stop = if rank == 0 {
-                let msgs = comm.recv_tagged(t(sweep, PH_CONV), n - 1, Comm::TIMEOUT);
-                assert_eq!(msgs.len(), n - 1, "stage-2 sweep {sweep}: DONE gather incomplete");
+                let msgs = comm.recv_tagged(t(sweep, PH_CONV), n - 1, comm.patience())?;
                 let all = my_bit && msgs.iter().all(|m| m.data == [1]);
                 let stop = all || moved_prev <= tol * global_avg * 1e-3;
                 for p in 1..n as u32 {
@@ -162,8 +159,7 @@ pub fn virtual_balance_node(
                 stop
             } else {
                 comm.send(0, t(sweep, PH_CONV), vec![u8::from(my_bit)]);
-                let msgs = comm.recv_tagged(t(sweep, PH_CTRL), 1, Comm::TIMEOUT);
-                assert_eq!(msgs.len(), 1, "stage-2 sweep {sweep}: CTRL broadcast missing");
+                let msgs = comm.recv_tagged(t(sweep, PH_CTRL), 1, comm.patience())?;
                 msgs[0].data == [1]
             };
             if stop {
@@ -218,8 +214,7 @@ pub fn virtual_balance_node(
         // Apply incoming transfers in ascending sender order — the
         // order the sequential global sweep (ranks 0..n) hits this
         // node's `recv` accumulator.
-        let mut xfers = comm.recv_tagged(t(sweep, PH_XFER), deg, Comm::TIMEOUT);
-        assert_eq!(xfers.len(), deg, "stage-2 sweep {sweep}: transfer exchange incomplete");
+        let mut xfers = comm.recv_tagged(t(sweep, PH_XFER), deg, comm.patience())?;
         xfers.sort_by_key(|m| m.from);
         for (idx, m) in xfers.iter().enumerate() {
             debug_assert_eq!(m.from, adj[idx]);
@@ -231,8 +226,7 @@ pub fn virtual_balance_node(
         // ---- Root reconstructs the sequential running `moved` sum
         // from the raw amounts in global (rank, adjacency) order.
         if rank == 0 {
-            let mut msgs = comm.recv_tagged(t(sweep, PH_MOV), n - 1, Comm::TIMEOUT);
-            assert_eq!(msgs.len(), n - 1, "stage-2 sweep {sweep}: moved gather incomplete");
+            let mut msgs = comm.recv_tagged(t(sweep, PH_MOV), n - 1, comm.patience())?;
             msgs.sort_by_key(|m| m.from);
             let mut moved = 0.0f64;
             for v in mov.chunks_exact(8) {
@@ -257,7 +251,7 @@ pub fn virtual_balance_node(
             flow_row.push((adj[idx], net[idx]));
         }
     }
-    Stage2Out { flow_row, iterations }
+    Ok(Stage2Out { flow_row, iterations })
 }
 
 /// This node's neighborhood convergence bit: relative load spread over
@@ -318,7 +312,8 @@ mod tests {
                 tol,
                 max_iters,
                 0x0200_0000,
-            );
+            )
+            .expect("stage-2 protocol failed on a healthy cluster");
             (out.flow_row, out.iterations)
         });
         let iters = outs.iter().map(|o| o.1).max().unwrap_or(0);

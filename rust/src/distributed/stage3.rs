@@ -25,7 +25,7 @@
 //! it as the `Assignment`).
 
 use crate::model::Instance;
-use crate::simnet::network::Comm;
+use crate::simnet::network::{Comm, CommError};
 use crate::strategies::diffusion::hierarchical;
 use crate::strategies::diffusion::object_selection::{
     self, quota_floor, select_comm_node, select_coord_node,
@@ -54,7 +54,8 @@ pub struct Stage3Out {
 
 /// Run this node's object selection + refinement. `flow_row` is the
 /// node's stage-2 quota row; `tag_base` must leave the low 24 bits
-/// clear.
+/// clear. A peer failing mid-protocol surfaces as `Err`; the
+/// epoch/restart layer owns the recovery decision.
 pub fn select_and_refine_node(
     comm: &mut Comm,
     inst: &Instance,
@@ -63,7 +64,7 @@ pub fn select_and_refine_node(
     overfill: f64,
     refine_tol: f64,
     tag_base: u32,
-) -> Stage3Out {
+) -> Result<Stage3Out, CommError> {
     debug_assert_eq!(tag_base & 0x00FF_FFFF, 0, "tag_base clobbers rank bits");
     let rank = comm.rank as usize;
     let n_nodes = comm.n;
@@ -90,8 +91,7 @@ pub fn select_and_refine_node(
     let mut recv_bytes = 0.0;
     // ---- Wavefront in: manifests of lower-ranked nodes, rank order.
     for h in 0..rank {
-        let msgs = comm.recv_tagged(tag_base | h as u32, 1, Comm::TIMEOUT);
-        assert_eq!(msgs.len(), 1, "stage-3: no manifest from node {h}");
+        let msgs = comm.recv_tagged(tag_base | h as u32, 1, comm.patience())?;
         recv_bytes += apply_manifest(
             inst,
             variant,
@@ -146,8 +146,7 @@ pub fn select_and_refine_node(
     // final map (refinement needs to know this node's arrivals from
     // *every* rank).
     for h in rank + 1..n_nodes {
-        let msgs = comm.recv_tagged(tag_base | h as u32, 1, Comm::TIMEOUT);
-        assert_eq!(msgs.len(), 1, "stage-3: no manifest from node {h}");
+        let msgs = comm.recv_tagged(tag_base | h as u32, 1, comm.patience())?;
         recv_bytes += apply_manifest(
             inst,
             variant,
@@ -184,8 +183,7 @@ pub fn select_and_refine_node(
         if h == rank {
             continue;
         }
-        let msgs = comm.recv_tagged(tag_base | PE_BIT | h as u32, 1, Comm::TIMEOUT);
-        assert_eq!(msgs.len(), 1, "stage-3: no PE assignments from node {h}");
+        let msgs = comm.recv_tagged(tag_base | PE_BIT | h as u32, 1, comm.patience())?;
         let mut r = wire::Reader::new(&msgs[0].data);
         while !r.is_empty() {
             let o = r.u32();
@@ -197,7 +195,7 @@ pub fn select_and_refine_node(
         full_mapping.iter().all(|&pe| pe != u32::MAX),
         "an object fell through the PE exchange"
     );
-    Stage3Out { manifest, migrations, recv_bytes, full_mapping }
+    Ok(Stage3Out { manifest, migrations, recv_bytes, full_mapping })
 }
 
 /// Replay one node's manifest into this node's replica (and centroid

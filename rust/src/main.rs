@@ -37,6 +37,14 @@ fn parser() -> Parser {
              factors, e.g. --pe-speeds 1,2,1,0.5 (sets topo.pe_speeds)")
         .opt("speed-noise", None, "speed-noise amplitude in [0, 1): perturbs PE speeds \
              each iteration to model OS interference (sets topo.speed_noise)")
+        .opt("resize", None, "planned elasticity: comma-separated node join/leave \
+             events keyed to LB rounds, e.g. --resize leave:2@3,join:5@7 \
+             (sets topo.resize)")
+        .opt("fault", None, "chaos schedule: comma-separated kill/hang/delay/part \
+             events, e.g. --fault kill:2@1:s2,part:1|3@4 (sets fault.plan; \
+             distributed mode only)")
+        .opt("fault-seed", None, "seed-derived single fault: victim, round, stage \
+             and kind are pure functions of the seed (sets fault.seed)")
         .opt("scale", Some("8"), "viz: pixels per coordinate unit")
         .opt("out", None, "balance: write rebalanced instance here")
         .flag("strict-config", "error (instead of warn) on config keys that are set \
@@ -76,6 +84,15 @@ fn load_config(args: &difflb::util::args::Args) -> Result<Config> {
     }
     if let Some(s) = args.get("speed-noise") {
         cfg.set("topo.speed_noise", s);
+    }
+    if let Some(s) = args.get("resize") {
+        cfg.set("topo.resize", s);
+    }
+    if let Some(s) = args.get("fault") {
+        cfg.set("fault.plan", s);
+    }
+    if let Some(s) = args.get("fault-seed") {
+        cfg.set("fault.seed", s);
     }
     if args.has_flag("strict-config") {
         cfg.set("run.strict_config", "true");

@@ -309,6 +309,107 @@ impl Instance {
     }
 }
 
+/// Re-home every object mapped to a dead/inactive node onto the next
+/// alive node cyclically after it, keeping the object's local PE slot.
+/// A pure world-space remap: deterministic in `(mapping, alive)`, so
+/// every rank of the distributed runtime computes it identically
+/// without exchanging a byte (the epoch layer and the resize path both
+/// rely on that). Panics if no node is alive.
+pub fn rehome_mapping(mapping: &[u32], topo: &Topology, alive: &[bool]) -> Vec<u32> {
+    debug_assert_eq!(alive.len(), topo.n_nodes);
+    assert!(alive.iter().any(|&a| a), "rehome_mapping: no alive node");
+    let ppn = topo.pes_per_node as u32;
+    let n = topo.n_nodes as u32;
+    mapping
+        .iter()
+        .map(|&pe| {
+            let node = topo.node_of_pe(pe);
+            if alive[node as usize] {
+                return pe;
+            }
+            let mut adopter = node;
+            for d in 1..=n {
+                let c = (node + d) % n;
+                if alive[c as usize] {
+                    adopter = c;
+                    break;
+                }
+            }
+            adopter * ppn + topo.local_of_pe(pe)
+        })
+        .collect()
+}
+
+/// An [`Instance`] restricted to the alive subset of nodes, with the
+/// translation table back to world ranks. The restricted instance has
+/// a dense topology (`nodes.len()` nodes, same `pes_per_node`, the
+/// survivors' speed slices); objects of dead nodes are re-homed via
+/// [`rehome_mapping`] before densification. Object-level data (loads,
+/// coords, sizes, graph) carries over unchanged — restriction never
+/// creates or destroys work, which is what the chaos tests'
+/// work-conservation assertions check.
+#[derive(Debug, Clone)]
+pub struct Restriction {
+    pub inst: Instance,
+    /// Survivor world node ids, ascending: dense node `i` is world node
+    /// `nodes[i]`.
+    pub nodes: Vec<u32>,
+}
+
+impl Restriction {
+    /// Translate a PE of the restricted topology back to the world PE.
+    pub fn to_world_pe(&self, sub_pe: u32) -> u32 {
+        let ppn = self.inst.topo.pes_per_node as u32;
+        self.nodes[(sub_pe / ppn) as usize] * ppn + sub_pe % ppn
+    }
+
+    /// Translate a whole restricted mapping back to world PEs. By
+    /// construction the result only references survivor PEs — a dead
+    /// node can never reappear in an expanded assignment.
+    pub fn expand_mapping(&self, sub_mapping: &[u32]) -> Vec<u32> {
+        sub_mapping.iter().map(|&pe| self.to_world_pe(pe)).collect()
+    }
+}
+
+/// Restrict `inst` to the nodes flagged alive (see [`Restriction`]).
+pub fn restrict_instance(inst: &Instance, alive: &[bool]) -> Restriction {
+    let world = rehome_mapping(&inst.mapping, &inst.topo, alive);
+    let nodes: Vec<u32> =
+        (0..inst.topo.n_nodes as u32).filter(|&n| alive[n as usize]).collect();
+    let ppn = inst.topo.pes_per_node;
+    let mut dense = vec![u32::MAX; inst.topo.n_nodes];
+    for (i, &w) in nodes.iter().enumerate() {
+        dense[w as usize] = i as u32;
+    }
+    let mapping: Vec<u32> = world
+        .iter()
+        .map(|&pe| {
+            dense[inst.topo.node_of_pe(pe) as usize] * ppn as u32
+                + inst.topo.local_of_pe(pe)
+        })
+        .collect();
+    let topo = if inst.topo.is_uniform() {
+        Topology::new(nodes.len(), ppn)
+    } else {
+        let mut speeds = Vec::with_capacity(nodes.len() * ppn);
+        for &w in &nodes {
+            for pe in inst.topo.pes_of_node(w) {
+                speeds.push(inst.topo.pe_speed(pe));
+            }
+        }
+        Topology::new(nodes.len(), ppn).with_pe_speeds(speeds)
+    };
+    let restricted = Instance {
+        loads: inst.loads.clone(),
+        coords: inst.coords.clone(),
+        sizes: inst.sizes.clone(),
+        graph: inst.graph.clone(),
+        mapping,
+        topo,
+    };
+    Restriction { inst: restricted, nodes }
+}
+
 impl Assignment {
     /// Identity assignment (no migration).
     pub fn unchanged(inst: &Instance) -> Assignment {
@@ -417,6 +518,46 @@ mod tests {
         // uniform topologies serialize no speeds line at all
         let plain = tiny_instance();
         assert!(!plain.to_lbi().contains("speeds"));
+    }
+
+    #[test]
+    fn rehome_adopts_cyclically_and_preserves_survivors() {
+        let topo = Topology::new(4, 2);
+        let mapping = vec![0, 3, 4, 5, 7]; // nodes 0, 1, 2, 2, 3
+        // node 2 dead: its objects adopt node 3, same local slot
+        let out = rehome_mapping(&mapping, &topo, &[true, true, false, true]);
+        assert_eq!(out, vec![0, 3, 6, 7, 7]);
+        // nodes 2 and 3 dead: adoption wraps to node 0
+        let out = rehome_mapping(&mapping, &topo, &[true, true, false, false]);
+        assert_eq!(out, vec![0, 3, 0, 1, 1]);
+    }
+
+    #[test]
+    fn restriction_densifies_and_round_trips() {
+        let mut inst = tiny_instance(); // 2 flat nodes, mapping [0,0,1,1]
+        inst.topo = Topology::flat(3);
+        inst.mapping = vec![0, 1, 2, 1];
+        let r = restrict_instance(&inst, &[true, false, true]);
+        assert_eq!(r.nodes, vec![0, 2]);
+        assert_eq!(r.inst.topo.n_nodes, 2);
+        // node 1's objects adopt node 2 (dense index 1)
+        assert_eq!(r.inst.mapping, vec![0, 1, 1, 1]);
+        assert_eq!(r.to_world_pe(0), 0);
+        assert_eq!(r.to_world_pe(1), 2);
+        assert_eq!(r.expand_mapping(&r.inst.mapping), vec![0, 2, 2, 2]);
+        // object-level data is untouched: work is conserved
+        assert_eq!(r.inst.loads, inst.loads);
+        assert_eq!(r.inst.sizes, inst.sizes);
+        r.inst.validate().unwrap();
+    }
+
+    #[test]
+    fn restriction_carries_survivor_speeds() {
+        let mut inst = tiny_instance();
+        inst.topo = Topology::flat(3).with_pe_speeds(vec![1.0, 2.0, 0.5]);
+        inst.mapping = vec![0, 0, 1, 2];
+        let r = restrict_instance(&inst, &[true, false, true]);
+        assert_eq!(r.inst.topo.pe_speeds().unwrap(), &[1.0, 0.5]);
     }
 
     #[test]

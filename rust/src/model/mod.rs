@@ -7,6 +7,6 @@ pub mod metrics;
 pub mod topology;
 
 pub use graph::{CommGraph, GroupTraffic, TrafficRecorder};
-pub use instance::{Assignment, Instance};
+pub use instance::{rehome_mapping, restrict_instance, Assignment, Instance, Restriction};
 pub use metrics::{evaluate, evaluate_mapping, CommSplit, LbMetrics};
-pub use topology::{SpeedSchedule, Topology};
+pub use topology::{ResizeEvent, ResizeSchedule, SpeedSchedule, Topology};

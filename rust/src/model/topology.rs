@@ -192,6 +192,181 @@ impl Default for SpeedSchedule {
     }
 }
 
+/// One planned membership change: `node` joins or leaves the active set
+/// at LB round `lb_round` (the change is part of that round's
+/// rebalance — a leaver still ships its objects during the round, a
+/// joiner receives its first objects from it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResizeEvent {
+    pub node: u32,
+    pub join: bool,
+    pub lb_round: usize,
+}
+
+/// Planned elasticity: a schedule of node join/leave events keyed to LB
+/// rounds, shared by every rank (membership is a pure function of the
+/// round index, so the distributed runtime needs no agreement protocol
+/// for it — unlike failures, which are *unplanned* and go through the
+/// epoch layer).
+///
+/// The world topology is fixed at `n_nodes`; a "joining" node is a
+/// world rank that starts inactive (no objects, no traffic) and is
+/// seeded at its join round, a "leaving" node is drained — its speeds
+/// are scaled to `1e-3` for the `drain` rounds before departure so
+/// diffusion bleeds its load away — and then excluded, shipping
+/// whatever remains during its leave round. Node 0 hosts the LB root
+/// and never leaves.
+///
+/// An empty schedule is inert: every membership query returns all-alive
+/// and [`ResizeSchedule::drained_topo`] is the identity, preserving
+/// bit-identity with resize-free runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResizeSchedule {
+    pub events: Vec<ResizeEvent>,
+    /// How many LB rounds before a leave the node spends draining
+    /// (speed × 1e-3). 0 = drop the load all at once at the leave
+    /// round.
+    pub drain: usize,
+}
+
+impl ResizeSchedule {
+    /// The inert schedule (no events).
+    pub fn none() -> ResizeSchedule {
+        ResizeSchedule { events: Vec::new(), drain: 1 }
+    }
+
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        !self.events.is_empty()
+    }
+
+    /// Membership before any LB round has run: a node whose earliest
+    /// event is a join starts inactive, everyone else starts active.
+    pub fn initial_alive(&self, n_nodes: usize) -> Vec<bool> {
+        let mut alive = vec![true; n_nodes];
+        for node in 0..n_nodes as u32 {
+            if let Some(first) = self
+                .events
+                .iter()
+                .filter(|e| e.node == node)
+                .min_by_key(|e| e.lb_round)
+            {
+                if first.join {
+                    alive[node as usize] = false;
+                }
+            }
+        }
+        alive
+    }
+
+    /// Membership after the events of LB rounds `0..=lb_round` have
+    /// applied (events within a round apply in schedule order).
+    pub fn alive_after(&self, lb_round: usize, n_nodes: usize) -> Vec<bool> {
+        let mut alive = self.initial_alive(n_nodes);
+        let mut idx: Vec<usize> = (0..self.events.len())
+            .filter(|&i| self.events[i].lb_round <= lb_round)
+            .collect();
+        idx.sort_by_key(|&i| (self.events[i].lb_round, i));
+        for i in idx {
+            let e = &self.events[i];
+            alive[e.node as usize] = e.join;
+        }
+        alive
+    }
+
+    /// Membership entering LB round `lb_round` (before its events).
+    pub fn alive_before(&self, lb_round: usize, n_nodes: usize) -> Vec<bool> {
+        match lb_round.checked_sub(1) {
+            Some(prev) => self.alive_after(prev, n_nodes),
+            None => self.initial_alive(n_nodes),
+        }
+    }
+
+    /// The effective topology for LB round `lb_round`: nodes in their
+    /// drain window (the `drain` rounds preceding a leave) have their
+    /// PE speeds scaled to `1e-3` so the diffusion stages bleed their
+    /// load off before the hard exclusion. Identity when nothing is
+    /// draining.
+    pub fn drained_topo(&self, base: &Topology, lb_round: usize) -> Topology {
+        let draining: Vec<u32> = self
+            .events
+            .iter()
+            .filter(|e| {
+                !e.join
+                    && lb_round < e.lb_round
+                    && lb_round + self.drain >= e.lb_round
+            })
+            .map(|e| e.node)
+            .collect();
+        if draining.is_empty() {
+            return base.clone();
+        }
+        let mut speeds: Vec<f64> =
+            (0..base.n_pes() as u32).map(|pe| base.pe_speed(pe)).collect();
+        for node in draining {
+            for pe in base.pes_of_node(node) {
+                speeds[pe as usize] *= 1e-3;
+            }
+        }
+        base.clone().with_pe_speeds(speeds)
+    }
+
+    /// Sanity-check against a world size: node 0 never leaves (it hosts
+    /// the LB root), every event targets a real node, and each node has
+    /// at most one event — the distributed runtime retires a leaver's
+    /// thread and seeds a joiner's once; re-joining a departed rank
+    /// would need thread resurrection (pure membership replay via
+    /// [`ResizeSchedule::alive_after`] supports it, the runtime does
+    /// not).
+    pub fn validate(&self, n_nodes: usize) -> anyhow::Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            if e.node as usize >= n_nodes {
+                anyhow::bail!("resize event targets node {} of {n_nodes}", e.node);
+            }
+            if e.node == 0 {
+                anyhow::bail!("resize schedule touches node 0 (the LB root must stay)");
+            }
+            if self.events[..i].iter().any(|p| p.node == e.node) {
+                anyhow::bail!("node {} has more than one resize event", e.node);
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a schedule spec: comma-separated `leave:NODE@ROUND` /
+    /// `join:NODE@ROUND` events, e.g. `leave:2@3,join:5@7`.
+    pub fn parse(spec: &str) -> anyhow::Result<ResizeSchedule> {
+        let mut sched = ResizeSchedule::none();
+        for seg in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = seg
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("resize event '{seg}' missing ':'"))?;
+            let join = match kind {
+                "join" => true,
+                "leave" => false,
+                other => anyhow::bail!("unknown resize kind '{other}' in '{seg}'"),
+            };
+            let (node_s, round_s) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("resize event '{seg}' missing '@ROUND'"))?;
+            let node: u32 = node_s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad node in '{seg}': {e}"))?;
+            let lb_round: usize = round_s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad round in '{seg}': {e}"))?;
+            sched.events.push(ResizeEvent { node, join, lb_round });
+        }
+        Ok(sched)
+    }
+}
+
+impl Default for ResizeSchedule {
+    fn default() -> ResizeSchedule {
+        ResizeSchedule::none()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -260,6 +435,55 @@ mod tests {
         let sched = SpeedSchedule::none();
         assert_eq!(sched.topo_at(&base, 0), base);
         assert_eq!(sched.topo_at(&base, 17), base);
+    }
+
+    #[test]
+    fn resize_membership_replays_events() {
+        let s = ResizeSchedule::parse("leave:2@3,join:4@5,join:2@7").unwrap();
+        assert!(s.is_active());
+        s.validate(6).unwrap();
+        // node 4's first event is a join: it starts inactive
+        assert_eq!(s.initial_alive(6), vec![true, true, true, true, false, true]);
+        assert_eq!(s.alive_before(3, 6), s.initial_alive(6));
+        assert_eq!(s.alive_after(3, 6), vec![true, true, false, true, false, true]);
+        assert_eq!(s.alive_after(5, 6), vec![true, true, false, true, true, true]);
+        // node 2 rejoins at round 7
+        assert_eq!(s.alive_after(7, 6), vec![true; 6]);
+    }
+
+    #[test]
+    fn resize_inert_schedule_is_identity() {
+        let s = ResizeSchedule::none();
+        assert!(!s.is_active());
+        assert_eq!(s.initial_alive(4), vec![true; 4]);
+        assert_eq!(s.alive_after(10, 4), vec![true; 4]);
+        let base = Topology::new(4, 2).with_pe_speeds(vec![1.0, 2.0, 0.5, 1.5, 1.0, 1.0, 3.0, 0.25]);
+        assert_eq!(s.drained_topo(&base, 0), base);
+    }
+
+    #[test]
+    fn resize_drain_scales_the_leaver() {
+        let s = ResizeSchedule { drain: 2, ..ResizeSchedule::parse("leave:1@4").unwrap() };
+        let base = Topology::new(3, 1);
+        // rounds 2 and 3 are the drain window; 4 is the exclusion round
+        assert_eq!(s.drained_topo(&base, 1), base);
+        let d = s.drained_topo(&base, 2);
+        assert_eq!(d.pe_speed(1), 1e-3);
+        assert_eq!(d.pe_speed(0), 1.0);
+        assert_eq!(s.drained_topo(&base, 3).pe_speed(1), 1e-3);
+        assert_eq!(s.drained_topo(&base, 4), base, "excluded, not drained");
+    }
+
+    #[test]
+    fn resize_validate_rejects_bad_schedules() {
+        assert!(ResizeSchedule::parse("leave:0@2").unwrap().validate(4).is_err());
+        assert!(ResizeSchedule::parse("join:0@2").unwrap().validate(4).is_err());
+        assert!(ResizeSchedule::parse("leave:9@2").unwrap().validate(4).is_err());
+        assert!(ResizeSchedule::parse("shrink:1@2").is_err());
+        assert!(ResizeSchedule::parse("leave:1").is_err());
+        // rejoin needs thread resurrection: one event per node
+        assert!(ResizeSchedule::parse("leave:2@3,join:2@7").unwrap().validate(4).is_err());
+        assert!(ResizeSchedule::parse("leave:2@3,join:3@5").unwrap().validate(4).is_ok());
     }
 
     #[test]

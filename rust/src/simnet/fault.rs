@@ -1,0 +1,357 @@
+//! Fault-injection plane for the simulated cluster: a seed-deterministic
+//! schedule of node deaths, hangs, delays, and network partitions that
+//! the distributed runtime executes against — the chaos counterpart of
+//! [`SpeedSchedule`](crate::model::SpeedSchedule) (speeds model degraded
+//! nodes; this models absent ones).
+//!
+//! A [`FaultPlan`] is pure data: *what* goes wrong, *where* (rank),
+//! *when* (LB round + pipeline stage). Injection happens at two layers:
+//!
+//! * [`Comm::send`](super::Comm::send) consults the plan's partition
+//!   events (messages crossing an active cut are dropped), keyed by the
+//!   fault clock the driver advances once per LB round;
+//! * the distributed driver's pipeline consults [`FaultPlan::my_fault`]
+//!   at stage entry — a `Kill` victim returns from its node thread
+//!   (its endpoint drops; peers see silence), `Hang`/`Delay` victims
+//!   sleep (`hang_ms` is sized to exceed the detection window, so a
+//!   hung rank wakes up already excluded; `delay_ms` stays under it, so
+//!   a delayed rank rejoins the same epoch untouched).
+//!
+//! An empty (inactive) plan is the default everywhere and costs
+//! nothing: no checkpoint traffic, no shortened timeouts, and the
+//! fault-free protocol paths are bit-identical to a build without this
+//! module (`tests/chaos.rs` locks that down).
+//!
+//! Rank 0 is the failure coordinator (`distributed::epoch`) and is
+//! never a valid victim — leader election is out of scope; the paper's
+//! runtime (Charm++) makes the same assumption for its LB root.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// What happens to the victim rank at its scheduled point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The rank dies: its node thread returns, every endpoint drops.
+    Kill,
+    /// The rank stalls for [`FaultPlan::hang_ms`] — longer than the
+    /// detection window, so it is excluded and must discover that on
+    /// waking.
+    Hang,
+    /// The rank stalls for [`FaultPlan::delay_ms`] — shorter than the
+    /// detection window, so the run completes unchanged.
+    Delay,
+}
+
+/// Where in the LB pipeline the fault fires (mid-pipeline by
+/// construction: the per-round state checkpoint has already been taken,
+/// so recovery re-homes exact state).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StagePoint {
+    /// Entry of the stage-1 neighbor handshake.
+    Handshake,
+    /// Entry of stage-2 virtual load balancing.
+    VirtualLb,
+    /// Entry of stage-3 object selection.
+    Selection,
+}
+
+impl StagePoint {
+    fn parse(s: &str) -> Result<StagePoint> {
+        Ok(match s {
+            "s1" => StagePoint::Handshake,
+            "s2" => StagePoint::VirtualLb,
+            "s3" => StagePoint::Selection,
+            other => bail!("unknown stage '{other}' (expected s1, s2 or s3)"),
+        })
+    }
+}
+
+/// One scheduled per-rank fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub rank: u32,
+    pub lb_round: u32,
+    pub stage: StagePoint,
+    pub kind: FaultKind,
+}
+
+/// A permanent network partition starting at `lb_round`: messages
+/// between the minority set and the rest are dropped from that round's
+/// pipeline onward. The minority (which never contains rank 0) loses
+/// the coordinator and exits; healing is future work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionEvent {
+    pub lb_round: u32,
+    pub minority: Vec<u32>,
+}
+
+/// The full, seed-deterministic chaos schedule for one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    pub partitions: Vec<PartitionEvent>,
+    /// Failure-detection patience in milliseconds: protocol receives
+    /// use this instead of [`Comm::TIMEOUT`](super::Comm::TIMEOUT) when
+    /// the plan is active, and the coordinator's ping window derives
+    /// from it.
+    pub detect_ms: u64,
+    /// How long a [`FaultKind::Hang`] victim sleeps (must exceed the
+    /// detection + epoch-declaration window).
+    pub hang_ms: u64,
+    /// How long a [`FaultKind::Delay`] victim sleeps (must stay under
+    /// `detect_ms`).
+    pub delay_ms: u64,
+}
+
+impl FaultPlan {
+    /// The inert plan: nothing scheduled, default patience.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            events: Vec::new(),
+            partitions: Vec::new(),
+            detect_ms: 1_000,
+            hang_ms: 6_000,
+            delay_ms: 150,
+        }
+    }
+
+    /// Whether anything is scheduled at all. Inactive plans keep every
+    /// code path bit-identical to a fault-unaware build.
+    pub fn is_active(&self) -> bool {
+        !self.events.is_empty() || !self.partitions.is_empty()
+    }
+
+    /// Protocol patience while the plan is active.
+    pub fn detect_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.detect_ms)
+    }
+
+    /// The fault scheduled for `rank` at LB round `lb_round`, if any.
+    pub fn my_fault(&self, rank: u32, lb_round: u32) -> Option<&FaultEvent> {
+        self.events.iter().find(|e| e.rank == rank && e.lb_round == lb_round)
+    }
+
+    /// Whether a message `a` → `b` is cut by a partition active at
+    /// fault-clock `clock` (the driver advances the clock to `r` when
+    /// entering LB round `r`'s pipeline).
+    pub fn cut(&self, a: u32, b: u32, clock: u64) -> bool {
+        self.partitions.iter().any(|p| {
+            u64::from(p.lb_round) <= clock
+                && (p.minority.contains(&a) != p.minority.contains(&b))
+        })
+    }
+
+    /// Sanity-check the plan against a cluster size: rank 0 (the
+    /// failure coordinator) is never a victim, every rank is in range,
+    /// and no partition strands the majority side below quorum.
+    pub fn validate(&self, n_nodes: usize) -> Result<()> {
+        for e in &self.events {
+            if e.rank == 0 {
+                bail!("fault plan targets rank 0 (the coordinator is assumed stable)");
+            }
+            if e.rank as usize >= n_nodes {
+                bail!("fault plan targets rank {} of {n_nodes}", e.rank);
+            }
+        }
+        let mut victims = 0usize;
+        for p in &self.partitions {
+            if p.minority.is_empty() {
+                bail!("partition with an empty minority");
+            }
+            if p.minority.contains(&0) {
+                bail!("partition strands rank 0 (the coordinator is assumed stable)");
+            }
+            if let Some(&bad) = p.minority.iter().find(|&&r| r as usize >= n_nodes) {
+                bail!("partition references rank {bad} of {n_nodes}");
+            }
+            if p.lb_round == 0 {
+                // the partition clock activates cuts at pipeline entry;
+                // a round-0 cut would sever the bootstrap step exchange
+                // before the first state checkpoint exists
+                bail!("partition at round 0 (cuts must start at LB round >= 1)");
+            }
+            victims += p.minority.len();
+        }
+        victims += self.events.iter().filter(|e| e.kind != FaultKind::Delay).count();
+        if 2 * (n_nodes - victims.min(n_nodes)) <= n_nodes {
+            bail!(
+                "fault plan removes {victims} of {n_nodes} ranks — \
+                 the surviving set would lose quorum"
+            );
+        }
+        Ok(())
+    }
+
+    /// A deterministic single-fault plan drawn from `seed`: victim,
+    /// round, stage and kind are all pure functions of the seed (the
+    /// chaos matrix sweeps seeds the way the hetero matrix sweeps speed
+    /// palettes).
+    pub fn from_seed(seed: u64, n_nodes: usize, lb_rounds: u32) -> FaultPlan {
+        let mut plan = FaultPlan::none();
+        if n_nodes < 3 || lb_rounds == 0 {
+            return plan; // too small for any survivor quorum
+        }
+        let mut rng = Rng::new(seed ^ 0xFA01_7FA0);
+        let victim = 1 + (rng.f64() * (n_nodes - 1) as f64) as u32;
+        let victim = victim.min(n_nodes as u32 - 1);
+        let lb_round = (rng.f64() * f64::from(lb_rounds)) as u32;
+        let lb_round = lb_round.min(lb_rounds - 1);
+        let stage = match (rng.f64() * 3.0) as u32 {
+            0 => StagePoint::Handshake,
+            1 => StagePoint::VirtualLb,
+            _ => StagePoint::Selection,
+        };
+        plan.detect_ms = 500;
+        plan.hang_ms = 4_000;
+        plan.delay_ms = 100;
+        match seed % 3 {
+            0 => plan.events.push(FaultEvent {
+                rank: victim,
+                lb_round,
+                stage,
+                kind: FaultKind::Kill,
+            }),
+            1 => plan.events.push(FaultEvent {
+                rank: victim,
+                lb_round,
+                stage,
+                kind: FaultKind::Hang,
+            }),
+            // partitions must start at round >= 1 (see `validate`); a
+            // one-round run degrades the partition draw to a kill
+            _ if lb_rounds < 2 => plan.events.push(FaultEvent {
+                rank: victim,
+                lb_round,
+                stage,
+                kind: FaultKind::Kill,
+            }),
+            _ => plan.partitions.push(PartitionEvent {
+                lb_round: lb_round.max(1),
+                minority: vec![victim],
+            }),
+        }
+        plan
+    }
+
+    /// Parse a plan spec: comma-separated events, each
+    /// `kill:RANK@ROUND[:STAGE]`, `hang:...`, `delay:...` or
+    /// `part:R1|R2|...@ROUND`. Stages are `s1`/`s2`/`s3` (default
+    /// `s2`). Example: `kill:2@1:s2,part:1|3@4`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        plan.detect_ms = 500;
+        plan.hang_ms = 4_000;
+        plan.delay_ms = 100;
+        for seg in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = seg
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault event '{seg}' missing ':'"))?;
+            let (who, when) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault event '{seg}' missing '@ROUND'"))?;
+            if kind == "part" {
+                let minority = who
+                    .split('|')
+                    .map(|r| r.trim().parse::<u32>())
+                    .collect::<std::result::Result<Vec<u32>, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad partition ranks in '{seg}': {e}"))?;
+                let lb_round: u32 = when
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad round in '{seg}': {e}"))?;
+                plan.partitions.push(PartitionEvent { lb_round, minority });
+                continue;
+            }
+            let fk = match kind {
+                "kill" => FaultKind::Kill,
+                "hang" => FaultKind::Hang,
+                "delay" => FaultKind::Delay,
+                other => bail!("unknown fault kind '{other}' in '{seg}'"),
+            };
+            let rank: u32 =
+                who.parse().map_err(|e| anyhow::anyhow!("bad rank in '{seg}': {e}"))?;
+            let (round_s, stage) = match when.split_once(':') {
+                Some((r, s)) => (r, StagePoint::parse(s)?),
+                None => (when, StagePoint::VirtualLb),
+            };
+            let lb_round: u32 = round_s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad round in '{seg}': {e}"))?;
+            plan.events.push(FaultEvent { rank, lb_round, stage, kind: fk });
+        }
+        Ok(plan)
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_plan_is_inactive() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active());
+        assert_eq!(p, FaultPlan::default());
+        assert!(p.validate(4).is_ok());
+        assert!(p.my_fault(1, 0).is_none());
+        assert!(!p.cut(0, 1, 100));
+    }
+
+    #[test]
+    fn parse_round_trips_the_kinds() {
+        let p = FaultPlan::parse("kill:2@1:s2,hang:3@0:s1,delay:1@2:s3,part:1|3@4").unwrap();
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(p.events[0].kind, FaultKind::Kill);
+        assert_eq!(p.events[0].rank, 2);
+        assert_eq!(p.events[0].lb_round, 1);
+        assert_eq!(p.events[0].stage, StagePoint::VirtualLb);
+        assert_eq!(p.events[1].stage, StagePoint::Handshake);
+        assert_eq!(p.events[2].kind, FaultKind::Delay);
+        assert_eq!(p.partitions, vec![PartitionEvent { lb_round: 4, minority: vec![1, 3] }]);
+        assert!(p.is_active());
+        assert!(FaultPlan::parse("explode:2@1").is_err());
+        assert!(FaultPlan::parse("kill:2").is_err());
+    }
+
+    #[test]
+    fn partition_cut_is_symmetric_and_clocked() {
+        let p = FaultPlan::parse("part:1|3@2").unwrap();
+        assert!(!p.cut(0, 1, 1), "inactive before its round");
+        assert!(p.cut(0, 1, 2));
+        assert!(p.cut(1, 0, 2));
+        assert!(p.cut(2, 3, 5));
+        assert!(!p.cut(1, 3, 2), "both in the minority: same side");
+        assert!(!p.cut(0, 2, 2), "both in the majority: same side");
+    }
+
+    #[test]
+    fn validate_rejects_coordinator_faults_and_quorum_loss() {
+        assert!(FaultPlan::parse("kill:0@1").unwrap().validate(4).is_err());
+        assert!(FaultPlan::parse("part:0@1").unwrap().validate(4).is_err());
+        assert!(FaultPlan::parse("kill:7@1").unwrap().validate(4).is_err());
+        assert!(FaultPlan::parse("kill:1@0,kill:2@1").unwrap().validate(4).is_err());
+        assert!(FaultPlan::parse("kill:1@0").unwrap().validate(4).is_ok());
+        // delays don't remove a rank, so they never cost quorum
+        assert!(FaultPlan::parse("delay:1@0,delay:2@0").unwrap().validate(4).is_ok());
+    }
+
+    #[test]
+    fn from_seed_is_deterministic_and_valid() {
+        for seed in 0..24u64 {
+            let a = FaultPlan::from_seed(seed, 8, 3);
+            let b = FaultPlan::from_seed(seed, 8, 3);
+            assert_eq!(a, b, "seed {seed} not deterministic");
+            assert!(a.is_active(), "seed {seed} produced an empty plan");
+            a.validate(8).unwrap();
+        }
+        // clusters too small for a survivor quorum get an inert plan
+        assert!(!FaultPlan::from_seed(1, 2, 3).is_active());
+    }
+}

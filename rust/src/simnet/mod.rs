@@ -1,10 +1,17 @@
 //! Distributed-execution substrate: a threaded message-passing cluster
-//! (stand-in for Charm++/UCX process messaging) and an α–β network cost
-//! model used to account simulated communication time at scale
-//! (DESIGN.md substitution table — Perlmutter runs are reproduced as
-//! modeled time over real computation).
+//! (stand-in for Charm++/UCX process messaging), a fault-injection
+//! plane for chaos testing the runtime against node death and
+//! partitions, and an α–β network cost model used to account simulated
+//! communication time at scale (DESIGN.md substitution table —
+//! Perlmutter runs are reproduced as modeled time over real
+//! computation).
 
+pub mod fault;
 pub mod network;
 pub mod protocol;
 
-pub use network::{Cluster, Comm, CostTracker, Msg, NetModel, RecvError};
+pub use fault::{FaultEvent, FaultKind, FaultPlan, PartitionEvent, StagePoint};
+pub use network::{
+    is_ctrl_tag, BarrierError, Cluster, Comm, CommError, CostTracker, Msg, NetModel, RecvError,
+    CTRL_NS,
+};

@@ -6,18 +6,54 @@
 //! pipeline in [`crate::distributed`] and the stage-1 handshake in
 //! [`super::protocol`]) without any external runtime.
 //!
+//! Failure semantics: protocol receives ([`Comm::recv_tagged`],
+//! [`Comm::barrier`]) return typed errors instead of panicking, so a
+//! dead or partitioned peer propagates as a recoverable
+//! [`CommError`] that the epoch/restart layer in
+//! `crate::distributed::epoch` turns into a membership change. Three
+//! mechanisms support that layer:
+//!
+//! * **epochs** — every message is stamped with the sender's membership
+//!   epoch; receives only match same-epoch messages, stale ones are
+//!   dropped (and counted, see [`Comm::stale_drops`]) so a restarted
+//!   pipeline stage can never consume pre-fault traffic;
+//! * **control namespace** — tags whose top byte is `0x7F`
+//!   ([`CTRL_NS`]) bypass epoch filtering entirely; the failure
+//!   detector and epoch-declaration protocol run over them;
+//! * **groups** — [`Comm::enter_group`] narrows the endpoint to a
+//!   survivor subset with dense ranks `0..m`, so the unchanged stage
+//!   protocols run on the reduced cluster without renumbering logic.
+//!
 //! [`NetModel`] converts message/byte counts into seconds the way the
 //! strong-scaling analysis needs: `t = α·msgs + β·bytes`, with
 //! intra-node traffic discounted (shared memory vs NIC).
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::collections::HashSet;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// A message between simulated nodes: (source, tag, payload).
+use super::fault::FaultPlan;
+
+/// Tag namespace (top byte) reserved for membership/failure control
+/// traffic: messages carrying these tags bypass epoch filtering (an
+/// epoch declaration must be deliverable across the very epoch change
+/// it announces).
+pub const CTRL_NS: u32 = 0x7F00_0000;
+
+/// Whether `tag` lives in the control namespace.
+pub const fn is_ctrl_tag(tag: u32) -> bool {
+    tag & 0xFF00_0000 == CTRL_NS
+}
+
+/// A message between simulated nodes: (source, tag, epoch, payload).
+/// `from` is always the sender's **world** rank; group-mode receives
+/// translate it to the dense group rank on delivery.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Msg {
     pub from: u32,
     pub tag: u32,
+    pub epoch: u32,
     pub data: Vec<u8>,
 }
 
@@ -30,10 +66,11 @@ pub struct Msg {
 /// Scope caveat: inside a [`Cluster`], every node holds sender clones
 /// to every inbox (including its own loopback), so `Disconnected`
 /// fires only when the *whole* cluster is torn down — a single dead
-/// peer among survivors still surfaces as `Timeout` (detecting that
-/// would need per-pair channels or heartbeats). The distinct outcome
-/// matters for endpoints whose senders genuinely all dropped, e.g.
-/// teardown races and embedding `Comm` outside `Cluster::run`.
+/// peer among survivors still surfaces as `Timeout` (which is why the
+/// failure detector in `distributed::epoch` is heartbeat-based). The
+/// distinct outcome matters for endpoints whose senders genuinely all
+/// dropped, e.g. teardown races and embedding `Comm` outside
+/// `Cluster::run`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RecvError {
     /// No message arrived within the timeout; peers may just be slow.
@@ -42,16 +79,97 @@ pub enum RecvError {
     Disconnected,
 }
 
+/// A protocol phase ([`Comm::recv_tagged`]) that could not complete.
+/// Both variants carry the partial delivery so callers (the barrier,
+/// the failure detector) can tell *who* went missing; the messages are
+/// intentionally not re-parked — after a failed phase the pipeline
+/// restarts under a new epoch and they would be stale anyway.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CommError {
+    /// The phase timed out with `got.len() < want` messages delivered.
+    Timeout { tag: u32, want: usize, got: Vec<Msg> },
+    /// Every sender endpoint dropped mid-phase (whole-cluster
+    /// teardown).
+    Disconnected { tag: u32, want: usize, got: Vec<Msg> },
+}
+
+impl CommError {
+    /// The ranks (in the caller's current rank space) whose messages
+    /// did arrive before the failure.
+    pub fn arrived(&self) -> Vec<u32> {
+        let (CommError::Timeout { got, .. } | CommError::Disconnected { got, .. }) = self;
+        got.iter().map(|m| m.from).collect()
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { tag, want, got } => write!(
+                f,
+                "phase {tag:#x} timed out with {}/{want} messages delivered",
+                got.len()
+            ),
+            CommError::Disconnected { tag, want, got } => write!(
+                f,
+                "cluster disconnected in phase {tag:#x} with {}/{want} messages delivered",
+                got.len()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// A barrier that did not complete: `missing` names the peers (in the
+/// caller's current rank space) that never announced arrival.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BarrierError {
+    pub tag: u32,
+    pub missing: Vec<u32>,
+}
+
+impl std::fmt::Display for BarrierError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "barrier {:#x} timed out; missing ranks {:?}", self.tag, self.missing)
+    }
+}
+
+impl std::error::Error for BarrierError {}
+
 /// Per-node communication endpoint.
 pub struct Comm {
+    /// Rank in the current addressing space: the world rank normally,
+    /// the dense group index inside [`Comm::enter_group`].
     pub rank: u32,
+    /// Size of the current addressing space.
     pub n: usize,
     senders: Vec<Sender<Msg>>,
     inbox: Receiver<Msg>,
     /// Out-of-phase messages put aside by [`Comm::recv_tagged`]: a fast
     /// peer may already be sending the next protocol phase while this
-    /// node still drains the current one.
+    /// node still drains the current one. Stored with world `from` and
+    /// original epoch.
     pending: Vec<Msg>,
+    /// Immutable identity (survives group narrowing).
+    world_rank: u32,
+    world_n: usize,
+    /// Active survivor group: sorted world ranks, `None` = full world.
+    group: Option<Vec<u32>>,
+    /// Current membership epoch; bumped by the recovery protocol.
+    epoch: u32,
+    /// Messages from dead epochs dropped instead of delivered.
+    stale_drops: u64,
+    /// Patience for protocol receives; [`Comm::TIMEOUT`] unless a
+    /// fault plan shortens it for detection.
+    patience: Duration,
+    /// Installed chaos schedule (partition cuts apply in `send`).
+    plan: Option<Arc<FaultPlan>>,
+    /// Partition clock: the LB round the driver most recently entered.
+    fault_clock: u64,
+    /// Debug-build registry documenting the barrier tag-uniqueness
+    /// contract (see [`Comm::barrier`]).
+    barrier_tags: HashSet<u64>,
 }
 
 impl Comm {
@@ -62,17 +180,140 @@ impl Comm {
     /// Build an endpoint from raw channel halves (used by [`Cluster`]
     /// and by unit tests that need to simulate dead peers).
     fn new(rank: u32, n: usize, senders: Vec<Sender<Msg>>, inbox: Receiver<Msg>) -> Comm {
-        Comm { rank, n, senders, inbox, pending: Vec::new() }
+        Comm {
+            rank,
+            n,
+            senders,
+            inbox,
+            pending: Vec::new(),
+            world_rank: rank,
+            world_n: n,
+            group: None,
+            epoch: 0,
+            stale_drops: 0,
+            patience: Self::TIMEOUT,
+            plan: None,
+            fault_clock: 0,
+            barrier_tags: HashSet::new(),
+        }
+    }
+
+    /// This endpoint's world identity (stable across group narrowing).
+    pub fn world_rank(&self) -> u32 {
+        self.world_rank
+    }
+
+    /// World cluster size (stable across group narrowing).
+    pub fn world_n(&self) -> usize {
+        self.world_n
+    }
+
+    /// Current membership epoch.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// How many wrong-epoch messages have been dropped so far (the
+    /// counter behind the "stale traffic is never silently matched"
+    /// contract).
+    pub fn stale_drops(&self) -> u64 {
+        self.stale_drops
+    }
+
+    /// Patience protocol receives should use (shortened under an
+    /// active fault plan so detection beats the 30 s default).
+    pub fn patience(&self) -> Duration {
+        self.patience
+    }
+
+    pub fn set_patience(&mut self, patience: Duration) {
+        self.patience = patience;
+    }
+
+    /// Advance the partition clock (the driver calls this on entering
+    /// each LB round's pipeline; [`FaultPlan`] partition events are
+    /// keyed to it).
+    pub fn set_fault_round(&mut self, round: u64) {
+        self.fault_clock = round;
+    }
+
+    /// Adopt membership epoch `epoch` and drain the pending buffer of
+    /// now-stale messages so a restarted pipeline stage can never
+    /// consume pre-fault traffic. Returns how many were dropped (also
+    /// added to [`Comm::stale_drops`]); control-namespace messages are
+    /// kept regardless of epoch.
+    pub fn set_epoch(&mut self, epoch: u32) -> usize {
+        self.epoch = epoch;
+        let before = self.pending.len();
+        self.pending.retain(|m| is_ctrl_tag(m.tag) || m.epoch >= epoch);
+        let dropped = before - self.pending.len();
+        self.stale_drops += dropped as u64;
+        dropped
+    }
+
+    /// Narrow the endpoint to a survivor subset: `members` are sorted
+    /// world ranks that must include this node. Until
+    /// [`Comm::leave_group`], `rank`/`n` are the dense group index and
+    /// size, sends address group ranks, and delivered messages carry
+    /// group-translated `from` fields — so the stage protocols run on
+    /// the reduced cluster unchanged.
+    pub fn enter_group(&mut self, members: &[u32]) {
+        debug_assert!(members.windows(2).all(|w| w[0] < w[1]), "group must be sorted");
+        let idx = members
+            .iter()
+            .position(|&r| r == self.world_rank)
+            .expect("enter_group: this rank is not a member");
+        self.rank = idx as u32;
+        self.n = members.len();
+        self.group = Some(members.to_vec());
+    }
+
+    /// Restore full-world addressing after [`Comm::enter_group`].
+    pub fn leave_group(&mut self) {
+        self.group = None;
+        self.rank = self.world_rank;
+        self.n = self.world_n;
+    }
+
+    /// Translate a rank in the current addressing space to a world
+    /// rank.
+    fn to_world(&self, r: u32) -> u32 {
+        match &self.group {
+            Some(g) => g[r as usize],
+            None => r,
+        }
+    }
+
+    /// Translate a world rank to the current addressing space; `None`
+    /// if the sender is outside the active group.
+    fn from_world(&self, w: u32) -> Option<u32> {
+        match &self.group {
+            Some(g) => g.binary_search(&w).ok().map(|i| i as u32),
+            None => Some(w),
+        }
     }
 
     pub fn send(&self, to: u32, tag: u32, data: Vec<u8>) {
+        let to_world = self.to_world(to);
+        if let Some(plan) = &self.plan {
+            if plan.cut(self.world_rank, to_world, self.fault_clock) {
+                return; // partitioned link: the message is lost
+            }
+        }
         // a dropped peer ends the protocol; ignore send failures then
-        let _ = self.senders[to as usize].send(Msg { from: self.rank, tag, data });
+        let _ = self.senders[to_world as usize].send(Msg {
+            from: self.world_rank,
+            tag,
+            epoch: self.epoch,
+            data,
+        });
     }
 
     /// Blocking receive with timeout. [`RecvError::Disconnected`] means
     /// every sender endpoint (including this node's own loopback) has
-    /// been dropped — the cluster is gone, not merely slow.
+    /// been dropped — the cluster is gone, not merely slow. This is the
+    /// raw primitive: no epoch filtering, no pending buffer, world
+    /// `from`.
     pub fn recv(&self, timeout: Duration) -> Result<Msg, RecvError> {
         match self.inbox.recv_timeout(timeout) {
             Ok(m) => Ok(m),
@@ -95,60 +336,154 @@ impl Comm {
         out
     }
 
-    /// Receive exactly `count` messages carrying `tag`, parking any
-    /// other tag in the pending buffer for a later `recv_tagged` (a
-    /// fast peer may already be sending the next phase while we drain
-    /// this one). Returns short only on [`RecvError::Timeout`]; a
-    /// disconnected cluster panics — with every sender gone the
-    /// outstanding messages can never arrive, so the protocol fails
-    /// fast instead of pretending the phase merely timed out.
-    pub fn recv_tagged(&mut self, tag: u32, count: usize, timeout: Duration) -> Vec<Msg> {
+    /// Whether a buffered/arriving message satisfies a `recv_tagged`
+    /// for `tag` at the current epoch.
+    fn matches(&self, m: &Msg, tag: u32) -> bool {
+        m.tag == tag
+            && (is_ctrl_tag(tag) || m.epoch == self.epoch)
+            && (is_ctrl_tag(tag) || self.from_world(m.from).is_some())
+    }
+
+    /// Whether a message belongs to a dead epoch and must be dropped
+    /// (never delivered, never parked). Control traffic is exempt.
+    fn is_stale(&self, m: &Msg) -> bool {
+        !is_ctrl_tag(m.tag) && m.epoch < self.epoch
+    }
+
+    /// Group-translate a matched message for delivery.
+    fn deliver(&self, mut m: Msg) -> Msg {
+        if !is_ctrl_tag(m.tag) {
+            if let Some(r) = self.from_world(m.from) {
+                m.from = r;
+            }
+        }
+        m
+    }
+
+    /// Receive exactly `count` messages carrying `tag` at the current
+    /// epoch, parking out-of-phase messages in the pending buffer for a
+    /// later `recv_tagged` (a fast peer may already be sending the next
+    /// phase while we drain this one). Messages from dead epochs are
+    /// dropped and counted ([`Comm::stale_drops`]), never matched.
+    ///
+    /// `Ok` guarantees the full count; [`CommError::Timeout`] /
+    /// [`CommError::Disconnected`] carry the partial delivery so the
+    /// caller can tell who went missing. Control-namespace tags match
+    /// regardless of epoch (and keep world `from` fields).
+    pub fn recv_tagged(
+        &mut self,
+        tag: u32,
+        count: usize,
+        timeout: Duration,
+    ) -> Result<Vec<Msg>, CommError> {
         let mut out = Vec::with_capacity(count);
         let mut i = 0;
         while i < self.pending.len() {
-            if self.pending[i].tag == tag && out.len() < count {
+            if self.is_stale(&self.pending[i]) {
+                self.pending.remove(i);
+                self.stale_drops += 1;
+            } else if self.matches(&self.pending[i], tag) && out.len() < count {
+                let m = self.pending.remove(i);
+                out.push(self.deliver(m));
+            } else {
+                i += 1;
+            }
+        }
+        let deadline = Instant::now() + timeout;
+        while out.len() < count {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.recv(left) {
+                Ok(m) if self.is_stale(&m) => self.stale_drops += 1,
+                Ok(m) if self.matches(&m, tag) => out.push(self.deliver(m)),
+                Ok(m) => self.pending.push(m),
+                Err(RecvError::Timeout) => {
+                    return Err(CommError::Timeout { tag, want: count, got: out })
+                }
+                Err(RecvError::Disconnected) => {
+                    return Err(CommError::Disconnected { tag, want: count, got: out })
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Blocking receive of the next control-namespace message (pending
+    /// buffer first, then the inbox). Non-control traffic encountered
+    /// on the way is parked (or dropped if stale); delivered control
+    /// messages keep their world `from`.
+    pub fn recv_ctrl(&mut self, timeout: Duration) -> Result<Msg, RecvError> {
+        if let Some(i) = self.pending.iter().position(|m| is_ctrl_tag(m.tag)) {
+            return Ok(self.pending.remove(i));
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.recv(left) {
+                Ok(m) if is_ctrl_tag(m.tag) => return Ok(m),
+                Ok(m) if self.is_stale(&m) => self.stale_drops += 1,
+                Ok(m) => self.pending.push(m),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Drain every already-arrived control message (pending buffer +
+    /// non-blocking inbox sweep) without waiting. Used by ranks
+    /// catching up on epoch declarations they slept through.
+    pub fn drain_ctrl(&mut self) -> Vec<Msg> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if is_ctrl_tag(self.pending[i].tag) {
                 out.push(self.pending.remove(i));
             } else {
                 i += 1;
             }
         }
-        while out.len() < count {
-            match self.recv(timeout) {
-                Ok(m) if m.tag == tag => out.push(m),
+        loop {
+            match self.inbox.try_recv() {
+                Ok(m) if is_ctrl_tag(m.tag) => out.push(m),
+                Ok(m) if self.is_stale(&m) => self.stale_drops += 1,
                 Ok(m) => self.pending.push(m),
-                Err(RecvError::Timeout) => break,
-                Err(RecvError::Disconnected) => panic!(
-                    "simnode {}: cluster disconnected with {} message(s) of tag {tag:#x} \
-                     still outstanding",
-                    self.rank,
-                    count - out.len()
-                ),
+                Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
             }
         }
         out
     }
 
-    /// All-to-all barrier: returns once every rank has entered a
-    /// `barrier` call with the same `tag`. The tag must be unique per
-    /// logical barrier (reusing one across two consecutive barriers
-    /// lets a fast rank's second announcement satisfy a slow rank's
-    /// first wait). Panics — rather than deadlocks — when a peer dies
-    /// or the wait exceeds [`Comm::TIMEOUT`].
-    pub fn barrier(&mut self, tag: u32) {
+    /// All-to-all barrier: returns `Ok` once every rank in the current
+    /// addressing space has entered a `barrier` call with the same
+    /// `tag`, or a [`BarrierError`] naming the missing ranks on
+    /// timeout/teardown.
+    ///
+    /// Contract: the tag must be unique per logical barrier within an
+    /// epoch — reusing one across two consecutive barriers lets a fast
+    /// rank's second announcement satisfy a slow rank's first wait. A
+    /// debug-build assertion enforces (and documents) this; release
+    /// builds skip the bookkeeping.
+    pub fn barrier(&mut self, tag: u32) -> Result<(), BarrierError> {
+        debug_assert!(
+            self.barrier_tags.insert((u64::from(self.epoch) << 32) | u64::from(tag)),
+            "simnode {}: barrier tag {tag:#x} reused within epoch {} — each logical \
+             barrier needs a fresh tag",
+            self.rank,
+            self.epoch
+        );
         for p in 0..self.n as u32 {
             if p != self.rank {
                 self.send(p, tag, Vec::new());
             }
         }
-        let want = self.n - 1;
-        let got = self.recv_tagged(tag, want, Self::TIMEOUT);
-        assert_eq!(
-            got.len(),
-            want,
-            "simnode {}: barrier {tag:#x} timed out with {}/{want} peers arrived",
-            self.rank,
-            got.len()
-        );
+        match self.recv_tagged(tag, self.n - 1, self.patience) {
+            Ok(_) => Ok(()),
+            Err(e) => {
+                let arrived = e.arrived();
+                let missing = (0..self.n as u32)
+                    .filter(|&p| p != self.rank && !arrived.contains(&p))
+                    .collect();
+                Err(BarrierError { tag, missing })
+            }
+        }
     }
 }
 
@@ -164,6 +499,25 @@ impl Cluster {
         T: Send + 'static,
         F: Fn(u32, Comm) -> T + Send + Sync + Clone + 'static,
     {
+        Self::run_inner(n, None, f)
+    }
+
+    /// [`Cluster::run`] with a chaos schedule installed on every
+    /// endpoint (partition cuts apply inside `send`; kill/hang/delay
+    /// events are executed by the distributed driver's pipeline).
+    pub fn run_with_plan<T, F>(n: usize, plan: Arc<FaultPlan>, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(u32, Comm) -> T + Send + Sync + Clone + 'static,
+    {
+        Self::run_inner(n, Some(plan), f)
+    }
+
+    fn run_inner<T, F>(n: usize, plan: Option<Arc<FaultPlan>>, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(u32, Comm) -> T + Send + Sync + Clone + 'static,
+    {
         let mut senders = Vec::with_capacity(n);
         let mut inboxes = Vec::with_capacity(n);
         for _ in 0..n {
@@ -173,7 +527,8 @@ impl Cluster {
         }
         let mut handles = Vec::with_capacity(n);
         for (rank, inbox) in inboxes.into_iter().enumerate() {
-            let comm = Comm::new(rank as u32, n, senders.clone(), inbox);
+            let mut comm = Comm::new(rank as u32, n, senders.clone(), inbox);
+            comm.plan.clone_from(&plan);
             let f = f.clone();
             handles.push(
                 std::thread::Builder::new()
@@ -312,12 +667,39 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "cluster disconnected")]
-    fn recv_tagged_panics_on_dead_cluster() {
+    fn recv_tagged_reports_dead_cluster() {
         let (tx, rx) = channel::<Msg>();
         drop(tx);
         let mut dead = Comm::new(0, 2, Vec::new(), rx);
-        dead.recv_tagged(0x42, 1, Duration::from_secs(30));
+        let t = std::time::Instant::now();
+        match dead.recv_tagged(0x42, 1, Duration::from_secs(30)) {
+            Err(CommError::Disconnected { tag: 0x42, want: 1, got }) => {
+                assert!(got.is_empty())
+            }
+            other => panic!("expected Disconnected, got {other:?}"),
+        }
+        assert!(t.elapsed() < Duration::from_secs(5), "burned the timeout");
+    }
+
+    #[test]
+    fn recv_tagged_timeout_carries_partial_delivery() {
+        let r = Cluster::run(3, |rank, mut comm| {
+            if rank == 1 {
+                comm.send(0, 9, vec![1]);
+            }
+            if rank == 0 {
+                // expect two messages of tag 9, only rank 1 sends
+                match comm.recv_tagged(9, 2, Duration::from_millis(100)) {
+                    Err(CommError::Timeout { tag: 9, want: 2, got }) => {
+                        got.iter().map(|m| m.from).collect()
+                    }
+                    other => panic!("expected Timeout, got {other:?}"),
+                }
+            } else {
+                Vec::new()
+            }
+        });
+        assert_eq!(r[0], vec![1]);
     }
 
     #[test]
@@ -350,9 +732,9 @@ mod tests {
             comm.send(peer, 1, vec![10]);
             comm.send(peer, 2, vec![20]);
             // drain in canonical phase order
-            let a = comm.recv_tagged(1, 1, Duration::from_secs(5));
-            let b = comm.recv_tagged(2, 1, Duration::from_secs(5));
-            let c = comm.recv_tagged(3, 1, Duration::from_secs(5));
+            let a = comm.recv_tagged(1, 1, Duration::from_secs(5)).expect("phase 1");
+            let b = comm.recv_tagged(2, 1, Duration::from_secs(5)).expect("phase 2");
+            let c = comm.recv_tagged(3, 1, Duration::from_secs(5)).expect("phase 3");
             (a[0].data.clone(), b[0].data.clone(), c[0].data.clone())
         });
         for r in results {
@@ -370,14 +752,110 @@ mod tests {
             if rank == 2 {
                 std::thread::sleep(Duration::from_millis(50)); // straggler
             }
-            comm.barrier(0x60);
+            comm.barrier(0x60).expect("barrier");
             if rank == 0 {
-                let pre = comm.recv_tagged(0x50, 4, Duration::from_secs(5));
+                let pre =
+                    comm.recv_tagged(0x50, 4, Duration::from_secs(5)).expect("announcements");
                 pre.len()
             } else {
                 0
             }
         });
         assert_eq!(results[0], 4);
+    }
+
+    #[test]
+    fn barrier_timeout_names_missing_ranks() {
+        let results = Cluster::run(3, |rank, mut comm| {
+            if rank == 2 {
+                // rank 2 never enters the barrier; keep the thread
+                // alive long enough that peers see silence, not a
+                // teardown race
+                std::thread::sleep(Duration::from_millis(300));
+                return None;
+            }
+            comm.set_patience(Duration::from_millis(100));
+            Some(comm.barrier(0x70))
+        });
+        for r in &results[..2] {
+            assert_eq!(
+                r.clone().unwrap(),
+                Err(BarrierError { tag: 0x70, missing: vec![2] })
+            );
+        }
+    }
+
+    #[test]
+    fn stale_epoch_messages_are_dropped_and_counted() {
+        let results = Cluster::run(2, |rank, mut comm| {
+            if rank == 0 {
+                comm.send(1, 5, vec![1]); // epoch-0 payload
+                comm.send(1, CTRL_NS | 1, vec![]); // ordered marker
+                return (0, 0);
+            }
+            // park the epoch-0 payload while waiting for the marker
+            let m = comm.recv_ctrl(Duration::from_secs(5)).expect("marker");
+            assert_eq!(m.tag, CTRL_NS | 1);
+            // epoch change: the parked payload is now stale
+            let dropped = comm.set_epoch(1);
+            let after = comm.recv_tagged(5, 1, Duration::from_millis(50));
+            assert!(
+                matches!(after, Err(CommError::Timeout { ref got, .. }) if got.is_empty()),
+                "stale message was delivered: {after:?}"
+            );
+            (dropped, comm.stale_drops())
+        });
+        assert_eq!(results[1], (1, 1));
+    }
+
+    #[test]
+    fn group_mode_translates_ranks() {
+        let members = vec![0u32, 2, 3];
+        let results = Cluster::run(4, move |rank, mut comm| {
+            if rank == 1 {
+                // outside the group: idle but alive
+                std::thread::sleep(Duration::from_millis(100));
+                return Vec::new();
+            }
+            comm.enter_group(&members);
+            let me = comm.rank; // dense group index
+            let n = comm.n;
+            assert_eq!(n, 3);
+            for p in 0..n as u32 {
+                if p != me {
+                    comm.send(p, 11, vec![me as u8]);
+                }
+            }
+            let msgs = comm.recv_tagged(11, n - 1, Duration::from_secs(5)).expect("group");
+            comm.leave_group();
+            assert_eq!(comm.rank, rank);
+            let mut froms: Vec<u32> = msgs.iter().map(|m| m.from).collect();
+            froms.sort_unstable();
+            froms
+        });
+        // delivered `from` fields are dense group indices
+        assert_eq!(results[0], vec![1, 2]); // world 2→1, 3→2
+        assert_eq!(results[2], vec![0, 2]);
+        assert_eq!(results[3], vec![0, 1]);
+    }
+
+    #[test]
+    fn partition_cut_drops_messages() {
+        let plan = Arc::new(FaultPlan::parse("part:1@0").expect("plan"));
+        let results = Cluster::run_with_plan(3, plan, |rank, mut comm| {
+            comm.set_fault_round(0);
+            if rank == 0 {
+                comm.send(1, 7, vec![10]); // cut
+                comm.send(2, 7, vec![20]); // delivered
+                return 0;
+            }
+            match comm.recv_tagged(7, 1, Duration::from_millis(150)) {
+                Ok(msgs) => i32::from(msgs[0].data[0]),
+                Err(CommError::Timeout { .. }) => -1,
+                Err(e) => panic!("{e}"),
+            }
+        });
+        assert_eq!(results[1], -1, "message across the cut must be lost");
+        assert_eq!(results[2], 20);
     }
 }

@@ -16,7 +16,7 @@
 //!   2 ACK   — to each accepting responder: `[1]` confirm / `[0]` cancel
 //!   3 DONE  — satisfaction bit for global termination
 
-use super::network::{Cluster, Comm};
+use super::network::{Cluster, Comm, CommError};
 use crate::strategies::diffusion::neighbor::{Candidates, NeighborGraph};
 
 /// Run the distributed handshake on `n` threads; returns the symmetric
@@ -33,6 +33,7 @@ pub fn distributed_select_neighbors(
     let cands = std::sync::Arc::new(candidates.clone());
     let adj = Cluster::run(n, move |rank, mut comm| {
         handshake_node(&mut comm, &cands[rank as usize], k, max_rounds, 0)
+            .expect("handshake protocol failed on a healthy cluster")
     });
     NeighborGraph { adj }
 }
@@ -42,14 +43,16 @@ pub fn distributed_select_neighbors(
 /// (sorted). `tag_base` namespaces the wire tags so callers embedding
 /// the handshake in a longer protocol (the distributed LB pipeline)
 /// can keep phases disjoint; it must leave the low 24 bits clear
-/// (rounds use bits 8..24, phases bits 0..8).
+/// (rounds use bits 8..24, phases bits 0..8). A peer failing
+/// mid-handshake surfaces as `Err` — the caller (the epoch/restart
+/// layer) decides whether that means recovery or abort.
 pub fn handshake_node(
     comm: &mut Comm,
     my_cands: &[u32],
     k: usize,
     max_rounds: usize,
     tag_base: u32,
-) -> Vec<u32> {
+) -> Result<Vec<u32>, CommError> {
     debug_assert_eq!(tag_base & 0x00FF_FFFF, 0, "tag_base clobbers round/phase bits");
     // rounds occupy tag bits 8..24; overflowing them would collide with
     // the caller's other protocol namespaces (same bound as stage 2).
@@ -100,7 +103,7 @@ pub fn handshake_node(
 
         // ---- Phase B: collect requests, respond (sorted by requester).
         let mut reqs: Vec<u32> = comm
-            .recv_tagged(tag(0), peers.len(), Comm::TIMEOUT)
+            .recv_tagged(tag(0), peers.len(), comm.patience())?
             .into_iter()
             .filter(|m| m.data == [1])
             .map(|m| m.from)
@@ -120,7 +123,7 @@ pub fn handshake_node(
 
         // ---- Phase C: collect responses to our requests, ack/cancel.
         let mut accepts: Vec<u32> = comm
-            .recv_tagged(tag(1), requested.len(), Comm::TIMEOUT)
+            .recv_tagged(tag(1), requested.len(), comm.patience())?
             .into_iter()
             .filter(|m| m.data == [1])
             .map(|m| m.from)
@@ -142,7 +145,7 @@ pub fn handshake_node(
 
         // ---- Process acks for the accepts we issued (sorted by sender
         // for determinism; arrival order is scheduling-dependent).
-        let mut acks = comm.recv_tagged(tag(2), accepted_from.len(), Comm::TIMEOUT);
+        let mut acks = comm.recv_tagged(tag(2), accepted_from.len(), comm.patience())?;
         acks.sort_by_key(|m| m.from);
         for m in acks {
             holds -= 1;
@@ -156,13 +159,13 @@ pub fn handshake_node(
         for &p in &peers {
             comm.send(p, tag(3), vec![u8::from(satisfied)]);
         }
-        let done_msgs = comm.recv_tagged(tag(3), peers.len(), Comm::TIMEOUT);
+        let done_msgs = comm.recv_tagged(tag(3), peers.len(), comm.patience())?;
         if satisfied && done_msgs.iter().all(|m| m.data == [1]) {
             break;
         }
     }
     confirmed.sort_unstable();
-    confirmed
+    Ok(confirmed)
 }
 
 #[cfg(test)]
@@ -218,6 +221,7 @@ mod tests {
             let c = std::sync::Arc::new(cands);
             let adj = Cluster::run(6, move |rank, mut comm| {
                 handshake_node(&mut comm, &c[rank as usize], 2, 16, 0x0700_0000)
+                    .expect("handshake")
             });
             NeighborGraph { adj }
         };

@@ -1,0 +1,316 @@
+//! Chaos & elasticity validation (ISSUE 6).
+//!
+//! Three pillars, all over the real message-passing runtime:
+//!
+//! 1. **Inertness** — a fault plan that never fires (scheduled beyond
+//!    the run, or a sub-detection-window delay) leaves every
+//!    per-iteration record and the final mapping bit-identical to a
+//!    plain run. The fault-tolerant machinery must cost nothing in
+//!    determinism when nothing goes wrong.
+//! 2. **Recovery** — a mid-pipeline kill / hang / partition completes
+//!    on the surviving quorum: the run verifies, total work is
+//!    conserved (the per-round state checkpoint re-homes *exact*
+//!    state, so physics match a fault-free run), and no object is ever
+//!    mapped to a dead node afterwards.
+//! 3. **Elasticity** — planned join/leave schedules produce the same
+//!    records sequentially and distributed, and the departing /
+//!    not-yet-joined node holds zero work outside its membership
+//!    window.
+//!
+//! The seeded chaos matrix (kill × hang × partition across cluster
+//! sizes) is gated behind `DIFFLB_TEST_FAULTS`; CI sweeps it with
+//! `DIFFLB_TEST_NODES` ∈ {4, 8, 16}.
+
+use std::sync::Arc;
+
+use difflb::apps::driver::{run_app, DriverConfig, RunReport};
+use difflb::apps::hotspot::HotspotConfig;
+use difflb::apps::pic::{Backend, InitMode, PicApp, PicConfig};
+use difflb::apps::stencil::Decomposition;
+use difflb::distributed::driver::{run_hotspot_distributed, run_pic_distributed};
+use difflb::model::{ResizeSchedule, Topology};
+use difflb::simnet::{FaultKind, FaultPlan};
+use difflb::strategies::diffusion::{Diffusion, Variant};
+use difflb::strategies::StrategyParams;
+
+fn pic_cfg(topo: Topology) -> PicConfig {
+    PicConfig {
+        grid: 64,
+        n_particles: 2_000,
+        k: 1,
+        m: 1,
+        init: InitMode::Geometric { rho: 0.9 },
+        chares_x: 4,
+        chares_y: 4,
+        decomp: Decomposition::Striped,
+        topo,
+        q: 1.0,
+        seed: 11,
+        particle_bytes: 48.0,
+        threads: 2,
+    }
+}
+
+/// 12 iterations at period 4 → LB rounds 0/1/2 at iterations 3/7/11.
+fn chaos_driver(plan: FaultPlan) -> DriverConfig {
+    DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        fault_plan: Arc::new(plan),
+        ..Default::default()
+    }
+}
+
+fn run_chaos_pic(topo: Topology, driver: &DriverConfig) -> RunReport {
+    run_pic_distributed(&pic_cfg(topo), Variant::Communication, StrategyParams::default(), driver)
+        .unwrap()
+}
+
+fn assert_records_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record counts");
+    assert_eq!(a.total_migrations, b.total_migrations, "{ctx}: migration totals");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.migrations, y.migrations, "{ctx} iter {}: migrations", x.iter);
+        assert_eq!(x.work_max_avg, y.work_max_avg, "{ctx} iter {}: imbalance", x.iter);
+        assert_eq!(x.time_max_avg, y.time_max_avg, "{ctx} iter {}: time imbalance", x.iter);
+        assert_eq!(x.comm_max_s, y.comm_max_s, "{ctx} iter {}: comm max", x.iter);
+        assert_eq!(x.comm_avg_s, y.comm_avg_s, "{ctx} iter {}: comm avg", x.iter);
+        assert_eq!(x.node_work, y.node_work, "{ctx} iter {}: node work", x.iter);
+    }
+    assert_eq!(a.final_mapping, b.final_mapping, "{ctx}: final mapping");
+}
+
+/// No object on node `dead` in the final mapping, and zero recorded
+/// work there from iteration `from_iter` on.
+fn assert_evicted(rep: &RunReport, topo: &Topology, dead: u32, from_iter: usize, ctx: &str) {
+    assert!(
+        rep.final_mapping.iter().all(|&pe| topo.node_of_pe(pe) != dead),
+        "{ctx}: final mapping still places objects on node {dead}"
+    );
+    for rec in rep.records.iter().filter(|r| r.iter >= from_iter) {
+        assert_eq!(
+            rec.node_work[dead as usize], 0.0,
+            "{ctx} iter {}: dead node {dead} still accounted work",
+            rec.iter
+        );
+    }
+}
+
+/// The checkpoint re-homes exact state, so each iteration's total work
+/// must match a fault-free run's — only the *grouping* of chare loads
+/// into nodes changes, which permits f64 summation-order slack.
+fn assert_work_conserved(faulty: &RunReport, plain: &RunReport, ctx: &str) {
+    for (f, p) in faulty.records.iter().zip(&plain.records) {
+        let tf: f64 = f.node_work.iter().sum();
+        let tp: f64 = p.node_work.iter().sum();
+        assert!(
+            (tf - tp).abs() <= 1e-9 * tp.abs().max(1.0),
+            "{ctx} iter {}: total work {tf} != fault-free {tp}",
+            f.iter
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pillar 1: inertness.
+
+#[test]
+fn never_firing_fault_plan_is_bit_identical() {
+    // The plan is *active* (fault mode: detection patience, per-round
+    // checkpoints, staged pipeline, fault-clocked partitions) but the
+    // one event sits beyond the run's 3 LB rounds — every record must
+    // still match the plain path bit for bit.
+    let plain = run_chaos_pic(Topology::flat(4), &chaos_driver(FaultPlan::none()));
+    assert!(plain.verified);
+    let armed = run_chaos_pic(
+        Topology::flat(4),
+        &chaos_driver(FaultPlan::parse("kill:2@99").unwrap()),
+    );
+    assert!(armed.verified);
+    assert_records_identical(&armed, &plain, "armed-but-idle plan");
+}
+
+#[test]
+fn sub_detection_delay_changes_nothing() {
+    // A Delay victim stalls for less than the detection window: every
+    // peer just waits it out, nobody is excluded, and the run is
+    // bit-identical to a fault-free one.
+    let plain = run_chaos_pic(Topology::flat(4), &chaos_driver(FaultPlan::none()));
+    let delayed = run_chaos_pic(
+        Topology::flat(4),
+        &chaos_driver(FaultPlan::parse("delay:2@1:s2").unwrap()),
+    );
+    assert!(delayed.verified);
+    assert_records_identical(&delayed, &plain, "sub-detection delay");
+}
+
+// ---------------------------------------------------------------------
+// Pillar 2: recovery.
+
+#[test]
+fn mid_pipeline_kill_completes_on_surviving_quorum() {
+    // ISSUE 6 acceptance: rank 2 dies inside LB round 1's stage-2
+    // protocol (iteration 7). The surviving quorum detects it, declares
+    // a new epoch, restarts the pipeline on 3 nodes, re-homes the dead
+    // rank's checkpointed objects — and the physics still verify.
+    let topo = Topology::flat(4);
+    let plain = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::none()));
+    let rep = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::parse("kill:2@1:s2").unwrap()));
+    assert!(rep.verified, "physics failed after mid-pipeline kill");
+    assert_eq!(rep.records.len(), 12);
+    assert_work_conserved(&rep, &plain, "kill:2@1:s2");
+    assert_evicted(&rep, &topo, 2, 8, "kill:2@1:s2");
+}
+
+#[test]
+fn kill_recovers_at_every_stage_point() {
+    // The fault gate sits at the entry of each of the three pipeline
+    // stages; recovery must work from any of them. Round 0 (iteration
+    // 3) is the earliest pipeline, so eviction holds from iteration 4.
+    let topo = Topology::flat(4);
+    for stage in ["s1", "s2", "s3"] {
+        let spec = format!("kill:3@0:{stage}");
+        let rep = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::parse(&spec).unwrap()));
+        assert!(rep.verified, "{spec}: physics failed");
+        assert_evicted(&rep, &topo, 3, 4, &spec);
+    }
+}
+
+#[test]
+fn hang_victim_is_excluded_and_run_completes() {
+    // The victim stalls past the detection window, is declared dead,
+    // and on waking discovers its exclusion (stale-epoch drops + the
+    // catch-up protocol) instead of corrupting the new epoch.
+    let topo = Topology::flat(4);
+    let plain = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::none()));
+    let rep = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::parse("hang:1@1:s2").unwrap()));
+    assert!(rep.verified, "physics failed after hang exclusion");
+    assert_work_conserved(&rep, &plain, "hang:1@1:s2");
+    assert_evicted(&rep, &topo, 1, 8, "hang:1@1:s2");
+}
+
+#[test]
+fn partition_minority_is_excluded() {
+    // A permanent cut strands rank 3 from the coordinator side at LB
+    // round 1; the majority detects the silence and continues without
+    // it. (The checkpoint taken at round entry predates the cut, so the
+    // minority's objects are re-homed exactly.)
+    let topo = Topology::flat(4);
+    let plain = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::none()));
+    let rep = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::parse("part:3@1").unwrap()));
+    assert!(rep.verified, "physics failed after partition");
+    assert_work_conserved(&rep, &plain, "part:3@1");
+    assert_evicted(&rep, &topo, 3, 8, "part:3@1");
+}
+
+#[test]
+fn kill_recovers_on_the_second_workload() {
+    // The recovery path is app-generic: hotspot (analytic loads, no
+    // checkpoint payload — ownership is re-derived) survives the same
+    // mid-pipeline kill.
+    let topo = Topology::flat(4);
+    let cfg = HotspotConfig { topo: topo.clone(), ..Default::default() };
+    let driver = chaos_driver(FaultPlan::parse("kill:2@1:s2").unwrap());
+    let rep =
+        run_hotspot_distributed(&cfg, Variant::Communication, StrategyParams::default(), &driver)
+            .unwrap();
+    assert!(rep.verified, "hotspot failed after mid-pipeline kill");
+    assert_evicted(&rep, &topo, 2, 8, "hotspot kill:2@1:s2");
+}
+
+// ---------------------------------------------------------------------
+// Pillar 3: elasticity.
+
+fn assert_resize_equivalence(spec: &str) -> (RunReport, Topology) {
+    let topo = Topology::flat(4);
+    let driver = DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        resize: ResizeSchedule::parse(spec).unwrap(),
+        ..Default::default()
+    };
+    let cfg = pic_cfg(topo.clone());
+    let params = StrategyParams::default();
+    let seq = {
+        let mut app = PicApp::new(cfg.clone(), Backend::Native).unwrap();
+        let strat = Diffusion::communication(params);
+        run_app(&mut app, &strat, &driver).unwrap()
+    };
+    let dist = run_pic_distributed(&cfg, Variant::Communication, params, &driver).unwrap();
+    assert!(seq.verified, "{spec}: sequential physics failed");
+    assert!(dist.verified, "{spec}: distributed physics failed");
+    assert_records_identical(&dist, &seq, spec);
+    (dist, topo)
+}
+
+#[test]
+fn resize_leave_matches_sequential_and_evicts() {
+    // Drain-then-remove: node 3 leaves at LB round 1 (iteration 7). The
+    // distributed leaver hands its objects to the new owners and exits;
+    // the records must match the sequential restricted rebalance bit
+    // for bit, and node 3 holds nothing afterwards.
+    let (rep, topo) = assert_resize_equivalence("leave:3@1");
+    assert_evicted(&rep, &topo, 3, 8, "leave:3@1");
+}
+
+#[test]
+fn resize_join_matches_sequential_and_waits() {
+    // Node 3 is absent from the initial membership and joins at LB
+    // round 1: it must hold zero work through iteration 7 (the join
+    // round's accounting predates the pipeline) and participate after.
+    let (rep, _) = assert_resize_equivalence("join:3@1");
+    for rec in rep.records.iter().filter(|r| r.iter <= 7) {
+        assert_eq!(rec.node_work[3], 0.0, "iter {}: joiner already has work", rec.iter);
+    }
+    let late: f64 = rep.records.iter().filter(|r| r.iter > 7).map(|r| r.node_work[3]).sum();
+    assert!(late > 0.0, "joiner never received work after joining");
+}
+
+#[test]
+fn resize_leave_then_join_round_trips() {
+    // A node leaves and a different node joins later in the same run —
+    // the two halves of elasticity compose.
+    let (rep, topo) = assert_resize_equivalence("leave:2@0,join:1@2");
+    assert_evicted(&rep, &topo, 2, 4, "leave:2@0,join:1@2");
+}
+
+// ---------------------------------------------------------------------
+// Seeded chaos matrix (CI: DIFFLB_TEST_FAULTS=1, nodes ∈ {4, 8, 16}).
+
+#[test]
+fn chaos_matrix_from_seeds() {
+    if std::env::var("DIFFLB_TEST_FAULTS").is_err() {
+        eprintln!("chaos_matrix_from_seeds: skipped (set DIFFLB_TEST_FAULTS=1)");
+        return;
+    }
+    let n: usize = std::env::var("DIFFLB_TEST_NODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let topo = Topology::flat(n);
+    for seed in 1..=6u64 {
+        let plan = FaultPlan::from_seed(seed, n, 3);
+        assert!(plan.is_active(), "seed {seed}: from_seed produced an inert plan");
+        plan.validate(n).unwrap_or_else(|e| panic!("seed {seed}: invalid plan: {e}"));
+        let rep = run_chaos_pic(topo.clone(), &chaos_driver(plan.clone()));
+        assert!(rep.verified, "seed {seed} ({plan:?}): physics failed");
+        assert_eq!(rep.records.len(), 12, "seed {seed}: run truncated");
+        for e in plan.events.iter().filter(|e| e.kind != FaultKind::Delay) {
+            assert!(
+                rep.final_mapping.iter().all(|&pe| topo.node_of_pe(pe) != e.rank),
+                "seed {seed}: objects left on dead rank {}",
+                e.rank
+            );
+        }
+        for p in &plan.partitions {
+            for &v in &p.minority {
+                assert!(
+                    rep.final_mapping.iter().all(|&pe| topo.node_of_pe(pe) != v),
+                    "seed {seed}: objects left on partitioned rank {v}"
+                );
+            }
+        }
+    }
+}

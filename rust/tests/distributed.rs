@@ -440,7 +440,9 @@ fn recv_tagged_survives_randomized_interleavings() {
                 }
             }
             for ph in 0..PHASES {
-                let msgs = comm.recv_tagged(0x0900_0000 | ph, 3, Comm::TIMEOUT);
+                let msgs = comm
+                    .recv_tagged(0x0900_0000 | ph, 3, Comm::TIMEOUT)
+                    .expect("phase exchange complete");
                 if msgs.len() != 3 || msgs.iter().any(|m| m.data[1] != ph as u8) {
                     return false;
                 }
@@ -463,12 +465,13 @@ fn barrier_separates_phases() {
                     comm.send(to, 0x0A00_0000 | phase, vec![phase as u8]);
                 }
             }
-            comm.barrier(0x0B00_0000 | phase);
+            comm.barrier(0x0B00_0000 | phase).expect("barrier survives");
             // mpsc preserves per-sender order: each peer's token was
             // sent before its barrier announcement, so both are already
             // queued (or parked) once the barrier completes.
-            let msgs =
-                comm.recv_tagged(0x0A00_0000 | phase, 2, std::time::Duration::from_secs(5));
+            let msgs = comm
+                .recv_tagged(0x0A00_0000 | phase, 2, std::time::Duration::from_secs(5))
+                .expect("tokens arrive");
             if msgs.len() != 2 {
                 return false;
             }

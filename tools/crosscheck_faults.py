@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Cross-simulation of quorum-restart recovery vs the sequential model.
+
+The build container ships no Rust toolchain (EXPERIMENTS.md §Perf
+provenance), so — like tools/crosscheck_distributed.py for the
+fault-free protocols — this script mirrors the decision logic of the
+recovery path in Python and asserts its outcome is bit-equal to a
+from-scratch sequential run on the survivor topology:
+
+  1. re-homing (rust/src/model/instance.rs rehome_mapping): a dead
+     node's objects adopt the next alive node cyclically; objects on
+     survivors never move, so restriction relabels work but never
+     creates or destroys it.
+  2. quorum restart: after restricting to the dense survivor set, the
+     *distributed* stage-2/stage-3 protocols (the exact mirrors from
+     crosscheck_distributed.py) must produce the same flows, final
+     object->node map and manifests as the *sequential* model over the
+     same restricted instance — i.e. a pipeline restarted on the
+     surviving quorum lands on the assignment a sequential run on the
+     survivor topology would have computed, and the expansion back to
+     world ranks can never resurrect a dead node.
+  3. partition semantics (rust/src/simnet/fault.rs cut): cuts are
+     symmetric and never sever two majority-side ranks — the property
+     recovery liveness rests on (the surviving quorum stays fully
+     connected).
+
+Run: python3 tools/crosscheck_faults.py
+"""
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import crosscheck_distributed as xd
+
+
+# ------------------------------------------------------------- rehome
+# Mirrors rehome_mapping (node-level view, pes_per_node = 1).
+def rehome(node_map, n_nodes, alive):
+    out = []
+    for node in node_map:
+        if alive[node]:
+            out.append(node)
+            continue
+        adopter = node
+        for d in range(1, n_nodes + 1):
+            c = (node + d) % n_nodes
+            if alive[c]:
+                adopter = c
+                break
+        out.append(adopter)
+    return out
+
+
+# Mirrors restrict_instance's dense renumbering: survivor world ids
+# ascending, dense node i = survivors[i].
+def densify(node_map, alive):
+    survivors = [n for n in range(len(alive)) if alive[n]]
+    dense = {w: i for i, w in enumerate(survivors)}
+    return [dense[n] for n in node_map], survivors
+
+
+# Mirrors FaultPlan::cut: a message a->b is dropped iff some active
+# partition separates them.
+def cut(partitions, a, b, clock):
+    return any(
+        p_round <= clock and ((a in minority) != (b in minority))
+        for (p_round, minority) in partitions
+    )
+
+
+def quorum_restart_trials(rng, trials):
+    for t in range(trials):
+        n_nodes = rng.choice([4, 6, 8, 12])
+        loads, graph, node_map = xd.random_instance(rng, n_nodes, rng.randint(3, 8))
+        # victim set: never rank 0, survivors keep quorum (2*(n-d) > n)
+        max_dead = (n_nodes - 1) // 2
+        dead = set(rng.sample(range(1, n_nodes), rng.randint(1, max(1, max_dead))))
+        alive = [n not in dead for n in range(n_nodes)]
+
+        rehomed = rehome(node_map, n_nodes, alive)
+        assert all(alive[n] for n in rehomed), \
+            f"trial {t}: rehome left an object on a dead node"
+        for o, home in enumerate(node_map):
+            if alive[home]:
+                assert rehomed[o] == home, f"trial {t}: survivor object {o} moved"
+
+        sub_map, survivors = densify(rehomed, alive)
+        k = len(survivors)
+        node_loads = [
+            xd.sum_ltr([loads[o] for o in range(len(loads)) if sub_map[o] == i])
+            for i in range(k)
+        ]
+        total = xd.sum_ltr(loads)
+        assert abs(xd.sum_ltr(node_loads) - total) <= 1e-12 * total, \
+            f"trial {t}: restriction changed total work"
+
+        adj = xd.ring_graph(k, 1 if k <= 4 else 2)
+        sflows, si = xd.seq_virtual_balance(adj, node_loads, 0.05, 200)
+        dflows, di = xd.dist_virtual_balance(adj, node_loads, 0.05, 200)
+        assert si == di, f"trial {t}: restart stage2 iterations {si} != {di}"
+        assert sflows == dflows, f"trial {t}: restart stage2 flows diverged"
+
+        floor = xd.quota_floor(loads, k)
+        overfill = rng.choice([0.0, 0.5])
+        smap, sman = xd.seq_select(graph, loads, list(sub_map), sflows, floor,
+                                   overfill, k)
+        dmap, dman = xd.dist_select(graph, loads, list(sub_map), sflows, floor,
+                                    overfill, k)
+        assert smap == dmap, f"trial {t}: restart stage3 maps diverged"
+        assert sman == dman, f"trial {t}: restart stage3 manifests diverged"
+
+        # expand back to world ranks — a dead node can never reappear
+        world = [survivors[n] for n in smap]
+        assert all(alive[n] for n in world), \
+            f"trial {t}: expanded assignment resurrected a dead node"
+    print(f"quorum restart: {trials}/{trials} trials — restarted distributed "
+          "pipeline bit-equal to the sequential survivor-topology model")
+
+
+def partition_property_trials(rng, trials):
+    for t in range(trials):
+        n = rng.randint(3, 16)
+        parts = []
+        for _ in range(rng.randint(1, 3)):
+            minority = set(rng.sample(range(1, n), rng.randint(1, (n - 1) // 2)))
+            parts.append((rng.randint(1, 5), minority))
+        majority = [r for r in range(n)
+                    if all(r not in m for (_, m) in parts)]
+        for clock in range(7):
+            for a in range(n):
+                for b in range(n):
+                    assert cut(parts, a, b, clock) == cut(parts, b, a, clock), \
+                        f"trial {t}: cut not symmetric"
+            for a in majority:
+                for b in majority:
+                    assert not cut(parts, a, b, clock), \
+                        f"trial {t}: cut severed two majority ranks"
+            assert not cut(parts, 0, 0, clock)
+    print(f"partition cuts: {trials}/{trials} trials — symmetric, majority "
+          "side fully connected at every clock")
+
+
+def main():
+    rng = random.Random(0xFA17)
+    quorum_restart_trials(rng, 150)
+    partition_property_trials(rng, 80)
+
+
+if __name__ == "__main__":
+    main()

@@ -151,6 +151,14 @@ pub struct RunReport {
     /// Object→PE mapping at the end of the run. The chaos tests use
     /// this to assert no object is left on a dead or departed node.
     pub final_mapping: Vec<u32>,
+    /// Per-run resilience totals (stale drops, parked future-epoch
+    /// messages, barrier timeouts, epochs declared). Always zero for
+    /// the sequential driver — it has no failure surface — and summed
+    /// over surviving members by the distributed driver's end-of-run
+    /// telemetry gather. Unlike the process-global `obs` registry,
+    /// these are scoped to one run, so tests can assert exact values
+    /// even under the parallel test runner.
+    pub obs: crate::obs::ObsTotals,
 }
 
 impl RunReport {
@@ -206,7 +214,10 @@ pub fn run_app<A: App + ?Sized>(
         // perturbed by the noise schedule when one is active.
         let eff_topo = cfg.speed_schedule.topo_at(&topo, iter);
         ctx.moved.clear();
-        let stats = app.step(&mut ctx)?;
+        let stats = {
+            let _s = crate::obs::span("app.step", "driver");
+            app.step(&mut ctx)?
+        };
         // Aggregate the raw crossing log per directed (from, to) pair —
         // the same stable sort-merge the apps' traffic recorders use,
         // so sums accumulate in crossing order.
@@ -259,6 +270,7 @@ pub fn run_app<A: App + ?Sized>(
 
         // --- load balancing step.
         if cfg.lb_period > 0 && (iter + 1) % cfg.lb_period == 0 {
+            let _lb_span = crate::obs::span("lb.round", "driver");
             let mut inst = app.build_instance();
             if cfg.deterministic_loads {
                 inst.loads = work.clone();
@@ -302,6 +314,24 @@ pub fn run_app<A: App + ?Sized>(
             rec.lb_s = strat_s + transfer_s;
             rec.migrations = metrics.migrations;
             report.total_migrations += metrics.migrations;
+            if crate::obs::metrics_enabled() {
+                // One JSONL row per LB round. `stage2_iters` is set by
+                // the strategy as it converges (zero for strategies
+                // without a diffusion stage 2); the sequential driver
+                // has no comm endpoint, so the resilience fields stay 0.
+                crate::obs::metrics::record_round(crate::obs::MetricsSnapshot {
+                    round: lb_round as u32,
+                    iter: iter as u32,
+                    imbalance: rec.work_max_avg,
+                    time_max_avg: rec.time_max_avg,
+                    migrations: metrics.migrations as u32,
+                    comm_s: rec.comm_max_s,
+                    lb_s: rec.lb_s,
+                    stage2_iters: crate::obs::registry::gauge("lb.stage2_iters").get() as u32,
+                    stale_drops: 0,
+                    epochs: 0,
+                });
+            }
             lb_round += 1;
         }
 

@@ -32,6 +32,27 @@ pub struct Coordinator {
     pub strategy: Box<dyn LoadBalancer>,
     pub params: StrategyParams,
     pub driver: DriverConfig,
+    pub obs: ObsPaths,
+}
+
+/// Telemetry export targets from a config (section `obs`): setting
+/// `obs.trace_path` turns on span collection for the run and writes a
+/// Chrome trace-event JSON there; `obs.metrics_path` turns on
+/// per-LB-round snapshots and writes them as JSONL. Absent keys leave
+/// both collectors off — the zero-overhead default. The always-on
+/// counters ([`crate::obs::registry`]) are unaffected either way.
+#[derive(Debug, Clone, Default)]
+pub struct ObsPaths {
+    pub trace: Option<String>,
+    pub metrics: Option<String>,
+}
+
+/// Resolve the `obs` section of a config.
+pub fn obs_from_config(cfg: &Config) -> ObsPaths {
+    ObsPaths {
+        trace: cfg.get("obs.trace_path").map(str::to_string),
+        metrics: cfg.get("obs.metrics_path").map(str::to_string),
+    }
 }
 
 fn decomp_from(cfg: &Config, key: &str, default: &str) -> Result<Decomposition> {
@@ -325,7 +346,8 @@ impl Coordinator {
             resize: resize_from_config(cfg)?,
             fault_plan: Arc::new(fault_plan_from_config(cfg)?),
         };
-        Ok(Coordinator { strategy, params, driver })
+        let obs = obs_from_config(cfg);
+        Ok(Coordinator { strategy, params, driver, obs })
     }
 
     /// Pick the PJRT backend when artifacts exist (or `pic.backend`
@@ -354,6 +376,19 @@ impl Coordinator {
     /// apps (`pic`, `hotspot`). Finishes with the config-typo check
     /// ([`check_config_read`]).
     pub fn run(&self, cfg: &Config) -> Result<RunReport> {
+        crate::obs::init();
+        crate::obs::set_tracing(self.obs.trace.is_some());
+        crate::obs::set_metrics(self.obs.metrics.is_some());
+        let result = self.run_collected(cfg);
+        // the collection flags are process-global: reset them so one
+        // configured run cannot leak collection into the next in the
+        // same process (tests, sweeps).
+        crate::obs::set_tracing(false);
+        crate::obs::set_metrics(false);
+        result
+    }
+
+    fn run_collected(&self, cfg: &Config) -> Result<RunReport> {
         let kind = cfg.get("app.kind").unwrap_or("pic").to_string();
         let report = if matches!(cfg.get("run.mode"), Some("distributed")) {
             let variant = match self.strategy.name() {
@@ -397,6 +432,23 @@ impl Coordinator {
             let mut app = app_from_config(cfg)?;
             run_app(app.as_mut(), self.strategy.as_ref(), &self.driver)?
         };
+        // ---- telemetry export. Distributed runs already gathered the
+        // member ranks' buffers at rank 0; flushing the calling thread
+        // picks up any sequential-path spans, then the sink is merged
+        // on virtual timestamps and written out.
+        crate::obs::trace::flush_local();
+        if let Some(path) = &self.obs.trace {
+            let events = crate::obs::trace::drain_merged();
+            crate::obs::trace::write_chrome_trace(path, &events)
+                .with_context(|| format!("writing trace to {path}"))?;
+            crate::info!("trace: {} events -> {path}", events.len());
+        }
+        if let Some(path) = &self.obs.metrics {
+            let rounds = crate::obs::metrics::take_rounds();
+            crate::obs::metrics::write_jsonl(path, &rounds)
+                .with_context(|| format!("writing metrics to {path}"))?;
+            crate::info!("metrics: {} rounds -> {path}", rounds.len());
+        }
         check_config_read(cfg)?;
         Ok(report)
     }

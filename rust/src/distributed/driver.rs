@@ -92,6 +92,13 @@ const TAG_LBC: u32 = 0x1200_0000;
 const TAG_LBX: u32 = 0x1300_0000;
 const TAG_MIG: u32 = 0x1400_0000;
 const TAG_CKPT: u32 = 0x1500_0000;
+/// End-of-run telemetry gather: every surviving member ships its comm
+/// resilience counters (and, when tracing is on, its encoded local
+/// trace buffer) to rank 0, which sums them into [`RunReport::obs`]
+/// and merges the trace on virtual timestamps. Always sent — the
+/// counters are always-on — so the message sequence is identical with
+/// telemetry enabled and disabled.
+const TAG_OBS: u32 = 0x1600_0000;
 const TAG_FIN: u32 = 0x1F00_0000;
 
 /// How often a joining rank polls for the root's instance broadcast
@@ -355,6 +362,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
 
         let mut rec = IterRecord::default();
         if i_am_in {
+            let _step_span = crate::obs::span("app.step", "dist-driver");
             // ---- step my partition; crossers leave by message.
             let mut outbox: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
             moved_units.clear();
@@ -475,6 +483,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
 
         // ---- LB round.
         if sh.driver.lb_period > 0 && (step + 1) % sh.driver.lb_period == 0 {
+            let _lb_span = crate::obs::span("lb.round", "dist-driver");
             let rmask = lb_round & 0x00FF_FFFF;
             // Scheduled membership after this round's resize events;
             // the pipeline participants are its non-failed ranks.
@@ -687,15 +696,21 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
             // memory to hand rows around (the strategy-only path,
             // run_pipeline, does share them via Arc).
             let failed_at_entry = failed.clone();
-            let new_map: Vec<u32> = if target_ranks.len() == n_nodes && !fault_mode {
+            // stage2_iters: this round's stage-2 convergence count
+            // (identical on every participant) — surfaced in the root's
+            // per-round metrics snapshot.
+            let (new_map, stage2_iters): (Vec<u32>, u32) = if target_ranks.len() == n_nodes
+                && !fault_mode
+            {
                 // the plain path: no groups, no restriction, no epoch
                 // traffic — bit-identical to the fault-unaware driver.
                 let cands = build_candidates(&inst, sh.variant, &sh.params);
-                node_pipeline(comm, &inst, &cands[rank as usize], sh.variant, &sh.params)
+                let out = node_pipeline(comm, &inst, &cands[rank as usize], sh.variant, &sh.params)
                     .unwrap_or_else(|e| {
                         panic!("LB {lb_round}: pipeline failed without a fault plan: {e}")
-                    })
-                    .full_mapping
+                    });
+                let iters = out.iterations as u32;
+                (out.full_mapping, iters)
             } else {
                 if fault_mode {
                     // activate this round's partition cuts only now:
@@ -732,7 +747,9 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                     };
                     comm.leave_group();
                     match res {
-                        Ok(Some(out)) => break r.expand_mapping(&out.full_mapping),
+                        Ok(Some(out)) => {
+                            break (r.expand_mapping(&out.full_mapping), out.iterations as u32);
+                        }
                         // my own scheduled kill fired, or I hung past
                         // my exclusion: exit dead, shipping nothing —
                         // the root holds my checkpoint.
@@ -794,6 +811,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
             // Leavers ship their whole partition (above), joiners only
             // receive; objects whose old owner died this round are
             // re-routed from the root, which absorbed their payload.
+            let _mig_span = crate::obs::span("migrate", "dist-driver");
             let migtag = TAG_MIG | rmask;
             let mut sends_to = vec![false; n_nodes];
             let mut recv_from = vec![false; n_nodes];
@@ -847,6 +865,23 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                 rec.lb_s = strat_s + transfer_s;
                 rec.migrations = migrations;
                 rs.report.total_migrations += migrations;
+                if crate::obs::metrics_enabled() {
+                    // One JSONL row per LB round, root-side — the same
+                    // fields the sequential driver records, plus the
+                    // root endpoint's live resilience counters.
+                    crate::obs::metrics::record_round(crate::obs::MetricsSnapshot {
+                        round: lb_round,
+                        iter: step as u32,
+                        imbalance: rec.work_max_avg,
+                        time_max_avg: rec.time_max_avg,
+                        migrations: migrations as u32,
+                        comm_s: rec.comm_max_s,
+                        lb_s: rec.lb_s,
+                        stage2_iters,
+                        stale_drops: comm.stale_drops(),
+                        epochs: comm.epoch(),
+                    });
+                }
             }
             // adopt the scheduled membership for the following steps.
             member.copy_from_slice(&sched);
@@ -878,6 +913,22 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
     if rank != 0 {
         if member[rank as usize] && !failed[rank as usize] {
             comm.send(0, TAG_FIN, fin);
+            // ---- telemetry gather: my always-on resilience counters,
+            // plus my local trace buffer (encoded) when tracing is on.
+            // Sent unconditionally so the message sequence does not
+            // depend on whether telemetry is enabled. A rank that died
+            // or left before this point never sends one — a dead
+            // rank's telemetry dies with it.
+            let mut ob = Vec::new();
+            wire::put_u64(&mut ob, comm.stale_drops());
+            wire::put_u64(&mut ob, comm.future_parks());
+            wire::put_u64(&mut ob, comm.barrier_timeouts());
+            wire::put_u32(&mut ob, comm.epoch());
+            if crate::obs::tracing_enabled() {
+                let events = crate::obs::trace::take_local();
+                ob.extend_from_slice(&crate::obs::trace::encode_events(&events));
+            }
+            comm.send(0, TAG_OBS, ob);
         }
         return None;
     }
@@ -890,6 +941,32 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
         .unwrap_or_else(|e| panic!("final gather incomplete: {e}"));
     for m in msgs {
         finals.push(m.data);
+    }
+    // ---- telemetry gather: sum the survivors' counters into the
+    // per-run totals (epochs converge, so max rather than sum) and
+    // absorb their trace events into the process sink — the merge on
+    // virtual timestamps happens when the sink is drained for export.
+    rs.report.obs = crate::obs::ObsTotals {
+        stale_drops: comm.stale_drops(),
+        future_parks: comm.future_parks(),
+        barrier_timeouts: comm.barrier_timeouts(),
+        epochs: comm.epoch(),
+    };
+    let obs_msgs = comm
+        .recv_tagged(TAG_OBS, expect, Comm::TIMEOUT)
+        .unwrap_or_else(|e| panic!("telemetry gather incomplete: {e}"));
+    for m in &obs_msgs {
+        let mut r = wire::Reader::new(&m.data);
+        rs.report.obs.stale_drops += r.u64();
+        rs.report.obs.future_parks += r.u64();
+        rs.report.obs.barrier_timeouts += r.u64();
+        rs.report.obs.epochs = rs.report.obs.epochs.max(r.u32());
+        let trace_bytes = r.rest();
+        if !trace_bytes.is_empty() {
+            let events = crate::obs::trace::decode_events(trace_bytes)
+                .unwrap_or_else(|e| panic!("rank {} trace payload corrupt: {e}", m.from));
+            crate::obs::trace::absorb(events);
+        }
     }
     rs.report.final_mapping = obj_to_pe;
     rs.report.verified = sh.app.verify(steps_total, &finals);

@@ -128,6 +128,7 @@ pub(crate) fn recover(
     participants: &[u32],
     failed: &mut [bool],
 ) -> Membership {
+    let _sr = crate::obs::span("recover", "recovery");
     comm.leave_group();
     let detect = plan.detect_timeout();
     if comm.world_rank() == 0 {
@@ -154,6 +155,7 @@ fn recover_root(
         for &p in &expect {
             comm.send(p, ctrl(CT_PING), Vec::new());
         }
+        crate::obs::counter!("epoch.heartbeats").add(expect.len() as u64);
         let mut alive = vec![false; world_n];
         let mut n_alive = 0usize;
         let deadline = Instant::now() + 3 * detect;
@@ -190,6 +192,8 @@ fn recover_root(
         // and excluded-but-alive ranks (hang victims) learn their fate
         // from the failed set on waking.
         let target = comm.epoch() + 1;
+        crate::obs::counter!("epoch.declarations").inc();
+        crate::obs::mark("epoch.declare", "recovery");
         let decl = encode_epoch(target, failed);
         for r in 1..world_n as u32 {
             comm.send(r, ctrl(CT_EPOCH), decl.clone());
@@ -220,6 +224,8 @@ fn recover_root(
             }
         }
         if n_acked == ackers.len() {
+            // every survivor acked: the group restarts the pipeline
+            crate::obs::counter!("epoch.quorum_restarts").inc();
             return Membership::Member;
         }
         // a survivor died between probe and ack: run another cycle.
@@ -257,6 +263,7 @@ fn recover_follower(comm: &mut Comm, detect: Duration, failed: &mut [bool]) -> M
                     failed[r as usize] = true;
                 }
                 if failed[me] {
+                    crate::obs::mark("epoch.excluded", "recovery");
                     return Membership::Excluded;
                 }
                 comm.set_epoch(epoch);
@@ -357,37 +364,46 @@ pub(crate) fn staged_pipeline(
     if !fault_gate(comm, ctx, StagePoint::Handshake, failed) {
         return Ok(None);
     }
-    let adj = protocol::handshake_node(
-        comm,
-        my_cands,
-        params.neighbor_count,
-        params.handshake_max_rounds,
-        TAG_HANDSHAKE,
-    )?;
+    let adj = {
+        let _s1 = crate::obs::span("stage1.handshake", "dist");
+        protocol::handshake_node(
+            comm,
+            my_cands,
+            params.neighbor_count,
+            params.handshake_max_rounds,
+            TAG_HANDSHAKE,
+        )?
+    };
     let my_load = node_load(inst, comm.rank);
     if !fault_gate(comm, ctx, StagePoint::VirtualLb, failed) {
         return Ok(None);
     }
-    let s2 = stage2::virtual_balance_node(
-        comm,
-        &adj,
-        my_load,
-        params.vlb_tolerance,
-        params.vlb_max_iters,
-        TAG_STAGE2,
-    )?;
+    let s2 = {
+        let _s2 = crate::obs::span("stage2.virtual", "dist");
+        stage2::virtual_balance_node(
+            comm,
+            &adj,
+            my_load,
+            params.vlb_tolerance,
+            params.vlb_max_iters,
+            TAG_STAGE2,
+        )?
+    };
     if !fault_gate(comm, ctx, StagePoint::Selection, failed) {
         return Ok(None);
     }
-    let s3 = stage3::select_and_refine_node(
-        comm,
-        inst,
-        variant,
-        &s2.flow_row,
-        params.overfill,
-        params.refine_tolerance,
-        TAG_STAGE3,
-    )?;
+    let s3 = {
+        let _s3 = crate::obs::span("stage3.select", "dist");
+        stage3::select_and_refine_node(
+            comm,
+            inst,
+            variant,
+            &s2.flow_row,
+            params.overfill,
+            params.refine_tolerance,
+            TAG_STAGE3,
+        )?
+    };
     Ok(Some(NodeOutcome {
         adj,
         flow_row: s2.flow_row,

@@ -83,6 +83,10 @@ pub(crate) mod wire {
         buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     /// Cursor over a received payload.
     pub struct Reader<'a> {
         buf: &'a [u8],
@@ -106,8 +110,20 @@ pub(crate) mod wire {
             v
         }
 
+        pub fn u64(&mut self) -> u64 {
+            let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+            self.pos += 8;
+            v
+        }
+
         pub fn is_empty(&self) -> bool {
             self.pos >= self.buf.len()
+        }
+
+        /// Everything after the cursor — for payloads that end in an
+        /// opaque sub-encoded blob (the telemetry gather's trace bytes).
+        pub fn rest(&self) -> &'a [u8] {
+            &self.buf[self.pos.min(self.buf.len())..]
         }
     }
 }
@@ -188,22 +204,28 @@ fn node_plan(
     my_cands: &[u32],
     params: &StrategyParams,
 ) -> Result<(Vec<u32>, stage2::Stage2Out), CommError> {
-    let adj = protocol::handshake_node(
-        comm,
-        my_cands,
-        params.neighbor_count,
-        params.handshake_max_rounds,
-        TAG_HANDSHAKE,
-    )?;
+    let adj = {
+        let _s1 = crate::obs::span("stage1.handshake", "dist");
+        protocol::handshake_node(
+            comm,
+            my_cands,
+            params.neighbor_count,
+            params.handshake_max_rounds,
+            TAG_HANDSHAKE,
+        )?
+    };
     let my_load = node_load(inst, comm.rank);
-    let s2 = stage2::virtual_balance_node(
-        comm,
-        &adj,
-        my_load,
-        params.vlb_tolerance,
-        params.vlb_max_iters,
-        TAG_STAGE2,
-    )?;
+    let s2 = {
+        let _s2 = crate::obs::span("stage2.virtual", "dist");
+        stage2::virtual_balance_node(
+            comm,
+            &adj,
+            my_load,
+            params.vlb_tolerance,
+            params.vlb_max_iters,
+            TAG_STAGE2,
+        )?
+    };
     Ok((adj, s2))
 }
 
@@ -220,15 +242,18 @@ pub fn node_pipeline(
     params: &StrategyParams,
 ) -> Result<NodeOutcome, CommError> {
     let (adj, s2) = node_plan(comm, inst, my_cands, params)?;
-    let s3 = stage3::select_and_refine_node(
-        comm,
-        inst,
-        variant,
-        &s2.flow_row,
-        params.overfill,
-        params.refine_tolerance,
-        TAG_STAGE3,
-    )?;
+    let s3 = {
+        let _s3 = crate::obs::span("stage3.select", "dist");
+        stage3::select_and_refine_node(
+            comm,
+            inst,
+            variant,
+            &s2.flow_row,
+            params.overfill,
+            params.refine_tolerance,
+            TAG_STAGE3,
+        )?
+    };
     Ok(NodeOutcome {
         adj,
         flow_row: s2.flow_row,

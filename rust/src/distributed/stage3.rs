@@ -161,7 +161,10 @@ pub fn select_and_refine_node(
     let members: Vec<u32> = (0..n_objects as u32)
         .filter(|&o| node_map[o as usize] == rank as u32)
         .collect();
-    let pe_assign = hierarchical::assign_pes_node(inst, rank as u32, &members, refine_tol);
+    let pe_assign = {
+        let _sr = crate::obs::span("refine.pes", "dist");
+        hierarchical::assign_pes_node(inst, rank as u32, &members, refine_tol)
+    };
 
     // ---- PE-assignment exchange: every node assembles the complete
     // new mapping (the driver routes with it; the strategy returns it).

@@ -18,6 +18,7 @@ pub mod apps;
 pub mod coordinator;
 pub mod distributed;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod simnet;
 pub mod strategies;

@@ -45,6 +45,10 @@ fn parser() -> Parser {
              distributed mode only)")
         .opt("fault-seed", None, "seed-derived single fault: victim, round, stage \
              and kind are pure functions of the seed (sets fault.seed)")
+        .opt("trace", None, "write a Chrome trace-event JSON of the run's spans here \
+             (sets obs.trace_path; open in chrome://tracing or Perfetto)")
+        .opt("metrics", None, "write per-LB-round metrics as JSONL here \
+             (sets obs.metrics_path)")
         .opt("scale", Some("8"), "viz: pixels per coordinate unit")
         .opt("out", None, "balance: write rebalanced instance here")
         .flag("strict-config", "error (instead of warn) on config keys that are set \
@@ -93,6 +97,12 @@ fn load_config(args: &difflb::util::args::Args) -> Result<Config> {
     }
     if let Some(s) = args.get("fault-seed") {
         cfg.set("fault.seed", s);
+    }
+    if let Some(s) = args.get("trace") {
+        cfg.set("obs.trace_path", s);
+    }
+    if let Some(s) = args.get("metrics") {
+        cfg.set("obs.metrics_path", s);
     }
     if args.has_flag("strict-config") {
         cfg.set("run.strict_config", "true");

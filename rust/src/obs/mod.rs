@@ -1,0 +1,190 @@
+//! Offline telemetry: counters, scoped spans, per-round metrics.
+//!
+//! Everything a production service would pull from `tracing` +
+//! `metrics` + an OTLP exporter, rebuilt dependency-free (the build
+//! environment is offline, same constraint as [`crate::util::logging`]):
+//!
+//! * [`registry`] — a process-global lock-free registry of
+//!   counters/gauges/histograms. `obs::counter!("comm.stale_drops")`
+//!   caches the registration per call site, so the steady-state cost of
+//!   an increment is one relaxed atomic add — safe to leave in hot
+//!   paths unconditionally.
+//! * [`trace`] — hierarchical scoped spans ([`span`] returns an RAII
+//!   guard) recorded into per-thread buffers and serialized as Chrome
+//!   trace-event JSON (`chrome://tracing` / Perfetto). Each simulated
+//!   rank is a `tid` lane; nesting is inferred from containment.
+//! * [`metrics`] — one [`MetricsSnapshot`] per LB round (imbalance,
+//!   migrations, modeled comm seconds, stage-2 iterations, recovery
+//!   counters), emitted as JSONL for `tools/trace_report.py`.
+//!
+//! Both spans and snapshots are **disabled by default** and gated on
+//! one relaxed atomic load; the disabled path allocates nothing and
+//! calls no clock. Telemetry observes and never steers: with tracing
+//! on or off, every strategy decision is bit-identical (locked by
+//! `tests/apps_conformance.rs`).
+//!
+//! Timestamps: one process-wide epoch ([`epoch`]) shared with the
+//! logger. On simnet every "rank" is a thread of this process, so
+//! microseconds-since-epoch is a cluster-coherent virtual time — rank
+//! buffers gathered at rank 0 merge into a single monotone timeline
+//! without clock synchronization.
+
+pub mod metrics;
+pub mod registry;
+pub mod trace;
+
+pub use metrics::MetricsSnapshot;
+pub use registry::{Counter, Gauge, Histogram};
+pub use trace::{SpanGuard, TraceEvent};
+
+// Macro re-exports so call sites read `obs::counter!("name")` (the
+// macros themselves must live at the crate root, see registry.rs).
+pub use crate::obs_counter as counter;
+pub use crate::obs_gauge as gauge;
+pub use crate::obs_histogram as histogram;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static TRACING: AtomicBool = AtomicBool::new(false);
+static METRICS: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    /// Simnet rank of the current thread (set by `Cluster`), used to
+    /// attribute log lines and trace events in interleaved output.
+    static RANK: Cell<Option<u32>> = const { Cell::new(None) };
+}
+
+/// The shared process epoch: zero point for log timestamps and trace
+/// virtual time. First caller wins; logger init and telemetry init
+/// both funnel here so the two clocks agree.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since [`epoch`] — the virtual timestamp written into
+/// trace events. Coherent across simulated ranks (one process, one
+/// clock).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Initialize telemetry + logging with one shared epoch.
+pub fn init() {
+    epoch();
+    crate::util::logging::init_from_env();
+}
+
+/// Globally enable/disable span recording.
+pub fn set_tracing(on: bool) {
+    TRACING.store(on, Ordering::Relaxed);
+}
+
+pub fn tracing_enabled() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Globally enable/disable per-round metrics snapshots.
+pub fn set_metrics(on: bool) {
+    METRICS.store(on, Ordering::Relaxed);
+}
+
+pub fn metrics_enabled() -> bool {
+    METRICS.load(Ordering::Relaxed)
+}
+
+/// Install the simnet rank for the current thread ([`crate::simnet`]'s
+/// `Cluster` calls this in every node thread it spawns).
+pub fn set_rank(rank: Option<u32>) {
+    RANK.with(|r| r.set(rank));
+}
+
+/// The current thread's simnet rank, if it is a simulated node.
+pub fn rank() -> Option<u32> {
+    RANK.with(|r| r.get())
+}
+
+/// Open a scoped span: the returned guard records a Chrome "complete"
+/// event covering its lifetime. When tracing is disabled this is one
+/// relaxed load — no clock read, no allocation.
+#[must_use = "a span measures the scope it is bound to; drop it where the scope ends"]
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    if !tracing_enabled() {
+        return SpanGuard::disabled();
+    }
+    SpanGuard::open(name, cat)
+}
+
+/// Record an instant event (a point marker, e.g. an epoch declaration)
+/// at the current virtual time. No-op when tracing is disabled.
+pub fn mark(name: &'static str, cat: &'static str) {
+    if !tracing_enabled() {
+        return;
+    }
+    trace::push_event(TraceEvent {
+        name: name.into(),
+        cat: cat.into(),
+        ph: b'i',
+        ts_us: now_us(),
+        dur_us: 0,
+        tid: rank().unwrap_or(0),
+    });
+}
+
+/// End-of-run communication/recovery totals, gathered by the
+/// distributed driver from every surviving rank and surfaced on
+/// `RunReport` (exact, per-run — unlike the process-global registry,
+/// which aggregates across every run in the process). Sequential runs
+/// leave it at the default (all zero).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ObsTotals {
+    /// Wrong-epoch messages dropped, summed over surviving ranks.
+    pub stale_drops: u64,
+    /// Future-epoch messages parked before the local rank caught up.
+    pub future_parks: u64,
+    /// Barriers that timed out (each one is a recovery trigger).
+    pub barrier_timeouts: u64,
+    /// Final membership epoch = number of epoch declarations.
+    pub epochs: u32,
+}
+
+/// Serializes unit tests that toggle the process-global tracing flag
+/// (the parallel test runner would otherwise interleave them).
+#[cfg(test)]
+pub(crate) static TEST_FLAG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_context_is_thread_local() {
+        set_rank(Some(7));
+        assert_eq!(rank(), Some(7));
+        let other = std::thread::spawn(|| rank()).join().unwrap();
+        assert_eq!(other, None, "rank must not leak across threads");
+        set_rank(None);
+        assert_eq!(rank(), None);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _guard = TEST_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_tracing(false);
+        {
+            let _s = span("should-not-appear", "test");
+            mark("also-not", "test");
+        }
+        assert!(trace::take_local().is_empty());
+    }
+
+    #[test]
+    fn virtual_time_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

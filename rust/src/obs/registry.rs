@@ -1,0 +1,409 @@
+//! Process-global lock-free metric registry.
+//!
+//! Registration (first use of a name) takes a mutex once and leaks one
+//! cell; the `obs::counter!` / `obs::gauge!` / `obs::histogram!`
+//! macros cache the returned `&'static` in a per-call-site `OnceLock`,
+//! so the steady-state cost of an update is a single relaxed atomic
+//! operation — zero allocation, safe on hot paths. Names are flat
+//! dotted strings (`"comm.stale_drops"`, `"epoch.declarations"`).
+//!
+//! The registry aggregates over the whole process lifetime (every run,
+//! every rank thread). Per-run exact values travel on
+//! [`crate::obs::ObsTotals`] instead; tests that predict exact counts
+//! assert there and only monotonicity here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Monotone event counter.
+#[derive(Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as f64 bits).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+// `[ATOMIC_ZERO; N]` is the pre-inline-const idiom for initializing
+// atomic arrays; the lint objects to interior-mutable consts in
+// general, but this one is only ever used as an array seed.
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Power-of-two-bucket histogram for non-negative integer samples
+/// (bytes, iteration counts, microseconds). Bucket `i` counts samples
+/// whose bit length is `i`, i.e. values in `[2^(i-1), 2^i)`.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; 65],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram {
+            buckets: [ATOMIC_ZERO; 65],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        let idx = (64 - v.leading_zeros()) as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile sample
+    /// (0 when the histogram is empty).
+    pub fn quantile_upper(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i == 0 { 0 } else { (1u64 << i) - 1 };
+            }
+        }
+        u64::MAX
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+/// A registered metric's current value, for dumps and tests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram { count: u64, sum: u64 },
+}
+
+static TABLE: OnceLock<Mutex<Vec<(&'static str, Metric)>>> = OnceLock::new();
+
+fn table() -> std::sync::MutexGuard<'static, Vec<(&'static str, Metric)>> {
+    // Poison-tolerant: a panic mid-registration (e.g. the type-confusion
+    // panic below) happens before any mutation, so the table is always
+    // consistent and later callers can safely keep using it.
+    let m = TABLE.get_or_init(|| Mutex::new(Vec::new()));
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn register<T>(
+    name: &'static str,
+    find: impl Fn(&Metric) -> Option<&'static T>,
+    make: impl FnOnce() -> (&'static T, Metric),
+) -> &'static T {
+    let mut t = table();
+    for (n, m) in t.iter() {
+        if *n == name {
+            return find(m).unwrap_or_else(|| {
+                panic!("obs metric '{name}' already registered with a different type")
+            });
+        }
+    }
+    let (handle, metric) = make();
+    t.push((name, metric));
+    handle
+}
+
+/// Register (or look up) the counter called `name`. Prefer the
+/// `obs::counter!` macro, which caches this lookup per call site.
+pub fn counter(name: &'static str) -> &'static Counter {
+    register(
+        name,
+        |m| match m {
+            Metric::Counter(c) => Some(*c),
+            _ => None,
+        },
+        || {
+            let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+            (c, Metric::Counter(c))
+        },
+    )
+}
+
+/// Register (or look up) the gauge called `name`.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    register(
+        name,
+        |m| match m {
+            Metric::Gauge(g) => Some(*g),
+            _ => None,
+        },
+        || {
+            let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+            (g, Metric::Gauge(g))
+        },
+    )
+}
+
+/// Register (or look up) the histogram called `name`.
+pub fn histogram(name: &'static str) -> &'static Histogram {
+    register(
+        name,
+        |m| match m {
+            Metric::Histogram(h) => Some(*h),
+            _ => None,
+        },
+        || {
+            let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+            (h, Metric::Histogram(h))
+        },
+    )
+}
+
+/// Snapshot every registered metric, in registration order.
+pub fn snapshot() -> Vec<(&'static str, MetricValue)> {
+    let t = table();
+    t.iter()
+        .map(|(n, m)| {
+            let v = match m {
+                Metric::Counter(c) => MetricValue::Counter(c.get()),
+                Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                Metric::Histogram(h) => {
+                    MetricValue::Histogram { count: h.count(), sum: h.sum() }
+                }
+            };
+            (*n, v)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Per-tag-namespace traffic counters. The simnet/distributed tag scheme
+// reserves the top byte as a protocol namespace (0x01 handshake, 0x02
+// stage 2, ... 0x7F control), so fixed 256-slot slabs make
+// `Comm::send`/`recv` accounting two relaxed adds with no lookup at
+// all — cheap enough to stay on unconditionally.
+
+static SENT_MSGS: [AtomicU64; 256] = [ATOMIC_ZERO; 256];
+static SENT_BYTES: [AtomicU64; 256] = [ATOMIC_ZERO; 256];
+static RECV_MSGS: [AtomicU64; 256] = [ATOMIC_ZERO; 256];
+static RECV_BYTES: [AtomicU64; 256] = [ATOMIC_ZERO; 256];
+
+/// Account one `Comm::send` under `tag`'s namespace (top byte).
+pub fn record_send(tag: u32, bytes: usize) {
+    let ns = (tag >> 24) as usize;
+    SENT_MSGS[ns].fetch_add(1, Ordering::Relaxed);
+    SENT_BYTES[ns].fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Account one message popped from a `Comm` inbox (counted once per
+/// message at arrival, before any parking or stale-dropping).
+pub fn record_recv(tag: u32, bytes: usize) {
+    let ns = (tag >> 24) as usize;
+    RECV_MSGS[ns].fetch_add(1, Ordering::Relaxed);
+    RECV_BYTES[ns].fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Traffic totals for one namespace:
+/// `(sent_msgs, sent_bytes, recv_msgs, recv_bytes)`.
+pub fn comm_namespace(ns: u8) -> (u64, u64, u64, u64) {
+    let i = ns as usize;
+    (
+        SENT_MSGS[i].load(Ordering::Relaxed),
+        SENT_BYTES[i].load(Ordering::Relaxed),
+        RECV_MSGS[i].load(Ordering::Relaxed),
+        RECV_BYTES[i].load(Ordering::Relaxed),
+    )
+}
+
+/// Every namespace that has seen traffic, with its totals.
+pub fn comm_namespaces() -> Vec<(u8, u64, u64, u64, u64)> {
+    (0u16..256)
+        .filter_map(|ns| {
+            let (sm, sb, rm, rb) = comm_namespace(ns as u8);
+            ((sm | sb | rm | rb) != 0).then_some((ns as u8, sm, sb, rm, rb))
+        })
+        .collect()
+}
+
+/// Human name of a protocol tag namespace (the distributed pipeline's
+/// scheme; unknown bytes print as hex).
+pub fn ns_name(ns: u8) -> &'static str {
+    match ns {
+        0x00 => "app",
+        0x01 => "handshake",
+        0x02 => "stage2",
+        0x03 => "stage3",
+        0x10 => "step",
+        0x11 => "acct",
+        0x12 => "lbc",
+        0x13 => "lbx",
+        0x14 => "mig",
+        0x15 => "ckpt",
+        0x16 => "obs",
+        0x1F => "fin",
+        0x7F => "ctrl",
+        _ => "other",
+    }
+}
+
+/// Register a counter once per call site, then increment in one relaxed
+/// atomic add: `obs::counter!("comm.stale_drops").inc()`.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:literal) => {{
+        static CELL: ::std::sync::OnceLock<&'static $crate::obs::Counter> =
+            ::std::sync::OnceLock::new();
+        *CELL.get_or_init(|| $crate::obs::registry::counter($name))
+    }};
+}
+
+/// Per-call-site cached gauge: `obs::gauge!("lb.stage2_iters").set(x)`.
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:literal) => {{
+        static CELL: ::std::sync::OnceLock<&'static $crate::obs::Gauge> =
+            ::std::sync::OnceLock::new();
+        *CELL.get_or_init(|| $crate::obs::registry::gauge($name))
+    }};
+}
+
+/// Per-call-site cached histogram: `obs::histogram!("mig.bytes").observe(b)`.
+#[macro_export]
+macro_rules! obs_histogram {
+    ($name:literal) => {{
+        static CELL: ::std::sync::OnceLock<&'static $crate::obs::Histogram> =
+            ::std::sync::OnceLock::new();
+        *CELL.get_or_init(|| $crate::obs::registry::histogram($name))
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_macro_returns_one_instance() {
+        let a = crate::obs::counter!("test.registry.counter_macro");
+        let b = counter("test.registry.counter_macro");
+        assert!(std::ptr::eq(a, b));
+        let before = a.get();
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), before + 3);
+    }
+
+    #[test]
+    fn gauge_stores_f64() {
+        let g = gauge("test.registry.gauge");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        g.set(-0.0);
+        assert_eq!(g.get(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_confusion_panics() {
+        let _ = counter("test.registry.confused");
+        let _ = gauge("test.registry.confused");
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 3, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1005);
+        assert_eq!(h.quantile_upper(0.0), 0); // first sample is the 0
+        assert!(h.quantile_upper(0.5) >= 1);
+        assert!(h.quantile_upper(1.0) >= 1000);
+    }
+
+    #[test]
+    fn snapshot_lists_registered_metrics() {
+        counter("test.registry.snap").add(5);
+        let snap = snapshot();
+        let found = snap.iter().find(|(n, _)| *n == "test.registry.snap");
+        match found {
+            Some((_, MetricValue::Counter(v))) => assert!(*v >= 5),
+            other => panic!("unexpected snapshot entry: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn namespace_slabs_accumulate() {
+        // namespace 0xEE is unused by any protocol — safe to assert
+        // deltas even with parallel tests running.
+        let (sm0, sb0, rm0, rb0) = comm_namespace(0xEE);
+        record_send(0xEE00_0001, 10);
+        record_send(0xEE00_0002, 5);
+        record_recv(0xEE00_0001, 10);
+        let (sm, sb, rm, rb) = comm_namespace(0xEE);
+        assert_eq!((sm - sm0, sb - sb0, rm - rm0, rb - rb0), (2, 15, 1, 10));
+        assert!(comm_namespaces().iter().any(|&(ns, ..)| ns == 0xEE));
+        assert_eq!(ns_name(0x7F), "ctrl");
+    }
+}

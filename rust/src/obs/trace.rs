@@ -1,0 +1,323 @@
+//! Span recording and Chrome trace-event export.
+//!
+//! Every thread owns a local event buffer (no contention on the hot
+//! path); buffers are merged into a process-global sink either at
+//! thread exit (`Cluster` flushes automatically) or explicitly by the
+//! distributed driver, whose rank 0 gathers the other ranks' buffers
+//! over the wire ([`encode_events`]/[`decode_events`]) and absorbs
+//! them. [`drain_merged`] then yields one timeline sorted by virtual
+//! timestamp — valid because all simulated ranks share the process
+//! clock ([`crate::obs::epoch`]).
+//!
+//! The output format is the Chrome trace-event JSON array understood
+//! by `chrome://tracing` and Perfetto: `ph:"X"` complete events with
+//! `ts`/`dur` in microseconds, one `tid` lane per rank.
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::io::Write;
+use std::sync::Mutex;
+
+/// One trace event. `name`/`cat` are borrowed statics when recorded
+/// in-process and owned strings when decoded from a gathered rank
+/// buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub name: Cow<'static, str>,
+    pub cat: Cow<'static, str>,
+    /// Chrome phase: `b'X'` complete (duration) or `b'i'` instant.
+    pub ph: u8,
+    /// Virtual timestamp, µs since [`crate::obs::epoch`].
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Timeline lane: the simnet rank (0 for the sequential driver).
+    pub tid: u32,
+}
+
+thread_local! {
+    static BUF: RefCell<Vec<TraceEvent>> = const { RefCell::new(Vec::new()) };
+}
+
+static SINK: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+
+/// RAII span: records a complete event covering its lifetime. Created
+/// via [`crate::obs::span`]; a disabled guard is inert.
+#[must_use = "a span measures the scope it is bound to; drop it where the scope ends"]
+pub struct SpanGuard {
+    live: Option<(&'static str, &'static str, u64)>,
+}
+
+impl SpanGuard {
+    pub(crate) fn disabled() -> SpanGuard {
+        SpanGuard { live: None }
+    }
+
+    pub(crate) fn open(name: &'static str, cat: &'static str) -> SpanGuard {
+        SpanGuard { live: Some((name, cat, crate::obs::now_us())) }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((name, cat, start)) = self.live.take() {
+            let end = crate::obs::now_us();
+            push_event(TraceEvent {
+                name: name.into(),
+                cat: cat.into(),
+                ph: b'X',
+                ts_us: start,
+                dur_us: end.saturating_sub(start),
+                tid: crate::obs::rank().unwrap_or(0),
+            });
+        }
+    }
+}
+
+/// Append an event to the current thread's buffer.
+pub fn push_event(ev: TraceEvent) {
+    BUF.with(|b| b.borrow_mut().push(ev));
+}
+
+/// Move the current thread's buffer out (a rank shipping its events to
+/// rank 0 drains here, so the thread-exit flush finds nothing to
+/// double-count).
+pub fn take_local() -> Vec<TraceEvent> {
+    BUF.with(|b| std::mem::take(&mut *b.borrow_mut()))
+}
+
+/// Merge a batch of events (local or decoded from a gathered rank
+/// buffer) into the process sink.
+pub fn absorb(events: Vec<TraceEvent>) {
+    if events.is_empty() {
+        return;
+    }
+    SINK.lock().unwrap_or_else(|e| e.into_inner()).extend(events);
+}
+
+/// Flush the current thread's buffer into the sink. `Cluster` calls
+/// this when a node thread finishes so no rank's events are lost.
+pub fn flush_local() {
+    absorb(take_local());
+}
+
+/// Merge per-rank buffers into one timeline ordered by virtual time
+/// (ties broken by rank, then span length — outer spans first so
+/// Chrome nesting renders correctly).
+pub fn merge(buffers: Vec<Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = buffers.into_iter().flatten().collect();
+    all.sort_by(|a, b| {
+        (a.ts_us, a.tid, std::cmp::Reverse(a.dur_us))
+            .cmp(&(b.ts_us, b.tid, std::cmp::Reverse(b.dur_us)))
+    });
+    all
+}
+
+/// Drain the sink as one merged, time-ordered timeline.
+pub fn drain_merged() -> Vec<TraceEvent> {
+    let drained = std::mem::take(&mut *SINK.lock().unwrap_or_else(|e| e.into_inner()));
+    merge(vec![drained])
+}
+
+// ---------------------------------------------------------------------
+// Wire codec (little-endian, self-contained so `simnet` stays free of
+// `distributed` dependencies): per event
+//   u16 name_len, name bytes, u16 cat_len, cat bytes,
+//   u8 ph, u64 ts_us, u64 dur_us, u32 tid
+// prefixed by a u32 event count.
+
+/// Serialize a rank's event buffer for the gather to rank 0.
+pub fn encode_events(events: &[TraceEvent]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + events.len() * 48);
+    out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    for e in events {
+        let name = e.name.as_bytes();
+        let cat = e.cat.as_bytes();
+        out.extend_from_slice(&(name.len().min(u16::MAX as usize) as u16).to_le_bytes());
+        out.extend_from_slice(&name[..name.len().min(u16::MAX as usize)]);
+        out.extend_from_slice(&(cat.len().min(u16::MAX as usize) as u16).to_le_bytes());
+        out.extend_from_slice(&cat[..cat.len().min(u16::MAX as usize)]);
+        out.push(e.ph);
+        out.extend_from_slice(&e.ts_us.to_le_bytes());
+        out.extend_from_slice(&e.dur_us.to_le_bytes());
+        out.extend_from_slice(&e.tid.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a gathered rank buffer; `Err` on truncation or bad UTF-8.
+pub fn decode_events(buf: &[u8]) -> Result<Vec<TraceEvent>, &'static str> {
+    struct R<'a>(&'a [u8]);
+    impl<'a> R<'a> {
+        fn bytes(&mut self, n: usize) -> Result<&'a [u8], &'static str> {
+            if self.0.len() < n {
+                return Err("truncated trace buffer");
+            }
+            let (head, tail) = self.0.split_at(n);
+            self.0 = tail;
+            Ok(head)
+        }
+        fn u16(&mut self) -> Result<u16, &'static str> {
+            Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+        }
+        fn u32(&mut self) -> Result<u32, &'static str> {
+            Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+        }
+        fn u64(&mut self) -> Result<u64, &'static str> {
+            Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+        }
+        fn str(&mut self) -> Result<String, &'static str> {
+            let len = self.u16()? as usize;
+            std::str::from_utf8(self.bytes(len)?)
+                .map(str::to_owned)
+                .map_err(|_| "bad UTF-8 in trace buffer")
+        }
+    }
+    let mut r = R(buf);
+    let count = r.u32()? as usize;
+    let mut out = Vec::with_capacity(count.min(1 << 20));
+    for _ in 0..count {
+        let name = r.str()?;
+        let cat = r.str()?;
+        let ph = r.bytes(1)?[0];
+        let ts_us = r.u64()?;
+        let dur_us = r.u64()?;
+        let tid = r.u32()?;
+        out.push(TraceEvent {
+            name: name.into(),
+            cat: cat.into(),
+            ph,
+            ts_us,
+            dur_us,
+            tid,
+        });
+    }
+    Ok(out)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write events as Chrome trace-event JSON (`chrome://tracing`,
+/// Perfetto). Instant events get thread scope so they render as
+/// markers in the owning lane.
+pub fn write_chrome_trace(path: &str, events: &[TraceEvent]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+    for (i, e) in events.iter().enumerate() {
+        let comma = if i + 1 == events.len() { "" } else { "," };
+        let ph = if e.ph == b'i' { "i" } else { "X" };
+        let scope = if e.ph == b'i' { ",\"s\":\"t\"" } else { "" };
+        let dur = if e.ph == b'i' {
+            String::new()
+        } else {
+            format!(",\"dur\":{}", e.dur_us)
+        };
+        writeln!(
+            f,
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{ph}\",\"ts\":{}{dur},\
+             \"pid\":0,\"tid\":{}{scope}}}{comma}",
+            json_escape(&e.name),
+            json_escape(&e.cat),
+            e.ts_us,
+            e.tid,
+        )?;
+    }
+    writeln!(f, "]}}")?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, ts: u64, dur: u64, tid: u32) -> TraceEvent {
+        TraceEvent {
+            name: name.into(),
+            cat: "test".into(),
+            ph: b'X',
+            ts_us: ts,
+            dur_us: dur,
+            tid,
+        }
+    }
+
+    #[test]
+    fn span_guard_records_on_drop() {
+        let _guard = crate::obs::TEST_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_tracing(true);
+        {
+            let _outer = crate::obs::span("outer", "test");
+            let _inner = crate::obs::span("inner", "test");
+        }
+        crate::obs::set_tracing(false);
+        let events = take_local();
+        // inner drops first, so it is recorded first
+        let names: Vec<&str> = events.iter().map(|e| e.name.as_ref()).collect();
+        assert_eq!(names, ["inner", "outer"]);
+        // hierarchical: the outer span contains the inner one
+        let inner = &events[0];
+        let outer = &events[1];
+        assert!(outer.ts_us <= inner.ts_us);
+        assert!(outer.ts_us + outer.dur_us >= inner.ts_us + inner.dur_us);
+    }
+
+    #[test]
+    fn merged_multi_rank_trace_is_monotone_in_virtual_time() {
+        // Three "ranks" with interleaved, unsorted buffers — as the
+        // driver's rank-0 gather produces them.
+        let r0 = vec![ev("a", 40, 5, 0), ev("b", 10, 3, 0)];
+        let r1 = vec![ev("c", 25, 10, 1), ev("d", 25, 2, 1)];
+        let r2 = vec![ev("e", 5, 100, 2)];
+        let merged = merge(vec![r0, r1, r2]);
+        assert_eq!(merged.len(), 5);
+        assert!(
+            merged.windows(2).all(|w| w[0].ts_us <= w[1].ts_us),
+            "merged trace must be monotone in virtual time: {merged:?}"
+        );
+        // equal timestamps on one lane: outer (longer) span first
+        assert_eq!(merged[1].name, "c");
+        assert_eq!(merged[2].name, "d");
+    }
+
+    #[test]
+    fn wire_codec_roundtrips() {
+        let events = vec![ev("stage2.virtual", 123, 456, 3), {
+            let mut m = ev("epoch.declare", 999, 0, 1);
+            m.ph = b'i';
+            m
+        }];
+        let decoded = decode_events(&encode_events(&events)).expect("decode");
+        assert_eq!(decoded, events);
+        assert!(decode_events(&[1, 0, 0]).is_err(), "truncated must not decode");
+    }
+
+    #[test]
+    fn chrome_json_is_wellformed() {
+        let dir = std::env::temp_dir().join("difflb_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let mut m = ev("mark\"quote", 7, 0, 1);
+        m.ph = b'i';
+        let events = vec![ev("a", 1, 2, 0), m];
+        write_chrome_trace(path.to_str().unwrap(), &events).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"traceEvents\""));
+        assert!(text.contains("\\\"quote"));
+        assert!(text.contains("\"ph\":\"i\""));
+        // balanced braces/brackets is a cheap well-formedness proxy
+        // (tools/trace_report.py --check does the full parse in CI)
+        let opens = text.matches('{').count();
+        let closes = text.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+}

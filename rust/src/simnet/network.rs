@@ -160,6 +160,12 @@ pub struct Comm {
     epoch: u32,
     /// Messages from dead epochs dropped instead of delivered.
     stale_drops: u64,
+    /// Messages from *future* epochs parked before this node caught up
+    /// (a recovered peer racing ahead of a laggard).
+    future_parks: u64,
+    /// Barriers that timed out on this endpoint (each one hands
+    /// control to the recovery layer).
+    barrier_timeouts: u64,
     /// Patience for protocol receives; [`Comm::TIMEOUT`] unless a
     /// fault plan shortens it for detection.
     patience: Duration,
@@ -191,6 +197,8 @@ impl Comm {
             group: None,
             epoch: 0,
             stale_drops: 0,
+            future_parks: 0,
+            barrier_timeouts: 0,
             patience: Self::TIMEOUT,
             plan: None,
             fault_clock: 0,
@@ -220,6 +228,36 @@ impl Comm {
         self.stale_drops
     }
 
+    /// How many future-epoch messages were parked before this node
+    /// adopted their epoch (see [`Comm::set_epoch`]).
+    pub fn future_parks(&self) -> u64 {
+        self.future_parks
+    }
+
+    /// How many barriers timed out on this endpoint.
+    pub fn barrier_timeouts(&self) -> u64 {
+        self.barrier_timeouts
+    }
+
+    /// Count `n` wrong-epoch drops, mirrored into the process-global
+    /// registry (`comm.stale_drops`) for end-of-run dumps.
+    fn count_stale(&mut self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.stale_drops += n;
+        crate::obs::counter!("comm.stale_drops").add(n);
+    }
+
+    /// Park an out-of-phase message, counting future-epoch arrivals.
+    fn park(&mut self, m: Msg) {
+        if !is_ctrl_tag(m.tag) && m.epoch > self.epoch {
+            self.future_parks += 1;
+            crate::obs::counter!("comm.future_parks").inc();
+        }
+        self.pending.push(m);
+    }
+
     /// Patience protocol receives should use (shortened under an
     /// active fault plan so detection beats the 30 s default).
     pub fn patience(&self) -> Duration {
@@ -247,7 +285,7 @@ impl Comm {
         let before = self.pending.len();
         self.pending.retain(|m| is_ctrl_tag(m.tag) || m.epoch >= epoch);
         let dropped = before - self.pending.len();
-        self.stale_drops += dropped as u64;
+        self.count_stale(dropped as u64);
         dropped
     }
 
@@ -294,6 +332,8 @@ impl Comm {
     }
 
     pub fn send(&self, to: u32, tag: u32, data: Vec<u8>) {
+        // sender-side accounting (a partitioned link still pays to send)
+        crate::obs::registry::record_send(tag, data.len());
         let to_world = self.to_world(to);
         if let Some(plan) = &self.plan {
             if plan.cut(self.world_rank, to_world, self.fault_clock) {
@@ -316,7 +356,12 @@ impl Comm {
     /// `from`.
     pub fn recv(&self, timeout: Duration) -> Result<Msg, RecvError> {
         match self.inbox.recv_timeout(timeout) {
-            Ok(m) => Ok(m),
+            Ok(m) => {
+                // arrival-side accounting: every message passes through
+                // here exactly once, before parking or stale-dropping
+                crate::obs::registry::record_recv(m.tag, m.data.len());
+                Ok(m)
+            }
             Err(RecvTimeoutError::Timeout) => Err(RecvError::Timeout),
             Err(RecvTimeoutError::Disconnected) => Err(RecvError::Disconnected),
         }
@@ -381,7 +426,7 @@ impl Comm {
         while i < self.pending.len() {
             if self.is_stale(&self.pending[i]) {
                 self.pending.remove(i);
-                self.stale_drops += 1;
+                self.count_stale(1);
             } else if self.matches(&self.pending[i], tag) && out.len() < count {
                 let m = self.pending.remove(i);
                 out.push(self.deliver(m));
@@ -393,9 +438,9 @@ impl Comm {
         while out.len() < count {
             let left = deadline.saturating_duration_since(Instant::now());
             match self.recv(left) {
-                Ok(m) if self.is_stale(&m) => self.stale_drops += 1,
+                Ok(m) if self.is_stale(&m) => self.count_stale(1),
                 Ok(m) if self.matches(&m, tag) => out.push(self.deliver(m)),
-                Ok(m) => self.pending.push(m),
+                Ok(m) => self.park(m),
                 Err(RecvError::Timeout) => {
                     return Err(CommError::Timeout { tag, want: count, got: out })
                 }
@@ -420,8 +465,8 @@ impl Comm {
             let left = deadline.saturating_duration_since(Instant::now());
             match self.recv(left) {
                 Ok(m) if is_ctrl_tag(m.tag) => return Ok(m),
-                Ok(m) if self.is_stale(&m) => self.stale_drops += 1,
-                Ok(m) => self.pending.push(m),
+                Ok(m) if self.is_stale(&m) => self.count_stale(1),
+                Ok(m) => self.park(m),
                 Err(e) => return Err(e),
             }
         }
@@ -442,9 +487,16 @@ impl Comm {
         }
         loop {
             match self.inbox.try_recv() {
-                Ok(m) if is_ctrl_tag(m.tag) => out.push(m),
-                Ok(m) if self.is_stale(&m) => self.stale_drops += 1,
-                Ok(m) => self.pending.push(m),
+                Ok(m) => {
+                    crate::obs::registry::record_recv(m.tag, m.data.len());
+                    if is_ctrl_tag(m.tag) {
+                        out.push(m);
+                    } else if self.is_stale(&m) {
+                        self.count_stale(1);
+                    } else {
+                        self.park(m);
+                    }
+                }
                 Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
             }
         }
@@ -477,6 +529,8 @@ impl Comm {
         match self.recv_tagged(tag, self.n - 1, self.patience) {
             Ok(_) => Ok(()),
             Err(e) => {
+                self.barrier_timeouts += 1;
+                crate::obs::counter!("comm.barrier_timeouts").inc();
                 let arrived = e.arrived();
                 let missing = (0..self.n as u32)
                     .filter(|&p| p != self.rank && !arrived.contains(&p))
@@ -533,7 +587,16 @@ impl Cluster {
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("simnode-{rank}"))
-                    .spawn(move || f(rank as u32, comm))
+                    .spawn(move || {
+                        // rank context: log lines and trace events from
+                        // this thread are attributed to the simnet rank
+                        crate::obs::set_rank(Some(rank as u32));
+                        let out = f(rank as u32, comm);
+                        // any span this node buffered and did not ship
+                        // to rank 0 survives into the process sink
+                        crate::obs::trace::flush_local();
+                        out
+                    })
                     .expect("spawn simnode"),
             );
         }

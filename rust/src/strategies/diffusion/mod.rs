@@ -99,6 +99,7 @@ impl Diffusion {
         let neigh = match cached {
             Some(g) => g,
             None => {
+                let _s1 = crate::obs::span("stage1.neighbors", "diffusion");
                 let g = match self.variant {
                     Variant::Communication => {
                         neighbor::comm_candidates_into(inst, &node_map, scratch);
@@ -137,13 +138,18 @@ impl Diffusion {
         let node_time = std::mem::take(&mut scratch.node_time);
         let lb_input: &[f64] =
             if inst.topo.is_uniform() { &node_loads } else { &node_time };
-        let quotas = virtual_lb::virtual_balance_with(
-            &neigh,
-            lb_input,
-            self.params.vlb_tolerance,
-            self.params.vlb_max_iters,
-            scratch,
-        );
+        let quotas = {
+            let _s2 = crate::obs::span("stage2.virtual", "diffusion");
+            virtual_lb::virtual_balance_with(
+                &neigh,
+                lb_input,
+                self.params.vlb_tolerance,
+                self.params.vlb_max_iters,
+                scratch,
+            )
+        };
+        // sampled into the per-round MetricsSnapshot by the driver
+        crate::obs::gauge!("lb.stage2_iters").set(quotas.iterations as f64);
         scratch.node_map = node_map;
         scratch.node_loads = node_loads;
         scratch.node_time = node_time;
@@ -167,27 +173,33 @@ impl LoadBalancer for Diffusion {
         // the pre-LB object -> node view; take it out so stage 3 can
         // borrow the scratch alongside it.
         let mut node_map = std::mem::take(&mut scratch.node_map);
-        match self.variant {
-            Variant::Communication => {
-                object_selection::select_comm_with(
-                    inst,
-                    &mut node_map,
-                    &quotas,
-                    self.params.overfill,
-                    scratch,
-                );
-            }
-            Variant::Coordinate => {
-                object_selection::select_coord_with(
-                    inst,
-                    &mut node_map,
-                    &quotas,
-                    self.params.overfill,
-                    scratch,
-                );
+        {
+            let _s3 = crate::obs::span("stage3.select", "diffusion");
+            match self.variant {
+                Variant::Communication => {
+                    object_selection::select_comm_with(
+                        inst,
+                        &mut node_map,
+                        &quotas,
+                        self.params.overfill,
+                        scratch,
+                    );
+                }
+                Variant::Coordinate => {
+                    object_selection::select_coord_with(
+                        inst,
+                        &mut node_map,
+                        &quotas,
+                        self.params.overfill,
+                        scratch,
+                    );
+                }
             }
         }
-        let mapping = hierarchical::assign_pes(inst, &node_map, self.params.refine_tolerance);
+        let mapping = {
+            let _s4 = crate::obs::span("refine.pes", "diffusion");
+            hierarchical::assign_pes(inst, &node_map, self.params.refine_tolerance)
+        };
         scratch.node_map = node_map;
         // recycle the quota rows for the next round
         scratch.flows_pool = quotas.flows;

@@ -5,7 +5,6 @@
 //! crate's so call sites read idiomatically.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -19,11 +18,12 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
 static INIT: std::sync::Once = std::sync::Once::new();
-static mut START: Option<Instant> = None;
 
 pub fn init_from_env() {
     INIT.call_once(|| {
-        unsafe { START = Some(Instant::now()) };
+        // timestamps share the telemetry epoch, so log lines and trace
+        // events line up on one clock
+        crate::obs::epoch();
         if let Ok(v) = std::env::var("DIFFLB_LOG") {
             set_level(match v.to_ascii_lowercase().as_str() {
                 "error" => Level::Error,
@@ -45,12 +45,9 @@ pub fn enabled(level: Level) -> bool {
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 
-/// Seconds since logger init (0.0 if never initialized).
+/// Seconds since the shared process epoch (logger + telemetry).
 pub fn elapsed() -> f64 {
-    unsafe {
-        let ptr = &raw const START;
-        (*ptr).map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
-    }
+    crate::obs::epoch().elapsed().as_secs_f64()
 }
 
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments) {
@@ -63,7 +60,12 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments) {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{:>9.3}s {tag} {module}] {msg}", elapsed());
+        // inside a simnet node body, attribute the line to its rank so
+        // interleaved 16-node chaos output stays readable
+        match crate::obs::rank() {
+            Some(r) => eprintln!("[{:>9.3}s {tag} r{r} {module}] {msg}", elapsed()),
+            None => eprintln!("[{:>9.3}s {tag} {module}] {msg}", elapsed()),
+        }
     }
 }
 

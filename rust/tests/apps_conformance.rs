@@ -218,6 +218,66 @@ fn full_cross_product_runs_through_the_generic_driver() {
 }
 
 #[test]
+fn telemetry_on_off_runs_are_bit_identical() {
+    // ISSUE 7 acceptance: spans and metrics observe the run, they must
+    // never steer it. The same app + strategy + schedule with
+    // collection fully on and fully off has to produce bit-identical
+    // decision-bearing outputs — final mapping, migration counts, and
+    // every modeled per-iteration metric. (Wall-clock fields like lb_s
+    // are legitimately noisy and deliberately not compared.)
+    let run = |kind: &str, strat_name: &str| {
+        let mut app = make_app(kind);
+        let strat = make(strat_name, StrategyParams::default()).unwrap();
+        let driver = driver_config(6, 2);
+        run_app(app.as_mut(), strat.as_ref(), &driver).unwrap()
+    };
+    for kind in apps_under_test() {
+        for strat_name in ["diff-comm", "diff-coord", "greedy-refine"] {
+            difflb::obs::set_tracing(false);
+            difflb::obs::set_metrics(false);
+            let off = run(kind, strat_name);
+            difflb::obs::set_tracing(true);
+            difflb::obs::set_metrics(true);
+            let on = run(kind, strat_name);
+            difflb::obs::set_tracing(false);
+            difflb::obs::set_metrics(false);
+            let ctx = format!("{kind} × {strat_name}");
+            assert_eq!(off.final_mapping, on.final_mapping, "{ctx}: final mapping");
+            assert_eq!(off.total_migrations, on.total_migrations, "{ctx}: migrations");
+            assert_eq!(off.records.len(), on.records.len(), "{ctx}: record counts");
+            for (x, y) in off.records.iter().zip(&on.records) {
+                assert_eq!(x.migrations, y.migrations, "{ctx} iter {}: migrations", x.iter);
+                assert_eq!(x.work_max_avg, y.work_max_avg, "{ctx} iter {}: imbalance", x.iter);
+                assert_eq!(
+                    x.time_max_avg, y.time_max_avg,
+                    "{ctx} iter {}: time imbalance",
+                    x.iter
+                );
+                assert_eq!(x.comm_max_s, y.comm_max_s, "{ctx} iter {}: comm max", x.iter);
+                assert_eq!(x.comm_avg_s, y.comm_avg_s, "{ctx} iter {}: comm avg", x.iter);
+                assert_eq!(x.node_work, y.node_work, "{ctx} iter {}: node work", x.iter);
+            }
+        }
+    }
+    // The traced halves really collected: this thread's buffer holds
+    // driver spans for every combination run with tracing on.
+    difflb::obs::trace::flush_local();
+    let events = difflb::obs::trace::drain_merged();
+    assert!(
+        events.iter().any(|e| e.name == "lb.round"),
+        "tracing-on runs recorded no lb.round spans"
+    );
+    assert!(
+        events.iter().any(|e| e.name == "app.step"),
+        "tracing-on runs recorded no app.step spans"
+    );
+    // and the metrics collector saw one row per LB round of the traced
+    // halves (6 iters at period 2 → 3 rounds each)
+    let rounds = difflb::obs::metrics::take_rounds();
+    assert!(!rounds.is_empty(), "tracing-on runs recorded no metrics rounds");
+}
+
+#[test]
 fn deterministic_loads_make_runs_reproducible() {
     for kind in apps_under_test() {
         let run = || {

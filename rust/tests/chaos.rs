@@ -220,6 +220,69 @@ fn kill_recovers_on_the_second_workload() {
 }
 
 // ---------------------------------------------------------------------
+// Telemetry: per-run resilience totals (ISSUE 7). The fault plan
+// predicts these exactly, so they are asserted exactly — on the
+// per-run `RunReport::obs` totals, which are scoped to one run. The
+// process-global registry aggregates across every test in the binary,
+// so it only ever gets monotonicity (>=) assertions.
+
+#[test]
+fn inert_runs_report_zero_resilience_totals() {
+    // No fault fires → nothing is ever stale, parked, or timed out,
+    // and no epoch is declared: all four totals must be exactly zero,
+    // on the plain path and on the armed-but-idle fault-mode path
+    // alike.
+    let plain = run_chaos_pic(Topology::flat(4), &chaos_driver(FaultPlan::none()));
+    assert_eq!(plain.obs, difflb::obs::ObsTotals::default(), "plain run");
+    let armed = run_chaos_pic(
+        Topology::flat(4),
+        &chaos_driver(FaultPlan::parse("kill:2@99").unwrap()),
+    );
+    assert_eq!(armed.obs, difflb::obs::ObsTotals::default(), "armed-but-idle plan");
+    let delayed = run_chaos_pic(
+        Topology::flat(4),
+        &chaos_driver(FaultPlan::parse("delay:2@1:s2").unwrap()),
+    );
+    assert_eq!(delayed.obs, difflb::obs::ObsTotals::default(), "sub-detection delay");
+}
+
+#[test]
+fn kill_declares_exactly_one_epoch() {
+    let rep = run_chaos_pic(
+        Topology::flat(4),
+        &chaos_driver(FaultPlan::parse("kill:2@1:s2").unwrap()),
+    );
+    assert!(rep.verified);
+    assert_eq!(rep.obs.epochs, 1, "one kill → exactly one epoch declaration");
+    // The recovery cycle left its marks in the process-global
+    // registry: a declaration, a quorum restart, and the heartbeat
+    // probes that preceded them.
+    assert!(difflb::obs::registry::counter("epoch.declarations").get() >= 1);
+    assert!(difflb::obs::registry::counter("epoch.quorum_restarts").get() >= 1);
+    assert!(difflb::obs::registry::counter("epoch.heartbeats").get() >= 1);
+}
+
+#[test]
+fn hang_exclusion_declares_exactly_one_epoch() {
+    let rep = run_chaos_pic(
+        Topology::flat(4),
+        &chaos_driver(FaultPlan::parse("hang:1@1:s2").unwrap()),
+    );
+    assert!(rep.verified);
+    assert_eq!(rep.obs.epochs, 1, "one hang exclusion → exactly one epoch");
+}
+
+#[test]
+fn partition_declares_exactly_one_epoch() {
+    let rep = run_chaos_pic(
+        Topology::flat(4),
+        &chaos_driver(FaultPlan::parse("part:3@1").unwrap()),
+    );
+    assert!(rep.verified);
+    assert_eq!(rep.obs.epochs, 1, "one partition exclusion → exactly one epoch");
+}
+
+// ---------------------------------------------------------------------
 // Pillar 3: elasticity.
 
 fn assert_resize_equivalence(spec: &str) -> (RunReport, Topology) {

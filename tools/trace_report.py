@@ -1,0 +1,200 @@
+#!/usr/bin/env python3
+"""Inspect and validate difflb telemetry exports (ISSUE 7).
+
+Two artifacts come out of a run with telemetry enabled:
+
+  * ``--trace out.json``    — Chrome trace-event JSON of the run's
+    spans (``rust/src/obs/trace.rs::write_chrome_trace``): complete
+    ``X`` events plus thread-scoped ``i`` instants, timestamps in
+    microseconds of cluster-coherent virtual time, ``tid`` = simnet
+    rank. Loadable in chrome://tracing or Perfetto as-is.
+  * ``--metrics out.jsonl`` — one JSON object per LB round
+    (``rust/src/obs/metrics.rs``) with the fixed key set below.
+
+Default mode prints a human summary: per-(cat, name) span aggregates,
+per-rank event counts, instant markers, and the per-round metrics
+table. ``--check`` validates the schemas instead and exits non-zero on
+the first violation — the CI trace-smoke job runs it against short
+sequential and distributed runs.
+
+Usage:
+  python3 tools/trace_report.py trace.json [metrics.jsonl]
+  python3 tools/trace_report.py --check trace.json [metrics.jsonl]
+  python3 tools/trace_report.py --check --require stage2.virtual,migrate trace.json
+"""
+
+import argparse
+import json
+import sys
+
+# The exact key set of one metrics JSONL record (obs/metrics.rs
+# to_json_line). `imbalance`/`time_max_avg` may be null (non-finite
+# values have no JSON representation).
+METRIC_KEYS = {
+    "round": int,
+    "iter": int,
+    "imbalance": (int, float, type(None)),
+    "time_max_avg": (int, float, type(None)),
+    "migrations": int,
+    "comm_s": (int, float, type(None)),
+    "lb_s": (int, float, type(None)),
+    "stage2_iters": int,
+    "stale_drops": int,
+    "epochs": int,
+}
+
+TRACE_PHASES = {"X", "i"}
+
+
+def fail(msg):
+    print(f"trace_report: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_trace(path):
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(f"{path}: not valid JSON: {e}")
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(f"{path}: missing traceEvents array")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        fail(f"{path}: traceEvents is not a list")
+    return events
+
+
+def check_trace(events, path, require):
+    last_ts = -1
+    names = set()
+    for i, e in enumerate(events):
+        ctx = f"{path}: event {i}"
+        if not isinstance(e, dict):
+            fail(f"{ctx}: not an object")
+        for key in ("name", "cat", "ph", "ts", "pid", "tid"):
+            if key not in e:
+                fail(f"{ctx}: missing '{key}'")
+        if not isinstance(e["name"], str) or not e["name"]:
+            fail(f"{ctx}: bad name {e['name']!r}")
+        if e["ph"] not in TRACE_PHASES:
+            fail(f"{ctx}: unknown phase {e['ph']!r}")
+        if not isinstance(e["ts"], int) or e["ts"] < 0:
+            fail(f"{ctx}: bad ts {e['ts']!r}")
+        if not isinstance(e["tid"], int) or e["tid"] < 0:
+            fail(f"{ctx}: bad tid {e['tid']!r}")
+        if e["ph"] == "X":
+            if not isinstance(e.get("dur"), int) or e["dur"] < 0:
+                fail(f"{ctx}: X event needs an integer dur >= 0")
+        else:
+            if e.get("s") != "t":
+                fail(f"{ctx}: instant events must be thread-scoped")
+        # the rank-merged export is ordered on virtual time — the
+        # acceptance property of the cross-rank gather
+        if e["ts"] < last_ts:
+            fail(f"{ctx}: ts {e['ts']} < previous {last_ts} (merge not monotone)")
+        last_ts = e["ts"]
+        names.add(e["name"])
+    for want in require:
+        if want not in names:
+            fail(f"{path}: required span '{want}' absent (have: {sorted(names)})")
+    print(f"trace OK: {path}: {len(events)} events, {len(names)} distinct names")
+
+
+def load_metrics(path):
+    rounds = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rounds.append((lineno, json.loads(line)))
+            except json.JSONDecodeError as e:
+                fail(f"{path}:{lineno}: not valid JSON: {e}")
+    return rounds
+
+
+def check_metrics(rounds, path):
+    prev_round = -1
+    for lineno, rec in rounds:
+        ctx = f"{path}:{lineno}"
+        if not isinstance(rec, dict):
+            fail(f"{ctx}: not an object")
+        if set(rec) != set(METRIC_KEYS):
+            fail(
+                f"{ctx}: key set {sorted(rec)} != expected {sorted(METRIC_KEYS)}"
+            )
+        for key, ty in METRIC_KEYS.items():
+            if not isinstance(rec[key], ty) or isinstance(rec[key], bool):
+                fail(f"{ctx}: {key} has type {type(rec[key]).__name__}")
+        if rec["round"] < prev_round:
+            fail(f"{ctx}: round {rec['round']} < previous {prev_round}")
+        prev_round = rec["round"]
+    print(f"metrics OK: {path}: {len(rounds)} LB rounds")
+
+
+def summarize_trace(events):
+    spans = {}
+    instants = {}
+    per_tid = {}
+    for e in events:
+        per_tid[e.get("tid", 0)] = per_tid.get(e.get("tid", 0), 0) + 1
+        key = (e.get("cat", ""), e.get("name", ""))
+        if e.get("ph") == "X":
+            agg = spans.setdefault(key, [0, 0, 0])
+            agg[0] += 1
+            agg[1] += e.get("dur", 0)
+            agg[2] = max(agg[2], e.get("dur", 0))
+        else:
+            instants[key] = instants.get(key, 0) + 1
+    print(f"{len(events)} events across {len(per_tid)} ranks "
+          f"({', '.join(f'r{t}:{n}' for t, n in sorted(per_tid.items()))})")
+    if spans:
+        print(f"{'cat':<12} {'span':<20} {'count':>6} {'total ms':>10} "
+              f"{'mean us':>9} {'max us':>8}")
+        for (cat, name), (count, total, mx) in sorted(spans.items()):
+            print(f"{cat:<12} {name:<20} {count:>6} {total / 1000:>10.3f} "
+                  f"{total / count:>9.1f} {mx:>8}")
+    for (cat, name), count in sorted(instants.items()):
+        print(f"{cat:<12} {name:<20} {count:>6} marks")
+
+
+def summarize_metrics(rounds):
+    print(f"{'round':>5} {'iter':>5} {'imbal':>8} {'t_imbal':>8} {'migr':>5} "
+          f"{'comm_s':>10} {'lb_s':>10} {'s2_it':>5} {'stale':>6} {'epoch':>5}")
+    for _, r in rounds:
+        fmt = lambda v, w: f"{'null':>{w}}" if v is None else f"{v:>{w}.4f}"
+        print(f"{r['round']:>5} {r['iter']:>5} {fmt(r['imbalance'], 8)} "
+              f"{fmt(r['time_max_avg'], 8)} {r['migrations']:>5} "
+              f"{fmt(r['comm_s'], 10)} {fmt(r['lb_s'], 10)} "
+              f"{r['stage2_iters']:>5} {r['stale_drops']:>6} {r['epochs']:>5}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON (--trace output)")
+    ap.add_argument("metrics", nargs="?", help="metrics JSONL (--metrics output)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate schemas and exit non-zero on violation")
+    ap.add_argument("--require", default="",
+                    help="comma-separated span names that must appear (with --check)")
+    args = ap.parse_args()
+
+    events = load_trace(args.trace)
+    require = [n for n in args.require.split(",") if n]
+    if args.check:
+        check_trace(events, args.trace, require)
+    else:
+        summarize_trace(events)
+
+    if args.metrics:
+        rounds = load_metrics(args.metrics)
+        if args.check:
+            check_metrics(rounds, args.metrics)
+        else:
+            summarize_metrics(rounds)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+//! Bad wire-protocol fixture: every wire rule fires at least once.
+//! Not compiled — scanned by rust/lint/tests/fixtures.rs, which pins
+//! the exact findings (rule, line) this file must produce.
+
+use std::collections::HashMap;
+
+pub const TAG_A: u32 = 0x0100_0000;
+pub const TAG_B: u32 = 0x0100_0000;
+pub const TAG_LOW: u32 = 0x0200_0001;
+pub const TAG_ONEWAY: u32 = 0x0300_0000;
+pub const TAG_ORPHAN: u32 = 0x0400_0000;
+pub const TAG_DEAD: u32 = 0x0500_0000;
+pub const CTRL_NS: u32 = 0x7F00_0000;
+
+pub fn exchange(comm: &mut Comm, buf: Vec<u8>) {
+    comm.send(1, TAG_A, buf.clone());
+    let _pong = comm.recv_tagged(TAG_A, 1, TIMEOUT);
+    comm.send(1, TAG_ONEWAY, buf.clone());
+    let _one = comm.recv_tagged(TAG_ORPHAN, 1, TIMEOUT).unwrap();
+    if crate::obs::tracing_enabled() {
+        comm.send(1, TAG_B, buf);
+    }
+    let _routing: HashMap<u32, u32> = HashMap::new();
+}

@@ -1,0 +1,10 @@
+//! Bad determinism fixture for the model/ scope.
+
+use std::collections::HashMap;
+
+pub fn heaviest(edges: &HashMap<(u32, u32), f64>) -> Option<(u32, u32)> {
+    edges
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(b.1).expect("weights are not NaN"))
+        .map(|(&k, _)| k)
+}

@@ -1,0 +1,15 @@
+//! Bad determinism fixture for the strategies/ scope.
+
+use std::collections::HashSet;
+
+static mut COUNTER: u64 = 0;
+
+pub fn pick(xs: &mut Vec<(u32, f64)>) -> HashSet<u32> {
+    let _t = std::time::Instant::now();
+    xs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut out = HashSet::new();
+    for &(c, _) in xs.iter() {
+        out.insert(c);
+    }
+    out
+}

@@ -1,0 +1,12 @@
+//! Bad determinism fixture outside the hash-map scope: hash-map must
+//! NOT fire here (util/ is not a decision-path module), but
+//! partial-cmp and wall-clock are repo-wide.
+
+use std::collections::HashMap;
+
+pub fn median(v: &mut Vec<f64>) -> f64 {
+    let _epoch = std::time::SystemTime::now();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let _cache: HashMap<u64, f64> = HashMap::new();
+    v[v.len() / 2]
+}

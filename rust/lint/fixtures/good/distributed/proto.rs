@@ -1,0 +1,34 @@
+//! Good wire-protocol fixture: paired tags, helper indirection
+//! (a tag passed as a `tag_base` argument counts as paired), error
+//! propagation instead of unwraps, and a `#[cfg(test)]` module whose
+//! contents must be invisible to every rule.
+
+pub const TAG_PING: u32 = 0x0100_0000;
+pub const TAG_PONG: u32 = 0x0200_0000;
+pub const TAG_BULK: u32 = 0x0300_0000;
+
+pub fn ping(comm: &mut Comm, buf: Vec<u8>) -> Result<(), CommError> {
+    comm.send(1, TAG_PING, buf);
+    let msgs = comm.recv_tagged(TAG_PONG, 1, TIMEOUT)?;
+    comm.send(0, TAG_PONG, msgs.into_iter().next().unwrap().data);
+    let _echo = comm.recv_tagged(TAG_PING, 1, TIMEOUT)?;
+    bulk_exchange(comm, TAG_BULK)
+}
+
+fn bulk_exchange(comm: &mut Comm, tag_base: u32) -> Result<(), CommError> {
+    comm.send(1, tag_base, Vec::new());
+    let _ = comm.recv_tagged(tag_base, 1, TIMEOUT)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn invisible_to_the_linter() {
+        let _m: HashMap<u32, u32> = HashMap::new();
+        let _t = std::time::Instant::now();
+        let _o = comm.recv_tagged(TAG_PING, 1, TIMEOUT).unwrap();
+    }
+}

@@ -1,0 +1,5 @@
+//! Good scoping fixture: obs/ may read real time without annotation.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,19 @@
+//! Good lexer fixture: CTRL_NS in its allowed file, plus comment /
+//! string / char-literal content that must never leak into the rules.
+
+pub const CTRL_NS: u32 = 0x7F00_0000;
+
+pub fn is_ctrl_tag(tag: u32) -> bool {
+    tag & CTRL_NS == CTRL_NS
+}
+
+/* block comments may mention HashMap, static mut,
+   Instant::now and partial_cmp().unwrap() freely */
+pub fn banner<'a>(name: &'a str) -> String {
+    let quote = '"';
+    let escaped = '\'';
+    let raw = r#"strings may mention .partial_cmp(x).unwrap() and static mut"#;
+    let plain = "multi-line strings count their \
+                 continuation newlines toward line numbers";
+    format!("{name}{quote}{escaped}{raw}{plain}")
+}

@@ -1,0 +1,16 @@
+//! Good determinism fixture: BTreeMap, total_cmp, and both allow
+//! annotation placements (line above, trailing).
+
+use std::collections::BTreeMap;
+
+pub fn pick(xs: &mut [(u32, f64)]) -> BTreeMap<u32, f64> {
+    xs.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    // difflb-lint: allow(wall-clock): fixture proving line-above annotations suppress
+    let _t = std::time::Instant::now();
+    let _scratch: HashSet<u32> = HashSet::new(); // difflb-lint: allow(hash-map): fixture proving trailing annotations suppress
+    let mut out = BTreeMap::new();
+    for &(c, w) in xs.iter() {
+        *out.entry(c).or_insert(0.0) += w;
+    }
+    out
+}

@@ -1,0 +1,317 @@
+//! A minimal Rust lexer over raw bytes: blank comments, strings and
+//! char literals (newlines preserved, so byte offsets keep their line
+//! numbers), collect `difflb-lint: allow(<rule>)` annotations from
+//! line comments, and blank `#[cfg(test)]` items. No syn — the build
+//! environment is offline and the rules below only need token-free
+//! text plus word-boundary search.
+//!
+//! `tools/lint_report.py` is the byte-for-byte twin of this module;
+//! CI diffs the two implementations' `--tags` output. Any change here
+//! must land in the twin too.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Allow-annotations: line number -> rules suppressed on that line.
+/// An annotation at line L covers findings on L and L+1, so both a
+/// trailing comment and a comment on the line above work.
+pub type Allows = BTreeMap<usize, BTreeSet<String>>;
+
+pub const ALLOW_MARK: &[u8] = b"difflb-lint: allow(";
+
+pub fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// First occurrence of `needle` in `hay` at or after `from`.
+pub fn find(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from >= hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+fn blank(out: &mut [u8], start: usize, end: usize) {
+    let end = end.min(out.len());
+    if start >= end {
+        return;
+    }
+    for b in &mut out[start..end] {
+        if *b != b'\n' {
+            *b = b' ';
+        }
+    }
+}
+
+fn note_allow(text: &[u8], at_line: usize, allows: &mut Allows) {
+    let mut k = find(text, ALLOW_MARK, 0);
+    while let Some(p) = k {
+        let start = p + ALLOW_MARK.len();
+        let Some(end) = find(text, b")", start) else {
+            break;
+        };
+        let rule = String::from_utf8_lossy(&text[start..end]).trim().to_string();
+        for ln in [at_line, at_line + 1] {
+            allows.entry(ln).or_default().insert(rule.clone());
+        }
+        k = find(text, ALLOW_MARK, end);
+    }
+}
+
+/// Blank comments, strings and char literals, collecting allow
+/// annotations. Newlines inside blanked regions are preserved.
+pub fn clean_source(src: &[u8]) -> (Vec<u8>, Allows) {
+    let n = src.len();
+    let mut out = src.to_vec();
+    let mut allows = Allows::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = src[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment (the only place allow annotations live)
+        if c == b'/' && i + 1 < n && src[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && src[j] != b'\n' {
+                j += 1;
+            }
+            note_allow(&src[i..j], line, &mut allows);
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // block comment, nested
+        if c == b'/' && i + 1 < n && src[i + 1] == b'*' {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j] == b'\n' {
+                    line += 1;
+                }
+                if src[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if src[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // raw strings: r"..." / r#"..."# (optional b prefix)
+        if c == b'r' || c == b'b' {
+            let mut j = i;
+            if src[j] == b'b' {
+                j += 1;
+            }
+            if j < n && src[j] == b'r' {
+                j += 1;
+                let mut hashes = 0usize;
+                while j < n && src[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && src[j] == b'"' {
+                    let mut closer = vec![b'"'];
+                    closer.resize(1 + hashes, b'#');
+                    let end = match find(src, &closer, j + 1) {
+                        Some(e) => e + closer.len(),
+                        None => n,
+                    };
+                    line += src[i..end].iter().filter(|&&b| b == b'\n').count();
+                    blank(&mut out, i, end);
+                    i = end;
+                    continue;
+                }
+            }
+        }
+        // plain / byte strings
+        if c == b'"' || (c == b'b' && i + 1 < n && src[i + 1] == b'"') {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n {
+                if src[j] == b'\\' {
+                    // escape: count a line-continuation's newline too
+                    if j + 1 < n && src[j + 1] == b'\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                    continue;
+                }
+                if src[j] == b'\n' {
+                    line += 1;
+                }
+                if src[j] == b'"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime: 'x' or '\x' is a literal
+        if c == b'\'' {
+            if i + 1 < n && src[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && src[j] != b'\'' {
+                    j += 1;
+                }
+                j += 1;
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+            if i + 2 < n && src[i + 2] == b'\'' {
+                blank(&mut out, i, i + 3);
+                i += 3;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    (out, allows)
+}
+
+/// Blank `#[cfg(test)]` items (the attribute through the following
+/// brace-matched block): test modules must not trip wire or
+/// determinism rules.
+pub fn blank_cfg_test(cleaned: &[u8]) -> Vec<u8> {
+    let mut out = cleaned.to_vec();
+    let attr: &[u8] = b"#[cfg(test)]";
+    let mut pos = 0usize;
+    while let Some(start) = find(cleaned, attr, pos) {
+        let Some(brace) = find(cleaned, b"{", start) else {
+            break;
+        };
+        let mut depth = 0i64;
+        let mut end = brace;
+        while end < cleaned.len() {
+            if cleaned[end] == b'{' {
+                depth += 1;
+            } else if cleaned[end] == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    end += 1;
+                    break;
+                }
+            }
+            end += 1;
+        }
+        blank(&mut out, start, end);
+        pos = end;
+    }
+    out
+}
+
+/// Byte offsets where each line starts, for offset -> line lookup.
+pub fn line_starts_of(text: &[u8]) -> Vec<usize> {
+    let mut starts = vec![0];
+    for (i, &c) in text.iter().enumerate() {
+        if c == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+/// 1-based line number of byte offset `pos`.
+pub fn line_of(pos: usize, starts: &[usize]) -> usize {
+    starts.partition_point(|&s| s <= pos)
+}
+
+/// Word-boundary occurrences of `word` in `text`.
+pub fn word_occurrences(text: &[u8], word: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(i) = find(text, word, from) {
+        let before_ok = i == 0 || !is_word(text[i - 1]);
+        let after = i + word.len();
+        let after_ok = after >= text.len() || !is_word(text[after]);
+        if before_ok && after_ok {
+            out.push(i);
+        }
+        from = i + 1;
+    }
+    out
+}
+
+/// Identifier of the innermost call whose argument list contains
+/// `pos`, or empty if the occurrence is not inside a call. Bounded
+/// backward scan: statements here are short, 600 bytes is plenty.
+pub fn enclosing_call(text: &[u8], pos: usize) -> &[u8] {
+    let mut depth = 0i64;
+    let mut steps = 0usize;
+    let mut i = pos as i64 - 1;
+    while i >= 0 && steps < 600 {
+        let c = text[i as usize];
+        if c == b')' {
+            depth += 1;
+        } else if c == b'(' {
+            if depth == 0 {
+                let j = i - 1;
+                let mut k = j;
+                while k >= 0 && is_word(text[k as usize]) {
+                    k -= 1;
+                }
+                return &text[(k + 1) as usize..(j + 1) as usize];
+            }
+            depth -= 1;
+        } else if (c == b';' || c == b'{' || c == b'}') && depth == 0 {
+            return b"";
+        }
+        i -= 1;
+        steps += 1;
+    }
+    b""
+}
+
+/// Matching `)` for the `(` at `open_pos`, or None.
+pub fn match_paren(text: &[u8], open_pos: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut i = open_pos;
+    while i < text.len() {
+        if text[i] == b'(' {
+            depth += 1;
+        } else if text[i] == b')' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Skip whitespace after `after`; if the next token is `.method`,
+/// return the method name, else empty.
+pub fn chained_method(text: &[u8], after: usize) -> &[u8] {
+    let mut i = after;
+    while i < text.len() && (text[i] == b' ' || text[i] == b'\t' || text[i] == b'\n') {
+        i += 1;
+    }
+    if i >= text.len() || text[i] != b'.' {
+        return b"";
+    }
+    i += 1;
+    let j = i;
+    let mut k = j;
+    while k < text.len() && is_word(text[k]) {
+        k += 1;
+    }
+    &text[j..k]
+}

@@ -1,0 +1,169 @@
+//! difflb-lint: project-specific static analysis for the difflb
+//! workspace — wire-protocol invariants (tag namespaces, send/recv
+//! pairing, CTRL_NS confinement, flag-independence of the message
+//! sequence) and determinism invariants (no HashMap/HashSet in
+//! decision paths, no `partial_cmp().unwrap()`, no wall-clock reads
+//! outside obs/, no `static mut`, no unwrapped Comm results in
+//! distributed/).
+//!
+//! Rules run over lexed source text (comments/strings blanked,
+//! `#[cfg(test)]` items removed) — see [`lexer`]. Findings are
+//! suppressed by an inline annotation on the finding's line or the
+//! line directly above it:
+//!
+//! ```text
+//! // difflb-lint: allow(<rule>): <reason>
+//! ```
+//!
+//! `tools/lint_report.py` is a regex/lexer twin of this crate for
+//! in-container use; CI cross-validates the two by diffing their
+//! `--tags` output and requiring zero findings from both.
+
+pub mod lexer;
+mod rules;
+mod wire;
+
+use lexer::{line_of, line_starts_of, Allows};
+use std::fmt;
+use std::path::Path;
+
+pub use wire::{classify_uses, extract_tags, Tag, Uses};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub rel: String,
+    pub line: usize,
+    pub rule: String,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.rel, self.line, self.rule, self.msg)
+    }
+}
+
+/// One lexed source file: blanked text, allow annotations, line table.
+pub struct SourceFile {
+    pub rel: String,
+    pub text: Vec<u8>,
+    pub allows: Allows,
+    starts: Vec<usize>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: String, src: &[u8]) -> Self {
+        let (cleaned, allows) = lexer::clean_source(src);
+        let text = lexer::blank_cfg_test(&cleaned);
+        let starts = line_starts_of(&text);
+        SourceFile { rel, text, allows, starts }
+    }
+
+    /// 1-based line of byte offset `pos`.
+    pub fn line(&self, pos: usize) -> usize {
+        line_of(pos, &self.starts)
+    }
+}
+
+/// Finding sink that applies each file's allow annotations.
+pub struct Emit<'a> {
+    files: &'a [SourceFile],
+    pub findings: Vec<Finding>,
+}
+
+impl Emit<'_> {
+    pub fn finding(&mut self, rel: &str, line: usize, rule: &str, msg: String) {
+        let f = self.files.iter().find(|f| f.rel == rel).expect("finding in a loaded file");
+        if f.allows.get(&line).is_some_and(|rules| rules.contains(rule)) {
+            return;
+        }
+        self.findings.push(Finding { rel: rel.to_string(), line, rule: rule.to_string(), msg });
+    }
+}
+
+// ---- rule scoping by repo-relative path (relative to the scan root,
+// which is rust/src in CI).
+
+/// Wire-protocol rules run over the message-passing layers only.
+pub fn is_wire_file(rel: &str) -> bool {
+    rel.starts_with("distributed/") || rel.starts_with("simnet/")
+}
+
+/// Decision-path modules where container iteration order reaches an
+/// assignment decision.
+pub fn hash_map_scoped(rel: &str) -> bool {
+    rel.starts_with("strategies/") || rel.starts_with("model/") || rel.starts_with("distributed/")
+}
+
+/// Telemetry and harness code may read real time freely.
+pub fn wall_clock_allowed(rel: &str) -> bool {
+    rel.starts_with("obs/") || rel == "util/bench.rs" || rel == "util/logging.rs"
+}
+
+/// The only files allowed to mention CTRL_NS: its definition and the
+/// epoch control plane.
+pub const CTRL_NS_ALLOWED: [&str; 2] = ["simnet/network.rs", "distributed/epoch.rs"];
+
+/// Load every `.rs` file under `root`, lexed, sorted by relative path.
+pub fn load_files(root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    fn walk(dir: &Path, root: &Path, rels: &mut Vec<String>) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, root, rels)?;
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .expect("walk stays under root")
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                rels.push(rel);
+            }
+        }
+        Ok(())
+    }
+    let mut rels = Vec::new();
+    walk(root, root, &mut rels)?;
+    rels.sort();
+    rels.into_iter()
+        .map(|rel| {
+            let src = std::fs::read(root.join(&rel))?;
+            Ok(SourceFile::parse(rel, &src))
+        })
+        .collect()
+}
+
+/// Run every rule over `files`; findings sorted by (rel, line, rule).
+pub fn analyze(files: &[SourceFile]) -> Vec<Finding> {
+    let tags = wire::extract_tags(files);
+    let counts = wire::classify_uses(files, &tags);
+    let mut emit = Emit { files, findings: Vec::new() };
+    wire::wire_findings(files, &tags, &counts, &mut emit);
+    for f in files {
+        rules::determinism_findings(f, &mut emit);
+    }
+    let mut findings = emit.findings;
+    findings.sort();
+    findings
+}
+
+/// The wire-protocol tag table, one line per tag sorted by
+/// (value, name) — byte-identical to `tools/lint_report.py --tags`.
+pub fn tag_table(files: &[SourceFile]) -> String {
+    use fmt::Write as _;
+    let tags = wire::extract_tags(files);
+    let counts = wire::classify_uses(files, &tags);
+    let mut sorted: Vec<&Tag> = tags.iter().collect();
+    sorted.sort_by(|a, b| a.value.cmp(&b.value).then_with(|| a.name.cmp(&b.name)));
+    let mut out = String::new();
+    for t in sorted {
+        let c = &counts[&t.name];
+        let _ = writeln!(
+            out,
+            "{} 0x{:08x} {} sends={} recvs={} other={}",
+            t.name, t.value, t.rel, c.sends, c.recvs, c.other
+        );
+    }
+    out
+}

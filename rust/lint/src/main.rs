@@ -1,0 +1,39 @@
+//! CLI: `difflb-lint [--tags] [root]` (default root: rust/src).
+//!
+//! Without `--tags`, prints findings one per line and exits 1 if any
+//! survive the allowlist. With `--tags`, prints the wire-protocol tag
+//! table for cross-validation against `tools/lint_report.py --tags`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let tags_mode = args.iter().any(|a| a == "--tags");
+    args.retain(|a| a != "--tags");
+    let root = PathBuf::from(args.first().map_or("rust/src", String::as_str));
+
+    let files = match difflb_lint::load_files(&root) {
+        Ok(files) => files,
+        Err(e) => {
+            eprintln!("difflb-lint: cannot read {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if tags_mode {
+        print!("{}", difflb_lint::tag_table(&files));
+        return ExitCode::SUCCESS;
+    }
+
+    let findings = difflb_lint::analyze(&files);
+    for f in &findings {
+        println!("{f}");
+    }
+    eprintln!("{} finding(s) across {} file(s)", findings.len(), files.len());
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,128 @@
+//! Determinism rules: container iteration order, float comparison
+//! totality, wall-clock reads, `static mut`, and Comm-result unwraps.
+
+use crate::lexer::{chained_method, is_word, match_paren, word_occurrences};
+use crate::{Emit, SourceFile};
+
+const UNWRAPPERS: [&[u8]; 4] = [b"unwrap", b"unwrap_or", b"unwrap_or_else", b"expect"];
+
+pub fn determinism_findings(f: &SourceFile, emit: &mut Emit<'_>) {
+    let text = &f.text;
+
+    // ---- hash-map: iteration order must be deterministic in any
+    // module whose output feeds an assignment decision. One finding
+    // per line, however many mentions the line holds.
+    if crate::hash_map_scoped(&f.rel) {
+        let mut lines_hit: Vec<usize> = Vec::new();
+        const HASHES: [&[u8]; 2] = [b"HashMap", b"HashSet"];
+        for word in HASHES {
+            for pos in word_occurrences(text, word) {
+                lines_hit.push(f.line(pos));
+            }
+        }
+        lines_hit.sort_unstable();
+        lines_hit.dedup();
+        for ln in lines_hit {
+            emit.finding(
+                &f.rel,
+                ln,
+                "hash-map",
+                "HashMap/HashSet in a decision-path module; \
+                 use BTreeMap/BTreeSet or a sorted drain"
+                    .to_string(),
+            );
+        }
+    }
+
+    // ---- partial-cmp: .partial_cmp(..) chained into an unwrap is a
+    // NaN landmine and not a total order; total_cmp is both.
+    for pos in word_occurrences(text, b"partial_cmp") {
+        if pos == 0 || text[pos - 1] != b'.' {
+            continue;
+        }
+        let open_pos = pos + b"partial_cmp".len();
+        if open_pos >= text.len() || text[open_pos] != b'(' {
+            continue;
+        }
+        let Some(close) = match_paren(text, open_pos) else {
+            continue;
+        };
+        if UNWRAPPERS.contains(&chained_method(text, close + 1)) {
+            emit.finding(
+                &f.rel,
+                f.line(pos),
+                "partial-cmp",
+                "partial_cmp().unwrap() on floats; use total_cmp".to_string(),
+            );
+        }
+    }
+
+    // ---- wall-clock: real time must never feed a decision; reads
+    // outside obs/ need an annotation stating they are measurement.
+    if !crate::wall_clock_allowed(&f.rel) {
+        const CLOCKS: [&[u8]; 2] = [b"Instant::now", b"SystemTime::now"];
+        for pat in CLOCKS {
+            let head_len = pat.iter().position(|&b| b == b':').expect("pattern has ::");
+            for pos in word_occurrences(text, &pat[..head_len]) {
+                if text[pos..].starts_with(pat) {
+                    emit.finding(
+                        &f.rel,
+                        f.line(pos),
+                        "wall-clock",
+                        "wall-clock read outside obs/; \
+                         annotate if this is measurement, not decision input"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- static-mut: banned outright.
+    for pos in word_occurrences(text, b"static") {
+        let rest = &text[pos + b"static".len()..];
+        let mut k = 0usize;
+        while k < rest.len() && (rest[k] == b' ' || rest[k] == b'\t') {
+            k += 1;
+        }
+        if rest[k..].starts_with(b"mut") && (k + 3 >= rest.len() || !is_word(rest[k + 3])) {
+            emit.finding(
+                &f.rel,
+                f.line(pos),
+                "static-mut",
+                "static mut is a data race waiting to happen; \
+                 use atomics or OnceLock"
+                    .to_string(),
+            );
+        }
+    }
+
+    // ---- comm-unwrap: Comm results in distributed/ must propagate.
+    if f.rel.starts_with("distributed/") {
+        const COMM_RECVS: [&[u8]; 2] = [b"recv_tagged", b"barrier"];
+        for word in COMM_RECVS {
+            for pos in word_occurrences(text, word) {
+                if pos == 0 || text[pos - 1] != b'.' {
+                    continue;
+                }
+                let open_pos = pos + word.len();
+                if open_pos >= text.len() || text[open_pos] != b'(' {
+                    continue;
+                }
+                let Some(close) = match_paren(text, open_pos) else {
+                    continue;
+                };
+                if UNWRAPPERS.contains(&chained_method(text, close + 1)) {
+                    emit.finding(
+                        &f.rel,
+                        f.line(pos),
+                        "comm-unwrap",
+                        "Comm result unwrapped; propagate CommError \
+                         so recovery stays reachable"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}

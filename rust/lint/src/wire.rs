@@ -1,0 +1,257 @@
+//! Wire-protocol rules: tag extraction, send/recv classification,
+//! namespace collision, pairing, CTRL_NS confinement and
+//! flag-independence of the message sequence.
+
+use crate::lexer::{enclosing_call, find, is_word, word_occurrences};
+use crate::{Emit, SourceFile};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One `const TAG_* / CTRL_NS : u32 = ...;` definition site.
+pub struct Tag {
+    pub name: String,
+    pub value: u64,
+    pub rel: String,
+    pub line: usize,
+}
+
+/// Use counts of one tag across the wire layer.
+#[derive(Default, Clone)]
+pub struct Uses {
+    pub sends: usize,
+    pub recvs: usize,
+    /// neither a direct send nor receive: a `tag_base` handed to a
+    /// protocol helper, a mask computation, a re-export — treated as
+    /// satisfying pairing (the helper sends and receives internally).
+    pub other: usize,
+}
+
+/// `int(lit, 0)`-style literal parse (underscores already stripped).
+fn parse_int(lit: &str) -> Option<u64> {
+    let s = lit.trim();
+    let (digits, radix) = if let Some(x) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        (x, 16)
+    } else if let Some(x) = s.strip_prefix("0o").or_else(|| s.strip_prefix("0O")) {
+        (x, 8)
+    } else if let Some(x) = s.strip_prefix("0b").or_else(|| s.strip_prefix("0B")) {
+        (x, 2)
+    } else {
+        (s, 10)
+    };
+    u64::from_str_radix(digits, radix).ok()
+}
+
+/// Every `const TAG_*`/`const CTRL_NS` in the wire layer, in
+/// (rel, line) order.
+pub fn extract_tags(files: &[SourceFile]) -> Vec<Tag> {
+    let mut tags = Vec::new();
+    for f in files {
+        if !crate::is_wire_file(&f.rel) {
+            continue;
+        }
+        let text = &f.text;
+        for pos in word_occurrences(text, b"const") {
+            let mut i = pos + b"const".len();
+            while i < text.len() && (text[i] == b' ' || text[i] == b'\t') {
+                i += 1;
+            }
+            let mut j = i;
+            while j < text.len() && is_word(text[j]) {
+                j += 1;
+            }
+            let name = String::from_utf8_lossy(&text[i..j]).into_owned();
+            if !(name.starts_with("TAG_") || name == "CTRL_NS") {
+                continue;
+            }
+            let rest = &text[j..(j + 80).min(text.len())];
+            let mut k = 0usize;
+            while k < rest.len() && (rest[k] == b' ' || rest[k] == b'\t') {
+                k += 1;
+            }
+            if k >= rest.len() || rest[k] != b':' {
+                continue;
+            }
+            let (Some(eq), Some(semi)) = (find(rest, b"=", k), find(rest, b";", k)) else {
+                continue;
+            };
+            if eq > semi {
+                continue;
+            }
+            let lit: String = String::from_utf8_lossy(&rest[eq + 1..semi])
+                .chars()
+                .filter(|&c| c != '_')
+                .collect();
+            let Some(value) = parse_int(&lit) else {
+                continue;
+            };
+            tags.push(Tag { name, value, rel: f.rel.clone(), line: f.line(pos) });
+        }
+    }
+    tags
+}
+
+/// Classify every non-definition occurrence of each tag by the call
+/// it sits in: `send(..)` / `recv_tagged(..)|barrier(..)` / other.
+pub fn classify_uses(files: &[SourceFile], tags: &[Tag]) -> BTreeMap<String, Uses> {
+    let defs: BTreeSet<(&str, usize)> =
+        tags.iter().map(|t| (t.rel.as_str(), t.line)).collect();
+    let mut counts: BTreeMap<String, Uses> =
+        tags.iter().map(|t| (t.name.clone(), Uses::default())).collect();
+    for f in files {
+        if !crate::is_wire_file(&f.rel) {
+            continue;
+        }
+        for t in tags {
+            let c = counts.get_mut(&t.name).expect("counts cover every tag");
+            for pos in word_occurrences(&f.text, t.name.as_bytes()) {
+                if defs.contains(&(f.rel.as_str(), f.line(pos))) {
+                    continue;
+                }
+                match enclosing_call(&f.text, pos) {
+                    b"send" => c.sends += 1,
+                    b"recv_tagged" | b"barrier" => c.recvs += 1,
+                    _ => c.other += 1,
+                }
+            }
+        }
+    }
+    counts
+}
+
+pub fn wire_findings(
+    files: &[SourceFile],
+    tags: &[Tag],
+    counts: &BTreeMap<String, Uses>,
+    emit: &mut Emit<'_>,
+) {
+    // ---- namespace layout: low 24 bits clear, top byte unique.
+    let mut seen_ns: BTreeMap<u64, &str> = BTreeMap::new();
+    for t in tags {
+        if t.value & 0x00FF_FFFF != 0 {
+            emit.finding(
+                &t.rel,
+                t.line,
+                "tag-collision",
+                format!(
+                    "tag namespace constant {} = 0x{:08x} sets low-24 bits \
+                     (namespaces are the top byte)",
+                    t.name, t.value
+                ),
+            );
+        }
+        let ns = t.value >> 24;
+        if let Some(first) = seen_ns.get(&ns) {
+            emit.finding(
+                &t.rel,
+                t.line,
+                "tag-collision",
+                format!("tag {} shares namespace byte 0x{ns:02x} with {first}", t.name),
+            );
+        } else {
+            seen_ns.insert(ns, &t.name);
+        }
+    }
+    // ---- pairing: every data tag both sent and received somewhere
+    // (helper indirection counts as both).
+    for t in tags {
+        if t.name == "CTRL_NS" {
+            continue;
+        }
+        let c = &counts[&t.name];
+        let total = c.sends + c.recvs + c.other;
+        if total == 0 {
+            emit.finding(&t.rel, t.line, "tag-unpaired", format!("tag {} is never used", t.name));
+        } else if c.sends > 0 && c.recvs == 0 && c.other == 0 {
+            emit.finding(
+                &t.rel,
+                t.line,
+                "tag-unpaired",
+                format!("tag {} is sent but never received", t.name),
+            );
+        } else if c.recvs > 0 && c.sends == 0 && c.other == 0 {
+            emit.finding(
+                &t.rel,
+                t.line,
+                "tag-unpaired",
+                format!("tag {} is received but never sent", t.name),
+            );
+        }
+    }
+
+    for f in files {
+        if !crate::is_wire_file(&f.rel) {
+            continue;
+        }
+        // ---- CTRL_NS confinement to the epoch layer.
+        if !crate::CTRL_NS_ALLOWED.contains(&f.rel.as_str()) {
+            for pos in word_occurrences(&f.text, b"CTRL_NS") {
+                emit.finding(
+                    &f.rel,
+                    f.line(pos),
+                    "ctrl-ns",
+                    "CTRL_NS outside the epoch layer \
+                     (allowed: simnet/network.rs, distributed/epoch.rs)"
+                        .to_string(),
+                );
+            }
+        }
+        // ---- flag-independence: no comm call lexically inside an
+        // `if ...tracing_enabled()/metrics_enabled()...` block.
+        let text = &f.text;
+        for pos in word_occurrences(text, b"if") {
+            let mut brace = None;
+            let mut depth = 0i64;
+            let mut i = pos + 2;
+            while i < text.len() && i < pos + 300 {
+                match text[i] {
+                    b'(' => depth += 1,
+                    b')' => depth -= 1,
+                    b'{' if depth == 0 => {
+                        brace = Some(i);
+                        break;
+                    }
+                    b';' => break,
+                    _ => {}
+                }
+                i += 1;
+            }
+            let Some(brace) = brace else {
+                continue;
+            };
+            let cond = &text[pos..brace];
+            if find(cond, b"tracing_enabled", 0).is_none()
+                && find(cond, b"metrics_enabled", 0).is_none()
+            {
+                continue;
+            }
+            let mut depth = 0i64;
+            let mut end = brace;
+            while end < text.len() {
+                if text[end] == b'{' {
+                    depth += 1;
+                } else if text[end] == b'}' {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                end += 1;
+            }
+            let block = &text[brace..end.min(text.len())];
+            const CALLS: [&[u8]; 3] = [b".send(", b".recv_tagged(", b".barrier("];
+            for call in CALLS {
+                let mut k = find(block, call, 0);
+                while let Some(p) = k {
+                    emit.finding(
+                        &f.rel,
+                        f.line(brace + p),
+                        "flag-guarded-send",
+                        "comm call inside a telemetry-flag conditional \
+                         (wire sequence must not depend on obs flags)"
+                            .to_string(),
+                    );
+                    k = find(block, call, p + 1);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Fixture lockdown for difflb-lint: the bad corpus must produce
+//! exactly the findings below (rule, file, line and message), the
+//! good corpus must produce none, and the real source tree must be
+//! clean. The expected strings were cross-validated against
+//! `tools/lint_report.py` on the same corpora — if these tests and
+//! the CI twin-diff both pass, the two implementations agree.
+
+use std::path::{Path, PathBuf};
+
+fn fixture_root(which: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(which)
+}
+
+fn rendered(root: &Path) -> Vec<String> {
+    let files = difflb_lint::load_files(root).expect("fixture tree readable");
+    difflb_lint::analyze(&files).iter().map(ToString::to_string).collect()
+}
+
+#[test]
+fn bad_corpus_findings_are_exact() {
+    let expect = vec![
+        "distributed/proto.rs:5: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
+        "distributed/proto.rs:8: [tag-collision] tag TAG_B shares namespace byte 0x01 with TAG_A",
+        "distributed/proto.rs:8: [tag-unpaired] tag TAG_B is sent but never received",
+        "distributed/proto.rs:9: [tag-collision] tag namespace constant TAG_LOW = 0x02000001 sets low-24 bits (namespaces are the top byte)",
+        "distributed/proto.rs:9: [tag-unpaired] tag TAG_LOW is never used",
+        "distributed/proto.rs:10: [tag-unpaired] tag TAG_ONEWAY is sent but never received",
+        "distributed/proto.rs:11: [tag-unpaired] tag TAG_ORPHAN is received but never sent",
+        "distributed/proto.rs:12: [tag-unpaired] tag TAG_DEAD is never used",
+        "distributed/proto.rs:13: [ctrl-ns] CTRL_NS outside the epoch layer (allowed: simnet/network.rs, distributed/epoch.rs)",
+        "distributed/proto.rs:19: [comm-unwrap] Comm result unwrapped; propagate CommError so recovery stays reachable",
+        "distributed/proto.rs:21: [flag-guarded-send] comm call inside a telemetry-flag conditional (wire sequence must not depend on obs flags)",
+        "distributed/proto.rs:23: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
+        "model/graph.rs:3: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
+        "model/graph.rs:5: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
+        "model/graph.rs:8: [partial-cmp] partial_cmp().unwrap() on floats; use total_cmp",
+        "strategies/pick.rs:3: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
+        "strategies/pick.rs:5: [static-mut] static mut is a data race waiting to happen; use atomics or OnceLock",
+        "strategies/pick.rs:7: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
+        "strategies/pick.rs:8: [wall-clock] wall-clock read outside obs/; annotate if this is measurement, not decision input",
+        "strategies/pick.rs:9: [partial-cmp] partial_cmp().unwrap() on floats; use total_cmp",
+        "strategies/pick.rs:10: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
+        "util/stats.rs:8: [wall-clock] wall-clock read outside obs/; annotate if this is measurement, not decision input",
+        "util/stats.rs:9: [partial-cmp] partial_cmp().unwrap() on floats; use total_cmp",
+    ];
+    assert_eq!(rendered(&fixture_root("bad")), expect);
+}
+
+#[test]
+fn bad_corpus_tag_table_is_exact() {
+    let files = difflb_lint::load_files(&fixture_root("bad")).expect("fixture tree readable");
+    let expect = "\
+TAG_A 0x01000000 distributed/proto.rs sends=1 recvs=1 other=0
+TAG_B 0x01000000 distributed/proto.rs sends=1 recvs=0 other=0
+TAG_LOW 0x02000001 distributed/proto.rs sends=0 recvs=0 other=0
+TAG_ONEWAY 0x03000000 distributed/proto.rs sends=1 recvs=0 other=0
+TAG_ORPHAN 0x04000000 distributed/proto.rs sends=0 recvs=1 other=0
+TAG_DEAD 0x05000000 distributed/proto.rs sends=0 recvs=0 other=0
+CTRL_NS 0x7f000000 distributed/proto.rs sends=0 recvs=0 other=0
+";
+    assert_eq!(difflb_lint::tag_table(&files), expect);
+}
+
+#[test]
+fn good_corpus_is_clean() {
+    let findings = rendered(&fixture_root("good"));
+    assert!(findings.is_empty(), "good corpus must be clean, got:\n{}", findings.join("\n"));
+}
+
+/// The real source tree must be clean: every true finding was fixed,
+/// every deliberate exception carries an inline allow annotation.
+#[test]
+fn rust_src_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let findings = rendered(&root);
+    assert!(findings.is_empty(), "rust/src must lint clean, got:\n{}", findings.join("\n"));
+}
+
+/// Wire-protocol sanity on the real tree: the tag table is non-empty,
+/// namespaces are unique, and the protocol tags everyone relies on
+/// are present (a rename would silently drop them from the checker).
+#[test]
+fn rust_src_tag_table_covers_the_protocol() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let files = difflb_lint::load_files(&root).expect("src tree readable");
+    let table = difflb_lint::tag_table(&files);
+    for name in ["TAG_HANDSHAKE", "TAG_STAGE2", "TAG_STAGE3", "TAG_STEP", "TAG_MIG", "TAG_FIN", "CTRL_NS"] {
+        assert!(table.contains(name), "tag {name} missing from table:\n{table}");
+    }
+}

@@ -287,7 +287,7 @@ pub fn run_app<A: App + ?Sized>(
                 // speeds, not the app's static base topology
                 inst.topo = lb_topo;
             }
-            let t = std::time::Instant::now();
+            let t = std::time::Instant::now(); // difflb-lint: allow(wall-clock): measured lb seconds feed the report, not the mapping
             let asg = if cfg.resize.is_active() {
                 let alive = cfg.resize.alive_after(lb_round, topo.n_nodes);
                 if alive.iter().all(|&a| a) {

@@ -191,7 +191,7 @@ impl App for Hotspot {
     /// One step: evaluate the drifted peak's loads (the compute phase —
     /// measured), exchange one halo payload per edge.
     fn step(&mut self, ctx: &mut StepCtx) -> Result<StepStats> {
-        let t = Instant::now();
+        let t = Instant::now(); // difflb-lint: allow(wall-clock): measured compute seconds feed the report, not the mapping
         let step = self.steps_done;
         let mut total = 0.0;
         for o in 0..self.work.len() {

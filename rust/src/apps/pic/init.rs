@@ -92,7 +92,7 @@ fn apportion(weights: &[f64], n: usize) -> Vec<usize> {
     let mut short = n - counts.iter().sum::<usize>();
     let mut rema: Vec<(usize, f64)> =
         ideal.iter().enumerate().map(|(i, x)| (i, x - x.floor())).collect();
-    rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    rema.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     for (i, _) in rema {
         if short == 0 {
             break;

@@ -259,7 +259,7 @@ impl App for PicApp {
     /// `ctx.moved` log (no per-step allocation); the driver aggregates
     /// them with the same stable sort-merge the recorder uses.
     fn step(&mut self, ctx: &mut StepCtx) -> Result<StepStats> {
-        let t = Instant::now();
+        let t = Instant::now(); // difflb-lint: allow(wall-clock): measured compute seconds feed the report, not the mapping
         match &self.backend {
             Backend::Native => {
                 push::native_push(&mut self.state, self.cfg.grid as f64, self.cfg.q, self.cfg.threads)

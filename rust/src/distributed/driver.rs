@@ -74,7 +74,7 @@ use crate::apps::pic::{self, PicConfig};
 use crate::model::{
     rehome_mapping, restrict_instance, CommGraph, Instance, Topology, TrafficRecorder,
 };
-use crate::simnet::network::{Cluster, Comm, CostTracker};
+use crate::simnet::network::{Cluster, Comm, CommError, CostTracker};
 use crate::strategies::diffusion::Variant;
 use crate::strategies::StrategyParams;
 use crate::util::stats::Summary;
@@ -294,8 +294,58 @@ struct RootState {
     report: RunReport,
 }
 
-#[allow(clippy::too_many_lines)]
+/// A protocol stage that came up short: which stage starved, and the
+/// [`CommError`] that starved it. [`node_run`] propagates these to the
+/// single fault boundary in [`node_main`] instead of panicking at the
+/// receive site, so every stage's failure reaches the recovery
+/// decision with its context intact.
+struct StageFailure {
+    stage: String,
+    err: CommError,
+}
+
+impl std::fmt::Display for StageFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.stage, self.err)
+    }
+}
+
+/// `map_err` adapter attaching lazy stage context to a comm failure
+/// (lazy: the happy path must not pay for a `format!`).
+fn at_stage(stage: impl FnOnce() -> String) -> impl FnOnce(CommError) -> StageFailure {
+    move |err| StageFailure { stage: stage(), err }
+}
+
+/// The per-node driver body, wrapped around [`node_run`]'s propagated
+/// stage failures. On a healthy cluster any starved stage is a
+/// protocol bug and panics exactly like the old inline unwraps did.
+/// Under an active fault plan the failure first consults the epoch
+/// control plane: a rank the quorum has already declared dead (killed,
+/// hung past its exclusion, or partitioned away) exits dead — the run
+/// continues on the survivors, which hold this rank's checkpoint —
+/// instead of poisoning the whole cluster with a panic.
 fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<RunReport> {
+    match node_run(rank, comm, sh) {
+        Ok(report) => report,
+        Err(f) => {
+            if sh.driver.fault_plan.is_active() {
+                let mut failed = vec![false; sh.app.topo().n_nodes];
+                if epoch::catch_up(comm, &mut failed) {
+                    crate::info!("rank {rank}: declared dead at {f}; exiting");
+                    return None;
+                }
+            }
+            panic!("rank {rank}: {f}");
+        }
+    }
+}
+
+#[allow(clippy::too_many_lines)]
+fn node_run<A: DistApp>(
+    rank: u32,
+    comm: &mut Comm,
+    sh: &Shared<A>,
+) -> Result<Option<RunReport>, StageFailure> {
     let topo = sh.app.topo();
     let n_objs = sh.app.n_objects();
     let n_nodes = topo.n_nodes;
@@ -378,7 +428,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
             // a survivable fault.
             let arrivals = comm
                 .recv_tagged(TAG_STEP | smask, n_active - 1, Comm::TIMEOUT)
-                .unwrap_or_else(|e| panic!("step {step}: payload exchange incomplete: {e}"));
+                .map_err(at_stage(|| format!("step {step}: payload exchange")))?;
             for m in &arrivals {
                 node.absorb(&m.data);
             }
@@ -411,9 +461,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
             } else if let Some(rs) = root.as_mut() {
                 let mut msgs = comm
                     .recv_tagged(TAG_ACCT | smask, n_active - 1, Comm::TIMEOUT)
-                    .unwrap_or_else(|e| {
-                        panic!("step {step}: accounting gather incomplete: {e}")
-                    });
+                    .map_err(at_stage(|| format!("step {step}: accounting gather")))?;
                 msgs.sort_by_key(|m| m.from);
                 let mut work_global = vec![0.0f64; n_objs];
                 let mut node_push = vec![0.0f64; n_nodes];
@@ -538,9 +586,9 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                 // lives elsewhere.
                 let msg = comm
                     .recv_tagged(epoch::map_tag(lb_round), 1, Comm::TIMEOUT)
-                    .unwrap_or_else(|e| {
-                        panic!("LB {lb_round}: no mapping handoff for leaver {rank}: {e}")
-                    })
+                    .map_err(at_stage(|| {
+                        format!("LB {lb_round}: mapping handoff for leaver {rank}")
+                    }))?
                     .pop()
                     .expect("mapping handoff");
                 let mut r = wire::Reader::new(&msg.data);
@@ -570,18 +618,17 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                         comm.send(d as u32, TAG_MIG | rmask, buf);
                     }
                 }
-                return None;
+                return Ok(None);
             }
 
+            // difflb-lint: allow(wall-clock): measures real strategy seconds for the report, never feeds a decision
             let t_lb = Instant::now();
             let inst = if let Some(rs) = root.as_mut() {
                 // full measured-load vector, gathered from every rank
                 // that stepped this iteration (leavers included).
                 let msgs = comm
                     .recv_tagged(TAG_LBC | rmask, n_active - 1, Comm::TIMEOUT)
-                    .unwrap_or_else(|e| {
-                        panic!("LB {lb_round}: load gather incomplete: {e}")
-                    });
+                    .map_err(at_stage(|| format!("LB {lb_round}: load gather")))?;
                 let mut full_loads = vec![0.0f64; n_objs];
                 for &(c, l) in &meas_pairs {
                     full_loads[c as usize] += l;
@@ -599,9 +646,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                     // of this round can fire.
                     let cks = comm
                         .recv_tagged(TAG_CKPT | rmask, n_active - 1, Comm::TIMEOUT)
-                        .unwrap_or_else(|e| {
-                            panic!("LB {lb_round}: checkpoint gather incomplete: {e}")
-                        });
+                        .map_err(at_stage(|| format!("LB {lb_round}: checkpoint gather")))?;
                     for m in cks {
                         custody[m.from as usize] = m.data;
                     }
@@ -653,27 +698,27 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                     // while I idled, so alternate between draining
                     // parked epoch declarations and polling for the
                     // broadcast.
+                    // difflb-lint: allow(wall-clock): join-poll deadline bounds real waiting, not a decision input
                     let deadline = Instant::now() + Comm::TIMEOUT;
                     loop {
                         if epoch::catch_up(comm, &mut failed) {
-                            return None; // declared dead while idle
+                            return Ok(None); // declared dead while idle
                         }
                         match comm.recv_tagged(TAG_LBX | rmask, 1, JOIN_POLL) {
                             Ok(mut v) => break v.pop().expect("lbx broadcast").data,
                             Err(e) => {
+                                // difflb-lint: allow(wall-clock): same join-poll deadline as above
                                 if Instant::now() >= deadline {
-                                    panic!(
-                                        "join {lb_round}: instance broadcast missing: {e}"
-                                    );
+                                    return Err(at_stage(|| {
+                                        format!("join {lb_round}: instance broadcast")
+                                    })(e));
                                 }
                             }
                         }
                     }
                 } else {
                     comm.recv_tagged(TAG_LBX | rmask, 1, Comm::TIMEOUT)
-                        .unwrap_or_else(|e| {
-                            panic!("LB {lb_round}: instance broadcast missing: {e}")
-                        })
+                        .map_err(at_stage(|| format!("LB {lb_round}: instance broadcast")))?
                         .pop()
                         .expect("lbx broadcast")
                         .data
@@ -706,9 +751,9 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                 // traffic — bit-identical to the fault-unaware driver.
                 let cands = build_candidates(&inst, sh.variant, &sh.params);
                 let out = node_pipeline(comm, &inst, &cands[rank as usize], sh.variant, &sh.params)
-                    .unwrap_or_else(|e| {
-                        panic!("LB {lb_round}: pipeline failed without a fault plan: {e}")
-                    });
+                    .map_err(at_stage(|| {
+                        format!("LB {lb_round}: pipeline (no fault plan)")
+                    }))?;
                 let iters = out.iterations as u32;
                 (out.full_mapping, iters)
             } else {
@@ -753,16 +798,18 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
                         // my own scheduled kill fired, or I hung past
                         // my exclusion: exit dead, shipping nothing —
                         // the root holds my checkpoint.
-                        Ok(None) => return None,
+                        Ok(None) => return Ok(None),
                         Err(_) if fault_mode => {
                             match epoch::recover(comm, plan, &target_ranks, &mut failed) {
                                 Membership::Member => {} // retry on the survivors
-                                Membership::Excluded => return None,
+                                Membership::Excluded => return Ok(None),
                             }
                         }
-                        Err(e) => panic!(
-                            "LB {lb_round}: pipeline failed without a fault plan: {e}"
-                        ),
+                        Err(e) => {
+                            return Err(at_stage(|| {
+                                format!("LB {lb_round}: pipeline (no fault plan)")
+                            })(e))
+                        }
                     }
                 }
             };
@@ -841,9 +888,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
             let expect = recv_from.iter().filter(|&&b| b).count();
             let migs = comm
                 .recv_tagged(migtag, expect, Comm::TIMEOUT)
-                .unwrap_or_else(|e| {
-                    panic!("LB {lb_round}: migration transfer incomplete: {e}")
-                });
+                .map_err(at_stage(|| format!("LB {lb_round}: migration transfer")))?;
             for m in &migs {
                 node.absorb(&m.data);
             }
@@ -930,7 +975,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
             }
             comm.send(0, TAG_OBS, ob);
         }
-        return None;
+        return Ok(None);
     }
     let mut rs = root.take().expect("root state");
     let expect = (1..n_nodes).filter(|&i| member[i] && !failed[i]).count();
@@ -938,7 +983,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
     finals.push(fin);
     let msgs = comm
         .recv_tagged(TAG_FIN, expect, Comm::TIMEOUT)
-        .unwrap_or_else(|e| panic!("final gather incomplete: {e}"));
+        .map_err(at_stage(|| "final gather".to_string()))?;
     for m in msgs {
         finals.push(m.data);
     }
@@ -954,7 +999,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
     };
     let obs_msgs = comm
         .recv_tagged(TAG_OBS, expect, Comm::TIMEOUT)
-        .unwrap_or_else(|e| panic!("telemetry gather incomplete: {e}"));
+        .map_err(at_stage(|| "telemetry gather".to_string()))?;
     for m in &obs_msgs {
         let mut r = wire::Reader::new(&m.data);
         rs.report.obs.stale_drops += r.u64();
@@ -970,7 +1015,7 @@ fn node_main<A: DistApp>(rank: u32, comm: &mut Comm, sh: &Shared<A>) -> Option<R
     }
     rs.report.final_mapping = obj_to_pe;
     rs.report.verified = sh.app.verify(steps_total, &finals);
-    Some(rs.report)
+    Ok(Some(rs.report))
 }
 
 // ===================================================== PIC as DistApp
@@ -1176,6 +1221,7 @@ impl DistNode for PicNode {
         let topo = self.cfg.topo.clone();
         // push my partition (bit-identical per-particle math to the
         // sequential app's native backend).
+        // difflb-lint: allow(wall-clock): measured compute seconds feed the report, not the mapping
         let t = Instant::now();
         for p in self.parts.iter_mut() {
             let (xn, yn, vxn, vyn) =
@@ -1370,6 +1416,7 @@ impl DistNode for HotspotNode {
         _outbox: &mut [Vec<u8>],
         moved: &mut Vec<(u32, u32, u32)>,
     ) -> f64 {
+        // difflb-lint: allow(wall-clock): measured compute seconds feed the report, not the mapping
         let t = Instant::now();
         for o in 0..self.work.len() {
             if self.owned[o] {

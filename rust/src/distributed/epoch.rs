@@ -158,9 +158,10 @@ fn recover_root(
         crate::obs::counter!("epoch.heartbeats").add(expect.len() as u64);
         let mut alive = vec![false; world_n];
         let mut n_alive = 0usize;
+        // difflb-lint: allow(wall-clock): failure-detection window is real time by design
         let deadline = Instant::now() + 3 * detect;
         while n_alive < expect.len() {
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = deadline.saturating_duration_since(Instant::now()); // difflb-lint: allow(wall-clock): same window
             if left.is_zero() {
                 break;
             }
@@ -205,9 +206,10 @@ fn recover_root(
             expect.iter().copied().filter(|&p| !failed[p as usize]).collect();
         let mut acked = vec![false; world_n];
         let mut n_acked = 0usize;
+        // difflb-lint: allow(wall-clock): failure-detection window is real time by design
         let deadline = Instant::now() + 3 * detect;
         while n_acked < ackers.len() {
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = deadline.saturating_duration_since(Instant::now()); // difflb-lint: allow(wall-clock): same window
             if left.is_zero() {
                 break;
             }
@@ -238,9 +240,10 @@ fn recover_follower(comm: &mut Comm, detect: Duration, failed: &mut [bool]) -> M
     // receive errors.
     comm.send(0, ctrl(CT_FAULT), Vec::new());
     let me = comm.world_rank() as usize;
+    // difflb-lint: allow(wall-clock): failure-detection window is real time by design
     let mut deadline = Instant::now() + 8 * detect;
     loop {
-        let left = deadline.saturating_duration_since(Instant::now());
+        let left = deadline.saturating_duration_since(Instant::now()); // difflb-lint: allow(wall-clock): same window
         if left.is_zero() {
             // Never heard a declaration: we are on the wrong side of a
             // partition (or were excluded in an epoch whose declaration
@@ -252,7 +255,7 @@ fn recover_follower(comm: &mut Comm, detect: Duration, failed: &mut [bool]) -> M
             CT_PING => {
                 comm.send(0, ctrl(CT_PONG), Vec::new());
                 // an active coordinator is still cycling: keep waiting.
-                deadline = Instant::now() + 8 * detect;
+                deadline = Instant::now() + 8 * detect; // difflb-lint: allow(wall-clock): same window
             }
             CT_EPOCH => {
                 let (epoch, flist) = parse_epoch(&m.data);

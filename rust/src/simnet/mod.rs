@@ -13,5 +13,5 @@ pub mod protocol;
 pub use fault::{FaultEvent, FaultKind, FaultPlan, PartitionEvent, StagePoint};
 pub use network::{
     is_ctrl_tag, BarrierError, Cluster, Comm, CommError, CostTracker, Msg, NetModel, RecvError,
-    CTRL_NS,
+    CTRL_NS, // difflb-lint: allow(ctrl-ns): public re-export, not a use of the namespace
 };

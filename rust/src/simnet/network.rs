@@ -434,9 +434,10 @@ impl Comm {
                 i += 1;
             }
         }
+        // difflb-lint: allow(wall-clock): recv deadlines bound real waiting; virtual time is untouched
         let deadline = Instant::now() + timeout;
         while out.len() < count {
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = deadline.saturating_duration_since(Instant::now()); // difflb-lint: allow(wall-clock): same deadline
             match self.recv(left) {
                 Ok(m) if self.is_stale(&m) => self.count_stale(1),
                 Ok(m) if self.matches(&m, tag) => out.push(self.deliver(m)),
@@ -460,9 +461,10 @@ impl Comm {
         if let Some(i) = self.pending.iter().position(|m| is_ctrl_tag(m.tag)) {
             return Ok(self.pending.remove(i));
         }
+        // difflb-lint: allow(wall-clock): recv deadlines bound real waiting; virtual time is untouched
         let deadline = Instant::now() + timeout;
         loop {
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = deadline.saturating_duration_since(Instant::now()); // difflb-lint: allow(wall-clock): same deadline
             match self.recv(left) {
                 Ok(m) if is_ctrl_tag(m.tag) => return Ok(m),
                 Ok(m) if self.is_stale(&m) => self.count_stale(1),

@@ -77,16 +77,13 @@ pub fn assign_pes_node(
     }
     // Arrivals: LPT — heaviest first onto the least-time-loaded PE.
     arrivals.sort_by(|&a, &b| {
-        inst.loads[b as usize]
-            .partial_cmp(&inst.loads[a as usize])
-            .unwrap()
-            .then(a.cmp(&b))
+        inst.loads[b as usize].total_cmp(&inst.loads[a as usize]).then(a.cmp(&b))
     });
     for o in arrivals {
         let (local, _) = pe_loads
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         pe_loads[local] += inst.loads[o as usize] / spd(local);
         placed.push((o, local));
@@ -121,12 +118,12 @@ fn refine_within(
         let (max_pe, &max_load) = pe_loads
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let (min_pe, &min_load) = pe_loads
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         if max_load <= avg * (1.0 + tol) || max_pe == min_pe {
             break;

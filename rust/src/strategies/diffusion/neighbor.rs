@@ -94,7 +94,7 @@ fn fill_comm_row(
     // descending volume, id tiebreak for determinism; unstable sorts
     // give the identical (total) order without the stable sort's
     // merge-buffer allocation
-    peers.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    peers.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     rest.sort_unstable_by_key(|&j| {
         let d = (i as i64 - j as i64).unsigned_abs();
         (d.min(n_nodes as u64 - d), j)
@@ -215,7 +215,7 @@ pub fn coord_candidates_sfc(inst: &Instance, node_map: &[u32], window: usize) ->
                     (j, dx * dx + dy * dy)
                 })
                 .collect();
-            peers.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            peers.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
             peers.into_iter().map(|(j, _)| j).collect()
         })
         .collect()
@@ -272,7 +272,7 @@ pub fn coord_candidates(inst: &Instance, node_map: &[u32]) -> Candidates {
                     (j, dx * dx + dy * dy)
                 })
                 .collect();
-            peers.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            peers.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
             peers.into_iter().map(|(j, _)| j).collect()
         })
         .collect()
@@ -513,8 +513,8 @@ mod sfc_tests {
         // the SFC front-of-list should overlap the brute-force
         // front-of-list heavily (same spatial neighbors)
         for i in 0..16 {
-            let b: std::collections::HashSet<u32> = brute[i].iter().take(4).cloned().collect();
-            let s: std::collections::HashSet<u32> = sfc[i].iter().take(4).cloned().collect();
+            let b: std::collections::BTreeSet<u32> = brute[i].iter().take(4).cloned().collect();
+            let s: std::collections::BTreeSet<u32> = sfc[i].iter().take(4).cloned().collect();
             let overlap = b.intersection(&s).count();
             assert!(overlap >= 2, "node {i}: brute {b:?} vs sfc {s:?}");
         }

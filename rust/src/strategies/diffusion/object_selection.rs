@@ -90,7 +90,7 @@ fn sorted_quota_into(row: &[(u32, f64)], floor: f64, out: &mut Vec<(u32, f64)>) 
     out.extend(row.iter().filter(|&&(_, a)| a >= floor).copied());
     // unstable: the id tiebreak makes the order total, and unlike the
     // stable sort it allocates no merge buffer
-    out.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    out.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
 }
 
 /// Quota noise floor for an instance: 1% of the average node load —

@@ -35,11 +35,7 @@ impl PartialOrd for PeEntry {
 impl Ord for PeEntry {
     fn cmp(&self, other: &Self) -> Ordering {
         // reversed: BinaryHeap is a max-heap, we want min-load first
-        other
-            .load
-            .partial_cmp(&self.load)
-            .unwrap_or(Ordering::Equal)
-            .then(other.pe.cmp(&self.pe))
+        other.load.total_cmp(&self.load).then(other.pe.cmp(&self.pe))
     }
 }
 
@@ -51,10 +47,7 @@ impl LoadBalancer for Greedy {
     fn rebalance(&self, inst: &Instance) -> Assignment {
         let mut order: Vec<u32> = (0..inst.n_objects() as u32).collect();
         order.sort_by(|&a, &b| {
-            inst.loads[b as usize]
-                .partial_cmp(&inst.loads[a as usize])
-                .unwrap()
-                .then(a.cmp(&b))
+            inst.loads[b as usize].total_cmp(&inst.loads[a as usize]).then(a.cmp(&b))
         });
         let mut heap: BinaryHeap<PeEntry> =
             (0..inst.topo.n_pes() as u32).map(|pe| PeEntry { load: 0.0, pe }).collect();

@@ -37,11 +37,7 @@ impl PartialOrd for MinPe {
 }
 impl Ord for MinPe {
     fn cmp(&self, other: &Self) -> Ordering {
-        other
-            .load
-            .partial_cmp(&self.load)
-            .unwrap_or(Ordering::Equal)
-            .then(other.pe.cmp(&self.pe))
+        other.load.total_cmp(&self.load).then(other.pe.cmp(&self.pe))
     }
 }
 
@@ -70,10 +66,7 @@ impl LoadBalancer for GreedyRefine {
         }
         for objs in &mut per_pe {
             objs.sort_by(|&a, &b| {
-                inst.loads[a as usize]
-                    .partial_cmp(&inst.loads[b as usize])
-                    .unwrap()
-                    .then(a.cmp(&b))
+                inst.loads[a as usize].total_cmp(&inst.loads[b as usize]).then(a.cmp(&b))
             });
         }
 
@@ -101,10 +94,7 @@ impl LoadBalancer for GreedyRefine {
 
         // Place the pool: heaviest first onto the least-loaded PE.
         pool.sort_by(|&a, &b| {
-            inst.loads[b as usize]
-                .partial_cmp(&inst.loads[a as usize])
-                .unwrap()
-                .then(a.cmp(&b))
+            inst.loads[b as usize].total_cmp(&inst.loads[a as usize]).then(a.cmp(&b))
         });
         let mut heap: BinaryHeap<MinPe> = pe_loads
             .iter()

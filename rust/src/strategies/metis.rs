@@ -15,7 +15,7 @@
 //! `targets == None` (uniform topologies) every code path below is the
 //! exact homogeneous original.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::model::{Assignment, Instance};
 use crate::strategies::{LoadBalancer, StrategyParams};
@@ -90,7 +90,7 @@ pub(crate) fn coarsen(g: &LevelGraph, rng: &mut Rng) -> (LevelGraph, Vec<u32>) {
     for v in 0..g.n {
         vwts[coarse_of[v] as usize] += g.vwts[v];
     }
-    let mut edge_map: HashMap<(u32, u32), f64> = HashMap::new();
+    let mut edge_map: BTreeMap<(u32, u32), f64> = BTreeMap::new();
     for v in 0..g.n {
         let cv = coarse_of[v];
         for &(u, w) in &g.adj[v] {
@@ -101,8 +101,9 @@ pub(crate) fn coarsen(g: &LevelGraph, rng: &mut Rng) -> (LevelGraph, Vec<u32>) {
         }
     }
     let mut adj = vec![Vec::new(); cn];
-    let mut pairs: Vec<((u32, u32), f64)> = edge_map.into_iter().collect();
-    pairs.sort_by_key(|(k, _)| *k);
+    // BTreeMap drains in key order — the sort the HashMap version
+    // needed here is now the container's iteration contract.
+    let pairs: Vec<((u32, u32), f64)> = edge_map.into_iter().collect();
     for ((a, b), w) in pairs {
         adj[a as usize].push((b, w));
         adj[b as usize].push((a, w));
@@ -157,12 +158,7 @@ pub(crate) fn grow_bisection(g: &LevelGraph, frac: f64, rng: &mut Rng) -> Vec<bo
         let pick = frontier
             .iter()
             .cloned()
-            .max_by(|&a, &b| {
-                gain[a as usize]
-                    .partial_cmp(&gain[b as usize])
-                    .unwrap()
-                    .then(b.cmp(&a))
-            })
+            .max_by(|&a, &b| gain[a as usize].total_cmp(&gain[b as usize]).then(b.cmp(&a)))
             .map(|u| u as usize)
             .or_else(|| (0..g.n).find(|&v| !in_a[v]));
         match pick {
@@ -221,7 +217,7 @@ fn recursive_bisect(
         return;
     }
     // subgraph over `vertices`
-    let mut local_id = HashMap::with_capacity(vertices.len());
+    let mut local_id = BTreeMap::new();
     for (i, &v) in vertices.iter().enumerate() {
         local_id.insert(v, i as u32);
     }
@@ -347,14 +343,14 @@ pub(crate) fn kway_refine(
         let mut moves = 0;
         for v in 0..g.n {
             let pv = part[v];
-            let mut conn: HashMap<u32, f64> = HashMap::new();
+            let mut conn: BTreeMap<u32, f64> = BTreeMap::new();
             for &(u, w) in &g.adj[v] {
                 *conn.entry(part[u as usize]).or_insert(0.0) += w;
             }
             let own = conn.get(&pv).cloned().unwrap_or(0.0);
             let mut cands: Vec<(u32, f64)> =
                 conn.iter().filter(|(&p, _)| p != pv).map(|(&p, &w)| (p, w)).collect();
-            cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            cands.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
             if let Some(&(p, w)) = cands.first() {
                 let gain = w - own;
                 if gain > 0.0 && wts[p as usize] + g.vwts[v] <= max_wt(p as usize) {
@@ -402,14 +398,14 @@ pub(crate) fn rebalance_parts(
     }
     for _ in 0..4 * g.n {
         let hi = (0..k)
-            .max_by(|&a, &b| fill(&wts, a).partial_cmp(&fill(&wts, b)).unwrap())
+            .max_by(|&a, &b| fill(&wts, a).total_cmp(&fill(&wts, b)))
             .unwrap();
         let hi_w = wts[hi];
         if hi_w <= max_wt(hi) {
             break;
         }
         let lo = (0..k)
-            .min_by(|&a, &b| fill(&wts, a).partial_cmp(&fill(&wts, b)).unwrap())
+            .min_by(|&a, &b| fill(&wts, a).total_cmp(&fill(&wts, b)))
             .unwrap();
         // vertex on hi with minimal (cut increase, weight distance)
         let mut best: Option<(f64, usize)> = None;

@@ -12,7 +12,7 @@
 //! runs over normalized part times (`load/speed`) and moves are
 //! charged by the time they free at their source PE.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::model::{Assignment, Instance};
 use crate::strategies::{LoadBalancer, StrategyParams};
@@ -31,11 +31,11 @@ fn diffuse_flows(
     quotient: &[Vec<(u32, f64)>],
     tol: f64,
     max_iters: usize,
-) -> Vec<HashMap<u32, f64>> {
+) -> Vec<BTreeMap<u32, f64>> {
     let k = part_loads.len();
     let mut cur = part_loads.to_vec();
     let avg = cur.iter().sum::<f64>() / k as f64;
-    let mut flows: Vec<HashMap<u32, f64>> = vec![HashMap::new(); k];
+    let mut flows: Vec<BTreeMap<u32, f64>> = vec![BTreeMap::new(); k];
     let deg_max = quotient.iter().map(|q| q.len()).max().unwrap_or(1).max(1);
     let alpha = 1.0 / (deg_max as f64 + 1.0);
     for _ in 0..max_iters {
@@ -128,7 +128,7 @@ impl LoadBalancer for ParMetis {
         let mut moved = vec![false; inst.n_objects()];
         for i in 0..k {
             let mut targets: Vec<(u32, f64)> = flows[i].iter().map(|(&j, &a)| (j, a)).collect();
-            targets.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            targets.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
             for (j, quota) in targets {
                 if quota <= 0.0 {
                     continue;
@@ -159,7 +159,7 @@ impl LoadBalancer for ParMetis {
                         ((to_j - local) / avg_obj_bytes - penalty, o)
                     })
                     .collect();
-                cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+                cands.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
                 for (score, o) in cands {
                     if remaining <= 0.0 {
                         break;

@@ -1,0 +1,581 @@
+#!/usr/bin/env python3
+"""Regex/lexer twin of difflb-lint (rust/lint) for in-container use.
+
+Implements the same rule set over the same file scoping so the two can
+cross-validate each other: CI diffs `difflb-lint --tags` against
+`lint_report.py --tags` (the wire-protocol tag table must be
+byte-identical), and both must report zero findings on rust/src.
+
+Rules (ids shared with the Rust implementation):
+  tag-collision      TAG_*/CTRL_NS namespace constants must keep the low
+                     24 bits clear and own a unique top byte
+  tag-unpaired       every tag must be both sent and received (helper
+                     indirection — tag passed as a tag_base — counts)
+  ctrl-ns            CTRL_NS is confined to simnet/network.rs and
+                     distributed/epoch.rs
+  flag-guarded-send  no send/recv_tagged/barrier inside a conditional on
+                     tracing_enabled()/metrics_enabled()
+  hash-map           no HashMap/HashSet in strategies/, model/,
+                     distributed/
+  partial-cmp        no .partial_cmp(..).unwrap()/unwrap_or()/expect()
+  wall-clock         no Instant::now/SystemTime::now outside obs/,
+                     util/bench.rs, util/logging.rs
+  static-mut         no `static mut` anywhere
+  comm-unwrap        no .unwrap()/.expect() chained on
+                     recv_tagged()/barrier() in distributed/
+
+Inline suppression: `// difflb-lint: allow(<rule>): <reason>` on the
+finding's line or the line directly above it.
+
+Usage:
+  python3 tools/lint_report.py [--tags] [root]      (default root: rust/src)
+"""
+
+import sys
+from pathlib import Path
+
+WORD = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+ALLOW_MARK = "difflb-lint: allow("
+
+
+def clean_source(src):
+    """Blank comments, strings and char literals (newlines preserved),
+    collecting allow-annotations from line comments. Returns
+    (cleaned:str, allows:dict line->set(rule))."""
+    n = len(src)
+    out = list(src)
+    allows = {}
+    line = 1
+    i = 0
+
+    def blank(j):
+        if out[j] != "\n":
+            out[j] = " "
+
+    def note_allow(text, at_line):
+        k = text.find(ALLOW_MARK)
+        while k != -1:
+            start = k + len(ALLOW_MARK)
+            end = text.find(")", start)
+            if end == -1:
+                break
+            rule = text[start:end].strip()
+            for ln in (at_line, at_line + 1):
+                allows.setdefault(ln, set()).add(rule)
+            k = text.find(ALLOW_MARK, end)
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            note_allow(src[i:j], line)
+            for k in range(i, j):
+                blank(k)
+            i = j
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if src[j] == "\n":
+                    line += 1
+                if src[j : j + 2] == "/*":
+                    depth += 1
+                    j += 2
+                elif src[j : j + 2] == "*/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            for k in range(i, j):
+                blank(k)
+            i = j
+            continue
+        # raw strings: r"..." / r#"..."# (optional b prefix)
+        if c in "rb":
+            j = i
+            if src[j] == "b":
+                j += 1
+            if j < n and src[j] == "r":
+                j += 1
+                hashes = 0
+                while j < n and src[j] == "#":
+                    hashes += 1
+                    j += 1
+                if j < n and src[j] == '"':
+                    closer = '"' + "#" * hashes
+                    end = src.find(closer, j + 1)
+                    end = n if end == -1 else end + len(closer)
+                    line += src.count("\n", i, end)
+                    for k in range(i, end):
+                        blank(k)
+                    i = end
+                    continue
+        if c == '"' or (c == "b" and i + 1 < n and src[i + 1] == '"'):
+            j = i + (2 if c == "b" else 1)
+            while j < n:
+                if src[j] == "\\":
+                    # escape: count a line-continuation's newline too
+                    if j + 1 < n and src[j + 1] == "\n":
+                        line += 1
+                    j += 2
+                    continue
+                if src[j] == "\n":
+                    line += 1
+                if src[j] == '"':
+                    j += 1
+                    break
+                j += 1
+            for k in range(i, j):
+                blank(k)
+            i = j
+            continue
+        if c == "'":
+            # char literal vs lifetime: 'x' or '\x' is a literal
+            if i + 1 < n and src[i + 1] == "\\":
+                j = i + 2
+                while j < n and src[j] != "'":
+                    j += 1
+                j += 1
+                for k in range(i, j):
+                    blank(k)
+                i = j
+                continue
+            if i + 2 < n and src[i + 2] == "'":
+                for k in range(i, i + 3):
+                    blank(k)
+                i += 3
+                continue
+            i += 1
+            continue
+        i += 1
+    return "".join(out), allows
+
+
+def blank_cfg_test(cleaned):
+    """Blank `#[cfg(test)]` items (the following brace-matched block)."""
+    out = list(cleaned)
+    pos = 0
+    attr = "#[cfg(test)]"
+    while True:
+        start = cleaned.find(attr, pos)
+        if start == -1:
+            break
+        brace = cleaned.find("{", start)
+        if brace == -1:
+            break
+        depth = 0
+        end = brace
+        while end < len(cleaned):
+            if cleaned[end] == "{":
+                depth += 1
+            elif cleaned[end] == "}":
+                depth -= 1
+                if depth == 0:
+                    end += 1
+                    break
+            end += 1
+        for k in range(start, end):
+            if out[k] != "\n":
+                out[k] = " "
+        pos = end
+    return "".join(out)
+
+
+def line_starts_of(text):
+    starts = [0]
+    for i, c in enumerate(text):
+        if c == "\n":
+            starts.append(i + 1)
+    return starts
+
+
+def line_of(pos, starts):
+    lo, hi = 0, len(starts) - 1
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if starts[mid] <= pos:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo + 1
+
+
+def word_occurrences(text, word):
+    out = []
+    i = text.find(word)
+    while i != -1:
+        before_ok = i == 0 or text[i - 1] not in WORD
+        after = i + len(word)
+        after_ok = after >= len(text) or text[after] not in WORD
+        if before_ok and after_ok:
+            out.append(i)
+        i = text.find(word, i + 1)
+    return out
+
+
+def enclosing_call(text, pos):
+    """Identifier of the innermost call whose argument list contains
+    `pos`, or '' if the occurrence is not inside a call."""
+    depth = 0
+    i = pos - 1
+    steps = 0
+    while i >= 0 and steps < 600:
+        c = text[i]
+        if c == ")":
+            depth += 1
+        elif c == "(":
+            if depth == 0:
+                j = i - 1
+                k = j
+                while k >= 0 and text[k] in WORD:
+                    k -= 1
+                return text[k + 1 : j + 1]
+            depth -= 1
+        elif c in ";{}" and depth == 0:
+            return ""
+        i -= 1
+        steps += 1
+    return ""
+
+
+def match_paren(text, open_pos):
+    depth = 0
+    i = open_pos
+    while i < len(text):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+        i += 1
+    return -1
+
+
+def chained_method(text, after):
+    """Skip whitespace after position `after`; if the next token is a
+    `.method`, return the method name, else ''."""
+    i = after
+    while i < len(text) and text[i] in " \t\n":
+        i += 1
+    if i >= len(text) or text[i] != ".":
+        return ""
+    i += 1
+    j = i
+    while j < len(text) and text[j] in WORD:
+        j += 1
+    return text[i:j]
+
+
+class File:
+    def __init__(self, root, rel):
+        self.rel = rel
+        src = (root / rel).read_text()
+        cleaned, self.allows = clean_source(src)
+        self.text = blank_cfg_test(cleaned)
+        self.starts = line_starts_of(self.text)
+
+    def line(self, pos):
+        return line_of(pos, self.starts)
+
+
+def is_wire_file(rel):
+    return rel.startswith("distributed/") or rel.startswith("simnet/")
+
+
+def hash_map_scoped(rel):
+    return (
+        rel.startswith("strategies/")
+        or rel.startswith("model/")
+        or rel.startswith("distributed/")
+    )
+
+
+def wall_clock_allowed(rel):
+    return rel.startswith("obs/") or rel in ("util/bench.rs", "util/logging.rs")
+
+
+CTRL_NS_ALLOWED = ("simnet/network.rs", "distributed/epoch.rs")
+
+
+def extract_tags(files):
+    """-> list of (name, value, rel, line), in (rel, line) order."""
+    tags = []
+    for f in files:
+        if not is_wire_file(f.rel):
+            continue
+        for pos in word_occurrences(f.text, "const"):
+            i = pos + len("const")
+            while i < len(f.text) and f.text[i] in " \t":
+                i += 1
+            j = i
+            while j < len(f.text) and f.text[j] in WORD:
+                j += 1
+            name = f.text[i:j]
+            if not (name.startswith("TAG_") or name == "CTRL_NS"):
+                continue
+            rest = f.text[j : j + 80]
+            k = 0
+            while k < len(rest) and rest[k] in " \t":
+                k += 1
+            if not rest[k:].startswith(":"):
+                continue
+            eq = rest.find("=", k)
+            semi = rest.find(";", k)
+            if eq == -1 or semi == -1 or eq > semi:
+                continue
+            lit = rest[eq + 1 : semi].strip().replace("_", "")
+            try:
+                value = int(lit, 0)
+            except ValueError:
+                continue
+            tags.append((name, value, f.rel, f.line(pos)))
+    return tags
+
+
+def classify_uses(files, tags):
+    """-> dict name -> dict(send=, recv=, other=)."""
+    defs = {(rel, line) for (_, _, rel, line) in tags}
+    counts = {name: {"send": 0, "recv": 0, "other": 0} for (name, _, _, _) in tags}
+    for f in files:
+        if not is_wire_file(f.rel):
+            continue
+        for name, _, _, _ in tags:
+            for pos in word_occurrences(f.text, name):
+                if (f.rel, f.line(pos)) in defs:
+                    continue
+                ident = enclosing_call(f.text, pos)
+                if ident == "send":
+                    counts[name]["send"] += 1
+                elif ident in ("recv_tagged", "barrier"):
+                    counts[name]["recv"] += 1
+                else:
+                    counts[name]["other"] += 1
+    return counts
+
+
+def wire_findings(files, tags, counts, emit):
+    seen_ns = {}
+    for name, value, rel, line in tags:
+        if value & 0x00FF_FFFF:
+            emit(
+                rel,
+                line,
+                "tag-collision",
+                f"tag namespace constant {name} = 0x{value:08x} sets low-24 bits "
+                "(namespaces are the top byte)",
+            )
+        ns = value >> 24
+        if ns in seen_ns:
+            emit(
+                rel,
+                line,
+                "tag-collision",
+                f"tag {name} shares namespace byte 0x{ns:02x} with {seen_ns[ns]}",
+            )
+        else:
+            seen_ns[ns] = name
+    for name, value, rel, line in tags:
+        if name == "CTRL_NS":
+            continue
+        c = counts[name]
+        total = c["send"] + c["recv"] + c["other"]
+        if total == 0:
+            emit(rel, line, "tag-unpaired", f"tag {name} is never used")
+        elif c["send"] > 0 and c["recv"] == 0 and c["other"] == 0:
+            emit(rel, line, "tag-unpaired", f"tag {name} is sent but never received")
+        elif c["recv"] > 0 and c["send"] == 0 and c["other"] == 0:
+            emit(rel, line, "tag-unpaired", f"tag {name} is received but never sent")
+
+    for f in files:
+        if not is_wire_file(f.rel):
+            continue
+        if f.rel not in CTRL_NS_ALLOWED:
+            for pos in word_occurrences(f.text, "CTRL_NS"):
+                emit(
+                    f.rel,
+                    f.line(pos),
+                    "ctrl-ns",
+                    "CTRL_NS outside the epoch layer "
+                    "(allowed: simnet/network.rs, distributed/epoch.rs)",
+                )
+        # flag-guarded comm calls
+        for pos in word_occurrences(f.text, "if"):
+            brace = -1
+            depth = 0
+            i = pos + 2
+            while i < len(f.text) and i < pos + 300:
+                c = f.text[i]
+                if c == "(":
+                    depth += 1
+                elif c == ")":
+                    depth -= 1
+                elif c == "{" and depth == 0:
+                    brace = i
+                    break
+                elif c == ";":
+                    break
+                i += 1
+            if brace == -1:
+                continue
+            cond = f.text[pos:brace]
+            if "tracing_enabled" not in cond and "metrics_enabled" not in cond:
+                continue
+            depth = 0
+            end = brace
+            while end < len(f.text):
+                if f.text[end] == "{":
+                    depth += 1
+                elif f.text[end] == "}":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                end += 1
+            block = f.text[brace:end]
+            for call in (".send(", ".recv_tagged(", ".barrier("):
+                k = block.find(call)
+                while k != -1:
+                    emit(
+                        f.rel,
+                        f.line(brace + k),
+                        "flag-guarded-send",
+                        "comm call inside a telemetry-flag conditional "
+                        "(wire sequence must not depend on obs flags)",
+                    )
+                    k = block.find(call, k + 1)
+
+
+def determinism_findings(f, emit):
+    text = f.text
+    if hash_map_scoped(f.rel):
+        lines_hit = set()
+        for word in ("HashMap", "HashSet"):
+            for pos in word_occurrences(text, word):
+                lines_hit.add(f.line(pos))
+        for ln in sorted(lines_hit):
+            emit(
+                f.rel,
+                ln,
+                "hash-map",
+                "HashMap/HashSet in a decision-path module; "
+                "use BTreeMap/BTreeSet or a sorted drain",
+            )
+    for pos in word_occurrences(text, "partial_cmp"):
+        if pos == 0 or text[pos - 1] != ".":
+            continue
+        open_pos = pos + len("partial_cmp")
+        if open_pos >= len(text) or text[open_pos] != "(":
+            continue
+        close = match_paren(text, open_pos)
+        if close == -1:
+            continue
+        nxt = chained_method(text, close + 1)
+        if nxt in ("unwrap", "unwrap_or", "unwrap_or_else", "expect"):
+            emit(
+                f.rel,
+                f.line(pos),
+                "partial-cmp",
+                "partial_cmp().unwrap() on floats; use total_cmp",
+            )
+    if not wall_clock_allowed(f.rel):
+        for pat in ("Instant::now", "SystemTime::now"):
+            for pos in word_occurrences(text, pat.split("::")[0]):
+                if text[pos:].startswith(pat):
+                    emit(
+                        f.rel,
+                        f.line(pos),
+                        "wall-clock",
+                        "wall-clock read outside obs/; "
+                        "annotate if this is measurement, not decision input",
+                    )
+    for pos in word_occurrences(text, "static"):
+        rest = text[pos + len("static") :]
+        k = 0
+        while k < len(rest) and rest[k] in " \t":
+            k += 1
+        if rest[k:].startswith("mut") and (
+            k + 3 >= len(rest) or rest[k + 3] not in WORD
+        ):
+            emit(
+                f.rel,
+                f.line(pos),
+                "static-mut",
+                "static mut is a data race waiting to happen; "
+                "use atomics or OnceLock",
+            )
+    if f.rel.startswith("distributed/"):
+        for word in ("recv_tagged", "barrier"):
+            for pos in word_occurrences(text, word):
+                if pos == 0 or text[pos - 1] != ".":
+                    continue
+                open_pos = pos + len(word)
+                if open_pos >= len(text) or text[open_pos] != "(":
+                    continue
+                close = match_paren(text, open_pos)
+                if close == -1:
+                    continue
+                nxt = chained_method(text, close + 1)
+                if nxt in ("unwrap", "unwrap_or", "unwrap_or_else", "expect"):
+                    emit(
+                        f.rel,
+                        f.line(pos),
+                        "comm-unwrap",
+                        "Comm result unwrapped; propagate CommError "
+                        "so recovery stays reachable",
+                    )
+
+
+def main():
+    args = [a for a in sys.argv[1:]]
+    tags_mode = "--tags" in args
+    args = [a for a in args if a != "--tags"]
+    root = Path(args[0] if args else "rust/src")
+    rels = sorted(
+        str(p.relative_to(root)).replace("\\", "/")
+        for p in root.rglob("*.rs")
+    )
+    files = [File(root, rel) for rel in rels]
+
+    tags = extract_tags(files)
+    counts = classify_uses(files, tags)
+
+    if tags_mode:
+        for name, value, rel, _line in sorted(tags, key=lambda t: (t[1], t[0])):
+            c = counts[name]
+            print(
+                f"{name} 0x{value:08x} {rel} "
+                f"sends={c['send']} recvs={c['recv']} other={c['other']}"
+            )
+        return 0
+
+    findings = []
+
+    def emit(rel, line, rule, msg):
+        f = next(f for f in files if f.rel == rel)
+        if rule in f.allows.get(line, set()):
+            return
+        findings.append((rel, line, rule, msg))
+
+    wire_findings(files, tags, counts, emit)
+    for f in files:
+        determinism_findings(f, emit)
+
+    findings.sort()
+    for rel, line, rule, msg in findings:
+        print(f"{rel}:{line}: [{rule}] {msg}")
+    print(
+        f"{len(findings)} finding(s) across {len(files)} file(s)",
+        file=sys.stderr,
+    )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+//! §Perf — the `.lbi` wire path in isolation: text serialize/parse vs
+//! the binary codec ([`difflb::model::lbi`]), across instance sizes.
+//! The distributed driver broadcasts one encode and pays one decode per
+//! participating rank every LB round, so this is the per-round protocol
+//! overhead. Writes `BENCH_lbi.json` (override with `DIFFLB_BENCH_JSON`,
+//! shrink budgets with `DIFFLB_BENCH_BUDGET_MS`) for
+//! `tools/bench_gate.py`.
+
+use std::time::Duration;
+
+use difflb::apps::stencil::{self, Decomposition};
+use difflb::model::{decode_lbi, encode_lbi, Instance};
+use difflb::util::bench::{time_fn, JsonReport, Timing};
+
+struct Report {
+    json: JsonReport,
+}
+
+impl Report {
+    fn record(&mut self, t: &Timing, throughput: Option<(&str, f64)>) {
+        let extra = match throughput {
+            Some((unit, v)) => format!("{v:.1} {unit}"),
+            None => String::new(),
+        };
+        println!("{}  {extra}", t.report());
+        self.json.add(t, throughput);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let budget_ms: u64 = std::env::var("DIFFLB_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let budget = Duration::from_millis(budget_ms);
+    let mut rep = Report { json: JsonReport::new() };
+
+    // (grid, nodes_x, nodes_y): 1k / 9k / 36k objects with real stencil
+    // comm graphs — edge density matches what the driver broadcasts.
+    for (grid, nx, ny) in [(32usize, 4usize, 4usize), (96, 8, 8), (192, 8, 8)] {
+        let mut inst = stencil::stencil_2d(grid, nx, ny, Decomposition::Tiled);
+        stencil::inject_noise(&mut inst, 0.4, 7);
+        let n = inst.n_objects();
+
+        let t = time_fn(&format!("lbi text serialize n={n}"), budget, || inst.to_lbi().len());
+        rep.record(&t, None);
+        let text = inst.to_lbi();
+        let t = time_fn(&format!("lbi text parse n={n}"), budget, || {
+            Instance::from_lbi(&text).unwrap().n_objects()
+        });
+        rep.record(&t, None);
+
+        let t = time_fn(&format!("lbi binary encode n={n}"), budget, || encode_lbi(&inst).len());
+        rep.record(&t, None);
+        let wire = encode_lbi(&inst);
+        let t = time_fn(&format!("lbi binary decode n={n}"), budget, || {
+            decode_lbi(&wire).unwrap().n_objects()
+        });
+        let mbs = wire.len() as f64 / t.mean_s / 1e6;
+        rep.record(&t, Some(("MB/s", mbs)));
+        println!(
+            "  wire sizes n={n}: text {} B, binary {} B ({:.2}x)",
+            text.len(),
+            wire.len(),
+            text.len() as f64 / wire.len() as f64
+        );
+    }
+
+    let out = std::env::var("DIFFLB_BENCH_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_lbi.json", env!("CARGO_MANIFEST_DIR")));
+    let label = format!(
+        "lbi_codec budget={budget_ms}ms threads={}",
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    );
+    rep.json.write(&out, &label)?;
+    println!("wrote {out} ({} paths)", rep.json.len());
+    Ok(())
+}

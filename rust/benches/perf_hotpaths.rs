@@ -120,6 +120,15 @@ fn main() -> anyhow::Result<()> {
     rep.record(&t, None);
     let t = time_fn("instance .lbi serialize", budget, || inst.to_lbi().len());
     rep.record(&t, None);
+    let t = time_fn("instance .lbi encode (binary)", budget, || {
+        difflb::model::encode_lbi(&inst).len()
+    });
+    rep.record(&t, None);
+    let wire = difflb::model::encode_lbi(&inst);
+    let t = time_fn("instance .lbi decode (binary)", budget, || {
+        difflb::model::decode_lbi(&wire).unwrap().n_objects()
+    });
+    rep.record(&t, None);
 
     // ---------- incremental comm-graph refresh between LB rounds
     let mut sim = StencilSim::new(96, 8, 8, Decomposition::Tiled, 0.4, 3);

@@ -1,0 +1,11 @@
+//! Bad SoA fixture: the seed's per-node object index in a stage-3 path.
+
+pub struct Scratch {
+    pub by_node: Vec<Vec<u32>>,
+}
+
+pub fn pool_for(s: &Scratch, node_objects: &[Vec<u32>], i: usize) -> Vec<u32> {
+    let mut pool = s.by_node[i].clone();
+    pool.extend(node_objects[i].iter().copied());
+    pool
+}

@@ -1,0 +1,18 @@
+//! Good SoA fixture: contiguous sorted-by-node slices, plus both allow
+//! annotation placements for a deliberate legacy-index mention.
+
+pub struct Scratch {
+    pub soa_offsets: Vec<u32>,
+    pub soa_objs: Vec<u32>,
+}
+
+impl Scratch {
+    pub fn node_slice(&self, i: usize) -> &[u32] {
+        &self.soa_objs[self.soa_offsets[i] as usize..self.soa_offsets[i + 1] as usize]
+    }
+}
+
+// difflb-lint: allow(soa-index): fixture proving line-above annotations suppress
+pub fn legacy_rows(by_node: &[Vec<u32>]) -> usize {
+    by_node.len() // difflb-lint: allow(soa-index): fixture proving trailing annotations suppress
+}

@@ -4,7 +4,8 @@
 //! sequence) and determinism invariants (no HashMap/HashSet in
 //! decision paths, no `partial_cmp().unwrap()`, no wall-clock reads
 //! outside obs/, no `static mut`, no unwrapped Comm results in
-//! distributed/).
+//! distributed/, no seed-era by-node object indexes in the SoA
+//! stage-3 hot paths).
 //!
 //! Rules run over lexed source text (comments/strings blanked,
 //! `#[cfg(test)]` items removed) — see [`lexer`]. Findings are
@@ -99,6 +100,18 @@ pub fn hash_map_scoped(rel: &str) -> bool {
 /// Telemetry and harness code may read real time freely.
 pub fn wall_clock_allowed(rel: &str) -> bool {
     rel.starts_with("obs/") || rel == "util/bench.rs" || rel == "util/logging.rs"
+}
+
+/// Stage-3 / §III-D hot paths that must iterate the scratch's
+/// sorted-by-node SoA index, never a rebuilt per-node `Vec<Vec<u32>>`
+/// (`by_node`) or a per-node full-object scan (`node_objects`).
+pub fn soa_scoped(rel: &str) -> bool {
+    matches!(
+        rel,
+        "strategies/diffusion/object_selection.rs"
+            | "strategies/diffusion/hierarchical.rs"
+            | "distributed/stage3.rs"
+    )
 }
 
 /// The only files allowed to mention CTRL_NS: its definition and the

@@ -1,5 +1,6 @@
 //! Determinism rules: container iteration order, float comparison
-//! totality, wall-clock reads, `static mut`, and Comm-result unwraps.
+//! totality, wall-clock reads, `static mut`, Comm-result unwraps, and
+//! seed-era by-node indexes in the SoA hot paths.
 
 use crate::lexer::{chained_method, is_word, match_paren, word_occurrences};
 use crate::{Emit, SourceFile};
@@ -92,6 +93,32 @@ pub fn determinism_findings(f: &SourceFile, emit: &mut Emit<'_>) {
                 "static-mut",
                 "static mut is a data race waiting to happen; \
                  use atomics or OnceLock"
+                    .to_string(),
+            );
+        }
+    }
+
+    // ---- soa-index: the stage-3 / §III-D hot paths walk LbScratch's
+    // sorted-by-node SoA slices; reintroducing the seed's per-node
+    // object index (one heap-allocated row per node, rebuilt by a full
+    // scan) undoes the cache contiguity the selection kernels rely on.
+    if crate::soa_scoped(&f.rel) {
+        let mut lines_hit: Vec<usize> = Vec::new();
+        const LEGACY_INDEX: [&[u8]; 2] = [b"by_node", b"node_objects"];
+        for word in LEGACY_INDEX {
+            for pos in word_occurrences(text, word) {
+                lines_hit.push(f.line(pos));
+            }
+        }
+        lines_hit.sort_unstable();
+        lines_hit.dedup();
+        for ln in lines_hit {
+            emit.finding(
+                &f.rel,
+                ln,
+                "soa-index",
+                "seed-era by-node object index in a stage-3 hot path; \
+                 walk LbScratch's sorted-by-node SoA slices"
                     .to_string(),
             );
         }

@@ -34,6 +34,10 @@ fn bad_corpus_findings_are_exact() {
         "model/graph.rs:3: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
         "model/graph.rs:5: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
         "model/graph.rs:8: [partial-cmp] partial_cmp().unwrap() on floats; use total_cmp",
+        "strategies/diffusion/object_selection.rs:4: [soa-index] seed-era by-node object index in a stage-3 hot path; walk LbScratch's sorted-by-node SoA slices",
+        "strategies/diffusion/object_selection.rs:7: [soa-index] seed-era by-node object index in a stage-3 hot path; walk LbScratch's sorted-by-node SoA slices",
+        "strategies/diffusion/object_selection.rs:8: [soa-index] seed-era by-node object index in a stage-3 hot path; walk LbScratch's sorted-by-node SoA slices",
+        "strategies/diffusion/object_selection.rs:9: [soa-index] seed-era by-node object index in a stage-3 hot path; walk LbScratch's sorted-by-node SoA slices",
         "strategies/pick.rs:3: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
         "strategies/pick.rs:5: [static-mut] static mut is a data race waiting to happen; use atomics or OnceLock",
         "strategies/pick.rs:7: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",

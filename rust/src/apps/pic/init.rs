@@ -27,9 +27,21 @@ pub enum InitMode {
 }
 
 /// Charge magnitude at grid column `x`: +Q even columns, −Q odd.
+///
+/// The mod-2 wrap is branch-free: `rem_euclid`'s negative-remainder
+/// branch kept the particle-push loop from autovectorizing. For every
+/// f64 input the two forms agree bitwise after the `1.0 - 2.0 * r`
+/// fold: `x * 0.5` only shifts the exponent, `floor` is exact, and the
+/// final subtraction is exact by Sterbenz's lemma, so `r` is the exact
+/// mathematical `x mod 2` either way — the lone difference is the sign
+/// of a zero `r` on negative even inputs, which `2.0 * r` erases.
+/// Cross-checked exhaustively-at-random by `tools/crosscheck_simd.py`
+/// and pinned against the `rem_euclid` form in
+/// `rust/tests/simd_soa_identity.rs`.
 #[inline]
 pub fn grid_charge(x: f64, q: f64) -> f64 {
-    q * (1.0 - 2.0 * (x.rem_euclid(2.0)))
+    let r = x - 2.0 * (x * 0.5).floor();
+    q * (1.0 - 2.0 * r)
 }
 
 /// PRK charge calibration for a particle at cell-relative (rel_x, rel_y):

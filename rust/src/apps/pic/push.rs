@@ -5,6 +5,16 @@
 //! bitwise-level agreement with the PJRT artifact), used when artifacts
 //! are absent or for baseline comparison. The PJRT path lives in
 //! [`crate::runtime::Engine::pic_push`].
+//!
+//! The inner loop is written for **explicit chunked autovectorization**:
+//! [`push_span`] walks fixed [`LANES`]-wide blocks whose bodies are
+//! branch-free straight-line f64 arithmetic (the periodic wrap and
+//! [`grid_charge`] were rewritten branchless for exactly this reason),
+//! so LLVM unrolls and packs them into SIMD lanes. Per-element math is
+//! [`push_one`] verbatim — vectorization only changes *how many*
+//! elements an iteration handles, never the operation order within one
+//! element, so results stay bit-identical to the scalar loop (locked by
+//! `rust/tests/simd_soa_identity.rs` against a frozen scalar copy).
 
 use crate::runtime::PicBatch;
 
@@ -56,13 +66,62 @@ pub fn push_one(
     (xn, yn, vx + ax * DT, vy + ay * DT)
 }
 
+/// SIMD block width for [`push_span`]. Eight f64 lanes = one AVX-512
+/// register or two AVX2 / four NEON registers after unrolling; the
+/// value only shapes code generation, never results.
+pub const LANES: usize = 8;
+
+/// Push one contiguous span of particles in place: full [`LANES`]-wide
+/// blocks first (a fixed-trip-count inner loop LLVM can unroll and
+/// vectorize — no bounds checks survive, the slices are pre-sliced to
+/// exactly `LANES`), then a scalar remainder loop with the identical
+/// body. Both the sequential path and every pool-chunk task of
+/// [`native_push`] funnel through here, so thread count cannot change
+/// which code shape an element takes.
+fn push_span(
+    x: &mut [f64],
+    y: &mut [f64],
+    vx: &mut [f64],
+    vy: &mut [f64],
+    q: &[f64],
+    l: f64,
+    big_q: f64,
+) {
+    let n = x.len();
+    debug_assert!(y.len() == n && vx.len() == n && vy.len() == n && q.len() == n);
+    let blocks = n / LANES * LANES;
+    let mut i = 0;
+    while i < blocks {
+        // Fixed-width re-slices: the compiler sees `LANES` exactly and
+        // drops every bounds check in the k-loop.
+        let (xb, yb) = (&mut x[i..i + LANES], &mut y[i..i + LANES]);
+        let (vxb, vyb) = (&mut vx[i..i + LANES], &mut vy[i..i + LANES]);
+        let qb = &q[i..i + LANES];
+        for k in 0..LANES {
+            let (xn, yn, vxn, vyn) = push_one(xb[k], yb[k], vxb[k], vyb[k], qb[k], l, big_q);
+            xb[k] = xn;
+            yb[k] = yn;
+            vxb[k] = vxn;
+            vyb[k] = vyn;
+        }
+        i += LANES;
+    }
+    for k in blocks..n {
+        let (xn, yn, vxn, vyn) = push_one(x[k], y[k], vx[k], vy[k], q[k], l, big_q);
+        x[k] = xn;
+        y[k] = yn;
+        vx[k] = vxn;
+        vy[k] = vyn;
+    }
+}
+
 /// One PIC step over the whole batch, parallelized over `threads`
 /// chunks on the persistent [`crate::util::pool`] worker pool (the seed
 /// spawned scoped OS threads per step — spawn/join dominated small
 /// batches; see EXPERIMENTS.md §Perf). Chunk boundaries depend only on
-/// `(n, threads)`, and each chunk's math is unchanged, so the result is
-/// bit-identical to the sequential path and to the old per-step-spawn
-/// implementation for every thread count.
+/// `(n, threads)`, and each chunk runs the same [`push_span`] body, so
+/// the result is bit-identical to the sequential path and to the old
+/// per-step-spawn implementation for every thread count.
 pub fn native_push(b: &mut PicBatch, l: f64, big_q: f64, threads: usize) {
     let n = b.len();
     if n == 0 {
@@ -72,13 +131,7 @@ pub fn native_push(b: &mut PicBatch, l: f64, big_q: f64, threads: usize) {
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     let threads = threads.clamp(1, n).min(cores);
     if threads == 1 {
-        for i in 0..n {
-            let (xn, yn, vxn, vyn) = push_one(b.x[i], b.y[i], b.vx[i], b.vy[i], b.q[i], l, big_q);
-            b.x[i] = xn;
-            b.y[i] = yn;
-            b.vx[i] = vxn;
-            b.vy[i] = vyn;
-        }
+        push_span(&mut b.x, &mut b.y, &mut b.vx, &mut b.vy, &b.q, l, big_q);
         return;
     }
     let chunk = n.div_ceil(threads);
@@ -94,15 +147,7 @@ pub fn native_push(b: &mut PicBatch, l: f64, big_q: f64, threads: usize) {
         let (vy, vyr) = rest.3.split_at_mut(take);
         let (q, qr) = rest.4.split_at_mut(take);
         rest = (xr, yr, vxr, vyr, qr);
-        tasks.push(Box::new(move || {
-            for i in 0..x.len() {
-                let (xn, yn, vxn, vyn) = push_one(x[i], y[i], vx[i], vy[i], q[i], l, big_q);
-                x[i] = xn;
-                y[i] = yn;
-                vx[i] = vxn;
-                vy[i] = vyn;
-            }
-        }));
+        tasks.push(Box::new(move || push_span(x, y, vx, vy, q, l, big_q)));
     }
     crate::util::pool::global().scoped(tasks);
 }

@@ -35,9 +35,10 @@
 //! they are reported but not comparable bit-for-bit.
 //!
 //! The LB instance is assembled at rank 0 (the recorder's home) and
-//! broadcast as `.lbi` text — Rust's shortest-round-trip float
-//! formatting makes the serialization lossless, and the root parses its
-//! own broadcast so every node provably balances the identical problem.
+//! broadcast in the binary `.lbi` wire form ([`crate::model::lbi`] —
+//! exact f64 bit patterns, varint-packed CSR, O(m) decode), and the
+//! root decodes its own broadcast so every node provably balances the
+//! identical problem.
 //!
 //! **Fault tolerance.** Under an active
 //! [`FaultPlan`](crate::simnet::FaultPlan) the run survives node
@@ -679,19 +680,19 @@ fn node_run<A: DistApp>(
                     };
                 }
                 // broadcast to the pipeline participants (joiners
-                // included, leavers not); then parse our own broadcast
+                // included, leavers not); then decode our own broadcast
                 // so every node provably balances the identical
                 // instance.
-                let text = inst.to_lbi();
+                let bytes = crate::model::encode_lbi(&inst);
                 for &p in &target_ranks {
                     if p != 0 {
-                        comm.send(p, TAG_LBX | rmask, text.clone().into_bytes());
+                        comm.send(p, TAG_LBX | rmask, bytes.clone());
                     }
                 }
-                // parse our own broadcast: what we balance is provably
-                // what everyone else parsed (the format is lossless —
-                // Rust float formatting round-trips exactly).
-                Instance::from_lbi(&text).expect("lbi round-trip failed")
+                // decode our own broadcast: what we balance is provably
+                // what everyone else decoded (the binary codec ships
+                // exact f64 bit patterns — lossless by construction).
+                crate::model::decode_lbi(&bytes).expect("lbi round-trip failed")
             } else {
                 let data = if joined_now {
                     // ---- joining this round: epochs may have moved
@@ -723,8 +724,7 @@ fn node_run<A: DistApp>(
                         .expect("lbx broadcast")
                         .data
                 };
-                let text = std::str::from_utf8(&data).expect("lbi not utf-8");
-                Instance::from_lbi(text).expect("lbi parse failed")
+                crate::model::decode_lbi(&data).expect("lbi decode failed")
             };
             if joined_now {
                 // the broadcast instance carries the current world

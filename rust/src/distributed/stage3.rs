@@ -72,10 +72,10 @@ pub fn select_and_refine_node(
     let n_objects = inst.n_objects();
     let floor = quota_floor(inst);
 
-    // Replica of the object → node map; `scratch.moved` / `by_node` are
-    // set up from the pre-LB state exactly like the sequential sweep's
-    // (by_node stays the *initial* index — arrivals are excluded from
-    // pools via the moved flags, not re-indexed).
+    // Replica of the object → node map; `scratch.moved` and the SoA
+    // index are set up from the pre-LB state exactly like the
+    // sequential sweep's (the SoA stays the *initial* index — arrivals
+    // are excluded from pools via the moved flags, not re-indexed).
     let mut node_map = inst.node_mapping();
     // par_tasks = 1: node threads are already the parallelism; don't
     // fan scoring out onto the global worker pool from n_nodes threads
@@ -83,7 +83,7 @@ pub fn select_and_refine_node(
     // perf_refactor.rs).
     let mut scratch = LbScratch { par_tasks: Some(1), ..LbScratch::default() };
     scratch.moved.resize(n_objects, false);
-    scratch.index_by_node(&node_map, n_nodes);
+    scratch.build_soa(inst, &node_map, n_nodes);
     if variant == Variant::Coordinate {
         object_selection::init_centroid_state(inst, &node_map, &mut scratch);
     }
@@ -158,12 +158,14 @@ pub fn select_and_refine_node(
     }
 
     // ---- Hierarchical refinement (§III-D): node-local, no messages.
-    let members: Vec<u32> = (0..n_objects as u32)
-        .filter(|&o| node_map[o as usize] == rank as u32)
-        .collect();
+    // Rebuild the SoA on the final map: this rank's members arrive as
+    // one contiguous ascending-id slice (the order assign_pes_node's
+    // contract demands) without scanning all objects per node.
+    scratch.build_soa(inst, &node_map, n_nodes);
+    let members = &scratch.soa_objs[scratch.soa_node(rank)];
     let pe_assign = {
         let _sr = crate::obs::span("refine.pes", "dist");
-        hierarchical::assign_pes_node(inst, rank as u32, &members, refine_tol)
+        hierarchical::assign_pes_node(inst, rank as u32, members, refine_tol)
     };
 
     // ---- PE-assignment exchange: every node assembles the complete

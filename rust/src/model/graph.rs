@@ -81,6 +81,25 @@ impl CommGraph {
         g
     }
 
+    /// Build from an edge list that is **already canonical**: `a < b`,
+    /// strictly sorted by `(a, b)`, no duplicates, no self-loops — the
+    /// order [`Self::edges`] yields and the `.lbi` binary codec
+    /// preserves on the wire. Skips `canonical_merge`'s sort entirely,
+    /// which is what makes the distributed `.lbi` decode O(m) instead
+    /// of O(m log m). Panics (in checked form) on non-canonical input.
+    pub fn from_canonical_edges(n: usize, merged: &[(u32, u32, f64)]) -> CommGraph {
+        for w in merged.windows(2) {
+            assert!((w[0].0, w[0].1) < (w[1].0, w[1].1), "edges not strictly (a,b)-sorted");
+        }
+        for &(a, b, _) in merged {
+            assert!(a < b && (b as usize) < n, "edge not canonical or out of range");
+        }
+        let mut g = CommGraph::empty(n);
+        let mut cursor = Vec::new();
+        g.refill_from_merged(merged, &mut cursor);
+        g
+    }
+
     /// Rebuild this graph's CSR arrays from a canonical merged edge
     /// list (sorted by `(a, b)`, unique, self-loop free), reusing the
     /// existing allocations. `cursor` is caller-provided scratch.
@@ -405,6 +424,21 @@ mod tests {
 
     fn triangle() -> CommGraph {
         CommGraph::from_edges(4, &[(0, 1, 10.0), (1, 2, 20.0), (2, 0, 30.0)])
+    }
+
+    #[test]
+    fn canonical_constructor_matches_from_edges() {
+        let g = triangle();
+        let canon: Vec<(u32, u32, f64)> = g.edges().collect();
+        assert_eq!(CommGraph::from_canonical_edges(4, &canon), g);
+        // empty edge list is trivially canonical
+        assert_eq!(CommGraph::from_canonical_edges(3, &[]), CommGraph::empty(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "not strictly")]
+    fn canonical_constructor_rejects_unsorted() {
+        CommGraph::from_canonical_edges(4, &[(1, 2, 1.0), (0, 1, 1.0)]);
     }
 
     #[test]

@@ -178,33 +178,46 @@ impl Instance {
     // ----------------------------------------------------------- .lbi io
 
     /// Serialize to the `.lbi` text format.
+    ///
+    /// Single-pass writer into one preallocated `String`: every line
+    /// used to be its own `format!` allocation (an n+m allocation
+    /// serialize — the distributed driver broadcasts this every LB
+    /// round), now `write!` appends in place and the buffer is sized
+    /// once from a per-line estimate. Output bytes are unchanged —
+    /// `write!` and `format!` share the same formatting machinery.
+    /// For the wire itself see [`super::lbi`]'s binary codec; this text
+    /// form remains the on-disk / human-debuggable format.
     pub fn to_lbi(&self) -> String {
-        let mut s = String::new();
+        use std::fmt::Write as _;
+        let (n, m) = (self.n_objects(), self.graph.nbrs.len() / 2);
+        // ~64 B/object line and ~32 B/edge line covers typical float
+        // widths; a long tail just regrows once.
+        let mut s = String::with_capacity(96 + n * 64 + m * 32);
         s.push_str("# difflb instance v1\n");
-        s.push_str(&format!(
-            "header objects {} nodes {} pes_per_node {}\n",
-            self.n_objects(),
-            self.topo.n_nodes,
-            self.topo.pes_per_node
-        ));
+        let _ = writeln!(
+            s,
+            "header objects {n} nodes {} pes_per_node {}",
+            self.topo.n_nodes, self.topo.pes_per_node
+        );
         // Heterogeneous topologies carry their PE speed vector; Rust's
         // shortest-round-trip float formatting keeps the line lossless,
         // which the distributed driver's `.lbi` broadcast relies on.
         if let Some(speeds) = self.topo.pe_speeds() {
             s.push_str("speeds");
             for v in speeds {
-                s.push_str(&format!(" {v}"));
+                let _ = write!(s, " {v}");
             }
             s.push('\n');
         }
-        for o in 0..self.n_objects() {
-            s.push_str(&format!(
-                "object {o} load {} pe {} x {} y {} size {}\n",
+        for o in 0..n {
+            let _ = writeln!(
+                s,
+                "object {o} load {} pe {} x {} y {} size {}",
                 self.loads[o], self.mapping[o], self.coords[o][0], self.coords[o][1], self.sizes[o]
-            ));
+            );
         }
         for (a, b, w) in self.graph.edges() {
-            s.push_str(&format!("edge {a} {b} {w}\n"));
+            let _ = writeln!(s, "edge {a} {b} {w}");
         }
         s
     }

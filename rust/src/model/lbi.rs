@@ -1,0 +1,339 @@
+//! Binary `.lbi` codec — the wire form of an [`Instance`].
+//!
+//! The distributed driver broadcasts the instance to every rank at each
+//! LB round; the text format ([`Instance::to_lbi`]) pays float
+//! formatting + parsing and an O(m log m) re-sort on every decode. This
+//! codec writes a single-pass preallocated buffer instead:
+//!
+//! * scalars are LEB128 varints (object counts, PE ids, CSR partner
+//!   counts, delta-encoded neighbor ids — all small in practice);
+//! * every f64 travels as its exact `to_bits` pattern, little-endian —
+//!   lossless by construction, no shortest-round-trip formatting;
+//! * the comm graph ships as varint-packed CSR upper-triangle rows
+//!   (per object: partner count, ascending gap-encoded partners, weight
+//!   bits), so the decoder rebuilds the canonical `(a, b)`-sorted edge
+//!   list by concatenation and hands it to
+//!   [`CommGraph::from_canonical_edges`] — the O(m log m) sort of
+//!   `from_edges` disappears from the decode path.
+//!
+//! `encode(decode(bytes)) == bytes` for any encoder-produced input: the
+//! encoder is a pure function of the instance and the decoder
+//! reconstructs every field exactly (locked by the round-trip property
+//! test in `rust/tests/simd_soa_identity.rs`).
+//!
+//! Sizes and (when telemetry is on) durations are observed via
+//! [`crate::obs`] histograms; the bytes produced never depend on the
+//! telemetry flags (`tests/apps_conformance.rs` locks that).
+
+use anyhow::{bail, Result};
+
+use super::graph::CommGraph;
+use super::instance::Instance;
+use super::topology::Topology;
+
+/// `b"LBI"` + format version.
+const MAGIC: [u8; 4] = [b'L', b'B', b'I', 1];
+/// Header flag: a PE speed vector follows the header.
+const FLAG_SPEEDS: u8 = 1 << 0;
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+fn put_f64_bits(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Byte cursor with explicit truncation errors (a short broadcast must
+/// surface as `Err`, never a panic in the driver's receive path).
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let Some(&byte) = self.buf.get(self.pos) else {
+                bail!("lbi: truncated varint at byte {}", self.pos);
+            };
+            self.pos += 1;
+            if shift >= 64 || (shift == 63 && byte > 1) {
+                bail!("lbi: varint overflows u64 at byte {}", self.pos);
+            }
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn f64_bits(&mut self) -> Result<f64> {
+        let Some(bytes) = self.buf.get(self.pos..self.pos + 8) else {
+            bail!("lbi: truncated f64 at byte {}", self.pos);
+        };
+        self.pos += 8;
+        Ok(f64::from_bits(u64::from_le_bytes(bytes.try_into().unwrap())))
+    }
+
+    fn byte(&mut self) -> Result<u8> {
+        let Some(&b) = self.buf.get(self.pos) else {
+            bail!("lbi: truncated header at byte {}", self.pos);
+        };
+        self.pos += 1;
+        Ok(b)
+    }
+}
+
+/// Encode `inst` into the binary `.lbi` wire form.
+pub fn encode_lbi(inst: &Instance) -> Vec<u8> {
+    let _s = crate::obs::span("lbi.encode", "model");
+    let timed = crate::obs::metrics_enabled() || crate::obs::tracing_enabled();
+    let t0 = if timed { crate::obs::now_us() } else { 0 };
+
+    let n = inst.n_objects();
+    let m = inst.graph.nbrs.len() / 2;
+    // header ≤ 20 B; 4×8 B of float bits + ≤5 B of mapping varint per
+    // object; ≤5 B gap varint + 8 B weight bits per edge + 1-byte row
+    // counts. Exact enough that growth is the rare case.
+    let mut buf = Vec::with_capacity(
+        20 + inst.topo.n_pes() * 8 + n * (4 * 8 + 5 + 1) + m * (5 + 8),
+    );
+    buf.extend_from_slice(&MAGIC);
+    let speeds = inst.topo.pe_speeds();
+    buf.push(if speeds.is_some() { FLAG_SPEEDS } else { 0 });
+    put_varint(&mut buf, n as u64);
+    put_varint(&mut buf, inst.topo.n_nodes as u64);
+    put_varint(&mut buf, inst.topo.pes_per_node as u64);
+    if let Some(speeds) = speeds {
+        for &v in speeds {
+            put_f64_bits(&mut buf, v);
+        }
+    }
+    for &l in &inst.loads {
+        put_f64_bits(&mut buf, l);
+    }
+    for c in &inst.coords {
+        put_f64_bits(&mut buf, c[0]);
+        put_f64_bits(&mut buf, c[1]);
+    }
+    for &s in &inst.sizes {
+        put_f64_bits(&mut buf, s);
+    }
+    for &pe in &inst.mapping {
+        put_varint(&mut buf, u64::from(pe));
+    }
+    // Upper-triangle CSR: row o lists partners b > o in ascending order
+    // (CSR rows are ascending, so they are the row's tail — found by
+    // partition point, no scan state). Gaps are `b - prev - 1` with
+    // `prev` starting at `o`: strictly ascending partners make every
+    // gap non-negative.
+    for o in 0..n {
+        let row = inst.graph.offsets[o] as usize..inst.graph.offsets[o + 1] as usize;
+        let nbrs = &inst.graph.nbrs[row.clone()];
+        let split = nbrs.partition_point(|&b| b <= o as u32);
+        put_varint(&mut buf, (nbrs.len() - split) as u64);
+        let mut prev = o as u32;
+        for (&b, &w) in nbrs[split..].iter().zip(&inst.graph.bytes[row][split..]) {
+            put_varint(&mut buf, u64::from(b - prev - 1));
+            put_f64_bits(&mut buf, w);
+            prev = b;
+        }
+    }
+
+    crate::obs::histogram!("lbi.encode.bytes").observe(buf.len() as u64);
+    if timed {
+        crate::obs::histogram!("lbi.encode.us").observe(crate::obs::now_us() - t0);
+    }
+    buf
+}
+
+/// Decode an [`encode_lbi`] payload. Any malformed or truncated input
+/// returns `Err` (the distributed receive path must never panic on
+/// wire bytes).
+pub fn decode_lbi(data: &[u8]) -> Result<Instance> {
+    let _s = crate::obs::span("lbi.decode", "model");
+    let timed = crate::obs::metrics_enabled() || crate::obs::tracing_enabled();
+    let t0 = if timed { crate::obs::now_us() } else { 0 };
+
+    if data.len() < MAGIC.len() || data[..3] != MAGIC[..3] {
+        bail!("lbi: bad magic");
+    }
+    if data[3] != MAGIC[3] {
+        bail!("lbi: unsupported version {}", data[3]);
+    }
+    let mut c = Cursor { buf: data, pos: MAGIC.len() };
+    let flags = c.byte()?;
+    if flags & !FLAG_SPEEDS != 0 {
+        bail!("lbi: unknown flags {flags:#x}");
+    }
+    let n = usize::try_from(c.varint()?)?;
+    let n_nodes = usize::try_from(c.varint()?)?;
+    let ppn = usize::try_from(c.varint()?)?;
+    if n_nodes == 0 || ppn == 0 {
+        bail!("lbi: empty topology ({n_nodes} nodes x {ppn} pes)");
+    }
+    let mut topo = Topology::new(n_nodes, ppn);
+    if flags & FLAG_SPEEDS != 0 {
+        let mut speeds = Vec::with_capacity(topo.n_pes());
+        for _ in 0..topo.n_pes() {
+            let v = c.f64_bits()?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("lbi: speeds must be finite and positive");
+            }
+            speeds.push(v);
+        }
+        topo = topo.with_pe_speeds(speeds);
+    }
+    let mut loads = Vec::with_capacity(n);
+    for _ in 0..n {
+        loads.push(c.f64_bits()?);
+    }
+    let mut coords = Vec::with_capacity(n);
+    for _ in 0..n {
+        coords.push([c.f64_bits()?, c.f64_bits()?]);
+    }
+    let mut sizes = Vec::with_capacity(n);
+    for _ in 0..n {
+        sizes.push(c.f64_bits()?);
+    }
+    let mut mapping = Vec::with_capacity(n);
+    for _ in 0..n {
+        mapping.push(u32::try_from(c.varint()?)?);
+    }
+    // Rows concatenate straight into the canonical (a, b)-sorted merged
+    // edge list: `a` ascends across rows, `b` ascends within one.
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    for o in 0..n {
+        let k = usize::try_from(c.varint()?)?;
+        let mut prev = o as u32;
+        for _ in 0..k {
+            let gap = u32::try_from(c.varint()?)?;
+            let b = prev
+                .checked_add(gap)
+                .and_then(|x| x.checked_add(1))
+                .filter(|&b| (b as usize) < n);
+            let Some(b) = b else {
+                bail!("lbi: edge partner out of range in row {o}");
+            };
+            edges.push((o as u32, b, c.f64_bits()?));
+            prev = b;
+        }
+    }
+    if c.pos != data.len() {
+        bail!("lbi: {} trailing bytes", data.len() - c.pos);
+    }
+    let graph = CommGraph::from_canonical_edges(n, &edges);
+    let inst = Instance { loads, coords, sizes, graph, mapping, topo };
+    inst.validate()?;
+
+    crate::obs::histogram!("lbi.decode.bytes").observe(data.len() as u64);
+    if timed {
+        crate::obs::histogram!("lbi.decode.us").observe(crate::obs::now_us() - t0);
+    }
+    Ok(inst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+
+    fn sample() -> Instance {
+        let graph = CommGraph::from_edges(
+            5,
+            &[(0, 1, 8.0), (1, 2, 4.5), (2, 3, 2.25), (0, 4, 1.0), (3, 4, 0.125)],
+        );
+        let mut inst = Instance::new(
+            vec![1.0, 2.0, 3.5, 4.0, 0.5],
+            vec![[0.0, 0.0], [1.0, 0.5], [2.0, 1.0], [3.0, 1.5], [4.0, 2.0]],
+            graph,
+            vec![0, 1, 2, 3, 0],
+            Topology::new(2, 2),
+        );
+        inst.sizes = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        inst
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let inst = sample();
+        let bytes = encode_lbi(&inst);
+        let back = decode_lbi(&bytes).unwrap();
+        assert_eq!(back.loads, inst.loads);
+        assert_eq!(back.coords, inst.coords);
+        assert_eq!(back.sizes, inst.sizes);
+        assert_eq!(back.mapping, inst.mapping);
+        assert_eq!(back.graph, inst.graph);
+        assert_eq!(back.topo, inst.topo);
+        // the decoder is exact, so re-encoding is byte-stable
+        assert_eq!(encode_lbi(&back), bytes);
+    }
+
+    #[test]
+    fn round_trips_speeds_and_odd_floats() {
+        let mut inst = sample();
+        inst.topo = inst.topo.clone().with_pe_speeds(vec![1.0, 2.5, 0.75, 1.0 / 3.0]);
+        inst.loads[0] = f64::MIN_POSITIVE; // subnormal boundary
+        inst.coords[1] = [-0.0, 1e-300];
+        let bytes = encode_lbi(&inst);
+        let back = decode_lbi(&bytes).unwrap();
+        assert_eq!(back.topo, inst.topo);
+        assert_eq!(back.loads[0].to_bits(), inst.loads[0].to_bits());
+        assert_eq!(back.coords[1][0].to_bits(), inst.coords[1][0].to_bits());
+        assert_eq!(encode_lbi(&back), bytes);
+    }
+
+    #[test]
+    fn agrees_with_text_format() {
+        let inst = sample();
+        let via_bin = decode_lbi(&encode_lbi(&inst)).unwrap();
+        let via_text = Instance::from_lbi(&inst.to_lbi()).unwrap();
+        assert_eq!(via_bin.loads, via_text.loads);
+        assert_eq!(via_bin.graph, via_text.graph);
+        assert_eq!(via_bin.mapping, via_text.mapping);
+        assert_eq!(via_bin.topo, via_text.topo);
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        assert!(decode_lbi(b"").is_err());
+        assert!(decode_lbi(b"NOP\x01").is_err());
+        assert!(decode_lbi(&[b'L', b'B', b'I', 9]).is_err(), "future version");
+        let good = encode_lbi(&sample());
+        for cut in [5, good.len() / 2, good.len() - 1] {
+            assert!(decode_lbi(&good[..cut]).is_err(), "truncated at {cut}");
+        }
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode_lbi(&trailing).is_err());
+        // flip a varint-region byte: decoder must reject, not panic
+        let mut bad = good;
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        let _ = decode_lbi(&bad); // Err or a different valid instance — never a panic
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        let mut buf = Vec::new();
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u64::from(u32::MAX), u64::MAX] {
+            buf.clear();
+            put_varint(&mut buf, v);
+            let mut c = Cursor { buf: &buf, pos: 0 };
+            assert_eq!(c.varint().unwrap(), v);
+            assert_eq!(c.pos, buf.len());
+        }
+    }
+}

@@ -3,10 +3,12 @@
 
 pub mod graph;
 pub mod instance;
+pub mod lbi;
 pub mod metrics;
 pub mod topology;
 
 pub use graph::{CommGraph, GroupTraffic, TrafficRecorder};
+pub use lbi::{decode_lbi, encode_lbi};
 pub use instance::{rehome_mapping, restrict_instance, Assignment, Instance, Restriction};
 pub use metrics::{evaluate, evaluate_mapping, CommSplit, LbMetrics};
 pub use topology::{ResizeEvent, ResizeSchedule, SpeedSchedule, Topology};

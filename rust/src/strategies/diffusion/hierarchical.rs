@@ -13,21 +13,39 @@
 //! guarantees `x / 1.0 == x` bitwise, so the homogeneous behavior is
 //! unchanged to the last bit (locked by `rust/tests/hetero_identity.rs`).
 
+use super::scratch::LbScratch;
 use crate::model::Instance;
 
 /// Produce the PE-level mapping realizing `new_node_map`.
 pub fn assign_pes(inst: &Instance, new_node_map: &[u32], tol: f64) -> Vec<u32> {
+    let mut scratch = LbScratch::default();
+    assign_pes_with(inst, new_node_map, tol, &mut scratch)
+}
+
+/// [`assign_pes`] against a caller-owned [`LbScratch`] — the hot path
+/// `Diffusion::rebalance` uses. Member lists come from the scratch's
+/// sorted-by-node SoA index rebuilt on `new_node_map`: one counting-
+/// sort pass over all objects replaces the seed's per-node full-object
+/// scan (`O(n_objects * n_nodes)` → `O(n_objects + n_nodes)`), and each
+/// node's members arrive as one contiguous ascending-id slice — exactly
+/// the order [`assign_pes_node`]'s contract demands, so the refinement
+/// decisions are bit-identical to the scan-built lists.
+pub fn assign_pes_with(
+    inst: &Instance,
+    new_node_map: &[u32],
+    tol: f64,
+    scratch: &mut LbScratch,
+) -> Vec<u32> {
     let ppn = inst.topo.pes_per_node;
     if ppn == 1 {
         // node == PE
         return new_node_map.to_vec();
     }
+    scratch.build_soa(inst, new_node_map, inst.topo.n_nodes);
     let mut mapping = vec![0u32; inst.n_objects()];
     for node in 0..inst.topo.n_nodes as u32 {
-        let members: Vec<u32> = (0..inst.n_objects() as u32)
-            .filter(|&o| new_node_map[o as usize] == node)
-            .collect();
-        for (o, pe) in assign_pes_node(inst, node, &members, tol) {
+        let members = &scratch.soa_objs[scratch.soa_node(node as usize)];
+        for (o, pe) in assign_pes_node(inst, node, members, tol) {
             mapping[o as usize] = pe;
         }
     }

@@ -198,7 +198,9 @@ impl LoadBalancer for Diffusion {
         }
         let mapping = {
             let _s4 = crate::obs::span("refine.pes", "diffusion");
-            hierarchical::assign_pes(inst, &node_map, self.params.refine_tolerance)
+            // reuses the scratch's SoA arrays, rebuilt on the post-LB
+            // node map (stage 3 left them indexed on the pre-LB one)
+            hierarchical::assign_pes_with(inst, &node_map, self.params.refine_tolerance, scratch)
         };
         scratch.node_map = node_map;
         // recycle the quota rows for the next round

@@ -31,7 +31,13 @@
 //! is large; scores land in per-position slots and are pushed into the
 //! heap in pool order, so heap evolution — and therefore every strategy
 //! decision — is bit-identical to the sequential seed for any thread
-//! count (`rust/tests/perf_refactor.rs`).
+//! count (`rust/tests/perf_refactor.rs`). Candidate pools walk the
+//! scratch's sorted-by-node SoA slices (contiguous, ascending object
+//! id — see [`LbScratch::build_soa`]) and the comm kernel's neighbor
+//! walk accumulates branchlessly via `w * mask` adds, which keeps the
+//! hot loops autovectorizable without reassociating a single f64 sum
+//! (`rust/tests/simd_soa_identity.rs` pins both against frozen scalar
+//! copies).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -158,7 +164,7 @@ pub fn select_comm_with(
     let floor = quota_floor(inst);
     scratch.moved.clear();
     scratch.moved.resize(inst.n_objects(), false);
-    scratch.index_by_node(node_map, n_nodes);
+    scratch.build_soa(inst, node_map, n_nodes);
     let mut migrations = 0;
     for i in 0..n_nodes {
         migrations +=
@@ -169,10 +175,10 @@ pub fn select_comm_with(
 
 /// Comm-variant picks for **one** node `i` against its quota row —
 /// the per-node body shared by the sequential sweep above and the
-/// distributed stage-3 protocol. Contract: `scratch.moved` and
-/// `scratch.by_node` must already reflect every migration performed
-/// earlier this LB round (by lower-ranked nodes), exactly as the
-/// sequential loop maintains them; `floor` comes from [`quota_floor`].
+/// distributed stage-3 protocol. Contract: `scratch.moved` and the
+/// SoA index (`scratch.build_soa`) must already reflect every migration
+/// performed earlier this LB round (by lower-ranked nodes), exactly as
+/// the sequential loop maintains them; `floor` comes from [`quota_floor`].
 /// Each pick mutates `node_map` / `scratch.moved` and, when `manifest`
 /// is given, appends `(object, destination node)` in pick order — the
 /// migration manifest the protocol ships to receivers.
@@ -202,13 +208,15 @@ pub fn select_comm_node(
     }
     // Pool of objects currently on node i (excluding arrivals from
     // earlier nodes this round — single-hop at object granularity).
+    // The SoA slice holds node i's objects contiguously in ascending
+    // id order — the same order the seed's by-node rows produced.
     scratch.pool.clear();
     {
-        let (pool_buf, by_node, moved) =
-            (&mut scratch.pool, &scratch.by_node, &scratch.moved);
+        let slots = scratch.soa_node(i);
+        let (pool_buf, objs, moved) =
+            (&mut scratch.pool, &scratch.soa_objs[slots], &scratch.moved);
         pool_buf.extend(
-            by_node[i]
-                .iter()
+            objs.iter()
                 .copied()
                 .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize]),
         );
@@ -285,11 +293,58 @@ pub fn select_comm_node(
     migrations
 }
 
+/// Chunk-parallel pool-scoring scaffold shared by the comm and coord
+/// kernels: evaluate `score_one` for every pool position into `scores`.
+/// Chunk boundaries depend only on `(pool length, n_tasks)` and each
+/// slot is written by exactly one task, so the buffer's contents are
+/// identical for any thread count.
+fn score_pool_with(
+    pool_buf: &[u32],
+    scores: &mut Vec<(f64, f64, bool)>,
+    n_tasks: usize,
+    score_one: &(dyn Fn(usize) -> Option<(f64, f64)> + Sync),
+) {
+    let n = pool_buf.len();
+    scores.clear();
+    scores.resize(n, (0.0, 0.0, false));
+    if n < PAR_SCORE_MIN || n_tasks == 1 {
+        for (p, slot) in scores.iter_mut().enumerate() {
+            if let Some((key, tie)) = score_one(pool_buf[p] as usize) {
+                *slot = (key, tie, true);
+            }
+        }
+        return;
+    }
+    let chunk = n.div_ceil(n_tasks);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_tasks);
+    for (t, sc) in scores.chunks_mut(chunk).enumerate() {
+        let start = t * chunk;
+        tasks.push(Box::new(move || {
+            for (off, slot) in sc.iter_mut().enumerate() {
+                if let Some((key, tie)) = score_one(pool_buf[start + off] as usize) {
+                    *slot = (key, tie, true);
+                }
+            }
+        }));
+    }
+    pool::global().scoped(tasks);
+}
+
 /// Score every pooled object's `(bytes to j, bytes kept local)` into
 /// `scratch.scores` (per pool position). Pure reads over the graph and
 /// `node_map`; chunk-parallel on the global pool for large pools. The
 /// per-object neighbor walk is sequential either way, so each slot's
 /// f64 sums are identical for any chunking.
+///
+/// The walk accumulates **branchlessly**: every neighbor contributes
+/// `w * mask` with `mask ∈ {0.0, 1.0}`, which keeps the loop body
+/// straight-line (autovectorizable — the branchy form stalled on the
+/// unpredictable `pn == j` test). Adding `+0.0` leaves an f64
+/// accumulator bitwise unchanged (graph weights are non-negative byte
+/// counts, so neither sum can hold `-0.0`), and the left-to-right CSR
+/// row order is untouched — bit-identical to the branchy seed kernel
+/// for every input (`tools/crosscheck_simd.py` cross-simulates this;
+/// `rust/tests/simd_soa_identity.rs` locks it against a frozen copy).
 fn score_pool_comm(
     inst: &Instance,
     node_map: &[u32],
@@ -297,52 +352,54 @@ fn score_pool_comm(
     j: u32,
     scratch: &mut LbScratch,
 ) {
-    let n = scratch.pool.len();
-    scratch.scores.clear();
-    scratch.scores.resize(n, (0.0, 0.0, false));
+    let n_tasks = scratch
+        .par_tasks
+        .unwrap_or_else(|| pool::global().threads() + 1)
+        .max(1);
     let (pool_buf, scores, moved) = (&scratch.pool, &mut scratch.scores, &scratch.moved);
     let score_one = |o: usize| -> Option<(f64, f64)> {
         if moved[o] || node_map[o] != i {
             return None;
         }
+        let nb = inst.graph.neighbors(o);
+        let wt = inst.graph.weights(o);
         let mut bj = 0.0;
         let mut local = 0.0;
-        for (&p, &w) in inst.graph.neighbors(o).iter().zip(inst.graph.weights(o)) {
+        for (&p, &w) in nb.iter().zip(wt) {
             let pn = node_map[p as usize];
-            if pn == j {
-                bj += w;
-            } else if pn == i {
-                local += w;
-            }
+            bj += w * ((pn == j) as u32 as f64);
+            local += w * ((pn == i) as u32 as f64);
         }
         Some((bj, local))
     };
+    score_pool_with(pool_buf, scores, n_tasks, &score_one);
+}
+
+/// Coord-variant pool scoring: `-dist2` to the target centroid per
+/// pool position (max-heap keys — closer is larger). Elementwise over
+/// the pool, so the same chunk-parallel scaffold applies; the seed
+/// scored inline in the heap-push loop, sequentially — hoisting the
+/// scores into per-position slots keeps the push order (and every
+/// decision) identical while making large pools data-parallel.
+fn score_pool_coord(
+    inst: &Instance,
+    node_map: &[u32],
+    i: u32,
+    cj: [f64; 2],
+    scratch: &mut LbScratch,
+) {
     let n_tasks = scratch
         .par_tasks
         .unwrap_or_else(|| pool::global().threads() + 1)
         .max(1);
-    if n < PAR_SCORE_MIN || n_tasks == 1 {
-        for (p, slot) in scores.iter_mut().enumerate() {
-            if let Some((bj, local)) = score_one(pool_buf[p] as usize) {
-                *slot = (bj, local, true);
-            }
+    let (pool_buf, scores, moved) = (&scratch.pool, &mut scratch.scores, &scratch.moved);
+    let score_one = |o: usize| -> Option<(f64, f64)> {
+        if moved[o] || node_map[o] != i {
+            return None;
         }
-        return;
-    }
-    let chunk = n.div_ceil(n_tasks);
-    let score_one = &score_one;
-    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_tasks);
-    for (t, sc) in scores.chunks_mut(chunk).enumerate() {
-        let start = t * chunk;
-        tasks.push(Box::new(move || {
-            for (off, slot) in sc.iter_mut().enumerate() {
-                if let Some((bj, local)) = score_one(pool_buf[start + off] as usize) {
-                    *slot = (bj, local, true);
-                }
-            }
-        }));
-    }
-    pool::global().scoped(tasks);
+        Some((-dist2(inst.coords[o], cj), 0.0))
+    };
+    score_pool_with(pool_buf, scores, n_tasks, &score_one);
 }
 
 /// Coord-variant selection: distance to the target node's centroid,
@@ -420,7 +477,7 @@ pub fn select_coord_with(
     let floor = quota_floor(inst);
     scratch.moved.clear();
     scratch.moved.resize(inst.n_objects(), false);
-    scratch.index_by_node(node_map, n_nodes);
+    scratch.build_soa(inst, node_map, n_nodes);
     let mut migrations = 0;
     for i in 0..n_nodes {
         migrations +=
@@ -455,11 +512,11 @@ pub fn select_coord_node(
     }
     scratch.pool.clear();
     {
-        let (pool_buf, by_node, moved) =
-            (&mut scratch.pool, &scratch.by_node, &scratch.moved);
+        let slots = scratch.soa_node(i);
+        let (pool_buf, objs, moved) =
+            (&mut scratch.pool, &scratch.soa_objs[slots], &scratch.moved);
         pool_buf.extend(
-            by_node[i]
-                .iter()
+            objs.iter()
                 .copied()
                 .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize]),
         );
@@ -469,13 +526,21 @@ pub fn select_coord_node(
         let mut remaining = quota;
         heap.clear();
         let cj = centroid(&scratch.csums, &scratch.ccounts, j as usize);
-        for &o in &scratch.pool {
-            if scratch.moved[o as usize] || node_map[o as usize] != i as u32 {
+        // max-heap: closer = higher priority = larger key. Scores land
+        // in per-position slots first (chunk-parallel on big pools) and
+        // push in pool order — the seed's inline sequential push order.
+        score_pool_coord(inst, node_map, i as u32, cj, scratch);
+        let (pool_buf, scores) =
+            (std::mem::take(&mut scratch.pool), std::mem::take(&mut scratch.scores));
+        for (p, &o) in pool_buf.iter().enumerate() {
+            let (key, _, valid) = scores[p];
+            if !valid {
                 continue;
             }
-            // max-heap: closer = higher priority = larger key
-            heap.push(Entry { key: -dist2(inst.coords[o as usize], cj), tie: 0.0, obj: o });
+            heap.push(Entry { key, tie: 0.0, obj: o });
         }
+        scratch.pool = pool_buf;
+        scratch.scores = scores;
         // bounded revalidation so a drifting centroid cannot loop us
         let mut revalidations = 4 * scratch.pool.len() + 16;
         while remaining > 1e-12 {
@@ -645,7 +710,7 @@ mod tests {
         let floor = quota_floor(&inst);
         let mut scratch = LbScratch::default();
         scratch.moved.resize(inst.n_objects(), false);
-        scratch.index_by_node(&inst.node_mapping(), 2);
+        scratch.build_soa(&inst, &inst.node_mapping(), 2);
         let mut manifest = Vec::new();
         let n = select_comm_node(
             &inst,

@@ -88,8 +88,27 @@ pub struct LbScratch {
     pub ccounts: Vec<usize>,
     /// Recycled `BinaryHeap` backing storage.
     pub heap: Vec<super::object_selection::Entry>,
-    /// Objects-by-node index (inner vec capacity reused).
-    pub by_node: Vec<Vec<u32>>,
+    // ------------------------------------------- sorted-by-node SoA
+    // Per-node object storage in structure-of-arrays layout: node `i`
+    // owns slots `soa_offsets[i]..soa_offsets[i+1]`, each slot holding
+    // one object in ascending id order (counting sort is stable), with
+    // its load, migration bytes, and CSR comm-row bounds gathered into
+    // parallel arrays. Replaces the seed-era `Vec<Vec<u32>>` by-node
+    // index: stage-3 candidate scans and §III-D refinement now walk
+    // contiguous memory, and the rebuild is a single allocation-free
+    // counting-sort pass per LB round (see [`Self::build_soa`]).
+    /// Per-node slot ranges, length `n_nodes + 1`.
+    pub soa_offsets: Vec<u32>,
+    /// Object id per slot, ascending within each node's range.
+    pub soa_objs: Vec<u32>,
+    /// `inst.loads[soa_objs[s]]` per slot.
+    pub soa_loads: Vec<f64>,
+    /// `inst.sizes[soa_objs[s]]` (migration bytes) per slot.
+    pub soa_sizes: Vec<f64>,
+    /// `(row_start, row_end)` into the comm graph's CSR arrays per slot.
+    pub soa_rows: Vec<(u32, u32)>,
+    /// Counting-sort write cursors (build_soa scratch).
+    soa_cursor: Vec<u32>,
     /// Current node's candidate pool.
     pub pool: Vec<u32>,
     /// Sorted (neighbor, quota) targets of the current node.
@@ -140,17 +159,48 @@ impl LbScratch {
         self.cur_epoch
     }
 
-    /// Rebuild the objects-by-node index for `node_map`.
-    pub fn index_by_node(&mut self, node_map: &[u32], n_nodes: usize) {
-        for row in self.by_node.iter_mut() {
-            row.clear();
+    /// Rebuild the sorted-by-node SoA object storage for `node_map` —
+    /// one counting-sort pass, allocation-free once warm. Placing
+    /// objects `0..n` in order keeps each node's slot range in
+    /// ascending object id order, the exact order the seed's
+    /// `Vec<Vec<u32>>` index produced, so every pool iteration (and
+    /// therefore every stage-3 decision) is bit-identical to it.
+    pub fn build_soa(&mut self, inst: &Instance, node_map: &[u32], n_nodes: usize) {
+        let n = node_map.len();
+        debug_assert_eq!(n, inst.n_objects());
+        self.soa_offsets.clear();
+        self.soa_offsets.resize(n_nodes + 1, 0);
+        for &nm in node_map {
+            self.soa_offsets[nm as usize + 1] += 1;
         }
-        if self.by_node.len() < n_nodes {
-            self.by_node.resize_with(n_nodes, Vec::new);
+        for i in 0..n_nodes {
+            self.soa_offsets[i + 1] += self.soa_offsets[i];
         }
+        self.soa_objs.clear();
+        self.soa_objs.resize(n, 0);
+        self.soa_loads.clear();
+        self.soa_loads.resize(n, 0.0);
+        self.soa_sizes.clear();
+        self.soa_sizes.resize(n, 0.0);
+        self.soa_rows.clear();
+        self.soa_rows.resize(n, (0, 0));
+        self.soa_cursor.clear();
+        self.soa_cursor.extend_from_slice(&self.soa_offsets[..n_nodes]);
+        let offsets = &inst.graph.offsets;
         for (o, &nm) in node_map.iter().enumerate() {
-            self.by_node[nm as usize].push(o as u32);
+            let s = self.soa_cursor[nm as usize] as usize;
+            self.soa_objs[s] = o as u32;
+            self.soa_loads[s] = inst.loads[o];
+            self.soa_sizes[s] = inst.sizes[o];
+            self.soa_rows[s] = (offsets[o], offsets[o + 1]);
+            self.soa_cursor[nm as usize] += 1;
         }
+    }
+
+    /// Node `i`'s slot range in the SoA arrays.
+    #[inline]
+    pub fn soa_node(&self, i: usize) -> std::ops::Range<usize> {
+        self.soa_offsets[i] as usize..self.soa_offsets[i + 1] as usize
     }
 }
 
@@ -208,12 +258,30 @@ mod tests {
     }
 
     #[test]
-    fn by_node_index_reuses_rows() {
+    fn soa_groups_ascending_and_rebuilds_clean() {
+        let inst = Instance::new(
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![[0.0; 2]; 4],
+            CommGraph::from_edges(4, &[(0, 2, 5.0), (1, 3, 7.0)]),
+            vec![0, 1, 0, 1],
+            Topology::flat(2),
+        );
         let mut s = LbScratch::default();
-        s.index_by_node(&[0, 1, 0, 1], 2);
-        assert_eq!(s.by_node[0], vec![0, 2]);
-        s.index_by_node(&[1, 1, 1, 1], 2);
-        assert_eq!(s.by_node[0], Vec::<u32>::new());
-        assert_eq!(s.by_node[1], vec![0, 1, 2, 3]);
+        s.build_soa(&inst, &[0, 1, 0, 1], 2);
+        assert_eq!(&s.soa_objs[s.soa_node(0)], &[0, 2]);
+        assert_eq!(&s.soa_objs[s.soa_node(1)], &[1, 3]);
+        assert_eq!(&s.soa_loads[s.soa_node(0)], &[1.0, 3.0]);
+        assert_eq!(&s.soa_sizes[s.soa_node(1)], &[1.0, 1.0]);
+        // comm-row bounds match the graph's CSR offsets per slot
+        for (s_idx, &o) in s.soa_objs.iter().enumerate() {
+            let (lo, hi) = s.soa_rows[s_idx];
+            assert_eq!(lo, inst.graph.offsets[o as usize]);
+            assert_eq!(hi, inst.graph.offsets[o as usize + 1]);
+        }
+        // rebuild with every object on node 1: no stale state
+        s.build_soa(&inst, &[1, 1, 1, 1], 2);
+        assert!(s.soa_node(0).is_empty());
+        assert_eq!(&s.soa_objs[s.soa_node(1)], &[0, 1, 2, 3]);
+        assert_eq!(&s.soa_loads[s.soa_node(1)], &[1.0, 2.0, 3.0, 4.0]);
     }
 }

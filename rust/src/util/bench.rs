@@ -18,6 +18,10 @@ pub struct Timing {
     pub median_s: f64,
     pub p99_s: f64,
     pub min_s: f64,
+    /// Sample standard deviation of the per-iteration times — the
+    /// noise figure `tools/bench_gate.py` uses to widen its regression
+    /// tolerance on jittery paths instead of flagging scheduler noise.
+    pub std_s: f64,
 }
 
 impl Timing {
@@ -67,6 +71,8 @@ pub fn time_fn<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Tim
         samples.push(t.elapsed().as_secs_f64());
     }
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / (samples.len().max(2) - 1) as f64;
     Timing {
         name: name.to_string(),
         iters,
@@ -74,6 +80,7 @@ pub fn time_fn<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Tim
         median_s: percentile(&samples, 50.0),
         p99_s: percentile(&samples, 99.0),
         min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        std_s: var.sqrt(),
     }
 }
 
@@ -118,13 +125,14 @@ impl JsonReport {
     pub fn add(&mut self, t: &Timing, throughput: Option<(&str, f64)>) {
         let mut obj = format!(
             "{{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \
-             \"p99_ns\": {:.1}, \"min_ns\": {:.1}",
+             \"p99_ns\": {:.1}, \"min_ns\": {:.1}, \"std_ns\": {:.1}",
             json_escape(&t.name),
             t.iters,
             t.mean_s * 1e9,
             t.median_s * 1e9,
             t.p99_s * 1e9,
             t.min_s * 1e9,
+            t.std_s * 1e9,
         );
         // {:.3} would render inf/NaN bare, which is invalid JSON — a
         // zero-duration path (coarse timer) must not corrupt the file.
@@ -264,6 +272,7 @@ mod tests {
         assert!(!s.contains("inf"), "non-finite throughput leaked: {s}");
         assert!(s.contains("\"schema\": \"difflb-bench-v1\""));
         assert!(s.contains("\"label\": \"unit-test\""));
+        assert!(s.contains("\"std_ns\""), "noise figure missing: {s}");
         assert!(s.contains("path \\\"a\\\""));
         assert!(s.contains("\"throughput\": {\"unit\": \"Mops/s\", \"value\": 12.500}"));
         // braces balance (cheap well-formedness check without a parser)

@@ -275,6 +275,43 @@ fn telemetry_on_off_runs_are_bit_identical() {
     // halves (6 iters at period 2 → 3 rounds each)
     let rounds = difflb::obs::metrics::take_rounds();
     assert!(!rounds.is_empty(), "tracing-on runs recorded no metrics rounds");
+
+    // The binary .lbi wire codec is telemetry-neutral too: the bytes
+    // the distributed driver broadcasts — and the instance decoded from
+    // them — must not depend on the collection flags, while the traced
+    // half records its encode/decode spans and size histograms.
+    let inst = {
+        let mut app = make_app("stencil");
+        let mut ctx = StepCtx::default();
+        app.step(&mut ctx).unwrap();
+        app.build_instance()
+    };
+    difflb::obs::set_tracing(false);
+    difflb::obs::set_metrics(false);
+    let off_bytes = difflb::model::encode_lbi(&inst);
+    difflb::obs::set_tracing(true);
+    difflb::obs::set_metrics(true);
+    let on_bytes = difflb::model::encode_lbi(&inst);
+    let decoded = difflb::model::decode_lbi(&on_bytes).unwrap();
+    difflb::obs::set_tracing(false);
+    difflb::obs::set_metrics(false);
+    assert_eq!(off_bytes, on_bytes, "lbi encode must not depend on telemetry flags");
+    assert_eq!(decoded.mapping, inst.mapping, "lbi decode under telemetry");
+    assert_eq!(
+        difflb::model::encode_lbi(&decoded),
+        off_bytes,
+        "lbi re-encode must be byte-stable regardless of telemetry"
+    );
+    difflb::obs::trace::flush_local();
+    let events = difflb::obs::trace::drain_merged();
+    assert!(
+        events.iter().any(|e| e.name == "lbi.encode"),
+        "traced encode recorded no lbi.encode span"
+    );
+    assert!(
+        events.iter().any(|e| e.name == "lbi.decode"),
+        "traced decode recorded no lbi.decode span"
+    );
 }
 
 #[test]

@@ -1,0 +1,637 @@
+//! Guard rails for the SIMD + SoA hot-path overhaul: the vectorized
+//! particle push, the branchless stage-3 scoring kernels, the
+//! sorted-by-node SoA candidate pools, and the binary `.lbi` codec must
+//! all be **bit-identical** (or byte-identical, for the codec) to the
+//! pre-PR scalar implementations. In the style of
+//! `rust/tests/hetero_identity.rs`, the replaced decision bodies are
+//! FROZEN below, verbatim — the `rem_euclid` grid charge, the scalar
+//! sequential push loop, the branchy by-node stage-3 selection, the
+//! scan-built §III-D member lists, the per-line `format!` text
+//! serializer — and compared against the live implementations over
+//! randomized instances across uniform, mixed-speed, and noisy-speed
+//! topologies.
+//!
+//! The python twin `tools/crosscheck_simd.py` cross-simulates the same
+//! arithmetic identities (mod-2 wrap, masked accumulation, counting
+//! sort, varint/CSR round-trip) in-container where no Rust toolchain
+//! exists.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use difflb::apps::pic::init::{initialize, InitMode, DT};
+use difflb::apps::pic::push::{native_push, push_one};
+use difflb::model::{decode_lbi, encode_lbi, CommGraph, Instance, Topology};
+use difflb::runtime::PicBatch;
+use difflb::strategies::diffusion::hierarchical::{assign_pes, assign_pes_node};
+use difflb::strategies::diffusion::object_selection::{select_comm, select_coord};
+use difflb::strategies::diffusion::virtual_lb::Quotas;
+use difflb::util::rng::Rng;
+
+// ===================================================== frozen legacy
+
+/// Frozen pre-SIMD grid charge: `rem_euclid`-based mod-2 wrap.
+fn legacy_grid_charge(x: f64, q: f64) -> f64 {
+    q * (1.0 - 2.0 * (x.rem_euclid(2.0)))
+}
+
+/// Frozen pre-SIMD particle push (identical to the live [`push_one`]
+/// except for the `rem_euclid` grid charge — the periodic position wrap
+/// was already branchless in the seed).
+#[allow(clippy::too_many_arguments)]
+fn legacy_push_one(
+    x: f64,
+    y: f64,
+    vx: f64,
+    vy: f64,
+    q: f64,
+    l: f64,
+    big_q: f64,
+) -> (f64, f64, f64, f64) {
+    const MASS_INV: f64 = 1.0;
+    let cx = x.floor();
+    let cy = y.floor();
+    let rel_x = x - cx;
+    let rel_y = y - cy;
+    let q_left = legacy_grid_charge(cx, big_q);
+    let q_right = -q_left;
+
+    fn corner(xd: f64, yd: f64, qp: f64, qg: f64) -> (f64, f64) {
+        let r2 = xd * xd + yd * yd;
+        let f = (qp * qg) / (r2 * r2.sqrt());
+        (f * xd, f * yd)
+    }
+
+    let (fx_tl, fy_tl) = corner(rel_x, rel_y, q, q_left);
+    let (fx_bl, fy_bl) = corner(rel_x, 1.0 - rel_y, q, q_left);
+    let (fx_tr, fy_tr) = corner(1.0 - rel_x, rel_y, q, q_right);
+    let (fx_br, fy_br) = corner(1.0 - rel_x, 1.0 - rel_y, q, q_right);
+
+    let ax = (fx_tl + fx_bl - fx_tr - fx_br) * MASS_INV;
+    let ay = (fy_tl - fy_bl + fy_tr - fy_br) * MASS_INV;
+
+    let xu = x + vx * DT + 0.5 * ax * (DT * DT);
+    let yu = y + vy * DT + 0.5 * ay * (DT * DT);
+    let xn = xu - l * (xu / l).floor();
+    let yn = yu - l * (yu / l).floor();
+    (xn, yn, vx + ax * DT, vy + ay * DT)
+}
+
+/// Frozen sequential whole-batch push (the seed's threads == 1 loop).
+fn legacy_push_batch(b: &mut PicBatch, l: f64, big_q: f64) {
+    for i in 0..b.len() {
+        let (xn, yn, vxn, vyn) =
+            legacy_push_one(b.x[i], b.y[i], b.vx[i], b.vy[i], b.q[i], l, big_q);
+        b.x[i] = xn;
+        b.y[i] = yn;
+        b.vx[i] = vxn;
+        b.vy[i] = vyn;
+    }
+}
+
+/// Frozen max-heap entry — same total_cmp ordering as the live one.
+#[derive(Debug, Clone, Copy)]
+struct FEntry {
+    key: f64,
+    tie: f64,
+    obj: u32,
+}
+impl PartialEq for FEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for FEntry {}
+impl PartialOrd for FEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for FEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key
+            .total_cmp(&other.key)
+            .then(other.tie.total_cmp(&self.tie))
+            .then(other.obj.cmp(&self.obj))
+    }
+}
+
+fn legacy_quota_floor(inst: &Instance) -> f64 {
+    if inst.topo.is_uniform() {
+        0.01 * inst.loads.iter().sum::<f64>() / inst.topo.n_nodes.max(1) as f64
+    } else {
+        let total_time: f64 = inst.node_times(&inst.mapping).iter().sum();
+        0.01 * total_time / inst.topo.n_nodes.max(1) as f64
+    }
+}
+
+fn legacy_eff_load(inst: &Instance, i: usize, load: f64) -> f64 {
+    if inst.topo.is_uniform() {
+        load
+    } else {
+        load / inst.topo.node_capacity(i as u32)
+    }
+}
+
+fn legacy_sorted_quota(row: &[(u32, f64)], floor: f64) -> Vec<(u32, f64)> {
+    let mut out: Vec<(u32, f64)> =
+        row.iter().filter(|&&(_, a)| a >= floor).copied().collect();
+    out.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    out
+}
+
+/// Frozen pre-SoA comm-variant selection: `Vec<Vec<u32>>` by-node pools
+/// and the **branchy** sequential scoring loop (`if pn == j { bj += w }
+/// else if pn == i { local += w }`) the branchless `w * mask` kernel
+/// replaced.
+fn legacy_select_comm(
+    inst: &Instance,
+    node_map: &mut [u32],
+    quotas: &Quotas,
+    overfill: f64,
+) -> usize {
+    let n_nodes = inst.topo.n_nodes;
+    let n_objects = inst.n_objects();
+    let floor = legacy_quota_floor(inst);
+    let mut moved = vec![false; n_objects];
+    let mut by_node: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+    for (o, &nm) in node_map.iter().enumerate() {
+        by_node[nm as usize].push(o as u32);
+    }
+    let mut migrations = 0;
+    for i in 0..n_nodes {
+        let targets = legacy_sorted_quota(&quotas.flows[i], floor);
+        if targets.is_empty() {
+            continue;
+        }
+        let pool: Vec<u32> = by_node[i]
+            .iter()
+            .copied()
+            .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize])
+            .collect();
+        for &(j, quota) in &targets {
+            let mut remaining = quota;
+            let mut bytes_to_j = vec![0.0f64; n_objects];
+            let mut scored = vec![false; n_objects];
+            let mut heap: BinaryHeap<FEntry> = BinaryHeap::new();
+            for &o in &pool {
+                let o = o as usize;
+                if moved[o] || node_map[o] != i as u32 {
+                    continue;
+                }
+                let mut bj = 0.0;
+                let mut local = 0.0;
+                for (&p, &w) in inst.graph.neighbors(o).iter().zip(inst.graph.weights(o)) {
+                    let pn = node_map[p as usize];
+                    if pn == j {
+                        bj += w;
+                    } else if pn == i as u32 {
+                        local += w;
+                    }
+                }
+                bytes_to_j[o] = bj;
+                scored[o] = true;
+                heap.push(FEntry { key: bj, tie: local, obj: o as u32 });
+            }
+            while remaining > 1e-12 {
+                let Some(top) = heap.pop() else { break };
+                let o = top.obj as usize;
+                if moved[o] || node_map[o] != i as u32 {
+                    continue;
+                }
+                let cur = bytes_to_j[o];
+                if (cur - top.key).abs() > 1e-9 {
+                    heap.push(FEntry { key: cur, ..top });
+                    continue;
+                }
+                let load = legacy_eff_load(inst, i, inst.loads[o]);
+                if !(remaining > 0.0 && load * (1.0 - overfill) <= remaining) {
+                    continue;
+                }
+                node_map[o] = j;
+                moved[o] = true;
+                migrations += 1;
+                remaining -= load;
+                for (&p, &w) in inst.graph.neighbors(o).iter().zip(inst.graph.weights(o)) {
+                    let p = p as usize;
+                    if node_map[p] == i as u32 && !moved[p] && scored[p] {
+                        bytes_to_j[p] += w;
+                        heap.push(FEntry { key: bytes_to_j[p], tie: 0.0, obj: p as u32 });
+                    }
+                }
+            }
+        }
+    }
+    migrations
+}
+
+fn legacy_centroid(sums: &[[f64; 2]], counts: &[usize], n: usize) -> [f64; 2] {
+    if counts[n] == 0 {
+        [0.0, 0.0]
+    } else {
+        [sums[n][0] / counts[n] as f64, sums[n][1] / counts[n] as f64]
+    }
+}
+
+fn legacy_dist2(a: [f64; 2], b: [f64; 2]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    dx * dx + dy * dy
+}
+
+/// Frozen pre-SoA coord-variant selection: by-node pools and the seed's
+/// inline sequential heap-push scoring (the live path hoists scores into
+/// per-position slots first).
+fn legacy_select_coord(
+    inst: &Instance,
+    node_map: &mut [u32],
+    quotas: &Quotas,
+    overfill: f64,
+) -> usize {
+    let n_nodes = inst.topo.n_nodes;
+    let floor = legacy_quota_floor(inst);
+    let mut moved = vec![false; inst.n_objects()];
+    let mut csums = vec![[0.0f64; 2]; n_nodes];
+    let mut ccounts = vec![0usize; n_nodes];
+    for (o, &node) in node_map.iter().enumerate() {
+        csums[node as usize][0] += inst.coords[o][0];
+        csums[node as usize][1] += inst.coords[o][1];
+        ccounts[node as usize] += 1;
+    }
+    let mut by_node: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+    for (o, &nm) in node_map.iter().enumerate() {
+        by_node[nm as usize].push(o as u32);
+    }
+    let mut migrations = 0;
+    for i in 0..n_nodes {
+        let targets = legacy_sorted_quota(&quotas.flows[i], floor);
+        if targets.is_empty() {
+            continue;
+        }
+        let pool: Vec<u32> = by_node[i]
+            .iter()
+            .copied()
+            .filter(|&o| node_map[o as usize] == i as u32 && !moved[o as usize])
+            .collect();
+        for &(j, quota) in &targets {
+            let mut remaining = quota;
+            let mut heap: BinaryHeap<FEntry> = BinaryHeap::new();
+            let cj = legacy_centroid(&csums, &ccounts, j as usize);
+            for &o in &pool {
+                if moved[o as usize] || node_map[o as usize] != i as u32 {
+                    continue;
+                }
+                heap.push(FEntry {
+                    key: -legacy_dist2(inst.coords[o as usize], cj),
+                    tie: 0.0,
+                    obj: o,
+                });
+            }
+            let mut revalidations = 4 * pool.len() + 16;
+            while remaining > 1e-12 {
+                let Some(top) = heap.pop() else { break };
+                let o = top.obj;
+                if moved[o as usize] || node_map[o as usize] != i as u32 {
+                    continue;
+                }
+                let cj = legacy_centroid(&csums, &ccounts, j as usize);
+                let cur = -legacy_dist2(inst.coords[o as usize], cj);
+                if revalidations > 0 && (cur - top.key).abs() > 1e-9 {
+                    revalidations -= 1;
+                    heap.push(FEntry { key: cur, ..top });
+                    continue;
+                }
+                let load = legacy_eff_load(inst, i, inst.loads[o as usize]);
+                if !(remaining > 0.0 && load * (1.0 - overfill) <= remaining) {
+                    continue;
+                }
+                node_map[o as usize] = j;
+                moved[o as usize] = true;
+                migrations += 1;
+                remaining -= load;
+                let c = inst.coords[o as usize];
+                csums[i][0] -= c[0];
+                csums[i][1] -= c[1];
+                ccounts[i] -= 1;
+                csums[j as usize][0] += c[0];
+                csums[j as usize][1] += c[1];
+                ccounts[j as usize] += 1;
+            }
+        }
+    }
+    migrations
+}
+
+/// Frozen §III-D driver: per-node member lists built by the seed's
+/// full-object scan (the SoA index replaced it with one counting sort),
+/// feeding the **live** per-node refinement body.
+fn legacy_assign_pes_scan(inst: &Instance, new_node_map: &[u32], tol: f64) -> Vec<u32> {
+    let ppn = inst.topo.pes_per_node;
+    if ppn == 1 {
+        return new_node_map.to_vec();
+    }
+    let mut mapping = vec![0u32; inst.n_objects()];
+    for node in 0..inst.topo.n_nodes as u32 {
+        let members: Vec<u32> = (0..inst.n_objects() as u32)
+            .filter(|&o| new_node_map[o as usize] == node)
+            .collect();
+        for (o, pe) in assign_pes_node(inst, node, &members, tol) {
+            mapping[o as usize] = pe;
+        }
+    }
+    mapping
+}
+
+/// Frozen pre-single-pass text serializer: one `format!` per line.
+fn legacy_to_lbi(inst: &Instance) -> String {
+    let mut s = String::new();
+    s.push_str("# difflb instance v1\n");
+    s.push_str(&format!(
+        "header objects {} nodes {} pes_per_node {}\n",
+        inst.n_objects(),
+        inst.topo.n_nodes,
+        inst.topo.pes_per_node
+    ));
+    if let Some(speeds) = inst.topo.pe_speeds() {
+        s.push_str("speeds");
+        for v in speeds {
+            s.push_str(&format!(" {v}"));
+        }
+        s.push('\n');
+    }
+    for o in 0..inst.n_objects() {
+        s.push_str(&format!(
+            "object {o} load {} pe {} x {} y {} size {}\n",
+            inst.loads[o], inst.mapping[o], inst.coords[o][0], inst.coords[o][1], inst.sizes[o]
+        ));
+    }
+    for (a, b, w) in inst.graph.edges() {
+        s.push_str(&format!("edge {a} {b} {w}\n"));
+    }
+    s
+}
+
+// ========================================================== fixtures
+
+/// The three speed regimes every stage-3 identity test sweeps.
+#[derive(Clone, Copy)]
+enum SpeedKind {
+    Uniform,
+    Mixed,
+    Noisy,
+}
+
+fn random_instance(rng: &mut Rng, n_nodes: usize, ppn: usize, kind: SpeedKind) -> Instance {
+    let side = 6 + rng.range(0, 5);
+    let n = side * side;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..side {
+        for c in 0..side {
+            let o = (r * side + c) as u32;
+            edges.push((o, (r * side + (c + 1) % side) as u32, 64.0));
+            edges.push((o, (((r + 1) % side) * side + c) as u32, 64.0));
+        }
+    }
+    let graph = CommGraph::from_edges(n, &edges);
+    let loads: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 3.0)).collect();
+    let coords: Vec<[f64; 2]> =
+        (0..n).map(|i| [(i % side) as f64, (i / side) as f64]).collect();
+    let mut topo = Topology::new(n_nodes, ppn);
+    let n_pes = topo.n_pes();
+    topo = match kind {
+        SpeedKind::Uniform => topo,
+        SpeedKind::Mixed => topo.with_pe_speeds(
+            (0..n_pes).map(|_| *rng.choose(&[1.0, 2.0, 4.0])).collect(),
+        ),
+        SpeedKind::Noisy => {
+            topo.with_pe_speeds((0..n_pes).map(|_| rng.uniform(0.5, 2.0)).collect())
+        }
+    };
+    let mapping: Vec<u32> = (0..n).map(|_| rng.below(n_pes as u64) as u32).collect();
+    Instance::new(loads, coords, graph, mapping, topo)
+}
+
+fn speed_kind(trial: usize) -> SpeedKind {
+    match trial % 3 {
+        0 => SpeedKind::Uniform,
+        1 => SpeedKind::Mixed,
+        _ => SpeedKind::Noisy,
+    }
+}
+
+/// Random stage-2-shaped quota rows: a few outgoing flows per node.
+fn random_quotas(rng: &mut Rng, n_nodes: usize) -> Quotas {
+    let mut q = Quotas::empty(n_nodes);
+    for i in 0..n_nodes {
+        for j in 0..n_nodes as u32 {
+            if j as usize != i && rng.chance(0.4) {
+                q.flows[i].push((j, rng.uniform(0.05, 3.0)));
+            }
+        }
+    }
+    q
+}
+
+// ===================================================== identity tests
+
+#[test]
+fn grid_charge_branchless_bit_identical_to_rem_euclid_form() {
+    use difflb::apps::pic::init::grid_charge;
+    // pinned edges: negative even inputs are where the sign-of-zero
+    // difference lives; huge magnitudes exercise the floor saturation
+    for x in [
+        0.0, -0.0, 1.0, -1.0, 2.0, -2.0, 4.0, -4.0, 0.5, -0.5, 1.5, -3.5, 1e15, -1e15,
+        1e300, -1e300, f64::MIN_POSITIVE, -f64::MIN_POSITIVE,
+    ] {
+        for q in [1.0, -1.0, 2.5, 1e-3] {
+            assert_eq!(
+                grid_charge(x, q).to_bits(),
+                legacy_grid_charge(x, q).to_bits(),
+                "x={x} q={q}"
+            );
+        }
+    }
+    let mut rng = Rng::new(0x51D0_0001);
+    for _ in 0..2000 {
+        // mix of integer column coordinates (the real input domain) and
+        // arbitrary reals at several scales, both signs
+        let x = match rng.below(3) {
+            0 => rng.uniform(-1e6, 1e6).floor(),
+            1 => rng.uniform(-64.0, 64.0),
+            _ => rng.uniform(-1.0, 1.0) * 10f64.powi(rng.range(0, 300) as i32),
+        };
+        let q = rng.uniform(-4.0, 4.0);
+        assert_eq!(
+            grid_charge(x, q).to_bits(),
+            legacy_grid_charge(x, q).to_bits(),
+            "x={x} q={q}"
+        );
+    }
+}
+
+#[test]
+fn push_one_bit_identical_to_frozen_scalar() {
+    let mut rng = Rng::new(0x51D0_0002);
+    for trial in 0..2000 {
+        let l = *rng.choose(&[16.0, 32.0, 64.0, 100.0]);
+        let x = rng.uniform(0.0, l);
+        let y = rng.uniform(0.0, l);
+        let vx = rng.uniform(-3.0, 3.0);
+        let vy = rng.uniform(-3.0, 3.0);
+        let q = rng.uniform(-2.0, 2.0);
+        let big_q = rng.uniform(0.5, 2.0);
+        let live = push_one(x, y, vx, vy, q, l, big_q);
+        let froz = legacy_push_one(x, y, vx, vy, q, l, big_q);
+        assert_eq!(live.0.to_bits(), froz.0.to_bits(), "trial {trial} x");
+        assert_eq!(live.1.to_bits(), froz.1.to_bits(), "trial {trial} y");
+        assert_eq!(live.2.to_bits(), froz.2.to_bits(), "trial {trial} vx");
+        assert_eq!(live.3.to_bits(), froz.3.to_bits(), "trial {trial} vy");
+    }
+}
+
+#[test]
+fn native_push_bit_identical_to_frozen_sequential_loop() {
+    let modes = [
+        InitMode::Geometric { rho: 0.9 },
+        InitMode::Sinusoidal,
+        InitMode::Linear { alpha: 0.5 },
+    ];
+    for (trial, &mode) in modes.iter().enumerate() {
+        // deliberately not a multiple of LANES: exercises the scalar
+        // remainder loop after the blocked body
+        let n = 1003 + 17 * trial;
+        let pop = initialize(mode, n, 64, 1 + trial as u32, 1, 1.0, 40 + trial as u64);
+        let mk = |p: &difflb::apps::pic::init::Population| PicBatch {
+            x: p.x.clone(),
+            y: p.y.clone(),
+            vx: p.vx.clone(),
+            vy: p.vy.clone(),
+            q: p.q.clone(),
+        };
+        let mut frozen = mk(&pop);
+        for _ in 0..5 {
+            legacy_push_batch(&mut frozen, 64.0, 1.0);
+        }
+        for threads in [1usize, 3, 8] {
+            let mut live = mk(&pop);
+            for _ in 0..5 {
+                native_push(&mut live, 64.0, 1.0, threads);
+            }
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&live.x), bits(&frozen.x), "x mode {trial} threads {threads}");
+            assert_eq!(bits(&live.y), bits(&frozen.y), "y mode {trial} threads {threads}");
+            assert_eq!(bits(&live.vx), bits(&frozen.vx), "vx mode {trial} threads {threads}");
+            assert_eq!(bits(&live.vy), bits(&frozen.vy), "vy mode {trial} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn select_comm_bit_identical_to_frozen_pre_soa_selection() {
+    let mut rng = Rng::new(0x51D0_0003);
+    for trial in 0..30 {
+        let inst = random_instance(&mut rng, 2 + trial % 5, 1 + trial % 3, speed_kind(trial));
+        let quotas = random_quotas(&mut rng, inst.topo.n_nodes);
+        let overfill = *rng.choose(&[0.0, 0.2, 0.5]);
+        let mut live_map = inst.node_mapping();
+        let mut frozen_map = inst.node_mapping();
+        let n_live = select_comm(&inst, &mut live_map, &quotas, overfill);
+        let n_frozen = legacy_select_comm(&inst, &mut frozen_map, &quotas, overfill);
+        assert_eq!(n_live, n_frozen, "trial {trial} migration count");
+        assert_eq!(live_map, frozen_map, "trial {trial} node map");
+    }
+}
+
+#[test]
+fn select_coord_bit_identical_to_frozen_pre_soa_selection() {
+    let mut rng = Rng::new(0x51D0_0004);
+    for trial in 0..30 {
+        let inst = random_instance(&mut rng, 2 + trial % 5, 1 + trial % 3, speed_kind(trial));
+        let quotas = random_quotas(&mut rng, inst.topo.n_nodes);
+        let overfill = *rng.choose(&[0.0, 0.2, 0.5]);
+        let mut live_map = inst.node_mapping();
+        let mut frozen_map = inst.node_mapping();
+        let n_live = select_coord(&inst, &mut live_map, &quotas, overfill);
+        let n_frozen = legacy_select_coord(&inst, &mut frozen_map, &quotas, overfill);
+        assert_eq!(n_live, n_frozen, "trial {trial} migration count");
+        assert_eq!(live_map, frozen_map, "trial {trial} node map");
+    }
+}
+
+#[test]
+fn assign_pes_bit_identical_to_frozen_scan_built_members() {
+    let mut rng = Rng::new(0x51D0_0005);
+    for trial in 0..30 {
+        let inst = random_instance(&mut rng, 2 + trial % 4, 2 + trial % 3, speed_kind(trial));
+        let mut node_map: Vec<u32> =
+            inst.mapping.iter().map(|&pe| inst.topo.node_of_pe(pe)).collect();
+        for nm in node_map.iter_mut() {
+            if rng.chance(0.33) {
+                *nm = rng.below(inst.topo.n_nodes as u64) as u32;
+            }
+        }
+        let live = assign_pes(&inst, &node_map, 0.02);
+        let frozen = legacy_assign_pes_scan(&inst, &node_map, 0.02);
+        assert_eq!(live, frozen, "trial {trial}");
+    }
+}
+
+#[test]
+fn to_lbi_single_pass_byte_identical_to_frozen_per_line_format() {
+    let mut rng = Rng::new(0x51D0_0006);
+    for trial in 0..12 {
+        let mut inst =
+            random_instance(&mut rng, 2 + trial % 4, 1 + trial % 3, speed_kind(trial));
+        for s in inst.sizes.iter_mut() {
+            *s = rng.uniform(0.5, 8.0);
+        }
+        assert_eq!(inst.to_lbi(), legacy_to_lbi(&inst), "trial {trial}");
+    }
+}
+
+// ============================================ binary codec properties
+
+#[test]
+fn lbi_binary_round_trip_is_exact_and_byte_stable() {
+    let mut rng = Rng::new(0x51D0_0007);
+    for trial in 0..30 {
+        let mut inst =
+            random_instance(&mut rng, 2 + trial % 4, 1 + trial % 3, speed_kind(trial));
+        for s in inst.sizes.iter_mut() {
+            *s = rng.uniform(0.5, 8.0);
+        }
+        // adversarial float payloads must survive the bit transport
+        if rng.chance(0.5) {
+            inst.loads[0] = f64::MIN_POSITIVE;
+            inst.coords[1] = [-0.0, 1e-300];
+            inst.sizes[2] = 1.0 / 3.0;
+        }
+        let bytes = encode_lbi(&inst);
+        let back = decode_lbi(&bytes).unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.loads), bits(&inst.loads), "trial {trial} loads");
+        assert_eq!(bits(&back.sizes), bits(&inst.sizes), "trial {trial} sizes");
+        let cbits =
+            |v: &[[f64; 2]]| v.iter().map(|c| [c[0].to_bits(), c[1].to_bits()]).collect::<Vec<_>>();
+        assert_eq!(cbits(&back.coords), cbits(&inst.coords), "trial {trial} coords");
+        assert_eq!(back.mapping, inst.mapping, "trial {trial} mapping");
+        assert_eq!(back.graph, inst.graph, "trial {trial} graph");
+        assert_eq!(back.topo, inst.topo, "trial {trial} topo");
+        // encode ∘ decode is the identity on wire bytes
+        assert_eq!(encode_lbi(&back), bytes, "trial {trial} re-encode");
+    }
+}
+
+#[test]
+fn lbi_binary_agrees_with_text_round_trip() {
+    let mut rng = Rng::new(0x51D0_0008);
+    for trial in 0..10 {
+        let inst = random_instance(&mut rng, 2 + trial % 3, 1 + trial % 2, speed_kind(trial));
+        let via_bin = decode_lbi(&encode_lbi(&inst)).unwrap();
+        let via_text = Instance::from_lbi(&inst.to_lbi()).unwrap();
+        assert_eq!(via_bin.loads, via_text.loads, "trial {trial}");
+        assert_eq!(via_bin.graph, via_text.graph, "trial {trial}");
+        assert_eq!(via_bin.mapping, via_text.mapping, "trial {trial}");
+        assert_eq!(via_bin.topo, via_text.topo, "trial {trial}");
+    }
+}

@@ -1,0 +1,256 @@
+#!/usr/bin/env python3
+"""Cross-simulate the SIMD/SoA hot-path rewrites' bit-identity claims.
+
+The authoring container has no Rust toolchain, so the arithmetic
+identities behind the vectorization PR are verified here in Python
+(whose floats are the same IEEE-754 binary64, with identical `+ * -
+floor fmod` semantics) before CI compiles the real thing:
+
+  1. grid_charge: the branchless mod-2 wrap `x - 2*floor(x*0.5)` agrees
+     bitwise with the `rem_euclid(2.0)` form after the `q*(1 - 2r)`
+     fold, for every tested f64 (integers, reals, huge, tiny, signed
+     zeros).
+  2. stage-3 comm scoring: branchless masked accumulation
+     `acc += w * (pn == t)` agrees bitwise with the branchy
+     `if pn == j ... elif pn == i ...` loop (non-negative weights, same
+     left-to-right order — adding +0.0 is an f64 no-op).
+  3. SoA grouping: one counting-sort pass groups objects by node in
+     exactly the per-node ascending-id order the seed's filter scans
+     produced.
+  4. LEB128 varints round-trip across the full u64 range.
+  5. the `.lbi` CSR upper-triangle gap encoding round-trips arbitrary
+     graphs and re-encodes byte-identically.
+
+Rust twins: `rust/src/apps/pic/init.rs::grid_charge`,
+`rust/src/strategies/diffusion/object_selection.rs::score_pool_comm`,
+`rust/src/strategies/diffusion/scratch.rs::build_soa`,
+`rust/src/model/lbi.rs` — locked compiled-side by
+`rust/tests/simd_soa_identity.rs`.
+"""
+
+import math
+import random
+import struct
+import sys
+
+TRIALS = 300
+
+
+def bits(x):
+    return struct.pack("<d", x)
+
+
+def rust_rem_euclid_2(x):
+    """Exact emulation of Rust's `x.rem_euclid(2.0)`: `%` in Rust is
+    fmod; rem_euclid adds the divisor when the remainder is negative
+    (a `-0.0` remainder is NOT negative, so it passes through)."""
+    r = math.fmod(x, 2.0)
+    return r + 2.0 if r < 0.0 else r
+
+
+def grid_charge_legacy(x, q):
+    return q * (1.0 - 2.0 * rust_rem_euclid_2(x))
+
+
+def grid_charge_branchless(x, q):
+    r = x - 2.0 * float(math.floor(x * 0.5))
+    return q * (1.0 - 2.0 * r)
+
+
+def check_grid_charge(rng):
+    pinned = [0.0, -0.0, 1.0, -1.0, 2.0, -2.0, 4.0, -4.0, 0.5, -0.5, 1.5,
+              -3.5, 1e15, -1e15, 1e300, -1e300,
+              sys.float_info.min, -sys.float_info.min]
+    cases = [(x, q) for x in pinned for q in (1.0, -1.0, 2.5, 1e-3)]
+    for _ in range(TRIALS):
+        kind = rng.randrange(3)
+        if kind == 0:
+            x = float(math.floor(rng.uniform(-1e6, 1e6)))
+        elif kind == 1:
+            x = rng.uniform(-64.0, 64.0)
+        else:
+            x = rng.uniform(-1.0, 1.0) * 10.0 ** rng.randrange(0, 300)
+        cases.append((x, rng.uniform(-4.0, 4.0)))
+    for x, q in cases:
+        a = grid_charge_legacy(x, q)
+        b = grid_charge_branchless(x, q)
+        if bits(a) != bits(b):
+            return f"grid_charge mismatch at x={x!r} q={q!r}: {a!r} vs {b!r}"
+    return None
+
+
+def check_masked_accumulation(rng):
+    for t in range(TRIALS):
+        n_nodes = rng.randrange(2, 9)
+        i, j = rng.sample(range(n_nodes), 2)
+        row = rng.randrange(0, 33)
+        pns = [rng.randrange(n_nodes) for _ in range(row)]
+        ws = [rng.uniform(0.0, 100.0) for _ in range(row)]
+        bj = local = 0.0
+        for pn, w in zip(pns, ws):
+            if pn == j:
+                bj += w
+            elif pn == i:
+                local += w
+        bjm = localm = 0.0
+        for pn, w in zip(pns, ws):
+            bjm += w * float(pn == j)
+            localm += w * float(pn == i)
+        if bits(bj) != bits(bjm) or bits(local) != bits(localm):
+            return (f"masked accumulation mismatch trial {t}: "
+                    f"({bj!r},{local!r}) vs ({bjm!r},{localm!r})")
+    return None
+
+
+def check_counting_sort_grouping(rng):
+    for t in range(TRIALS):
+        n = rng.randrange(1, 200)
+        n_nodes = rng.randrange(1, 9)
+        nm = [rng.randrange(n_nodes) for _ in range(n)]
+        offsets = [0] * (n_nodes + 1)
+        for v in nm:
+            offsets[v + 1] += 1
+        for k in range(n_nodes):
+            offsets[k + 1] += offsets[k]
+        objs = [0] * n
+        cursor = offsets[:n_nodes]
+        cursor = list(cursor)
+        for o, v in enumerate(nm):
+            objs[cursor[v]] = o
+            cursor[v] += 1
+        for node in range(n_nodes):
+            got = objs[offsets[node]:offsets[node + 1]]
+            want = [o for o in range(n) if nm[o] == node]
+            if got != want:
+                return (f"counting sort trial {t} node {node}: "
+                        f"{got} vs {want}")
+    return None
+
+
+def put_varint(buf, v):
+    while True:
+        byte = v & 0x7F
+        v >>= 7
+        if v == 0:
+            buf.append(byte)
+            return
+        buf.append(byte | 0x80)
+
+
+def read_varint(buf, pos):
+    v = 0
+    shift = 0
+    while True:
+        if pos >= len(buf):
+            raise ValueError("truncated varint")
+        byte = buf[pos]
+        pos += 1
+        if shift >= 64 or (shift == 63 and byte > 1):
+            raise ValueError("varint overflow")
+        v |= (byte & 0x7F) << shift
+        if not byte & 0x80:
+            return v, pos
+        shift += 7
+
+
+def check_varints(rng):
+    vals = [0, 1, 127, 128, 16383, 16384, 2**32 - 1, 2**64 - 1]
+    vals += [rng.randrange(2**64) for _ in range(TRIALS)]
+    for v in vals:
+        buf = bytearray()
+        put_varint(buf, v)
+        got, pos = read_varint(bytes(buf), 0)
+        if got != v or pos != len(buf):
+            return f"varint round-trip failed for {v}"
+    return None
+
+
+def encode_rows(n, rows):
+    """`.lbi` CSR section: per object, varint partner count then
+    ascending gap-encoded partners (b > o) with f64 weight bits."""
+    buf = bytearray()
+    for o in range(n):
+        upper = [(b, w) for b, w in rows[o] if b > o]
+        put_varint(buf, len(upper))
+        prev = o
+        for b, w in upper:
+            put_varint(buf, b - prev - 1)
+            buf += bits(w)
+            prev = b
+    return bytes(buf)
+
+
+def decode_rows(n, buf):
+    edges = []
+    pos = 0
+    for o in range(n):
+        k, pos = read_varint(buf, pos)
+        prev = o
+        for _ in range(k):
+            gap, pos = read_varint(buf, pos)
+            b = prev + gap + 1
+            if b >= n:
+                raise ValueError("partner out of range")
+            (w,) = struct.unpack("<d", buf[pos:pos + 8])
+            pos += 8
+            edges.append((o, b, w))
+            prev = b
+    if pos != len(buf):
+        raise ValueError("trailing bytes")
+    return edges
+
+
+def check_csr_codec(rng):
+    for t in range(TRIALS):
+        n = rng.randrange(2, 60)
+        pairs = set()
+        for _ in range(rng.randrange(0, 3 * n)):
+            a, b = rng.sample(range(n), 2)
+            pairs.add((min(a, b), max(a, b)))
+        edges = sorted((a, b, rng.uniform(0.0, 1e6)) for a, b in pairs)
+        rows = [[] for _ in range(n)]
+        for a, b, w in edges:
+            rows[a].append((b, w))
+            rows[b].append((a, w))
+        for r in rows:
+            r.sort()
+        wire = encode_rows(n, rows)
+        back = decode_rows(n, wire)
+        if back != edges:
+            return f"CSR codec trial {t}: decoded edges differ"
+        rows2 = [[] for _ in range(n)]
+        for a, b, w in back:
+            rows2[a].append((b, w))
+            rows2[b].append((a, w))
+        for r in rows2:
+            r.sort()
+        if encode_rows(n, rows2) != wire:
+            return f"CSR codec trial {t}: re-encode not byte-stable"
+    return None
+
+
+def main():
+    rng = random.Random(0x51D05EED)
+    checks = [
+        ("grid_charge branchless identity", check_grid_charge),
+        ("masked vs branchy accumulation", check_masked_accumulation),
+        ("counting-sort SoA grouping", check_counting_sort_grouping),
+        ("LEB128 varint round-trip", check_varints),
+        ("CSR upper-triangle gap codec", check_csr_codec),
+    ]
+    failed = False
+    for name, fn in checks:
+        err = fn(rng)
+        if err:
+            print(f"FAIL {name}: {err}")
+            failed = True
+        else:
+            print(f"ok   {name} ({TRIALS}+ trials)")
+    if failed:
+        return 1
+    print("crosscheck_simd: all identities hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,11 @@ Rules (ids shared with the Rust implementation):
   static-mut         no `static mut` anywhere
   comm-unwrap        no .unwrap()/.expect() chained on
                      recv_tagged()/barrier() in distributed/
+  soa-index          no seed-era by_node/node_objects per-node object
+                     indexes in the SoA stage-3 hot paths
+                     (strategies/diffusion/object_selection.rs,
+                     strategies/diffusion/hierarchical.rs,
+                     distributed/stage3.rs)
 
 Inline suppression: `// difflb-lint: allow(<rule>): <reason>` on the
 finding's line or the line directly above it.
@@ -302,6 +307,14 @@ def wall_clock_allowed(rel):
     return rel.startswith("obs/") or rel in ("util/bench.rs", "util/logging.rs")
 
 
+def soa_scoped(rel):
+    return rel in (
+        "strategies/diffusion/object_selection.rs",
+        "strategies/diffusion/hierarchical.rs",
+        "distributed/stage3.rs",
+    )
+
+
 CTRL_NS_ALLOWED = ("simnet/network.rs", "distributed/epoch.rs")
 
 
@@ -509,6 +522,19 @@ def determinism_findings(f, emit):
                 "static-mut",
                 "static mut is a data race waiting to happen; "
                 "use atomics or OnceLock",
+            )
+    if soa_scoped(f.rel):
+        lines_hit = set()
+        for word in ("by_node", "node_objects"):
+            for pos in word_occurrences(text, word):
+                lines_hit.add(f.line(pos))
+        for ln in sorted(lines_hit):
+            emit(
+                f.rel,
+                ln,
+                "soa-index",
+                "seed-era by-node object index in a stage-3 hot path; "
+                "walk LbScratch's sorted-by-node SoA slices",
             )
     if f.rel.startswith("distributed/"):
         for word in ("recv_tagged", "barrier"):

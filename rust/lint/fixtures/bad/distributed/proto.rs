@@ -22,3 +22,7 @@ pub fn exchange(comm: &mut Comm, buf: Vec<u8>) {
     }
     let _routing: HashMap<u32, u32> = HashMap::new();
 }
+
+pub const CT_OK: u32 = 1;
+pub const CT_WIDE: u32 = 0x10;
+pub const CT_DUP: u32 = 1;

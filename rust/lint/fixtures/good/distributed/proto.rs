@@ -6,6 +6,8 @@
 pub const TAG_PING: u32 = 0x0100_0000;
 pub const TAG_PONG: u32 = 0x0200_0000;
 pub const TAG_BULK: u32 = 0x0300_0000;
+pub const CT_ALPHA: u32 = 0x1;
+pub const CT_OMEGA: u32 = 0xF;
 
 pub fn ping(comm: &mut Comm, buf: Vec<u8>) -> Result<(), CommError> {
     comm.send(1, TAG_PING, buf);

@@ -43,6 +43,16 @@ fn parse_int(lit: &str) -> Option<u64> {
 /// Every `const TAG_*`/`const CTRL_NS` in the wire layer, in
 /// (rel, line) order.
 pub fn extract_tags(files: &[SourceFile]) -> Vec<Tag> {
+    extract_consts(files, |name| name.starts_with("TAG_") || name == "CTRL_NS")
+}
+
+/// Every `const CT_*` control-message kind in the wire layer, in
+/// (rel, line) order.
+pub fn extract_ctrl_kinds(files: &[SourceFile]) -> Vec<Tag> {
+    extract_consts(files, |name| name.starts_with("CT_"))
+}
+
+fn extract_consts(files: &[SourceFile], want: fn(&str) -> bool) -> Vec<Tag> {
     let mut tags = Vec::new();
     for f in files {
         if !crate::is_wire_file(&f.rel) {
@@ -59,7 +69,7 @@ pub fn extract_tags(files: &[SourceFile]) -> Vec<Tag> {
                 j += 1;
             }
             let name = String::from_utf8_lossy(&text[i..j]).into_owned();
-            if !(name.starts_with("TAG_") || name == "CTRL_NS") {
+            if !want(&name) {
                 continue;
             }
             let rest = &text[j..(j + 80).min(text.len())];
@@ -148,6 +158,35 @@ pub fn wire_findings(
             );
         } else {
             seen_ns.insert(ns, &t.name);
+        }
+    }
+    // ---- ctrl-kind budget: control kinds ride in the low 4 bits of a
+    // CTRL_NS tag (map tags pack the LB round from bit 4 up, so a kind
+    // at 0x10 or above aliases another kind at a shifted round).
+    let kinds = extract_ctrl_kinds(files);
+    let mut seen_kind: BTreeMap<u64, &str> = BTreeMap::new();
+    for k in &kinds {
+        if k.value >= 0x10 {
+            emit.finding(
+                &k.rel,
+                k.line,
+                "ctrl-kind-budget",
+                format!(
+                    "ctrl kind {} = 0x{:x} overflows the 4-bit kind field \
+                     (map tags pack the LB round from bit 4 up)",
+                    k.name, k.value
+                ),
+            );
+        }
+        if let Some(first) = seen_kind.get(&k.value) {
+            emit.finding(
+                &k.rel,
+                k.line,
+                "ctrl-kind-budget",
+                format!("ctrl kind {} reuses value 0x{:x} of {first}", k.name, k.value),
+            );
+        } else {
+            seen_kind.insert(k.value, &k.name);
         }
     }
     // ---- pairing: every data tag both sent and received somewhere

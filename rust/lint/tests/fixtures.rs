@@ -31,6 +31,8 @@ fn bad_corpus_findings_are_exact() {
         "distributed/proto.rs:19: [comm-unwrap] Comm result unwrapped; propagate CommError so recovery stays reachable",
         "distributed/proto.rs:21: [flag-guarded-send] comm call inside a telemetry-flag conditional (wire sequence must not depend on obs flags)",
         "distributed/proto.rs:23: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
+        "distributed/proto.rs:27: [ctrl-kind-budget] ctrl kind CT_WIDE = 0x10 overflows the 4-bit kind field (map tags pack the LB round from bit 4 up)",
+        "distributed/proto.rs:28: [ctrl-kind-budget] ctrl kind CT_DUP reuses value 0x1 of CT_OK",
         "model/graph.rs:3: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
         "model/graph.rs:5: [hash-map] HashMap/HashSet in a decision-path module; use BTreeMap/BTreeSet or a sorted drain",
         "model/graph.rs:8: [partial-cmp] partial_cmp().unwrap() on floats; use total_cmp",

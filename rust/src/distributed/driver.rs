@@ -34,7 +34,8 @@
 //! node's *own measured* step time (genuinely parallel execution), so
 //! they are reported but not comparable bit-for-bit.
 //!
-//! The LB instance is assembled at rank 0 (the recorder's home) and
+//! The LB instance is assembled at the elected root (the recorder's
+//! home — rank 0 unless faults removed it) and
 //! broadcast in the binary `.lbi` wire form ([`crate::model::lbi`] —
 //! exact f64 bit patterns, varint-packed CSR, O(m) decode), and the
 //! root decodes its own broadcast so every node provably balances the
@@ -42,15 +43,28 @@
 //!
 //! **Fault tolerance.** Under an active
 //! [`FaultPlan`](crate::simnet::FaultPlan) the run survives node
-//! deaths, hangs and partitions: every rank checkpoints its payload to
-//! the root before each pipeline entry, a starved pipeline stage
-//! triggers the [`epoch`] probe/declare/ack recovery cycle, and the
-//! surviving quorum restarts the round on the restricted instance
-//! ([`restrict_instance`]) — dead ranks' objects are re-homed onto
-//! survivors and their checkpointed payload re-enters through the
-//! root during the migration exchange, so work is conserved exactly.
-//! An inert plan leaves every one of these paths cold: the message
-//! sequence is bit-identical to the fault-unaware driver's.
+//! deaths, hangs and partitions — the root included: root duties
+//! follow [`epoch::elect`] (the lowest alive rank that never rejoined
+//! through a heal), so killing rank 0 promotes its successor rather
+//! than ending the run. Every rank checkpoints its payload to the
+//! elected root *and* to the election successor before each pipeline
+//! entry (the mirror is what lets roothood move without losing a dead
+//! rank's payload); a starved pipeline stage triggers the [`epoch`]
+//! probe/declare/ack recovery cycle, and the surviving quorum restarts
+//! the round on the restricted instance ([`restrict_instance`]) — dead
+//! ranks' objects are re-homed onto survivors and their checkpointed
+//! payload re-enters through the elected root during the migration
+//! exchange, so work is conserved exactly. A partitioned-away minority
+//! whose cut is scheduled to heal enters *exile* instead of dying: it
+//! sheds its payload (the survivors' custody copy is authoritative),
+//! idles through the cut rounds, and rejoins at the heal round through
+//! the same joiner path scheduled late joiners use — welcomed by a
+//! root epoch declaration so its first instance broadcast is neither
+//! stale-dropped nor parked forever. Rejoiners stay barred from root
+//! election for the rest of the run. An inert plan leaves every one of
+//! these paths cold: the message sequence is bit-identical to the
+//! fault-unaware driver's, and so is any run whose plan never touches
+//! rank 0's roothood.
 //!
 //! **Elasticity.** A [`ResizeSchedule`](crate::model::ResizeSchedule)
 //! retires ranks (drain, then exclusion from the pipeline's target
@@ -95,10 +109,10 @@ const TAG_MIG: u32 = 0x1400_0000;
 const TAG_CKPT: u32 = 0x1500_0000;
 /// End-of-run telemetry gather: every surviving member ships its comm
 /// resilience counters (and, when tracing is on, its encoded local
-/// trace buffer) to rank 0, which sums them into [`RunReport::obs`]
-/// and merges the trace on virtual timestamps. Always sent — the
-/// counters are always-on — so the message sequence is identical with
-/// telemetry enabled and disabled.
+/// trace buffer) to the elected root, which sums them into
+/// [`RunReport::obs`] and merges the trace on virtual timestamps.
+/// Always sent — the counters are always-on — so the message sequence
+/// is identical with telemetry enabled and disabled.
 const TAG_OBS: u32 = 0x1600_0000;
 const TAG_FIN: u32 = 0x1F00_0000;
 
@@ -253,6 +267,10 @@ pub fn run_app_distributed<A: DistApp>(
     driver: &DriverConfig,
 ) -> Result<RunReport> {
     anyhow::ensure!(driver.iters < (1 << 24), "iters exceeds the step tag space");
+    anyhow::ensure!(
+        driver.lb_period == 0 || driver.iters / driver.lb_period < (1 << 20),
+        "LB rounds exceed the epoch map-tag round space"
+    );
     let n_nodes = app.topo().n_nodes;
     driver.fault_plan.validate(n_nodes)?;
     driver.resize.validate(n_nodes)?;
@@ -273,7 +291,14 @@ pub fn run_app_distributed<A: DistApp>(
     } else {
         Cluster::run(n_nodes, node_fn)
     };
-    Ok(reports.swap_remove(0).expect("rank 0 produces the report"))
+    // The report comes from whichever rank held root duties at the end:
+    // rank 0 on any fault-free run, the elected successor when a fault
+    // plan removed rank 0 mid-run.
+    reports
+        .into_iter()
+        .flatten()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no surviving rank produced a report"))
 }
 
 /// World ranks flagged in `mask`, ascending.
@@ -382,6 +407,24 @@ fn node_run<A: DistApp>(
     let mut work_pairs: Vec<(u32, f64)> = Vec::new();
     let mut meas_pairs: Vec<(u32, f64)> = Vec::new();
     let mut lb_round: u32 = 0;
+    // A partitioned-away rank whose cut is scheduled to heal sits out
+    // rounds `[cut, heal)` instead of exiting dead; `Some(h)` holds the
+    // heal round while the exile lasts.
+    let mut exiled_until: Option<u32> = None;
+    // The elected root for a given membership: the lowest alive rank
+    // that never rejoined through a heal (a rejoiner holds neither root
+    // accounting state nor checkpoint custody, so it is barred from
+    // root duties for the rest of the run). A pure function of
+    // replicated state — every rank computes the same answer — and
+    // always 0 when no fault plan is active.
+    let root_of = |failed: &[bool], member: &[bool], round: u32| -> u32 {
+        if !fault_mode {
+            return 0;
+        }
+        let rejoined = plan.rejoined_mask(n_nodes, round);
+        let barred: Vec<bool> = (0..n_nodes).map(|i| !member[i] || rejoined[i]).collect();
+        epoch::elect(failed, &barred)
+    };
 
     // Root-held checkpoint custody (fault mode only): every rank's
     // latest pre-pipeline payload, absorbed at the root when that rank
@@ -401,7 +444,7 @@ fn node_run<A: DistApp>(
     });
 
     let mut pe_time_buf: Vec<f64> = Vec::new();
-    for step in 0..steps_total {
+    'steps: for step in 0..steps_total {
         let smask = (step as u32) & 0x00FF_FFFF;
         // Effective topology this step — the same pure function of
         // (schedule, step) the sequential driver evaluates, so every
@@ -410,8 +453,12 @@ fn node_run<A: DistApp>(
         // Ranks stepping this iteration: current members not failed.
         let alive: Vec<bool> = (0..n_nodes).map(|i| member[i] && !failed[i]).collect();
         let n_active = alive.iter().filter(|&&b| b).count();
+        // Where this step's accounting gathers: the elected root.
+        let step_root = root_of(&failed, &member, lb_round);
 
-        let mut rec = IterRecord::default();
+        // `iter` is stamped up front so a root elected mid-round still
+        // labels the record it inherits correctly.
+        let mut rec = IterRecord { iter: step, ..IterRecord::default() };
         if i_am_in {
             let _step_span = crate::obs::span("app.step", "dist-driver");
             // ---- step my partition; crossers leave by message.
@@ -457,8 +504,8 @@ fn node_run<A: DistApp>(
 
             // ---- root: assemble the iteration record the way the
             // sequential driver does, from exactly-matching aggregates.
-            if root.is_none() {
-                comm.send(0, TAG_ACCT | smask, acct);
+            if rank != step_root {
+                comm.send(step_root, TAG_ACCT | smask, acct);
             } else if let Some(rs) = root.as_mut() {
                 let mut msgs = comm
                     .recv_tagged(TAG_ACCT | smask, n_active - 1, Comm::TIMEOUT)
@@ -471,22 +518,28 @@ fn node_run<A: DistApp>(
                 // (left-to-right, like the sequential per-step
                 // aggregation).
                 let mut merged_moved: Vec<(u32, u32, f64)> = Vec::new();
-                for (from, data) in std::iter::once((0u32, acct.as_slice()))
+                for (from, data) in std::iter::once((rank, acct.as_slice()))
                     .chain(msgs.iter().map(|m| (m.from, m.data.as_slice())))
                 {
+                    let corrupt = |_| StageFailure {
+                        stage: format!("step {step}: accounting decode"),
+                        err: CommError::Corrupt { tag: TAG_ACCT | smask, from },
+                    };
                     let mut r = wire::Reader::new(data);
-                    node_push[from as usize] = r.f64();
-                    let nw = r.u32();
+                    node_push[from as usize] = r.f64().map_err(corrupt)?;
+                    let nw = r.u32().map_err(corrupt)?;
                     for _ in 0..nw {
-                        let c = r.u32();
-                        let w = r.f64();
-                        work_global[c as usize] += w;
+                        let c = r.u32().map_err(corrupt)?;
+                        let w = r.f64().map_err(corrupt)?;
+                        if let Some(slot) = work_global.get_mut(c as usize) {
+                            *slot += w;
+                        }
                     }
-                    let nm = r.u32();
+                    let nm = r.u32().map_err(corrupt)?;
                     for _ in 0..nm {
-                        let f = r.u32();
-                        let t2 = r.u32();
-                        let units = r.u32();
+                        let f = r.u32().map_err(corrupt)?;
+                        let t2 = r.u32().map_err(corrupt)?;
+                        let units = r.u32().map_err(corrupt)?;
                         let mut bytes = 0.0f64;
                         for _ in 0..units {
                             bytes += ub;
@@ -534,6 +587,20 @@ fn node_run<A: DistApp>(
         if sh.driver.lb_period > 0 && (step + 1) % sh.driver.lb_period == 0 {
             let _lb_span = crate::obs::span("lb.round", "dist-driver");
             let rmask = lb_round & 0x00FF_FFFF;
+            // ---- partition heals scheduled at this round: advance the
+            // fault clock first, so the lifted cut lets the rejoin
+            // traffic through (`FaultPlan::validate` guarantees no
+            // other cut starts at a heal round), then strike the healed
+            // ranks from the failed set. Every rank replays this
+            // identically from the shared plan.
+            let healed_now: Vec<u32> =
+                if fault_mode { plan.healed_at(lb_round) } else { Vec::new() };
+            if !healed_now.is_empty() {
+                comm.set_fault_round(u64::from(lb_round));
+                for &h in &healed_now {
+                    failed[h as usize] = false;
+                }
+            }
             // Scheduled membership after this round's resize events;
             // the pipeline participants are its non-failed ranks.
             let sched = resize.alive_after(lb_round as usize, n_nodes);
@@ -541,14 +608,34 @@ fn node_run<A: DistApp>(
                 (0..n_nodes).map(|i| sched[i] && !failed[i]).collect();
             let target_ranks = ranks_of(&target_mask);
 
-            if !i_am_in && !target_mask[rank as usize] {
-                // bystander: not in yet, not joining this round — just
-                // replay the schedule and keep idling.
+            let in_exile = exiled_until.is_some_and(|h| lb_round < h);
+            if in_exile || (!i_am_in && !target_mask[rank as usize]) {
+                // bystander: not in yet (or exiled until a later heal),
+                // not joining this round — just replay the schedule and
+                // keep idling.
                 member.copy_from_slice(&sched);
                 lb_round += 1;
                 continue;
             }
+            // An exile whose heal round arrived re-enters through the
+            // joiner path below, exactly like a scheduled late joiner.
+            exiled_until = None;
             let joined_now = !i_am_in;
+
+            // This round's elected root and its successor. Checkpoints
+            // are mirrored at the successor so a root death inside this
+            // round's pipeline does not take the custody store down
+            // with it — the successor is precisely the rank the
+            // election promotes.
+            let round_root = root_of(&failed, &member, lb_round);
+            let succ = if fault_mode {
+                let rejoined = plan.rejoined_mask(n_nodes, lb_round);
+                let barred: Vec<bool> =
+                    (0..n_nodes).map(|i| !member[i] || rejoined[i]).collect();
+                epoch::successor(&failed, &barred, round_root)
+            } else {
+                None
+            };
 
             if i_am_in {
                 // gather measured loads at root (deterministic mode
@@ -556,25 +643,30 @@ fn node_run<A: DistApp>(
                 // uniform).
                 meas_pairs.clear();
                 node.drain_measured(&mut meas_pairs);
-                if rank != 0 {
+                if rank != round_root {
                     let mut lbuf = Vec::new();
                     wire::put_u32(&mut lbuf, meas_pairs.len() as u32);
                     for &(c, l) in &meas_pairs {
                         wire::put_u32(&mut lbuf, c);
                         wire::put_f64(&mut lbuf, l);
                     }
-                    comm.send(0, TAG_LBC | rmask, lbuf);
+                    comm.send(round_root, TAG_LBC | rmask, lbuf);
                 }
                 if fault_mode {
-                    // pre-pipeline checkpoint: the state the root
+                    // pre-pipeline checkpoint: the state the root (or,
+                    // if the root dies this round, its successor)
                     // absorbs on my behalf if I die this round.
                     let mut ck = Vec::new();
                     node.checkpoint(&mut ck);
-                    if rank == 0 {
-                        custody[0] = ck;
-                    } else {
-                        comm.send(0, TAG_CKPT | rmask, ck);
+                    if rank != round_root {
+                        comm.send(round_root, TAG_CKPT | rmask, ck.clone());
                     }
+                    if let Some(s) = succ {
+                        if s != rank {
+                            comm.send(s, TAG_CKPT | rmask, ck.clone());
+                        }
+                    }
+                    custody[rank as usize] = ck;
                 }
             }
 
@@ -592,15 +684,22 @@ fn node_run<A: DistApp>(
                     }))?
                     .pop()
                     .expect("mapping handoff");
+                let corrupt = |_| StageFailure {
+                    stage: format!("LB {lb_round}: mapping handoff for leaver {rank}"),
+                    err: CommError::Corrupt { tag: epoch::map_tag(lb_round), from: msg.from },
+                };
                 let mut r = wire::Reader::new(&msg.data);
-                let ep = r.u32();
-                let nf = r.u32();
+                let ep = r.u32().map_err(corrupt)?;
+                let nf = r.u32().map_err(corrupt)?;
                 for _ in 0..nf {
-                    failed[r.u32() as usize] = true;
+                    let f = r.u32().map_err(corrupt)? as usize;
+                    if f < n_nodes {
+                        failed[f] = true;
+                    }
                 }
                 let mut new_map = Vec::with_capacity(n_objs);
                 for _ in 0..n_objs {
-                    new_map.push(r.u32());
+                    new_map.push(r.u32().map_err(corrupt)?);
                 }
                 // adopt the current epoch so the transfers below are
                 // not stale-dropped by survivors ahead of me.
@@ -622,6 +721,20 @@ fn node_run<A: DistApp>(
                 return Ok(None);
             }
 
+            // ---- successor custody mirror: the election successor
+            // holds a copy of every member's checkpoint, so roothood
+            // can move without losing any dead rank's payload.
+            if fault_mode && Some(rank) == succ {
+                let cks = comm
+                    .recv_tagged(TAG_CKPT | rmask, n_active - 1, Comm::TIMEOUT)
+                    .map_err(at_stage(|| {
+                        format!("LB {lb_round}: successor checkpoint mirror")
+                    }))?;
+                for m in cks {
+                    custody[m.from as usize] = m.data;
+                }
+            }
+
             // difflb-lint: allow(wall-clock): measures real strategy seconds for the report, never feeds a decision
             let t_lb = Instant::now();
             let inst = if let Some(rs) = root.as_mut() {
@@ -635,11 +748,18 @@ fn node_run<A: DistApp>(
                     full_loads[c as usize] += l;
                 }
                 for m in &msgs {
+                    let corrupt = |_| StageFailure {
+                        stage: format!("LB {lb_round}: load gather decode"),
+                        err: CommError::Corrupt { tag: TAG_LBC | rmask, from: m.from },
+                    };
                     let mut r = wire::Reader::new(&m.data);
-                    let nz = r.u32();
+                    let nz = r.u32().map_err(corrupt)?;
                     for _ in 0..nz {
-                        let c = r.u32();
-                        full_loads[c as usize] += r.f64();
+                        let c = r.u32().map_err(corrupt)?;
+                        let l = r.f64().map_err(corrupt)?;
+                        if let Some(slot) = full_loads.get_mut(c as usize) {
+                            *slot += l;
+                        }
                     }
                 }
                 if fault_mode {
@@ -683,9 +803,19 @@ fn node_run<A: DistApp>(
                 // included, leavers not); then decode our own broadcast
                 // so every node provably balances the identical
                 // instance.
+                // ---- welcome healed rejoiners first: a one-off epoch
+                // declaration carrying the majority's current epoch and
+                // failed set, so the rejoiner catches up before its
+                // first LBX (sent below at that same epoch) arrives —
+                // per-sender FIFO keeps the order.
+                for &h in &healed_now {
+                    crate::obs::counter!("epoch.heals").inc();
+                    crate::info!("LB {lb_round}: welcoming healed rank {h} back");
+                    epoch::declare_to(comm, h, comm.epoch(), &failed);
+                }
                 let bytes = crate::model::encode_lbi(&inst);
                 for &p in &target_ranks {
-                    if p != 0 {
+                    if p != rank {
                         comm.send(p, TAG_LBX | rmask, bytes.clone());
                     }
                 }
@@ -702,7 +832,11 @@ fn node_run<A: DistApp>(
                     // difflb-lint: allow(wall-clock): join-poll deadline bounds real waiting, not a decision input
                     let deadline = Instant::now() + Comm::TIMEOUT;
                     loop {
-                        if epoch::catch_up(comm, &mut failed) {
+                        // Responsive catch-up: besides adopting parked
+                        // declarations, answer probes and ack the
+                        // newest epoch — a fault elsewhere in this
+                        // round must not read this joiner as dead.
+                        if epoch::catch_up_responsive(comm, &mut failed) {
                             return Ok(None); // declared dead while idle
                         }
                         match comm.recv_tagged(TAG_LBX | rmask, 1, JOIN_POLL) {
@@ -799,16 +933,72 @@ fn node_run<A: DistApp>(
                         // my exclusion: exit dead, shipping nothing —
                         // the root holds my checkpoint.
                         Ok(None) => return Ok(None),
-                        Err(_) if fault_mode => {
-                            match epoch::recover(comm, plan, &target_ranks, &mut failed) {
+                        Err(e) => {
+                            if !fault_mode {
+                                return Err(at_stage(|| {
+                                    format!("LB {lb_round}: pipeline (no fault plan)")
+                                })(e));
+                            }
+                            // A rank the plan itself cuts away this
+                            // round skips the election cascade — its
+                            // own fault schedule is as authoritative as
+                            // a kill victim's (`fault_gate` consults
+                            // the same plan), and the cascade's silent-
+                            // coordinator waits could outlast a short
+                            // exile, tangling the heal-round welcome
+                            // with a stale recovery.
+                            let cut_away = plan.partitions.iter().any(|p| {
+                                p.minority.contains(&rank)
+                                    && p.lb_round <= lb_round
+                                    && p.heal_round.map_or(true, |h| lb_round < h)
+                            });
+                            if cut_away {
+                                if let Some(h) = plan.exile_until(rank, lb_round) {
+                                    // The cut heals: enter exile
+                                    // instead of dying. The survivors
+                                    // absorbed my checkpoint, so my
+                                    // payload copy is dropped (theirs
+                                    // is authoritative), and any
+                                    // failure verdicts reached while
+                                    // cut off are forgotten — they are
+                                    // minority guesses.
+                                    crate::obs::counter!("epoch.exiles").inc();
+                                    crate::obs::mark("epoch.exile_enter", "recovery");
+                                    crate::info!(
+                                        "rank {rank}: partitioned away at LB round \
+                                         {lb_round}; exiled until round {h}"
+                                    );
+                                    failed.copy_from_slice(&failed_at_entry);
+                                    let ghost: Vec<bool> = (0..n_nodes)
+                                        .map(|i| member[i] && !failed[i] && i != rank as usize)
+                                        .collect();
+                                    let shed = rehome_mapping(&obj_to_pe, &topo, &ghost);
+                                    let old = std::mem::replace(&mut obj_to_pe, shed);
+                                    let mut junk: Vec<Vec<u8>> = vec![Vec::new(); n_nodes];
+                                    node.emigrate(&old, &obj_to_pe, &mut junk);
+                                    root = None;
+                                    i_am_in = false;
+                                    exiled_until = Some(h);
+                                    member.copy_from_slice(&sched);
+                                    lb_round += 1;
+                                    continue 'steps;
+                                }
+                                crate::obs::mark("epoch.minority_exit", "recovery");
+                                return Ok(None);
+                            }
+                            // Coordinator candidates: this round's
+                            // pipeline participants, minus heal
+                            // rejoiners (they never coordinate — the
+                            // pre-heal majority holds the run state).
+                            let rejoined = plan.rejoined_mask(n_nodes, lb_round);
+                            let barred: Vec<bool> = (0..n_nodes)
+                                .map(|i| !target_mask[i] || rejoined[i])
+                                .collect();
+                            match epoch::recover(comm, plan, &target_ranks, &mut failed, &barred)
+                            {
                                 Membership::Member => {} // retry on the survivors
                                 Membership::Excluded => return Ok(None),
                             }
-                        }
-                        Err(e) => {
-                            return Err(at_stage(|| {
-                                format!("LB {lb_round}: pipeline (no fault plan)")
-                            })(e))
                         }
                     }
                 }
@@ -816,9 +1006,32 @@ fn node_run<A: DistApp>(
             let strat_s = t_lb.elapsed().as_secs_f64();
             let old_map = std::mem::replace(&mut obj_to_pe, new_map);
 
+            // ---- post-pipeline root: re-elected over the failure
+            // verdicts the pipeline just reached. It moves only when
+            // the round's root died mid-pipeline; the successor then
+            // holds the mirrored custody and picks up every root duty
+            // below, seeding fresh accounting state (the dead root's
+            // per-round history dies with it — the physics payload does
+            // not).
+            let root_after = root_of(&failed, &member, lb_round);
+            if fault_mode && rank == root_after && root.is_none() {
+                crate::obs::mark("root.takeover", "recovery");
+                crate::info!("rank {rank}: taking over root duties at LB round {lb_round}");
+                root = Some(RootState {
+                    recorder: TrafficRecorder::new(n_objs),
+                    comm_cache: CommGraph::empty(n_objs),
+                    steps_since_lb: 0,
+                    tracker: CostTracker::new(n_nodes),
+                    payload: Vec::new(),
+                    consumed: Vec::new(),
+                    last_work: vec![0.0; n_objs],
+                    report: RunReport::default(),
+                });
+            }
+
             // ---- hand the final world mapping to scheduled leavers,
             // together with the epoch and failed set they sat out.
-            if rank == 0 {
+            if rank == root_after {
                 let leavers: Vec<u32> = (0..n_nodes)
                     .filter(|&d| member[d] && !target_mask[d] && !failed[d])
                     .map(|d| d as u32)
@@ -844,7 +1057,7 @@ fn node_run<A: DistApp>(
             // died this round — their custody copy is the authoritative
             // state (victims act on nothing after checkpointing), and
             // emigrate below routes it by the new mapping.
-            if rank == 0 && fault_mode {
+            if fault_mode && rank == root_after {
                 for f in 0..n_nodes {
                     if failed[f] && !failed_at_entry[f] {
                         let data = std::mem::take(&mut custody[f]);
@@ -865,7 +1078,9 @@ fn node_run<A: DistApp>(
             for c in 0..n_objs {
                 let mut old_n = topo.node_of_pe(old_map[c]);
                 if failed[old_n as usize] {
-                    old_n = 0;
+                    // a dead owner's payload re-enters from the elected
+                    // root, which absorbed its checkpoint custody
+                    old_n = root_after;
                 }
                 let new_n = topo.node_of_pe(obj_to_pe[c]);
                 if old_n == new_n {
@@ -953,11 +1168,12 @@ fn node_run<A: DistApp>(
     // ---- final verification: gather per-node payloads at root, from
     // the end-of-run membership only (leavers shipped their payload
     // before retiring, the failed are represented by root custody).
+    let root_final = root_of(&failed, &member, lb_round);
     let mut fin = Vec::new();
     node.final_payload(&mut fin);
-    if rank != 0 {
+    if rank != root_final {
         if member[rank as usize] && !failed[rank as usize] {
-            comm.send(0, TAG_FIN, fin);
+            comm.send(root_final, TAG_FIN, fin);
             // ---- telemetry gather: my always-on resilience counters,
             // plus my local trace buffer (encoded) when tracing is on.
             // Sent unconditionally so the message sequence does not
@@ -973,12 +1189,13 @@ fn node_run<A: DistApp>(
                 let events = crate::obs::trace::take_local();
                 ob.extend_from_slice(&crate::obs::trace::encode_events(&events));
             }
-            comm.send(0, TAG_OBS, ob);
+            comm.send(root_final, TAG_OBS, ob);
         }
         return Ok(None);
     }
     let mut rs = root.take().expect("root state");
-    let expect = (1..n_nodes).filter(|&i| member[i] && !failed[i]).count();
+    let expect =
+        (0..n_nodes).filter(|&i| i != rank as usize && member[i] && !failed[i]).count();
     let mut finals = Vec::with_capacity(expect + 1);
     finals.push(fin);
     let msgs = comm
@@ -1002,15 +1219,22 @@ fn node_run<A: DistApp>(
         .map_err(at_stage(|| "telemetry gather".to_string()))?;
     for m in &obs_msgs {
         let mut r = wire::Reader::new(&m.data);
-        rs.report.obs.stale_drops += r.u64();
-        rs.report.obs.future_parks += r.u64();
-        rs.report.obs.barrier_timeouts += r.u64();
-        rs.report.obs.epochs = rs.report.obs.epochs.max(r.u32());
+        let (Ok(sd), Ok(fp), Ok(bt), Ok(ep)) = (r.u64(), r.u64(), r.u64(), r.u32()) else {
+            crate::info!("rank {}: telemetry frame truncated; skipped", m.from);
+            continue;
+        };
+        rs.report.obs.stale_drops += sd;
+        rs.report.obs.future_parks += fp;
+        rs.report.obs.barrier_timeouts += bt;
+        rs.report.obs.epochs = rs.report.obs.epochs.max(ep);
         let trace_bytes = r.rest();
         if !trace_bytes.is_empty() {
-            let events = crate::obs::trace::decode_events(trace_bytes)
-                .unwrap_or_else(|e| panic!("rank {} trace payload corrupt: {e}", m.from));
-            crate::obs::trace::absorb(events);
+            match crate::obs::trace::decode_events(trace_bytes) {
+                Ok(events) => crate::obs::trace::absorb(events),
+                Err(e) => {
+                    crate::info!("rank {}: trace payload corrupt ({e}); skipped", m.from);
+                }
+            }
         }
     }
     rs.report.final_mapping = obj_to_pe;
@@ -1042,19 +1266,24 @@ fn put_particle(buf: &mut Vec<u8>, p: &P) {
     wire::put_f64(buf, p.q);
 }
 
-fn read_particles(data: &[u8], out: &mut Vec<P>) {
+/// Decode a particle payload, appending to `out`. A truncated frame
+/// stops the decode at the last whole particle and surfaces as `Err` —
+/// the caller decides whether that is survivable (verification will
+/// catch any particle lost to a short frame).
+fn read_particles(data: &[u8], out: &mut Vec<P>) -> Result<(), wire::Truncated> {
     let mut r = wire::Reader::new(data);
     while !r.is_empty() {
         out.push(P {
-            id: r.u32(),
-            chare: r.u32(),
-            x: r.f64(),
-            y: r.f64(),
-            vx: r.f64(),
-            vy: r.f64(),
-            q: r.f64(),
+            id: r.u32()?,
+            chare: r.u32()?,
+            x: r.f64()?,
+            y: r.f64()?,
+            vx: r.f64()?,
+            vy: r.f64()?,
+            q: r.f64()?,
         });
     }
+    Ok(())
 }
 
 /// PIC PRK as a node-partitionable app: particles are the payload.
@@ -1188,9 +1417,17 @@ impl DistApp for PicDistApp {
         for data in finals {
             let mut r = wire::Reader::new(data);
             while !r.is_empty() {
-                let id = r.u32() as usize;
-                xf[id] = r.f64();
-                yf[id] = r.f64();
+                // a truncated frame or an out-of-range id is a failed
+                // verification, not a panic
+                let (Ok(id), Ok(x), Ok(y)) = (r.u32(), r.f64(), r.f64()) else {
+                    return false;
+                };
+                let id = id as usize;
+                if id >= n_particles {
+                    return false;
+                }
+                xf[id] = x;
+                yf[id] = y;
                 seen += 1;
             }
         }
@@ -1253,7 +1490,9 @@ impl DistNode for PicNode {
     }
 
     fn absorb(&mut self, data: &[u8]) {
-        read_particles(data, &mut self.parts);
+        if read_particles(data, &mut self.parts).is_err() {
+            crate::info!("rank {}: truncated particle payload; tail dropped", self.rank);
+        }
     }
 
     fn account(&mut self, compute_s: f64, work: &mut Vec<(u32, f64)>) {

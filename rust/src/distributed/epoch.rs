@@ -2,12 +2,17 @@
 //! protocol that turns a mid-pipeline [`CommError`] into a quorum
 //! restart on the surviving ranks instead of an aborted run.
 //!
-//! Rank 0 is the failure coordinator (leader election is out of scope —
-//! [`FaultPlan::validate`] rejects plans that target it, matching the
-//! stable-LB-root assumption of the paper's runtime). The protocol is a
-//! standard probe/declare/ack cycle over the control namespace
-//! ([`CTRL_NS`] tags bypass epoch filtering, so recovery traffic is
-//! deliverable from any epoch):
+//! The failure coordinator is **elected**, not fixed: every rank
+//! computes [`elect`] — the lowest world rank it believes alive (and
+//! not barred as a partition rejoiner) — from its cumulative failed
+//! set, and the protocol is coordinator-relative. When the current
+//! coordinator itself dies or is partitioned away, its followers time
+//! out waiting for a declaration, mark it failed, and re-elect; the
+//! deterministic rule means every survivor lands on the same successor
+//! without any extra messages. The protocol is a standard
+//! probe/declare/ack cycle over the control namespace ([`CTRL_NS`]
+//! tags bypass epoch filtering, so recovery traffic is deliverable
+//! from any epoch):
 //!
 //! 1. **Probe** — the coordinator pings every rank of the failed
 //!    pipeline group. A healthy rank is either already in its own
@@ -24,9 +29,18 @@
 //!    from the newest one alone.
 //! 3. **Ack** — surviving group members adopt the epoch (draining their
 //!    pending buffers of pre-fault traffic — see [`Comm::set_epoch`])
-//!    and ack. A survivor dying *between* probe and ack re-enters the
-//!    cycle; an isolated rank (partition minority) never hears the
-//!    declaration and exits after a bounded wait.
+//!    and ack *the declaring rank*. A survivor dying *between* probe
+//!    and ack re-enters the cycle; a rank that loses quorum on its side
+//!    of a partition — follower or self-elected coordinator — exits
+//!    dead after a bounded wait.
+//!
+//! The election cascade is race-free by timeout asymmetry: a follower
+//! waits `8 × detect` for its coordinator while a coordinator's
+//! probe/ack cycle spans `3 × detect` windows, so a live coordinator
+//! always pings (resetting follower deadlines) or declares before any
+//! follower gives up on it. Two coordinators can only coexist
+//! transiently across a partition cut, where their declarations cannot
+//! collide anyway.
 //!
 //! [`staged_pipeline`] wraps the plain
 //! [`node_pipeline`](super::node_pipeline) with [`FaultPlan`] injection
@@ -56,16 +70,23 @@ const fn ctrl(kind: u32) -> u32 {
     CTRL_NS | kind
 }
 
+/// Control kinds occupy the low 4 bits of a [`CTRL_NS`] tag; the 20
+/// bits above them carry [`map_tag`]'s LB round. difflb-lint's
+/// `ctrl-kind-budget` rule locks every `CT_*` constant under 0x10.
 const fn kind_of(tag: u32) -> u32 {
-    tag & 0xFF
+    tag & 0xF
 }
 
 /// The tag carrying the final world mapping to a scheduled leaver after
 /// LB round `lb_round` — control-namespace so the leaver (which did not
 /// participate in the round's pipeline and may be an epoch behind)
-/// still receives it.
+/// still receives it. The round rides in bits 4..24 (20 bits): the
+/// driver bounds total LB rounds below `1 << 20`, so handoff tags never
+/// alias across rounds (a stale leaver matching a future round's
+/// handoff was possible under the old 16-bit field).
 pub(crate) fn map_tag(lb_round: u32) -> u32 {
-    CTRL_NS | ((lb_round & 0xFFFF) << 8) | CT_MAP
+    debug_assert!(lb_round < 1 << 20, "LB round {lb_round} overflows the map-tag field");
+    CTRL_NS | ((lb_round & 0x000F_FFFF) << 4) | CT_MAP
 }
 
 /// Whether a control message is a final-mapping handoff ([`map_tag`]).
@@ -93,16 +114,40 @@ pub(crate) fn encode_epoch(epoch: u32, failed: &[bool]) -> Vec<u8> {
     buf
 }
 
-/// Decode [`encode_epoch`]: `(epoch, failed world ranks)`.
-pub(crate) fn parse_epoch(data: &[u8]) -> (u32, Vec<u32>) {
+/// Decode [`encode_epoch`]: `(epoch, failed world ranks)`. The counted
+/// length is untrusted: allocation is bounded by the frame itself and a
+/// short frame returns [`wire::Truncated`] (the recovery loops treat a
+/// corrupt declaration as noise, like any other stray control message).
+pub(crate) fn parse_epoch(data: &[u8]) -> Result<(u32, Vec<u32>), wire::Truncated> {
     let mut r = wire::Reader::new(data);
-    let epoch = r.u32();
-    let n = r.u32();
-    let mut ranks = Vec::with_capacity(n as usize);
+    let epoch = r.u32()?;
+    let n = r.u32()?;
+    let mut ranks = Vec::with_capacity((n as usize).min(r.remaining() / 4));
     for _ in 0..n {
-        ranks.push(r.u32());
+        ranks.push(r.u32()?);
     }
-    (epoch, ranks)
+    Ok((epoch, ranks))
+}
+
+/// The deterministic failure coordinator: the lowest world rank not in
+/// `failed` and not barred (`barred` marks partition rejoiners — a
+/// healed minority rank must never out-elect the majority root that
+/// holds the authoritative run state). Falls back to the lowest
+/// non-failed rank if every survivor is barred.
+pub(crate) fn elect(failed: &[bool], barred: &[bool]) -> u32 {
+    if let Some(r) = (0..failed.len()).find(|&r| !failed[r] && !barred[r]) {
+        return r as u32;
+    }
+    (0..failed.len()).find(|&r| !failed[r]).unwrap_or(0) as u32
+}
+
+/// The rank next in line after `root` under the same election rule —
+/// the driver replicates per-round checkpoints to it so a root death
+/// does not lose custody.
+pub(crate) fn successor(failed: &[bool], barred: &[bool], root: u32) -> Option<u32> {
+    (0..failed.len())
+        .map(|r| r as u32)
+        .find(|&r| r != root && !failed[r as usize] && !barred[r as usize])
 }
 
 /// What the recovery cycle decided about this rank.
@@ -115,26 +160,57 @@ pub(crate) enum Membership {
     Excluded,
 }
 
-/// Run one probe/declare/ack recovery cycle after a pipeline
+/// What a follower's wait for its coordinator concluded.
+enum FollowerOutcome {
+    /// A declaration (or exclusion) settled this rank's membership.
+    Done(Membership),
+    /// The coordinator never pinged nor declared within the follower
+    /// window: it is dead or unreachable — mark it failed and re-elect.
+    CoordinatorSilent,
+}
+
+/// Run the probe/declare/ack recovery cycle after a pipeline
 /// [`CommError`]. `participants` are the world ranks of the pipeline
 /// group that just failed; `failed` is the caller's cumulative failed
-/// set, updated in place. On [`Membership::Member`] the endpoint's
-/// epoch has advanced and its pending buffer holds no pre-fault
-/// traffic. Panics if the survivors would lose quorum — there is no
-/// meaningful way to continue the run.
+/// set, updated in place; `barred` marks partition rejoiners that must
+/// not win the election (see [`elect`]). Each iteration elects the
+/// lowest believed-alive rank: that rank coordinates, everyone else
+/// follows it; a silent coordinator is marked failed and the cycle
+/// re-elects. Returns [`Membership::Excluded`] — instead of panicking —
+/// when this rank's side of the world loses quorum: a minority-side
+/// rank exits (or enters exile, if its partition heals) rather than
+/// blocking the survivors.
 pub(crate) fn recover(
     comm: &mut Comm,
     plan: &FaultPlan,
     participants: &[u32],
     failed: &mut [bool],
+    barred: &[bool],
 ) -> Membership {
     let _sr = crate::obs::span("recover", "recovery");
     comm.leave_group();
     let detect = plan.detect_timeout();
-    if comm.world_rank() == 0 {
-        recover_root(comm, detect, participants, failed)
-    } else {
-        recover_follower(comm, detect, failed)
+    let me = comm.world_rank();
+    let world_n = comm.world_n();
+    loop {
+        let coord = elect(failed, barred);
+        if coord == me {
+            return recover_root(comm, detect, participants, failed);
+        }
+        match recover_follower(comm, coord, detect, failed) {
+            FollowerOutcome::Done(m) => return m,
+            FollowerOutcome::CoordinatorSilent => {
+                failed[coord as usize] = true;
+                crate::obs::counter!("epoch.elections").inc();
+                crate::obs::mark("epoch.reelect", "recovery");
+                let n_failed = failed.iter().filter(|&&f| f).count();
+                if 2 * (world_n - n_failed) <= world_n {
+                    crate::obs::mark("epoch.minority_exit", "recovery");
+                    return Membership::Excluded;
+                }
+                // loop: re-elect; the successor may be this rank.
+            }
+        }
     }
 }
 
@@ -145,12 +221,13 @@ fn recover_root(
     failed: &mut [bool],
 ) -> Membership {
     let world_n = comm.world_n();
+    let me = comm.world_rank();
     loop {
         // ---- probe the current pipeline group.
         let expect: Vec<u32> = participants
             .iter()
             .copied()
-            .filter(|&p| p != 0 && !failed[p as usize])
+            .filter(|&p| p != me && !failed[p as usize])
             .collect();
         for &p in &expect {
             comm.send(p, ctrl(CT_PING), Vec::new());
@@ -183,10 +260,13 @@ fn recover_root(
             }
         }
         let n_failed = failed.iter().filter(|&&f| f).count();
-        assert!(
-            2 * (world_n - n_failed) > world_n,
-            "quorum lost: {n_failed} of {world_n} ranks failed"
-        );
+        if 2 * (world_n - n_failed) <= world_n {
+            // This self-elected coordinator is on the minority side of
+            // a cut (or the cluster really did lose quorum): exit dead
+            // instead of declaring an epoch the majority never sees.
+            crate::obs::mark("epoch.minority_exit", "recovery");
+            return Membership::Excluded;
+        }
 
         // ---- declare the new epoch. Best-effort to every world rank:
         // dead endpoints drop the send, partitioned ones never see it,
@@ -196,8 +276,10 @@ fn recover_root(
         crate::obs::counter!("epoch.declarations").inc();
         crate::obs::mark("epoch.declare", "recovery");
         let decl = encode_epoch(target, failed);
-        for r in 1..world_n as u32 {
-            comm.send(r, ctrl(CT_EPOCH), decl.clone());
+        for r in 0..world_n as u32 {
+            if r != me {
+                comm.send(r, ctrl(CT_EPOCH), decl.clone());
+            }
         }
         comm.set_epoch(target);
 
@@ -216,7 +298,7 @@ fn recover_root(
             let Ok(m) = comm.recv_ctrl(left) else { break };
             if kind_of(m.tag) == CT_EPOCH_ACK {
                 let mut r = wire::Reader::new(&m.data);
-                if r.u32() == target
+                if r.u32().is_ok_and(|v| v == target)
                     && ackers.contains(&m.from)
                     && !acked[m.from as usize]
                 {
@@ -234,31 +316,41 @@ fn recover_root(
     }
 }
 
-fn recover_follower(comm: &mut Comm, detect: Duration, failed: &mut [bool]) -> Membership {
+fn recover_follower(
+    comm: &mut Comm,
+    coord: u32,
+    detect: Duration,
+    failed: &mut [bool],
+) -> FollowerOutcome {
     // Report the fault we observed; if the coordinator is still healthy
     // and mid-pipeline, this parks in its pending buffer until its own
     // receive errors.
-    comm.send(0, ctrl(CT_FAULT), Vec::new());
+    comm.send(coord, ctrl(CT_FAULT), Vec::new());
     let me = comm.world_rank() as usize;
     // difflb-lint: allow(wall-clock): failure-detection window is real time by design
     let mut deadline = Instant::now() + 8 * detect;
     loop {
         let left = deadline.saturating_duration_since(Instant::now()); // difflb-lint: allow(wall-clock): same window
         if left.is_zero() {
-            // Never heard a declaration: we are on the wrong side of a
-            // partition (or were excluded in an epoch whose declaration
-            // was cut). Exit dead rather than block the survivors.
-            return Membership::Excluded;
+            // Never heard a ping or declaration from `coord`: it is
+            // dead or on the far side of a cut. Hand the decision back
+            // to the election loop.
+            return FollowerOutcome::CoordinatorSilent;
         }
         let Ok(m) = comm.recv_ctrl(left.min(detect)) else { continue };
         match kind_of(m.tag) {
             CT_PING => {
-                comm.send(0, ctrl(CT_PONG), Vec::new());
-                // an active coordinator is still cycling: keep waiting.
+                // Answer whoever is probing — during an election
+                // cascade the active coordinator may not be the one we
+                // are waiting on yet, but its declaration settles us
+                // all the same.
+                comm.send(m.from, ctrl(CT_PONG), Vec::new());
                 deadline = Instant::now() + 8 * detect; // difflb-lint: allow(wall-clock): same window
             }
             CT_EPOCH => {
-                let (epoch, flist) = parse_epoch(&m.data);
+                let Ok((epoch, flist)) = parse_epoch(&m.data) else {
+                    continue; // corrupt declaration: treat as noise
+                };
                 if epoch <= comm.epoch() {
                     continue; // stale declaration from a cycle we saw
                 }
@@ -267,13 +359,13 @@ fn recover_follower(comm: &mut Comm, detect: Duration, failed: &mut [bool]) -> M
                 }
                 if failed[me] {
                     crate::obs::mark("epoch.excluded", "recovery");
-                    return Membership::Excluded;
+                    return FollowerOutcome::Done(Membership::Excluded);
                 }
                 comm.set_epoch(epoch);
                 let mut ack = Vec::new();
                 wire::put_u32(&mut ack, epoch);
-                comm.send(0, ctrl(CT_EPOCH_ACK), ack);
-                return Membership::Member;
+                comm.send(m.from, ctrl(CT_EPOCH_ACK), ack);
+                return FollowerOutcome::Done(Membership::Member);
             }
             _ => {} // PONG/ACK echoes and early MAP handoffs: not ours
         }
@@ -290,7 +382,7 @@ pub(crate) fn catch_up(comm: &mut Comm, failed: &mut [bool]) -> bool {
     let mut newest = comm.epoch();
     for m in comm.drain_ctrl() {
         if is_epoch(m.tag) {
-            let (epoch, flist) = parse_epoch(&m.data);
+            let Ok((epoch, flist)) = parse_epoch(&m.data) else { continue };
             for r in flist {
                 failed[r as usize] = true;
             }
@@ -301,6 +393,56 @@ pub(crate) fn catch_up(comm: &mut Comm, failed: &mut [bool]) -> bool {
         comm.set_epoch(newest);
     }
     failed[comm.world_rank() as usize]
+}
+
+/// [`catch_up`] for a rank the cluster must not mistake for dead: a
+/// joiner polling for its first LBX broadcast while a fault fires
+/// elsewhere in the same round. Besides adopting declarations, it
+/// *answers* probes (so the coordinator's failure detector sees it
+/// alive) and acks the newest declaration it adopted (so the
+/// coordinator's ack collection completes without excluding it).
+/// Returns `true` if a declaration named this rank failed — only a
+/// fault of the joiner itself aborts the join.
+pub(crate) fn catch_up_responsive(comm: &mut Comm, failed: &mut [bool]) -> bool {
+    let me = comm.world_rank();
+    let mut newest = comm.epoch();
+    let mut declarer: Option<u32> = None;
+    for m in comm.drain_ctrl() {
+        match kind_of(m.tag) {
+            CT_PING => comm.send(m.from, ctrl(CT_PONG), Vec::new()),
+            CT_EPOCH => {
+                let Ok((epoch, flist)) = parse_epoch(&m.data) else { continue };
+                for r in flist {
+                    failed[r as usize] = true;
+                }
+                if epoch > newest {
+                    newest = epoch;
+                    declarer = Some(m.from);
+                }
+            }
+            _ => {}
+        }
+    }
+    if newest > comm.epoch() {
+        comm.set_epoch(newest);
+        if !failed[me as usize] {
+            if let Some(d) = declarer {
+                let mut ack = Vec::new();
+                wire::put_u32(&mut ack, newest);
+                comm.send(d, ctrl(CT_EPOCH_ACK), ack);
+            }
+        }
+    }
+    failed[me as usize]
+}
+
+/// Send a one-off epoch declaration to `to` — the driver's "welcome
+/// back" for a healed partition minority, carrying the majority's
+/// current epoch and cumulative failed set so the rejoiner catches up
+/// before its first LBX arrives (per-sender FIFO guarantees the order).
+/// Lives here so [`CTRL_NS`] stays confined to the epoch layer.
+pub(crate) fn declare_to(comm: &mut Comm, to: u32, epoch: u32, failed: &[bool]) {
+    comm.send(to, ctrl(CT_EPOCH), encode_epoch(epoch, failed));
 }
 
 /// Per-round fault-injection context for [`staged_pipeline`].
@@ -435,7 +577,7 @@ mod tests {
                 return None; // dies before answering any probe
             }
             let mut failed = vec![false; 3];
-            let m = recover(&mut comm, &plan, &[0, 1, 2], &mut failed);
+            let m = recover(&mut comm, &plan, &[0, 1, 2], &mut failed, &[false; 3]);
             Some((m, comm.epoch(), failed))
         });
         let (m0, e0, f0) = results[0].clone().expect("root result");
@@ -449,8 +591,9 @@ mod tests {
 
     #[test]
     fn isolated_follower_gives_up_as_excluded() {
-        // No coordinator ever answers: the follower must bound its wait
-        // and exit dead instead of blocking the cluster teardown.
+        // No coordinator ever answers. The follower marks it failed,
+        // re-elects itself — and finds 1 of 2 ranks is no quorum, so it
+        // exits dead instead of blocking the cluster teardown.
         let plan = {
             let mut p = FaultPlan::none();
             p.detect_ms = 30;
@@ -463,9 +606,68 @@ mod tests {
                 return None;
             }
             let mut failed = vec![false; 2];
-            Some(recover(&mut comm, &plan, &[0, 1], &mut failed))
+            Some(recover(&mut comm, &plan, &[0, 1], &mut failed, &[false; 2]))
         });
         assert_eq!(results[1], Some(Membership::Excluded));
+    }
+
+    #[test]
+    fn election_is_lowest_alive_and_skips_barred_ranks() {
+        assert_eq!(elect(&[false, false, false], &[false; 3]), 0);
+        assert_eq!(elect(&[true, false, false], &[false; 3]), 1);
+        assert_eq!(elect(&[true, false, false], &[false, true, false]), 2);
+        // every survivor barred: fall back to the lowest survivor
+        assert_eq!(elect(&[true, false, true], &[false, true, false]), 1);
+        assert_eq!(successor(&[true, false, false], &[false; 3], 1), Some(2));
+        assert_eq!(successor(&[true, false, true], &[false; 3], 1), None);
+    }
+
+    #[test]
+    fn survivors_elect_a_coordinator_when_rank_zero_dies() {
+        // Rank 0 — the initial coordinator — dies. Ranks 1 and 2 must
+        // time out on it, re-elect rank 1, and finish the cycle with
+        // identical epochs and failed sets.
+        let plan = {
+            let mut p = FaultPlan::none();
+            p.detect_ms = 60;
+            p
+        };
+        let results = Cluster::run(3, move |rank, mut comm| {
+            if rank == 0 {
+                return None; // the coordinator itself is the casualty
+            }
+            let mut failed = vec![false; 3];
+            let m = recover(&mut comm, &plan, &[0, 1, 2], &mut failed, &[false; 3]);
+            Some((m, comm.epoch(), failed))
+        });
+        let (m1, e1, f1) = results[1].clone().expect("rank 1 result");
+        let (m2, e2, f2) = results[2].clone().expect("rank 2 result");
+        assert_eq!(m1, Membership::Member);
+        assert_eq!(m2, Membership::Member);
+        assert_eq!((e1, e2), (1, 1));
+        assert_eq!(f1, vec![true, false, false]);
+        assert_eq!(f2, vec![true, false, false]);
+    }
+
+    #[test]
+    fn map_tag_distinguishes_rounds_past_the_old_16_bit_field() {
+        assert_ne!(map_tag(0), map_tag(1 << 16), "rounds must not alias at 65536");
+        assert_eq!(map_tag(3) & 0xF, CT_MAP);
+        assert!(is_map(map_tag(70_000)));
+        assert!(!is_epoch(map_tag(70_000)));
+    }
+
+    #[test]
+    fn parse_epoch_rejects_truncated_and_lying_frames() {
+        let good = encode_epoch(7, &[false, true, true]);
+        assert_eq!(parse_epoch(&good), Ok((7, vec![1, 2])));
+        assert!(parse_epoch(&good[..good.len() - 2]).is_err());
+        assert!(parse_epoch(&[1, 0, 0, 0]).is_err(), "missing count");
+        // a counted length larger than the frame must error, not OOM
+        let mut lying = Vec::new();
+        wire::put_u32(&mut lying, 1);
+        wire::put_u32(&mut lying, u32::MAX);
+        assert!(parse_epoch(&lying).is_err());
     }
 
     #[test]

@@ -74,6 +74,12 @@ pub(crate) const TAG_STAGE3: u32 = 0x0300_0000;
 /// Minimal byte-level wire helpers (little-endian scalars appended to a
 /// message payload). serde is unavailable offline; the protocols only
 /// ever ship flat scalar records.
+///
+/// Decoding is length-checked: every scalar read returns
+/// `Result<_, Truncated>` so a short or corrupt frame surfaces as a
+/// [`CommError::Corrupt`](crate::simnet::network::CommError) at the
+/// protocol layer instead of an index-out-of-bounds panic inside a node
+/// thread (which would poison the whole cluster join).
 pub(crate) mod wire {
     pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
         buf.extend_from_slice(&v.to_le_bytes());
@@ -87,6 +93,22 @@ pub(crate) mod wire {
         buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// A frame ended before the scalar being decoded: `need` bytes were
+    /// required at the cursor, only `have` remained.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub struct Truncated {
+        pub need: usize,
+        pub have: usize,
+    }
+
+    impl std::fmt::Display for Truncated {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "truncated frame: needed {} bytes, had {}", self.need, self.have)
+        }
+    }
+
+    impl std::error::Error for Truncated {}
+
     /// Cursor over a received payload.
     pub struct Reader<'a> {
         buf: &'a [u8],
@@ -98,26 +120,37 @@ pub(crate) mod wire {
             Reader { buf, pos: 0 }
         }
 
-        pub fn u32(&mut self) -> u32 {
-            let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
-            self.pos += 4;
-            v
+        /// The next `n` bytes, or [`Truncated`] if the frame is short.
+        fn take(&mut self, n: usize) -> Result<&'a [u8], Truncated> {
+            let have = self.buf.len() - self.pos.min(self.buf.len());
+            if have < n {
+                return Err(Truncated { need: n, have });
+            }
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
         }
 
-        pub fn f64(&mut self) -> f64 {
-            let v = f64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
-            self.pos += 8;
-            v
+        pub fn u32(&mut self) -> Result<u32, Truncated> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("take returned 4 bytes")))
         }
 
-        pub fn u64(&mut self) -> u64 {
-            let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
-            self.pos += 8;
-            v
+        pub fn f64(&mut self) -> Result<f64, Truncated> {
+            Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("take returned 8 bytes")))
+        }
+
+        pub fn u64(&mut self) -> Result<u64, Truncated> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("take returned 8 bytes")))
         }
 
         pub fn is_empty(&self) -> bool {
             self.pos >= self.buf.len()
+        }
+
+        /// Bytes left after the cursor — bounds `with_capacity` calls so
+        /// an untrusted count can never drive allocation past the frame.
+        pub fn remaining(&self) -> usize {
+            self.buf.len() - self.pos.min(self.buf.len())
         }
 
         /// Everything after the cursor — for payloads that end in an

@@ -90,8 +90,9 @@ pub fn virtual_balance_node(
         let mut maxd = deg as u32;
         for m in &msgs {
             let mut r = wire::Reader::new(&m.data);
-            maxd = maxd.max(r.u32());
-            sum += r.f64();
+            let corrupt = |_| CommError::Corrupt { tag: t(0, PH_SETUP_UP), from: m.from };
+            maxd = maxd.max(r.u32().map_err(corrupt)?);
+            sum += r.f64().map_err(corrupt)?;
         }
         let avg = sum / n.max(1) as f64;
         let mut down = Vec::with_capacity(12);
@@ -108,7 +109,8 @@ pub fn virtual_balance_node(
         comm.send(0, t(0, PH_SETUP_UP), up);
         let msgs = comm.recv_tagged(t(0, PH_SETUP_DOWN), 1, comm.patience())?;
         let mut r = wire::Reader::new(&msgs[0].data);
-        (r.u32(), r.f64())
+        let corrupt = |_| CommError::Corrupt { tag: t(0, PH_SETUP_DOWN), from: msgs[0].from };
+        (r.u32().map_err(corrupt)?, r.f64().map_err(corrupt)?)
     };
 
     if global_avg <= 0.0 {
@@ -140,7 +142,10 @@ pub fn virtual_balance_node(
         loads_in.sort_by_key(|m| m.from);
         for (idx, m) in loads_in.iter().enumerate() {
             debug_assert_eq!(m.from, adj[idx], "asymmetric stage-1 graph");
-            cur_j[idx] = f64::from_le_bytes(m.data[..8].try_into().unwrap());
+            let Ok(b) = m.data.get(..8).unwrap_or_default().try_into() else {
+                return Err(CommError::Corrupt { tag: t(sweep, PH_LOAD), from: m.from });
+            };
+            cur_j[idx] = f64::from_le_bytes(b);
         }
 
         // ---- DONE-bit reduction: did the PREVIOUS sweep converge?
@@ -218,7 +223,10 @@ pub fn virtual_balance_node(
         xfers.sort_by_key(|m| m.from);
         for (idx, m) in xfers.iter().enumerate() {
             debug_assert_eq!(m.from, adj[idx]);
-            let amt = f64::from_le_bytes(m.data[..8].try_into().unwrap());
+            let Ok(b) = m.data.get(..8).unwrap_or_default().try_into() else {
+                return Err(CommError::Corrupt { tag: t(sweep, PH_XFER), from: m.from });
+            };
+            let amt = f64::from_le_bytes(b);
             recv_acc += amt;
             net[idx] -= amt;
         }

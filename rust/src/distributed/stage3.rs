@@ -99,7 +99,8 @@ pub fn select_and_refine_node(
             &mut node_map,
             &mut scratch,
             rank as u32,
-        );
+        )
+        .map_err(|_| CommError::Corrupt { tag: tag_base | h as u32, from: msgs[0].from })?;
     }
 
     // ---- Local picks against the synchronized replica.
@@ -154,7 +155,8 @@ pub fn select_and_refine_node(
             &mut node_map,
             &mut scratch,
             rank as u32,
-        );
+        )
+        .map_err(|_| CommError::Corrupt { tag: tag_base | h as u32, from: msgs[0].from })?;
     }
 
     // ---- Hierarchical refinement (§III-D): node-local, no messages.
@@ -189,10 +191,12 @@ pub fn select_and_refine_node(
             continue;
         }
         let msgs = comm.recv_tagged(tag_base | PE_BIT | h as u32, 1, comm.patience())?;
+        let corrupt =
+            |_| CommError::Corrupt { tag: tag_base | PE_BIT | h as u32, from: msgs[0].from };
         let mut r = wire::Reader::new(&msgs[0].data);
         while !r.is_empty() {
-            let o = r.u32();
-            let pe = r.u32();
+            let o = r.u32().map_err(corrupt)?;
+            let pe = r.u32().map_err(corrupt)?;
             full_mapping[o as usize] = pe;
         }
     }
@@ -206,7 +210,8 @@ pub fn select_and_refine_node(
 /// Replay one node's manifest into this node's replica (and centroid
 /// state for the coord variant — the same per-migration update the
 /// picking loop performs inline, in the same order). Returns the bytes
-/// destined for this node.
+/// destined for this node, or [`wire::Truncated`] on a short frame
+/// (the caller maps it to `CommError::Corrupt`).
 fn apply_manifest(
     inst: &Instance,
     variant: Variant,
@@ -214,13 +219,13 @@ fn apply_manifest(
     node_map: &mut [u32],
     scratch: &mut LbScratch,
     my_rank: u32,
-) -> f64 {
+) -> Result<f64, wire::Truncated> {
     let mut r = wire::Reader::new(data);
     let mut arrived = 0.0;
     while !r.is_empty() {
-        let o = r.u32();
-        let dest = r.u32();
-        let bytes = r.f64();
+        let o = r.u32()?;
+        let dest = r.u32()?;
+        let bytes = r.f64()?;
         let from = node_map[o as usize];
         node_map[o as usize] = dest;
         scratch.moved[o as usize] = true;
@@ -231,5 +236,5 @@ fn apply_manifest(
             arrived += bytes;
         }
     }
-    arrived
+    Ok(arrived)
 }

@@ -22,9 +22,15 @@
 //! fault-free protocol paths are bit-identical to a build without this
 //! module (`tests/chaos.rs` locks that down).
 //!
-//! Rank 0 is the failure coordinator (`distributed::epoch`) and is
-//! never a valid victim — leader election is out of scope; the paper's
-//! runtime (Charm++) makes the same assumption for its LB root.
+//! Any rank — including rank 0 — is a valid victim: the recovery layer
+//! (`distributed::epoch`) elects the lowest-alive world rank as failure
+//! coordinator, so killing or partitioning away the current coordinator
+//! just moves the role. Partitions may also carry a `heal_round`, after
+//! which the cut lifts and the exiled minority rejoins through the
+//! driver's joiner path. The only plans `validate` still rejects are
+//! structural impossibilities: out-of-range ranks, round-0 cuts, heals
+//! that precede their cut, and schedules that would strand the
+//! survivors below quorum.
 
 use anyhow::{bail, Result};
 
@@ -77,13 +83,19 @@ pub struct FaultEvent {
     pub kind: FaultKind,
 }
 
-/// A permanent network partition starting at `lb_round`: messages
-/// between the minority set and the rest are dropped from that round's
-/// pipeline onward. The minority (which never contains rank 0) loses
-/// the coordinator and exits; healing is future work.
+/// A network partition starting at `lb_round`: messages between the
+/// minority set and the rest are dropped from that round's pipeline
+/// onward. With `heal_round: None` the cut is permanent and the
+/// minority side (whichever half lacks quorum) exits dead; with
+/// `Some(h)` the cut lifts when the fault clock reaches `h` and the
+/// exiled minority rejoins the run through the driver's joiner path.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PartitionEvent {
     pub lb_round: u32,
+    /// LB round at which the cut lifts (exclusive end of the exile:
+    /// the minority participates in round `heal_round` again).
+    /// `None` = permanent.
+    pub heal_round: Option<u32>,
     pub minority: Vec<u32>,
 }
 
@@ -139,18 +151,77 @@ impl FaultPlan {
     pub fn cut(&self, a: u32, b: u32, clock: u64) -> bool {
         self.partitions.iter().any(|p| {
             u64::from(p.lb_round) <= clock
+                && p.heal_round.map_or(true, |h| clock < u64::from(h))
                 && (p.minority.contains(&a) != p.minority.contains(&b))
         })
     }
 
-    /// Sanity-check the plan against a cluster size: rank 0 (the
-    /// failure coordinator) is never a victim, every rank is in range,
-    /// and no partition strands the majority side below quorum.
+    /// World ranks whose exile ends exactly at LB round `round`: the
+    /// minorities of partitions healing there, minus any rank a
+    /// non-Delay fault removed before the heal (a killed rank cannot
+    /// rejoin; its side of the cut simply stays dead).
+    pub fn healed_at(&self, round: u32) -> Vec<u32> {
+        let mut out: Vec<u32> = self
+            .partitions
+            .iter()
+            .filter(|p| p.heal_round == Some(round))
+            .flat_map(|p| p.minority.iter().copied())
+            .filter(|&r| {
+                !self.events.iter().any(|e| {
+                    e.rank == r && e.kind != FaultKind::Delay && e.lb_round < round
+                })
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Mask of ranks that have rejoined through a heal by LB round
+    /// `round` — the recovery layer's election must never hand the
+    /// coordinator role to a rejoiner mid-round (the pre-heal majority
+    /// holds the authoritative root state), so these ranks are barred
+    /// from `epoch::elect` for the rest of the run.
+    pub fn rejoined_mask(&self, n_nodes: usize, round: u32) -> Vec<bool> {
+        let mut mask = vec![false; n_nodes];
+        for p in &self.partitions {
+            if p.heal_round.is_some_and(|h| h <= round) {
+                for &r in &p.minority {
+                    if (r as usize) < n_nodes {
+                        mask[r as usize] = true;
+                    }
+                }
+            }
+        }
+        mask
+    }
+
+    /// If `rank`'s exile starting at or before `round` eventually
+    /// heals, the round at which it does; `None` when any partition
+    /// containing the rank is permanent (the rank must exit dead).
+    pub fn exile_until(&self, rank: u32, round: u32) -> Option<u32> {
+        let mut latest: Option<u32> = None;
+        for p in &self.partitions {
+            if p.lb_round <= round && p.minority.contains(&rank) {
+                match p.heal_round {
+                    None => return None,
+                    Some(h) if h > round => {
+                        latest = Some(latest.map_or(h, |l: u32| l.max(h)));
+                    }
+                    Some(_) => {} // already healed: not this exile
+                }
+            }
+        }
+        latest
+    }
+
+    /// Sanity-check the plan against a cluster size: every rank is in
+    /// range (any rank — rank 0 included — may be a victim now that the
+    /// coordinator is elected), heals come strictly after their cut and
+    /// never coincide with another cut's start, and no partition
+    /// strands the majority side below quorum.
     pub fn validate(&self, n_nodes: usize) -> Result<()> {
         for e in &self.events {
-            if e.rank == 0 {
-                bail!("fault plan targets rank 0 (the coordinator is assumed stable)");
-            }
             if e.rank as usize >= n_nodes {
                 bail!("fault plan targets rank {} of {n_nodes}", e.rank);
             }
@@ -159,9 +230,6 @@ impl FaultPlan {
         for p in &self.partitions {
             if p.minority.is_empty() {
                 bail!("partition with an empty minority");
-            }
-            if p.minority.contains(&0) {
-                bail!("partition strands rank 0 (the coordinator is assumed stable)");
             }
             if let Some(&bad) = p.minority.iter().find(|&&r| r as usize >= n_nodes) {
                 bail!("partition references rank {bad} of {n_nodes}");
@@ -172,7 +240,40 @@ impl FaultPlan {
                 // before the first state checkpoint exists
                 bail!("partition at round 0 (cuts must start at LB round >= 1)");
             }
+            if let Some(h) = p.heal_round {
+                if h <= p.lb_round {
+                    bail!(
+                        "partition heals at round {h} but starts at {} \
+                         (heal must come strictly after the cut)",
+                        p.lb_round
+                    );
+                }
+                if self.partitions.iter().any(|q| q.lb_round == h) {
+                    // the driver advances the fault clock early at a
+                    // heal round so the rejoin traffic isn't cut; a
+                    // partition starting at that exact round would then
+                    // fire one phase too soon
+                    bail!("a partition cannot start at another's heal round {h}");
+                }
+            }
             victims += p.minority.len();
+        }
+        for e in &self.events {
+            if let Some(p) = self.partitions.iter().find(|p| {
+                p.minority.contains(&e.rank)
+                    && p.lb_round <= e.lb_round
+                    && p.heal_round.map_or(true, |h| e.lb_round < h)
+            }) {
+                // an exiled (or permanently partitioned-away) rank runs
+                // no pipeline stage, so the event could never fire
+                bail!(
+                    "fault targets rank {} at round {} inside its partition \
+                     exile (cut at round {})",
+                    e.rank,
+                    e.lb_round,
+                    p.lb_round
+                );
+            }
         }
         victims += self.events.iter().filter(|e| e.kind != FaultKind::Delay).count();
         if 2 * (n_nodes - victims.min(n_nodes)) <= n_nodes {
@@ -221,14 +322,22 @@ impl FaultPlan {
             }),
             // partitions must start at round >= 1 (see `validate`); a
             // one-round run degrades the partition draw to a kill
-            _ if lb_rounds < 2 => plan.events.push(FaultEvent {
-                rank: victim,
-                lb_round,
-                stage,
-                kind: FaultKind::Kill,
-            }),
+            _ if lb_rounds < 2 => {
+                crate::obs::counter!("fault.partition_degraded").inc();
+                crate::info!(
+                    "fault plan seed {seed}: partition draw degraded to \
+                     kill:{victim}@{lb_round} (run has {lb_rounds} LB round)"
+                );
+                plan.events.push(FaultEvent {
+                    rank: victim,
+                    lb_round,
+                    stage,
+                    kind: FaultKind::Kill,
+                });
+            }
             _ => plan.partitions.push(PartitionEvent {
                 lb_round: lb_round.max(1),
+                heal_round: None,
                 minority: vec![victim],
             }),
         }
@@ -237,8 +346,9 @@ impl FaultPlan {
 
     /// Parse a plan spec: comma-separated events, each
     /// `kill:RANK@ROUND[:STAGE]`, `hang:...`, `delay:...` or
-    /// `part:R1|R2|...@ROUND`. Stages are `s1`/`s2`/`s3` (default
-    /// `s2`). Example: `kill:2@1:s2,part:1|3@4`.
+    /// `part:R1|R2|...@ROUND[-HEAL]` (`-HEAL` lifts the cut at that LB
+    /// round). Stages are `s1`/`s2`/`s3` (default `s2`).
+    /// Example: `kill:2@1:s2,part:1|3@4,part:2@1-3`.
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::none();
         plan.detect_ms = 500;
@@ -257,10 +367,20 @@ impl FaultPlan {
                     .map(|r| r.trim().parse::<u32>())
                     .collect::<std::result::Result<Vec<u32>, _>>()
                     .map_err(|e| anyhow::anyhow!("bad partition ranks in '{seg}': {e}"))?;
-                let lb_round: u32 = when
+                let (round_s, heal_s) = match when.split_once('-') {
+                    Some((r, h)) => (r, Some(h)),
+                    None => (when, None),
+                };
+                let lb_round: u32 = round_s
                     .parse()
                     .map_err(|e| anyhow::anyhow!("bad round in '{seg}': {e}"))?;
-                plan.partitions.push(PartitionEvent { lb_round, minority });
+                let heal_round = heal_s
+                    .map(|h| {
+                        h.parse::<u32>()
+                            .map_err(|e| anyhow::anyhow!("bad heal round in '{seg}': {e}"))
+                    })
+                    .transpose()?;
+                plan.partitions.push(PartitionEvent { lb_round, heal_round, minority });
                 continue;
             }
             let fk = match kind {
@@ -314,10 +434,49 @@ mod tests {
         assert_eq!(p.events[0].stage, StagePoint::VirtualLb);
         assert_eq!(p.events[1].stage, StagePoint::Handshake);
         assert_eq!(p.events[2].kind, FaultKind::Delay);
-        assert_eq!(p.partitions, vec![PartitionEvent { lb_round: 4, minority: vec![1, 3] }]);
+        assert_eq!(
+            p.partitions,
+            vec![PartitionEvent { lb_round: 4, heal_round: None, minority: vec![1, 3] }]
+        );
         assert!(p.is_active());
         assert!(FaultPlan::parse("explode:2@1").is_err());
         assert!(FaultPlan::parse("kill:2").is_err());
+    }
+
+    #[test]
+    fn parse_reads_heal_rounds() {
+        let p = FaultPlan::parse("part:1|3@2-5").unwrap();
+        assert_eq!(
+            p.partitions,
+            vec![PartitionEvent { lb_round: 2, heal_round: Some(5), minority: vec![1, 3] }]
+        );
+        assert!(FaultPlan::parse("part:1@2-x").is_err());
+    }
+
+    #[test]
+    fn healed_cut_lifts_at_the_heal_round() {
+        let p = FaultPlan::parse("part:1|3@2-4").unwrap();
+        assert!(!p.cut(0, 1, 1), "inactive before its round");
+        assert!(p.cut(0, 1, 2));
+        assert!(p.cut(0, 1, 3));
+        assert!(!p.cut(0, 1, 4), "healed at its heal round");
+        assert!(!p.cut(0, 1, 9), "stays healed");
+    }
+
+    #[test]
+    fn heal_helpers_track_exile_and_rejoin() {
+        let p = FaultPlan::parse("part:1|3@2-4,part:2@1").unwrap();
+        assert_eq!(p.healed_at(4), vec![1, 3]);
+        assert!(p.healed_at(3).is_empty());
+        assert_eq!(p.rejoined_mask(5, 3), vec![false; 5]);
+        assert_eq!(p.rejoined_mask(5, 4), vec![false, true, false, true, false]);
+        assert_eq!(p.exile_until(1, 2), Some(4));
+        assert_eq!(p.exile_until(1, 3), Some(4));
+        assert_eq!(p.exile_until(2, 1), None, "permanent partition never heals");
+        assert_eq!(p.exile_until(0, 2), None, "majority side is not exiled");
+        // a rank killed before its cut never rejoins at the heal
+        let q = FaultPlan::parse("part:1@3-5,kill:1@1:s1").unwrap();
+        assert!(q.healed_at(5).is_empty());
     }
 
     #[test]
@@ -332,14 +491,49 @@ mod tests {
     }
 
     #[test]
-    fn validate_rejects_coordinator_faults_and_quorum_loss() {
-        assert!(FaultPlan::parse("kill:0@1").unwrap().validate(4).is_err());
-        assert!(FaultPlan::parse("part:0@1").unwrap().validate(4).is_err());
+    fn validate_accepts_coordinator_faults_and_rejects_quorum_loss() {
+        // rank 0 is electable away now: coordinator faults are legal
+        assert!(FaultPlan::parse("kill:0@1").unwrap().validate(4).is_ok());
+        assert!(FaultPlan::parse("part:0@1").unwrap().validate(4).is_ok());
         assert!(FaultPlan::parse("kill:7@1").unwrap().validate(4).is_err());
         assert!(FaultPlan::parse("kill:1@0,kill:2@1").unwrap().validate(4).is_err());
         assert!(FaultPlan::parse("kill:1@0").unwrap().validate(4).is_ok());
         // delays don't remove a rank, so they never cost quorum
         assert!(FaultPlan::parse("delay:1@0,delay:2@0").unwrap().validate(4).is_ok());
+    }
+
+    #[test]
+    fn validate_orders_heals_after_cuts() {
+        assert!(FaultPlan::parse("part:1@2-2").unwrap().validate(4).is_err());
+        assert!(FaultPlan::parse("part:1@3-2").unwrap().validate(4).is_err());
+        assert!(FaultPlan::parse("part:1@2-3").unwrap().validate(4).is_ok());
+        // a cut starting exactly at another's heal round is rejected:
+        // the driver advances the fault clock early at heal rounds
+        assert!(FaultPlan::parse("part:1@2-3,part:2@3-5").unwrap().validate(8).is_err());
+        assert!(FaultPlan::parse("part:1@2-3,part:2@4-6").unwrap().validate(8).is_ok());
+        // an event scheduled inside a rank's exile window can never
+        // fire (the exile runs no pipeline stage): rejected
+        assert!(FaultPlan::parse("part:1@2-4,kill:1@3").unwrap().validate(8).is_err());
+        assert!(FaultPlan::parse("part:1@2,kill:1@5").unwrap().validate(8).is_err());
+        assert!(FaultPlan::parse("part:1@3-5,kill:1@1").unwrap().validate(8).is_ok());
+    }
+
+    #[test]
+    fn degraded_partition_draw_is_counted() {
+        // seed % 3 == 2 draws a partition; lb_rounds == 1 degrades it
+        // to a kill and must say so through obs.
+        let seed = (0..64u64)
+            .find(|s| {
+                s % 3 == 2 && FaultPlan::from_seed(*s, 8, 3).partitions.len() == 1
+            })
+            .expect("some seed draws a partition");
+        let before = crate::obs::registry::counter("fault.partition_degraded").get();
+        let p = FaultPlan::from_seed(seed, 8, 1);
+        let after = crate::obs::registry::counter("fault.partition_degraded").get();
+        assert!(p.partitions.is_empty());
+        assert_eq!(p.events.len(), 1);
+        assert_eq!(p.events[0].kind, FaultKind::Kill);
+        assert_eq!(after, before + 1, "degradation must bump the counter");
     }
 
     #[test]

@@ -91,14 +91,25 @@ pub enum CommError {
     /// Every sender endpoint dropped mid-phase (whole-cluster
     /// teardown).
     Disconnected { tag: u32, want: usize, got: Vec<Msg> },
+    /// A delivered frame failed structural decode (short payload or an
+    /// untrusted length that overran it). Raised by the protocol
+    /// decoders, not the transport: the simulated network never
+    /// corrupts, but a version-skewed or buggy peer can, and decode
+    /// must degrade to an error the recovery layer sees — not a panic
+    /// that poisons the node thread.
+    Corrupt { tag: u32, from: u32 },
 }
 
 impl CommError {
     /// The ranks (in the caller's current rank space) whose messages
     /// did arrive before the failure.
     pub fn arrived(&self) -> Vec<u32> {
-        let (CommError::Timeout { got, .. } | CommError::Disconnected { got, .. }) = self;
-        got.iter().map(|m| m.from).collect()
+        match self {
+            CommError::Timeout { got, .. } | CommError::Disconnected { got, .. } => {
+                got.iter().map(|m| m.from).collect()
+            }
+            CommError::Corrupt { .. } => Vec::new(),
+        }
     }
 }
 
@@ -115,6 +126,9 @@ impl std::fmt::Display for CommError {
                 "cluster disconnected in phase {tag:#x} with {}/{want} messages delivered",
                 got.len()
             ),
+            CommError::Corrupt { tag, from } => {
+                write!(f, "phase {tag:#x} received a corrupt frame from rank {from}")
+            }
         }
     }
 }

@@ -129,6 +129,14 @@ fn never_firing_fault_plan_is_bit_identical() {
     );
     assert!(armed.verified);
     assert_records_identical(&armed, &plain, "armed-but-idle plan");
+    // Same bar for the heal machinery: a partition with a scheduled
+    // heal, both beyond the run, must leave no trace either.
+    let healing = run_chaos_pic(
+        Topology::flat(4),
+        &chaos_driver(FaultPlan::parse("part:3@90-99").unwrap()),
+    );
+    assert!(healing.verified);
+    assert_records_identical(&healing, &plain, "armed-but-idle healing partition");
 }
 
 #[test]
@@ -340,6 +348,170 @@ fn resize_leave_then_join_round_trips() {
 }
 
 // ---------------------------------------------------------------------
+// ISSUE 10: leader election, partition healing, faults during joins.
+
+/// 20 iterations at period 4 → LB rounds 0..4 at iterations
+/// 3/7/11/15/19 — long enough to watch an exiled minority idle through
+/// an intermediate round, heal, and do useful work afterwards.
+fn heal_driver(plan: FaultPlan) -> DriverConfig {
+    DriverConfig {
+        iters: 20,
+        lb_period: 4,
+        deterministic_loads: true,
+        fault_plan: Arc::new(plan),
+        ..Default::default()
+    }
+}
+
+/// Work conservation keyed by iteration number — for runs whose root
+/// died mid-run, where the successor's records only begin at its
+/// takeover round.
+fn assert_work_conserved_from(faulty: &RunReport, plain: &RunReport, from_iter: usize, ctx: &str) {
+    let mut checked = 0;
+    for f in faulty.records.iter().filter(|r| r.iter >= from_iter) {
+        let p = plain
+            .records
+            .iter()
+            .find(|r| r.iter == f.iter)
+            .unwrap_or_else(|| panic!("{ctx}: fault-free run lacks iteration {}", f.iter));
+        let tf: f64 = f.node_work.iter().sum();
+        let tp: f64 = p.node_work.iter().sum();
+        assert!(
+            (tf - tp).abs() <= 1e-9 * tp.abs().max(1.0),
+            "{ctx} iter {}: total work {tf} != fault-free {tp}",
+            f.iter
+        );
+        checked += 1;
+    }
+    assert!(checked > 0, "{ctx}: no records at or past iteration {from_iter}");
+}
+
+#[test]
+fn coordinator_kill_elects_successor_and_completes() {
+    // Rank 0 — root, record keeper, checkpoint custodian — dies inside
+    // LB round 1's stage-2 protocol. The survivors elect the lowest
+    // alive rank (1), which declares the epoch, takes over roothood,
+    // and re-homes the dead root's objects from its successor-mirrored
+    // checkpoint copy. The records rank 0 took to its grave are gone;
+    // everything from the takeover round on must be intact.
+    let topo = Topology::flat(4);
+    let plain = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::none()));
+    let rep = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::parse("kill:0@1:s2").unwrap()));
+    assert!(rep.verified, "physics failed after coordinator kill");
+    assert_eq!(rep.obs.epochs, 1, "one kill → exactly one epoch declaration");
+    assert_eq!(
+        rep.records.first().map(|r| r.iter),
+        Some(7),
+        "successor's records must start at its takeover round"
+    );
+    assert_eq!(rep.records.len(), 5, "iterations 7..12 belong to the successor");
+    assert_work_conserved_from(&rep, &plain, 8, "kill:0@1:s2");
+    assert_evicted(&rep, &topo, 0, 8, "kill:0@1:s2");
+    // The election cascade left its mark: the first coordinator
+    // candidate (rank 0 itself) was silent, forcing a re-election.
+    assert!(difflb::obs::registry::counter("epoch.elections").get() >= 1);
+}
+
+#[test]
+fn partition_heals_and_minority_rejoins() {
+    // Rank 3 is cut away at LB round 1, idles in exile through round 2,
+    // and the cut lifts at round 3: the majority welcomes it back with
+    // an epoch declaration, it re-enters through the joiner path, and
+    // the next rebalance hands it real work again. Total work must be
+    // conserved through the whole exile-and-return arc.
+    let topo = Topology::flat(4);
+    let plain = run_chaos_pic(topo.clone(), &heal_driver(FaultPlan::none()));
+    let rep = run_chaos_pic(topo.clone(), &heal_driver(FaultPlan::parse("part:3@1-3").unwrap()));
+    assert!(rep.verified, "physics failed across partition heal");
+    assert_eq!(rep.records.len(), 20, "root survived; every iteration recorded");
+    assert_eq!(rep.obs.epochs, 1, "the heal re-uses the majority's epoch");
+    assert_work_conserved(&rep, &plain, "part:3@1-3");
+    // Exiled: no work from the cut until the heal round's rebalance.
+    for rec in rep.records.iter().filter(|r| (8..=15).contains(&r.iter)) {
+        assert_eq!(
+            rec.node_work[3], 0.0,
+            "iter {}: exiled node still accounted work",
+            rec.iter
+        );
+    }
+    // Healed: the post-heal rounds rebalance onto the returned node.
+    let late: f64 = rep.records.iter().filter(|r| r.iter > 15).map(|r| r.node_work[3]).sum();
+    assert!(late > 0.0, "healed node never received work after rejoining");
+    assert!(difflb::obs::registry::counter("epoch.exiles").get() >= 1);
+    assert!(difflb::obs::registry::counter("epoch.heals").get() >= 1);
+}
+
+#[test]
+fn rank0_minority_heal_promotes_successor_root() {
+    // The hardest composition: the cut strands rank 0 — the original
+    // root — in the minority. Rank 1 is elected, takes over roothood
+    // (with the successor-mirrored checkpoints), and when the cut heals
+    // rank 0 re-enters as an ordinary rejoiner: roothood does NOT
+    // bounce back, so the run's state stays where it migrated.
+    let topo = Topology::flat(4);
+    let plain = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::none()));
+    let rep = run_chaos_pic(topo.clone(), &chaos_driver(FaultPlan::parse("part:0@1-2").unwrap()));
+    assert!(rep.verified, "physics failed after root exile and heal");
+    assert_eq!(
+        rep.records.first().map(|r| r.iter),
+        Some(7),
+        "successor's records must start at its takeover round"
+    );
+    assert_work_conserved_from(&rep, &plain, 8, "part:0@1-2");
+    for rec in rep.records.iter().filter(|r| (8..=11).contains(&r.iter)) {
+        assert_eq!(rec.node_work[0], 0.0, "iter {}: exiled root accounted work", rec.iter);
+    }
+}
+
+#[test]
+fn fault_beside_join_spares_the_joiner() {
+    // Rank 3 joins at LB round 1 — the same round rank 2 dies
+    // mid-pipeline. The join handshake is decoupled from the failure
+    // detector: the joiner rides through the epoch declaration as an
+    // ordinary pipeline participant and still ends up with real work.
+    let topo = Topology::flat(4);
+    let mk = |plan: FaultPlan| DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        resize: ResizeSchedule::parse("join:3@1").unwrap(),
+        fault_plan: Arc::new(plan),
+        ..Default::default()
+    };
+    let plain = run_chaos_pic(topo.clone(), &mk(FaultPlan::none()));
+    let rep = run_chaos_pic(topo.clone(), &mk(FaultPlan::parse("kill:2@1:s2").unwrap()));
+    assert!(rep.verified, "physics failed when a fault landed beside a join");
+    assert_eq!(rep.records.len(), 12);
+    assert_work_conserved(&rep, &plain, "join:3@1 + kill:2@1:s2");
+    assert_evicted(&rep, &topo, 2, 8, "join:3@1 + kill:2@1:s2");
+    let late: f64 = rep.records.iter().filter(|r| r.iter > 7).map(|r| r.node_work[3]).sum();
+    assert!(late > 0.0, "joiner never received work despite surviving the fault");
+}
+
+#[test]
+fn joiner_killed_at_its_join_round_aborts_only_the_join() {
+    // The joiner itself dies inside the pipeline it was joining. The
+    // incumbent quorum declares it failed and restarts the round
+    // without it — the join is aborted, nothing else is lost.
+    let topo = Topology::flat(4);
+    let mk = |plan: FaultPlan| DriverConfig {
+        iters: 12,
+        lb_period: 4,
+        deterministic_loads: true,
+        resize: ResizeSchedule::parse("join:3@1").unwrap(),
+        fault_plan: Arc::new(plan),
+        ..Default::default()
+    };
+    let plain = run_chaos_pic(topo.clone(), &mk(FaultPlan::none()));
+    let rep = run_chaos_pic(topo.clone(), &mk(FaultPlan::parse("kill:3@1:s2").unwrap()));
+    assert!(rep.verified, "physics failed after the joiner died mid-join");
+    assert_eq!(rep.records.len(), 12);
+    assert_eq!(rep.obs.epochs, 1, "one dead joiner → exactly one epoch");
+    assert_work_conserved(&rep, &plain, "join:3@1 + kill:3@1:s2");
+    assert_evicted(&rep, &topo, 3, 0, "join:3@1 + kill:3@1:s2");
+}
+
+// ---------------------------------------------------------------------
 // Seeded chaos matrix (CI: DIFFLB_TEST_FAULTS=1, nodes ∈ {4, 8, 16}).
 
 #[test]
@@ -375,5 +547,18 @@ fn chaos_matrix_from_seeds() {
                 );
             }
         }
+    }
+    // ISSUE 10: rank 0 is no longer privileged — sweep the election and
+    // heal paths at every matrix size too. chaos_driver runs LB rounds
+    // 0..3, so a cut at round 1 healing at round 2 exercises the full
+    // exile-welcome-rejoin arc.
+    let specs =
+        ["kill:0@1:s2".to_string(), "part:0@1-2".to_string(), format!("part:{}@1-2", n - 1)];
+    for spec in &specs {
+        let plan = FaultPlan::parse(spec).unwrap();
+        plan.validate(n).unwrap_or_else(|e| panic!("{spec}: invalid plan: {e}"));
+        let rep = run_chaos_pic(topo.clone(), &chaos_driver(plan));
+        assert!(rep.verified, "{spec} at n={n}: physics failed");
+        assert!(!rep.records.is_empty(), "{spec} at n={n}: run produced no records");
     }
 }

@@ -20,9 +20,14 @@ from-scratch sequential run on the survivor topology:
      survivor topology would have computed, and the expansion back to
      world ranks can never resurrect a dead node.
   3. partition semantics (rust/src/simnet/fault.rs cut): cuts are
-     symmetric and never sever two majority-side ranks — the property
+     symmetric, never sever two majority-side ranks — the property
      recovery liveness rests on (the surviving quorum stays fully
-     connected).
+     connected) — and a healed cut is gone at every later clock.
+  4. leader election (rust/src/distributed/epoch.rs elect/successor):
+     the coordinator is the lowest alive non-barred rank (rank 0 holds
+     no privilege), the successor is the next in line, re-election
+     after coordinator deaths converges in <= n steps, and barring a
+     healed minority can never hand it the root back.
 
 Run: python3 tools/crosscheck_faults.py
 """
@@ -61,22 +66,54 @@ def densify(node_map, alive):
 
 
 # Mirrors FaultPlan::cut: a message a->b is dropped iff some active
-# partition separates them.
+# partition separates them. A partition is active from its cut round
+# until its heal round (None = permanent).
 def cut(partitions, a, b, clock):
     return any(
-        p_round <= clock and ((a in minority) != (b in minority))
-        for (p_round, minority) in partitions
+        p_round <= clock and (heal is None or clock < heal)
+        and ((a in minority) != (b in minority))
+        for (p_round, heal, minority) in partitions
     )
+
+
+# Mirrors epoch::elect: the lowest alive non-barred rank, falling back
+# to the lowest alive rank when every survivor is barred.
+def elect(failed, barred):
+    for r in range(len(failed)):
+        if not failed[r] and not barred[r]:
+            return r
+    for r in range(len(failed)):
+        if not failed[r]:
+            return r
+    return 0
+
+
+# Mirrors epoch::successor: next in line after `root` under the same
+# rule, or None.
+def successor(failed, barred, root):
+    for r in range(len(failed)):
+        if r != root and not failed[r] and not barred[r]:
+            return r
+    return None
 
 
 def quorum_restart_trials(rng, trials):
     for t in range(trials):
         n_nodes = rng.choice([4, 6, 8, 12])
         loads, graph, node_map = xd.random_instance(rng, n_nodes, rng.randint(3, 8))
-        # victim set: never rank 0, survivors keep quorum (2*(n-d) > n)
+        # victim set: ANY rank — including 0, the default root — as
+        # long as the survivors keep quorum (2*(n-d) > n).
         max_dead = (n_nodes - 1) // 2
-        dead = set(rng.sample(range(1, n_nodes), rng.randint(1, max(1, max_dead))))
+        dead = set(rng.sample(range(n_nodes), rng.randint(1, max(1, max_dead))))
         alive = [n not in dead for n in range(n_nodes)]
+
+        # the elected coordinator is alive, deterministic, and agreed
+        # on by every survivor (it is a pure function of shared state).
+        failed = [not a for a in alive]
+        coord = elect(failed, [False] * n_nodes)
+        assert alive[coord], f"trial {t}: elected a dead coordinator"
+        assert coord == min(n for n in range(n_nodes) if alive[n]), \
+            f"trial {t}: coordinator is not the lowest survivor"
 
         rehomed = rehome(node_map, n_nodes, alive)
         assert all(alive[n] for n in rehomed), \
@@ -123,11 +160,15 @@ def partition_property_trials(rng, trials):
         n = rng.randint(3, 16)
         parts = []
         for _ in range(rng.randint(1, 3)):
-            minority = set(rng.sample(range(1, n), rng.randint(1, (n - 1) // 2)))
-            parts.append((rng.randint(1, 5), minority))
-        majority = [r for r in range(n)
-                    if all(r not in m for (_, m) in parts)]
-        for clock in range(7):
+            # minorities may include rank 0; about half the cuts heal
+            minority = set(rng.sample(range(n), rng.randint(1, (n - 1) // 2)))
+            p_round = rng.randint(1, 5)
+            heal = rng.randint(p_round + 1, 7) if rng.random() < 0.5 else None
+            parts.append((p_round, heal, minority))
+        for clock in range(9):
+            majority = [r for r in range(n)
+                        if all(r not in m for (p, h, m) in parts
+                               if p <= clock and (h is None or clock < h))]
             for a in range(n):
                 for b in range(n):
                     assert cut(parts, a, b, clock) == cut(parts, b, a, clock), \
@@ -136,15 +177,62 @@ def partition_property_trials(rng, trials):
                 for b in majority:
                     assert not cut(parts, a, b, clock), \
                         f"trial {t}: cut severed two majority ranks"
-            assert not cut(parts, 0, 0, clock)
+            for a in range(n):
+                assert not cut(parts, a, a, clock)
+        # a fully healed world is fully connected again
+        if all(h is not None for (_, h, _) in parts):
+            horizon = max(h for (_, h, _) in parts)
+            for a in range(n):
+                for b in range(n):
+                    assert not cut(parts, a, b, horizon), \
+                        f"trial {t}: healed cut still drops traffic"
     print(f"partition cuts: {trials}/{trials} trials — symmetric, majority "
-          "side fully connected at every clock")
+          "side fully connected, heals lift every cut")
+
+
+def election_trials(rng, trials):
+    for t in range(trials):
+        n = rng.randint(2, 16)
+        failed = [False] * n
+        barred = [rng.random() < 0.25 for _ in range(n)]
+        # cascade: kill the elected coordinator repeatedly — the
+        # re-election walks up the rank order deterministically and
+        # never picks a corpse, mirroring recover()'s silent-
+        # coordinator loop.
+        seen = []
+        while not all(failed):
+            c = elect(failed, barred)
+            assert not failed[c], f"trial {t}: elected a dead rank"
+            assert c not in seen, f"trial {t}: election cycled"
+            live_clear = [r for r in range(n) if not failed[r] and not barred[r]]
+            if live_clear:
+                assert c == live_clear[0], \
+                    f"trial {t}: not the lowest unbarred survivor"
+                # a barred (healed-minority) rank never out-elects an
+                # unbarred survivor — roothood cannot bounce back.
+                assert not barred[c], f"trial {t}: barred rank won election"
+            s = successor(failed, barred, c)
+            if s is not None:
+                assert s != c and not failed[s] and not barred[s], \
+                    f"trial {t}: bad successor"
+                # the successor is exactly who wins once the root dies,
+                # while the barred set is unchanged — custody mirroring
+                # targets the right rank.
+                probe = list(failed)
+                probe[c] = True
+                assert elect(probe, barred) == s, \
+                    f"trial {t}: successor is not the next electee"
+            seen.append(c)
+            failed[c] = True
+    print(f"leader election: {trials}/{trials} trials — deterministic "
+          "lowest-survivor rule, successors line up, rejoiners stay barred")
 
 
 def main():
     rng = random.Random(0xFA17)
     quorum_restart_trials(rng, 150)
     partition_property_trials(rng, 80)
+    election_trials(rng, 120)
 
 
 if __name__ == "__main__":

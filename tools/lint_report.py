@@ -13,6 +13,9 @@ Rules (ids shared with the Rust implementation):
                      indirection — tag passed as a tag_base — counts)
   ctrl-ns            CTRL_NS is confined to simnet/network.rs and
                      distributed/epoch.rs
+  ctrl-kind-budget   CT_* control-message kinds must fit the 4-bit kind
+                     field (< 0x10) and be unique — map tags pack the
+                     LB round from bit 4 up
   flag-guarded-send  no send/recv_tagged/barrier inside a conditional on
                      tracing_enabled()/metrics_enabled()
   hash-map           no HashMap/HashSet in strategies/, model/,
@@ -320,6 +323,17 @@ CTRL_NS_ALLOWED = ("simnet/network.rs", "distributed/epoch.rs")
 
 def extract_tags(files):
     """-> list of (name, value, rel, line), in (rel, line) order."""
+    return extract_consts(
+        files, lambda name: name.startswith("TAG_") or name == "CTRL_NS"
+    )
+
+
+def extract_ctrl_kinds(files):
+    """CT_* control-message kinds, in (rel, line) order."""
+    return extract_consts(files, lambda name: name.startswith("CT_"))
+
+
+def extract_consts(files, want):
     tags = []
     for f in files:
         if not is_wire_file(f.rel):
@@ -332,7 +346,7 @@ def extract_tags(files):
             while j < len(f.text) and f.text[j] in WORD:
                 j += 1
             name = f.text[i:j]
-            if not (name.startswith("TAG_") or name == "CTRL_NS"):
+            if not want(name):
                 continue
             rest = f.text[j : j + 80]
             k = 0
@@ -395,6 +409,25 @@ def wire_findings(files, tags, counts, emit):
             )
         else:
             seen_ns[ns] = name
+    seen_kind = {}
+    for name, value, rel, line in extract_ctrl_kinds(files):
+        if value >= 0x10:
+            emit(
+                rel,
+                line,
+                "ctrl-kind-budget",
+                f"ctrl kind {name} = 0x{value:x} overflows the 4-bit kind field "
+                "(map tags pack the LB round from bit 4 up)",
+            )
+        if value in seen_kind:
+            emit(
+                rel,
+                line,
+                "ctrl-kind-budget",
+                f"ctrl kind {name} reuses value 0x{value:x} of {seen_kind[value]}",
+            )
+        else:
+            seen_kind[value] = name
     for name, value, rel, line in tags:
         if name == "CTRL_NS":
             continue
